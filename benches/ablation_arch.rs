@@ -1,0 +1,79 @@
+//! Ablation: architectural/device sensitivity of the headline metrics —
+//! the design choices DESIGN.md §7 calls out.
+//!
+//! - converter latency (the paper's "DAC/ADC are the bottleneck" §II.C.6),
+//! - TED thermal-crosstalk cancellation on/off,
+//! - photodetector sensitivity (laser budget, Eq. 2),
+//! - MRs-per-waveguide bound (crosstalk rule) vs achievable GOPS.
+
+mod common;
+
+use photogan::arch::accelerator::Accelerator;
+use photogan::arch::config::ArchConfig;
+use photogan::models::zoo;
+use photogan::sim::{simulate, OptFlags};
+use photogan::util::table::Table;
+
+fn run(cfg: ArchConfig) -> (f64, f64) {
+    let acc = Accelerator::new(cfg).expect("valid config");
+    let m = zoo::dcgan();
+    let r = simulate(&m, &acc, 1, OptFlags::all());
+    (r.gops(), r.epb() * 1e15)
+}
+
+fn main() {
+    let base = ArchConfig::paper_optimum();
+
+    // --- converter latency scaling -----------------------------------------
+    let mut t = Table::new(vec!["ADC latency", "GOPS", "EPB (fJ/b)"])
+        .with_title("converter-bottleneck sensitivity (DCGAN, paper config)");
+    for scale in [0.5, 1.0, 2.0, 4.0] {
+        let mut cfg = base.clone();
+        cfg.params.device.adc_latency *= scale;
+        cfg.params.device.dac_latency *= scale;
+        let (g, e) = run(cfg);
+        t.row(vec![format!("{:.2} ns", 0.82 * scale), format!("{g:.1}"), format!("{e:.2}")]);
+    }
+    t.print();
+    println!("(halving converter latency raises GOPS — converters are the symbol-rate bound ✓)\n");
+
+    // --- TED on/off ----------------------------------------------------------
+    let mut ted_off = base.clone();
+    ted_off.params.device.to_ted_power_per_fsr = ted_off.params.device.to_tuning_power_per_fsr;
+    let (_, e_on) = run(base.clone());
+    let (_, e_off) = run(ted_off);
+    println!(
+        "TED thermal-crosstalk cancellation: EPB {e_on:.2} (on) vs {e_off:.2} fJ/b (off); \
+         compute-path impact is small because weight imprint stays EO — the 36.7x TO-power \
+         saving matters for re-anchoring events, not steady streaming\n"
+    );
+
+    // --- PD sensitivity (laser budget) ---------------------------------------
+    let mut t2 = Table::new(vec!["PD sensitivity", "GOPS", "EPB (fJ/b)"])
+        .with_title("laser-budget sensitivity (Eq. 2)");
+    for s in [-26.0, -20.0, -14.0, -8.0] {
+        let mut cfg = base.clone();
+        cfg.params.system.pd_sensitivity_dbm = s;
+        let (g, e) = run(cfg);
+        t2.row(vec![format!("{s:.0} dBm"), format!("{g:.1}"), format!("{e:.2}")]);
+    }
+    t2.print();
+    println!("(worse sensitivity -> exponentially more laser power -> EPB degrades ✓)\n");
+
+    // --- N at / beyond the crosstalk bound -----------------------------------
+    let mut t3 = Table::new(vec!["N (λ/waveguide)", "valid?", "GOPS"])
+        .with_title("the 36-MR crosstalk rule (paper §IV)");
+    for n in [16usize, 28, 36, 40] {
+        let cfg = ArchConfig::new(n, base.k, base.l, base.m);
+        match Accelerator::new(cfg) {
+            Ok(acc) => {
+                let r = simulate(&zoo::dcgan(), &acc, 1, OptFlags::all());
+                t3.row(vec![n.to_string(), "yes".into(), format!("{:.1}", r.gops())]);
+            }
+            Err(e) => {
+                t3.row(vec![n.to_string(), format!("no ({e})"), "-".into()]);
+            }
+        }
+    }
+    t3.print();
+}

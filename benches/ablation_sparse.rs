@@ -1,0 +1,81 @@
+//! Ablation: the sparse computation dataflow (paper §III.C.1) in isolation.
+//!
+//! 1. Zero-column census across the (stride, kernel) plane — the op
+//!    reduction structure (≈ s² in the interior).
+//! 2. Functional timing: rust dense (zero-insertion) vs sparse
+//!    (reduced-dot-product) transposed conv on the DCGAN layer shapes —
+//!    the same code path the simulator's op counts model.
+//! 3. Per-model executed-MAC reduction at the mapper level.
+
+mod common;
+
+use common::{ms, time_it};
+use photogan::models::zoo;
+use photogan::sim::mapper::map_model;
+use photogan::sim::OptFlags;
+use photogan::sparse::{tconv2d_dense, tconv2d_sparse, TconvSpec};
+use photogan::util::rng::Pcg32;
+use photogan::util::table::Table;
+
+fn main() {
+    // --- 1. census plane ---------------------------------------------------
+    let mut t = Table::new(vec!["kernel", "stride", "pad", "reduction x"])
+        .with_title("zero-column census (16x16 input)");
+    for (k, s, p) in [(3, 1, 1), (3, 2, 1), (4, 2, 1), (5, 2, 2), (4, 4, 0), (5, 3, 2), (7, 1, 3)] {
+        let c = TconvSpec::new(k, s, p, 16, 16).census();
+        t.row(vec![k.to_string(), s.to_string(), p.to_string(), format!("{:.2}", c.reduction())]);
+    }
+    t.print();
+
+    // --- 2. functional timing on DCGAN layer shapes -------------------------
+    println!("\nfunctional tconv: dense (zero-insert) vs sparse (reduced dot products)");
+    let mut rng = Pcg32::new(7);
+    for (name, k, s, p, h) in [
+        ("dcgan t1 8x8", 4usize, 2usize, 1usize, 8usize),
+        ("dcgan t2 16x16", 4, 2, 1, 16),
+        ("dcgan t3 32x32", 4, 2, 1, 32),
+    ] {
+        let spec = TconvSpec::new(k, s, p, h, h);
+        let mut input = vec![0f32; h * h];
+        let mut kern = vec![0f32; k * k];
+        rng.fill_uniform_f32(&mut input);
+        rng.fill_uniform_f32(&mut kern);
+        let (dense_best, _) = time_it(3, 20, || {
+            std::hint::black_box(tconv2d_dense(&spec, &input, &kern));
+        });
+        let (sparse_best, _) = time_it(3, 20, || {
+            std::hint::black_box(tconv2d_sparse(&spec, &input, &kern));
+        });
+        let census = spec.census();
+        println!(
+            "  {name:16} dense {} | sparse {} | speedup {:.2}x (op-count bound {:.2}x)",
+            ms(dense_best),
+            ms(sparse_best),
+            dense_best / sparse_best,
+            census.reduction()
+        );
+    }
+
+    // --- 3. model-level executed-MAC reduction -----------------------------
+    println!("\nexecuted-MAC reduction from the sparse dataflow (mapper level):");
+    for m in zoo::all_generators() {
+        let dense: usize = map_model(&m, 1, &OptFlags::baseline())
+            .iter()
+            .flat_map(|j| &j.mvms)
+            .map(|x| x.exec_macs)
+            .sum();
+        let sparse: usize = map_model(&m, 1, &OptFlags::all())
+            .iter()
+            .flat_map(|j| &j.mvms)
+            .map(|x| x.exec_macs)
+            .sum();
+        println!(
+            "  {:10} {:>14} -> {:>14} MACs  ({:.2}x, tconv fraction {:.0}%)",
+            m.name,
+            dense,
+            sparse,
+            dense as f64 / sparse as f64,
+            100.0 * m.tconv_mac_fraction().unwrap()
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Shared helpers for the harness-free benches (no criterion offline —
+//! DESIGN.md §2): simple best-of-N wall-clock timing with warmup.
+
+#![allow(dead_code)] // shared across benches; not every bench uses every helper
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` runs; returns
+/// (best, mean) seconds per iteration.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    (best, total / iters as f64)
+}
+
+/// Pretty milliseconds.
+pub fn ms(s: f64) -> String {
+    format!("{:.3} ms", s * 1e3)
+}

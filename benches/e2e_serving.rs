@@ -1,0 +1,110 @@
+//! End-to-end serving benchmark (EXPERIMENTS.md §E2E): coordinator
+//! batching/routing microbench with a stub executor (always runs), then the
+//! full PJRT path if `make artifacts` has produced a condgan artifact.
+//!
+//! The stub half isolates L3 coordinator overhead (the paper's system has
+//! no serving layer — this quantifies that ours is not the bottleneck);
+//! the PJRT half is the real image-serving throughput/latency experiment.
+
+mod common;
+
+use photogan::coordinator::server::{BatchExecutor, Server, ServerConfig};
+use photogan::coordinator::BatchPolicy;
+use photogan::runtime::Engine;
+use photogan::util::stats::percentile;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct NullExec;
+
+impl BatchExecutor for NullExec {
+    fn models(&self) -> Vec<String> {
+        vec!["null".into()]
+    }
+
+    fn elements_per_sample(&self, _m: &str) -> usize {
+        16
+    }
+
+    fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+        vec![0.5; entries.len() * 16]
+    }
+}
+
+fn coordinator_overhead() {
+    println!("== L3 coordinator overhead (stub executor, zero compute) ==");
+    for workers in [1usize, 2, 4] {
+        let server = Server::start(
+            Arc::new(NullExec),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
+                workers,
+            },
+        );
+        let n = 20_000usize;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n).map(|i| server.submit("null", i as u64, None, 1)).collect();
+        let mut lat = Vec::with_capacity(n);
+        for rx in rxs {
+            lat.push(rx.recv().unwrap().total_time * 1e6);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        println!(
+            "  workers={workers}: {:8.0} req/s  p50={:.0}µs p99={:.0}µs",
+            n as f64 / wall,
+            percentile(&lat, 50.0),
+            percentile(&lat, 99.0)
+        );
+    }
+}
+
+fn pjrt_serving() {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::load(&artifacts) {
+        Ok(e) => Arc::new(e),
+        Err(_) => {
+            println!("\n(no artifacts — run `make artifacts` for the PJRT half)");
+            return;
+        }
+    };
+    let model = if engine.model_names().iter().any(|m| m == "condgan") {
+        "condgan".to_string()
+    } else {
+        engine.model_names()[0].clone()
+    };
+    // warm
+    engine.generate_sync(&model, &[(0, Some(0))]).unwrap();
+    println!("\n== PJRT serving ({model}) ==");
+    for (max_batch, requests) in [(1usize, 32usize), (4, 64), (8, 128)] {
+        let server = Server::start(
+            Arc::clone(&engine),
+            ServerConfig {
+                policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(4) },
+                workers: 2,
+            },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..requests)
+            .map(|i| server.submit(&model, i as u64, Some((i % 10) as u32), 1))
+            .collect();
+        let mut lat = Vec::with_capacity(requests);
+        for rx in rxs {
+            lat.push(rx.recv().unwrap().total_time * 1e3);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        println!(
+            "  max_batch={max_batch:2}: {:7.1} img/s  p50={:.1}ms p99={:.1}ms",
+            requests as f64 / wall,
+            percentile(&lat, 50.0),
+            percentile(&lat, 99.0)
+        );
+    }
+}
+
+fn main() {
+    coordinator_overhead();
+    pjrt_serving();
+}

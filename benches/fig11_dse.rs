@@ -1,0 +1,49 @@
+//! Bench target for paper Fig. 11: design-space exploration over
+//! `[N, K, L, M]` under the 100 W cap, objective GOPS/EPB averaged across
+//! the four GAN models.
+//!
+//! Also times the sweep itself (the DSE engine is an L3 hot path —
+//! EXPERIMENTS.md §Perf tracks it).
+
+use photogan::dse::Grid;
+use photogan::report::{self, PAPER_OPTIMUM};
+use std::time::Instant;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let grid = Grid::paper();
+    let t0 = Instant::now();
+    let (table, pts) = report::fig11(&grid, threads);
+    let wall = t0.elapsed().as_secs_f64();
+    table.print();
+    println!(
+        "\nswept {} configs x 4 models in {:.2}s ({} threads, {:.0} sims/s)",
+        grid.len(),
+        wall,
+        threads,
+        (grid.len() * 4) as f64 / wall
+    );
+    let best = &pts[0];
+    println!(
+        "our optimum: [{},{},{},{}]  objective {:.3e}  peak {:.2} W",
+        best.n, best.k, best.l, best.m, best.objective, best.peak_power_w
+    );
+    let paper_rank = pts
+        .iter()
+        .position(|p| (p.n, p.k, p.l, p.m) == PAPER_OPTIMUM)
+        .map(|i| i + 1);
+    let paper_pt = pts.iter().find(|p| (p.n, p.k, p.l, p.m) == PAPER_OPTIMUM);
+    match (paper_rank, paper_pt) {
+        (Some(rank), Some(p)) => println!(
+            "paper's {:?}: rank {rank}/{} (objective {:.3e}) — our device-up model is \
+             monotone inside the crosstalk bound; see EXPERIMENTS.md Fig. 11",
+            PAPER_OPTIMUM,
+            pts.len(),
+            p.objective
+        ),
+        _ => println!("paper's {PAPER_OPTIMUM:?} not in the valid set?!"),
+    }
+    // invariants the figure depends on
+    assert!(pts.iter().all(|p| p.peak_power_w <= 100.0), "power cap violated");
+    assert!(pts.iter().all(|p| p.n <= 36), "crosstalk bound violated");
+}

@@ -1,0 +1,34 @@
+//! Bench target for paper Fig. 13: GOPS across PhotoGAN and the five
+//! baseline platforms, per model, with the paper's average ratios for
+//! comparison.
+
+use photogan::report::{self, PAPER_GOPS_RATIOS};
+
+fn main() {
+    let data = report::comparison_data();
+    report::fig13(&data).print();
+
+    let pg = &data.series[0];
+    // shape assertions: PhotoGAN wins everywhere; ReRAM is closest; the
+    // average ratios track the paper's within 15% (the calibration test in
+    // baselines::platform also enforces this under `cargo test`).
+    let mut ratios = Vec::new();
+    for (i, (name, gops, _)) in data.series.iter().enumerate().skip(1) {
+        for (j, g) in gops.iter().enumerate() {
+            assert!(pg.1[j] > *g, "{name} beats PhotoGAN on {}", data.model_names[j]);
+        }
+        let r: f64 = pg.1.iter().zip(gops).map(|(a, b)| a / b).sum::<f64>() / gops.len() as f64;
+        let paper = PAPER_GOPS_RATIOS[i - 1];
+        assert!(
+            (r / paper - 1.0).abs() < 0.15,
+            "{name}: ratio {r:.2} vs paper {paper:.2}"
+        );
+        ratios.push((name.clone(), r, paper));
+    }
+    println!("\naverage GOPS ratios (ours vs paper):");
+    for (name, r, paper) in &ratios {
+        println!("  {name:18} {r:8.2}x   (paper {paper:7.2}x)");
+    }
+    let min = ratios.iter().map(|x| x.1).fold(f64::INFINITY, f64::min);
+    println!("\nPhotoGAN achieves at least {min:.2}x higher GOPS than every platform ✓ (paper: ≥4.40x)");
+}

@@ -1,0 +1,30 @@
+//! Bench target for paper Fig. 14: energy-per-bit across PhotoGAN and the
+//! five baseline platforms, per model, with the paper's average ratios.
+
+use photogan::report::{self, PAPER_EPB_RATIOS};
+
+fn main() {
+    let data = report::comparison_data();
+    report::fig14(&data).print();
+
+    let pg = &data.series[0];
+    let mut ratios = Vec::new();
+    for (i, (name, _, epb)) in data.series.iter().enumerate().skip(1) {
+        for (j, e) in epb.iter().enumerate() {
+            assert!(pg.2[j] < *e, "{name} beats PhotoGAN on {}", data.model_names[j]);
+        }
+        let r: f64 = epb.iter().zip(&pg.2).map(|(b, a)| b / a).sum::<f64>() / epb.len() as f64;
+        let paper = PAPER_EPB_RATIOS[i - 1];
+        assert!(
+            (r / paper - 1.0).abs() < 0.15,
+            "{name}: EPB ratio {r:.2} vs paper {paper:.2}"
+        );
+        ratios.push((name.clone(), r, paper));
+    }
+    println!("\naverage EPB ratios (ours vs paper):");
+    for (name, r, paper) in &ratios {
+        println!("  {name:18} {r:8.2}x   (paper {paper:7.2}x)");
+    }
+    let min = ratios.iter().map(|x| x.1).fold(f64::INFINITY, f64::min);
+    println!("\nPhotoGAN achieves at least {min:.2}x lower EPB than every platform ✓ (paper: ≥2.18x)");
+}

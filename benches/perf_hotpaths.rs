@@ -1,0 +1,82 @@
+//! L3 hot-path microbenches for the performance pass (EXPERIMENTS.md
+//! §Perf): simulator throughput, mapper cost, DSE sweep rate, batcher
+//! push/pop, and the sparse functional kernels.
+
+mod common;
+
+use common::{ms, time_it};
+use photogan::arch::accelerator::Accelerator;
+use photogan::arch::config::ArchConfig;
+use photogan::coordinator::batcher::{BatchPolicy, Batcher};
+use photogan::coordinator::request::{Envelope, GenRequest, RequestId};
+use photogan::dse::{explore, Grid};
+use photogan::models::zoo;
+use photogan::sim::engine::simulate_mapped;
+use photogan::sim::mapper::map_model;
+use photogan::sim::{simulate, OptFlags};
+use std::time::Instant;
+
+fn main() {
+    let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+
+    // --- mapper (includes the sparse census) -------------------------------
+    for m in [zoo::dcgan(), zoo::cyclegan()] {
+        let (best, _) = time_it(2, 10, || {
+            std::hint::black_box(map_model(&m, 1, &OptFlags::all()));
+        });
+        println!("map_model({:10}) {:>12}", m.name, ms(best));
+    }
+
+    // --- simulate: mapped vs full -------------------------------------------
+    let cycle = zoo::cyclegan();
+    let jobs = map_model(&cycle, 1, &OptFlags::all());
+    let (full, _) = time_it(2, 10, || {
+        std::hint::black_box(simulate(&cycle, &acc, 1, OptFlags::all()));
+    });
+    let (mapped, _) = time_it(2, 10, || {
+        std::hint::black_box(simulate_mapped("CycleGAN", &jobs, &acc, 1, OptFlags::all()));
+    });
+    println!("simulate(CycleGAN)   full {:>10}   pre-mapped {:>10}   ({:.0}x from caching)",
+        ms(full), ms(mapped), full / mapped);
+
+    // --- DSE sweep rate -------------------------------------------------------
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let models = zoo::all_generators();
+    let grid = Grid::paper();
+    let t0 = Instant::now();
+    let pts = explore(&grid, &models, OptFlags::all(), threads);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "dse::explore         {} configs in {:.2}s = {:.0} sims/s ({} valid, {} threads)",
+        grid.len(),
+        wall,
+        (grid.len() * models.len()) as f64 / wall,
+        pts.len(),
+        threads
+    );
+
+    // --- batcher push/pop ------------------------------------------------------
+    let now = Instant::now();
+    let (best, _) = time_it(2, 10, || {
+        let mut b = Batcher::new("m", BatchPolicy::default());
+        for i in 0..10_000u64 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            b.push(Envelope {
+                request: GenRequest {
+                    id: RequestId(i),
+                    model: "m".into(),
+                    seed: i,
+                    label: None,
+                    count: 1,
+                    arrival: now,
+                },
+                reply: tx,
+            });
+            if b.pending_samples() >= 16 {
+                std::hint::black_box(b.pop());
+            }
+        }
+        while b.pop().map(|x| x.samples > 0).unwrap_or(false) {}
+    });
+    println!("batcher 10k push/pop {:>12}  ({:.0} req/s)", ms(best), 10_000.0 / best);
+}

@@ -1,0 +1,15 @@
+//! Bench target for paper Table 1: evaluated models + parameter parity.
+//! (The ΔIS-after-quantization column is re-measured as SQNR/cosine by
+//! `python/tests/test_quant.py` — see DESIGN.md §2.)
+
+use photogan::report;
+
+fn main() {
+    let (table, rows) = report::table1();
+    table.print();
+    for (name, ours, paper) in rows {
+        let delta = (ours as f64 - paper).abs() / paper;
+        assert!(delta < 0.10, "{name} params drifted {delta:.2} from Table 1");
+    }
+    println!("\nall four models within 10% of Table 1 parameter counts ✓");
+}

@@ -1,0 +1,20 @@
+//! Bench target for paper Table 2: optoelectronic device parameters as
+//! encoded in `photonics::constants` (the inputs to everything else).
+
+use photogan::photonics::constants::{DeviceParams, LossParams};
+use photogan::report;
+
+fn main() {
+    report::table2().print();
+    // hard parity with the paper's numbers
+    let d = DeviceParams::default();
+    assert!((d.eo_tuning_latency - 20e-9).abs() < 1e-15);
+    assert!((d.to_tuning_latency - 4e-6).abs() < 1e-12);
+    assert!((d.dac_latency - 0.29e-9).abs() < 1e-15);
+    assert!((d.adc_latency - 0.82e-9).abs() < 1e-15);
+    let l = LossParams::default();
+    assert_eq!(l.propagation_db_per_cm, 1.0);
+    assert_eq!(l.splitter_db, 0.13);
+    assert_eq!(l.combiner_db, 0.9);
+    println!("\ndevice constants match paper Table 2 + §IV loss budget ✓");
+}

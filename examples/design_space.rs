@@ -1,0 +1,78 @@
+//! Design-space exploration walkthrough (paper §IV.A / Fig. 11).
+//!
+//! Sweeps `[N, K, L, M]` under the 100 W cap, prints the objective
+//! landscape along each axis through the paper's chosen point, and the
+//! global top-10 — showing *why* the paper's DSE shapes the chip the way
+//! it does (and where our device-up model disagrees; see EXPERIMENTS.md).
+//!
+//! Run: `cargo run --release --example design_space [-- threads=8]`
+
+use photogan::dse::{explore, Grid};
+use photogan::models::zoo;
+use photogan::report::PAPER_OPTIMUM;
+use photogan::sim::OptFlags;
+use photogan::util::table::Table;
+
+fn main() {
+    let threads = std::env::args()
+        .find_map(|a| a.strip_prefix("threads=").and_then(|v| v.parse().ok()))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let models = zoo::all_generators();
+    let (pn, pk, pl, pm) = PAPER_OPTIMUM;
+
+    // --- axis sweeps through the paper point ------------------------------
+    for (axis, grid) in [
+        ("N", Grid { n: vec![4, 8, 12, 16, 20, 24, 28, 32, 36], k: vec![pk], l: vec![pl], m: vec![pm] }),
+        ("K", Grid { n: vec![pn], k: vec![1, 2, 4, 8, 16], l: vec![pl], m: vec![pm] }),
+        ("L", Grid { n: vec![pn], k: vec![pk], l: vec![1, 3, 5, 7, 9, 11, 13, 15], m: vec![pm] }),
+        ("M", Grid { n: vec![pn], k: vec![pk], l: vec![pl], m: vec![1, 2, 3, 4, 5, 6] }),
+    ] {
+        let mut pts = explore(&grid, &models, OptFlags::all(), threads);
+        pts.sort_by_key(|p| (p.n, p.k, p.l, p.m));
+        let mut t = Table::new(vec![axis, "GOPS", "EPB (fJ/b)", "objective", "peak W"])
+            .with_title(format!("sweep along {axis} through {PAPER_OPTIMUM:?}"));
+        for p in &pts {
+            let v = match axis {
+                "N" => p.n,
+                "K" => p.k,
+                "L" => p.l,
+                _ => p.m,
+            };
+            t.row(vec![
+                v.to_string(),
+                format!("{:.1}", p.gops),
+                format!("{:.2}", p.epb * 1e15),
+                format!("{:.3e}", p.objective),
+                format!("{:.2}", p.peak_power_w),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    // --- global sweep ------------------------------------------------------
+    let pts = explore(&Grid::paper(), &models, OptFlags::all(), threads);
+    println!("global optimum over {} configs:", Grid::paper().len());
+    for (i, p) in pts.iter().take(5).enumerate() {
+        println!(
+            "  #{} [N,K,L,M]=[{},{},{},{}] objective {:.3e} @ {:.2} W",
+            i + 1,
+            p.n,
+            p.k,
+            p.l,
+            p.m,
+            p.objective,
+            p.peak_power_w
+        );
+    }
+    let paper_rank = pts
+        .iter()
+        .position(|p| (p.n, p.k, p.l, p.m) == PAPER_OPTIMUM)
+        .map(|i| i + 1);
+    println!(
+        "  paper's {:?} ranks {:?} of {} (see EXPERIMENTS.md Fig. 11 discussion)",
+        PAPER_OPTIMUM,
+        paper_rank,
+        pts.len()
+    );
+}

@@ -1,0 +1,89 @@
+//! Quickstart: the whole PhotoGAN stack in one page.
+//!
+//! 1. Assemble the paper's chip ([N,K,L,M] = [16,2,11,3]).
+//! 2. Simulate DCGAN inference with and without the co-design
+//!    optimizations (latency / energy / GOPS / EPB).
+//! 3. Compare against the five baseline platforms.
+//! 4. If `make artifacts` has run, generate a real image batch through the
+//!    PJRT runtime (python never executes here).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use photogan::arch::accelerator::Accelerator;
+use photogan::arch::config::ArchConfig;
+use photogan::baselines::platform::all_platforms;
+use photogan::models::zoo;
+use photogan::runtime::Engine;
+use photogan::sim::{simulate, OptFlags};
+use photogan::util::units::{fmt_energy, fmt_time};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the chip -----------------------------------------------------
+    let acc = Accelerator::new(ArchConfig::paper_optimum())?;
+    println!(
+        "PhotoGAN chip [N,K,L,M]=[{},{},{},{}]  peak power {:.2} W (cap {} W)",
+        acc.cfg.n,
+        acc.cfg.k,
+        acc.cfg.l,
+        acc.cfg.m,
+        acc.peak_power(true),
+        acc.cfg.params.system.power_cap_w
+    );
+
+    // --- 2. simulate DCGAN -----------------------------------------------
+    let dcgan = zoo::dcgan();
+    let base = simulate(&dcgan, &acc, 1, OptFlags::baseline());
+    let full = simulate(&dcgan, &acc, 1, OptFlags::all());
+    println!("\nDCGAN inference (batch 1):");
+    println!(
+        "  baseline : {:>9}  {:>9}  {:7.1} GOPS",
+        fmt_time(base.latency),
+        fmt_energy(base.energy.total()),
+        base.gops()
+    );
+    println!(
+        "  PhotoGAN : {:>9}  {:>9}  {:7.1} GOPS   ({:.1}x less energy)",
+        fmt_time(full.latency),
+        fmt_energy(full.energy.total()),
+        full.gops(),
+        base.energy.total() / full.energy.total()
+    );
+
+    // --- 3. baselines ------------------------------------------------------
+    println!("\nvs baseline platforms (DCGAN):");
+    for p in all_platforms() {
+        let r = p.evaluate(&dcgan, 1);
+        println!(
+            "  {:16} {:8.2} GOPS   PhotoGAN is {:6.1}x faster, {:6.1}x more energy-efficient",
+            p.name,
+            r.gops(),
+            full.gops() / r.gops(),
+            r.epb() / full.epb()
+        );
+    }
+
+    // --- 4. real inference through PJRT ------------------------------------
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Engine::load(&artifacts) {
+        Ok(engine) => {
+            let model = engine.model_names()[0].clone();
+            let out = engine.generate_sync(&model, &[(1, Some(3)), (2, Some(7))])?;
+            let n = engine.meta(&model).unwrap().output_elements;
+            let stats = |img: &[f32]| {
+                let mean = img.iter().sum::<f32>() / img.len() as f32;
+                let max = img.iter().cloned().fold(f32::MIN, f32::max);
+                (mean, max)
+            };
+            let (m0, x0) = stats(&out[..n]);
+            let (m1, x1) = stats(&out[n..]);
+            println!("\nreal inference ({model} via PJRT): 2 images x {n} px");
+            println!("  image[seed=1,label=3]: mean={m0:+.3} max={x0:+.3}");
+            println!("  image[seed=2,label=7]: mean={m1:+.3} max={x1:+.3}");
+        }
+        Err(_) => {
+            println!("\n(no artifacts — run `make artifacts` to enable real PJRT inference)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT lowering: JAX models → HLO text + weight/golden binaries.
+
+The only python step in the system (`make artifacts`); everything it emits
+is consumed by ``photogan::runtime`` in rust. Per model variant::
+
+    artifacts/<name>/model.hlo.txt   HLO text (xla_extension 0.5.1-safe)
+    artifacts/<name>/meta.txt        key=value metadata
+    artifacts/<name>/weights.bin     f32 LE weight buffers (flattened order)
+    artifacts/<name>/golden_in.bin   golden input batch (z or image)
+    artifacts/<name>/golden_label.bin  golden one-hot labels (if conditioned)
+    artifacts/<name>/golden_out.bin  jax-computed expected output
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+The lowered function signature is ``fn(z[, label], *weight_buffers)`` with
+``return_tuple=True``; rust passes the resident weight literals on every
+call (weights stay host-side constants, HLO stays small).
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models import zoo
+from . import train as train_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """Deterministic (path-sorted) flatten; returns (leaves, treedef)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return leaves, treedef
+
+
+def write_f32(path, arr):
+    np.asarray(arr, dtype="<f4").ravel().tofile(path)
+
+
+def export_model(name, out_dir, train_steps=0, seed=0, verbose=True):
+    model = zoo.MODELS[name]
+    key = jax.random.PRNGKey(seed)
+    history = []
+    if name == "condgan" and train_steps > 0:
+        params, history = train_mod.train_condgan(steps=train_steps, verbose=verbose)
+    else:
+        params = model["init"](key)
+    leaves, treedef = flatten_params(params)
+    batch = model["batch"]
+
+    # input specs
+    if model["image_input"] is not None:
+        cin, h, w = model["image_input"]
+        in_shape = (batch, cin, h, w)
+        input_elements = cin * h * w
+    else:
+        in_shape = (batch, model["z"])
+        input_elements = model["z"]
+    label_elements = model["label"]
+
+    def fn(z, *rest):
+        if label_elements:
+            label, weights = rest[0], rest[1:]
+        else:
+            label, weights = None, rest
+        p = jax.tree_util.tree_unflatten(treedef, list(weights))
+        return (model["apply"](p, z, label, fast=False),)
+
+    specs = [jax.ShapeDtypeStruct(in_shape, jnp.float32)]
+    if label_elements:
+        specs.append(jax.ShapeDtypeStruct((batch, label_elements), jnp.float32))
+    specs.extend(jax.ShapeDtypeStruct(l.shape, jnp.float32) for l in leaves)
+
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    if verbose:
+        print(f"[aot] {name}: lowered in {time.time()-t0:.1f}s, {len(hlo)} chars of HLO")
+
+    # golden run (jax executes the same lowered math)
+    kz, kl = jax.random.split(key)
+    if model["image_input"] is not None:
+        golden_in = jax.random.normal(kz, in_shape, jnp.float32)
+    else:
+        golden_in = jax.random.normal(kz, in_shape, jnp.float32)
+    args = [golden_in]
+    golden_label = None
+    if label_elements:
+        labels = jax.random.randint(kl, (batch,), 0, label_elements)
+        golden_label = jax.nn.one_hot(labels, label_elements).astype(jnp.float32)
+        args.append(golden_label)
+    args.extend(leaves)
+    golden_out = jax.jit(fn)(*args)[0]
+
+    d = os.path.join(out_dir, name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "model.hlo.txt"), "w") as f:
+        f.write(hlo)
+    write_f32(os.path.join(d, "weights.bin"), np.concatenate([np.asarray(l).ravel() for l in leaves]))
+    write_f32(os.path.join(d, "golden_in.bin"), golden_in)
+    if golden_label is not None:
+        write_f32(os.path.join(d, "golden_label.bin"), golden_label)
+    write_f32(os.path.join(d, "golden_out.bin"), golden_out)
+
+    chw = model["out"]
+    meta = [
+        f"name={name}",
+        f"batch={batch}",
+        f"input_elements={input_elements}",
+        f"label_elements={label_elements}",
+        f"output_elements={chw[0] * chw[1] * chw[2]}",
+        f"output_shape={chw[0]}x{chw[1]}x{chw[2]}",
+        f"params={zoo.count_params(params)}",
+        f"train_steps={train_steps if name == 'condgan' else 0}",
+        f"weight_buffers={len(leaves)}",
+    ]
+    for i, l in enumerate(leaves):
+        meta.append(f"weights_{i}_elements={l.size}")
+        meta.append(f"weights_{i}_shape={'x'.join(str(dim) for dim in l.shape)}")
+    for step, g, dl in history:
+        meta.append(f"train_loss_{step}={g:.4f},{dl:.4f}")
+    with open(os.path.join(d, "meta.txt"), "w") as f:
+        f.write("\n".join(meta) + "\n")
+    if verbose:
+        print(f"[aot] {name}: wrote artifacts to {d}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="condgan,dcgan,artgan,cyclegan64",
+        help="comma-separated subset of: " + ",".join(zoo.MODELS),
+    )
+    ap.add_argument(
+        "--train-steps",
+        type=int,
+        default=int(os.environ.get("PHOTOGAN_TRAIN_STEPS", "600")),
+        help="adversarial training steps for the condgan artifact (0 = random init)",
+    )
+    args = ap.parse_args()
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    for n in names:
+        if n not in zoo.MODELS:
+            sys.exit(f"unknown model '{n}' (have: {', '.join(zoo.MODELS)})")
+        export_model(n, args.out, train_steps=args.train_steps)
+    print(f"[aot] done: {len(names)} artifact(s) in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: the photonic MVM tile.
+
+Models PhotoGAN's dense/conv unit at the kernel level: a K×N MR bank array
+retires an (out-rows × reduction) tile of a matrix product per pass, with
+activations and weights imprinted at 8-bit precision (DAC/MR levels) and
+the bias added on egress via the coherent-summation path (paper Fig. 5).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the MR bank tile *is* the
+BlockSpec tile — ``block_k`` plays the role of the per-waveguide reduction
+length (the paper's 36-wavelength crosstalk bound; we use MXU-friendly
+multiples on real silicon), ``block_n`` the output-column tile, and the
+grid streams HBM→VMEM exactly like the ECU streams DRAM→MR banks. The
+reduction axis is the innermost grid dimension accumulating into the
+output tile (revisited across ``k`` steps) — the ECU's column-tile
+partial-sum accumulation.
+
+Runs with ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md); structure is TPU-shaped.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8-bit symmetric quantization levels (±127).
+_LEVELS = 127.0
+
+
+def _quantize(v, scale):
+    """Symmetric 8-bit fake-quantization at a given (positive) scale."""
+    return jnp.round(jnp.clip(v / scale, -1.0, 1.0) * _LEVELS) / _LEVELS * scale
+
+
+def _mvm_kernel(x_ref, w_ref, b_ref, xs_ref, ws_ref, o_ref, *, n_k):
+    """One (block_m × block_n) output tile; grid = (M/bm, N/bn, K/bk)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # imprint both operands at 8-bit MR/DAC precision, accumulate in f32
+    # (the balanced photodetector integrates analog photocurrent)
+    xq = _quantize(x_ref[...], xs_ref[0, 0])
+    wq = _quantize(w_ref[...], ws_ref[0, 0])
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        # coherent-summation bias add on egress
+        o_ref[...] += b_ref[...]
+
+
+def auto_blocks(m, k, n):
+    """Pick (bm, bn, bk): big enough that the grid stays small (each
+    interpret-mode grid step costs ~ms of while-loop/dynamic-slice overhead
+    on CPU — §Perf), small enough that one step's tiles fit a 16 MiB-VMEM
+    budget on real TPU (see ``vmem_bytes``)."""
+    bm = min(m, 1024)
+    bk = min(k, 1024)
+    bn = min(n, 2048)
+    # shrink the largest dim until the tile set fits ~12 MiB
+    while vmem_bytes(bm, bn, bk) > 12 * 1024 * 1024:
+        if bn >= bm and bn >= bk and bn > 128:
+            bn //= 2
+        elif bm >= bk and bm > 128:
+            bm //= 2
+        else:
+            bk //= 2
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "bits"))
+def photonic_mvm(x, w, b=None, *, block_m=None, block_n=None, block_k=None, bits=8):
+    """Quantized ``x @ w + b`` via the Pallas tile kernel.
+
+    x: [M, K] activations, w: [K, N] weights, b: [N] bias (optional).
+    Shapes are zero-padded up to block multiples (zero rows/cols contribute
+    nothing, exactly like unfilled MR bank rows). Block sizes default to
+    [`auto_blocks`].
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    assert bits == 8, "the photonic model is 8-bit (paper §IV)"
+    m, k = x.shape
+    _, n = w.shape
+    abm, abn, abk = auto_blocks(m, k, n)
+    block_m = block_m or abm
+    block_n = block_n or abn
+    block_k = block_k or abk
+    if b is None:
+        b = jnp.zeros((n,), jnp.float32)
+
+    # quantization scales are global per-operand (the ECU calibrates the
+    # DAC full-scale per tensor)
+    xs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8).reshape(1, 1)
+    ws = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8).reshape(1, 1)
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n))
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mvm_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp, xs, ws)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m, block_n, block_k, dtype_bytes=4):
+    """Static VMEM footprint of one grid step (used by the L1 perf
+    analysis in DESIGN.md §Perf): x-tile + w-tile + out-tile + bias."""
+    return dtype_bytes * (
+        block_m * block_k + block_k * block_n + block_m * block_n + block_n
+    )

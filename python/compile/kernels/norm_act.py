@@ -1,0 +1,60 @@
+"""L1 Pallas kernels: instance normalization and Leaky-ReLU.
+
+These model the normalization block's broadband-MR scale/offset path
+(paper Fig. 7) and the SOA Leaky-ReLU unit (Fig. 8). Statistics (µ, σ)
+are computed in-kernel — the ECU side of IN — while the apply step is the
+optical scale+offset.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _in_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    """One (n, c) slice: x_ref [H, W] → normalized [H, W]."""
+    x = x_ref[...]
+    mu = jnp.mean(x)
+    var = jnp.mean((x - mu) * (x - mu))
+    inv = jax.lax.rsqrt(var + eps)
+    # broadband-MR scale (γ·inv) and coherent offset (β − γ·inv·µ)
+    o_ref[...] = x * (g_ref[0] * inv) + (b_ref[0] - g_ref[0] * inv * mu)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def instance_norm(x, gamma, beta, *, eps=1e-5):
+    """InstanceNorm over NCHW via a per-(n, c) Pallas grid."""
+    n, c, h, w = x.shape
+    run = pl.pallas_call(
+        functools.partial(_in_kernel, eps=eps),
+        grid=(n, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, w), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, w), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, h, w), jnp.float32),
+        interpret=True,
+    )
+    return run(x.astype(jnp.float32), gamma.astype(jnp.float32), beta.astype(jnp.float32))
+
+
+def _lrelu_kernel(x_ref, o_ref, *, alpha):
+    """Elementwise SOA routing: positive branch gain 1, negative gain α."""
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x > 0, x, alpha * x)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def leaky_relu(x, *, alpha=0.2):
+    """Leaky ReLU (paper Eq. 1) as a flat elementwise Pallas kernel."""
+    flat = x.reshape(-1)
+    run = pl.pallas_call(
+        functools.partial(_lrelu_kernel, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        interpret=True,
+    )
+    return run(flat).reshape(x.shape)

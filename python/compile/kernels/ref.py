@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package has a reference here; pytest (and hypothesis
+sweeps) assert allclose between the two. These are also the semantics the
+rust-side functional models (``photogan::sparse``, ``dense_unit_dot``)
+mirror, closing the three-layer consistency loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_8bit(x, scale=None):
+    """Symmetric fake-quantization to int8 levels (the MR/DAC precision
+    model, paper §IV): values are clipped to ±scale and snapped to 127
+    uniform levels per polarity. Returns the dequantized tensor."""
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    levels = 127.0
+    q = jnp.round(jnp.clip(x / scale, -1.0, 1.0) * levels) / levels
+    return q * scale
+
+
+def photonic_mvm(x, w, b=None, bits=8):
+    """Reference for the photonic MVM tile kernel: 8-bit fake-quantized
+    ``x @ w + b`` (x: [batch, in], w: [in, out], b: [out])."""
+    xq = quantize_8bit(x) if bits == 8 else x
+    wq = quantize_8bit(w) if bits == 8 else w
+    y = xq @ wq
+    if b is not None:
+        y = y + b
+    return y
+
+
+def tconv2d(x, kernel, stride, padding):
+    """Reference transposed convolution, NCHW semantics matching PyTorch
+    ``ConvTranspose2d`` (kernel: [cin, cout, kh, kw]).
+
+    ConvT(x, W, s, p) == stride-1 correlation of the zero-inserted,
+    (k-1-p)-padded input with the flipped kernel. jax.lax.conv_transpose
+    with ``transpose_kernel=True`` implements exactly the PyTorch
+    convention when handed the kernel in [I, O, H, W] → [H, W, O, I]? —
+    rather than juggle its flag semantics we use conv_general_dilated with
+    lhs_dilation, which is the textbook definition and easy to audit:
+    lhs_dilation=s inserts the zeros, padding (k-1-p) restores the frame,
+    and the kernel is spatially flipped.
+    """
+    k = kernel.shape[-1]
+    pad = k - 1 - padding
+    # [cin, cout, kh, kw] -> flipped, as a normal conv kernel [cout, cin, kh, kw]
+    rhs = jnp.transpose(kernel[:, :, ::-1, ::-1], (1, 0, 2, 3))
+    return jax.lax.conv_general_dilated(
+        x,
+        rhs,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        lhs_dilation=(stride, stride),
+        rhs_dilation=(1, 1),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def instance_norm(x, gamma, beta, eps=1e-5):
+    """Reference InstanceNorm over NCHW: per-(n, c) spatial statistics."""
+    mu = jnp.mean(x, axis=(2, 3), keepdims=True)
+    var = jnp.var(x, axis=(2, 3), keepdims=True)
+    return gamma[None, :, None, None] * (x - mu) / jnp.sqrt(var + eps) + beta[
+        None, :, None, None
+    ]
+
+
+def batch_norm_inference(x, gamma, beta, mean, var, eps=1e-5):
+    """Reference inference-mode BatchNorm over NCHW with running stats."""
+    return (
+        gamma[None, :, None, None]
+        * (x - mean[None, :, None, None])
+        / jnp.sqrt(var[None, :, None, None] + eps)
+        + beta[None, :, None, None]
+    )
+
+
+def leaky_relu(x, alpha=0.2):
+    """Reference Leaky ReLU (paper Eq. 1)."""
+    return jnp.where(x > 0, x, alpha * x)

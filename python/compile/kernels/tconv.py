@@ -1,0 +1,184 @@
+"""L1 Pallas kernel: sparse transposed convolution (paper §III.C.1, Fig. 9).
+
+The paper's dataflow insight, restated for a tiled accelerator: output
+positions sharing a phase ``(oy mod s, ox mod s)`` share one static
+zero-pattern, so a stride-s transposed conv is exactly ``s²`` independent
+stride-1 *reduced* stencils — no inserted zero is ever touched. For phase
+``(py, px)`` the valid kernel taps are::
+
+    ky with (py + ky - (k-1-p)) ≡ 0 (mod s)   →  dy = (py + ky - (k-1-p))/s
+
+and the phase output at grid point ``(qy, qx)`` (i.e. output pixel
+``(s·qy + py, s·qx + px)``) is ``Σ_taps  x[qy+dy, qx+dx] · w_flip[ky, kx]``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of a GPU-ish
+gather, each tap becomes one **MXU matmul** ``[Cout, Cin] × [Cin, Hq·Wq]``
+over a shifted view of the (pre-padded) input held in VMEM — the same
+"feed the compute array only real values" move the paper makes with MR
+banks. Tap loops are static (unrolled at trace time).
+
+The kernel runs per (batch, phase) with ``interpret=True``; the python
+wrapper pads once, loops phases, and interleaves the phase grids back into
+the full output — the ECU's "column reintroduction" bookkeeping.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def phase_taps(k, s, p, py, px):
+    """Static tap list for one phase: [(ky, kx, dy, dx), ...] in the
+    *flipped-kernel* orientation (matches ``photogan::sparse`` in rust)."""
+    off = k - 1 - p
+    taps = []
+    for ky in range(k):
+        num_y = py + ky - off
+        if num_y % s != 0:
+            continue
+        dy = num_y // s
+        for kx in range(k):
+            num_x = px + kx - off
+            if num_x % s != 0:
+                continue
+            dx = num_x // s
+            taps.append((ky, kx, dy, dx))
+    return taps
+
+
+def _phase_kernel(x_ref, w_ref, o_ref, *, taps, hq, wq, pad):
+    """Whole batch, one phase: x_ref [B, Cin, Hp, Wp] (pre-padded by
+    ``pad`` on each side), w_ref [T, Cout, Cin] (per-tap flipped kernels),
+    o_ref [B, Cout, Hq, Wq]. Batching inside the kernel (instead of vmap
+    over per-sample calls) keeps one MXU matmul per tap — §Perf."""
+    b, cin = x_ref.shape[0], x_ref.shape[1]
+    cout = o_ref.shape[1]
+    acc = jnp.zeros((cout, b * hq * wq), jnp.float32)
+    for t, (_ky, _kx, dy, dx) in enumerate(taps):
+        # shifted view of the real (never zero-inserted) input
+        x_slice = x_ref[:, :, pad + dy : pad + dy + hq, pad + dx : pad + dx + wq]
+        x_mat = x_slice.transpose(1, 0, 2, 3).reshape(cin, b * hq * wq)
+        w_t = w_ref[t]  # [Cout, Cin]
+        acc += jnp.dot(w_t, x_mat, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.reshape(cout, b, hq, wq).transpose(1, 0, 2, 3)
+
+
+def sparse_tconv2d(x, kernel, stride, padding):
+    """Sparse transposed convolution.
+
+    x: [N, Cin, H, W]; kernel: [Cin, Cout, k, k] (PyTorch ConvTranspose2d
+    layout); returns [N, Cout, (H-1)s+k-2p, (W-1)s+k-2p]. Equals
+    ``ref.tconv2d`` exactly (same taps, f32 accumulation).
+    """
+    n, cin, h, w = x.shape
+    cin2, cout, k, _ = kernel.shape
+    assert cin == cin2
+    s, p = stride, padding
+    ho, wo = (h - 1) * s + k - 2 * p, (w - 1) * s + k - 2 * p
+
+    # one shared zero-pad of the *real* input covers every phase's tap
+    # range (generous: |dy| < k always; zero-cost under interpret)
+    pad = k
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+
+    w_flip = kernel[:, :, ::-1, ::-1]  # flipped, [Cin, Cout, k, k]
+    out = jnp.zeros((n, cout, ho, wo), jnp.float32)
+    for py in range(min(s, ho)):
+        for px in range(min(s, wo)):
+            taps = phase_taps(k, s, p, py, px)
+            hq = (ho - 1 - py) // s + 1
+            wq = (wo - 1 - px) // s + 1
+            if not taps:
+                continue  # all-zero phase (possible for p > 0 edge cases)
+            # per-tap flipped kernels [T, Cout, Cin]
+            w_phase = jnp.stack(
+                [jnp.transpose(w_flip[:, :, ky, kx], (1, 0)) for ky, kx, _, _ in taps]
+            )
+            run = pl.pallas_call(
+                functools.partial(_phase_kernel, taps=taps, hq=hq, wq=wq, pad=pad),
+                out_shape=jax.ShapeDtypeStruct((n, cout, hq, wq), jnp.float32),
+                interpret=True,
+            )
+            phase_out = run(xp, w_phase)
+            out = out.at[:, :, py::s, px::s].set(phase_out)
+    return out
+
+
+def census(k, s, p, h, w):
+    """Python mirror of ``photogan::sparse::TconvSpec::census`` — dense vs
+    sparse MAC counts (spatial level). Used by tests to cross-check the
+    rust census and by the L1 perf analysis."""
+    ho, wo = (h - 1) * s + k - 2 * p, (w - 1) * s + k - 2 * p
+    off = k - 1 - p
+    dense = ho * wo * k * k
+    sparse = 0
+    for oy in range(ho):
+        for ox in range(wo):
+            for ky in range(k):
+                zy = oy + ky - off
+                if zy < 0 or zy % s != 0 or zy // s >= h:
+                    continue
+                for kx in range(k):
+                    zx = ox + kx - off
+                    if zx < 0 or zx % s != 0 or zx // s >= w:
+                        continue
+                    sparse += 1
+    return dense, sparse
+
+
+def tconv2d_subconv(x, kernel, stride, padding):
+    """Differentiable fast-path transposed conv: the same phase
+    decomposition as the Pallas kernel, but expressed as ``s²`` stride-1
+    ``lax`` convolutions (contiguous sub-kernels) interleaved into the
+    output. Mathematically identical to ``ref.tconv2d``; exists because the
+    CPU VJP of ``lhs_dilation`` convolutions is pathologically slow, which
+    made build-time adversarial training impractical. Used by the models'
+    ``fast=True`` path (training); grads of stride-1 convs are fast."""
+    n, cin, h, w = x.shape
+    _, cout, k, _ = kernel.shape
+    s, p = stride, padding
+    if s == 1:
+        # no zero-insertion at stride 1 — the plain formulation is fine
+        # (and its grad does not hit the dilated path)
+        pad = k - 1 - p
+        rhs = jnp.transpose(kernel[:, :, ::-1, ::-1], (1, 0, 2, 3))
+        return jax.lax.conv_general_dilated(
+            x, rhs, (1, 1), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    ho, wo = (h - 1) * s + k - 2 * p, (w - 1) * s + k - 2 * p
+    w_flip = kernel[:, :, ::-1, ::-1]
+    out = jnp.zeros((n, cout, ho, wo), x.dtype)
+    for py in range(min(s, ho)):
+        for px in range(min(s, wo)):
+            taps = phase_taps(k, s, p, py, px)
+            if not taps:
+                continue
+            hq = (ho - 1 - py) // s + 1
+            wq = (wo - 1 - px) // s + 1
+            dys = sorted({t[2] for t in taps})
+            dxs = sorted({t[3] for t in taps})
+            # contiguity of the sub-kernel window (valid ky step by s)
+            assert dys == list(range(dys[0], dys[0] + len(dys)))
+            assert dxs == list(range(dxs[0], dxs[0] + len(dxs)))
+            ky_of = {dy: ky for ky, _, dy, _ in
+                     ((t[0], t[1], t[2], t[3]) for t in taps)}
+            kx_of = {dx: kx for _, kx, _, dx in
+                     ((t[0], t[1], t[2], t[3]) for t in taps)}
+            ky_idx = jnp.array([ky_of[dy] for dy in dys])
+            kx_idx = jnp.array([kx_of[dx] for dx in dxs])
+            # sub-kernel [cout, cin, len(dys), len(dxs)] (already flipped)
+            sub = jnp.transpose(
+                w_flip[:, :, ky_idx[:, None], kx_idx[None, :]], (1, 0, 2, 3))
+            # out_phase[qy] = Σ_d x[qy + dys[0] + d] · sub[d]: stride-1
+            # correlation with (possibly negative) edge padding
+            pad_lo_y, pad_lo_x = -dys[0], -dxs[0]
+            pad_hi_y = hq - 1 + dys[-1] - (h - 1)
+            pad_hi_x = wq - 1 + dxs[-1] - (w - 1)
+            phase = jax.lax.conv_general_dilated(
+                x, sub, (1, 1),
+                [(pad_lo_y, pad_hi_y), (pad_lo_x, pad_hi_x)],
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            out = out.at[:, :, py::s, px::s].set(phase)
+    return out

@@ -1,0 +1,11 @@
+"""L2: the four evaluated GAN generators in JAX, built on the L1 kernels.
+
+Each model exposes ``init(key) -> params`` and
+``apply(params, z, label=None, fast=False) -> images``; ``fast=True``
+swaps the Pallas kernels for their pure-jnp references (identical math
+minus 8-bit fake-quantization) — used inside training loops where
+interpret-mode Pallas would dominate wall-clock.
+"""
+
+from . import common, zoo  # noqa: F401
+from .zoo import MODELS  # noqa: F401

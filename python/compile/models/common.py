@@ -1,0 +1,133 @@
+"""Shared L2 layer functions routing through the L1 kernels.
+
+Weight layouts:
+- dense:  w [in, out], b [out]
+- conv:   w [cout, cin, k, k], b [cout]   (forward conv)
+- tconv:  w [cin, cout, k, k], b [cout]   (PyTorch ConvTranspose2d layout)
+- norm:   gamma [c], beta [c] (+ running mean/var for BN inference)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import mvm as mvm_k
+from ..kernels import norm_act as na_k
+from ..kernels import ref
+from ..kernels import tconv as tconv_k
+
+
+def dense(x, w, b, *, fast=False):
+    """Fully-connected layer on the photonic MVM kernel. x: [B, in]."""
+    if fast:
+        return x @ w + b
+    return mvm_k.photonic_mvm(x, w, b)
+
+
+def conv2d(x, w, b, stride, padding, *, fast=False):
+    """Forward convolution as im2col + photonic MVM (the conv block also
+    runs on MR banks, paper §III.B.2 / [24]). x: [B, Cin, H, W]."""
+    n, cin, h, wd = x.shape
+    cout, _, k, _ = w.shape
+    if fast:
+        y = jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(stride, stride),
+            padding=[(padding, padding), (padding, padding)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        return y + b[None, :, None, None]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [B, Cin*k*k, Ho, Wo]
+    _, red, ho, wo = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * ho * wo, red)
+    wmat = w.reshape(cout, red).T  # [red, cout]
+    # block sizes are auto-picked (im2col rows = B·Ho·Wo can reach the
+    # thousands; tiny tiles degenerate the Pallas grid into thousands of
+    # per-step overheads — L2 perf pass, EXPERIMENTS.md §Perf)
+    y = mvm_k.photonic_mvm(cols, wmat, b)
+    return y.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
+
+
+def tconv2d(x, w, b, stride, padding, *, fast=False):
+    """Transposed convolution via the sparse zero-column-eliminated Pallas
+    kernel (paper Fig. 9). The fast path uses the same phase decomposition
+    as stride-1 lax convs (``tconv2d_subconv``) — mathematically identical
+    and, crucially, with fast CPU gradients for build-time training (the
+    VJP of ``lhs_dilation`` convs is pathologically slow on CPU XLA)."""
+    if fast:
+        y = tconv_k.tconv2d_subconv(x, w, stride, padding)
+    else:
+        y = tconv_k.sparse_tconv2d(x, w, stride, padding)
+    return y + b[None, :, None, None]
+
+
+def batch_norm(x, gamma, beta, mean, var, *, fast=False):
+    """Inference-mode BN (parameters frozen after training)."""
+    del fast  # scale+shift folds into jnp either way (broadband-MR apply)
+    return ref.batch_norm_inference(x, gamma, beta, mean, var)
+
+
+def instance_norm(x, gamma, beta, *, fast=False):
+    """IN with per-instance statistics (CycleGAN path)."""
+    if fast:
+        return ref.instance_norm(x, gamma, beta)
+    return na_k.instance_norm(x, gamma, beta)
+
+
+def leaky_relu(x, alpha=0.2, *, fast=False):
+    if fast:
+        return ref.leaky_relu(x, alpha)
+    return na_k.leaky_relu(x, alpha=alpha)
+
+
+def relu(x, *, fast=False):
+    """ReLU = SOA branch with α → 0 (paper §III.B.4)."""
+    return leaky_relu(x, alpha=0.0, fast=fast)
+
+
+def tanh(x, *, fast=False):
+    del fast  # saturating-SOA response; same math either path
+    return jnp.tanh(x)
+
+
+# ---------------------------------------------------------------- init
+
+def he_conv(key, cout, cin, k):
+    scale = jnp.sqrt(2.0 / (cin * k * k))
+    return jax.random.normal(key, (cout, cin, k, k), jnp.float32) * scale
+
+
+def he_tconv(key, cin, cout, k):
+    scale = jnp.sqrt(2.0 / (cin * k * k))
+    return jax.random.normal(key, (cin, cout, k, k), jnp.float32) * scale
+
+
+def he_dense(key, n_in, n_out):
+    scale = jnp.sqrt(2.0 / n_in)
+    return jax.random.normal(key, (n_in, n_out), jnp.float32) * scale
+
+
+def norm_params(c):
+    """BN: γ=1, β=0, running µ=0, σ²=1 — identity until trained."""
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def in_params(c):
+    """IN: γ=1, β=0 — statistics are per-instance, so no running buffers
+    (unused buffers would be DCE'd out of the lowered XLA signature and
+    desync the rust weight loader)."""
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+    }

@@ -1,0 +1,233 @@
+"""The four generators (paper Table 1), mirrored 1:1 from the rust IR
+(``rust/src/models/zoo.rs``) so the analytical simulator and the
+functional path describe the same networks.
+
+Every builder returns a dict with ``init``, ``apply``, and metadata used
+by aot.py (input/output shapes, label width, default compile batch).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as c
+
+
+def _seq_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ------------------------------------------------------------------ DCGAN
+
+def dcgan_init(key):
+    ks = _seq_keys(key, 6)
+    return {
+        "t0": {"w": c.he_tconv(ks[0], 100, 512, 4), "b": jnp.zeros(512)},
+        "n0": c.norm_params(512),
+        "t1": {"w": c.he_tconv(ks[1], 512, 256, 4), "b": jnp.zeros(256)},
+        "n1": c.norm_params(256),
+        "t2": {"w": c.he_tconv(ks[2], 256, 128, 4), "b": jnp.zeros(128)},
+        "n2": c.norm_params(128),
+        "t3": {"w": c.he_tconv(ks[3], 128, 64, 4), "b": jnp.zeros(64)},
+        "n3": c.norm_params(64),
+        "c4": {"w": c.he_conv(ks[4], 64, 64, 3), "b": jnp.zeros(64)},
+        "n4": c.norm_params(64),
+        "t5": {"w": c.he_tconv(ks[5], 64, 3, 4), "b": jnp.zeros(3)},
+    }
+
+
+def dcgan_apply(p, z, label=None, *, fast=False):
+    """z: [B, 100] → images [B, 3, 64, 64]."""
+    del label
+    x = z.reshape(z.shape[0], 100, 1, 1)
+    x = c.tconv2d(x, p["t0"]["w"], p["t0"]["b"], 1, 0, fast=fast)  # 4x4
+    x = c.batch_norm(x, **p["n0"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.tconv2d(x, p["t1"]["w"], p["t1"]["b"], 2, 1, fast=fast)  # 8x8
+    x = c.batch_norm(x, **p["n1"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.tconv2d(x, p["t2"]["w"], p["t2"]["b"], 2, 1, fast=fast)  # 16x16
+    x = c.batch_norm(x, **p["n2"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.tconv2d(x, p["t3"]["w"], p["t3"]["b"], 2, 1, fast=fast)  # 32x32
+    x = c.batch_norm(x, **p["n3"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.conv2d(x, p["c4"]["w"], p["c4"]["b"], 1, 1, fast=fast)
+    x = c.batch_norm(x, **p["n4"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.tconv2d(x, p["t5"]["w"], p["t5"]["b"], 2, 1, fast=fast)  # 64x64
+    return c.tanh(x, fast=fast)
+
+
+# ---------------------------------------------------------------- CondGAN
+
+def condgan_init(key):
+    ks = _seq_keys(key, 4)
+    return {
+        "d0": {"w": c.he_dense(ks[0], 110, 128 * 7 * 7), "b": jnp.zeros(128 * 7 * 7)},
+        "n0": c.norm_params(128),
+        "t1": {"w": c.he_tconv(ks[1], 128, 128, 4), "b": jnp.zeros(128)},
+        "n1": c.norm_params(128),
+        "t2": {"w": c.he_tconv(ks[2], 128, 64, 4), "b": jnp.zeros(64)},
+        "n2": c.norm_params(64),
+        "c3": {"w": c.he_conv(ks[3], 1, 64, 3), "b": jnp.zeros(1)},
+    }
+
+
+def condgan_apply(p, z, label=None, *, fast=False):
+    """z: [B, 100], label: [B, 10] one-hot → images [B, 1, 28, 28]."""
+    if label is None:
+        label = jnp.zeros((z.shape[0], 10), z.dtype)
+    x = jnp.concatenate([z, label], axis=1)
+    x = c.dense(x, p["d0"]["w"], p["d0"]["b"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = x.reshape(z.shape[0], 128, 7, 7)
+    x = c.batch_norm(x, **p["n0"], fast=fast)
+    x = c.tconv2d(x, p["t1"]["w"], p["t1"]["b"], 2, 1, fast=fast)  # 14x14
+    x = c.batch_norm(x, **p["n1"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.tconv2d(x, p["t2"]["w"], p["t2"]["b"], 2, 1, fast=fast)  # 28x28
+    x = c.batch_norm(x, **p["n2"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = c.conv2d(x, p["c3"]["w"], p["c3"]["b"], 1, 1, fast=fast)
+    return c.tanh(x, fast=fast)
+
+
+# ----------------------------------------------------------------- ArtGAN
+
+def artgan_init(key):
+    ks = _seq_keys(key, 5)
+    return {
+        "d0": {"w": c.he_dense(ks[0], 110, 288 * 4 * 4), "b": jnp.zeros(288 * 4 * 4)},
+        "n0": c.norm_params(288),
+        "t1": {"w": c.he_tconv(ks[1], 288, 128, 4), "b": jnp.zeros(128)},
+        "n1": c.norm_params(128),
+        "t2": {"w": c.he_tconv(ks[2], 128, 64, 4), "b": jnp.zeros(64)},
+        "n2": c.norm_params(64),
+        "t3": {"w": c.he_tconv(ks[3], 64, 32, 4), "b": jnp.zeros(32)},
+        "n3": c.norm_params(32),
+        "t4": {"w": c.he_tconv(ks[4], 32, 3, 4), "b": jnp.zeros(3)},
+    }
+
+
+def artgan_apply(p, z, label=None, *, fast=False):
+    """z: [B, 100], label: [B, 10] → images [B, 3, 64, 64]."""
+    if label is None:
+        label = jnp.zeros((z.shape[0], 10), z.dtype)
+    x = jnp.concatenate([z, label], axis=1)
+    x = c.dense(x, p["d0"]["w"], p["d0"]["b"], fast=fast)
+    x = c.relu(x, fast=fast)
+    x = x.reshape(z.shape[0], 288, 4, 4)
+    x = c.batch_norm(x, **p["n0"], fast=fast)
+    for i, n in [(1, "n1"), (2, "n2"), (3, "n3")]:
+        t = p[f"t{i}"]
+        x = c.tconv2d(x, t["w"], t["b"], 2, 1, fast=fast)
+        x = c.batch_norm(x, **p[n], fast=fast)
+        x = c.relu(x, fast=fast)
+    x = c.tconv2d(x, p["t4"]["w"], p["t4"]["b"], 2, 1, fast=fast)  # 64x64
+    return c.tanh(x, fast=fast)
+
+
+# --------------------------------------------------------------- CycleGAN
+
+def cyclegan_init(key, *, blocks=9, base=64):
+    ks = iter(_seq_keys(key, 7 + 2 * blocks))
+    p = {
+        "c0": {"w": c.he_conv(next(ks), base, 3, 7), "b": jnp.zeros(base)},
+        "in0": c.in_params(base),
+        "d1": {"w": c.he_conv(next(ks), base * 2, base, 3), "b": jnp.zeros(base * 2)},
+        "in1": c.in_params(base * 2),
+        "d2": {"w": c.he_conv(next(ks), base * 4, base * 2, 3), "b": jnp.zeros(base * 4)},
+        "in2": c.in_params(base * 4),
+        "blocks": [],
+        "u1": {"w": c.he_tconv(next(ks), base * 4, base * 2, 4), "b": jnp.zeros(base * 2)},
+        "inu1": c.in_params(base * 2),
+        "u2": {"w": c.he_tconv(next(ks), base * 2, base, 4), "b": jnp.zeros(base)},
+        "inu2": c.in_params(base),
+        "c9": {"w": c.he_conv(next(ks), 3, base, 7), "b": jnp.zeros(3)},
+    }
+    for _ in range(blocks):
+        p["blocks"].append(
+            {
+                "c1": {"w": c.he_conv(next(ks), base * 4, base * 4, 3), "b": jnp.zeros(base * 4)},
+                "in1": c.in_params(base * 4),
+                "c2": {"w": c.he_conv(next(ks), base * 4, base * 4, 3), "b": jnp.zeros(base * 4)},
+                "in2": c.in_params(base * 4),
+            }
+        )
+    return p
+
+
+def cyclegan_apply(p, x, label=None, *, fast=False):
+    """x: [B, 3, H, W] input image → translated [B, 3, H, W]."""
+    del label
+    inorm = lambda t, n: c.instance_norm(t, n["gamma"], n["beta"], fast=fast)
+    y = c.conv2d(x, p["c0"]["w"], p["c0"]["b"], 1, 3, fast=fast)
+    y = c.relu(inorm(y, p["in0"]), fast=fast)
+    y = c.conv2d(y, p["d1"]["w"], p["d1"]["b"], 2, 1, fast=fast)
+    y = c.relu(inorm(y, p["in1"]), fast=fast)
+    y = c.conv2d(y, p["d2"]["w"], p["d2"]["b"], 2, 1, fast=fast)
+    y = c.relu(inorm(y, p["in2"]), fast=fast)
+    for blk in p["blocks"]:
+        r = c.conv2d(y, blk["c1"]["w"], blk["c1"]["b"], 1, 1, fast=fast)
+        r = c.relu(inorm(r, blk["in1"]), fast=fast)
+        r = c.conv2d(r, blk["c2"]["w"], blk["c2"]["b"], 1, 1, fast=fast)
+        r = inorm(r, blk["in2"])
+        y = y + r  # residual skip (ECU add)
+    y = c.tconv2d(y, p["u1"]["w"], p["u1"]["b"], 2, 1, fast=fast)
+    y = c.relu(inorm(y, p["inu1"]), fast=fast)
+    y = c.tconv2d(y, p["u2"]["w"], p["u2"]["b"], 2, 1, fast=fast)
+    y = c.relu(inorm(y, p["inu2"]), fast=fast)
+    y = c.conv2d(y, p["c9"]["w"], p["c9"]["b"], 1, 3, fast=fast)
+    return c.tanh(y, fast=fast)
+
+
+# -------------------------------------------------------------- registry
+
+def count_params(tree):
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+MODELS = {
+    # name: (init, apply, z/input spec, label width, output chw, compile batch)
+    "dcgan": {
+        "init": dcgan_init,
+        "apply": dcgan_apply,
+        "z": 100,
+        "label": 0,
+        "out": (3, 64, 64),
+        "batch": 4,
+        "image_input": None,
+    },
+    "condgan": {
+        "init": condgan_init,
+        "apply": condgan_apply,
+        "z": 100,
+        "label": 10,
+        "out": (1, 28, 28),
+        "batch": 8,
+        "image_input": None,
+    },
+    "artgan": {
+        "init": artgan_init,
+        "apply": artgan_apply,
+        "z": 100,
+        "label": 10,
+        "out": (3, 64, 64),
+        "batch": 4,
+        "image_input": None,
+    },
+    # functional CycleGAN artifact: reduced 64x64 / 3-block / base-32
+    # variant (the full 256x256/9-block config lives in the rust IR for the
+    # analytical figures; this one keeps interpret-mode lowering and CPU
+    # PJRT compile tractable while exercising every layer type — conv, IN,
+    # residual, tconv, tanh)
+    "cyclegan64": {
+        "init": lambda key: cyclegan_init(key, blocks=3, base=32),
+        "apply": cyclegan_apply,
+        "z": 0,
+        "label": 0,
+        "out": (3, 64, 64),
+        "batch": 1,
+        "image_input": (3, 64, 64),
+    },
+}

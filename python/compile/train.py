@@ -1,0 +1,176 @@
+"""Tiny adversarial training for the E2E serving demo (build-time only).
+
+Trains the CondGAN generator on a **synthetic class-conditioned dataset**
+(the environment has no F-MNIST; DESIGN.md §2 records the substitution):
+class ``c`` is a 28×28 image with a horizontal band whose position and
+polarity encode ``c``, plus noise. The generator must learn ten visibly
+distinct modes — enough signal for the serving example to demonstrate a
+*real trained model* end-to-end, with the loss curve logged to
+EXPERIMENTS.md.
+
+Pure JAX: hand-rolled Adam (no optax offline), non-saturating GAN loss,
+``fast=True`` model path (pure-jnp math; the lowered artifact then runs the
+same weights through the Pallas-kernel path).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .models import common as c
+from .models import zoo
+
+
+# ------------------------------------------------------------- synthetic data
+
+def class_template(labels):
+    """Noise-free class image (the mean of ``synth_batch`` for a label):
+    background −1, a 3-row band at row 2+2c whose intensity also encodes
+    the class parity (+1 for even, 0 for odd — both visible)."""
+    rows = 2 + 2 * labels
+    grid = jnp.arange(28)
+    band = ((grid[None, :] >= rows[:, None]) & (grid[None, :] < rows[:, None] + 3)).astype(
+        jnp.float32
+    )
+    level = jnp.where(labels % 2 == 0, 2.0, 1.0)  # band height above bg
+    img = -jnp.ones((labels.shape[0], 1, 28, 28))
+    img = img + band[:, None, :, None] * level[:, None, None, None]
+    return jnp.clip(img, -1, 1)
+
+
+def synth_batch(key, n):
+    """Class-conditioned synthetic 'striped digits': the class template
+    plus Gaussian pixel noise."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (n,), 0, 10)
+    img = class_template(labels) + 0.05 * jax.random.normal(k2, (n, 1, 28, 28))
+    onehot = jax.nn.one_hot(labels, 10)
+    return jnp.clip(img, -1, 1), onehot
+
+
+# ---------------------------------------------------------------- discriminator
+
+def disc_init(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "c0": {"w": c.he_conv(ks[0], 32, 11, 4), "b": jnp.zeros(32)},
+        "c1": {"w": c.he_conv(ks[1], 64, 32, 4), "b": jnp.zeros(64)},
+        "d2": {"w": c.he_dense(ks[2], 64 * 7 * 7, 1), "b": jnp.zeros(1)},
+    }
+
+
+def disc_apply(p, img, onehot):
+    planes = jnp.broadcast_to(onehot[:, :, None, None], (img.shape[0], 10, 28, 28))
+    x = jnp.concatenate([img, planes], axis=1)
+    x = c.conv2d(x, p["c0"]["w"], p["c0"]["b"], 2, 1, fast=True)
+    x = c.leaky_relu(x, 0.2, fast=True)
+    x = c.conv2d(x, p["c1"]["w"], p["c1"]["b"], 2, 1, fast=True)
+    x = c.leaky_relu(x, 0.2, fast=True)
+    x = x.reshape(x.shape[0], -1)
+    return (x @ p["d2"]["w"] + p["d2"]["b"]).squeeze(-1)  # logits
+
+
+# ----------------------------------------------------------------------- adam
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=2e-4, b1=0.5, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p_, m_, v_: p_ - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------- training
+
+def bce_logits(logits, target):
+    """Numerically-stable binary cross-entropy on logits."""
+    return jnp.mean(jnp.maximum(logits, 0) - logits * target + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def train_condgan(steps=300, batch=64, seed=0, log_every=50, verbose=True):
+    """Train CondGAN-on-synthetic; returns (gen_params, history)."""
+    model = zoo.MODELS["condgan"]
+    key = jax.random.PRNGKey(seed)
+    kg, kd, key = jax.random.split(key, 3)
+    gen = model["init"](kg)
+    disc = disc_init(kd)
+    g_opt, d_opt = adam_init(gen), adam_init(disc)
+
+    def d_loss_fn(dp, gp, key):
+        kz, kr = jax.random.split(key)
+        real, onehot = synth_batch(kr, batch)
+        z = jax.random.normal(kz, (batch, 100))
+        fake = model["apply"](gp, z, onehot, fast=True)
+        real_logits = disc_apply(dp, real, onehot)
+        fake_logits = disc_apply(dp, fake, onehot)
+        # one-sided label smoothing stabilizes the short training run
+        return bce_logits(real_logits, 0.9) + bce_logits(fake_logits, 0.0)
+
+    def g_loss_fn(gp, dp, key):
+        kz, kl = jax.random.split(key)
+        labels = jax.random.randint(kl, (batch,), 0, 10)
+        onehot = jax.nn.one_hot(labels, 10)
+        z = jax.random.normal(kz, (batch, 100))
+        fake = model["apply"](gp, z, onehot, fast=True)
+        # non-saturating adversarial loss + a conditional template term
+        # (AC-GAN-flavored auxiliary): keeps the class modes locked during
+        # the short build-time training budget
+        adv = bce_logits(disc_apply(dp, fake, onehot), 1.0)
+        aux = jnp.mean((fake - class_template(labels)) ** 2)
+        return 0.3 * adv + 10.0 * aux
+
+    @jax.jit
+    def step(gen, disc, g_opt, d_opt, key):
+        kd_, kg_, key = jax.random.split(key, 3)
+        d_loss, d_grads = jax.value_and_grad(d_loss_fn)(disc, gen, kd_)
+        disc, d_opt = adam_step(disc, d_grads, d_opt, lr=1e-4)  # keep D gentle
+        g_loss, g_grads = jax.value_and_grad(g_loss_fn)(gen, disc, kg_)
+        gen, g_opt = adam_step(gen, g_grads, g_opt, lr=2e-4)
+        return gen, disc, g_opt, d_opt, key, g_loss, d_loss
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        gen, disc, g_opt, d_opt, key, g_loss, d_loss = step(gen, disc, g_opt, d_opt, key)
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(g_loss), float(d_loss)))
+            if verbose:
+                print(
+                    f"[train] step {i:4d}  g_loss={float(g_loss):.4f}  "
+                    f"d_loss={float(d_loss):.4f}  ({time.time()-t0:.1f}s)"
+                )
+    return gen, history
+
+
+def class_mode_score(gen_params, seed=123):
+    """Cheap mode-separation check: mean per-class output band position
+    should correlate with the class. Returns fraction of classes whose
+    generated band centroid is closest to their own target row."""
+    model = zoo.MODELS["condgan"]
+    key = jax.random.PRNGKey(seed)
+    hits = 0
+    for cls in range(10):
+        z = jax.random.normal(jax.random.fold_in(key, cls), (8, 100))
+        onehot = jnp.tile(jax.nn.one_hot(jnp.array([cls]), 10), (8, 1))
+        img = model["apply"](gen_params, z, onehot, fast=True)  # [8,1,28,28]
+        # brightness-weighted row centroid
+        weights = (img.mean(axis=(0, 1, 3)) + 1.0) + 1e-6  # [28]
+        centroid = float((weights * jnp.arange(28)).sum() / weights.sum())
+        target = 2 + 2 * cls + 1.5
+        best = min(range(10), key=lambda c_: abs(centroid - (2 + 2 * c_ + 1.5)))
+        hits += int(best == cls)
+        del target
+    return hits / 10.0

@@ -1,0 +1,176 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/strides/paddings/dtypes; the CORE correctness
+signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mvm, norm_act, ref, tconv
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ----------------------------------------------------------------- MVM
+
+@given(
+    m=st.integers(1, 33),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    bm=st.sampled_from([2, 4, 8]),
+    bk=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mvm_matches_ref_across_shapes_and_tiles(m, k, n, bm, bk, bn, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    got = mvm.photonic_mvm(x, w, b, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.photonic_mvm(x, w, b)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_mvm_quantization_error_bounded():
+    x = rand(0, (16, 64))
+    w = rand(1, (64, 32))
+    exact = x @ w
+    got = mvm.photonic_mvm(x, w)
+    # 8-bit symmetric quantization of both operands: per-product error
+    # ≲ 2/127 of the operand scales, accumulated over the reduction
+    bound = 64 * (2.0 / 127.0 + (1.0 / 127.0) ** 2) + 1e-4
+    assert float(jnp.max(jnp.abs(got - exact))) < bound
+
+
+def test_mvm_zero_padding_is_invisible():
+    # a shape that forces padding in every dimension
+    x = rand(3, (5, 37))
+    w = rand(4, (37, 19))
+    got = mvm.photonic_mvm(x, w, block_m=4, block_n=16, block_k=16)
+    want = ref.photonic_mvm(x, w)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_mvm_vmem_accounting():
+    assert mvm.vmem_bytes(8, 128, 128) == 4 * (8 * 128 + 128 * 128 + 8 * 128 + 128)
+
+
+# --------------------------------------------------------------- TCONV
+
+@given(
+    k=st.integers(1, 5),
+    s=st.integers(1, 3),
+    h=st.integers(1, 7),
+    w=st.integers(1, 7),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 4),
+    n=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    pfrac=st.floats(0.0, 0.99),
+)
+def test_sparse_tconv_matches_ref(k, s, h, w, cin, cout, n, seed, pfrac):
+    p = int(pfrac * ((k - 1) // 2 + 1)) if k > 1 else 0
+    p = min(p, (k - 1) // 2)
+    x = rand(seed, (n, cin, h, w))
+    kern = rand(seed + 9, (cin, cout, k, k))
+    got = tconv.sparse_tconv2d(x, kern, s, p)
+    want = ref.tconv2d(x, kern, s, p)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=1e-3)
+
+
+def test_tconv_dcgan_stem():
+    # k4 s1 p0 on 1x1: the DCGAN z-projection
+    x = rand(0, (2, 100, 1, 1))
+    kern = rand(1, (100, 512, 4, 4))
+    got = tconv.sparse_tconv2d(x, kern, 1, 0)
+    want = ref.tconv2d(x, kern, 1, 0)
+    assert got.shape == (2, 512, 4, 4)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_tconv_census_matches_rust_reference_value():
+    # pinned against photogan::sparse tests: k4 s2 p1 on 16x16 → 4.2622…
+    dense, sparse = tconv.census(4, 2, 1, 16, 16)
+    assert dense == 32 * 32 * 16
+    assert abs(dense / sparse - 4.26222684703434) < 1e-9
+
+
+@given(
+    k=st.integers(1, 5),
+    s=st.integers(1, 3),
+    h=st.integers(2, 6),
+)
+def test_phase_taps_cover_exactly_the_census(k, s, h):
+    p = (k - 1) // 2
+    dense, sparse = tconv.census(k, s, p, h, h)
+    # interior phase tap count must never exceed ceil(k/s)²
+    for py in range(s):
+        for px in range(s):
+            taps = tconv.phase_taps(k, s, p, py, px)
+            assert len(taps) <= ((k + s - 1) // s) ** 2
+    assert sparse <= dense
+
+
+# ------------------------------------------------------------ NORM/ACT
+
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 5),
+    h=st.integers(2, 9),
+    w=st.integers(2, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_instance_norm_matches_ref(n, c, h, w, seed):
+    x = rand(seed, (n, c, h, w), -3.0, 3.0)
+    g = rand(seed + 1, (c,))
+    b = rand(seed + 2, (c,))
+    got = norm_act.instance_norm(x, g, b)
+    want = ref.instance_norm(x, g, b)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_instance_norm_output_statistics():
+    x = rand(7, (2, 3, 16, 16), -5.0, 5.0)
+    y = norm_act.instance_norm(x, jnp.ones(3), jnp.zeros(3))
+    mu = jnp.mean(y, axis=(2, 3))
+    sd = jnp.std(y, axis=(2, 3))
+    np.testing.assert_allclose(mu, 0.0, atol=1e-5)
+    np.testing.assert_allclose(sd, 1.0, atol=1e-3)
+
+
+@given(
+    alpha=st.sampled_from([0.0, 0.1, 0.2, 0.5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_leaky_relu_matches_eq1(alpha, seed):
+    x = rand(seed, (4, 3, 5, 5), -2.0, 2.0)
+    got = norm_act.leaky_relu(x, alpha=alpha)
+    want = jnp.where(x > 0, x, alpha * x)
+    np.testing.assert_allclose(got, want, atol=0, rtol=0)
+
+
+def test_ref_tconv_agrees_with_manual_zero_insertion():
+    # independent check of the oracle itself: stride-2 via explicit zeros
+    x = rand(11, (1, 1, 3, 3))
+    kern = rand(12, (1, 1, 3, 3))
+    want = ref.tconv2d(x, kern, 2, 1)
+    # manual: zero-insert to 5x5, pad k-1-p=1, correlate flipped kernel
+    z = jnp.zeros((1, 1, 5, 5)).at[:, :, ::2, ::2].set(x)
+    zp = jnp.pad(z, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    kf = kern[:, :, ::-1, ::-1]
+    manual = jnp.zeros((1, 1, 5, 5))
+    for oy in range(5):
+        for ox in range(5):
+            patch = zp[0, 0, oy : oy + 3, ox : ox + 3]
+            manual = manual.at[0, 0, oy, ox].set(jnp.sum(patch * kf[0, 0]))
+    np.testing.assert_allclose(want, manual, atol=1e-5)

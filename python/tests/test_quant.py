@@ -1,0 +1,24 @@
+"""Table 1's quantization claim, re-measured (see compile/quant.py for the
+IS→SQNR substitution rationale)."""
+
+import pytest
+
+from compile.quant import quantization_report
+
+
+@pytest.mark.parametrize("name", ["condgan", "artgan"])
+def test_8bit_quantization_is_benign(name):
+    r = quantization_report(name, batch=2)
+    # the paper's Table 1 conclusion: 8-bit costs almost nothing.
+    assert r["sqnr_db"] > 15.0, r
+    assert r["cosine"] > 0.98, r
+    assert r["rel_l2"] < 0.2, r
+
+
+def test_report_prints_table(capsys):
+    rows = [quantization_report(n, batch=2) for n in ["condgan"]]
+    print(f"{'model':10} {'SQNR dB':>8} {'cosine':>8} {'rel L2':>8}")
+    for r in rows:
+        print(f"{r['model']:10} {r['sqnr_db']:8.2f} {r['cosine']:8.4f} {r['rel_l2']:8.4f}")
+    out = capsys.readouterr().out
+    assert "condgan" in out

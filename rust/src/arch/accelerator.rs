@@ -1,0 +1,230 @@
+//! Whole-chip assembly (paper Fig. 4): dense + conv + norm + activation
+//! blocks, the shared DAC array, the PCMC routing fabric, and the ECU.
+
+use super::activation::{ActKind, ActivationUnit};
+use super::config::{ArchConfig, ConfigError};
+use super::conv::ConvBlock;
+use super::dense::DenseBlock;
+use super::norm::{NormKind, NormUnit};
+use super::power::{PowerBreakdown, ECU_BASE_W, ECU_PER_UNIT_W};
+use super::unit::BlockKind;
+use crate::photonics::constants::DeviceParams;
+use crate::photonics::converter::{Dac, SharedDacArray};
+use crate::photonics::pcmc::{PcmState, PcmcFabric};
+
+/// Which MVM block is currently powered (power gating, §III.C.3: "when the
+/// dense block is active, the convolution block is deactivated, and vice
+/// versa").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActiveBlock {
+    Dense,
+    Conv,
+    /// Both lit — only the *ungated* baseline configuration allows this.
+    Both,
+}
+
+/// The assembled PhotoGAN chip.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub cfg: ArchConfig,
+    pub dense: DenseBlock,
+    pub conv: ConvBlock,
+    pub norm: NormUnit,
+    pub act: ActivationUnit,
+    pub shared_dac: SharedDacArray,
+    pub fabric: PcmcFabric,
+    /// Route ids in `fabric`.
+    pub route_dense_to_act: usize,
+    pub route_conv_to_norm: usize,
+    pub route_norm_to_act: usize,
+}
+
+impl Accelerator {
+    /// Assemble a chip from a configuration. Fails if the configuration is
+    /// structurally invalid (crosstalk bound / degenerate).
+    pub fn new(cfg: ArchConfig) -> Result<Self, ConfigError> {
+        cfg.validate()?;
+        let device: DeviceParams = cfg.params.device.clone();
+        // The shared DAC array is sized for the widest consumer: N lanes per
+        // unit of the larger block (dense L vs conv M).
+        let dac_lanes = cfg.n * cfg.l.max(cfg.m);
+        let mut fabric = PcmcFabric::new(&device, 3);
+        let route_dense_to_act = fabric.add_route(vec![(0, PcmState::Amorphous)]);
+        let route_conv_to_norm = fabric.add_route(vec![(1, PcmState::Crystalline)]);
+        let route_norm_to_act = fabric.add_route(vec![(2, PcmState::Crystalline)]);
+        Ok(Accelerator {
+            dense: DenseBlock::new(&cfg),
+            conv: ConvBlock::new(&cfg),
+            norm: NormUnit::new(&cfg),
+            act: ActivationUnit::new(&cfg),
+            shared_dac: SharedDacArray::new(Dac::new(device, cfg.params.system.precision_bits), dac_lanes),
+            fabric,
+            route_dense_to_act,
+            route_conv_to_norm,
+            route_norm_to_act,
+            cfg,
+        })
+    }
+
+    /// Total units across MVM blocks.
+    pub fn total_units(&self) -> usize {
+        self.cfg.l + self.cfg.m
+    }
+
+    /// ECU power (W).
+    pub fn ecu_power(&self) -> f64 {
+        ECU_BASE_W + ECU_PER_UNIT_W * self.total_units() as f64
+    }
+
+    /// Itemized chip power with the given active block and gating policy.
+    ///
+    /// `gated = true` applies the paper's power gating: the inactive MVM
+    /// block is fully de-powered and the DAC array is owned by the active
+    /// block only. `gated = false` (baseline) leaves the inactive block
+    /// idling (lasers + holds + bias) and duplicates DAC drive.
+    pub fn power(&self, active: ActiveBlock, gated: bool) -> PowerBreakdown {
+        let d = self.dense.power();
+        let c = self.conv.power();
+        let dac_w = self.shared_dac.dac.power();
+        let n = self.cfg.n as f64;
+        // one norm unit per conv unit (paper: M normalization units); each
+        // NormUnit::power already covers its K broadband-MR lanes
+        let norm_w = self.norm.power(NormKind::Instance) * self.cfg.m as f64;
+        let act_lanes = (self.cfg.l.max(self.cfg.m) * self.cfg.k) as f64;
+        let act_w = self.act.power(ActKind::LeakyRelu(0.2)) * act_lanes;
+        // `MvmUnit::power().active` includes N DAC lanes per unit; the chip
+        // charges DACs through the *shared array* instead, so subtract the
+        // per-unit DAC share from whichever block is active and add the
+        // array term explicitly (this is what makes DAC sharing visible).
+        let dense_dac = n * self.cfg.l as f64 * dac_w;
+        let conv_dac = n * self.cfg.m as f64 * dac_w;
+        let (dense_w, conv_w, dac_total) = match (active, gated) {
+            (ActiveBlock::Dense, true) => (d.active - dense_dac, c.gated, dense_dac),
+            (ActiveBlock::Conv, true) => (d.gated, c.active - conv_dac, conv_dac),
+            // Ungated baseline: no sharing — each block owns (and keeps
+            // powered) a full DAC array; move the DAC share of `idle`
+            // (= active) into the DAC column for reporting.
+            (ActiveBlock::Dense, false) => {
+                (d.active - dense_dac, c.idle - conv_dac, dense_dac + conv_dac)
+            }
+            (ActiveBlock::Conv, false) => {
+                (d.idle - dense_dac, c.active - conv_dac, conv_dac + dense_dac)
+            }
+            (ActiveBlock::Both, _) => {
+                (d.active - dense_dac, c.active - conv_dac, dense_dac + conv_dac)
+            }
+        };
+        PowerBreakdown {
+            dense_block: dense_w.max(0.0),
+            conv_block: conv_w.max(0.0),
+            norm_block: if matches!(active, ActiveBlock::Conv | ActiveBlock::Both) { norm_w } else { 0.0 },
+            act_block: act_w,
+            shared_dac: dac_total,
+            ecu: self.ecu_power(),
+        }
+    }
+
+    /// Worst-case operational power (W) under the given gating policy —
+    /// the quantity checked against the paper's 100 W DSE cap.
+    pub fn peak_power(&self, gated: bool) -> f64 {
+        if gated {
+            self.power(ActiveBlock::Dense, true)
+                .total()
+                .max(self.power(ActiveBlock::Conv, true).total())
+        } else {
+            self.power(ActiveBlock::Both, false).total()
+        }
+    }
+
+    /// Validate the full configuration including the power cap.
+    pub fn validate(&self, gated: bool) -> Result<(), ConfigError> {
+        self.cfg.validate()?;
+        let peak = self.peak_power(gated);
+        let cap = self.cfg.params.system.power_cap_w;
+        if peak > cap {
+            return Err(ConfigError::PowerCap(peak, cap));
+        }
+        Ok(())
+    }
+
+    /// Peak MACs/s with gating (one MVM block at a time) or without.
+    pub fn peak_macs_per_sec(&self, gated: bool) -> f64 {
+        if gated {
+            self.dense.peak_macs_per_sec().max(self.conv.peak_macs_per_sec())
+        } else {
+            self.dense.peak_macs_per_sec() + self.conv.peak_macs_per_sec()
+        }
+    }
+
+    /// Cost model of the MVM unit for a block kind.
+    pub fn mvm_unit(&self, kind: BlockKind) -> &super::unit::MvmUnit {
+        match kind {
+            BlockKind::Dense => self.dense.unit(),
+            BlockKind::Conv => self.conv.unit(),
+            _ => panic!("no MVM unit for {kind:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chip() -> Accelerator {
+        Accelerator::new(ArchConfig::paper_optimum()).unwrap()
+    }
+
+    #[test]
+    fn paper_optimum_fits_power_cap() {
+        let a = chip();
+        assert!(a.validate(true).is_ok());
+        let peak = a.peak_power(true);
+        assert!(peak < 100.0, "peak={peak}");
+    }
+
+    #[test]
+    fn gating_reduces_peak_power() {
+        let a = chip();
+        assert!(a.peak_power(true) < a.peak_power(false));
+    }
+
+    #[test]
+    fn gated_inactive_block_draws_nothing() {
+        let a = chip();
+        let p = a.power(ActiveBlock::Dense, true);
+        assert_eq!(p.conv_block, 0.0);
+        let q = a.power(ActiveBlock::Conv, true);
+        assert_eq!(q.dense_block, 0.0);
+        assert!(q.norm_block > 0.0, "norm follows the conv chain");
+    }
+
+    #[test]
+    fn ungated_inactive_block_idles() {
+        let a = chip();
+        let p = a.power(ActiveBlock::Dense, false);
+        assert!(p.conv_block > 0.0, "no gating: conv idles but draws power");
+    }
+
+    #[test]
+    fn dac_not_double_counted() {
+        // Total with gating must be strictly less than naive sum of block
+        // active powers + dac array (which would double count lanes).
+        let a = chip();
+        let naive = a.dense.power().active + a.conv.power().active;
+        let gated = a.power(ActiveBlock::Dense, true).total();
+        assert!(gated < naive + a.ecu_power() + 1.0);
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_assembly() {
+        assert!(Accelerator::new(ArchConfig::new(37, 2, 11, 3)).is_err());
+    }
+
+    #[test]
+    fn peak_macs_additive_without_gating() {
+        let a = chip();
+        let g = a.peak_macs_per_sec(true);
+        let ug = a.peak_macs_per_sec(false);
+        assert!(ug > g);
+    }
+}

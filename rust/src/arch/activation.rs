@@ -1,0 +1,134 @@
+//! Activation block (paper §III.B.4, Fig. 8).
+//!
+//! SOA-based optical non-linearities: Leaky-ReLU via the comparator + PCMC
+//! + dual-SOA route of Fig. 8 (see [`crate::photonics::soa::LeakyReluUnit`]),
+//! ReLU as the α→0 special case, and Tanh/Sigmoid via saturating SOA gain
+//! [26]. One activation unit serves one streaming row; the block is sized
+//! by the simulator to match whichever MVM block feeds it (max(L, M) · K
+//! lanes — the activation units are cheap relative to MVM units).
+
+use super::config::ArchConfig;
+use crate::photonics::soa::{LeakyReluUnit, Soa};
+
+/// Supported optical activations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActKind {
+    LeakyRelu(f64),
+    Relu,
+    Tanh,
+    Sigmoid,
+    /// Pass-through (no activation after this layer).
+    None,
+}
+
+/// One activation lane.
+#[derive(Debug, Clone)]
+pub struct ActivationUnit {
+    pub cfg: ArchConfig,
+    lrelu: LeakyReluUnit,
+    tanh_soa: Soa,
+}
+
+impl ActivationUnit {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        ActivationUnit {
+            lrelu: LeakyReluUnit::new(cfg.params.device.clone(), 0.2),
+            tanh_soa: Soa::new(cfg.params.device.clone(), 1.0).with_saturation(1.0),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Per-element latency (s).
+    pub fn latency(&self, kind: ActKind) -> f64 {
+        let d = &self.cfg.params.device;
+        match kind {
+            ActKind::None => 0.0,
+            ActKind::LeakyRelu(_) | ActKind::Relu => self.lrelu.latency(),
+            // saturating single-SOA path: PD not needed, just the SOA
+            ActKind::Tanh | ActKind::Sigmoid => d.soa_latency,
+        }
+    }
+
+    /// Per-lane power while streaming (W).
+    pub fn power(&self, kind: ActKind) -> f64 {
+        let d = &self.cfg.params.device;
+        match kind {
+            ActKind::None => 0.0,
+            ActKind::LeakyRelu(_) | ActKind::Relu => self.lrelu.power(),
+            ActKind::Tanh | ActKind::Sigmoid => d.soa_power,
+        }
+    }
+
+    /// Functional response (normalized analog domain).
+    pub fn apply(&self, x: f64, kind: ActKind) -> f64 {
+        match kind {
+            ActKind::None => x,
+            ActKind::Relu => {
+                if x > 0.0 {
+                    x
+                } else {
+                    0.0
+                }
+            }
+            ActKind::LeakyRelu(a) => {
+                if x > 0.0 {
+                    x
+                } else {
+                    a * x
+                }
+            }
+            ActKind::Tanh => self.tanh_soa.amplify(x),
+            ActKind::Sigmoid => 0.5 * (self.tanh_soa.amplify(x / 2.0) + 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn unit() -> ActivationUnit {
+        ActivationUnit::new(&ArchConfig::paper_optimum())
+    }
+
+    #[test]
+    fn relu_and_leaky_relu() {
+        let u = unit();
+        assert_eq!(u.apply(2.0, ActKind::Relu), 2.0);
+        assert_eq!(u.apply(-2.0, ActKind::Relu), 0.0);
+        assert_eq!(u.apply(-2.0, ActKind::LeakyRelu(0.1)), -0.2);
+    }
+
+    #[test]
+    fn tanh_bounded_sigmoid_in_unit_interval() {
+        let u = unit();
+        check("tanh/sigmoid ranges", 256, move |g| {
+            let x = g.f64_in(-5.0, 5.0);
+            assert!(u.apply(x, ActKind::Tanh).abs() <= 1.0 + 1e-12);
+            let s = u.apply(x, ActKind::Sigmoid);
+            assert!((0.0..=1.0).contains(&s), "sigmoid out of range: {s}");
+        });
+    }
+
+    #[test]
+    fn sigmoid_midpoint_is_half() {
+        let u = unit();
+        assert!((u.apply(0.0, ActKind::Sigmoid) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_is_free_identity() {
+        let u = unit();
+        assert_eq!(u.latency(ActKind::None), 0.0);
+        assert_eq!(u.power(ActKind::None), 0.0);
+        assert_eq!(u.apply(0.7, ActKind::None), 0.7);
+    }
+
+    #[test]
+    fn tanh_path_is_faster_than_lrelu_path() {
+        // Leaky-ReLU needs PD + comparator + PCMC routing; Tanh is one SOA.
+        let u = unit();
+        assert!(u.latency(ActKind::Tanh) < u.latency(ActKind::LeakyRelu(0.2)));
+    }
+}

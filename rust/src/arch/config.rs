@@ -1,0 +1,130 @@
+//! Architectural configuration `[N, K, L, M]` and its validity rules.
+
+use crate::photonics::constants::PhotonicParams;
+use crate::photonics::crosstalk;
+use crate::photonics::mr::Microring;
+use thiserror::Error;
+
+/// PhotoGAN architectural parameters (paper §IV.A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Columns per MR bank array — wavelengths per waveguide, i.e. the
+    /// optical dot-product (reduction) length. Bounded by the 36-MR rule.
+    pub n: usize,
+    /// Rows per MR bank array — parallel output rows per unit (one BPD per
+    /// row).
+    pub k: usize,
+    /// Dense units.
+    pub l: usize,
+    /// Convolution units (and normalization units).
+    pub m: usize,
+    /// Physical parameter bundle.
+    pub params: PhotonicParams,
+}
+
+/// Why a configuration is invalid.
+#[derive(Debug, Error, PartialEq)]
+pub enum ConfigError {
+    #[error("N={0} exceeds the {1}-MR/waveguide crosstalk bound (paper §IV)")]
+    TooManyWavelengths(usize, usize),
+    #[error("crosstalk check failed: {0}")]
+    Crosstalk(String),
+    #[error("all of N, K, L, M must be ≥ 1 (got N={n} K={k} L={l} M={m})")]
+    Degenerate { n: usize, k: usize, l: usize, m: usize },
+    #[error("peak power {0:.1} W exceeds the cap {1:.1} W")]
+    PowerCap(f64, f64),
+}
+
+impl ArchConfig {
+    /// The paper's DSE optimum: `[N, K, L, M] = [16, 2, 11, 3]`.
+    pub fn paper_optimum() -> Self {
+        ArchConfig { n: 16, k: 2, l: 11, m: 3, params: PhotonicParams::default() }
+    }
+
+    /// Arbitrary configuration with default device parameters.
+    pub fn new(n: usize, k: usize, l: usize, m: usize) -> Self {
+        ArchConfig { n, k, l, m, params: PhotonicParams::default() }
+    }
+
+    /// Structural validation: non-degenerate and within the crosstalk bound.
+    /// (The power-cap check needs the assembled [`super::Accelerator`].)
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.n == 0 || self.k == 0 || self.l == 0 || self.m == 0 {
+            return Err(ConfigError::Degenerate {
+                n: self.n,
+                k: self.k,
+                l: self.l,
+                m: self.m,
+            });
+        }
+        let max = self.params.system.max_mrs_per_waveguide;
+        if self.n > max {
+            return Err(ConfigError::TooManyWavelengths(self.n, max));
+        }
+        crosstalk::validate_channel_count(&self.params.system, &Microring::default(), self.n)
+            .map_err(ConfigError::Crosstalk)?;
+        Ok(())
+    }
+
+    /// MACs retired per symbol by one dense/conv unit.
+    pub fn macs_per_symbol_per_unit(&self) -> usize {
+        self.n * self.k
+    }
+
+    /// Total MRs in one unit (two K×N banks).
+    pub fn mrs_per_unit(&self) -> usize {
+        2 * self.n * self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn paper_optimum_is_valid() {
+        assert_eq!(ArchConfig::paper_optimum().validate(), Ok(()));
+    }
+
+    #[test]
+    fn n_bound_enforced() {
+        let c = ArchConfig::new(37, 2, 1, 1);
+        assert_eq!(
+            c.validate(),
+            Err(ConfigError::TooManyWavelengths(37, 36))
+        );
+    }
+
+    #[test]
+    fn degenerate_rejected() {
+        assert!(matches!(
+            ArchConfig::new(0, 1, 1, 1).validate(),
+            Err(ConfigError::Degenerate { .. })
+        ));
+        assert!(matches!(
+            ArchConfig::new(16, 2, 0, 3).validate(),
+            Err(ConfigError::Degenerate { .. })
+        ));
+    }
+
+    #[test]
+    fn mac_counts() {
+        let c = ArchConfig::paper_optimum();
+        assert_eq!(c.macs_per_symbol_per_unit(), 32);
+        assert_eq!(c.mrs_per_unit(), 64);
+    }
+
+    #[test]
+    fn all_in_bound_configs_validate() {
+        check("valid configs", 128, |g| {
+            let c = ArchConfig::new(
+                g.usize_in(1, 36),
+                g.usize_in(1, 8),
+                g.usize_in(1, 16),
+                g.usize_in(1, 16),
+            );
+            assert_eq!(c.validate(), Ok(()));
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Convolution block (paper §III.B.2, Fig. 6).
+//!
+//! M convolution units, each the same two-bank K×N [`MvmUnit`] as the dense
+//! block, but with its output routed *optically* (via PCMC) to the
+//! normalization block instead of being converted back — eliminating
+//! intermediate O/E conversions (and hence ADC energy) between conv, norm
+//! and activation (Fig. 10b). Convolutions (and transposed convolutions)
+//! are lowered to MVM streams by im2col, per [24]; the transposed-conv
+//! sparse dataflow (§III.C.1) is applied upstream by
+//! [`crate::sparse`] before the stream reaches this block.
+
+use super::config::ArchConfig;
+use super::unit::{BlockKind, MvmUnit, UnitPower, UnitTiming};
+
+/// The convolution block: `cfg.m` identical units.
+#[derive(Debug, Clone)]
+pub struct ConvBlock {
+    pub cfg: ArchConfig,
+    unit: MvmUnit,
+}
+
+impl ConvBlock {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        ConvBlock { cfg: cfg.clone(), unit: MvmUnit::new(BlockKind::Conv, cfg) }
+    }
+
+    pub fn units(&self) -> usize {
+        self.cfg.m
+    }
+
+    pub fn unit(&self) -> &MvmUnit {
+        &self.unit
+    }
+
+    pub fn timing(&self) -> UnitTiming {
+        self.unit.timing()
+    }
+
+    /// Whole-block power. Unlike the dense block, the per-symbol egress ADC
+    /// is *not* charged while chained optically into norm/act — the chain
+    /// boundary charges it once at the end (handled by the simulator).
+    pub fn power(&self) -> UnitPower {
+        let u = self.unit.power();
+        UnitPower {
+            active: u.active * self.cfg.m as f64,
+            idle: u.idle * self.cfg.m as f64,
+            gated: u.gated * self.cfg.m as f64,
+            laser: u.laser * self.cfg.m as f64,
+        }
+    }
+
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        let symbol = self.timing().symbol_time(true);
+        (self.cfg.macs_per_symbol_per_unit() * self.cfg.m) as f64 / symbol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_and_dense_units_share_cost_model() {
+        let cfg = ArchConfig::paper_optimum();
+        let c = ConvBlock::new(&cfg);
+        let d = super::super::dense::DenseBlock::new(&cfg);
+        // identical per-unit physics
+        assert_eq!(c.timing(), d.timing());
+        let (cu, du) = (c.unit().power(), d.unit().power());
+        assert!((cu.active - du.active).abs() < 1e-15);
+    }
+
+    #[test]
+    fn block_sizes_follow_m() {
+        let cfg = ArchConfig::new(16, 2, 11, 3);
+        assert_eq!(ConvBlock::new(&cfg).units(), 3);
+        let p1 = ConvBlock::new(&ArchConfig::new(16, 2, 11, 1)).power();
+        let p3 = ConvBlock::new(&cfg).power();
+        assert!((p3.active / p1.active - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! Dense block (paper §III.B.1, Fig. 5).
+//!
+//! L dense units, each an [`MvmUnit`] of two K×N MR banks with a BPD per
+//! row and a coherent-summation bias stage: the bank output drives a VCSEL
+//! at λ₀ whose field interferes constructively with a second, bias-carrying
+//! VCSEL at the same λ₀ — adding the bias entirely optically (§II.D). The
+//! block owns one shared VCSEL comb array and is pipelined with the
+//! activation block (Fig. 10a).
+
+use super::config::ArchConfig;
+use super::unit::{BlockKind, MvmUnit, UnitPower, UnitTiming};
+
+/// The dense block: `cfg.l` identical units.
+#[derive(Debug, Clone)]
+pub struct DenseBlock {
+    pub cfg: ArchConfig,
+    unit: MvmUnit,
+}
+
+impl DenseBlock {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        DenseBlock { cfg: cfg.clone(), unit: MvmUnit::new(BlockKind::Dense, cfg) }
+    }
+
+    /// Number of units in the block.
+    pub fn units(&self) -> usize {
+        self.cfg.l
+    }
+
+    /// The unit cost model (all units are identical).
+    pub fn unit(&self) -> &MvmUnit {
+        &self.unit
+    }
+
+    pub fn timing(&self) -> UnitTiming {
+        self.unit.timing()
+    }
+
+    /// Whole-block power in each state (all units together).
+    pub fn power(&self) -> UnitPower {
+        let u = self.unit.power();
+        UnitPower {
+            active: u.active * self.cfg.l as f64,
+            idle: u.idle * self.cfg.l as f64,
+            gated: u.gated * self.cfg.l as f64,
+            laser: u.laser * self.cfg.l as f64,
+        }
+    }
+
+    /// Peak MACs/s of the block with stage pipelining.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        let symbol = self.timing().symbol_time(true);
+        (self.cfg.macs_per_symbol_per_unit() * self.cfg.l) as f64 / symbol
+    }
+}
+
+/// Functional micro-model of one dense-unit dot product with bias — the
+/// analog path the hardware realises (quantized activations/weights ×
+/// BPD accumulation × coherent bias add). Used by tests to pin the
+/// *numerics* the architecture claims, independent of JAX.
+pub fn dense_unit_dot(activations: &[f64], weights: &[f64], bias: f64, bits: u32) -> f64 {
+    assert_eq!(activations.len(), weights.len());
+    let levels = ((1u64 << bits) - 1) as f64;
+    let q = |x: f64| (x.clamp(-1.0, 1.0) * levels).round() / levels;
+    let acc: f64 = activations
+        .iter()
+        .zip(weights)
+        .map(|(&a, &w)| q(a) * q(w))
+        .sum();
+    acc + bias
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn block_power_scales_with_l() {
+        let a = DenseBlock::new(&ArchConfig::new(16, 2, 1, 3)).power();
+        let b = DenseBlock::new(&ArchConfig::new(16, 2, 11, 3)).power();
+        assert!((b.active / a.active - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_macs_paper_optimum() {
+        let blk = DenseBlock::new(&ArchConfig::paper_optimum());
+        // 32 MACs/symbol/unit × 11 units at ~2.6 GHz ≈ 0.9 T MACs/s
+        let peak = blk.peak_macs_per_sec();
+        assert!(peak > 1e11 && peak < 1e13, "peak={peak}");
+    }
+
+    #[test]
+    fn functional_dot_matches_fp_within_quant_error() {
+        check("dense unit dot ≈ fp dot", 256, |g| {
+            let n = g.usize_in(1, 36);
+            let a: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let bias = g.f64_in(-0.5, 0.5);
+            let exact: f64 = a.iter().zip(&w).map(|(x, y)| x * y).sum::<f64>() + bias;
+            let got = dense_unit_dot(&a, &w, bias, 8);
+            // worst-case 8-bit error per product ≈ 2·(1/510) + (1/510)^2
+            let bound = n as f64 * (2.0 / 510.0 + 1.0 / (510.0 * 510.0)) + 1e-12;
+            assert!((got - exact).abs() <= bound, "err={} bound={bound}", (got - exact).abs());
+        });
+    }
+
+    #[test]
+    fn dot_is_exact_at_full_precision() {
+        // with very high "bits" the quantizer is effectively identity
+        let a = [0.25, -0.5, 0.75];
+        let w = [0.1, 0.2, -0.3];
+        let exact: f64 = a.iter().zip(&w).map(|(x, y)| x * y).sum::<f64>() + 0.05;
+        assert!((dense_unit_dot(&a, &w, 0.05, 30) - exact).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,31 @@
+//! The PhotoGAN accelerator architecture (paper §III, Fig. 4).
+//!
+//! A chip is `[N, K, L, M]`:
+//! - **N** — wavelengths per waveguide = the *reduction* length of one
+//!   optical dot product (columns of each MR bank array; bounded by the
+//!   36-MR crosstalk rule),
+//! - **K** — parallel waveguides per unit = output rows produced per symbol
+//!   (each row terminates in its own BPD),
+//! - **L** — dense units (dense block),
+//! - **M** — convolution units (convolution block) and, matching the paper,
+//!   also the number of normalization units.
+//!
+//! Each dense/conv unit is two K×N MR bank arrays (activations, weights) in
+//! series (Figs. 5/6); normalization units are broadband-MR columns
+//! (Fig. 7); activation units are the SOA Leaky-ReLU path (Fig. 8). PCMCs
+//! route block-to-block optically; an ECU handles memory, buffering and
+//! matrix mapping; one VCSEL array per block is shared across its units and
+//! one DAC array is shared between the dense and conv blocks (§III.C.3).
+
+pub mod accelerator;
+pub mod activation;
+pub mod config;
+pub mod conv;
+pub mod dense;
+pub mod norm;
+pub mod power;
+pub mod unit;
+
+pub use accelerator::Accelerator;
+pub use config::ArchConfig;
+pub use unit::{UnitPower, UnitTiming};

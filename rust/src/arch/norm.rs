@@ -1,0 +1,138 @@
+//! Normalization block (paper §III.B.3, Fig. 7).
+//!
+//! M normalization units built from **broadband MRs** [25] that imprint the
+//! per-channel scale directly onto the optical stream arriving from the
+//! convolution units. Supports BatchNorm (parameters frozen after training)
+//! and InstanceNorm (parameters recomputed at inference — CycleGAN-style
+//! image translation), plus a **bypass** path for conv layers with no
+//! normalization.
+//!
+//! IN statistics (µ, σ per channel per instance) are computed in the ECU
+//! from the ADC-sampled stream of the *previous* pass; the optical unit then
+//! applies `γ·(x−µ)/σ + β` as a broadband scale + coherent offset. The ECU
+//! statistics cost is charged by the simulator as digital ops; this module
+//! models the optical apply path.
+
+use super::config::ArchConfig;
+
+/// Normalization flavor of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    Batch,
+    Instance,
+    /// Bypass the broadband MRs entirely (no normalization).
+    None,
+}
+
+/// One normalization unit.
+#[derive(Debug, Clone)]
+pub struct NormUnit {
+    pub cfg: ArchConfig,
+}
+
+impl NormUnit {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        NormUnit { cfg: cfg.clone() }
+    }
+
+    /// Per-element latency added to a stream passing through (s).
+    pub fn latency(&self, kind: NormKind) -> f64 {
+        let d = &self.cfg.params.device;
+        match kind {
+            // broadband MR response is EO-modulator-class; the scale value
+            // is held, so per-element cost is just the modulation transit.
+            NormKind::Batch => d.vcsel_latency, // offset add via coherent sum
+            // IN also re-tunes the broadband MR per instance; amortized per
+            // element this is negligible, but the per-instance retune is
+            // charged by `retune_latency`.
+            NormKind::Instance => d.vcsel_latency,
+            NormKind::None => 0.0, // bypass waveguide
+        }
+    }
+
+    /// Per-instance broadband-MR retune cost for IN (s) — EO tuning.
+    pub fn retune_latency(&self, kind: NormKind) -> f64 {
+        match kind {
+            NormKind::Instance => self.cfg.params.device.eo_tuning_latency,
+            _ => 0.0,
+        }
+    }
+
+    /// Unit power while streaming (W): K broadband MR holds + offset VCSEL.
+    pub fn power(&self, kind: NormKind) -> f64 {
+        let d = &self.cfg.params.device;
+        match kind {
+            NormKind::None => 0.0,
+            _ => self.cfg.k as f64 * d.eo_tuning_power + d.vcsel_power,
+        }
+    }
+
+    /// Functional apply: `γ·(x−µ)/σ + β`, with the scale quantized to the
+    /// broadband MR's precision.
+    pub fn apply(&self, x: f64, mu: f64, sigma: f64, gamma: f64, beta: f64, kind: NormKind) -> f64 {
+        match kind {
+            NormKind::None => x,
+            _ => {
+                let bits = self.cfg.params.system.precision_bits;
+                let levels = ((1u64 << bits) - 1) as f64;
+                let scale = gamma / sigma.max(1e-6);
+                // broadband MR imprints |scale| ≤ 1 after pre-normalization;
+                // model the quantization of the imprinted coefficient.
+                let norm = scale.abs().max(1e-12);
+                let pre = scale / norm; // ±1
+                let q = (norm.min(1.0) * levels).round() / levels * pre
+                    + (norm - norm.min(1.0)) * pre; // overflow handled in ECU
+                (x - mu) * q + beta
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn unit() -> NormUnit {
+        NormUnit::new(&ArchConfig::paper_optimum())
+    }
+
+    #[test]
+    fn bypass_is_free_and_identity() {
+        let u = unit();
+        assert_eq!(u.latency(NormKind::None), 0.0);
+        assert_eq!(u.power(NormKind::None), 0.0);
+        assert_eq!(u.apply(1.234, 9.9, 2.0, 3.0, 4.0, NormKind::None), 1.234);
+    }
+
+    #[test]
+    fn instance_norm_retunes_batch_does_not() {
+        let u = unit();
+        assert_eq!(u.retune_latency(NormKind::Instance), 20e-9);
+        assert_eq!(u.retune_latency(NormKind::Batch), 0.0);
+    }
+
+    #[test]
+    fn apply_matches_reference_within_quantization() {
+        let u = unit();
+        check("norm apply", 256, move |g| {
+            let x = g.f64_in(-2.0, 2.0);
+            let mu = g.f64_in(-1.0, 1.0);
+            let sigma = g.f64_in(0.1, 2.0);
+            let gamma = g.f64_in(-1.0, 1.0);
+            let beta = g.f64_in(-1.0, 1.0);
+            let expect = gamma * (x - mu) / sigma + beta;
+            let got = u.apply(x, mu, sigma, gamma, beta, NormKind::Instance);
+            // quantization of the scale coefficient bounds the error
+            let bound = (x - mu).abs() * (1.0 / 255.0) + 1e-9;
+            assert!((got - expect).abs() <= bound, "got={got} expect={expect}");
+        });
+    }
+
+    #[test]
+    fn power_scales_with_rows() {
+        let small = NormUnit::new(&ArchConfig::new(16, 2, 11, 3)).power(NormKind::Batch);
+        let big = NormUnit::new(&ArchConfig::new(16, 8, 11, 3)).power(NormKind::Batch);
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,80 @@
+//! Chip-level power accounting.
+//!
+//! Aggregates block power into the operating-state views the simulator and
+//! the DSE need: *peak* (both MVM blocks lit — only possible without power
+//! gating), *gated peak* (one MVM block at a time, §III.C.3), and the
+//! itemized breakdown used in reports.
+
+/// Electronic control unit (ECU) power model: interfaces main memory,
+/// buffers intermediates, maps matrices (paper Fig. 4). Base controller +
+/// per-unit sequencing overhead.
+pub const ECU_BASE_W: f64 = 0.1;
+pub const ECU_PER_UNIT_W: f64 = 0.01;
+
+/// Main-memory (DRAM) access energy per byte (J/B) — DDR4-class interface;
+/// charged by the simulator for weight/activation traffic that crosses the
+/// chip boundary.
+pub const DRAM_ENERGY_PER_BYTE: f64 = 20e-12;
+
+/// Digital ECU op energy (J/op) for the sparse-dataflow bookkeeping
+/// (column reintroduction, §III.C.1) and IN statistics.
+pub const ECU_ENERGY_PER_OP: f64 = 1e-12;
+
+/// Itemized chip power (W) in a given operating condition.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PowerBreakdown {
+    pub dense_block: f64,
+    pub conv_block: f64,
+    pub norm_block: f64,
+    pub act_block: f64,
+    pub shared_dac: f64,
+    pub ecu: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.dense_block + self.conv_block + self.norm_block + self.act_block
+            + self.shared_dac
+            + self.ecu
+    }
+
+    /// Render an itemized report line set.
+    pub fn report(&self) -> String {
+        use crate::util::units::fmt_power;
+        format!(
+            "dense={} conv={} norm={} act={} dac={} ecu={} total={}",
+            fmt_power(self.dense_block),
+            fmt_power(self.conv_block),
+            fmt_power(self.norm_block),
+            fmt_power(self.act_block),
+            fmt_power(self.shared_dac),
+            fmt_power(self.ecu),
+            fmt_power(self.total()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_is_sum() {
+        let p = PowerBreakdown {
+            dense_block: 1.0,
+            conv_block: 2.0,
+            norm_block: 0.5,
+            act_block: 0.25,
+            shared_dac: 0.125,
+            ecu: 1.0,
+        };
+        assert!((p.total() - 4.875).abs() < 1e-12);
+        assert!(p.report().contains("total=4.88 W"));
+    }
+
+    #[test]
+    fn constants_sane() {
+        assert!(DRAM_ENERGY_PER_BYTE > 1e-12 && DRAM_ENERGY_PER_BYTE < 1e-10);
+        assert!(ECU_ENERGY_PER_OP < DRAM_ENERGY_PER_BYTE);
+    }
+}

@@ -1,0 +1,245 @@
+//! Core MVM unit model shared by the dense and convolution blocks
+//! (Figs. 5/6): two K×N MR bank arrays in series, one BPD per row, a
+//! coherent-summation bias stage, DAC lanes in, ADC lanes out.
+//!
+//! The unit exposes the two quantities the simulator composes:
+//! [`UnitTiming`] (weight-reload and per-symbol stage latencies) and
+//! [`UnitPower`] (active / idle / gated power). The paper's stage-level
+//! pipelining (§III.C.2) corresponds to `symbol_time(pipelined=true) =
+//! max(stage1, stage2)` instead of their sum.
+
+use super::config::ArchConfig;
+use crate::photonics::laser;
+use crate::photonics::mr::Microring;
+use crate::photonics::waveguide::LossBudget;
+use crate::util::units::ratio_to_db;
+
+/// Which block a unit belongs to (affects only routing/bias details today,
+/// but keeps traces and power reports attributable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockKind {
+    Dense,
+    Conv,
+    Norm,
+    Activation,
+}
+
+/// Per-tile / per-symbol latency decomposition of an MVM unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitTiming {
+    /// Reprogramming the weight MR bank for a new tile (s): DAC settle +
+    /// EO tuning, all MRs in parallel.
+    pub weight_load: f64,
+    /// Stage 1 — drive path: DAC convert + VCSEL modulation + time of
+    /// flight through the banks (s).
+    pub stage1: f64,
+    /// Stage 2 — detect path: BPD + bias coherent summation (VCSEL) (s).
+    pub stage2: f64,
+    /// ADC conversion appended when the result leaves the optical domain
+    /// at the end of a block chain (s).
+    pub adc: f64,
+}
+
+impl UnitTiming {
+    /// Per-symbol period with / without stage-level pipelining.
+    pub fn symbol_time(&self, pipelined: bool) -> f64 {
+        if pipelined {
+            self.stage1.max(self.stage2)
+        } else {
+            self.stage1 + self.stage2
+        }
+    }
+
+    /// Symbol period including the egress ADC (used at chain boundaries).
+    pub fn symbol_time_with_adc(&self, pipelined: bool) -> f64 {
+        if pipelined {
+            // ADC overlaps the next symbol's stage 1 in the pipelined design
+            self.symbol_time(true).max(self.adc)
+        } else {
+            self.symbol_time(false) + self.adc
+        }
+    }
+}
+
+/// Power draw of one MVM unit in each operating state (W).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitPower {
+    /// Streaming symbols: lasers + converters + detectors + tuning holds.
+    pub active: f64,
+    /// Powered but stalled (no power gating): bias currents + laser +
+    /// tuning holds keep burning.
+    pub idle: f64,
+    /// Power-gated: lasers off, EO holds released, PCMC routes hold free.
+    pub gated: f64,
+    /// Laser (wall-plug) component of `active` — reported separately
+    /// because Eq. 2 makes it the only superlinear term in [N, K].
+    pub laser: f64,
+}
+
+/// The MVM unit cost model.
+#[derive(Debug, Clone)]
+pub struct MvmUnit {
+    pub kind: BlockKind,
+    pub cfg: ArchConfig,
+}
+
+impl MvmUnit {
+    pub fn new(kind: BlockKind, cfg: &ArchConfig) -> Self {
+        assert!(matches!(kind, BlockKind::Dense | BlockKind::Conv));
+        MvmUnit { kind, cfg: cfg.clone() }
+    }
+
+    /// Optical link loss through this unit (dB): both banks, the unit
+    /// waveguide, one PCMC hop toward the next block.
+    pub fn link_loss_db(&self) -> f64 {
+        let p = &self.cfg.params;
+        LossBudget::unit_link(
+            &p.loss,
+            p.system.unit_waveguide_length_cm,
+            self.cfg.n.saturating_sub(1), // pass-by MRs per bank per λ
+            1,                            // PCMC hop to the next block
+            0.5,
+            0.1, // cm of EO-tuned section
+        )
+        .total_db()
+    }
+
+    /// Wall-plug laser power for this unit's K rows (W). The block's shared
+    /// VCSEL comb is split across the K row-waveguides, which adds a
+    /// 10·log10(K) split term on top of Eq. 2's wavelength term.
+    pub fn laser_power_w(&self) -> f64 {
+        // Drive electronics floor: N comb lanes must be powered regardless.
+        let drive_floor = self.cfg.n as f64 * self.cfg.params.device.vcsel_power;
+        self.laser_eq2_w().max(drive_floor)
+    }
+
+    /// The Eq. 2 wall-plug component alone (W) — exponential in link loss
+    /// (dB), hence superlinear in N; the DSE pressure against very wide
+    /// banks comes from here.
+    pub fn laser_eq2_w(&self) -> f64 {
+        let p = &self.cfg.params;
+        let split_db = ratio_to_db(self.cfg.k as f64)
+            + p.loss.splitter_db * (self.cfg.k as f64).log2().ceil();
+        let loss = self.link_loss_db() + split_db;
+        laser::laser_wall_plug_watts(&p.system, loss, self.cfg.n)
+    }
+
+    /// Timing decomposition (see [`UnitTiming`]).
+    pub fn timing(&self) -> UnitTiming {
+        let d = &self.cfg.params.device;
+        // time of flight: ~0.3 cm of waveguide at c/n_g
+        let group_v = 299_792_458.0 / Microring::default().n_group;
+        let tof = self.cfg.params.system.unit_waveguide_length_cm * 1e-2 / group_v;
+        UnitTiming {
+            weight_load: d.dac_latency + d.eo_tuning_latency,
+            stage1: d.dac_latency + d.vcsel_latency + tof,
+            stage2: d.pd_latency + d.vcsel_latency, // BPD + bias coherent sum
+            adc: d.adc_latency,
+        }
+    }
+
+    /// Power decomposition (see [`UnitPower`]).
+    pub fn power(&self) -> UnitPower {
+        let d = &self.cfg.params.device;
+        let n = self.cfg.n as f64;
+        let k = self.cfg.k as f64;
+        let laser = self.laser_power_w();
+        let dacs = n * d.dac_power; // N activation lanes (weights static)
+        let adcs = k * d.adc_power; // one egress lane per row
+        let bpds = k * 2.0 * d.pd_power; // balanced pair per row
+        let bias = 2.0 * d.vcsel_power; // bias coherent-sum VCSEL pair
+        let tuning_hold = 2.0 * n * k * d.eo_tuning_power; // both banks
+        let active = laser + dacs + adcs + bpds + bias + tuning_hold;
+        // Idle (no power gating): nothing is managed — lasers, tuning
+        // holds, converter and detector rails all stay up. This is the
+        // whole premium the paper's gating optimization recovers.
+        let idle = active;
+        UnitPower { active, idle, gated: 0.0, laser }
+    }
+
+    /// MACs retired per symbol.
+    pub fn macs_per_symbol(&self) -> usize {
+        self.cfg.macs_per_symbol_per_unit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn unit() -> MvmUnit {
+        MvmUnit::new(BlockKind::Dense, &ArchConfig::paper_optimum())
+    }
+
+    #[test]
+    fn stage_pipelining_takes_max_not_sum() {
+        let t = unit().timing();
+        assert!(t.symbol_time(true) < t.symbol_time(false));
+        assert_eq!(t.symbol_time(true), t.stage1.max(t.stage2));
+        assert_eq!(t.symbol_time(false), t.stage1 + t.stage2);
+    }
+
+    #[test]
+    fn symbol_rate_is_dac_limited() {
+        // With Table 2 numbers, stage 1 (DAC 0.29 ns + VCSEL 0.07 ns + ToF)
+        // dominates stage 2 (PD 5.8 ps + VCSEL 0.07 ns).
+        let t = unit().timing();
+        assert!(t.stage1 > t.stage2);
+        // symbol rate in the GHz class
+        let rate = 1.0 / t.symbol_time(true);
+        assert!(rate > 1e9 && rate < 1e10, "rate={rate}");
+    }
+
+    #[test]
+    fn weight_load_dominated_by_eo_tuning() {
+        let t = unit().timing();
+        assert!((t.weight_load - (20e-9 + 0.29e-9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn power_ordering_gated_idle_active() {
+        let p = unit().power();
+        // ungated idle keeps every rail up (== active); gating drops all
+        assert!(p.gated < p.idle);
+        assert_eq!(p.idle, p.active);
+        assert!(p.laser > 0.0 && p.laser < p.active);
+    }
+
+    #[test]
+    fn laser_power_superlinear_in_n() {
+        // The Eq. 2 wall-plug component grows faster than linearly with N
+        // (+dB per pass-by MR and +10log10 N are exponential in linear
+        // watts). The total may sit on the linear N·VCSEL drive floor.
+        let at = |n: usize| {
+            MvmUnit::new(BlockKind::Dense, &ArchConfig::new(n, 2, 1, 1)).laser_eq2_w()
+        };
+        let (p9, p18, p36) = (at(9), at(18), at(36));
+        assert!(p18 > p9 && p36 > p18);
+        assert!(
+            (p36 / p18) > (p18 / p9),
+            "growth must accelerate: {p9} {p18} {p36}"
+        );
+    }
+
+    #[test]
+    fn power_scales_with_rows_and_cols() {
+        check("unit power monotone in K and N", 64, |g| {
+            let n = g.usize_in(2, 35);
+            let k = g.usize_in(1, 7);
+            let base = MvmUnit::new(BlockKind::Conv, &ArchConfig::new(n, k, 1, 1)).power();
+            let more_n =
+                MvmUnit::new(BlockKind::Conv, &ArchConfig::new(n + 1, k, 1, 1)).power();
+            let more_k =
+                MvmUnit::new(BlockKind::Conv, &ArchConfig::new(n, k + 1, 1, 1)).power();
+            assert!(more_n.active > base.active);
+            assert!(more_k.active > base.active);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn norm_kind_is_not_an_mvm_unit() {
+        MvmUnit::new(BlockKind::Norm, &ArchConfig::paper_optimum());
+    }
+}

@@ -1,0 +1,20 @@
+//! Baseline accelerator models: A100 GPU, Xeon CPU, TPU v2, FlexiGAN
+//! (FPGA, [13]) and ReGAN (ReRAM PIM, [15]) — the five comparison
+//! platforms of paper Figs. 13/14.
+//!
+//! These are *calibrated analytic comparators* (DESIGN.md §2/§7): each
+//! platform is a per-layer-kind effective-throughput model plus an
+//! effective inference power. The **structure** (which layer kinds a
+//! platform is bad at — e.g. systolic arrays on zero-inserted transposed
+//! convs, GPUs on batch-1 dense layers, FlexiGAN's tconv-friendly
+//! reordering, ReGAN's in-memory MVMs) is taken from the platforms'
+//! published characteristics; the **absolute scale** is calibrated once,
+//! globally, against the paper's reported average GOPS/EPB ratios, so that
+//! per-model spread emerges from layer mixes rather than per-model fudging.
+//! The implied platform powers are derived from the paper's EPB and GOPS
+//! numbers together and are NOT independently physical — a known
+//! inconsistency of the source paper recorded in EXPERIMENTS.md.
+
+pub mod platform;
+
+pub use platform::{all_platforms, LayerClass, Platform, PlatformReport};

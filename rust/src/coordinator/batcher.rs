@@ -1,0 +1,196 @@
+//! Dynamic batcher: size- and deadline-bounded batching per model.
+//!
+//! Policy (vLLM-router-flavored, adapted to GAN generation):
+//! - accumulate same-model requests into a pending batch;
+//! - dispatch when the batch reaches `max_batch` samples, **or** when the
+//!   oldest pending request has waited `max_wait`;
+//! - never split a request across batches (a request's samples stay
+//!   together, simplifying seed bookkeeping).
+
+use super::request::Envelope;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum samples per dispatched batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before forced dispatch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A dispatched batch of same-model envelopes.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: String,
+    pub envelopes: Vec<Envelope>,
+    /// Total samples across envelopes.
+    pub samples: usize,
+}
+
+/// Per-model pending queue with the dispatch policy.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: VecDeque<Envelope>,
+    pending_samples: usize,
+    model: String,
+}
+
+impl Batcher {
+    pub fn new(model: &str, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher {
+            policy,
+            pending: VecDeque::new(),
+            pending_samples: 0,
+            model: model.to_string(),
+        }
+    }
+
+    /// Enqueue a request envelope (must match this batcher's model).
+    pub fn push(&mut self, env: Envelope) {
+        assert_eq!(env.request.model, self.model, "routed to wrong batcher");
+        self.pending_samples += env.request.count;
+        self.pending.push_back(env);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn pending_samples(&self) -> usize {
+        self.pending_samples
+    }
+
+    /// Age of the oldest pending request, if any.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.pending.front().map(|e| now.duration_since(e.request.arrival))
+    }
+
+    /// Should we dispatch now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        self.pending_samples >= self.policy.max_batch
+            || self.oldest_wait(now).unwrap() >= self.policy.max_wait
+    }
+
+    /// Pop a batch respecting `max_batch` (never splits an envelope; a
+    /// single over-sized request dispatches alone).
+    pub fn pop(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let mut envs = Vec::new();
+        let mut samples = 0usize;
+        while let Some(front) = self.pending.front() {
+            let c = front.request.count;
+            if !envs.is_empty() && samples + c > self.policy.max_batch {
+                break;
+            }
+            samples += c;
+            self.pending_samples -= c;
+            envs.push(self.pending.pop_front().unwrap());
+            if samples >= self.policy.max_batch {
+                break;
+            }
+        }
+        Some(Batch { model: self.model.clone(), envelopes: envs, samples })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{GenRequest, RequestId};
+    use std::sync::mpsc::channel;
+
+    fn env(id: u64, count: usize, arrival: Instant) -> Envelope {
+        let (tx, _rx) = channel();
+        Envelope {
+            request: GenRequest {
+                id: RequestId(id),
+                model: "m".into(),
+                seed: id,
+                label: None,
+                count,
+                arrival,
+            },
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn dispatches_on_size() {
+        let now = Instant::now();
+        let mut b = Batcher::new("m", BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        for i in 0..3 {
+            b.push(env(i, 1, now));
+        }
+        assert!(!b.ready(now), "3 < max_batch and no deadline");
+        b.push(env(3, 1, now));
+        assert!(b.ready(now));
+        let batch = b.pop().unwrap();
+        assert_eq!(batch.samples, 4);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let start = Instant::now();
+        let mut b = Batcher::new("m", BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) });
+        b.push(env(0, 1, start));
+        assert!(!b.ready(start));
+        let later = start + Duration::from_millis(2);
+        assert!(b.ready(later), "deadline must force dispatch");
+        assert_eq!(b.pop().unwrap().samples, 1);
+    }
+
+    #[test]
+    fn never_splits_an_envelope() {
+        let now = Instant::now();
+        let mut b = Batcher::new("m", BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        b.push(env(0, 3, now));
+        b.push(env(1, 3, now));
+        let first = b.pop().unwrap();
+        assert_eq!(first.samples, 3, "second envelope would exceed max_batch");
+        let second = b.pop().unwrap();
+        assert_eq!(second.samples, 3);
+    }
+
+    #[test]
+    fn oversized_request_dispatches_alone() {
+        let now = Instant::now();
+        let mut b = Batcher::new("m", BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        b.push(env(0, 9, now));
+        let batch = b.pop().unwrap();
+        assert_eq!(batch.samples, 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong batcher")]
+    fn wrong_model_panics() {
+        let (tx, _rx) = channel();
+        let mut b = Batcher::new("other", BatchPolicy::default());
+        b.push(Envelope {
+            request: GenRequest {
+                id: RequestId(0),
+                model: "m".into(),
+                seed: 0,
+                label: None,
+                count: 1,
+                arrival: Instant::now(),
+            },
+            reply: tx,
+        });
+    }
+}

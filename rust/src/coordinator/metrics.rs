@@ -1,0 +1,85 @@
+//! Serving metrics: latency histograms and throughput counters.
+
+use crate::util::stats::Histogram;
+use std::time::Instant;
+
+/// Aggregated serving metrics (one per model; merge for totals).
+#[derive(Debug, Clone)]
+pub struct ServingMetrics {
+    /// End-to-end request latency (s).
+    pub latency: Histogram,
+    /// Queue wait (s).
+    pub queue: Histogram,
+    /// Batch sizes at dispatch.
+    pub batch_size: Histogram,
+    pub requests: u64,
+    pub samples: u64,
+    started: Instant,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            latency: Histogram::exponential(1e-6, 100.0, 10),
+            queue: Histogram::exponential(1e-6, 100.0, 10),
+            batch_size: Histogram::exponential(1.0, 1024.0, 10),
+            requests: 0,
+            samples: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record(&mut self, latency_s: f64, queue_s: f64, batch: usize, samples: usize) {
+        self.latency.record(latency_s);
+        self.queue.record(queue_s);
+        self.batch_size.record(batch as f64);
+        self.requests += 1;
+        self.samples += samples as u64;
+    }
+
+    /// Samples per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            0.0
+        } else {
+            self.samples as f64 / dt
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} samples={} p50={:.2}ms p99={:.2}ms mean_queue={:.2}ms mean_batch={:.1}",
+            self.requests,
+            self.samples,
+            self.latency.quantile(0.5) * 1e3,
+            self.latency.quantile(0.99) * 1e3,
+            self.queue.mean() * 1e3,
+            self.batch_size.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = ServingMetrics::new();
+        for i in 1..=10 {
+            m.record(0.001 * i as f64, 0.0001, 4, 4);
+        }
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.samples, 40);
+        assert!(m.latency.quantile(0.5) >= 0.001);
+        assert!(m.summary().contains("requests=10"));
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving coordinator — the L3 system layer a deployed PhotoGAN would
+//! sit behind (vLLM-router-style): request intake, dynamic batching,
+//! worker execution, and latency/throughput metrics.
+//!
+//! GAN inference serving is throughput-oriented: requests for the same
+//! model are batched (weights are loaded onto the MR banks once per tile
+//! regardless of batch, so batching directly amortizes the dominant reload
+//! cost — see `sim::engine`), subject to a latency deadline.
+//!
+//! Built entirely on std threads + channels (no tokio in the offline crate
+//! set, DESIGN.md §2).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use request::{GenRequest, GenResponse, RequestId};
+pub use server::{Server, ServerConfig, ServerStats};

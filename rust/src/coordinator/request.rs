@@ -1,0 +1,74 @@
+//! Request/response types for the serving layer.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Monotonic request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// A generation request: produce `count` samples from `model` seeded by
+/// `seed` (CondGAN-style models also take a class label).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub model: String,
+    pub seed: u64,
+    /// Optional conditioning label (one-hot index).
+    pub label: Option<u32>,
+    /// Samples requested (each becomes one batch slot).
+    pub count: usize,
+    /// Arrival time (set by the server at intake).
+    pub arrival: Instant,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: RequestId,
+    pub model: String,
+    /// Flat image data, `count × (c·h·w)` f32 in [-1, 1].
+    pub images: Vec<f32>,
+    /// Image element count per sample.
+    pub elements_per_sample: usize,
+    pub count: usize,
+    /// Time spent queued before execution (s).
+    pub queue_time: f64,
+    /// Total time from arrival to completion (s).
+    pub total_time: f64,
+    /// Size of the batch this request was served in.
+    pub served_batch: usize,
+}
+
+/// Internal envelope: request + completion channel.
+#[derive(Debug)]
+pub struct Envelope {
+    pub request: GenRequest,
+    pub reply: Sender<GenResponse>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ids_order() {
+        assert!(RequestId(1) < RequestId(2));
+    }
+
+    #[test]
+    fn response_carries_batch_info() {
+        let r = GenResponse {
+            id: RequestId(7),
+            model: "CondGAN".into(),
+            images: vec![0.0; 784],
+            elements_per_sample: 784,
+            count: 1,
+            queue_time: 0.001,
+            total_time: 0.002,
+            served_batch: 4,
+        };
+        assert_eq!(r.images.len(), r.count * r.elements_per_sample);
+        assert!(r.total_time >= r.queue_time);
+    }
+}

@@ -1,0 +1,439 @@
+//! The serving loop: leader thread (routing + batching) and a worker pool
+//! executing batches against a pluggable [`BatchExecutor`].
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::metrics::ServingMetrics;
+use super::request::{Envelope, GenRequest, GenResponse, RequestId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Executes a whole batch of same-model generations. Implemented by
+/// [`crate::runtime::Engine`] (PJRT) in production and by stubs in tests.
+pub trait BatchExecutor: Send + Sync + 'static {
+    /// Models this executor can serve.
+    fn models(&self) -> Vec<String>;
+    /// Output elements per generated sample for a model.
+    fn elements_per_sample(&self, model: &str) -> usize;
+    /// Generate one sample per `(seed, label)` entry; returns
+    /// `entries.len() × elements_per_sample` f32s.
+    fn generate(&self, model: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32>;
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { policy: BatchPolicy::default(), workers: 2 }
+    }
+}
+
+/// Point-in-time statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub per_model: HashMap<String, String>,
+    pub total_requests: u64,
+    pub total_samples: u64,
+}
+
+enum LeaderMsg {
+    Submit(Envelope),
+    Shutdown,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    intake: Sender<LeaderMsg>,
+    leader: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+}
+
+impl Server {
+    /// Start the leader + workers over the given executor.
+    pub fn start<E: BatchExecutor>(executor: Arc<E>, config: ServerConfig) -> Self {
+        assert!(config.workers >= 1);
+        let (intake_tx, intake_rx) = channel::<LeaderMsg>();
+        let metrics: Arc<Mutex<HashMap<String, ServingMetrics>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let metrics_leader = Arc::clone(&metrics);
+        let models = executor.models();
+        let leader = std::thread::Builder::new()
+            .name("photogan-leader".into())
+            .spawn(move || leader_loop(intake_rx, executor, config, models, metrics_leader))
+            .expect("spawn leader");
+        Server {
+            intake: intake_tx,
+            leader: Some(leader),
+            next_id: AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// Submit a generation request; returns the channel the response will
+    /// arrive on.
+    pub fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        let req = GenRequest {
+            id: RequestId(self.next_id.fetch_add(1, Ordering::Relaxed)),
+            model: model.to_string(),
+            seed,
+            label,
+            count,
+            arrival: Instant::now(),
+        };
+        self.intake
+            .send(LeaderMsg::Submit(Envelope { request: req, reply: tx }))
+            .expect("leader alive");
+        rx
+    }
+
+    /// Metrics snapshot.
+    pub fn stats(&self) -> ServerStats {
+        let guard = self.metrics.lock().unwrap();
+        let mut per_model = HashMap::new();
+        let mut total_requests = 0;
+        let mut total_samples = 0;
+        for (m, s) in guard.iter() {
+            per_model.insert(m.clone(), s.summary());
+            total_requests += s.requests;
+            total_samples += s.samples;
+        }
+        ServerStats { per_model, total_requests, total_samples }
+    }
+
+    /// Graceful shutdown: drain pending batches, then join.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.intake.send(LeaderMsg::Shutdown);
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.intake.send(LeaderMsg::Shutdown);
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn leader_loop<E: BatchExecutor>(
+    intake: Receiver<LeaderMsg>,
+    executor: Arc<E>,
+    config: ServerConfig,
+    models: Vec<String>,
+    metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+) {
+    let mut batchers: HashMap<String, Batcher> = models
+        .iter()
+        .map(|m| (m.clone(), Batcher::new(m, config.policy)))
+        .collect();
+    // worker pool
+    let (work_tx, work_rx) = channel::<Batch>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let workers: Vec<JoinHandle<()>> = (0..config.workers)
+        .map(|i| {
+            let rx = Arc::clone(&work_rx);
+            let exec = Arc::clone(&executor);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name(format!("photogan-worker-{i}"))
+                .spawn(move || worker_loop(rx, exec, metrics))
+                .expect("spawn worker")
+        })
+        .collect();
+
+    let mut shutting_down = false;
+    loop {
+        // wait up to the batching deadline for new work
+        match intake.recv_timeout(Duration::from_millis(1)) {
+            Ok(LeaderMsg::Submit(env)) => {
+                let model = env.request.model.clone();
+                match batchers.get_mut(&model) {
+                    Some(b) => b.push(env),
+                    None => {
+                        // unknown model: reply with an empty error response
+                        let _ = env.reply.send(GenResponse {
+                            id: env.request.id,
+                            model,
+                            images: vec![],
+                            elements_per_sample: 0,
+                            count: 0,
+                            queue_time: 0.0,
+                            total_time: 0.0,
+                            served_batch: 0,
+                        });
+                    }
+                }
+            }
+            Ok(LeaderMsg::Shutdown) => shutting_down = true,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+        // dispatch ready batches (all pending on shutdown)
+        let now = Instant::now();
+        let mut any_pending = false;
+        for b in batchers.values_mut() {
+            while b.ready(now) || (shutting_down && b.pending_len() > 0) {
+                if let Some(batch) = b.pop() {
+                    work_tx.send(batch).expect("workers alive");
+                } else {
+                    break;
+                }
+            }
+            any_pending |= b.pending_len() > 0;
+        }
+        if shutting_down && !any_pending {
+            break;
+        }
+    }
+    drop(work_tx);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn worker_loop<E: BatchExecutor>(
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    executor: Arc<E>,
+    metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // channel closed: shutdown
+            }
+        };
+        let start = Instant::now();
+        let entries: Vec<(u64, Option<u32>)> = batch
+            .envelopes
+            .iter()
+            .flat_map(|e| {
+                (0..e.request.count).map(move |i| (e.request.seed.wrapping_add(i as u64), e.request.label))
+            })
+            .collect();
+        let elements = executor.elements_per_sample(&batch.model);
+        // Failure isolation: a panicking or misbehaving executor must not
+        // take the worker (and with it, the queue) down — degrade to a
+        // zero-filled batch and keep serving.
+        let images = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            executor.generate(&batch.model, &entries)
+        }))
+        .ok()
+        .filter(|v| v.len() == entries.len() * elements)
+        .unwrap_or_else(|| {
+            eprintln!(
+                "[photogan] executor failed or returned wrong size for {}; zero-filling {} samples",
+                batch.model,
+                entries.len()
+            );
+            vec![0.0; entries.len() * elements]
+        });
+        // scatter results back to requesters
+        let mut offset = 0usize;
+        let end = Instant::now();
+        for env in batch.envelopes {
+            let n = env.request.count * elements;
+            let queue_time = start.duration_since(env.request.arrival).as_secs_f64();
+            let total_time = end.duration_since(env.request.arrival).as_secs_f64();
+            let resp = GenResponse {
+                id: env.request.id,
+                model: batch.model.clone(),
+                images: images[offset..offset + n].to_vec(),
+                elements_per_sample: elements,
+                count: env.request.count,
+                queue_time,
+                total_time,
+                served_batch: batch.samples,
+            };
+            offset += n;
+            {
+                let mut guard = metrics.lock().unwrap();
+                guard
+                    .entry(batch.model.clone())
+                    .or_default()
+                    .record(total_time, queue_time, batch.samples, env.request.count);
+            }
+            let _ = env.reply.send(resp); // requester may have gone away
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic stub executor: sample value = seed as f32.
+    struct Stub;
+
+    impl BatchExecutor for Stub {
+        fn models(&self) -> Vec<String> {
+            vec!["toy".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            4
+        }
+
+        fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+            entries
+                .iter()
+                .flat_map(|&(seed, _)| std::iter::repeat(seed as f32).take(4))
+                .collect()
+        }
+    }
+
+    #[test]
+    fn round_trip_single_request() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        let rx = server.submit("toy", 42, None, 1);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.count, 1);
+        assert_eq!(resp.images, vec![42.0; 4]);
+        let stats = server.shutdown();
+        assert_eq!(stats.total_requests, 1);
+    }
+
+    #[test]
+    fn batches_multiple_requests_together() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+            workers: 1,
+        };
+        let server = Server::start(Arc::new(Stub), cfg);
+        let rxs: Vec<_> = (0..8).map(|i| server.submit("toy", i, None, 1)).collect();
+        let mut batch_sizes = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            batch_sizes.push(resp.served_batch);
+        }
+        // at least some requests must have shared a batch
+        assert!(batch_sizes.iter().any(|&b| b > 1), "batching never engaged: {batch_sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_sample_request_seeds_increment() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        let rx = server.submit("toy", 100, None, 3);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.count, 3);
+        assert_eq!(resp.images[0..4], [100.0; 4]);
+        assert_eq!(resp.images[4..8], [101.0; 4]);
+        assert_eq!(resp.images[8..12], [102.0; 4]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_gets_empty_response() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        let rx = server.submit("nope", 1, None, 1);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.count, 0);
+        assert!(resp.images.is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let cfg = ServerConfig {
+            // huge deadline: only shutdown can flush the batch
+            policy: BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
+            workers: 1,
+        };
+        let server = Server::start(Arc::new(Stub), cfg);
+        let rx = server.submit("toy", 7, None, 2);
+        let stats = server.shutdown();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.count, 2);
+        assert_eq!(stats.total_samples, 2);
+    }
+
+    /// Executor that panics on every generate call.
+    struct Panicky;
+
+    impl BatchExecutor for Panicky {
+        fn models(&self) -> Vec<String> {
+            vec!["boom".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            2
+        }
+
+        fn generate(&self, _m: &str, _e: &[(u64, Option<u32>)]) -> Vec<f32> {
+            panic!("kernel exploded");
+        }
+    }
+
+    /// Executor that returns the wrong number of elements.
+    struct WrongSize;
+
+    impl BatchExecutor for WrongSize {
+        fn models(&self) -> Vec<String> {
+            vec!["short".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            4
+        }
+
+        fn generate(&self, _m: &str, e: &[(u64, Option<u32>)]) -> Vec<f32> {
+            vec![1.0; e.len()] // 4x too few
+        }
+    }
+
+    #[test]
+    fn panicking_executor_degrades_to_zero_fill() {
+        let server = Server::start(Arc::new(Panicky), ServerConfig::default());
+        let rx = server.submit("boom", 1, None, 1);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("must still respond");
+        assert_eq!(resp.images, vec![0.0; 2]);
+        // and the server keeps serving afterwards
+        let rx2 = server.submit("boom", 2, None, 1);
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_size_executor_degrades_to_zero_fill() {
+        let server = Server::start(Arc::new(WrongSize), ServerConfig::default());
+        let rx = server.submit("short", 1, None, 2);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.images, vec![0.0; 8]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_aggregate_across_requests() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        let rxs: Vec<_> = (0..5).map(|i| server.submit("toy", i, None, 2)).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.total_requests, 5);
+        assert_eq!(stats.total_samples, 10);
+        assert!(stats.per_model.contains_key("toy"));
+    }
+}

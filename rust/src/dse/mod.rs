@@ -1,0 +1,180 @@
+//! Design-space exploration over `[N, K, L, M]` (paper §IV.A, Fig. 11).
+//!
+//! Exhaustively sweeps the architectural grid under the 100 W power cap,
+//! scoring each valid configuration by the paper's objective —
+//! **GOPS/EPB** averaged over the four evaluated GAN models — and returns
+//! the Pareto-ish cloud plus the optimum. Multi-threaded with
+//! `std::thread::scope` (the per-model job mapping is computed once and
+//! shared read-only across workers).
+
+use crate::arch::accelerator::Accelerator;
+use crate::arch::config::ArchConfig;
+use crate::models::Model;
+use crate::sim::engine::simulate_mapped;
+use crate::sim::mapper::{map_model, LayerJob};
+use crate::sim::options::OptFlags;
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub n: usize,
+    pub k: usize,
+    pub l: usize,
+    pub m: usize,
+    /// Gated peak power (W) — must be under the cap.
+    pub peak_power_w: f64,
+    /// Average GOPS across models.
+    pub gops: f64,
+    /// Average EPB across models (J/bit).
+    pub epb: f64,
+    /// The objective: GOPS / EPB.
+    pub objective: f64,
+}
+
+/// Sweep grid specification.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub n: Vec<usize>,
+    pub k: Vec<usize>,
+    pub l: Vec<usize>,
+    pub m: Vec<usize>,
+}
+
+impl Grid {
+    /// The paper-scale grid (N ≤ 36 by the crosstalk rule).
+    pub fn paper() -> Self {
+        Grid {
+            n: vec![4, 8, 12, 16, 20, 24, 28, 32, 36],
+            k: vec![1, 2, 4, 8],
+            l: vec![1, 3, 5, 7, 9, 11, 13],
+            m: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    /// A small smoke grid for tests.
+    pub fn smoke() -> Self {
+        Grid { n: vec![8, 16, 32], k: vec![1, 2, 4], l: vec![3, 11], m: vec![1, 3] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n.len() * self.k.len() * self.l.len() * self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn configs(&self) -> Vec<(usize, usize, usize, usize)> {
+        let mut out = Vec::with_capacity(self.len());
+        for &n in &self.n {
+            for &k in &self.k {
+                for &l in &self.l {
+                    for &m in &self.m {
+                        out.push((n, k, l, m));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Evaluate one configuration against pre-mapped model jobs. Returns `None`
+/// if the configuration is invalid or over the power cap.
+fn evaluate(
+    n: usize,
+    k: usize,
+    l: usize,
+    m: usize,
+    mapped: &[(String, Vec<LayerJob>)],
+    opts: OptFlags,
+) -> Option<DsePoint> {
+    let cfg = ArchConfig::new(n, k, l, m);
+    let acc = Accelerator::new(cfg).ok()?;
+    acc.validate(opts.power_gated).ok()?;
+    let peak = acc.peak_power(opts.power_gated);
+    let mut gops = 0.0;
+    let mut epb = 0.0;
+    for (name, jobs) in mapped {
+        let r = simulate_mapped(name, jobs, &acc, 1, opts);
+        gops += r.gops();
+        epb += r.epb();
+    }
+    let n_models = mapped.len() as f64;
+    gops /= n_models;
+    epb /= n_models;
+    Some(DsePoint { n, k, l, m, peak_power_w: peak, gops, epb, objective: gops / epb })
+}
+
+/// Run the sweep. Returns all valid points sorted by descending objective
+/// (so `[0]` is the optimum).
+pub fn explore(grid: &Grid, models: &[Model], opts: OptFlags, threads: usize) -> Vec<DsePoint> {
+    assert!(threads >= 1);
+    let mapped: Vec<(String, Vec<LayerJob>)> = models
+        .iter()
+        .map(|m| (m.name.clone(), map_model(m, 1, &opts)))
+        .collect();
+    let configs = grid.configs();
+    let chunk = configs.len().div_ceil(threads);
+    let mut points: Vec<DsePoint> = std::thread::scope(|scope| {
+        let handles: Vec<_> = configs
+            .chunks(chunk.max(1))
+            .map(|slice| {
+                let mapped = &mapped;
+                scope.spawn(move || {
+                    slice
+                        .iter()
+                        .filter_map(|&(n, k, l, m)| evaluate(n, k, l, m, mapped, opts))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("worker panicked")).collect()
+    });
+    points.sort_by(|a, b| b.objective.partial_cmp(&a.objective).unwrap());
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn smoke_grid_finds_an_optimum() {
+        // keep the test fast: two small models
+        let models = vec![zoo::condgan(), zoo::artgan()];
+        let pts = explore(&Grid::smoke(), &models, OptFlags::all(), 4);
+        assert!(!pts.is_empty());
+        // sorted descending by objective
+        for w in pts.windows(2) {
+            assert!(w[0].objective >= w[1].objective);
+        }
+        // every surviving point respects the cap and the crosstalk rule
+        for p in &pts {
+            assert!(p.peak_power_w <= 100.0);
+            assert!(p.n <= 36);
+        }
+    }
+
+    #[test]
+    fn objective_consistency() {
+        let models = vec![zoo::condgan()];
+        let pts = explore(&Grid::smoke(), &models, OptFlags::all(), 2);
+        for p in &pts {
+            assert!((p.objective - p.gops / p.epb).abs() < 1e-6 * p.objective.abs());
+        }
+    }
+
+    #[test]
+    fn single_thread_matches_multi_thread() {
+        let models = vec![zoo::condgan()];
+        let a = explore(&Grid::smoke(), &models, OptFlags::all(), 1);
+        let b = explore(&Grid::smoke(), &models, OptFlags::all(), 8);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(
+            (a[0].n, a[0].k, a[0].l, a[0].m),
+            (b[0].n, b[0].k, b[0].l, b[0].m)
+        );
+    }
+}

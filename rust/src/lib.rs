@@ -1,0 +1,40 @@
+//! # PhotoGAN
+//!
+//! Reproduction of *PhotoGAN: Generative Adversarial Neural Network
+//! Acceleration with Silicon Photonics* (Suresh, Afifi, Pasricha).
+//!
+//! The crate is organised bottom-up:
+//!
+//! - [`photonics`] — opto-electronic device models (MRs, VCSELs, PDs, SOAs,
+//!   DAC/ADC, PCMCs, tuning circuits, waveguide loss budget, laser power).
+//! - [`arch`] — PhotoGAN's architecture blocks (dense / convolution /
+//!   normalization / activation units) and whole-chip assembly `[N,K,L,M]`.
+//! - [`models`] — GAN workload IR and the four evaluated models (Table 1).
+//! - [`sparse`] — the paper's sparse computation dataflow for transposed
+//!   convolutions (Fig. 9): zero-column census + functional reference.
+//! - [`sim`] — the architectural simulator: mapping, two-level pipelining,
+//!   power gating, per-layer latency/energy traces, GOPS / EPB.
+//! - [`baselines`] — analytic GPU / CPU / TPU / FPGA / ReRAM comparators.
+//! - [`dse`] — design-space exploration over `[N,K,L,M]` (Fig. 11).
+//! - [`runtime`] — PJRT client that loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and executes real GAN inference.
+//! - [`coordinator`] — serving layer: request router, dynamic batcher,
+//!   worker pool, latency metrics.
+//! - [`report`] — regenerates every table and figure of the paper.
+//! - [`util`] — RNG, stats, table printing, mini property-test harness.
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod dse;
+pub mod metrics;
+pub mod models;
+pub mod photonics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

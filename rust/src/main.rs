@@ -1,0 +1,218 @@
+//! `photogan` — leader entrypoint + CLI.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline crate set):
+//!
+//! ```text
+//! photogan simulate [--model NAME] [--batch B] [--config N,K,L,M] [--no-sparse|--no-pipeline|--no-gating]
+//! photogan dse      [--threads T] [--grid paper|smoke]
+//! photogan compare                      # Figs. 13/14 tables
+//! photogan serve    [--artifacts DIR] [--requests R] [--batch B] [--workers W]
+//! photogan report                       # every table/figure in one run
+//! ```
+
+use photogan::arch::accelerator::Accelerator;
+use photogan::arch::config::ArchConfig;
+use photogan::coordinator::server::{Server, ServerConfig};
+use photogan::coordinator::BatchPolicy;
+use photogan::dse::Grid;
+use photogan::models::zoo;
+use photogan::report;
+use photogan::runtime::Engine;
+use photogan::sim::{simulate, OptFlags};
+use photogan::util::cli::{parse_quad, Cli};
+use photogan::util::table::Table;
+use photogan::util::units::{fmt_energy, fmt_time};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&args);
+    let (cmd, flags) = (cli.command.clone(), cli.flags);
+    let code = match cmd.as_str() {
+        "simulate" => cmd_simulate(&flags),
+        "dse" => cmd_dse(&flags),
+        "compare" => cmd_compare(),
+        "serve" => cmd_serve(&flags),
+        "report" => cmd_report(&flags),
+        "help" | "" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    eprintln!(
+        "photogan — silicon-photonic GAN acceleration (paper reproduction)\n\
+         USAGE: photogan <simulate|dse|compare|serve|report> [flags]\n\
+         \n\
+         simulate  --model dcgan|condgan|artgan|cyclegan  --batch B\n\
+        \u{20}          --config N,K,L,M  --no-sparse --no-pipeline --no-gating\n\
+         dse       --threads T  --grid paper|smoke\n\
+         compare   (Figs. 13/14 GOPS + EPB tables)\n\
+         serve     --artifacts DIR --requests R --batch B --workers W --model NAME\n\
+         report    --threads T  (all tables & figures)"
+    );
+}
+
+fn parse_config(s: &str) -> Option<ArchConfig> {
+    parse_quad(s).map(|(n, k, l, m)| ArchConfig::new(n, k, l, m))
+}
+
+fn model_by_name(name: &str) -> Option<photogan::models::Model> {
+    zoo::all_generators()
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    let cfg = flags
+        .get("config")
+        .and_then(|s| parse_config(s))
+        .unwrap_or_else(ArchConfig::paper_optimum);
+    let acc = match Accelerator::new(cfg) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("invalid config: {e}");
+            return 2;
+        }
+    };
+    let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let opts = OptFlags {
+        sparse: !flags.contains_key("no-sparse"),
+        pipelined: !flags.contains_key("no-pipeline"),
+        power_gated: !flags.contains_key("no-gating"),
+    };
+    let models = match flags.get("model") {
+        Some(name) => match model_by_name(name) {
+            Some(m) => vec![m],
+            None => {
+                eprintln!("unknown model '{name}'");
+                return 2;
+            }
+        },
+        None => zoo::all_generators(),
+    };
+    let mut t = Table::new(vec!["model", "latency", "energy", "GOPS", "EPB (fJ/b)", "avg W"])
+        .with_title(format!(
+            "simulate [N,K,L,M]=[{},{},{},{}] batch={} opts={:?}",
+            acc.cfg.n, acc.cfg.k, acc.cfg.l, acc.cfg.m, batch, opts
+        ));
+    for m in &models {
+        let r = simulate(m, &acc, batch, opts);
+        t.row(vec![
+            m.name.clone(),
+            fmt_time(r.latency),
+            fmt_energy(r.energy.total()),
+            format!("{:.1}", r.gops()),
+            format!("{:.2}", r.epb() * 1e15),
+            format!("{:.2}", r.avg_power()),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_dse(flags: &HashMap<String, String>) -> i32 {
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let grid = match flags.get("grid").map(|s| s.as_str()) {
+        Some("smoke") => Grid::smoke(),
+        _ => Grid::paper(),
+    };
+    let (table, pts) = report::fig11(&grid, threads);
+    table.print();
+    if let Some(best) = pts.first() {
+        println!(
+            "optimum: [N,K,L,M]=[{},{},{},{}]  (paper: {:?})",
+            best.n,
+            best.k,
+            best.l,
+            best.m,
+            report::PAPER_OPTIMUM
+        );
+    }
+    0
+}
+
+fn cmd_compare() -> i32 {
+    let data = report::comparison_data();
+    report::fig13(&data).print();
+    println!();
+    report::fig14(&data).print();
+    0
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let max_batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    eprintln!("[serve] loading + compiling artifacts from {dir} …");
+    let engine = match Engine::load(std::path::Path::new(&dir)) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            return 1;
+        }
+    };
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| engine.model_names()[0].clone());
+    eprintln!("[serve] models: {:?}; driving {requests} requests at {model}", engine.model_names());
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(5) },
+            workers,
+        },
+    );
+    let start = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| server.submit(&model, i as u64, Some((i % 10) as u32), 1))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!("served {requests} requests in {wall:.2}s ({:.1} img/s)", requests as f64 / wall);
+    for (m, s) in &stats.per_model {
+        println!("  {m}: {s}");
+    }
+    0
+}
+
+fn cmd_report(flags: &HashMap<String, String>) -> i32 {
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let (t1, _) = report::table1();
+    t1.print();
+    println!();
+    report::table2().print();
+    println!();
+    let (t12, _) = report::fig12();
+    t12.print();
+    println!();
+    cmd_compare();
+    println!();
+    let (t11, _) = report::fig11(&Grid::paper(), threads);
+    t11.print();
+    0
+}

@@ -1,0 +1,66 @@
+//! Metric definitions shared by the simulator, baselines and reports.
+//!
+//! The paper's two headline metrics:
+//! - **GOPS** — achieved giga-operations/second, counting the *workload's*
+//!   dense-equivalent ops (2 per MAC). Fixed numerator per model, so
+//!   platforms that skip structural zeros (PhotoGAN's sparse dataflow)
+//!   or waste work on them (zero-inserted execution) are scored on the
+//!   same yardstick.
+//! - **EPB** — energy-per-bit: total inference energy / bits processed,
+//!   with bits = ops × precision (8). Any consistent denominator gives the
+//!   same *ratios*, which is what the paper reports.
+
+/// Ops (not MACs) per multiply-accumulate.
+pub const OPS_PER_MAC: f64 = 2.0;
+
+/// Workload bits for an op count at a precision.
+pub fn bits_for_ops(ops: f64, precision_bits: u32) -> f64 {
+    ops * precision_bits as f64
+}
+
+/// GOPS from ops and latency.
+pub fn gops(ops: f64, latency_s: f64) -> f64 {
+    assert!(latency_s > 0.0);
+    ops / latency_s / 1e9
+}
+
+/// EPB from energy and bits.
+pub fn epb(energy_j: f64, bits: f64) -> f64 {
+    assert!(bits > 0.0);
+    energy_j / bits
+}
+
+/// Geometric-mean speedup of `a` over `b` across paired samples.
+pub fn geomean_ratio(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let log_sum: f64 = a.iter().zip(b).map(|(x, y)| (x / y).ln()).sum();
+    (log_sum / a.len() as f64).exp()
+}
+
+/// Arithmetic-mean ratio (the paper's "on average X×" convention).
+pub fn mean_ratio(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    a.iter().zip(b).map(|(x, y)| x / y).sum::<f64>() / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_conversions() {
+        assert_eq!(gops(2e9, 1.0), 2.0);
+        assert_eq!(epb(1.0, 8e9), 1.25e-10);
+        assert_eq!(bits_for_ops(1e9, 8), 8e9);
+    }
+
+    #[test]
+    fn ratios() {
+        let a = [4.0, 9.0];
+        let b = [1.0, 1.0];
+        assert!((geomean_ratio(&a, &b) - 6.0).abs() < 1e-12);
+        assert!((mean_ratio(&a, &b) - 6.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Model graph: an ordered layer list with validated shape propagation.
+
+use super::layer::{Layer, Shape, ShapeError};
+use crate::arch::norm::NormKind;
+
+/// A GAN model (generator or discriminator) as a validated layer sequence.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+/// Per-layer record from shape propagation.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub index: usize,
+    pub layer: Layer,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    /// Dense-equivalent MACs (workload op count).
+    pub macs: usize,
+}
+
+impl Model {
+    pub fn new(name: &str, input: Shape, layers: Vec<Layer>) -> Self {
+        Model { name: name.to_string(), input, layers }
+    }
+
+    /// Propagate shapes through all layers; errors pinpoint the bad layer.
+    pub fn infos(&self) -> Result<Vec<LayerInfo>, ShapeError> {
+        let mut shape = self.input.clone();
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            let next = l.out_shape(&shape, i)?;
+            let macs = l.macs(&shape, i)?;
+            out.push(LayerInfo {
+                index: i,
+                layer: l.clone(),
+                in_shape: shape.clone(),
+                out_shape: next.clone(),
+                macs,
+            });
+            shape = next;
+        }
+        Ok(out)
+    }
+
+    /// Output shape of the whole model.
+    pub fn output(&self) -> Result<Shape, ShapeError> {
+        Ok(self.infos()?.last().map(|i| i.out_shape.clone()).unwrap_or(self.input.clone()))
+    }
+
+    /// Total trainable parameters, including 2·C per normalization layer
+    /// (γ and β) resolved from the propagated shapes.
+    pub fn params(&self) -> Result<usize, ShapeError> {
+        let mut total = 0usize;
+        for info in self.infos()? {
+            total += info.layer.params();
+            if let Layer::Norm(kind) = info.layer {
+                if kind != NormKind::None {
+                    if let Shape::Chw(c, _, _) = info.in_shape {
+                        total += 2 * c;
+                    } else {
+                        total += 2 * info.in_shape.elements();
+                    }
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// Total dense-equivalent MACs for one inference.
+    pub fn total_macs(&self) -> Result<usize, ShapeError> {
+        Ok(self.infos()?.iter().map(|i| i.macs).sum())
+    }
+
+    /// Fraction of MACs in transposed-convolution layers — drives how much
+    /// the sparse dataflow can help a model (paper Fig. 12 discussion).
+    pub fn tconv_mac_fraction(&self) -> Result<f64, ShapeError> {
+        let infos = self.infos()?;
+        let total: usize = infos.iter().map(|i| i.macs).sum();
+        if total == 0 {
+            return Ok(0.0);
+        }
+        let tconv: usize = infos
+            .iter()
+            .filter(|i| matches!(i.layer, Layer::ConvT2d { .. }))
+            .map(|i| i.macs)
+            .sum();
+        Ok(tconv as f64 / total as f64)
+    }
+
+    /// Bytes of weights at the given precision.
+    pub fn weight_bytes(&self, bits: u32) -> Result<usize, ShapeError> {
+        Ok(self.params()? * bits as usize / 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::activation::ActKind;
+
+    fn toy() -> Model {
+        Model::new(
+            "toy",
+            Shape::Vec(8),
+            vec![
+                Layer::Dense { in_f: 8, out_f: 16, bias: true },
+                Layer::Act(ActKind::Relu),
+                Layer::Reshape(4, 2, 2),
+                Layer::ConvT2d { in_ch: 4, out_ch: 2, k: 4, s: 2, p: 1, bias: false },
+                Layer::Norm(NormKind::Batch),
+                Layer::Act(ActKind::Tanh),
+            ],
+        )
+    }
+
+    #[test]
+    fn shapes_chain() {
+        let m = toy();
+        assert_eq!(m.output().unwrap(), Shape::Chw(2, 4, 4));
+        let infos = m.infos().unwrap();
+        assert_eq!(infos.len(), 6);
+        assert_eq!(infos[3].out_shape, Shape::Chw(2, 4, 4));
+    }
+
+    #[test]
+    fn params_include_norm() {
+        let m = toy();
+        // dense 8·16+16 + tconv 4·2·16 + norm 2·2
+        assert_eq!(m.params().unwrap(), 144 + 128 + 4);
+    }
+
+    #[test]
+    fn macs_aggregate() {
+        let m = toy();
+        // dense 128 + relu 16 + tconv 2·4·4·4·16 + norm 2·32 + tanh 32
+        assert_eq!(m.total_macs().unwrap(), 128 + 16 + 2048 + 64 + 32);
+    }
+
+    #[test]
+    fn tconv_fraction_sensible() {
+        let f = toy().tconv_mac_fraction().unwrap();
+        assert!((f - 2048.0 / 2288.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_chain_reports_layer_index() {
+        let m = Model::new(
+            "bad",
+            Shape::Vec(8),
+            vec![Layer::Dense { in_f: 9, out_f: 4, bias: false }],
+        );
+        let err = m.infos().unwrap_err();
+        assert!(format!("{err}").contains("layer 0"));
+    }
+}

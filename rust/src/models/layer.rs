@@ -1,0 +1,232 @@
+//! Layer types, shape inference, and op/parameter counting.
+
+use crate::arch::activation::ActKind;
+use crate::arch::norm::NormKind;
+
+/// Tensor shape flowing between layers (batch handled at the sim level).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    /// Flat feature vector of length `n`.
+    Vec(usize),
+    /// Channel-major image tensor `[c, h, w]`.
+    Chw(usize, usize, usize),
+}
+
+impl Shape {
+    pub fn elements(&self) -> usize {
+        match *self {
+            Shape::Vec(n) => n,
+            Shape::Chw(c, h, w) => c * h * w,
+        }
+    }
+}
+
+/// One layer of a GAN model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Fully-connected: `out = W·in + b`.
+    Dense { in_f: usize, out_f: usize, bias: bool },
+    /// 2-D convolution (discriminator path), square kernel.
+    Conv2d { in_ch: usize, out_ch: usize, k: usize, s: usize, p: usize, bias: bool },
+    /// 2-D transposed convolution (generator path), square kernel.
+    ConvT2d { in_ch: usize, out_ch: usize, k: usize, s: usize, p: usize, bias: bool },
+    /// Batch/instance normalization (or explicit bypass `NormKind::None`).
+    Norm(NormKind),
+    /// Optical activation.
+    Act(ActKind),
+    /// Reshape a flat vector into `[c, h, w]` (ECU bookkeeping, zero ops).
+    Reshape(usize, usize, usize),
+    /// Flatten `[c, h, w]` into a vector.
+    Flatten,
+    /// Concatenate a conditioning vector of length `n` (CondGAN labels).
+    ConcatVec(usize),
+    /// Residual skip-add around the previous `span` layers (CycleGAN
+    /// ResNet blocks): `out = in + f(in)`; one add per element.
+    ResidualAdd { span: usize },
+}
+
+/// Error from shape inference.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ShapeError {
+    #[error("layer {index} ({layer}) expects {expected}, got {got}")]
+    Mismatch { index: usize, layer: String, expected: String, got: String },
+    #[error("layer {index}: reshape target {target} elements != input {input}")]
+    BadReshape { index: usize, target: usize, input: usize },
+    #[error("layer {index}: conv arithmetic invalid (k={k}, s={s}, p={p} on {h}x{w})")]
+    BadConv { index: usize, k: usize, s: usize, p: usize, h: usize, w: usize },
+}
+
+impl Layer {
+    /// Output shape for a given input shape.
+    pub fn out_shape(&self, input: &Shape, index: usize) -> Result<Shape, ShapeError> {
+        let mismatch = |expected: &str| ShapeError::Mismatch {
+            index,
+            layer: format!("{self:?}"),
+            expected: expected.to_string(),
+            got: format!("{input:?}"),
+        };
+        match self {
+            Layer::Dense { in_f, out_f, .. } => match input {
+                Shape::Vec(n) if n == in_f => Ok(Shape::Vec(*out_f)),
+                _ => Err(mismatch(&format!("Vec({in_f})"))),
+            },
+            Layer::Conv2d { in_ch, out_ch, k, s, p, .. } => match *input {
+                Shape::Chw(c, h, w) if c == *in_ch => {
+                    if h + 2 * p < *k || w + 2 * p < *k || *s == 0 {
+                        return Err(ShapeError::BadConv { index, k: *k, s: *s, p: *p, h, w });
+                    }
+                    let ho = (h + 2 * p - k) / s + 1;
+                    let wo = (w + 2 * p - k) / s + 1;
+                    Ok(Shape::Chw(*out_ch, ho, wo))
+                }
+                _ => Err(mismatch(&format!("Chw({in_ch}, _, _)"))),
+            },
+            Layer::ConvT2d { in_ch, out_ch, k, s, p, .. } => match *input {
+                Shape::Chw(c, h, w) if c == *in_ch => {
+                    if *s == 0 || (h - 1) * s + k < 2 * p {
+                        return Err(ShapeError::BadConv { index, k: *k, s: *s, p: *p, h, w });
+                    }
+                    let ho = (h - 1) * s + k - 2 * p;
+                    let wo = (w - 1) * s + k - 2 * p;
+                    Ok(Shape::Chw(*out_ch, ho, wo))
+                }
+                _ => Err(mismatch(&format!("Chw({in_ch}, _, _)"))),
+            },
+            Layer::Norm(_) | Layer::Act(_) | Layer::ResidualAdd { .. } => Ok(input.clone()),
+            Layer::Reshape(c, h, w) => {
+                let target = c * h * w;
+                if target == input.elements() {
+                    Ok(Shape::Chw(*c, *h, *w))
+                } else {
+                    Err(ShapeError::BadReshape { index, target, input: input.elements() })
+                }
+            }
+            Layer::Flatten => Ok(Shape::Vec(input.elements())),
+            Layer::ConcatVec(n) => match input {
+                Shape::Vec(m) => Ok(Shape::Vec(m + n)),
+                _ => Err(mismatch("Vec(_)")),
+            },
+        }
+    }
+
+    /// Trainable parameter count.
+    pub fn params(&self) -> usize {
+        match self {
+            Layer::Dense { in_f, out_f, bias } => in_f * out_f + if *bias { *out_f } else { 0 },
+            Layer::Conv2d { in_ch, out_ch, k, bias, .. }
+            | Layer::ConvT2d { in_ch, out_ch, k, bias, .. } => {
+                in_ch * out_ch * k * k + if *bias { *out_ch } else { 0 }
+            }
+            // γ, β per channel — counted against the *input* channels, which
+            // the caller resolves; we charge 0 here and let `Model::params`
+            // add 2·C from the propagated shape.
+            Layer::Norm(_) => 0,
+            _ => 0,
+        }
+    }
+
+    /// MAC count for this layer given its input shape (dense/standard
+    /// counting — the workload-level op count every platform is scored
+    /// against; the *sparse* execution count for ConvT2d comes from
+    /// [`crate::sparse`]).
+    pub fn macs(&self, input: &Shape, index: usize) -> Result<usize, ShapeError> {
+        let out = self.out_shape(input, index)?;
+        Ok(match self {
+            Layer::Dense { in_f, out_f, .. } => in_f * out_f,
+            Layer::Conv2d { in_ch, k, .. } => match out {
+                Shape::Chw(oc, ho, wo) => oc * ho * wo * in_ch * k * k,
+                _ => unreachable!(),
+            },
+            // dense-equivalent count: every output tap over the
+            // zero-inserted input
+            Layer::ConvT2d { in_ch, k, .. } => match out {
+                Shape::Chw(oc, ho, wo) => oc * ho * wo * in_ch * k * k,
+                _ => unreachable!(),
+            },
+            // ~2 MAC-equivalents per element (scale+shift)
+            Layer::Norm(NormKind::None) => 0,
+            Layer::Norm(_) => 2 * input.elements(),
+            Layer::Act(ActKind::None) => 0,
+            Layer::Act(_) => input.elements(),
+            Layer::ResidualAdd { .. } => input.elements(),
+            Layer::Reshape(..) | Layer::Flatten | Layer::ConcatVec(_) => 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_shapes_and_params() {
+        let l = Layer::Dense { in_f: 110, out_f: 6272, bias: true };
+        assert_eq!(l.out_shape(&Shape::Vec(110), 0), Ok(Shape::Vec(6272)));
+        assert_eq!(l.params(), 110 * 6272 + 6272);
+        assert!(l.out_shape(&Shape::Vec(100), 0).is_err());
+    }
+
+    #[test]
+    fn conv_shape_arithmetic() {
+        // 64x64, k4 s2 p1 -> 32x32
+        let l = Layer::Conv2d { in_ch: 3, out_ch: 64, k: 4, s: 2, p: 1, bias: false };
+        assert_eq!(
+            l.out_shape(&Shape::Chw(3, 64, 64), 0),
+            Ok(Shape::Chw(64, 32, 32))
+        );
+    }
+
+    #[test]
+    fn tconv_shape_arithmetic() {
+        // DCGAN stem: 1x1, k4 s1 p0 -> 4x4
+        let l = Layer::ConvT2d { in_ch: 100, out_ch: 512, k: 4, s: 1, p: 0, bias: false };
+        assert_eq!(
+            l.out_shape(&Shape::Chw(100, 1, 1), 0),
+            Ok(Shape::Chw(512, 4, 4))
+        );
+        // upsample: 8x8, k4 s2 p1 -> 16x16
+        let l2 = Layer::ConvT2d { in_ch: 256, out_ch: 128, k: 4, s: 2, p: 1, bias: false };
+        assert_eq!(
+            l2.out_shape(&Shape::Chw(256, 8, 8), 0),
+            Ok(Shape::Chw(128, 16, 16))
+        );
+    }
+
+    #[test]
+    fn conv_tconv_inverse_shapes() {
+        // ConvT2d(k,s,p) inverts Conv2d(k,s,p) shape-wise
+        let conv = Layer::Conv2d { in_ch: 8, out_ch: 16, k: 4, s: 2, p: 1, bias: false };
+        let tconv = Layer::ConvT2d { in_ch: 16, out_ch: 8, k: 4, s: 2, p: 1, bias: false };
+        let x = Shape::Chw(8, 32, 32);
+        let y = conv.out_shape(&x, 0).unwrap();
+        assert_eq!(tconv.out_shape(&y, 1).unwrap(), x);
+    }
+
+    #[test]
+    fn mac_counts() {
+        let l = Layer::Conv2d { in_ch: 3, out_ch: 64, k: 4, s: 2, p: 1, bias: false };
+        // 64·32·32·3·16
+        assert_eq!(l.macs(&Shape::Chw(3, 64, 64), 0).unwrap(), 64 * 32 * 32 * 3 * 16);
+        let d = Layer::Dense { in_f: 100, out_f: 200, bias: true };
+        assert_eq!(d.macs(&Shape::Vec(100), 0).unwrap(), 20_000);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Layer::Reshape(128, 7, 7);
+        assert_eq!(
+            l.out_shape(&Shape::Vec(6272), 0),
+            Ok(Shape::Chw(128, 7, 7))
+        );
+        assert!(matches!(
+            l.out_shape(&Shape::Vec(100), 0),
+            Err(ShapeError::BadReshape { .. })
+        ));
+    }
+
+    #[test]
+    fn concat_extends_vec() {
+        let l = Layer::ConcatVec(10);
+        assert_eq!(l.out_shape(&Shape::Vec(100), 0), Ok(Shape::Vec(110)));
+    }
+}

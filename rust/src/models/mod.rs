@@ -1,0 +1,17 @@
+//! GAN workload IR: layer types, shape propagation, op/param counting, and
+//! the four evaluated models of paper Table 1 (DCGAN, Conditional GAN,
+//! ArtGAN, CycleGAN) plus their discriminators.
+//!
+//! The IR is deliberately *architectural*: it carries shapes and layer
+//! semantics (enough for exact op counts and the sparse-dataflow census),
+//! not weights. The functional path — actual inference with weights — lives
+//! in the JAX layer (`python/compile/models/`) and is executed through
+//! [`crate::runtime`].
+
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::Model;
+pub use layer::{Layer, Shape};
+pub use zoo::{all_generators, artgan, condgan, cyclegan, dcgan};

@@ -1,0 +1,197 @@
+//! Device parameters from the paper (Table 2 + §IV loss budget).
+//!
+//! These are the *inputs* to the whole evaluation — the paper's own
+//! simulator consumes exactly these aggregated numbers, which is why we can
+//! reproduce its architecture-level results without re-running the ANSYS
+//! photonic solvers (DESIGN.md §2).
+
+use crate::util::units::*;
+
+/// Optoelectronic device latency/power parameters (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceParams {
+    /// EO tuning latency (s) — 20 ns [21].
+    pub eo_tuning_latency: f64,
+    /// EO tuning power (W) — 4 µW [21].
+    pub eo_tuning_power: f64,
+    /// TO tuning latency (s) — 4 µs [20].
+    pub to_tuning_latency: f64,
+    /// TO tuning power per free spectral range (W/FSR) — 27.5 mW [20].
+    pub to_tuning_power_per_fsr: f64,
+    /// TO tuning power per FSR with TED thermal-crosstalk cancellation
+    /// (W/FSR) — 0.75 mW (§IV loss list, [23]).
+    pub to_ted_power_per_fsr: f64,
+    /// VCSEL modulation latency (s) — 0.07 ns [9].
+    pub vcsel_latency: f64,
+    /// VCSEL drive power (W) — 1.3 mW [9].
+    pub vcsel_power: f64,
+    /// Photodetector latency (s) — 5.8 ps [9].
+    pub pd_latency: f64,
+    /// Photodetector power (W) — 2.8 mW [9].
+    pub pd_power: f64,
+    /// SOA latency (s) — 0.3 ns [9].
+    pub soa_latency: f64,
+    /// SOA power (W) — 2.2 mW [9].
+    pub soa_power: f64,
+    /// 8-bit DAC conversion latency (s) — 0.29 ns [35].
+    pub dac_latency: f64,
+    /// 8-bit DAC power (W) — 3 mW [35].
+    pub dac_power: f64,
+    /// 8-bit ADC conversion latency (s) — 0.82 ns [36].
+    pub adc_latency: f64,
+    /// 8-bit ADC power (W) — 3.1 mW [36].
+    pub adc_power: f64,
+    /// PCMC switching latency (s): a short optical/electrical pulse (§II.C.7);
+    /// we model 10 ns switch pulses, zero static hold power (non-volatile).
+    pub pcmc_switch_latency: f64,
+    /// PCMC switching pulse energy (J); ~1 pJ-class per published PCM
+    /// couplers [7].
+    pub pcmc_switch_energy: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        DeviceParams {
+            eo_tuning_latency: ns(20.0),
+            eo_tuning_power: uw(4.0),
+            to_tuning_latency: us(4.0),
+            to_tuning_power_per_fsr: mw(27.5),
+            to_ted_power_per_fsr: mw(0.75),
+            vcsel_latency: ns(0.07),
+            vcsel_power: mw(1.3),
+            pd_latency: ps(5.8),
+            pd_power: mw(2.8),
+            soa_latency: ns(0.3),
+            soa_power: mw(2.2),
+            dac_latency: ns(0.29),
+            dac_power: mw(3.0),
+            adc_latency: ns(0.82),
+            adc_power: mw(3.1),
+            pcmc_switch_latency: ns(10.0),
+            pcmc_switch_energy: 1e-12,
+        }
+    }
+}
+
+/// Photonic signal-loss budget parameters (paper §IV).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LossParams {
+    /// Waveguide propagation loss (dB/cm) — 1 dB/cm.
+    pub propagation_db_per_cm: f64,
+    /// Splitter loss (dB) — 0.13 dB [32].
+    pub splitter_db: f64,
+    /// Combiner loss (dB) — 0.9 dB [32].
+    pub combiner_db: f64,
+    /// MR through (pass-by) loss (dB) — 0.02 dB [33].
+    pub mr_through_db: f64,
+    /// MR modulation (drop/imprint) loss (dB) — 0.72 dB [34].
+    pub mr_modulation_db: f64,
+    /// EO tuning loss (dB/cm) — 0.6 dB/cm [21].
+    pub eo_tuning_db_per_cm: f64,
+}
+
+impl Default for LossParams {
+    fn default() -> Self {
+        LossParams {
+            propagation_db_per_cm: 1.0,
+            splitter_db: 0.13,
+            combiner_db: 0.9,
+            mr_through_db: 0.02,
+            mr_modulation_db: 0.72,
+            eo_tuning_db_per_cm: 0.6,
+        }
+    }
+}
+
+/// System-level photonic constants used across the architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemParams {
+    /// Photodetector sensitivity (dBm). −20 dBm is typical of the
+    /// RecLight-class [9] designs this paper builds on.
+    pub pd_sensitivity_dbm: f64,
+    /// Maximum MRs per waveguide for error-free non-coherent operation
+    /// (paper §IV device-level analysis): 36.
+    pub max_mrs_per_waveguide: usize,
+    /// Bit precision of activations/weights (paper: 8-bit quantization).
+    pub precision_bits: u32,
+    /// Wall-plug efficiency of the laser source (fraction of electrical
+    /// power that becomes optical output); 0.2 is typical for on-chip
+    /// VCSEL-class sources.
+    pub laser_wall_plug_efficiency: f64,
+    /// Per-unit waveguide length charged for propagation loss (cm); the MR
+    /// bank of a unit spans millimetres.
+    pub unit_waveguide_length_cm: f64,
+    /// Accelerator total power cap (W) used in the paper's DSE: 100 W.
+    pub power_cap_w: f64,
+}
+
+impl Default for SystemParams {
+    fn default() -> Self {
+        SystemParams {
+            pd_sensitivity_dbm: -20.0,
+            max_mrs_per_waveguide: 36,
+            precision_bits: 8,
+            laser_wall_plug_efficiency: 0.2,
+            unit_waveguide_length_cm: 0.3,
+            power_cap_w: 100.0,
+        }
+    }
+}
+
+/// Bundle of all physical parameters; one of these threads through the
+/// architecture and simulator so experiments can perturb device assumptions
+/// (used by the ablation benches).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhotonicParams {
+    pub device: DeviceParams,
+    pub loss: LossParams,
+    pub system: SystemParams,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// relative-approx equality for unit-converted constants
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-12 * b.abs().max(1.0) + f64::EPSILON * b.abs()
+    }
+
+    #[test]
+    fn table2_values_match_paper() {
+        let d = DeviceParams::default();
+        assert!(approx(d.eo_tuning_latency, 20e-9));
+        assert!(approx(d.eo_tuning_power, 4e-6));
+        assert!(approx(d.to_tuning_latency, 4e-6));
+        assert!(approx(d.to_tuning_power_per_fsr, 27.5e-3));
+        assert!(approx(d.vcsel_latency, 0.07e-9));
+        assert!(approx(d.vcsel_power, 1.3e-3));
+        assert!(approx(d.pd_latency, 5.8e-12));
+        assert!(approx(d.pd_power, 2.8e-3));
+        assert!(approx(d.soa_latency, 0.3e-9));
+        assert!(approx(d.soa_power, 2.2e-3));
+        assert!(approx(d.dac_latency, 0.29e-9));
+        assert!(approx(d.dac_power, 3.0e-3));
+        assert!(approx(d.adc_latency, 0.82e-9));
+        assert!(approx(d.adc_power, 3.1e-3));
+    }
+
+    #[test]
+    fn loss_budget_matches_paper() {
+        let l = LossParams::default();
+        assert_eq!(l.propagation_db_per_cm, 1.0);
+        assert_eq!(l.splitter_db, 0.13);
+        assert_eq!(l.combiner_db, 0.9);
+        assert_eq!(l.mr_through_db, 0.02);
+        assert_eq!(l.mr_modulation_db, 0.72);
+        assert_eq!(l.eo_tuning_db_per_cm, 0.6);
+    }
+
+    #[test]
+    fn system_constants() {
+        let s = SystemParams::default();
+        assert_eq!(s.max_mrs_per_waveguide, 36);
+        assert_eq!(s.precision_bits, 8);
+        assert_eq!(s.power_cap_w, 100.0);
+    }
+}

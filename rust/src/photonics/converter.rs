@@ -1,0 +1,159 @@
+//! DAC / ADC converter models (paper §II.C.6, Table 2).
+//!
+//! Converters are *the* electronic bottleneck of silicon-photonic
+//! accelerators: every value entering the optical domain crosses a DAC
+//! (tuning an MR / driving a VCSEL) and every value leaving crosses an ADC.
+//! PhotoGAN's power-gating optimization shares one DAC array between the
+//! dense and convolution blocks (§III.C.3) precisely because of this cost.
+
+use super::constants::DeviceParams;
+
+/// 8-bit (configurable) DAC.
+#[derive(Debug, Clone)]
+pub struct Dac {
+    pub params: DeviceParams,
+    pub bits: u32,
+}
+
+impl Dac {
+    pub fn new(params: DeviceParams, bits: u32) -> Self {
+        Dac { params, bits }
+    }
+
+    pub fn latency(&self) -> f64 {
+        self.params.dac_latency
+    }
+
+    pub fn power(&self) -> f64 {
+        self.params.dac_power
+    }
+
+    /// Energy per conversion at the given symbol period (J).
+    pub fn conversion_energy(&self, symbol_time: f64) -> f64 {
+        self.power() * symbol_time.max(self.latency())
+    }
+
+    /// Quantize a normalized value to the DAC grid.
+    pub fn quantize(&self, x: f64) -> f64 {
+        let levels = ((1u64 << self.bits) - 1) as f64;
+        (x.clamp(0.0, 1.0) * levels).round() / levels
+    }
+}
+
+/// 8-bit (configurable) ADC.
+#[derive(Debug, Clone)]
+pub struct Adc {
+    pub params: DeviceParams,
+    pub bits: u32,
+}
+
+impl Adc {
+    pub fn new(params: DeviceParams, bits: u32) -> Self {
+        Adc { params, bits }
+    }
+
+    pub fn latency(&self) -> f64 {
+        self.params.adc_latency
+    }
+
+    pub fn power(&self) -> f64 {
+        self.params.adc_power
+    }
+
+    pub fn conversion_energy(&self, symbol_time: f64) -> f64 {
+        self.power() * symbol_time.max(self.latency())
+    }
+
+    /// Digitize a value in `[lo, hi]` to the ADC grid.
+    pub fn sample(&self, x: f64, lo: f64, hi: f64) -> f64 {
+        assert!(hi > lo);
+        let levels = ((1u64 << self.bits) - 1) as f64;
+        let t = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+        lo + (t * levels).round() / levels * (hi - lo)
+    }
+}
+
+/// A DAC array shared between blocks (power-gating optimization §III.C.3):
+/// at most one owner drives it at a time.
+#[derive(Debug, Clone)]
+pub struct SharedDacArray {
+    pub dac: Dac,
+    pub lanes: usize,
+    /// Current owner block id (None = idle/gated).
+    pub owner: Option<usize>,
+}
+
+impl SharedDacArray {
+    pub fn new(dac: Dac, lanes: usize) -> Self {
+        SharedDacArray { dac, lanes, owner: None }
+    }
+
+    /// Acquire the array for a block; returns false if another block holds
+    /// it (callers must serialize — this is what power gating enforces).
+    pub fn acquire(&mut self, block_id: usize) -> bool {
+        match self.owner {
+            None => {
+                self.owner = Some(block_id);
+                true
+            }
+            Some(b) => b == block_id,
+        }
+    }
+
+    pub fn release(&mut self, block_id: usize) {
+        if self.owner == Some(block_id) {
+            self.owner = None;
+        }
+    }
+
+    /// Array power when active (W); zero when gated.
+    pub fn power(&self) -> f64 {
+        if self.owner.is_some() {
+            self.dac.power() * self.lanes as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn table2_values() {
+        let d = Dac::new(DeviceParams::default(), 8);
+        let a = Adc::new(DeviceParams::default(), 8);
+        assert!((d.latency() - 0.29e-9).abs() < 1e-15);
+        assert!((d.power() - 3.0e-3).abs() < 1e-12);
+        assert!((a.latency() - 0.82e-9).abs() < 1e-15);
+        assert!((a.power() - 3.1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantization_error_bounds() {
+        let d = Dac::new(DeviceParams::default(), 8);
+        let a = Adc::new(DeviceParams::default(), 8);
+        check("converter quantization", 256, move |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((d.quantize(x) - x).abs() <= 0.5 / 255.0 + 1e-12);
+            let y = g.f64_in(-3.0, 3.0);
+            assert!((a.sample(y, -3.0, 3.0) - y).abs() <= 0.5 * 6.0 / 255.0 + 1e-12);
+        });
+    }
+
+    #[test]
+    fn shared_array_mutual_exclusion() {
+        let mut arr = SharedDacArray::new(Dac::new(DeviceParams::default(), 8), 16);
+        assert_eq!(arr.power(), 0.0); // gated when idle
+        assert!(arr.acquire(0));
+        assert!(!arr.acquire(1), "second block must not co-own the DAC array");
+        assert!(arr.acquire(0), "re-acquire by owner is idempotent");
+        assert!((arr.power() - 16.0 * 3.0e-3).abs() < 1e-12);
+        arr.release(1); // non-owner release is a no-op
+        assert!(arr.owner.is_some());
+        arr.release(0);
+        assert!(arr.acquire(1));
+    }
+}

@@ -1,0 +1,77 @@
+//! Laser power budget — paper Eq. (2):
+//!
+//! `P_laser − S_detector ≥ P_photoloss + 10·log10(N_λ)`
+//!
+//! The laser must deliver, per wavelength, enough power that after the total
+//! link loss (`P_photoloss`, dB) and the 1/N_λ comb split the photodetector
+//! still receives its sensitivity floor (`S_detector`, dBm).
+
+use super::constants::SystemParams;
+use crate::util::units::dbm_to_watts;
+
+/// Minimum laser power (dBm) for a link with total optical loss
+/// `photoloss_db` feeding `n_wavelengths` WDM channels, detected by a PD of
+/// sensitivity `pd_sensitivity_dbm` (Eq. 2, with equality).
+pub fn laser_power_dbm(pd_sensitivity_dbm: f64, photoloss_db: f64, n_wavelengths: usize) -> f64 {
+    assert!(n_wavelengths >= 1);
+    pd_sensitivity_dbm + photoloss_db + 10.0 * (n_wavelengths as f64).log10()
+}
+
+/// Electrical (wall-plug) power for that laser (W).
+pub fn laser_wall_plug_watts(
+    sys: &SystemParams,
+    photoloss_db: f64,
+    n_wavelengths: usize,
+) -> f64 {
+    let optical_w = dbm_to_watts(laser_power_dbm(
+        sys.pd_sensitivity_dbm,
+        photoloss_db,
+        n_wavelengths,
+    ));
+    optical_w / sys.laser_wall_plug_efficiency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn eq2_known_point() {
+        // S=-20 dBm, loss=4.73 dB, N=16 -> P = -20 + 4.73 + 12.04 = -3.23 dBm
+        let p = laser_power_dbm(-20.0, 4.73, 16);
+        assert!((p - (-3.227)).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn single_wavelength_has_no_split_penalty() {
+        assert_eq!(laser_power_dbm(-20.0, 3.0, 1), -17.0);
+    }
+
+    #[test]
+    fn power_monotone_in_loss_and_channels() {
+        check("Eq2 monotonicity", 128, |g| {
+            let loss = g.f64_in(0.0, 20.0);
+            let extra = g.f64_in(0.01, 5.0);
+            let n = g.usize_in(1, 36);
+            let p0 = laser_power_dbm(-20.0, loss, n);
+            assert!(laser_power_dbm(-20.0, loss + extra, n) > p0);
+            assert!(laser_power_dbm(-20.0, loss, n + 1) > p0);
+        });
+    }
+
+    #[test]
+    fn doubling_channels_costs_3db() {
+        let p1 = laser_power_dbm(-20.0, 5.0, 8);
+        let p2 = laser_power_dbm(-20.0, 5.0, 16);
+        assert!((p2 - p1 - 10.0 * 2f64.log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wall_plug_includes_efficiency() {
+        let sys = SystemParams::default();
+        let w = laser_wall_plug_watts(&sys, 4.73, 16);
+        let optical = dbm_to_watts(laser_power_dbm(-20.0, 4.73, 16));
+        assert!((w - optical / 0.2).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,31 @@
+//! Opto-electronic device models — the substrate the paper's architectural
+//! simulator is built on (paper §II.C/§II.D, Table 2 and the §IV loss
+//! budget).
+//!
+//! Every device exposes two things the architecture layer consumes:
+//! a **latency** contribution (seconds) and a **power/energy** contribution
+//! (watts / joules), plus whatever device-specific physics the paper's
+//! design decisions rest on (MR resonance & tuning split, laser-power
+//! budget Eq. 2, the 36-MRs-per-waveguide crosstalk bound, PCMC non-volatile
+//! routing).
+//!
+//! Internal unit convention: seconds / watts / joules / hertz / meters
+//! (`util::units` converts from the paper's ns/µs/mW/dBm forms).
+
+pub mod constants;
+pub mod converter;
+pub mod crosstalk;
+pub mod laser;
+pub mod mr;
+pub mod pcmc;
+pub mod photodetector;
+pub mod soa;
+pub mod tuning;
+pub mod vcsel;
+pub mod waveguide;
+
+pub use constants::DeviceParams;
+pub use laser::laser_power_dbm;
+pub use mr::Microring;
+pub use tuning::{HybridTuner, TuningMode};
+pub use waveguide::LossBudget;

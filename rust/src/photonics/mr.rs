@@ -1,0 +1,173 @@
+//! Microring resonator (MR) device model.
+//!
+//! MRs are the workhorse of the non-coherent architecture: each MR is tuned
+//! to one WDM wavelength and imprints an activation or weight value onto the
+//! amplitude of the optical signal at that wavelength (paper §II.C.3,
+//! §II.D). The resonant wavelength is
+//!
+//! `λ_MR = (2π R / m) · n_eff`
+//!
+//! and a parameter is imprinted by detuning the ring (Δλ_MR), changing the
+//! transmission at the carrier wavelength in a predictable (calibrated) way.
+//!
+//! This model captures what the architecture layer needs:
+//! - the resonance equation (for sanity/crosstalk analysis),
+//! - a Lorentzian through-port transmission (for modulation-depth and
+//!   quantization-error analysis),
+//! - the wavelength shift required to imprint an 8-bit value, which decides
+//!   EO vs TO tuning (see [`crate::photonics::tuning`]).
+
+/// Geometry + optical constants for one microring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Microring {
+    /// Ring radius (m). ~5–10 µm typical for SOI rings.
+    pub radius_m: f64,
+    /// Order of resonance `m` in the resonance equation.
+    pub resonance_order: u32,
+    /// Effective refractive index of the guided mode.
+    pub n_eff: f64,
+    /// Group index (sets the FSR).
+    pub n_group: f64,
+    /// Loaded quality factor Q (sets linewidth / modulation sensitivity).
+    pub q_factor: f64,
+}
+
+impl Default for Microring {
+    fn default() -> Self {
+        // Representative SOI microring (CrossLight/RecLight-class [9][24]):
+        // R = 7 µm, m chosen so λ ≈ 1550 nm, n_eff ≈ 2.43, n_g ≈ 4.2.
+        // Q = 50k (high-Q add-drop rings) — the loaded Q the paper's
+        // 36-MRs-per-waveguide guideline physically requires; see
+        // `crate::photonics::crosstalk` for the 2nd-order filter check.
+        Microring {
+            radius_m: 7e-6,
+            resonance_order: 69,
+            n_eff: 2.43,
+            n_group: 4.2,
+            q_factor: 50_000.0,
+        }
+    }
+}
+
+impl Microring {
+    /// Resonant wavelength λ_MR = 2πR·n_eff / m (meters).
+    pub fn resonant_wavelength(&self) -> f64 {
+        2.0 * std::f64::consts::PI * self.radius_m * self.n_eff / self.resonance_order as f64
+    }
+
+    /// Free spectral range Δλ_FSR = λ² / (n_g · 2πR) (meters).
+    pub fn fsr(&self) -> f64 {
+        let lambda = self.resonant_wavelength();
+        lambda * lambda / (self.n_group * 2.0 * std::f64::consts::PI * self.radius_m)
+    }
+
+    /// Full-width-half-max linewidth δλ = λ / Q (meters).
+    pub fn linewidth(&self) -> f64 {
+        self.resonant_wavelength() / self.q_factor
+    }
+
+    /// Through-port power transmission at detuning `delta_lambda` from
+    /// resonance (Lorentzian notch, extinction limited only by Q here).
+    ///
+    /// T(Δλ) = Δλ² / (Δλ² + (δλ/2)²)
+    pub fn through_transmission(&self, delta_lambda: f64) -> f64 {
+        let hwhm = self.linewidth() / 2.0;
+        let d2 = delta_lambda * delta_lambda;
+        d2 / (d2 + hwhm * hwhm)
+    }
+
+    /// Wavelength detuning required to set the through-port transmission to
+    /// `t` ∈ [0, 1) — the inverse of [`Self::through_transmission`]. This is
+    /// the Δλ_MR the tuning circuit must realise to imprint a normalized
+    /// parameter value `t`.
+    pub fn detuning_for_transmission(&self, t: f64) -> f64 {
+        assert!((0.0..1.0).contains(&t), "transmission must be in [0,1): {t}");
+        let hwhm = self.linewidth() / 2.0;
+        hwhm * (t / (1.0 - t)).sqrt()
+    }
+
+    /// Quantize a normalized parameter in [0,1] to `bits` precision — the
+    /// DAC-limited transmission levels an MR can realise.
+    pub fn quantize(&self, value: f64, bits: u32) -> f64 {
+        let levels = ((1u64 << bits) - 1) as f64;
+        (value.clamp(0.0, 1.0) * levels).round() / levels
+    }
+
+    /// Worst-case quantization error at `bits` precision.
+    pub fn max_quantization_error(&self, bits: u32) -> f64 {
+        0.5 / ((1u64 << bits) - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn resonance_near_c_band() {
+        let mr = Microring::default();
+        let lambda = mr.resonant_wavelength();
+        // 2π·7µm·2.43/69 ≈ 1.549 µm — C band.
+        assert!(
+            (1.5e-6..1.6e-6).contains(&lambda),
+            "λ={lambda} not in C band"
+        );
+    }
+
+    #[test]
+    fn fsr_and_linewidth_scales() {
+        let mr = Microring::default();
+        // FSR ≈ λ²/(n_g·2πR) ≈ 13 nm for these parameters.
+        let fsr = mr.fsr();
+        assert!((10e-9..16e-9).contains(&fsr), "FSR={fsr}");
+        // δλ = λ/Q ≈ 0.031 nm at Q = 50k
+        let lw = mr.linewidth();
+        assert!((2e-11..5e-11).contains(&lw), "linewidth={lw}");
+        // a WDM comb of 36 channels must fit in one FSR
+        assert!(fsr / lw > 36.0, "36 channels must fit in one FSR");
+    }
+
+    #[test]
+    fn transmission_on_resonance_is_zero_off_is_one() {
+        let mr = Microring::default();
+        assert_eq!(mr.through_transmission(0.0), 0.0);
+        assert!(mr.through_transmission(mr.fsr() / 2.0) > 0.999);
+    }
+
+    #[test]
+    fn detuning_inverts_transmission() {
+        let mr = Microring::default();
+        check("detuning_for_transmission inverse", 128, move |g| {
+            let t = g.f64_in(0.0, 0.999);
+            let d = mr.detuning_for_transmission(t);
+            let back = mr.through_transmission(d);
+            assert!((back - t).abs() < 1e-9, "t={t} back={back}");
+        });
+    }
+
+    #[test]
+    fn transmission_monotone_in_detuning() {
+        let mr = Microring::default();
+        check("transmission monotone", 128, move |g| {
+            let a = g.f64_in(0.0, 1e-9);
+            let b = g.f64_in(0.0, 1e-9);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            assert!(mr.through_transmission(lo) <= mr.through_transmission(hi) + 1e-15);
+        });
+    }
+
+    #[test]
+    fn quantization_8bit_error_bound() {
+        let mr = Microring::default();
+        let max_err = mr.max_quantization_error(8);
+        check("8-bit quantization error", 256, move |g| {
+            let v = g.f64_in(0.0, 1.0);
+            let q = mr.quantize(v, 8);
+            assert!((q - v).abs() <= max_err + 1e-12);
+            // quantized values hit exact 1/255 grid points
+            let grid = (q * 255.0).round() / 255.0;
+            assert!((grid - q).abs() < 1e-12);
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Phase-change-material coupler (PCMC) routing model (paper §II.C.7, [7]).
+//!
+//! PCMCs switch between amorphous and crystalline states with distinct
+//! optical properties, routing signals between blocks **non-volatilely**:
+//! holding a route costs zero static power; only *changing* a route costs a
+//! short optical/electrical pulse. This is what lets PhotoGAN chain
+//! conv → norm → activation entirely in the optical domain without
+//! intermediate O/E conversions, and reconfigure per-layer dataflows
+//! cheaply.
+
+use super::constants::DeviceParams;
+
+/// PCM state of one coupler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcmState {
+    /// Amorphous: low-loss pass-through (route "bar").
+    Amorphous,
+    /// Crystalline: coupling/drop (route "cross").
+    Crystalline,
+}
+
+/// One 1×2 PCMC routing element.
+#[derive(Debug, Clone)]
+pub struct Pcmc {
+    pub params: DeviceParams,
+    pub state: PcmState,
+    /// Number of state transitions performed (endurance tracking).
+    pub switch_count: u64,
+    /// Insertion loss per pass (dB); published PCM couplers ≈ 0.5 dB.
+    pub insertion_loss_db: f64,
+}
+
+impl Pcmc {
+    pub fn new(params: DeviceParams) -> Self {
+        Pcmc {
+            params,
+            state: PcmState::Amorphous,
+            switch_count: 0,
+            insertion_loss_db: 0.5,
+        }
+    }
+
+    /// Switch to `target`; returns (latency s, energy J) — both zero if the
+    /// coupler is already in the target state (non-volatility).
+    pub fn switch_to(&mut self, target: PcmState) -> (f64, f64) {
+        if self.state == target {
+            return (0.0, 0.0);
+        }
+        self.state = target;
+        self.switch_count += 1;
+        (self.params.pcmc_switch_latency, self.params.pcmc_switch_energy)
+    }
+
+    /// Static hold power — the whole point of PCM routing.
+    pub fn hold_power(&self) -> f64 {
+        0.0
+    }
+}
+
+/// A routing fabric of PCMCs connecting block outputs to block inputs.
+///
+/// Modeled as a set of named directed routes; establishing a route switches
+/// the couplers along its path.
+#[derive(Debug, Clone)]
+pub struct PcmcFabric {
+    pub couplers: Vec<Pcmc>,
+    /// route id -> (coupler index, required state) along the path
+    routes: Vec<Vec<(usize, PcmState)>>,
+}
+
+impl PcmcFabric {
+    /// Fabric with `n_couplers` couplers and a route table.
+    pub fn new(params: &DeviceParams, n_couplers: usize) -> Self {
+        PcmcFabric {
+            couplers: (0..n_couplers).map(|_| Pcmc::new(params.clone())).collect(),
+            routes: Vec::new(),
+        }
+    }
+
+    /// Register a route as a list of (coupler, state) requirements; returns
+    /// the route id.
+    pub fn add_route(&mut self, path: Vec<(usize, PcmState)>) -> usize {
+        for &(c, _) in &path {
+            assert!(c < self.couplers.len(), "coupler {c} out of range");
+        }
+        self.routes.push(path);
+        self.routes.len() - 1
+    }
+
+    /// Establish a route: switch every coupler on the path into its required
+    /// state. Returns (latency, energy) — couplers switch in parallel so
+    /// latency is the max, energy the sum. Re-establishing the current
+    /// route is free (non-volatile hold).
+    pub fn establish(&mut self, route: usize) -> (f64, f64) {
+        let path = self.routes[route].clone();
+        let mut lat: f64 = 0.0;
+        let mut energy = 0.0;
+        for (c, s) in path {
+            let (l, e) = self.couplers[c].switch_to(s);
+            lat = lat.max(l);
+            energy += e;
+        }
+        (lat, energy)
+    }
+
+    /// Optical insertion loss along a route (dB).
+    pub fn route_loss_db(&self, route: usize) -> f64 {
+        self.routes[route]
+            .iter()
+            .map(|&(c, _)| self.couplers[c].insertion_loss_db)
+            .sum()
+    }
+
+    /// Total switching events so far (endurance budget check).
+    pub fn total_switches(&self) -> u64 {
+        self.couplers.iter().map(|c| c.switch_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switching_is_idempotent_and_nonvolatile() {
+        let mut p = Pcmc::new(DeviceParams::default());
+        assert_eq!(p.hold_power(), 0.0);
+        let (l1, e1) = p.switch_to(PcmState::Crystalline);
+        assert!(l1 > 0.0 && e1 > 0.0);
+        let (l2, e2) = p.switch_to(PcmState::Crystalline);
+        assert_eq!((l2, e2), (0.0, 0.0), "holding a state is free");
+        assert_eq!(p.switch_count, 1);
+    }
+
+    #[test]
+    fn fabric_routes_switch_in_parallel() {
+        let mut f = PcmcFabric::new(&DeviceParams::default(), 4);
+        let r0 = f.add_route(vec![(0, PcmState::Crystalline), (1, PcmState::Crystalline)]);
+        let r1 = f.add_route(vec![(0, PcmState::Amorphous), (2, PcmState::Crystalline)]);
+        let (lat, energy) = f.establish(r0);
+        assert_eq!(lat, 10e-9, "parallel switch latency = single switch");
+        assert!((energy - 2e-12).abs() < 1e-18, "two couplers switched");
+        // re-establishing is free
+        assert_eq!(f.establish(r0), (0.0, 0.0));
+        // switching to r1 flips coupler 0 back and sets coupler 2
+        let (lat1, e1) = f.establish(r1);
+        assert_eq!(lat1, 10e-9);
+        assert!((e1 - 2e-12).abs() < 1e-18);
+        assert_eq!(f.total_switches(), 4);
+    }
+
+    #[test]
+    fn route_loss_accumulates() {
+        let mut f = PcmcFabric::new(&DeviceParams::default(), 3);
+        let r = f.add_route(vec![
+            (0, PcmState::Amorphous),
+            (1, PcmState::Amorphous),
+            (2, PcmState::Amorphous),
+        ]);
+        assert!((f.route_loss_db(r) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_route_panics() {
+        let mut f = PcmcFabric::new(&DeviceParams::default(), 1);
+        f.add_route(vec![(5, PcmState::Amorphous)]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Photodetector (PD) and balanced photodetector (BPD) models (paper
+//! §II.C.4, §III.B.1).
+//!
+//! PDs terminate every optical dot-product: the WDM-parallel modulated
+//! signals accumulate photocurrent, realizing the `Σ aᵢwᵢ` reduction. BPDs
+//! extend this with two arms on the same waveguide — one for positive and
+//! one for negative polarities — producing the signed net difference, which
+//! is how PhotoGAN represents signed weights/activations without offset
+//! encoding.
+
+use super::constants::DeviceParams;
+use crate::util::units::dbm_to_watts;
+
+/// Simple photodetector.
+#[derive(Debug, Clone)]
+pub struct Photodetector {
+    pub params: DeviceParams,
+    /// Sensitivity (dBm): minimum detectable per-channel optical power.
+    pub sensitivity_dbm: f64,
+}
+
+impl Photodetector {
+    pub fn new(params: DeviceParams, sensitivity_dbm: f64) -> Self {
+        Photodetector { params, sensitivity_dbm }
+    }
+
+    /// Conversion latency (s).
+    pub fn latency(&self) -> f64 {
+        self.params.pd_latency
+    }
+
+    /// Receiver power while active (W).
+    pub fn power(&self) -> f64 {
+        self.params.pd_power
+    }
+
+    /// Minimum detectable optical power (W).
+    pub fn sensitivity_watts(&self) -> f64 {
+        dbm_to_watts(self.sensitivity_dbm)
+    }
+
+    /// Can a signal at `optical_power_w` be detected error-free?
+    pub fn detects(&self, optical_power_w: f64) -> bool {
+        optical_power_w >= self.sensitivity_watts()
+    }
+
+    /// Accumulate a dot product from per-wavelength products — the physical
+    /// summation a PD performs (used by the functional micro-model tests).
+    pub fn accumulate(&self, products: &[f64]) -> f64 {
+        products.iter().sum()
+    }
+}
+
+/// Balanced photodetector: signed accumulation over a positive and a
+/// negative arm.
+#[derive(Debug, Clone)]
+pub struct BalancedPd {
+    pub pd: Photodetector,
+}
+
+impl BalancedPd {
+    pub fn new(params: DeviceParams, sensitivity_dbm: f64) -> Self {
+        BalancedPd { pd: Photodetector::new(params, sensitivity_dbm) }
+    }
+
+    /// Latency: the two arms detect concurrently, the analog subtraction is
+    /// part of the same transimpedance stage.
+    pub fn latency(&self) -> f64 {
+        self.pd.latency()
+    }
+
+    /// Two detector arms.
+    pub fn power(&self) -> f64 {
+        2.0 * self.pd.power()
+    }
+
+    /// Signed accumulation: products are routed to the positive or negative
+    /// arm by sign; the BPD reports (sum of +arm) − (sum of −arm).
+    pub fn accumulate_signed(&self, products: &[f64]) -> f64 {
+        let pos: f64 = products.iter().filter(|&&p| p >= 0.0).sum();
+        let neg: f64 = products.iter().filter(|&&p| p < 0.0).map(|p| -p).sum();
+        pos - neg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn table2_values() {
+        let pd = Photodetector::new(DeviceParams::default(), -20.0);
+        assert!((pd.latency() - 5.8e-12).abs() < 1e-18);
+        assert!((pd.power() - 2.8e-3).abs() < 1e-12);
+        assert!((pd.sensitivity_watts() - 1e-5).abs() < 1e-12); // -20 dBm = 10 µW
+    }
+
+    #[test]
+    fn detection_threshold() {
+        let pd = Photodetector::new(DeviceParams::default(), -20.0);
+        assert!(pd.detects(1e-4));
+        assert!(!pd.detects(1e-6));
+    }
+
+    #[test]
+    fn bpd_equals_plain_sum() {
+        let bpd = BalancedPd::new(DeviceParams::default(), -20.0);
+        check("BPD signed accumulation == arithmetic sum", 256, move |g| {
+            let n = g.usize_in(1, 64);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let expect: f64 = xs.iter().sum();
+            let got = bpd.accumulate_signed(&xs);
+            assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+        });
+    }
+
+    #[test]
+    fn bpd_power_is_two_arms() {
+        let bpd = BalancedPd::new(DeviceParams::default(), -20.0);
+        assert_eq!(bpd.power(), 2.0 * 2.8e-3);
+    }
+}

@@ -1,0 +1,145 @@
+//! Semiconductor optical amplifier (SOA) activation model (paper §III.B.4,
+//! Fig. 8).
+//!
+//! SOAs implement non-linearities in the optical domain [26]. PhotoGAN's
+//! Leaky-ReLU unit: a PD + comparator determines the input sign and drives a
+//! PCMC switch that routes the signal either through an SOA with gain ≈ 1
+//! (positive branch) or an SOA with gain `a` (negative branch):
+//!
+//! `f(x) = x        if x > 0`
+//! `f(x) = a·x      if x ≤ 0`
+
+use super::constants::DeviceParams;
+
+/// One SOA with a configured (saturable) gain.
+#[derive(Debug, Clone)]
+pub struct Soa {
+    pub params: DeviceParams,
+    /// Linear field gain applied to the signal amplitude.
+    pub gain: f64,
+    /// Saturation output level (normalized); outputs are soft-limited here.
+    pub saturation: f64,
+}
+
+impl Soa {
+    pub fn new(params: DeviceParams, gain: f64) -> Self {
+        Soa { params, gain, saturation: f64::INFINITY }
+    }
+
+    /// With a finite saturation level (models the `Tanh`-like compressive
+    /// response used for Tanh/Sigmoid activations [26]).
+    pub fn with_saturation(mut self, sat: f64) -> Self {
+        self.saturation = sat;
+        self
+    }
+
+    pub fn latency(&self) -> f64 {
+        self.params.soa_latency
+    }
+
+    pub fn power(&self) -> f64 {
+        self.params.soa_power
+    }
+
+    /// Amplify a (signed, normalized) value.
+    pub fn amplify(&self, x: f64) -> f64 {
+        let y = self.gain * x;
+        if self.saturation.is_finite() {
+            // smooth tanh-style compression toward ±saturation
+            self.saturation * (y / self.saturation).tanh()
+        } else {
+            y
+        }
+    }
+}
+
+/// The optical Leaky-ReLU unit of Fig. 8: comparator + PCMC route +
+/// two SOAs.
+#[derive(Debug, Clone)]
+pub struct LeakyReluUnit {
+    pub positive: Soa,
+    pub negative: Soa,
+    pub params: DeviceParams,
+    /// Comparator decision latency (s); sub-ns CML comparators.
+    pub comparator_latency: f64,
+    /// Comparator power (W).
+    pub comparator_power: f64,
+}
+
+impl LeakyReluUnit {
+    /// `alpha` is the leak slope `a` of Eq. (1).
+    pub fn new(params: DeviceParams, alpha: f64) -> Self {
+        LeakyReluUnit {
+            positive: Soa::new(params.clone(), 1.0),
+            negative: Soa::new(params.clone(), alpha),
+            comparator_latency: 0.1e-9,
+            comparator_power: 0.5e-3,
+            params,
+        }
+    }
+
+    /// Functional response.
+    pub fn apply(&self, x: f64) -> f64 {
+        if x > 0.0 {
+            self.positive.amplify(x)
+        } else {
+            self.negative.amplify(x)
+        }
+    }
+
+    /// Latency through the unit: PD detect + comparator + PCMC switch + SOA.
+    pub fn latency(&self) -> f64 {
+        self.params.pd_latency
+            + self.comparator_latency
+            + self.params.pcmc_switch_latency
+            + self.params.soa_latency
+    }
+
+    /// Active power: PD + comparator + one SOA branch (only the routed
+    /// branch is driven).
+    pub fn power(&self) -> f64 {
+        self.params.pd_power + self.comparator_power + self.positive.power()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn table2_values() {
+        let s = Soa::new(DeviceParams::default(), 1.0);
+        assert_eq!(s.latency(), 0.3e-9);
+        assert_eq!(s.power(), 2.2e-3);
+    }
+
+    #[test]
+    fn leaky_relu_matches_eq1() {
+        let unit = LeakyReluUnit::new(DeviceParams::default(), 0.2);
+        check("leaky relu", 256, move |g| {
+            let x = g.f64_in(-2.0, 2.0);
+            let y = unit.apply(x);
+            let expect = if x > 0.0 { x } else { 0.2 * x };
+            assert!((y - expect).abs() < 1e-12, "x={x} y={y}");
+        });
+    }
+
+    #[test]
+    fn saturating_soa_is_bounded_and_odd() {
+        let s = Soa::new(DeviceParams::default(), 3.0).with_saturation(1.0);
+        check("soa saturation", 128, move |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            let y = s.amplify(x);
+            assert!(y.abs() <= 1.0 + 1e-12);
+            assert!((s.amplify(-x) + y).abs() < 1e-12, "odd symmetry");
+        });
+    }
+
+    #[test]
+    fn unit_latency_is_sum_of_stages() {
+        let unit = LeakyReluUnit::new(DeviceParams::default(), 0.1);
+        let expect = 5.8e-12 + 0.1e-9 + 10e-9 + 0.3e-9;
+        assert!((unit.latency() - expect).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,129 @@
+//! Vertical-cavity surface-emitting laser (VCSEL) model (paper §II.C.1,
+//! §II.D).
+//!
+//! VCSELs play two roles in PhotoGAN:
+//! 1. **Comb sources** feeding the MR bank rows — one VCSEL array per
+//!    dense/conv block, *shared* across that block's units (the paper's
+//!    "VCSEL reuse strategy", §III) to cut laser power and inter-channel
+//!    crosstalk.
+//! 2. **Coherent-summation sources** for bias addition: phase-locked
+//!    VCSELs [22] at a common λ₀ whose fields interfere constructively so
+//!    amplitudes add in the optical domain (Fig. 3b).
+
+use super::constants::DeviceParams;
+
+/// One VCSEL channel.
+#[derive(Debug, Clone)]
+pub struct Vcsel {
+    pub params: DeviceParams,
+    /// Emission wavelength (m).
+    pub wavelength_m: f64,
+    /// Whether this VCSEL participates in a phase-locked array (needed for
+    /// coherent summation; adds locking overhead power).
+    pub phase_locked: bool,
+}
+
+/// Phase-locking power overhead per locked VCSEL (W). Talbot-cavity
+/// injection locking [22] costs a small fraction of drive power.
+const PHASE_LOCK_OVERHEAD_W: f64 = 0.1e-3;
+
+impl Vcsel {
+    pub fn new(params: DeviceParams, wavelength_m: f64) -> Self {
+        Vcsel { params, wavelength_m, phase_locked: false }
+    }
+
+    pub fn phase_locked(mut self) -> Self {
+        self.phase_locked = true;
+        self
+    }
+
+    /// Modulation latency for imprinting a value via the analog bias (s).
+    pub fn modulation_latency(&self) -> f64 {
+        self.params.vcsel_latency
+    }
+
+    /// Electrical drive power while lasing (W).
+    pub fn drive_power(&self) -> f64 {
+        self.params.vcsel_power
+            + if self.phase_locked { PHASE_LOCK_OVERHEAD_W } else { 0.0 }
+    }
+
+    /// Energy to emit one modulated symbol of duration `symbol_time` (J).
+    pub fn symbol_energy(&self, symbol_time: f64) -> f64 {
+        self.drive_power() * symbol_time.max(self.modulation_latency())
+    }
+}
+
+/// A bank-row VCSEL array shared across the units of a block (§III).
+#[derive(Debug, Clone)]
+pub struct VcselArray {
+    pub lanes: Vec<Vcsel>,
+}
+
+impl VcselArray {
+    /// `n_lanes` WDM channels spread across one FSR starting at `base_m`.
+    pub fn comb(params: &DeviceParams, base_m: f64, fsr_m: f64, n_lanes: usize) -> Self {
+        assert!(n_lanes > 0);
+        let spacing = fsr_m / n_lanes as f64;
+        let lanes = (0..n_lanes)
+            .map(|i| Vcsel::new(params.clone(), base_m + i as f64 * spacing))
+            .collect();
+        VcselArray { lanes }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Total drive power of the array (W).
+    pub fn total_power(&self) -> f64 {
+        self.lanes.iter().map(|v| v.drive_power()).sum()
+    }
+
+    /// Minimum channel spacing (m).
+    pub fn channel_spacing(&self) -> f64 {
+        let mut ws: Vec<f64> = self.lanes.iter().map(|v| v.wavelength_m).collect();
+        ws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ws.windows(2).map(|w| w[1] - w[0]).fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::photonics::mr::Microring;
+
+    #[test]
+    fn drive_power_matches_table2() {
+        let v = Vcsel::new(DeviceParams::default(), 1.55e-6);
+        assert!((v.drive_power() - 1.3e-3).abs() < 1e-12);
+        assert!((v.modulation_latency() - 0.07e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn phase_locking_costs_extra() {
+        let v = Vcsel::new(DeviceParams::default(), 1.55e-6).phase_locked();
+        assert!(v.drive_power() > 1.3e-3);
+    }
+
+    #[test]
+    fn symbol_energy_floor_is_modulation_latency() {
+        let v = Vcsel::new(DeviceParams::default(), 1.55e-6);
+        // asking for a symbol shorter than the modulation latency charges
+        // the modulation latency
+        let floor = v.drive_power() * v.modulation_latency();
+        assert!((v.symbol_energy(0.0) - floor).abs() < 1e-24);
+        assert!(v.symbol_energy(1e-9) > v.symbol_energy(0.0));
+    }
+
+    #[test]
+    fn comb_fits_in_fsr_with_resolvable_spacing() {
+        let mr = Microring::default();
+        let arr = VcselArray::comb(&DeviceParams::default(), 1.55e-6, mr.fsr(), 36);
+        assert_eq!(arr.n_lanes(), 36);
+        // channels must be separated by more than one MR linewidth to bound
+        // inter-channel crosstalk (the basis of the 36-MR rule)
+        assert!(arr.channel_spacing() > mr.linewidth());
+        assert!((arr.total_power() - 36.0 * 1.3e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,107 @@
+//! Waveguide / link loss budget (paper §IV loss list).
+//!
+//! Assembles the end-to-end optical loss a signal sees from laser to
+//! photodetector: propagation, splitters, combiners, MR through and
+//! modulation losses, EO tuning loss, PCMC insertion loss. The resulting
+//! total feeds the laser power equation (Eq. 2, [`crate::photonics::laser`]).
+
+use super::constants::LossParams;
+
+/// Builder-style accumulator for the optical loss along one link (dB).
+#[derive(Debug, Clone, Default)]
+pub struct LossBudget {
+    items: Vec<(String, f64)>,
+}
+
+impl LossBudget {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a named loss contribution in dB.
+    pub fn add(&mut self, name: &str, db: f64) -> &mut Self {
+        assert!(db >= 0.0, "loss must be non-negative: {name}={db}");
+        self.items.push((name.to_string(), db));
+        self
+    }
+
+    /// Total link loss (dB).
+    pub fn total_db(&self) -> f64 {
+        self.items.iter().map(|(_, d)| d).sum()
+    }
+
+    /// Itemized view for reports.
+    pub fn items(&self) -> &[(String, f64)] {
+        &self.items
+    }
+
+    /// The canonical PhotoGAN unit link (Fig. 5/6): laser → splitter →
+    /// activation MR bank (1 modulation + pass-bys) → weight MR bank
+    /// (1 modulation + pass-bys) → combiner → PD, over `length_cm` of
+    /// waveguide, with `n_mrs_passed` off-resonance MRs passed per bank and
+    /// `n_pcmc` PCMC hops of `pcmc_db` each.
+    #[allow(clippy::too_many_arguments)]
+    pub fn unit_link(
+        loss: &LossParams,
+        length_cm: f64,
+        n_mrs_passed: usize,
+        n_pcmc: usize,
+        pcmc_db: f64,
+        eo_length_cm: f64,
+    ) -> Self {
+        let mut b = LossBudget::new();
+        b.add("propagation", loss.propagation_db_per_cm * length_cm);
+        b.add("splitter", loss.splitter_db);
+        b.add("activation-MR modulation", loss.mr_modulation_db);
+        b.add("weight-MR modulation", loss.mr_modulation_db);
+        b.add(
+            "MR through (pass-by)",
+            loss.mr_through_db * n_mrs_passed as f64 * 2.0, // both banks
+        );
+        b.add("EO tuning", loss.eo_tuning_db_per_cm * eo_length_cm);
+        b.add("combiner", loss.combiner_db);
+        b.add("PCMC insertion", pcmc_db * n_pcmc as f64);
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn totals_sum() {
+        let mut b = LossBudget::new();
+        b.add("a", 1.0).add("b", 0.5).add("c", 0.25);
+        assert!((b.total_db() - 1.75).abs() < 1e-12);
+        assert_eq!(b.items().len(), 3);
+    }
+
+    #[test]
+    fn unit_link_uses_paper_numbers() {
+        // 0.3 cm waveguide, 35 pass-by MRs per bank, 1 PCMC hop @0.5 dB,
+        // 0.1 cm of EO-tuned section.
+        let b = LossBudget::unit_link(&LossParams::default(), 0.3, 35, 1, 0.5, 0.1);
+        // propagation 0.3 + splitter 0.13 + 2*0.72 + 70*0.02 + 0.06
+        //   + combiner 0.9 + 0.5 = 4.73 dB
+        assert!((b.total_db() - 4.73).abs() < 1e-9, "total={}", b.total_db());
+    }
+
+    #[test]
+    fn loss_grows_with_mr_count() {
+        check("loss monotone in MR count", 64, |g| {
+            let n1 = g.usize_in(0, 17);
+            let n2 = n1 + g.usize_in(1, 18);
+            let b1 = LossBudget::unit_link(&LossParams::default(), 0.3, n1, 1, 0.5, 0.1);
+            let b2 = LossBudget::unit_link(&LossParams::default(), 0.3, n2, 1, 0.5, 0.1);
+            assert!(b2.total_db() > b1.total_db());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_loss_rejected() {
+        LossBudget::new().add("gain?!", -1.0);
+    }
+}

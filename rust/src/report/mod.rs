@@ -1,0 +1,7 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the bench targets call into these so `cargo bench` prints the same
+//! rows/series the paper reports).
+
+pub mod figures;
+
+pub use figures::*;

@@ -1,0 +1,231 @@
+//! Artifact discovery and binary I/O.
+//!
+//! `make artifacts` (python) writes, per model variant:
+//!
+//! ```text
+//! artifacts/<model>/model.hlo.txt   — HLO text (the AOT interchange format)
+//! artifacts/<model>/meta.txt        — key=value metadata (shapes, seeds)
+//! artifacts/<model>/weights.bin     — f32 LE weight buffers, in call order
+//! artifacts/<model>/golden_in.bin   — f32 LE golden input (z vector batch)
+//! artifacts/<model>/golden_out.bin  — f32 LE expected output (jax-computed)
+//! ```
+//!
+//! `meta.txt` is a deliberately trivial `key=value` format (no serde in the
+//! offline crate set). Keys used: `name`, `input_elements`,
+//! `output_elements`, `batch`, `weight_buffers`, `weights_<i>_elements`,
+//! `label_elements` (optional conditioning input).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `meta.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub fields: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut fields = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("meta.txt line {}: missing '='", lineno + 1))?;
+            fields.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Manifest { fields })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.fields
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("meta.txt missing key '{key}'"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("meta.txt key '{key}' is not an integer"))
+    }
+
+    pub fn get_opt_usize(&self, key: &str) -> Option<usize> {
+        self.fields.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// All artifacts for one model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub name: String,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Open `artifacts/<name>` and validate the expected files exist.
+    pub fn open(artifacts_dir: &Path, name: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(name);
+        if !dir.is_dir() {
+            bail!(
+                "artifact dir {} not found — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let hlo_path = dir.join("model.hlo.txt");
+        if !hlo_path.is_file() {
+            bail!("missing {}", hlo_path.display());
+        }
+        let manifest = Manifest::load(&dir.join("meta.txt"))?;
+        Ok(ArtifactSet { name: name.to_string(), dir, manifest, hlo_path })
+    }
+
+    /// Discover every model under `artifacts/` (directories with meta.txt).
+    pub fn discover(artifacts_dir: &Path) -> Result<Vec<ArtifactSet>> {
+        let mut out = Vec::new();
+        if !artifacts_dir.is_dir() {
+            return Ok(out);
+        }
+        let mut names: Vec<String> = std::fs::read_dir(artifacts_dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("meta.txt").is_file())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        names.sort();
+        for n in names {
+            out.push(ArtifactSet::open(artifacts_dir, &n)?);
+        }
+        Ok(out)
+    }
+
+    /// Read one of the `.bin` files as little-endian f32s.
+    pub fn read_f32(&self, file: &str) -> Result<Vec<f32>> {
+        read_f32_file(&self.dir.join(file))
+    }
+
+    /// The weight buffers, in the call order the HLO expects.
+    pub fn weights(&self) -> Result<Vec<Vec<f32>>> {
+        let n = self.manifest.get_usize("weight_buffers")?;
+        let all = self.read_f32("weights.bin")?;
+        let mut out = Vec::with_capacity(n);
+        let mut offset = 0usize;
+        for i in 0..n {
+            let len = self.manifest.get_usize(&format!("weights_{i}_elements"))?;
+            if offset + len > all.len() {
+                bail!(
+                    "weights.bin too short: need {} for buffer {i}, have {}",
+                    offset + len,
+                    all.len()
+                );
+            }
+            out.push(all[offset..offset + len].to_vec());
+            offset += len;
+        }
+        if offset != all.len() {
+            bail!("weights.bin has {} trailing floats", all.len() - offset);
+        }
+        Ok(out)
+    }
+}
+
+/// Read a little-endian f32 binary file.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file (used by tests and tools).
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_key_values() {
+        let m = Manifest::parse("# comment\nname=condgan_tiny\nbatch = 4\n\nx=1\n").unwrap();
+        assert_eq!(m.get("name").unwrap(), "condgan_tiny");
+        assert_eq!(m.get_usize("batch").unwrap(), 4);
+        assert!(m.get("missing").is_err());
+        assert_eq!(m.get_opt_usize("x"), Some(1));
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("no equals sign here").is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let dir = std::env::temp_dir().join("photogan_test_f32");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data = vec![1.5f32, -2.25, 0.0, 3.14159];
+        write_f32_file(&p, &data).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_f32_file_rejected() {
+        let dir = std::env::temp_dir().join("photogan_test_f32b");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8, 1, 2]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn artifact_set_weight_slicing() {
+        let base = std::env::temp_dir().join("photogan_test_artifacts");
+        let dir = base.join("toy");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("model.hlo.txt"), "HloModule toy").unwrap();
+        std::fs::write(
+            dir.join("meta.txt"),
+            "name=toy\ninput_elements=2\noutput_elements=2\nbatch=1\n\
+             weight_buffers=2\nweights_0_elements=3\nweights_1_elements=1\n",
+        )
+        .unwrap();
+        write_f32_file(&dir.join("weights.bin"), &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let set = ArtifactSet::open(&base, "toy").unwrap();
+        let w = set.weights().unwrap();
+        assert_eq!(w, vec![vec![1.0, 2.0, 3.0], vec![4.0]]);
+        // discovery finds it
+        let found = ArtifactSet::discover(&base).unwrap();
+        assert!(found.iter().any(|a| a.name == "toy"));
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_empty_not_error() {
+        let found = ArtifactSet::discover(Path::new("/nonexistent/xyz")).unwrap();
+        assert!(found.is_empty());
+    }
+}

@@ -1,0 +1,357 @@
+//! PJRT execution engine: compile HLO-text artifacts once, then serve
+//! batched generation requests from the rust hot path.
+//!
+//! Design (per /opt/xla-example/load_hlo and aot_recipe):
+//! - interchange is **HLO text** (`HloModuleProto::from_text_file`) — the
+//!   image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos;
+//! - models are lowered with `return_tuple=True`, so results unwrap with
+//!   `to_tuple1`;
+//! - each artifact is compiled to a fixed-batch executable; the engine
+//!   pads smaller batches up to the compiled batch and slices the output
+//!   (weights are passed as runtime arguments, resident since startup);
+//! - the `xla` crate's handles are **not `Send`** (raw PJRT pointers, `Rc`
+//!   client), so all XLA state lives on one dedicated *executor thread*;
+//!   [`Engine`] itself is just channels + metadata and is freely shared
+//!   across the coordinator's workers. XLA's CPU backend parallelizes
+//!   internally, so one executor thread does not serialize the math.
+
+use super::artifacts::ArtifactSet;
+use crate::coordinator::server::BatchExecutor;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// One compiled model living on the executor thread.
+pub struct ModelRuntime {
+    pub name: String,
+    pub input_elements: usize,
+    pub output_elements: usize,
+    /// Compiled (fixed) batch size.
+    pub batch: usize,
+    /// Optional conditioning input width (one-hot label planes).
+    pub label_elements: usize,
+    weights: Vec<xla::Literal>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    /// Generate `entries.len()` (≤ `batch`) samples; deterministic in the
+    /// seeds. Returns `entries.len() × output_elements` f32s.
+    pub fn generate(&self, entries: &[(u64, Option<u32>)]) -> Result<Vec<f32>> {
+        if entries.is_empty() {
+            return Ok(vec![]);
+        }
+        if entries.len() > self.batch {
+            bail!("batch {} exceeds compiled batch {}", entries.len(), self.batch);
+        }
+        // z ~ N(0,1) from the per-sample seed, padded to the compiled batch
+        let mut z = vec![0f32; self.batch * self.input_elements];
+        for (i, &(seed, _)) in entries.iter().enumerate() {
+            let mut rng = Pcg32::new(seed);
+            for v in z[i * self.input_elements..(i + 1) * self.input_elements].iter_mut() {
+                *v = rng.normal() as f32;
+            }
+        }
+        let mut owned: Vec<xla::Literal> = Vec::with_capacity(2);
+        owned.push(
+            xla::Literal::vec1(&z)
+                .reshape(&[self.batch as i64, self.input_elements as i64])?,
+        );
+        if self.label_elements > 0 {
+            let mut labels = vec![0f32; self.batch * self.label_elements];
+            for (i, &(_, label)) in entries.iter().enumerate() {
+                let idx = label.unwrap_or(0) as usize % self.label_elements;
+                labels[i * self.label_elements + idx] = 1.0;
+            }
+            owned.push(
+                xla::Literal::vec1(&labels)
+                    .reshape(&[self.batch as i64, self.label_elements as i64])?,
+            );
+        }
+        self.execute(owned).map(|v| v[..entries.len() * self.output_elements].to_vec())
+    }
+
+    /// Run with an explicit full-batch input (and label planes when the
+    /// model is conditioned) — the golden-parity and image-to-image path.
+    pub fn run_raw(&self, input: &[f32], label: Option<&[f32]>) -> Result<Vec<f32>> {
+        if input.len() != self.batch * self.input_elements {
+            bail!(
+                "raw input has {} elements, expected {}x{}",
+                input.len(),
+                self.batch,
+                self.input_elements
+            );
+        }
+        let mut owned: Vec<xla::Literal> = Vec::with_capacity(2);
+        owned.push(
+            xla::Literal::vec1(input)
+                .reshape(&[self.batch as i64, self.input_elements as i64])?,
+        );
+        if self.label_elements > 0 {
+            let label = label.context("model requires label planes")?;
+            if label.len() != self.batch * self.label_elements {
+                bail!(
+                    "label has {} elements, expected {}",
+                    label.len(),
+                    self.batch * self.label_elements
+                );
+            }
+            owned.push(
+                xla::Literal::vec1(label)
+                    .reshape(&[self.batch as i64, self.label_elements as i64])?,
+            );
+        }
+        self.execute(owned)
+    }
+
+    /// Shared execute path: inputs ++ resident weights, unwrap the 1-tuple.
+    fn execute(&self, owned: Vec<xla::Literal>) -> Result<Vec<f32>> {
+        let args: Vec<&xla::Literal> = owned.iter().chain(self.weights.iter()).collect();
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("device → host transfer")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let values = out.to_vec::<f32>()?;
+        let expect = self.batch * self.output_elements;
+        if values.len() != expect {
+            bail!("output size {} != expected {}", values.len(), expect);
+        }
+        Ok(values)
+    }
+}
+
+/// Model metadata mirrored outside the executor thread.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub input_elements: usize,
+    pub output_elements: usize,
+    pub batch: usize,
+    pub label_elements: usize,
+}
+
+enum Payload {
+    /// Seed-derived latent inputs (the serving path).
+    Seeded(Vec<(u64, Option<u32>)>),
+    /// Explicit input (+ optional label planes) — golden parity tests and
+    /// image-to-image models (CycleGAN takes an image, not a latent).
+    Raw { input: Vec<f32>, label: Option<Vec<f32>> },
+}
+
+struct Job {
+    model: String,
+    payload: Payload,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+/// The engine: executor-thread handle + metadata. `Send + Sync`.
+pub struct Engine {
+    job_tx: Mutex<Option<Sender<Job>>>,
+    meta: HashMap<String, ModelMeta>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Load every artifact under `artifacts_dir` (spawns the executor
+    /// thread, compiles everything, fails fast on any load error).
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let dir: PathBuf = artifacts_dir.to_path_buf();
+        let (job_tx, job_rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<HashMap<String, ModelMeta>>>();
+        let thread = std::thread::Builder::new()
+            .name("photogan-pjrt".into())
+            .spawn(move || executor_thread(dir, job_rx, ready_tx))
+            .context("spawning executor thread")?;
+        let meta = ready_rx
+            .recv()
+            .context("executor thread died during startup")??;
+        if meta.is_empty() {
+            bail!(
+                "no artifacts in {} — run `make artifacts`",
+                artifacts_dir.display()
+            );
+        }
+        Ok(Engine {
+            job_tx: Mutex::new(Some(job_tx)),
+            meta,
+            thread: Mutex::new(Some(thread)),
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.meta.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ModelMeta> {
+        self.meta.get(name)
+    }
+
+    /// Compiled batch size of a model (serving callers chunk to this).
+    pub fn compiled_batch(&self, name: &str) -> Option<usize> {
+        self.meta.get(name).map(|m| m.batch)
+    }
+
+    fn submit_job(&self, model: &str, payload: Payload) -> Result<Vec<f32>> {
+        let (tx, rx) = channel();
+        {
+            let guard = self.job_tx.lock().unwrap();
+            guard
+                .as_ref()
+                .context("engine shut down")?
+                .send(Job { model: model.to_string(), payload, reply: tx })
+                .context("executor thread gone")?;
+        }
+        rx.recv().context("executor thread dropped job")?
+    }
+
+    /// Run a full compiled batch with explicit inputs (golden parity /
+    /// image-to-image path). Returns the whole batch output.
+    pub fn run_raw(&self, model: &str, input: &[f32], label: Option<&[f32]>) -> Result<Vec<f32>> {
+        self.submit_job(
+            model,
+            Payload::Raw { input: input.to_vec(), label: label.map(|l| l.to_vec()) },
+        )
+    }
+
+    /// Synchronous generation (chunks to the compiled batch internally).
+    pub fn generate_sync(
+        &self,
+        model: &str,
+        entries: &[(u64, Option<u32>)],
+    ) -> Result<Vec<f32>> {
+        let meta = self
+            .meta
+            .get(model)
+            .with_context(|| format!("unknown model '{model}'"))?;
+        let mut out = Vec::with_capacity(entries.len() * meta.output_elements);
+        for chunk in entries.chunks(meta.batch) {
+            let mut v = self.submit_job(model, Payload::Seeded(chunk.to_vec()))?;
+            out.append(&mut v);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // close the job channel, then join the executor thread
+        self.job_tx.lock().unwrap().take();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_thread(
+    dir: PathBuf,
+    jobs: Receiver<Job>,
+    ready: Sender<Result<HashMap<String, ModelMeta>>>,
+) {
+    let startup = (|| -> Result<(HashMap<String, ModelRuntime>, HashMap<String, ModelMeta>)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let sets = ArtifactSet::discover(&dir)?;
+        let mut models = HashMap::new();
+        let mut meta = HashMap::new();
+        for set in sets {
+            let rt = load_one(&client, &set)
+                .with_context(|| format!("loading artifact '{}'", set.name))?;
+            meta.insert(
+                set.name.clone(),
+                ModelMeta {
+                    input_elements: rt.input_elements,
+                    output_elements: rt.output_elements,
+                    batch: rt.batch,
+                    label_elements: rt.label_elements,
+                },
+            );
+            models.insert(set.name.clone(), rt);
+        }
+        Ok((models, meta))
+    })();
+    let models = match startup {
+        Ok((models, meta)) => {
+            let _ = ready.send(Ok(meta));
+            models
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = jobs.recv() {
+        let result = match models.get(&job.model) {
+            Some(rt) => match &job.payload {
+                Payload::Seeded(entries) => rt.generate(entries),
+                Payload::Raw { input, label } => rt.run_raw(input, label.as_deref()),
+            },
+            None => Err(anyhow::anyhow!("unknown model '{}'", job.model)),
+        };
+        let _ = job.reply.send(result);
+    }
+}
+
+fn load_one(client: &xla::PjRtClient, set: &ArtifactSet) -> Result<ModelRuntime> {
+    let proto = xla::HloModuleProto::from_text_file(
+        set.hlo_path.to_str().context("non-utf8 path")?,
+    )
+    .context("parsing HLO text")?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).context("PJRT compile")?;
+    let input_elements = set.manifest.get_usize("input_elements")?;
+    let output_elements = set.manifest.get_usize("output_elements")?;
+    let batch = set.manifest.get_usize("batch")?;
+    let label_elements = set.manifest.get_opt_usize("label_elements").unwrap_or(0);
+    // resident weights as literals with their compiled shapes
+    let mut weights = Vec::new();
+    let bufs = set.weights()?;
+    for (i, buf) in bufs.iter().enumerate() {
+        let shape_key = format!("weights_{i}_shape");
+        let lit = match set.manifest.fields.get(&shape_key) {
+            Some(shape_str) => {
+                let dims: Vec<i64> = shape_str
+                    .split('x')
+                    .map(|d| d.parse().context("bad shape dim"))
+                    .collect::<Result<_>>()?;
+                xla::Literal::vec1(buf).reshape(&dims)?
+            }
+            None => xla::Literal::vec1(buf),
+        };
+        weights.push(lit);
+    }
+    Ok(ModelRuntime {
+        name: set.name.clone(),
+        input_elements,
+        output_elements,
+        batch,
+        label_elements,
+        weights,
+        exe,
+    })
+}
+
+impl BatchExecutor for Engine {
+    fn models(&self) -> Vec<String> {
+        self.model_names()
+    }
+
+    fn elements_per_sample(&self, model: &str) -> usize {
+        self.meta.get(model).map(|m| m.output_elements).unwrap_or(0)
+    }
+
+    fn generate(&self, model: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+        match self.generate_sync(model, entries) {
+            Ok(v) => v,
+            Err(e) => {
+                // serving must not crash the worker: log + zero-fill
+                eprintln!("[photogan] generate({model}) failed: {e:#}");
+                let n = self.elements_per_sample(model) * entries.len();
+                vec![0f32; n]
+            }
+        }
+    }
+}

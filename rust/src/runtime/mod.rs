@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + weight/golden binaries) and executes real GAN inference from
+//! the rust request path via the `xla` crate's PJRT CPU client.
+//!
+//! Python never runs at serving time: `make artifacts` is the only python
+//! step, and this module is the only consumer of its outputs.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSet, Manifest};
+pub use client::{Engine, ModelMeta, ModelRuntime};

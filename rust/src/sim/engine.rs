@@ -1,0 +1,478 @@
+//! The tile-level scheduling engine: composes device/arch cost models over
+//! a mapped model under the three optimization toggles.
+
+use crate::arch::accelerator::Accelerator;
+use crate::arch::activation::ActKind;
+use crate::arch::norm::NormKind;
+use crate::arch::power::{DRAM_ENERGY_PER_BYTE, ECU_ENERGY_PER_OP};
+use crate::arch::unit::BlockKind;
+use crate::models::Model;
+use crate::sim::mapper::{map_model, LayerJob};
+use crate::sim::options::OptFlags;
+use crate::sim::result::{EnergyBreakdown, LayerTrace, SimReport};
+
+/// Simulate one model on one accelerator configuration.
+///
+/// `batch` is the number of inference instances streamed back-to-back
+/// (activations interleave; weights are loaded once per tile regardless of
+/// batch — the main reason batching helps).
+pub fn simulate(model: &Model, acc: &Accelerator, batch: usize, opts: OptFlags) -> SimReport {
+    assert!(batch >= 1);
+    let jobs = map_model(model, batch, &opts);
+    simulate_mapped(&model.name, &jobs, acc, batch, opts)
+}
+
+/// Simulate from pre-mapped jobs. The mapping (including the sparse-dataflow
+/// census) is independent of the accelerator configuration, so DSE sweeps
+/// map each model once and re-cost the same jobs across thousands of
+/// configurations.
+pub fn simulate_mapped(
+    model_name: &str,
+    jobs: &[LayerJob],
+    acc: &Accelerator,
+    batch: usize,
+    opts: OptFlags,
+) -> SimReport {
+    let cfg = &acc.cfg;
+    let d = &cfg.params.device;
+    let ecu_w = acc.ecu_power();
+
+    let mut layers = Vec::with_capacity(jobs.len());
+    let mut total = EnergyBreakdown::default();
+    let mut latency = 0.0f64;
+    let mut dense_macs_total = 0usize;
+
+    for job in jobs {
+        let mut e = EnergyBreakdown::default();
+        let mut t_layer = 0.0f64;
+        let mut exec_macs = 0usize;
+        let mut tile_rounds = 0usize;
+
+        // ---- MVM phase(s) --------------------------------------------
+        if !job.mvms.is_empty() {
+            let block = job.mvms[0].block;
+            let unit = acc.mvm_unit(block);
+            let timing = unit.timing();
+            let upower = unit.power();
+            let units = match block {
+                BlockKind::Dense => cfg.l,
+                BlockKind::Conv => cfg.m,
+                _ => unreachable!(),
+            };
+            // Per-symbol period: the egress ADC lane is per-row and runs
+            // concurrently when stage-pipelined; it dominates the stage path
+            // (0.82 ns vs 0.36 ns), making converters the bottleneck —
+            // exactly the paper's §II.C.6 observation.
+            let symbol_time = timing.symbol_time_with_adc(opts.pipelined);
+
+            for mvm in &job.mvms {
+                let tiles_r = mvm.out_rows.div_ceil(cfg.k);
+                let tiles_c = mvm.reduction.div_ceil(cfg.n);
+                let tiles = tiles_r * tiles_c;
+                let rounds = tiles.div_ceil(units);
+                let per_tile = timing.weight_load + mvm.symbols as f64 * symbol_time;
+                let t_mvm = rounds as f64 * per_tile;
+                t_layer += t_mvm;
+                tile_rounds += rounds;
+                exec_macs += mvm.exec_macs;
+
+                // active energy: only working tiles draw active power
+                e.mvm_active += upower.active * tiles as f64 * per_tile;
+                // in-block idle: unit slots without a tile in the last round
+                let idle_slots = rounds * units - tiles;
+                let slot_power = if opts.power_gated { upower.gated } else { upower.idle };
+                e.idle += slot_power * idle_slots as f64 * per_tile;
+                // partial-sum accumulation in the ECU when the reduction
+                // spans multiple column tiles
+                if tiles_c > 1 {
+                    let adds = (tiles_c - 1) * mvm.out_rows * mvm.symbols;
+                    e.ecu += adds as f64 * ECU_ENERGY_PER_OP;
+                }
+                // weight traffic (8-bit: 1 B/param), fetched once per tile
+                e.dram += mvm.weight_bytes as f64 * DRAM_ENERGY_PER_BYTE;
+                if !opts.pipelined {
+                    // without the stage-level pipeline the bias stage is
+                    // done electronically: every output value crosses
+                    // ADC → ECU add → DAC before re-entering the optical
+                    // chain (§III.C.2 is precisely what removes this)
+                    let crossings = (mvm.out_rows * mvm.symbols) as f64;
+                    let oeo_per = d.adc_power * d.adc_latency + d.dac_power * d.dac_latency;
+                    e.oeo += crossings * oeo_per;
+                    e.ecu += crossings * ECU_ENERGY_PER_OP;
+                }
+            }
+
+            // the *other* MVM block while this one runs
+            let (other_units, other_power) = match block {
+                BlockKind::Dense => (cfg.m, acc.conv.unit().power()),
+                _ => (cfg.l, acc.dense.unit().power()),
+            };
+            let other_slot = if opts.power_gated { other_power.gated } else { other_power.idle };
+            e.idle += other_slot * other_units as f64 * t_layer;
+
+            // ---- fused norm/act chain --------------------------------
+            let norm_lat = acc.norm.latency(job.norm)
+                + batch as f64 * acc.norm.retune_latency(job.norm);
+            let act_lat = acc.act.latency(job.act);
+            let stream_time = t_layer;
+            if opts.pipelined {
+                // streams behind the MVM: only pipeline-fill latency is
+                // added; the elementwise hardware runs for the stream time
+                t_layer += norm_lat + act_lat;
+                e.elementwise += acc.norm.power(job.norm) * cfg.m as f64 * stream_time
+                    + acc.act.power(job.act) * (cfg.k * units) as f64 * stream_time;
+            } else {
+                // separate buffered passes: each element crosses O/E/O at
+                // every block boundary (ADC out + DAC back in), and the
+                // pass costs wall-clock time at the converter-limited rate
+                for (on, lanes, unit_power, fill) in [
+                    (job.norm != NormKind::None, cfg.m * cfg.k, acc.norm.power(job.norm), norm_lat),
+                    (job.act != ActKind::None, cfg.k * units, acc.act.power(job.act), act_lat),
+                ] {
+                    if !on {
+                        continue;
+                    }
+                    let pass_symbol = d.adc_latency.max(d.dac_latency) + fill.max(0.0) * 0.0;
+                    let pass_t = (job.out_elements as f64 / lanes.max(1) as f64) * pass_symbol + fill;
+                    t_layer += pass_t;
+                    e.elementwise += unit_power * lanes as f64 * pass_t;
+                    let oeo_per_el = d.adc_power * d.adc_latency + d.dac_power * d.dac_latency;
+                    e.oeo += job.out_elements as f64 * oeo_per_el;
+                    // buffer round-trip
+                    e.dram += 2.0 * job.out_elements as f64 * DRAM_ENERGY_PER_BYTE;
+                }
+            }
+
+            // PCMC route for the block chain (re-established per layer)
+            let (sw_lat, sw_e) = (d.pcmc_switch_latency, 3.0 * d.pcmc_switch_energy);
+            t_layer += sw_lat;
+            e.pcmc += sw_e;
+        } else if job.norm != NormKind::None || job.act != ActKind::None || job.ecu_ops > 0 {
+            // standalone elementwise / bookkeeping layer (unfused)
+            let lanes = (cfg.m * cfg.k).max(1);
+            let pass_symbol = d.adc_latency.max(d.dac_latency);
+            let active = job.norm != NormKind::None || job.act != ActKind::None;
+            if active {
+                let fill = acc.norm.latency(job.norm) + acc.act.latency(job.act);
+                let pass_t = (job.out_elements as f64 / lanes as f64) * pass_symbol + fill;
+                t_layer += pass_t;
+                e.elementwise += (acc.norm.power(job.norm) + acc.act.power(job.act))
+                    * lanes as f64
+                    * pass_t;
+                if !opts.pipelined {
+                    let oeo_per_el = d.adc_power * d.adc_latency + d.dac_power * d.dac_latency;
+                    e.oeo += job.out_elements as f64 * oeo_per_el;
+                }
+            }
+        }
+
+        // ---- ECU + activation traffic (all layer kinds) --------------
+        e.ecu += job.ecu_ops as f64 * ECU_ENERGY_PER_OP + ecu_w * t_layer;
+        if !job.mvms.is_empty() {
+            // input fetch + output write-back for compute layers
+            e.dram +=
+                (job.in_elements + job.out_elements) as f64 * DRAM_ENERGY_PER_BYTE;
+        }
+
+        dense_macs_total += job.dense_macs;
+        latency += t_layer;
+        total.add(&e);
+        layers.push(LayerTrace {
+            index: job.index,
+            name: job.name.clone(),
+            latency: t_layer,
+            energy: e,
+            dense_macs: job.dense_macs,
+            exec_macs,
+            tile_rounds,
+        });
+    }
+
+    let total_ops = 2.0 * dense_macs_total as f64;
+    let bits = total_ops * cfg.params.system.precision_bits as f64;
+    SimReport {
+        model: model_name.to_string(),
+        opts,
+        batch,
+        latency,
+        energy: total,
+        layers,
+        total_ops,
+        total_bits: bits,
+    }
+}
+
+/// Convenience: simulate a model on a configuration with all optimizations.
+pub fn simulate_default(model: &Model, acc: &Accelerator) -> SimReport {
+    simulate(model, acc, 1, OptFlags::all())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::models::zoo;
+
+    fn chip() -> Accelerator {
+        Accelerator::new(ArchConfig::paper_optimum()).unwrap()
+    }
+
+    #[test]
+    fn all_models_simulate() {
+        let acc = chip();
+        for m in zoo::all_generators() {
+            let r = simulate_default(&m, &acc);
+            assert!(r.latency > 0.0 && r.energy.total() > 0.0, "{}", m.name);
+            assert!(r.gops() > 0.0 && r.epb() > 0.0);
+        }
+    }
+
+    #[test]
+    fn each_optimization_helps_energy() {
+        let acc = chip();
+        let m = zoo::dcgan();
+        let base = simulate(&m, &acc, 1, OptFlags::baseline());
+        for (name, flags) in OptFlags::fig12_sweep().into_iter().skip(1) {
+            let r = simulate(&m, &acc, 1, flags);
+            assert!(
+                r.energy.total() < base.energy.total(),
+                "{name} must reduce energy: {} vs baseline {}",
+                r.energy.total(),
+                base.energy.total()
+            );
+        }
+    }
+
+    #[test]
+    fn combined_optimizations_compound() {
+        let acc = chip();
+        let m = zoo::dcgan();
+        let base = simulate(&m, &acc, 1, OptFlags::baseline()).energy.total();
+        let sw = simulate(&m, &acc, 1, OptFlags::sw_optimized()).energy.total();
+        let all = simulate(&m, &acc, 1, OptFlags::all()).energy.total();
+        assert!(all < sw && sw < base);
+        // the paper reports ~45x combined; our device-up model lands at
+        // ~10x (see EXPERIMENTS.md Fig. 12 discussion) — demand at least
+        // 8x here so regressions in any one optimization are caught
+        assert!(base / all > 8.0, "combined reduction only {:.1}x", base / all);
+    }
+
+    #[test]
+    fn sparse_dataflow_raises_gops() {
+        let acc = chip();
+        let m = zoo::dcgan(); // tconv-heavy
+        let dense = simulate(&m, &acc, 1, OptFlags::pipelined_only());
+        let sparse = simulate(
+            &m,
+            &acc,
+            1,
+            OptFlags { sparse: true, pipelined: true, power_gated: false },
+        );
+        assert!(
+            sparse.gops() > 1.5 * dense.gops(),
+            "sparse {} vs dense {}",
+            sparse.gops(),
+            dense.gops()
+        );
+    }
+
+    #[test]
+    fn cyclegan_benefits_least_from_sparse() {
+        // paper Fig. 12 discussion: CycleGAN has the lowest tconv fraction
+        let acc = chip();
+        let mut ratios = Vec::new();
+        for m in zoo::all_generators() {
+            let base = simulate(&m, &acc, 1, OptFlags::baseline()).energy.total();
+            let sw = simulate(&m, &acc, 1, OptFlags::sw_optimized()).energy.total();
+            ratios.push((m.name.clone(), base / sw));
+        }
+        let cycle = ratios.iter().find(|(n, _)| n == "CycleGAN").unwrap().1;
+        for (name, r) in &ratios {
+            if name != "CycleGAN" {
+                assert!(cycle < *r, "CycleGAN {cycle:.2}x should be < {name} {r:.2}x");
+            }
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_weight_reloads() {
+        let acc = chip();
+        let m = zoo::condgan();
+        let r1 = simulate(&m, &acc, 1, OptFlags::all());
+        let r8 = simulate(&m, &acc, 8, OptFlags::all());
+        // per-instance latency must drop with batching
+        assert!(r8.latency / 8.0 < r1.latency);
+        // and per-instance energy must not grow
+        assert!(r8.energy.total() / 8.0 <= r1.energy.total() * 1.01);
+    }
+
+    #[test]
+    fn average_power_respects_cap_with_gating() {
+        let acc = chip();
+        for m in zoo::all_generators() {
+            let r = simulate_default(&m, &acc);
+            assert!(
+                r.avg_power() < acc.cfg.params.system.power_cap_w,
+                "{}: {} W",
+                m.name,
+                r.avg_power()
+            );
+        }
+    }
+
+    #[test]
+    fn traces_sum_to_totals() {
+        let acc = chip();
+        let r = simulate_default(&zoo::artgan(), &acc);
+        let t: f64 = r.layers.iter().map(|l| l.latency).sum();
+        let e: f64 = r.layers.iter().map(|l| l.energy.total()).sum();
+        assert!((t - r.latency).abs() < 1e-12 * r.latency.max(1.0));
+        assert!((e - r.energy.total()).abs() < 1e-9 * r.energy.total().max(1.0));
+    }
+}
+
+#[cfg(test)]
+mod debug_tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::models::zoo;
+
+    #[test]
+    #[ignore]
+    fn print_breakdowns() {
+        let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+        let m = zoo::dcgan();
+        for (name, flags) in OptFlags::fig12_sweep() {
+            let r = simulate(&m, &acc, 1, flags);
+            let e = r.energy;
+            println!(
+                "{name:18} lat={:.3e}s  E={:.3e}J  mvm={:.2e} idle={:.2e} elem={:.2e} oeo={:.2e} ecu={:.2e} dram={:.2e}",
+                r.latency, e.total(), e.mvm_active, e.idle, e.elementwise, e.oeo, e.ecu, e.dram
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod calib_tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::models::zoo;
+
+    #[test]
+    #[ignore]
+    fn print_photogan_metrics() {
+        let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+        let mut g_all = Vec::new();
+        let mut e_all = Vec::new();
+        for m in zoo::all_generators() {
+            let r = simulate(&m, &acc, 1, OptFlags::all());
+            println!(
+                "{:10} ops={:.3e} lat={:.3e}s GOPS={:8.1} EPB={:.3e} J/bit avgP={:.2}W",
+                m.name, r.total_ops, r.latency, r.gops(), r.epb(), r.avg_power()
+            );
+            g_all.push(r.gops());
+            e_all.push(r.epb());
+        }
+        let gm = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!("avg GOPS={:.1} avg EPB={:.3e}", gm(&g_all), gm(&e_all));
+    }
+}
+
+#[cfg(test)]
+mod invariant_tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::models::layer::{Layer, Shape};
+    use crate::models::zoo;
+    use crate::sparse::TconvSpec;
+    use crate::util::prop::check;
+
+    /// A model with exactly one transposed-conv layer.
+    fn single_tconv(cin: usize, cout: usize, k: usize, s: usize, p: usize, h: usize) -> Model {
+        Model::new(
+            "single-tconv",
+            Shape::Chw(cin, h, h),
+            vec![Layer::ConvT2d { in_ch: cin, out_ch: cout, k, s, p, bias: false }],
+        )
+    }
+
+    #[test]
+    fn executed_macs_match_census_exactly() {
+        check("exec macs == cin*cout*census", 32, |g| {
+            let cin = g.usize_in(1, 8);
+            let cout = g.usize_in(1, 8);
+            let k = g.usize_in(2, 5);
+            let s = g.usize_in(1, 3);
+            let p = g.usize_in(0, (k - 1) / 2);
+            let h = g.usize_in(2, 8);
+            let m = single_tconv(cin, cout, k, s, p, h);
+            let jobs = map_model(&m, 1, &OptFlags::all());
+            let exec: usize = jobs.iter().flat_map(|j| &j.mvms).map(|x| x.exec_macs).sum();
+            let census = TconvSpec::new(k, s, p, h, h).census();
+            assert_eq!(exec, cin * cout * census.sparse_macs);
+        });
+    }
+
+    #[test]
+    fn more_units_never_slower() {
+        let m = zoo::artgan();
+        let mut last = f64::INFINITY;
+        for (l, mm) in [(1, 1), (3, 2), (7, 3), (13, 5)] {
+            let acc = Accelerator::new(ArchConfig::new(16, 2, l, mm)).unwrap();
+            let r = simulate(&m, &acc, 1, OptFlags::all());
+            assert!(r.latency <= last * 1.0001, "L={l} M={mm} got slower");
+            last = r.latency;
+        }
+    }
+
+    #[test]
+    fn wider_banks_never_slower() {
+        let m = zoo::condgan();
+        let mut last = f64::INFINITY;
+        for n in [4usize, 8, 16, 32] {
+            let acc = Accelerator::new(ArchConfig::new(n, 2, 11, 3)).unwrap();
+            let r = simulate(&m, &acc, 1, OptFlags::all());
+            assert!(r.latency <= last * 1.0001, "N={n} got slower");
+            last = r.latency;
+        }
+    }
+
+    #[test]
+    fn energy_and_latency_strictly_positive_for_any_config() {
+        check("sim positivity", 24, |g| {
+            let cfg = ArchConfig::new(
+                g.usize_in(1, 36),
+                g.usize_in(1, 8),
+                g.usize_in(1, 13),
+                g.usize_in(1, 5),
+            );
+            let acc = Accelerator::new(cfg).unwrap();
+            let r = simulate(&zoo::condgan(), &acc, 1, OptFlags::all());
+            assert!(r.latency > 0.0 && r.energy.total() > 0.0);
+            assert!(r.gops().is_finite() && r.epb().is_finite());
+        });
+    }
+
+    #[test]
+    fn workload_ops_independent_of_architecture() {
+        let m = zoo::dcgan();
+        let a = simulate(&m, &Accelerator::new(ArchConfig::new(8, 1, 2, 1)).unwrap(), 1, OptFlags::all());
+        let b = simulate(&m, &Accelerator::new(ArchConfig::new(36, 8, 13, 5)).unwrap(), 1, OptFlags::all());
+        assert_eq!(a.total_ops, b.total_ops, "GOPS numerator must be arch-invariant");
+    }
+
+    #[test]
+    fn gated_avg_power_below_ungated() {
+        let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+        let m = zoo::artgan();
+        let gated = simulate(&m, &acc, 1, OptFlags::all());
+        let ungated = simulate(
+            &m,
+            &acc,
+            1,
+            OptFlags { sparse: true, pipelined: true, power_gated: false },
+        );
+        assert!(gated.avg_power() < ungated.avg_power());
+    }
+}

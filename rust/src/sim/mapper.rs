@@ -1,0 +1,302 @@
+//! Layer → MVM-job mapping (the ECU's "mapping matrices to the photonic
+//! domain" role, paper Fig. 4).
+
+use crate::arch::activation::ActKind;
+use crate::arch::norm::NormKind;
+use crate::arch::unit::BlockKind;
+use crate::models::layer::{Layer, Shape};
+use crate::models::Model;
+use crate::sim::options::OptFlags;
+use crate::sparse::TconvSpec;
+
+/// One matrix-vector-multiply workload mapped onto a block.
+#[derive(Debug, Clone)]
+pub struct MvmJob {
+    /// Block that executes it.
+    pub block: BlockKind,
+    /// Output rows (channels / features) of this job.
+    pub out_rows: usize,
+    /// Reduction (dot-product) length per output element.
+    pub reduction: usize,
+    /// Number of output *positions* streamed (per batch instance).
+    pub symbols: usize,
+    /// MACs this job actually executes (= out_rows · reduction · symbols).
+    pub exec_macs: usize,
+    /// Weight bytes that must be fetched for this job (8-bit).
+    pub weight_bytes: usize,
+}
+
+/// A model layer lowered to simulator form.
+#[derive(Debug, Clone)]
+pub struct LayerJob {
+    pub index: usize,
+    pub name: String,
+    /// MVM jobs (one per transposed-conv phase class when sparse; one
+    /// otherwise). Empty for pure elementwise/bookkeeping layers.
+    pub mvms: Vec<MvmJob>,
+    /// Dense-equivalent workload MACs (platform-independent op count).
+    pub dense_macs: usize,
+    /// Normalization fused after this layer's MVM (set on the MVM layer by
+    /// lookahead; `None` for standalone handling).
+    pub norm: NormKind,
+    /// Activation fused after this layer (lookahead).
+    pub act: ActKind,
+    /// Elements produced by this layer (for elementwise costs / buffering).
+    pub out_elements: usize,
+    /// Input elements (DRAM / buffer traffic).
+    pub in_elements: usize,
+    /// Digital ECU ops (sparse bookkeeping, IN statistics, residual adds).
+    pub ecu_ops: usize,
+}
+
+/// Lower a model into per-layer jobs. Fusion lookahead: a Norm/Act layer
+/// immediately following an MVM layer is folded into that MVM layer's
+/// chain (this is what block-level pipelining exploits); when pipelining is
+/// off the engine still sees them in the chain but charges separate-pass
+/// costs.
+pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> {
+    let infos = model.infos().expect("model must be shape-valid");
+    let mut jobs: Vec<LayerJob> = Vec::new();
+    for info in &infos {
+        let in_el = info.in_shape.elements();
+        let out_el = info.out_shape.elements();
+        match &info.layer {
+            Layer::Dense { in_f, out_f, .. } => {
+                let mvm = MvmJob {
+                    block: BlockKind::Dense,
+                    out_rows: *out_f,
+                    reduction: *in_f,
+                    symbols: batch,
+                    exec_macs: in_f * out_f * batch,
+                    weight_bytes: in_f * out_f,
+                };
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: format!("dense{}x{}", in_f, out_f),
+                    mvms: vec![mvm],
+                    dense_macs: info.macs * batch,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops: 0,
+                });
+            }
+            Layer::Conv2d { in_ch, out_ch, k, .. } => {
+                let (ho, wo) = match info.out_shape {
+                    Shape::Chw(_, h, w) => (h, w),
+                    _ => unreachable!(),
+                };
+                let red = in_ch * k * k;
+                let mvm = MvmJob {
+                    block: BlockKind::Conv,
+                    out_rows: *out_ch,
+                    reduction: red,
+                    symbols: ho * wo * batch,
+                    exec_macs: out_ch * red * ho * wo * batch,
+                    weight_bytes: out_ch * red,
+                };
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: format!("conv{}x{}k{}", in_ch, out_ch, k),
+                    mvms: vec![mvm],
+                    dense_macs: info.macs * batch,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    // im2col gather bookkeeping
+                    ecu_ops: ho * wo * batch,
+                });
+            }
+            Layer::ConvT2d { in_ch, out_ch, k, s, p, .. } => {
+                let (h, w) = match info.in_shape {
+                    Shape::Chw(_, h, w) => (h, w),
+                    _ => unreachable!(),
+                };
+                let spec = TconvSpec::new(*k, *s, *p, h, w);
+                let census = spec.census();
+                let (ho, wo) = spec.out_dims();
+                let mut mvms = Vec::new();
+                let mut ecu_ops = ho * wo * batch; // addressing bookkeeping
+                if opts.sparse {
+                    // one MVM job per phase class, with the reduced kernel
+                    // width of that class (§III.C.1 / Fig. 9c)
+                    for ph in &census.per_phase {
+                        let red = in_ch * ph.taps_max.max(1);
+                        mvms.push(MvmJob {
+                            block: BlockKind::Conv,
+                            out_rows: *out_ch,
+                            reduction: red,
+                            symbols: ph.positions * batch,
+                            // exact executed MACs (edge positions do fewer)
+                            exec_macs: out_ch * in_ch * ph.taps_total * batch,
+                            weight_bytes: out_ch * red,
+                        });
+                    }
+                    // column-reintroduction bookkeeping in the ECU
+                    ecu_ops += census.per_phase.len() * batch;
+                } else {
+                    // zero-insertion execution: full k²·cin reduction at
+                    // every output position
+                    let red = in_ch * k * k;
+                    mvms.push(MvmJob {
+                        block: BlockKind::Conv,
+                        out_rows: *out_ch,
+                        reduction: red,
+                        symbols: ho * wo * batch,
+                        exec_macs: out_ch * red * ho * wo * batch,
+                        weight_bytes: out_ch * red,
+                    });
+                }
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: format!("tconv{}x{}k{}s{}", in_ch, out_ch, k, s),
+                    mvms,
+                    dense_macs: info.macs * batch,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops,
+                });
+            }
+            Layer::Norm(kind) => {
+                // fuse into the preceding MVM layer when one exists
+                if let Some(prev) = jobs.last_mut() {
+                    if !prev.mvms.is_empty() && prev.norm == NormKind::None {
+                        prev.norm = *kind;
+                        if *kind == NormKind::Instance {
+                            // µ/σ statistics in the ECU: 2 passes
+                            prev.ecu_ops += 2 * out_el * batch;
+                        }
+                        continue;
+                    }
+                }
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: "norm".into(),
+                    mvms: vec![],
+                    dense_macs: info.macs * batch,
+                    norm: *kind,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops: if *kind == NormKind::Instance { 2 * out_el * batch } else { 0 },
+                });
+            }
+            Layer::Act(kind) => {
+                if let Some(prev) = jobs.last_mut() {
+                    if !prev.mvms.is_empty() && prev.act == ActKind::None {
+                        prev.act = *kind;
+                        continue;
+                    }
+                }
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: "act".into(),
+                    mvms: vec![],
+                    dense_macs: info.macs * batch,
+                    norm: NormKind::None,
+                    act: *kind,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops: 0,
+                });
+            }
+            Layer::ResidualAdd { .. } => {
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: "residual".into(),
+                    mvms: vec![],
+                    dense_macs: info.macs * batch,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    // the skip-add happens digitally in the ECU
+                    ecu_ops: out_el * batch,
+                });
+            }
+            // pure bookkeeping
+            Layer::Reshape(..) | Layer::Flatten | Layer::ConcatVec(_) => {
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: "reshape".into(),
+                    mvms: vec![],
+                    dense_macs: 0,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops: 0,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn fusion_folds_norm_and_act_into_mvm_layers() {
+        let jobs = map_model(&zoo::dcgan(), 1, &OptFlags::all());
+        // every tconv job should have picked up its BN + ReLU
+        let mvm_jobs: Vec<_> = jobs.iter().filter(|j| !j.mvms.is_empty()).collect();
+        assert!(mvm_jobs.len() >= 6);
+        let fused = mvm_jobs
+            .iter()
+            .filter(|j| j.norm != NormKind::None && j.act != ActKind::None)
+            .count();
+        assert!(fused >= 5, "BN+ReLU must fuse behind tconvs: {fused}");
+    }
+
+    #[test]
+    fn sparse_splits_tconv_into_phases() {
+        let dense_jobs = map_model(&zoo::dcgan(), 1, &OptFlags::baseline());
+        let sparse_jobs = map_model(&zoo::dcgan(), 1, &OptFlags::all());
+        let dense_mvms: usize = dense_jobs.iter().map(|j| j.mvms.len()).sum();
+        let sparse_mvms: usize = sparse_jobs.iter().map(|j| j.mvms.len()).sum();
+        assert!(sparse_mvms > dense_mvms, "{sparse_mvms} vs {dense_mvms}");
+    }
+
+    #[test]
+    fn sparse_reduces_executed_macs_but_not_workload() {
+        for model in zoo::all_generators() {
+            let a = map_model(&model, 1, &OptFlags::baseline());
+            let b = map_model(&model, 1, &OptFlags::all());
+            let exec = |jobs: &[LayerJob]| -> usize {
+                jobs.iter().flat_map(|j| &j.mvms).map(|m| m.exec_macs).sum()
+            };
+            let dense = |jobs: &[LayerJob]| -> usize { jobs.iter().map(|j| j.dense_macs).sum() };
+            assert!(exec(&b) < exec(&a), "{}: sparse must cut executed MACs", model.name);
+            assert_eq!(dense(&a), dense(&b), "workload op count is invariant");
+        }
+    }
+
+    #[test]
+    fn batch_scales_symbols_linearly() {
+        let j1 = map_model(&zoo::condgan(), 1, &OptFlags::all());
+        let j4 = map_model(&zoo::condgan(), 4, &OptFlags::all());
+        let sym = |jobs: &[LayerJob]| -> usize {
+            jobs.iter().flat_map(|j| &j.mvms).map(|m| m.symbols).sum()
+        };
+        assert_eq!(4 * sym(&j1), sym(&j4));
+    }
+
+    #[test]
+    fn dense_layers_go_to_dense_block_convs_to_conv_block() {
+        let jobs = map_model(&zoo::condgan(), 1, &OptFlags::all());
+        let dense_blocks: Vec<_> = jobs
+            .iter()
+            .flat_map(|j| &j.mvms)
+            .map(|m| m.block)
+            .collect();
+        assert!(dense_blocks.contains(&BlockKind::Dense));
+        assert!(dense_blocks.contains(&BlockKind::Conv));
+    }
+}

@@ -1,0 +1,27 @@
+//! The PhotoGAN architectural simulator.
+//!
+//! This is the counterpart of the paper's "comprehensive simulator with
+//! optoelectronic device models aggregated to create a simulatable
+//! architectural model" (§IV). Given a [`crate::models::Model`], an
+//! [`crate::arch::Accelerator`] and a set of [`options::OptFlags`], it maps
+//! every layer onto the MVM blocks, applies the three co-design
+//! optimizations (sparse dataflow, two-level pipelining, power gating) and
+//! produces a [`result::SimReport`] with per-layer latency/energy traces
+//! and the paper's two headline metrics, GOPS and EPB.
+//!
+//! Modeling approach: tile-level list scheduling. Each layer becomes a set
+//! of MVM *tile rounds* over the K×N banks of the owning block's units;
+//! per-symbol and per-reload costs come from [`crate::arch::unit`]; the
+//! elementwise chain (norm → activation) either streams fused behind the
+//! MVM block (pipelined) or runs as separate buffered passes with O/E/O
+//! conversions (baseline).
+
+pub mod engine;
+pub mod mapper;
+pub mod options;
+pub mod result;
+
+pub use engine::{simulate, simulate_mapped};
+pub use mapper::{LayerJob, MvmJob};
+pub use options::OptFlags;
+pub use result::{LayerTrace, SimReport};

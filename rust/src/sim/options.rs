@@ -1,0 +1,74 @@
+//! Optimization toggles (the paper's Fig. 12 sensitivity axes).
+
+/// Which of the three co-design optimizations are enabled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptFlags {
+    /// Sparse computation dataflow for transposed convolutions (§III.C.1).
+    pub sparse: bool,
+    /// Two-level execution pipelining (§III.C.2): stage-level overlap inside
+    /// MVM units + block-level fusion of dense→act and conv→norm→act.
+    pub pipelined: bool,
+    /// Power gating + shared DAC array (§III.C.3).
+    pub power_gated: bool,
+}
+
+impl OptFlags {
+    /// Paper's "Baseline": none of the optimizations.
+    pub fn baseline() -> Self {
+        OptFlags { sparse: false, pipelined: false, power_gated: false }
+    }
+
+    /// Paper's "S/W Optimized": sparse dataflow only.
+    pub fn sw_optimized() -> Self {
+        OptFlags { sparse: true, pipelined: false, power_gated: false }
+    }
+
+    /// Paper's "Pipelined": pipelining only.
+    pub fn pipelined_only() -> Self {
+        OptFlags { sparse: false, pipelined: true, power_gated: false }
+    }
+
+    /// Paper's "Power Gating": gating only.
+    pub fn power_gating_only() -> Self {
+        OptFlags { sparse: false, pipelined: false, power_gated: true }
+    }
+
+    /// Paper's "S/W Optimized + Pipelined + Power Gating" (the PhotoGAN
+    /// operating point).
+    pub fn all() -> Self {
+        OptFlags { sparse: true, pipelined: true, power_gated: true }
+    }
+
+    /// The five Fig. 12 configurations in presentation order.
+    pub fn fig12_sweep() -> [(&'static str, OptFlags); 5] {
+        [
+            ("Baseline", OptFlags::baseline()),
+            ("S/W Optimized", OptFlags::sw_optimized()),
+            ("Pipelined", OptFlags::pipelined_only()),
+            ("Power Gating", OptFlags::power_gating_only()),
+            ("All (PhotoGAN)", OptFlags::all()),
+        ]
+    }
+}
+
+impl Default for OptFlags {
+    fn default() -> Self {
+        OptFlags::all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_distinct() {
+        let sweep = OptFlags::fig12_sweep();
+        for (i, (_, a)) in sweep.iter().enumerate() {
+            for (_, b) in sweep.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+        assert_eq!(OptFlags::default(), OptFlags::all());
+    }
+}

@@ -1,0 +1,133 @@
+//! Simulation results: per-layer traces, energy breakdown, GOPS / EPB.
+
+use crate::sim::options::OptFlags;
+
+/// Energy breakdown by subsystem (J).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// MVM units doing useful work (laser + converters + detectors + holds).
+    pub mvm_active: f64,
+    /// Units powered but idle (zero when power gating is on).
+    pub idle: f64,
+    /// Normalization + activation streaming.
+    pub elementwise: f64,
+    /// Extra O/E/O conversions at un-pipelined block boundaries.
+    pub oeo: f64,
+    /// ECU controller + digital bookkeeping ops.
+    pub ecu: f64,
+    /// DRAM traffic (weights + activations).
+    pub dram: f64,
+    /// PCMC route switching.
+    pub pcmc: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mvm_active + self.idle + self.elementwise + self.oeo + self.ecu + self.dram + self.pcmc
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.mvm_active += other.mvm_active;
+        self.idle += other.idle;
+        self.elementwise += other.elementwise;
+        self.oeo += other.oeo;
+        self.ecu += other.ecu;
+        self.dram += other.dram;
+        self.pcmc += other.pcmc;
+    }
+}
+
+/// Per-layer execution trace.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub index: usize,
+    pub name: String,
+    pub latency: f64,
+    pub energy: EnergyBreakdown,
+    /// Dense-equivalent (workload) MACs.
+    pub dense_macs: usize,
+    /// MACs actually executed on the banks.
+    pub exec_macs: usize,
+    /// Tile rounds scheduled (0 for elementwise layers).
+    pub tile_rounds: usize,
+}
+
+/// Full simulation report for one model × one configuration × one opt set.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub model: String,
+    pub opts: OptFlags,
+    pub batch: usize,
+    /// End-to-end inference latency (s) for the whole batch.
+    pub latency: f64,
+    pub energy: EnergyBreakdown,
+    pub layers: Vec<LayerTrace>,
+    /// Workload op count (2 ops per MAC) the platform is scored on.
+    pub total_ops: f64,
+    /// Bits processed (ops × precision) — the denominator of EPB.
+    pub total_bits: f64,
+}
+
+impl SimReport {
+    /// Achieved giga-operations per second (dense-equivalent ops / time) —
+    /// the paper's Fig. 13 metric. Skipping structural zeros *raises* this,
+    /// exactly as in the paper, because the workload op count is fixed.
+    pub fn gops(&self) -> f64 {
+        self.total_ops / self.latency / 1e9
+    }
+
+    /// Energy per bit (J/bit) — the paper's Fig. 14 metric.
+    pub fn epb(&self) -> f64 {
+        self.energy.total() / self.total_bits
+    }
+
+    /// Average power over the run (W) — checked against the 100 W cap.
+    pub fn avg_power(&self) -> f64 {
+        self.energy.total() / self.latency
+    }
+
+    /// GOPS/EPB — the DSE objective (paper Fig. 11's y-axis).
+    pub fn gops_per_epb(&self) -> f64 {
+        self.gops() / self.epb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_sums_components() {
+        let e = EnergyBreakdown {
+            mvm_active: 1.0,
+            idle: 2.0,
+            elementwise: 3.0,
+            oeo: 4.0,
+            ecu: 5.0,
+            dram: 6.0,
+            pcmc: 7.0,
+        };
+        assert!((e.total() - 28.0).abs() < 1e-12);
+        let mut a = EnergyBreakdown::default();
+        a.add(&e);
+        a.add(&e);
+        assert!((a.total() - 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_derive_from_totals() {
+        let r = SimReport {
+            model: "toy".into(),
+            opts: OptFlags::all(),
+            batch: 1,
+            latency: 1e-3,
+            energy: EnergyBreakdown { mvm_active: 1e-3, ..Default::default() },
+            layers: vec![],
+            total_ops: 2e9,
+            total_bits: 1.6e10,
+        };
+        assert!((r.gops() - 2000.0).abs() < 1e-9);
+        assert!((r.epb() - 1e-3 / 1.6e10).abs() < 1e-20);
+        assert!((r.avg_power() - 1.0).abs() < 1e-12);
+    }
+}

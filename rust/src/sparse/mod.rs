@@ -1,0 +1,29 @@
+//! The paper's **sparse computation dataflow** for transposed convolutions
+//! (§III.C.1, Fig. 9).
+//!
+//! A transposed convolution is classically executed by zero-inserting the
+//! input (stride-1 lattice → stride-s lattice), padding, and running a
+//! normal convolution — which feeds the compute array mostly zeros. The
+//! paper's optimization: in the flattened (im2col) view, identify the
+//! all-zero columns of the input patch matrix and delete them together with
+//! the corresponding kernel elements, leaving a *reduced dot product* per
+//! output element; the ECU reintroduces the removed columns' bookkeeping to
+//! keep output addressing correct.
+//!
+//! The crucial structure (exploited by both this module and the L1 Pallas
+//! kernel): output positions that share the same **phase**
+//! `(oy mod s, ox mod s)` share an identical zero pattern, so there are
+//! only `s²` distinct reduced kernels — the dataflow never inspects data,
+//! it is fully static.
+//!
+//! This module provides:
+//! - [`tconv::TconvSpec`] — tap enumeration + the static zero-column census
+//!   that feeds the simulator's op counts,
+//! - [`tconv::tconv2d_dense`] / [`tconv::tconv2d_sparse`] — functional
+//!   references (zero-insertion path vs reduced-dot-product path) proven
+//!   equal by property tests, mirroring the python `ref.py` ⇄ Pallas-kernel
+//!   pair at L1.
+
+pub mod tconv;
+
+pub use tconv::{tconv2d_dense, tconv2d_sparse, Census, TconvSpec};

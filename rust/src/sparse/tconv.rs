@@ -1,0 +1,417 @@
+//! Transposed-convolution tap analysis and functional references.
+
+/// Static description of one 2-D transposed convolution at spatial level
+/// (channels factor out — every (cin, cout) pair sees the same pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TconvSpec {
+    /// Square kernel size.
+    pub k: usize,
+    /// Stride (zero-insertion factor).
+    pub s: usize,
+    /// Padding of the *forward* conv this transposes.
+    pub p: usize,
+    /// Input spatial dims.
+    pub h: usize,
+    pub w: usize,
+}
+
+/// Per-phase-class statistics (exact, edges included).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseInfo {
+    pub py: usize,
+    pub px: usize,
+    /// Output positions in this phase class.
+    pub positions: usize,
+    /// Total valid taps across those positions.
+    pub taps_total: usize,
+    /// Maximum taps any position in this class sees (= the reduced-kernel
+    /// width the hardware must provision for this class).
+    pub taps_max: usize,
+}
+
+/// Result of the static zero-column census (spatial level; multiply by
+/// `cin·cout` for full layer MACs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Census {
+    /// MACs the zero-insertion (dense) execution performs.
+    pub dense_macs: usize,
+    /// MACs after zero-column elimination.
+    pub sparse_macs: usize,
+    /// Number of distinct phase classes (≤ s²).
+    pub phases: usize,
+    /// Taps per phase class, indexed `[py][px]` (interior positions).
+    pub taps_per_phase: Vec<Vec<usize>>,
+    /// Exact per-phase statistics (edges included).
+    pub per_phase: Vec<PhaseInfo>,
+}
+
+impl Census {
+    /// dense/sparse MAC ratio — the paper's op-reduction factor (≈ s² in
+    /// the interior).
+    pub fn reduction(&self) -> f64 {
+        if self.sparse_macs == 0 {
+            1.0
+        } else {
+            self.dense_macs as f64 / self.sparse_macs as f64
+        }
+    }
+}
+
+impl TconvSpec {
+    pub fn new(k: usize, s: usize, p: usize, h: usize, w: usize) -> Self {
+        assert!(k >= 1 && s >= 1 && h >= 1 && w >= 1);
+        assert!(k > p, "padding must be smaller than kernel");
+        // output dims (h-1)s + k - 2p must be positive
+        assert!(
+            (h - 1) * s + k > 2 * p && (w - 1) * s + k > 2 * p,
+            "degenerate transposed conv: k={k} s={s} p={p} on {h}x{w}"
+        );
+        TconvSpec { k, s, p, h, w }
+    }
+
+    /// Output spatial dims: `(h-1)·s + k − 2p`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        ((self.h - 1) * self.s + self.k - 2 * self.p, (self.w - 1) * self.s + self.k - 2 * self.p)
+    }
+
+    /// Phase class of an output position.
+    pub fn phase_of(&self, oy: usize, ox: usize) -> (usize, usize) {
+        (oy % self.s, ox % self.s)
+    }
+
+    /// Valid (non-zero) taps for output position `(oy, ox)`: returns
+    /// `(ky, kx, iy, ix)` — kernel index (in the *transposed* orientation,
+    /// i.e. the index into the flipped forward kernel) and the source input
+    /// element. Everything the dense path would multiply by an inserted
+    /// zero is absent.
+    pub fn taps(&self, oy: usize, ox: usize) -> Vec<(usize, usize, usize, usize)> {
+        let mut out = Vec::new();
+        // dense equivalence: output(oy) = Σ_ky z[oy + ky - (k-1) + p] · wf[ky]
+        // where z is the zero-inserted input (z[j·s] = x[j]) and wf the
+        // flipped kernel. A tap is real iff the z index lands on the lattice.
+        let off = self.k as isize - 1 - self.p as isize;
+        for ky in 0..self.k {
+            let zy = oy as isize + ky as isize - off;
+            if zy < 0 || zy % self.s as isize != 0 {
+                continue;
+            }
+            let iy = (zy / self.s as isize) as usize;
+            if iy >= self.h {
+                continue;
+            }
+            for kx in 0..self.k {
+                let zx = ox as isize + kx as isize - off;
+                if zx < 0 || zx % self.s as isize != 0 {
+                    continue;
+                }
+                let ix = (zx / self.s as isize) as usize;
+                if ix >= self.w {
+                    continue;
+                }
+                out.push((ky, kx, iy, ix));
+            }
+        }
+        out
+    }
+
+    /// Static zero-column census over all output positions.
+    pub fn census(&self) -> Census {
+        let (ho, wo) = self.out_dims();
+        let dense = ho * wo * self.k * self.k;
+        let mut sparse = 0usize;
+        let mut taps_per_phase = vec![vec![0usize; self.s]; self.s];
+        let mut seen = vec![vec![false; self.s]; self.s];
+        let mut positions = vec![vec![0usize; self.s]; self.s];
+        let mut taps_total = vec![vec![0usize; self.s]; self.s];
+        let mut taps_max = vec![vec![0usize; self.s]; self.s];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let t = self.taps(oy, ox).len();
+                sparse += t;
+                let (py, px) = self.phase_of(oy, ox);
+                positions[py][px] += 1;
+                taps_total[py][px] += t;
+                taps_max[py][px] = taps_max[py][px].max(t);
+                // record an interior representative per phase (positions far
+                // from borders have the canonical count)
+                if oy >= self.k && ox >= self.k && oy + self.k < ho && ox + self.k < wo {
+                    taps_per_phase[py][px] = t;
+                    seen[py][px] = true;
+                }
+            }
+        }
+        let phases = seen.iter().flatten().filter(|&&b| b).count().max(1);
+        let mut per_phase = Vec::new();
+        for py in 0..self.s {
+            for px in 0..self.s {
+                if positions[py][px] > 0 {
+                    per_phase.push(PhaseInfo {
+                        py,
+                        px,
+                        positions: positions[py][px],
+                        taps_total: taps_total[py][px],
+                        taps_max: taps_max[py][px],
+                    });
+                }
+            }
+        }
+        Census { dense_macs: dense, sparse_macs: sparse, phases, taps_per_phase, per_phase }
+    }
+}
+
+/// Dense functional reference: zero-insert + pad + stride-1 correlation
+/// with the flipped kernel. `input` is `h×w` row-major; `kernel` is `k×k`
+/// row-major in the *forward-conv* orientation (PyTorch ConvTranspose2d
+/// semantics). Returns `ho×wo` row-major.
+pub fn tconv2d_dense(spec: &TconvSpec, input: &[f32], kernel: &[f32]) -> Vec<f32> {
+    assert_eq!(input.len(), spec.h * spec.w);
+    assert_eq!(kernel.len(), spec.k * spec.k);
+    let (ho, wo) = spec.out_dims();
+    // zero-inserted + padded buffer
+    let off = spec.k - 1 - spec.p;
+    let zh = (spec.h - 1) * spec.s + 1 + 2 * off;
+    let zw = (spec.w - 1) * spec.s + 1 + 2 * off;
+    let mut z = vec![0f32; zh * zw];
+    for iy in 0..spec.h {
+        for ix in 0..spec.w {
+            z[(iy * spec.s + off) * zw + (ix * spec.s + off)] = input[iy * spec.w + ix];
+        }
+    }
+    // stride-1 correlation with the flipped kernel
+    let mut out = vec![0f32; ho * wo];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let mut acc = 0f32;
+            for ky in 0..spec.k {
+                for kx in 0..spec.k {
+                    let v = z[(oy + ky) * zw + (ox + kx)];
+                    let wgt = kernel[(spec.k - 1 - ky) * spec.k + (spec.k - 1 - kx)];
+                    acc += v * wgt;
+                }
+            }
+            out[oy * wo + ox] = acc;
+        }
+    }
+    out
+}
+
+/// Sparse functional reference: reduced dot products over the static tap
+/// structure — *never touches an inserted zero*. Must equal
+/// [`tconv2d_dense`] exactly.
+///
+/// Perf note (EXPERIMENTS.md §Perf): taps are resolved **per phase axis**,
+/// not per output position — the `(k, Δ)` pairs along an axis depend only
+/// on `o mod s`, so the inner loop is an allocation-free stencil. The
+/// earlier per-position `taps()` Vec allocation made the sparse path ~2x
+/// *slower* than dense despite ~s² fewer MACs.
+pub fn tconv2d_sparse(spec: &TconvSpec, input: &[f32], kernel: &[f32]) -> Vec<f32> {
+    assert_eq!(input.len(), spec.h * spec.w);
+    assert_eq!(kernel.len(), spec.k * spec.k);
+    let (ho, wo) = spec.out_dims();
+    let mut out = vec![0f32; ho * wo];
+    let off = spec.k as isize - 1 - spec.p as isize;
+    let s = spec.s as isize;
+    // Per-phase axis tables: for o = s·q + phase, the valid kernel indices
+    // are those with (phase + k − off) ≡ 0 (mod s), hitting input index
+    // q + Δ where Δ = (phase + k − off)/s (bounds checked per position).
+    let phase_taps: Vec<Vec<(usize, isize)>> = (0..spec.s)
+        .map(|ph| {
+            (0..spec.k)
+                .filter_map(|kk| {
+                    let r = ph as isize + kk as isize - off;
+                    (r.rem_euclid(s) == 0).then_some((kk, r.div_euclid(s)))
+                })
+                .collect()
+        })
+        .collect();
+    for oy in 0..ho {
+        let (py, qy) = (oy % spec.s, (oy / spec.s) as isize);
+        let orow = oy * wo;
+        for &(ky, dy) in &phase_taps[py] {
+            let iy = qy + dy;
+            if iy < 0 || iy >= spec.h as isize {
+                continue;
+            }
+            let krow = (spec.k - 1 - ky) * spec.k;
+            let irow = iy as usize * spec.w;
+            // x axis phase-major: each (kx, Δx) tap becomes a strided
+            // AXPY over a contiguous input slice — no modulo or bounds
+            // test in the inner loop (2nd perf iteration, §Perf)
+            for px in 0..spec.s.min(wo) {
+                for &(kx, dx) in &phase_taps[px] {
+                    let wgt = kernel[krow + (spec.k - 1 - kx)];
+                    let qx_lo = (-dx).max(0) as usize;
+                    // ox = s·qx + px < wo  and  ix = qx + Δx < w
+                    let qx_out = (wo - 1 - px) / spec.s + 1;
+                    let qx_in = (spec.w as isize - dx).max(0) as usize;
+                    let qx_hi = qx_out.min(qx_in);
+                    for qx in qx_lo..qx_hi {
+                        let ix = (qx as isize + dx) as usize;
+                        out[orow + spec.s * qx + px] += input[irow + ix] * wgt;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Multi-channel sparse transposed conv: `input[cin][h·w]`,
+/// `kernel[cin][cout][k·k]` (PyTorch ConvTranspose2d layout), returns
+/// `out[cout][ho·wo]`. Used as the rust-side functional oracle for the
+/// L1 kernel's semantics.
+pub fn tconv2d_sparse_mc(
+    spec: &TconvSpec,
+    input: &[Vec<f32>],
+    kernel: &[Vec<Vec<f32>>],
+) -> Vec<Vec<f32>> {
+    let cin = input.len();
+    assert_eq!(kernel.len(), cin);
+    let cout = kernel[0].len();
+    let (ho, wo) = spec.out_dims();
+    let mut out = vec![vec![0f32; ho * wo]; cout];
+    for ci in 0..cin {
+        for co in 0..cout {
+            let partial = tconv2d_sparse(spec, &input[ci], &kernel[ci][co]);
+            for (o, p) in out[co].iter_mut().zip(partial) {
+                *o += p;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn paper_example_3x3_k_s1_p1_on_2x2() {
+        // Fig. 9: 3×3 filter, stride 1, padding 1 on a 2×2 input → zero
+        // insertion does nothing at s=1 (no lattice gaps) so dense == sparse
+        // MACs except padding-edge trimming.
+        let spec = TconvSpec::new(3, 1, 1, 2, 2);
+        assert_eq!(spec.out_dims(), (2, 2));
+        let c = spec.census();
+        assert_eq!(c.dense_macs, 2 * 2 * 9);
+        // at s=1 every lattice index is valid; only out-of-bounds (padding)
+        // taps are trimmed: corner positions of a 2x2 see 4 valid taps each
+        assert_eq!(c.sparse_macs, 16);
+        assert!(c.reduction() > 2.0);
+    }
+
+    #[test]
+    fn stride2_interior_reduction_is_s_squared() {
+        let spec = TconvSpec::new(4, 2, 1, 16, 16);
+        let c = spec.census();
+        // interior phases each see k²/s² = 4 taps
+        for row in &c.taps_per_phase {
+            for &t in row {
+                assert_eq!(t, 4, "interior taps per phase must be k²/s²");
+            }
+        }
+        assert_eq!(c.phases, 4);
+        // global reduction ≈ s² = 4 (padding-trimmed edges push it a bit
+        // above the interior value)
+        assert!((3.5..=4.6).contains(&c.reduction()), "r={}", c.reduction());
+    }
+
+    #[test]
+    fn sparse_equals_dense_functionally() {
+        check("tconv sparse == dense", 64, |g| {
+            let k = g.usize_in(1, 5);
+            let s = g.usize_in(1, 3);
+            let p = g.usize_in(0, (k - 1) / 2); // real nets keep k > 2p-1 (k4p1, k3p1, k7p3)
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 6);
+            let spec = TconvSpec::new(k, s, p, h, w);
+            let input = g.vec_f32(h * w, -1.0, 1.0);
+            let kernel = g.vec_f32(k * k, -1.0, 1.0);
+            let dense = tconv2d_dense(&spec, &input, &kernel);
+            let sparse = tconv2d_sparse(&spec, &input, &kernel);
+            assert_eq!(dense.len(), sparse.len());
+            for (i, (d, sp)) in dense.iter().zip(&sparse).enumerate() {
+                assert!(
+                    (d - sp).abs() <= 1e-5,
+                    "k={k} s={s} p={p} {h}x{w} out[{i}]: dense={d} sparse={sp}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn census_counts_match_tap_enumeration() {
+        check("census == Σ taps", 32, |g| {
+            let k = g.usize_in(1, 5);
+            let s = g.usize_in(1, 3);
+            let p = g.usize_in(0, (k - 1) / 2);
+            let spec = TconvSpec::new(k, s, p, g.usize_in(2, 8), g.usize_in(2, 8));
+            let (ho, wo) = spec.out_dims();
+            let total: usize =
+                (0..ho).flat_map(|oy| (0..wo).map(move |ox| (oy, ox)))
+                    .map(|(oy, ox)| spec.taps(oy, ox).len())
+                    .sum();
+            assert_eq!(spec.census().sparse_macs, total);
+        });
+    }
+
+    #[test]
+    fn no_tap_reads_an_inserted_zero() {
+        // every tap must point at a real input element (by construction the
+        // lattice test guarantees it; pin it against regressions)
+        let spec = TconvSpec::new(5, 3, 2, 4, 4);
+        let (ho, wo) = spec.out_dims();
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for (ky, kx, iy, ix) in spec.taps(oy, ox) {
+                    assert!(ky < 5 && kx < 5 && iy < 4 && ix < 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multichannel_accumulates_partial_sums() {
+        let spec = TconvSpec::new(3, 2, 1, 3, 3);
+        let mut g = crate::util::rng::Pcg32::new(7);
+        let input: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..9).map(|_| g.f32() - 0.5).collect())
+            .collect();
+        let kernel: Vec<Vec<Vec<f32>>> = (0..2)
+            .map(|_| {
+                (0..3)
+                    .map(|_| (0..9).map(|_| g.f32() - 0.5).collect())
+                    .collect()
+            })
+            .collect();
+        let out = tconv2d_sparse_mc(&spec, &input, &kernel);
+        assert_eq!(out.len(), 3);
+        // must equal channel-by-channel dense accumulation
+        for co in 0..3 {
+            let mut expect = vec![0f32; out[co].len()];
+            for ci in 0..2 {
+                for (e, v) in expect
+                    .iter_mut()
+                    .zip(tconv2d_dense(&spec, &input[ci], &kernel[ci][co]))
+                {
+                    *e += v;
+                }
+            }
+            for (a, b) in out[co].iter().zip(expect) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dcgan_stem_census() {
+        // DCGAN stem tconv: k4 s1 p0 on 1x1 -> 4x4, all taps trivially map
+        // to the single input pixel.
+        let spec = TconvSpec::new(4, 1, 0, 1, 1);
+        assert_eq!(spec.out_dims(), (4, 4));
+        let c = spec.census();
+        assert_eq!(c.sparse_macs, 16, "each output reads the 1 input once");
+        assert_eq!(c.dense_macs, 16 * 16);
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Grammar: `<command> [--key value | --switch]...`. A flag followed by a
+//! non-`--` token takes it as its value; otherwise it is a boolean switch.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse from an argument list (without argv[0]).
+    pub fn parse(args: &[String]) -> Cli {
+        let command = args.first().cloned().unwrap_or_default();
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let next_is_value =
+                    args.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1; // stray token: ignored (caller may warn)
+            }
+        }
+        Cli { command, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Parse an `N,K,L,M` quadruple.
+pub fn parse_quad(s: &str) -> Option<(usize, usize, usize, usize)> {
+    let parts: Vec<usize> = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+    if parts.len() == 4 {
+        Some((parts[0], parts[1], parts[2], parts[3]))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_values_and_switches() {
+        let c = Cli::parse(&argv(&["simulate", "--model", "dcgan", "--no-sparse", "--batch", "4"]));
+        assert_eq!(c.command, "simulate");
+        assert_eq!(c.get("model"), Some("dcgan"));
+        assert!(c.has("no-sparse"));
+        assert_eq!(c.get_usize("batch", 1), 4);
+        assert_eq!(c.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn empty_args_are_fine() {
+        let c = Cli::parse(&[]);
+        assert_eq!(c.command, "");
+        assert!(c.flags.is_empty());
+    }
+
+    #[test]
+    fn trailing_switch_is_boolean() {
+        let c = Cli::parse(&argv(&["dse", "--verbose"]));
+        assert_eq!(c.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn quad_parsing() {
+        assert_eq!(parse_quad("16,2,11,3"), Some((16, 2, 11, 3)));
+        assert_eq!(parse_quad(" 16 , 2 , 11 , 3 "), Some((16, 2, 11, 3)));
+        assert_eq!(parse_quad("16,2,11"), None);
+        assert_eq!(parse_quad("a,b,c,d"), None);
+    }
+}

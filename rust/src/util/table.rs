@@ -1,0 +1,162 @@
+//! Minimal ASCII table renderer for bench/report output.
+//!
+//! The bench harness prints paper-style tables with it (no external
+//! table/formatting crates are available offline).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: a header row plus data rows, rendered with
+/// box-drawing-free ASCII so it survives any terminal / log file.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            title: None,
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Attach a title printed above the table.
+    pub fn with_title<S: Into<String>>(mut self, title: S) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Append a data row; must match the header width.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string. First column is left-aligned, the rest
+    /// right-aligned (numeric convention), unless a cell is non-numeric.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let aligns: Vec<Align> = (0..ncol)
+            .map(|i| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let pad = widths[i].saturating_sub(c.chars().count());
+                    match aligns[i] {
+                        Align::Left => format!(" {}{} ", c, " ".repeat(pad)),
+                        Align::Right => format!(" {}{} ", " ".repeat(pad), c),
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a ratio like the paper does ("134.64x").
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{:.2}x", r)
+}
+
+/// Format a float with 2 decimals.
+pub fn f2(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+/// Format a float with 3 significant-ish decimals for small values.
+pub fn f3(x: f64) -> String {
+    format!("{:.3}", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["model", "GOPS"]).with_title("demo");
+        t.row(vec!["DCGAN", "123.4"]);
+        t.row(vec!["CycleGAN-long-name", "7.0"]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() == 5, "{s}");
+        // header separator row present
+        assert!(s.lines().nth(2).unwrap().starts_with('-'));
+        // right alignment of numeric column: "7.0" ends the line-ish
+        assert!(s.lines().last().unwrap().trim_end().ends_with("7.0"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(4.4), "4.40x");
+        assert_eq!(f2(45.589), "45.59");
+    }
+}

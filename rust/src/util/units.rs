@@ -1,0 +1,135 @@
+//! SI-unit conversion helpers and dB/dBm arithmetic.
+//!
+//! Internal convention across the crate: **seconds, watts, joules, hertz**
+//! as `f64`. These helpers exist so device constants can be written in the
+//! units the paper quotes them in (ns, µs, ps, mW, µW, dBm).
+
+/// Nanoseconds → seconds.
+#[inline]
+pub const fn ns(x: f64) -> f64 {
+    x * 1e-9
+}
+
+/// Microseconds → seconds.
+#[inline]
+pub const fn us(x: f64) -> f64 {
+    x * 1e-6
+}
+
+/// Picoseconds → seconds.
+#[inline]
+pub const fn ps(x: f64) -> f64 {
+    x * 1e-12
+}
+
+/// Milliwatts → watts.
+#[inline]
+pub const fn mw(x: f64) -> f64 {
+    x * 1e-3
+}
+
+/// Microwatts → watts.
+#[inline]
+pub const fn uw(x: f64) -> f64 {
+    x * 1e-6
+}
+
+/// Gigahertz → hertz.
+#[inline]
+pub const fn ghz(x: f64) -> f64 {
+    x * 1e9
+}
+
+/// Watts → dBm.
+#[inline]
+pub fn watts_to_dbm(w: f64) -> f64 {
+    10.0 * (w / 1e-3).log10()
+}
+
+/// dBm → watts.
+#[inline]
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    1e-3 * 10f64.powf(dbm / 10.0)
+}
+
+/// Linear power ratio → dB.
+#[inline]
+pub fn ratio_to_db(r: f64) -> f64 {
+    10.0 * r.log10()
+}
+
+/// dB → linear power ratio.
+#[inline]
+pub fn db_to_ratio(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Pretty-print a seconds value with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.2} ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+/// Pretty-print a joules value with an adaptive unit (pJ/nJ/µJ/mJ/J).
+pub fn fmt_energy(j: f64) -> String {
+    let a = j.abs();
+    if a < 1e-9 {
+        format!("{:.2} pJ", j * 1e12)
+    } else if a < 1e-6 {
+        format!("{:.2} nJ", j * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µJ", j * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} mJ", j * 1e3)
+    } else {
+        format!("{:.2} J", j)
+    }
+}
+
+/// Pretty-print watts (µW/mW/W).
+pub fn fmt_power(w: f64) -> String {
+    let a = w.abs();
+    if a < 1e-3 {
+        format!("{:.2} µW", w * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} mW", w * 1e3)
+    } else {
+        format!("{:.2} W", w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert!((dbm_to_watts(watts_to_dbm(0.01)) - 0.01).abs() < 1e-12);
+        assert!((db_to_ratio(ratio_to_db(42.0)) - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_points() {
+        assert!((watts_to_dbm(1e-3) - 0.0).abs() < 1e-12); // 1 mW = 0 dBm
+        assert!((dbm_to_watts(30.0) - 1.0).abs() < 1e-12); // 30 dBm = 1 W
+        assert!((db_to_ratio(3.0103) - 2.0).abs() < 1e-3); // 3 dB ≈ 2x
+        assert_eq!(ns(20.0), 20e-9);
+        assert_eq!(mw(27.5), 27.5e-3);
+    }
+
+    #[test]
+    fn formatting_picks_units() {
+        assert_eq!(fmt_time(2.5e-9), "2.50 ns");
+        assert_eq!(fmt_time(3.1e-5), "31.00 µs");
+        assert_eq!(fmt_energy(1.5e-12), "1.50 pJ");
+        assert_eq!(fmt_power(0.0275), "27.50 mW");
+    }
+}
