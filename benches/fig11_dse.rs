@@ -5,6 +5,7 @@
 //! Also times the sweep itself (the DSE engine is an L3 hot path —
 //! EXPERIMENTS.md §Perf tracks it).
 
+use photogan::api::Session;
 use photogan::dse::Grid;
 use photogan::report::{self, PAPER_OPTIMUM};
 use std::time::Instant;
@@ -12,8 +13,9 @@ use std::time::Instant;
 fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let grid = Grid::paper();
+    let session = Session::new().expect("paper optimum is valid");
     let t0 = Instant::now();
-    let (table, pts) = report::fig11(&grid, threads);
+    let (table, pts) = report::fig11(&session, &grid, threads);
     let wall = t0.elapsed().as_secs_f64();
     table.print();
     println!(

@@ -6,10 +6,12 @@
 //! helps, the combined config wins everywhere, and CycleGAN benefits least
 //! from the sparse dataflow (fewest transposed-conv MACs).
 
+use photogan::api::Session;
 use photogan::report::{self, PAPER_FIG12_COMBINED};
 
 fn main() {
-    let (table, per_model) = report::fig12();
+    let session = Session::new().expect("paper optimum is valid");
+    let (table, per_model) = report::fig12(&session);
     table.print();
 
     let mut combined = Vec::new();

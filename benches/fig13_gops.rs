@@ -2,10 +2,12 @@
 //! baseline platforms, per model, with the paper's average ratios for
 //! comparison.
 
+use photogan::api::Session;
 use photogan::report::{self, PAPER_GOPS_RATIOS};
 
 fn main() {
-    let data = report::comparison_data();
+    let session = Session::new().expect("paper optimum is valid");
+    let data = session.compare();
     report::fig13(&data).print();
 
     let pg = &data.series[0];
@@ -13,11 +15,12 @@ fn main() {
     // average ratios track the paper's within 15% (the calibration test in
     // baselines::platform also enforces this under `cargo test`).
     let mut ratios = Vec::new();
-    for (i, (name, gops, _)) in data.series.iter().enumerate().skip(1) {
-        for (j, g) in gops.iter().enumerate() {
-            assert!(pg.1[j] > *g, "{name} beats PhotoGAN on {}", data.model_names[j]);
+    for (i, s) in data.series.iter().enumerate().skip(1) {
+        let name = &s.platform;
+        for (j, g) in s.gops.iter().enumerate() {
+            assert!(pg.gops[j] > *g, "{name} beats PhotoGAN on {}", data.model_names[j]);
         }
-        let r: f64 = pg.1.iter().zip(gops).map(|(a, b)| a / b).sum::<f64>() / gops.len() as f64;
+        let r = data.avg_gops_ratio(i).expect("baseline ratio");
         let paper = PAPER_GOPS_RATIOS[i - 1];
         assert!(
             (r / paper - 1.0).abs() < 0.15,

@@ -1,19 +1,22 @@
 //! Bench target for paper Fig. 14: energy-per-bit across PhotoGAN and the
 //! five baseline platforms, per model, with the paper's average ratios.
 
+use photogan::api::Session;
 use photogan::report::{self, PAPER_EPB_RATIOS};
 
 fn main() {
-    let data = report::comparison_data();
+    let session = Session::new().expect("paper optimum is valid");
+    let data = session.compare();
     report::fig14(&data).print();
 
     let pg = &data.series[0];
     let mut ratios = Vec::new();
-    for (i, (name, _, epb)) in data.series.iter().enumerate().skip(1) {
-        for (j, e) in epb.iter().enumerate() {
-            assert!(pg.2[j] < *e, "{name} beats PhotoGAN on {}", data.model_names[j]);
+    for (i, s) in data.series.iter().enumerate().skip(1) {
+        let name = &s.platform;
+        for (j, e) in s.epb.iter().enumerate() {
+            assert!(pg.epb[j] < *e, "{name} beats PhotoGAN on {}", data.model_names[j]);
         }
-        let r: f64 = epb.iter().zip(&pg.2).map(|(b, a)| b / a).sum::<f64>() / epb.len() as f64;
+        let r = data.avg_epb_ratio(i).expect("baseline ratio");
         let paper = PAPER_EPB_RATIOS[i - 1];
         assert!(
             (r / paper - 1.0).abs() < 0.15,

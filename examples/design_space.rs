@@ -5,19 +5,21 @@
 //! global top-10 — showing *why* the paper's DSE shapes the chip the way
 //! it does (and where our device-up model disagrees; see EXPERIMENTS.md).
 //!
+//! All five sweeps share one `Session`, so the four models are mapped
+//! exactly once — the per-axis sweeps only re-cost the cached jobs.
+//!
 //! Run: `cargo run --release --example design_space [-- threads=8]`
 
-use photogan::dse::{explore, Grid};
-use photogan::models::zoo;
+use photogan::api::{Session, SweepRequest};
+use photogan::dse::Grid;
 use photogan::report::PAPER_OPTIMUM;
-use photogan::sim::OptFlags;
 use photogan::util::table::Table;
 
-fn main() {
+fn main() -> Result<(), photogan::api::ApiError> {
     let threads = std::env::args()
         .find_map(|a| a.strip_prefix("threads=").and_then(|v| v.parse().ok()))
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
-    let models = zoo::all_generators();
+    let session = Session::new()?;
     let (pn, pk, pl, pm) = PAPER_OPTIMUM;
 
     // --- axis sweeps through the paper point ------------------------------
@@ -27,7 +29,9 @@ fn main() {
         ("L", Grid { n: vec![pn], k: vec![pk], l: vec![1, 3, 5, 7, 9, 11, 13, 15], m: vec![pm] }),
         ("M", Grid { n: vec![pn], k: vec![pk], l: vec![pl], m: vec![1, 2, 3, 4, 5, 6] }),
     ] {
-        let mut pts = explore(&grid, &models, OptFlags::all(), threads);
+        let outcome = session
+            .sweep(&SweepRequest::builder().grid(grid).threads(threads).build()?)?;
+        let mut pts = outcome.points;
         pts.sort_by_key(|p| (p.n, p.k, p.l, p.m));
         let mut t = Table::new(vec![axis, "GOPS", "EPB (fJ/b)", "objective", "peak W"])
             .with_title(format!("sweep along {axis} through {PAPER_OPTIMUM:?}"));
@@ -51,8 +55,15 @@ fn main() {
     }
 
     // --- global sweep ------------------------------------------------------
-    let pts = explore(&Grid::paper(), &models, OptFlags::all(), threads);
-    println!("global optimum over {} configs:", Grid::paper().len());
+    let outcome = session.sweep(
+        &SweepRequest::builder().grid(Grid::paper()).threads(threads).build()?,
+    )?;
+    let pts = &outcome.points;
+    println!(
+        "global optimum over {} configs ({} mappings memoized):",
+        Grid::paper().len(),
+        session.mapping_cache_entries()
+    );
     for (i, p) in pts.iter().take(5).enumerate() {
         println!(
             "  #{} [N,K,L,M]=[{},{},{},{}] objective {:.3e} @ {:.2} W",
@@ -75,4 +86,5 @@ fn main() {
         paper_rank,
         pts.len()
     );
+    Ok(())
 }

@@ -1,26 +1,24 @@
-//! Quickstart: the whole PhotoGAN stack in one page.
+//! Quickstart: the whole PhotoGAN stack in one page, through the
+//! `photogan::api::Session` front door.
 //!
-//! 1. Assemble the paper's chip ([N,K,L,M] = [16,2,11,3]).
+//! 1. Open a session on the paper's chip ([N,K,L,M] = [16,2,11,3]).
 //! 2. Simulate DCGAN inference with and without the co-design
-//!    optimizations (latency / energy / GOPS / EPB).
-//! 3. Compare against the five baseline platforms.
-//! 4. If `make artifacts` has run, generate a real image batch through the
-//!    PJRT runtime (python never executes here).
+//!    optimizations (latency / energy / GOPS / EPB) via `SimRequest`.
+//! 3. Compare against the five baseline platforms (`Session::compare`).
+//! 4. Render the same outcome as an ASCII table and as JSON.
+//! 5. With `--features pjrt` and `make artifacts`: generate a real image
+//!    batch through the PJRT runtime (python never executes here).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use photogan::arch::accelerator::Accelerator;
-use photogan::arch::config::ArchConfig;
-use photogan::baselines::platform::all_platforms;
-use photogan::models::zoo;
-use photogan::runtime::Engine;
-use photogan::sim::{simulate, OptFlags};
+use photogan::api::{Session, SimRequest};
+use photogan::sim::OptFlags;
 use photogan::util::units::{fmt_energy, fmt_time};
-use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
-    // --- 1. the chip -----------------------------------------------------
-    let acc = Accelerator::new(ArchConfig::paper_optimum())?;
+fn main() -> Result<(), photogan::api::ApiError> {
+    // --- 1. the session --------------------------------------------------
+    let session = Session::new()?;
+    let acc = session.accelerator();
     println!(
         "PhotoGAN chip [N,K,L,M]=[{},{},{},{}]  peak power {:.2} W (cap {} W)",
         acc.cfg.n,
@@ -31,45 +29,63 @@ fn main() -> anyhow::Result<()> {
         acc.cfg.params.system.power_cap_w
     );
 
-    // --- 2. simulate DCGAN -----------------------------------------------
-    let dcgan = zoo::dcgan();
-    let base = simulate(&dcgan, &acc, 1, OptFlags::baseline());
-    let full = simulate(&dcgan, &acc, 1, OptFlags::all());
+    // --- 2. simulate DCGAN: baseline vs full optimizations ----------------
+    let base = session.simulate(
+        &SimRequest::builder().model("dcgan").opts(OptFlags::baseline()).build()?,
+    )?;
+    let full = session.simulate(&SimRequest::builder().model("dcgan").build()?)?;
+    let (b, f) = (&base.rows[0], &full.rows[0]);
     println!("\nDCGAN inference (batch 1):");
     println!(
         "  baseline : {:>9}  {:>9}  {:7.1} GOPS",
-        fmt_time(base.latency),
-        fmt_energy(base.energy.total()),
-        base.gops()
+        fmt_time(b.latency_s),
+        fmt_energy(b.energy_j),
+        b.gops
     );
     println!(
         "  PhotoGAN : {:>9}  {:>9}  {:7.1} GOPS   ({:.1}x less energy)",
-        fmt_time(full.latency),
-        fmt_energy(full.energy.total()),
-        full.gops(),
-        base.energy.total() / full.energy.total()
+        fmt_time(f.latency_s),
+        fmt_energy(f.energy_j),
+        f.gops,
+        b.energy_j / f.energy_j
     );
 
     // --- 3. baselines ------------------------------------------------------
+    let cmp = session.compare();
+    let dcgan_idx = 0; // model_names follows Table 1 order: DCGAN first
     println!("\nvs baseline platforms (DCGAN):");
-    for p in all_platforms() {
-        let r = p.evaluate(&dcgan, 1);
+    for s in cmp.series.iter().skip(1) {
         println!(
             "  {:16} {:8.2} GOPS   PhotoGAN is {:6.1}x faster, {:6.1}x more energy-efficient",
-            p.name,
-            r.gops(),
-            full.gops() / r.gops(),
-            r.epb() / full.epb()
+            s.platform,
+            s.gops[dcgan_idx],
+            cmp.series[0].gops[dcgan_idx] / s.gops[dcgan_idx],
+            s.epb[dcgan_idx] / cmp.series[0].epb[dcgan_idx]
         );
     }
 
-    // --- 4. real inference through PJRT ------------------------------------
+    // --- 4. one outcome, two renderings ------------------------------------
+    println!("\nevery outcome renders as a table and as JSON:");
+    full.to_table().print();
+    println!("{}", full.to_json());
+
+    // --- 5. real inference through PJRT (feature-gated) --------------------
+    pjrt_demo();
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_demo() {
+    use photogan::runtime::Engine;
+    use std::path::Path;
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Engine::load(&artifacts) {
         Ok(engine) => {
             let model = engine.model_names()[0].clone();
-            let out = engine.generate_sync(&model, &[(1, Some(3)), (2, Some(7))])?;
-            let n = engine.meta(&model).unwrap().output_elements;
+            let out = engine
+                .generate_sync(&model, &[(1, Some(3)), (2, Some(7))])
+                .expect("generation");
+            let n = engine.meta(&model).expect("meta").output_elements;
             let stats = |img: &[f32]| {
                 let mean = img.iter().sum::<f32>() / img.len() as f32;
                 let max = img.iter().cloned().fold(f32::MIN, f32::max);
@@ -85,5 +101,9 @@ fn main() -> anyhow::Result<()> {
             println!("\n(no artifacts — run `make artifacts` to enable real PJRT inference)");
         }
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_demo() {
+    println!("\n(build with `--features pjrt` + `make artifacts` for real PJRT inference)");
 }

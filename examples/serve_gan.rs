@@ -24,7 +24,7 @@ fn arg(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> photogan::Result<()> {
     let requests = arg("requests", 256);
     let max_batch = arg("batch", 8);
     let workers = arg("workers", 2);

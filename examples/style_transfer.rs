@@ -18,7 +18,7 @@ use photogan::util::rng::Pcg32;
 use photogan::util::units::{fmt_energy, fmt_time};
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> photogan::Result<()> {
     // --- analytical half: the photonic chip running full CycleGAN ---------
     let acc = Accelerator::new(ArchConfig::paper_optimum())?;
     let cycle = zoo::cyclegan();

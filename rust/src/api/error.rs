@@ -1,0 +1,173 @@
+//! Typed errors for the [`crate::api`] layer.
+//!
+//! Every failure mode a [`crate::api::Session`] request can hit is a named
+//! variant — no `panic!`/`assert!`/`process::exit` and no stringly-typed
+//! `anyhow` chains. The CLI maps these onto exit codes; library callers
+//! match on them.
+
+use crate::arch::config::ConfigError;
+use crate::util::cli::CliError;
+use std::fmt;
+
+/// Result alias for the API layer.
+pub type ApiResult<T> = Result<T, ApiError>;
+
+/// Typed API error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// The requested model is not in the session's registry (or, for
+    /// serving, not among the loaded artifacts).
+    UnknownModel { name: String, available: Vec<String> },
+    /// The architectural configuration is structurally invalid
+    /// (degenerate, over the crosstalk bound, bad `N,K,L,M` string…).
+    InvalidConfig(ConfigError),
+    /// The configuration's peak operational power exceeds the system cap
+    /// (only checked when a request opts into strict power validation —
+    /// the paper's Fig. 12 baselines intentionally run ungated).
+    PowerCapExceeded { peak_w: f64, cap_w: f64 },
+    /// Batch size must be ≥ 1.
+    InvalidBatch(usize),
+    /// A sweep grid with zero configurations.
+    EmptyGrid,
+    /// Thread count must be ≥ 1.
+    InvalidThreads(usize),
+    /// Serving worker count must be ≥ 1.
+    InvalidWorkers(usize),
+    /// A command-line flag failed to parse (carried into the API layer so
+    /// the CLI has a single error channel). An empty `flag` means the
+    /// error is not attributable to one flag (e.g. a stray positional).
+    InvalidFlag { flag: String, reason: String },
+    /// Loading or compiling the PJRT artifacts failed.
+    ArtifactError(String),
+    /// Serving infrastructure failure (worker/channel death).
+    Internal(String),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownModel { name, available } => {
+                write!(f, "unknown model '{name}' (available: {})", available.join(", "))
+            }
+            ApiError::InvalidConfig(e) => write!(f, "invalid config: {e}"),
+            ApiError::PowerCapExceeded { peak_w, cap_w } => {
+                write!(f, "peak power {peak_w:.1} W exceeds the {cap_w:.1} W cap")
+            }
+            ApiError::InvalidBatch(b) => write!(f, "batch must be ≥ 1 (got {b})"),
+            ApiError::EmptyGrid => write!(f, "sweep grid contains no configurations"),
+            ApiError::InvalidThreads(t) => write!(f, "threads must be ≥ 1 (got {t})"),
+            ApiError::InvalidWorkers(w) => write!(f, "workers must be ≥ 1 (got {w})"),
+            ApiError::InvalidFlag { flag, reason } if flag.is_empty() => {
+                write!(f, "invalid arguments: {reason}")
+            }
+            ApiError::InvalidFlag { flag, reason } => write!(f, "flag '--{flag}': {reason}"),
+            ApiError::ArtifactError(msg) => write!(f, "artifact error: {msg}"),
+            ApiError::Internal(msg) => write!(f, "internal serving error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ApiError::InvalidConfig(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ConfigError> for ApiError {
+    /// Configuration errors map onto the API's vocabulary; the power-cap
+    /// case gets its own first-class variant.
+    fn from(e: ConfigError) -> Self {
+        match e {
+            ConfigError::PowerCap(peak, cap) => {
+                ApiError::PowerCapExceeded { peak_w: peak, cap_w: cap }
+            }
+            other => ApiError::InvalidConfig(other),
+        }
+    }
+}
+
+impl From<CliError> for ApiError {
+    fn from(e: CliError) -> Self {
+        let flag = match &e {
+            CliError::UnknownFlag { flag }
+            | CliError::MissingValue { flag }
+            | CliError::UnexpectedValue { flag, .. }
+            | CliError::InvalidValue { flag, .. }
+            | CliError::DuplicateFlag { flag } => flag.clone(),
+            CliError::StrayToken { .. } => String::new(),
+        };
+        ApiError::InvalidFlag { flag, reason: e.to_string() }
+    }
+}
+
+impl ApiError {
+    /// Process exit code for the CLI: `2` for usage/validation errors,
+    /// `1` for runtime failures — matching the pre-Session `main.rs`
+    /// conventions.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            ApiError::ArtifactError(_) | ApiError::Internal(_) => 1,
+            _ => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_renders() {
+        let variants = [
+            ApiError::UnknownModel { name: "gan5".into(), available: vec!["DCGAN".into()] },
+            ApiError::InvalidConfig(ConfigError::TooManyWavelengths(40, 36)),
+            ApiError::PowerCapExceeded { peak_w: 120.0, cap_w: 100.0 },
+            ApiError::InvalidBatch(0),
+            ApiError::EmptyGrid,
+            ApiError::InvalidThreads(0),
+            ApiError::InvalidWorkers(0),
+            ApiError::InvalidFlag { flag: "batch".into(), reason: "missing value".into() },
+            ApiError::InvalidFlag { flag: String::new(), reason: "stray 'x'".into() },
+            ApiError::ArtifactError("no artifacts".into()),
+            ApiError::Internal("worker died".into()),
+        ];
+        for v in &variants {
+            assert!(!v.to_string().is_empty(), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn power_cap_config_error_promotes() {
+        let e: ApiError = ConfigError::PowerCap(150.0, 100.0).into();
+        assert_eq!(e, ApiError::PowerCapExceeded { peak_w: 150.0, cap_w: 100.0 });
+        let e: ApiError = ConfigError::Degenerate { n: 0, k: 1, l: 1, m: 1 }.into();
+        assert!(matches!(e, ApiError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn exit_codes_split_usage_vs_runtime() {
+        assert_eq!(ApiError::EmptyGrid.exit_code(), 2);
+        assert_eq!(ApiError::InvalidBatch(0).exit_code(), 2);
+        assert_eq!(ApiError::ArtifactError("x".into()).exit_code(), 1);
+        assert_eq!(ApiError::Internal("x".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn cli_errors_convert() {
+        let e: ApiError = CliError::MissingValue { flag: "batch".into() }.into();
+        assert!(matches!(e, ApiError::InvalidFlag { ref flag, .. } if flag == "batch"));
+    }
+
+    #[test]
+    fn stray_token_renders_without_flag_prefix() {
+        let e: ApiError = CliError::StrayToken { token: "junk".into() }.into();
+        assert_eq!(
+            e.to_string(),
+            "invalid arguments: unexpected argument 'junk' (flags start with '--')"
+        );
+    }
+}

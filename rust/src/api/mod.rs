@@ -1,0 +1,70 @@
+//! The unified PhotoGAN API: a [`Session`] facade plus builder-style
+//! request types — the single front door for simulation, design-space
+//! exploration, platform comparison, report generation, and serving.
+//!
+//! Every consumer (the five CLI subcommands, the benches, the examples,
+//! the report generator) routes through a `Session`, which owns:
+//!
+//! - an assembled [`crate::arch::Accelerator`],
+//! - a model registry (paper Table 1 generators by default),
+//! - a **memoized mapping cache** keyed by `(model, batch, OptFlags)` so
+//!   repeated requests — DSE sweeps, ablation grids, full report runs —
+//!   map each workload exactly once.
+//!
+//! Failures are typed ([`ApiError`]) instead of `assert!`s or process
+//! exits, and every outcome renders as both an ASCII table and JSON.
+//!
+//! # Example
+//!
+//! ```
+//! use photogan::api::{Session, SimRequest};
+//!
+//! let session = Session::new()?;
+//! let request = SimRequest::builder().model("dcgan").batch(4).build()?;
+//! let outcome = session.simulate(&request)?;
+//! assert_eq!(outcome.rows.len(), 1);
+//! assert!(outcome.rows[0].gops > 0.0);
+//! println!("{}", outcome.to_table().render());
+//! // machine-readable rendering of the same outcome
+//! let json = outcome.to_json();
+//! assert!(json.contains("\"command\":\"simulate\""));
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
+//!
+//! Unknown names, invalid configurations, and over-cap chips are typed
+//! errors:
+//!
+//! ```
+//! use photogan::api::{ApiError, Session, SimRequest};
+//!
+//! let session = Session::new()?;
+//! let request = SimRequest::builder().model("nope").build()?;
+//! assert!(matches!(
+//!     session.simulate(&request),
+//!     Err(ApiError::UnknownModel { .. })
+//! ));
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
+
+// The typed-error contract is enforced mechanically: no `unwrap`/`expect`
+// may land in the API layer (test modules opt out locally).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod error;
+pub mod outcome;
+pub mod request;
+#[cfg(feature = "pjrt")]
+pub mod serve;
+pub mod session;
+
+pub use error::{ApiError, ApiResult};
+pub use outcome::{
+    CompareOutcome, Outcome, PlatformSeries, ServeOutcome, SimOutcome, SimRow, SweepOutcome,
+};
+pub use request::{
+    default_threads, ModelSelect, SimRequest, SimRequestBuilder, SweepRequest,
+    SweepRequestBuilder,
+};
+#[cfg(feature = "pjrt")]
+pub use serve::{ServeRequest, ServeRequestBuilder};
+pub use session::Session;

@@ -1,0 +1,413 @@
+//! Unified result types for [`crate::api::Session`] requests.
+//!
+//! Every outcome renders two ways: `to_table()`/`to_tables()` for the
+//! human-readable CLI path (identical formatting to the pre-Session CLI)
+//! and `to_json()` for machine-readable `--json` output. The JSON is
+//! written with [`crate::util::json`] and round-trips through its parser
+//! (covered by the API integration tests).
+
+use crate::dse::DsePoint;
+use crate::sim::{OptFlags, SimReport};
+use crate::util::json::{num_arr, obj, str_arr, JsonValue};
+use crate::util::table::{f2, Table};
+use crate::util::units::{fmt_energy, fmt_time};
+
+/// One model's simulation metrics (a row of `photogan simulate`).
+#[derive(Debug, Clone)]
+pub struct SimRow {
+    pub model: String,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub gops: f64,
+    /// Energy per bit in femtojoules (the paper's Fig. 14 unit).
+    pub epb_fj: f64,
+    pub avg_power_w: f64,
+}
+
+impl SimRow {
+    pub(crate) fn from_report(r: &SimReport) -> SimRow {
+        SimRow {
+            model: r.model.clone(),
+            latency_s: r.latency,
+            energy_j: r.energy.total(),
+            gops: r.gops(),
+            epb_fj: r.epb() * 1e15,
+            avg_power_w: r.avg_power(),
+        }
+    }
+}
+
+/// Outcome of [`crate::api::Session::simulate`].
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// The `[N,K,L,M]` the request ran on.
+    pub config: (usize, usize, usize, usize),
+    pub batch: usize,
+    pub opts: OptFlags,
+    pub rows: Vec<SimRow>,
+}
+
+fn opts_json(opts: &OptFlags) -> JsonValue {
+    obj(vec![
+        ("sparse", JsonValue::Bool(opts.sparse)),
+        ("pipelined", JsonValue::Bool(opts.pipelined)),
+        ("power_gated", JsonValue::Bool(opts.power_gated)),
+    ])
+}
+
+fn config_json(c: (usize, usize, usize, usize)) -> JsonValue {
+    obj(vec![
+        ("n", JsonValue::Num(c.0 as f64)),
+        ("k", JsonValue::Num(c.1 as f64)),
+        ("l", JsonValue::Num(c.2 as f64)),
+        ("m", JsonValue::Num(c.3 as f64)),
+    ])
+}
+
+impl SimOutcome {
+    /// The `photogan simulate` table (same columns/formatting as the
+    /// pre-Session CLI).
+    pub fn to_table(&self) -> Table {
+        let (n, k, l, m) = self.config;
+        let mut t = Table::new(vec!["model", "latency", "energy", "GOPS", "EPB (fJ/b)", "avg W"])
+            .with_title(format!(
+                "simulate [N,K,L,M]=[{},{},{},{}] batch={} opts={:?}",
+                n, k, l, m, self.batch, self.opts
+            ));
+        for r in &self.rows {
+            t.row(vec![
+                r.model.clone(),
+                fmt_time(r.latency_s),
+                fmt_energy(r.energy_j),
+                format!("{:.1}", r.gops),
+                format!("{:.2}", r.epb_fj),
+                format!("{:.2}", r.avg_power_w),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_tables(&self) -> Vec<Table> {
+        vec![self.to_table()]
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("command", JsonValue::Str("simulate".into())),
+            ("config", config_json(self.config)),
+            ("batch", JsonValue::Num(self.batch as f64)),
+            ("opts", opts_json(&self.opts)),
+            (
+                "results",
+                JsonValue::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("model", JsonValue::Str(r.model.clone())),
+                                ("latency_s", JsonValue::Num(r.latency_s)),
+                                ("energy_j", JsonValue::Num(r.energy_j)),
+                                ("gops", JsonValue::Num(r.gops)),
+                                ("epb_fj", JsonValue::Num(r.epb_fj)),
+                                ("avg_power_w", JsonValue::Num(r.avg_power_w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
+/// Outcome of [`crate::api::Session::sweep`] (paper Fig. 11).
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Total configurations in the requested grid (valid or not).
+    pub grid_configs: usize,
+    pub threads: usize,
+    pub opts: OptFlags,
+    /// Valid points, sorted by descending objective (`[0]` is the optimum).
+    pub points: Vec<DsePoint>,
+    /// The paper's published optimum, for the table caption.
+    pub paper_optimum: (usize, usize, usize, usize),
+}
+
+impl SweepOutcome {
+    /// The sweep optimum, if any configuration was valid.
+    pub fn optimum(&self) -> Option<&DsePoint> {
+        self.points.first()
+    }
+
+    /// The Fig. 11 top-10 table (same formatting as the pre-Session CLI).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "rank", "N", "K", "L", "M", "peak W", "GOPS", "EPB (fJ/b)", "GOPS/EPB",
+        ])
+        .with_title(format!(
+            "Fig. 11: DSE over [N,K,L,M] ({} configs, paper optimum {:?})",
+            self.grid_configs, self.paper_optimum
+        ));
+        for (i, p) in self.points.iter().take(10).enumerate() {
+            t.row(vec![
+                format!("{}", i + 1),
+                p.n.to_string(),
+                p.k.to_string(),
+                p.l.to_string(),
+                p.m.to_string(),
+                f2(p.peak_power_w),
+                f2(p.gops),
+                f2(p.epb * 1e15),
+                format!("{:.3e}", p.objective),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_tables(&self) -> Vec<Table> {
+        vec![self.to_table()]
+    }
+
+    pub fn json(&self) -> JsonValue {
+        let point_json = |p: &DsePoint| {
+            obj(vec![
+                ("n", JsonValue::Num(p.n as f64)),
+                ("k", JsonValue::Num(p.k as f64)),
+                ("l", JsonValue::Num(p.l as f64)),
+                ("m", JsonValue::Num(p.m as f64)),
+                ("peak_w", JsonValue::Num(p.peak_power_w)),
+                ("gops", JsonValue::Num(p.gops)),
+                ("epb_fj", JsonValue::Num(p.epb * 1e15)),
+                ("objective", JsonValue::Num(p.objective)),
+            ])
+        };
+        obj(vec![
+            ("command", JsonValue::Str("dse".into())),
+            ("grid_configs", JsonValue::Num(self.grid_configs as f64)),
+            ("threads", JsonValue::Num(self.threads as f64)),
+            ("opts", opts_json(&self.opts)),
+            ("valid_points", JsonValue::Num(self.points.len() as f64)),
+            (
+                "optimum",
+                self.optimum().map(point_json).unwrap_or(JsonValue::Null),
+            ),
+            (
+                "paper_optimum",
+                config_json(self.paper_optimum),
+            ),
+            (
+                "points",
+                JsonValue::Arr(self.points.iter().map(point_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
+/// One platform's per-model metric series (PhotoGAN first).
+#[derive(Debug, Clone)]
+pub struct PlatformSeries {
+    pub platform: String,
+    pub gops: Vec<f64>,
+    /// Energy per bit (J/bit) per model.
+    pub epb: Vec<f64>,
+}
+
+/// Outcome of [`crate::api::Session::compare`] (paper Figs. 13/14).
+#[derive(Debug, Clone)]
+pub struct CompareOutcome {
+    pub model_names: Vec<String>,
+    /// PhotoGAN first, then the baseline platforms.
+    pub series: Vec<PlatformSeries>,
+}
+
+impl CompareOutcome {
+    /// Average PhotoGAN-vs-platform GOPS ratio for series `i` (`None` for
+    /// PhotoGAN itself).
+    pub fn avg_gops_ratio(&self, i: usize) -> Option<f64> {
+        if i == 0 || self.series.is_empty() {
+            return None;
+        }
+        let pg = &self.series[0].gops;
+        let other = &self.series.get(i)?.gops;
+        let n = other.len().min(pg.len());
+        if n == 0 {
+            return None;
+        }
+        Some(pg.iter().zip(other).take(n).map(|(a, b)| a / b).sum::<f64>() / n as f64)
+    }
+
+    /// Average platform-vs-PhotoGAN EPB ratio for series `i` (`None` for
+    /// PhotoGAN itself). Ratios > 1 mean PhotoGAN is more efficient.
+    pub fn avg_epb_ratio(&self, i: usize) -> Option<f64> {
+        if i == 0 || self.series.is_empty() {
+            return None;
+        }
+        let pg = &self.series[0].epb;
+        let other = &self.series.get(i)?.epb;
+        let n = other.len().min(pg.len());
+        if n == 0 {
+            return None;
+        }
+        Some(other.iter().zip(pg).take(n).map(|(b, a)| b / a).sum::<f64>() / n as f64)
+    }
+
+    /// The Fig. 13 (GOPS) and Fig. 14 (EPB) tables.
+    pub fn to_tables(&self) -> Vec<Table> {
+        vec![
+            crate::report::figures::fig13(self),
+            crate::report::figures::fig14(self),
+        ]
+    }
+
+    /// Primary table (Fig. 13 GOPS).
+    pub fn to_table(&self) -> Table {
+        crate::report::figures::fig13(self)
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("command", JsonValue::Str("compare".into())),
+            ("models", str_arr(&self.model_names)),
+            (
+                "series",
+                JsonValue::Arr(
+                    self.series
+                        .iter()
+                        .enumerate()
+                        .map(|(i, s)| {
+                            obj(vec![
+                                ("platform", JsonValue::Str(s.platform.clone())),
+                                ("gops", num_arr(&s.gops)),
+                                (
+                                    "epb_fj",
+                                    num_arr(
+                                        &s.epb.iter().map(|e| e * 1e15).collect::<Vec<_>>(),
+                                    ),
+                                ),
+                                (
+                                    "avg_gops_ratio",
+                                    self.avg_gops_ratio(i)
+                                        .map(JsonValue::Num)
+                                        .unwrap_or(JsonValue::Null),
+                                ),
+                                (
+                                    "avg_epb_ratio",
+                                    self.avg_epb_ratio(i)
+                                        .map(JsonValue::Num)
+                                        .unwrap_or(JsonValue::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
+/// Outcome of [`crate::api::Session::serve`] (the coordinator driver).
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub model: String,
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_img_s: f64,
+    pub total_requests: u64,
+    pub total_samples: u64,
+    /// Per-model latency/throughput summary strings from the coordinator.
+    pub per_model: Vec<(String, String)>,
+}
+
+impl ServeOutcome {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec!["model", "summary"]).with_title(format!(
+            "served {} requests in {:.2}s ({:.1} img/s)",
+            self.requests, self.wall_s, self.throughput_img_s
+        ));
+        for (m, s) in &self.per_model {
+            t.row(vec![m.clone(), s.clone()]);
+        }
+        t
+    }
+
+    pub fn to_tables(&self) -> Vec<Table> {
+        vec![self.to_table()]
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("command", JsonValue::Str("serve".into())),
+            ("model", JsonValue::Str(self.model.clone())),
+            ("requests", JsonValue::Num(self.requests as f64)),
+            ("wall_s", JsonValue::Num(self.wall_s)),
+            ("throughput_img_s", JsonValue::Num(self.throughput_img_s)),
+            ("total_requests", JsonValue::Num(self.total_requests as f64)),
+            ("total_samples", JsonValue::Num(self.total_samples as f64)),
+            (
+                "per_model",
+                JsonValue::Obj(
+                    self.per_model
+                        .iter()
+                        .map(|(m, s)| (m.clone(), JsonValue::Str(s.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
+/// Any Session outcome — lets callers hold/render results uniformly.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Sim(SimOutcome),
+    Sweep(SweepOutcome),
+    Compare(CompareOutcome),
+    Serve(ServeOutcome),
+}
+
+impl Outcome {
+    /// Primary table.
+    pub fn to_table(&self) -> Table {
+        match self {
+            Outcome::Sim(o) => o.to_table(),
+            Outcome::Sweep(o) => o.to_table(),
+            Outcome::Compare(o) => o.to_table(),
+            Outcome::Serve(o) => o.to_table(),
+        }
+    }
+
+    /// Every table the outcome renders (compare yields two).
+    pub fn to_tables(&self) -> Vec<Table> {
+        match self {
+            Outcome::Sim(o) => o.to_tables(),
+            Outcome::Sweep(o) => o.to_tables(),
+            Outcome::Compare(o) => o.to_tables(),
+            Outcome::Serve(o) => o.to_tables(),
+        }
+    }
+
+    /// Machine-readable JSON document.
+    pub fn to_json(&self) -> String {
+        match self {
+            Outcome::Sim(o) => o.to_json(),
+            Outcome::Sweep(o) => o.to_json(),
+            Outcome::Compare(o) => o.to_json(),
+            Outcome::Serve(o) => o.to_json(),
+        }
+    }
+}

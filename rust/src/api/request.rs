@@ -1,0 +1,263 @@
+//! Builder-style request types for the [`crate::api::Session`] facade.
+//!
+//! Builders collect parameters fluently; `build()` performs the
+//! *request-local* validation (batch ≥ 1, structurally valid config,
+//! non-empty grid…) and returns a typed [`ApiError`]. Validation that
+//! needs session state (model-name resolution, power-cap vs. the
+//! assembled chip) happens when the request is executed.
+//!
+//! Request fields are public for ergonomic consumption (the CLI reads
+//! them back for progress output), which means a request can also be
+//! constructed field-by-field, bypassing `build()` — so
+//! [`crate::api::Session`] re-checks the cheap invariants defensively at
+//! execution time. Keep the two in sync when adding invariants.
+
+use super::error::ApiError;
+use crate::arch::config::ArchConfig;
+use crate::dse::Grid;
+use crate::sim::OptFlags;
+
+/// Which models a simulation request covers.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ModelSelect {
+    /// Every model in the session registry (paper Table 1 order).
+    #[default]
+    All,
+    /// One model by (case-insensitive) name.
+    Named(String),
+}
+
+/// A validated simulation request (construct via [`SimRequest::builder`]).
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub models: ModelSelect,
+    pub batch: usize,
+    /// `None` = the session's own accelerator configuration.
+    pub config: Option<ArchConfig>,
+    pub opts: OptFlags,
+    /// When set, the request fails with [`ApiError::PowerCapExceeded`] if
+    /// the (possibly ungated) chip exceeds the system power cap instead of
+    /// simulating anyway.
+    pub strict_power: bool,
+}
+
+impl SimRequest {
+    pub fn builder() -> SimRequestBuilder {
+        SimRequestBuilder::default()
+    }
+}
+
+/// Fluent builder for [`SimRequest`].
+#[derive(Debug, Clone)]
+pub struct SimRequestBuilder {
+    models: ModelSelect,
+    batch: usize,
+    config: Option<ArchConfig>,
+    opts: OptFlags,
+    strict_power: bool,
+}
+
+impl Default for SimRequestBuilder {
+    fn default() -> Self {
+        SimRequestBuilder {
+            models: ModelSelect::All,
+            batch: 1,
+            config: None,
+            opts: OptFlags::all(),
+            strict_power: false,
+        }
+    }
+}
+
+impl SimRequestBuilder {
+    /// Restrict to one model by name (resolved against the session
+    /// registry at execution time; unknown names yield
+    /// [`ApiError::UnknownModel`]).
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.models = ModelSelect::Named(name.into());
+        self
+    }
+
+    /// Simulate every registered model (the default).
+    pub fn all_models(mut self) -> Self {
+        self.models = ModelSelect::All;
+        self
+    }
+
+    /// Inference instances streamed back-to-back (default 1).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Override the session's accelerator configuration for this request.
+    /// The mapping cache is still shared — layer mappings are
+    /// configuration-independent.
+    pub fn config(mut self, cfg: ArchConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Optimization toggles (default: all three enabled).
+    pub fn opts(mut self, opts: OptFlags) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Fail with [`ApiError::PowerCapExceeded`] when the chip's peak power
+    /// (under this request's gating policy) exceeds the cap.
+    pub fn strict_power(mut self, strict: bool) -> Self {
+        self.strict_power = strict;
+        self
+    }
+
+    /// Validate and freeze the request.
+    pub fn build(self) -> Result<SimRequest, ApiError> {
+        if self.batch == 0 {
+            return Err(ApiError::InvalidBatch(0));
+        }
+        if let Some(cfg) = &self.config {
+            cfg.validate().map_err(ApiError::from)?;
+        }
+        Ok(SimRequest {
+            models: self.models,
+            batch: self.batch,
+            config: self.config,
+            opts: self.opts,
+            strict_power: self.strict_power,
+        })
+    }
+}
+
+/// A validated design-space-exploration request (construct via
+/// [`SweepRequest::builder`]).
+#[derive(Debug, Clone)]
+pub struct SweepRequest {
+    pub grid: Grid,
+    pub opts: OptFlags,
+    pub threads: usize,
+}
+
+impl SweepRequest {
+    pub fn builder() -> SweepRequestBuilder {
+        SweepRequestBuilder::default()
+    }
+}
+
+/// Fluent builder for [`SweepRequest`].
+#[derive(Debug, Clone)]
+pub struct SweepRequestBuilder {
+    grid: Grid,
+    opts: OptFlags,
+    threads: usize,
+}
+
+impl Default for SweepRequestBuilder {
+    fn default() -> Self {
+        SweepRequestBuilder {
+            grid: Grid::paper(),
+            opts: OptFlags::all(),
+            threads: default_threads(),
+        }
+    }
+}
+
+/// Available parallelism, falling back to 4 (same default as the seed CLI).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+impl SweepRequestBuilder {
+    /// The `[N,K,L,M]` grid to sweep (default: the paper grid).
+    pub fn grid(mut self, grid: Grid) -> Self {
+        self.grid = grid;
+        self
+    }
+
+    /// Optimization toggles applied at every point (default: all).
+    pub fn opts(mut self, opts: OptFlags) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Worker threads (default: available parallelism).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Validate and freeze the request.
+    pub fn build(self) -> Result<SweepRequest, ApiError> {
+        if self.grid.is_empty() {
+            return Err(ApiError::EmptyGrid);
+        }
+        if self.threads == 0 {
+            return Err(ApiError::InvalidThreads(0));
+        }
+        Ok(SweepRequest { grid: self.grid, opts: self.opts, threads: self.threads })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ConfigError;
+
+    #[test]
+    fn sim_builder_defaults() {
+        let r = SimRequest::builder().build().unwrap();
+        assert_eq!(r.models, ModelSelect::All);
+        assert_eq!(r.batch, 1);
+        assert!(r.config.is_none());
+        assert_eq!(r.opts, OptFlags::all());
+        assert!(!r.strict_power);
+    }
+
+    #[test]
+    fn sim_builder_rejects_zero_batch() {
+        assert_eq!(
+            SimRequest::builder().batch(0).build().unwrap_err(),
+            ApiError::InvalidBatch(0)
+        );
+    }
+
+    #[test]
+    fn sim_builder_rejects_invalid_config() {
+        let err = SimRequest::builder()
+            .config(ArchConfig::new(37, 2, 11, 3))
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ApiError::InvalidConfig(ConfigError::TooManyWavelengths(37, 36))
+        );
+    }
+
+    #[test]
+    fn sweep_builder_rejects_empty_grid_and_zero_threads() {
+        let empty = Grid { n: vec![], k: vec![1], l: vec![1], m: vec![1] };
+        assert_eq!(
+            SweepRequest::builder().grid(empty).build().unwrap_err(),
+            ApiError::EmptyGrid
+        );
+        assert_eq!(
+            SweepRequest::builder().threads(0).build().unwrap_err(),
+            ApiError::InvalidThreads(0)
+        );
+    }
+
+    #[test]
+    fn builders_are_fluent() {
+        let r = SimRequest::builder()
+            .model("dcgan")
+            .batch(8)
+            .opts(OptFlags::baseline())
+            .strict_power(true)
+            .build()
+            .unwrap();
+        assert_eq!(r.models, ModelSelect::Named("dcgan".into()));
+        assert_eq!(r.batch, 8);
+        assert!(r.strict_power);
+    }
+}

@@ -1,0 +1,188 @@
+//! Serving through the Session API: load PJRT artifacts, validate the
+//! request against the loaded model set **before** submitting anything to
+//! the coordinator (an unknown model used to hang or zero-fill inside the
+//! leader loop), drive the request stream, and return a typed
+//! [`ServeOutcome`].
+//!
+//! Only compiled with the `pjrt` feature (the `xla` crate is optional in
+//! the offline crate set).
+
+use super::error::ApiError;
+use super::outcome::ServeOutcome;
+use super::session::Session;
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::coordinator::BatchPolicy;
+use crate::runtime::Engine;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A validated serving request (construct via [`ServeRequest::builder`]).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub artifacts: PathBuf,
+    /// `None` = first loaded model (sorted order).
+    pub model: Option<String>,
+    pub requests: usize,
+    pub max_batch: usize,
+    pub workers: usize,
+    pub max_wait: Duration,
+}
+
+impl ServeRequest {
+    pub fn builder() -> ServeRequestBuilder {
+        ServeRequestBuilder::default()
+    }
+}
+
+/// Fluent builder for [`ServeRequest`] (defaults mirror the seed CLI:
+/// `artifacts/`, 64 requests, batch 8, 2 workers, 5 ms batching window).
+#[derive(Debug, Clone)]
+pub struct ServeRequestBuilder {
+    artifacts: PathBuf,
+    model: Option<String>,
+    requests: usize,
+    max_batch: usize,
+    workers: usize,
+    max_wait: Duration,
+}
+
+impl Default for ServeRequestBuilder {
+    fn default() -> Self {
+        ServeRequestBuilder {
+            artifacts: PathBuf::from("artifacts"),
+            model: None,
+            requests: 64,
+            max_batch: 8,
+            workers: 2,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+impl ServeRequestBuilder {
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.model = Some(name.into());
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    /// Validate and freeze the request.
+    pub fn build(self) -> Result<ServeRequest, ApiError> {
+        if self.max_batch == 0 {
+            return Err(ApiError::InvalidBatch(0));
+        }
+        if self.workers == 0 {
+            return Err(ApiError::InvalidWorkers(0));
+        }
+        Ok(ServeRequest {
+            artifacts: self.artifacts,
+            model: self.model,
+            requests: self.requests,
+            max_batch: self.max_batch,
+            workers: self.workers,
+            max_wait: self.max_wait,
+        })
+    }
+}
+
+impl Session {
+    /// Load artifacts and drive `req.requests` generation requests through
+    /// the coordinator. The model name is resolved against the server's
+    /// routing set ([`Server::models`]) *before* any request is submitted,
+    /// so an unknown model is a typed [`ApiError::UnknownModel`] instead
+    /// of a leader-loop zero-fill.
+    pub fn serve(&self, req: &ServeRequest) -> Result<ServeOutcome, ApiError> {
+        let engine = Engine::load(&req.artifacts)
+            .map_err(|e| ApiError::ArtifactError(format!("{e:#}")))?;
+        let outcome = self.serve_with(Arc::new(engine), req)?;
+        Ok(outcome)
+    }
+
+    /// Serving loop over an already-loaded engine (lets tests and warm
+    /// callers skip the PJRT compile).
+    pub fn serve_with(
+        &self,
+        engine: Arc<Engine>,
+        req: &ServeRequest,
+    ) -> Result<ServeOutcome, ApiError> {
+        let server = Server::start(
+            engine,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: req.max_batch, max_wait: req.max_wait },
+                workers: req.workers,
+            },
+        );
+        // resolve against the server's actual routing set *before* any
+        // submission — an unknown model must be a typed error, not a
+        // leader-loop zero-fill
+        let resolved = match &req.model {
+            Some(wanted) => server
+                .models()
+                .iter()
+                .find(|n| n.eq_ignore_ascii_case(wanted))
+                .cloned()
+                .ok_or_else(|| ApiError::UnknownModel {
+                    name: wanted.clone(),
+                    available: server.models().to_vec(),
+                }),
+            None => server
+                .models()
+                .first()
+                .cloned()
+                .ok_or_else(|| ApiError::ArtifactError("no models loaded".into())),
+        };
+        let model = match resolved {
+            Ok(m) => m,
+            Err(e) => {
+                server.shutdown();
+                return Err(e);
+            }
+        };
+        let start = std::time::Instant::now();
+        let rxs: Vec<_> = (0..req.requests)
+            .map(|i| server.submit(&model, i as u64, Some((i % 10) as u32), 1))
+            .collect();
+        for rx in rxs {
+            rx.recv()
+                .map_err(|_| ApiError::Internal("response channel closed".into()))?;
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let stats = server.shutdown();
+        let mut per_model: Vec<(String, String)> = stats.per_model.into_iter().collect();
+        per_model.sort();
+        Ok(ServeOutcome {
+            model,
+            requests: req.requests,
+            wall_s: wall,
+            throughput_img_s: if wall > 0.0 { req.requests as f64 / wall } else { 0.0 },
+            total_requests: stats.total_requests,
+            total_samples: stats.total_samples,
+            per_model,
+        })
+    }
+}

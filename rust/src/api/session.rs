@@ -1,0 +1,322 @@
+//! The [`Session`] facade: one accelerator + one model registry + one
+//! memoized mapping cache behind every consumer (CLI, benches, report
+//! generation, DSE, serving).
+//!
+//! Layer mapping (including the sparse-dataflow census) is the expensive,
+//! configuration-independent half of a simulation; the cache keys it by
+//! `(model, batch, OptFlags)` so repeated requests — a DSE sweep, the
+//! Fig. 12 ablation grid, a report run touching every exhibit — map each
+//! workload exactly once. `Session` is `Send + Sync`; the cache is behind
+//! a `Mutex` and mappings are handed out as `Arc`s.
+
+use super::error::ApiError;
+use super::outcome::{CompareOutcome, PlatformSeries, SimOutcome, SimRow, SweepOutcome};
+use super::request::{ModelSelect, SimRequest, SweepRequest};
+use crate::arch::accelerator::Accelerator;
+use crate::arch::config::ArchConfig;
+use crate::baselines::platform::all_platforms;
+use crate::dse::{explore_mapped, MappedModel};
+use crate::models::{zoo, Model};
+use crate::report::figures::PAPER_OPTIMUM;
+use crate::sim::engine::simulate_mapped;
+use crate::sim::mapper::{map_model, LayerJob};
+use crate::sim::{OptFlags, SimReport};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Mapping-cache key: model name × batch × optimization flags. The
+/// accelerator configuration is deliberately absent — mappings are
+/// configuration-independent (see [`crate::sim::engine::simulate_mapped`]),
+/// which is exactly what makes the cache reusable across a DSE sweep.
+type MapKey = (String, usize, OptFlags);
+
+/// The unified PhotoGAN API entry point.
+pub struct Session {
+    acc: Accelerator,
+    models: Vec<Model>,
+    cache: Mutex<HashMap<MapKey, Arc<Vec<LayerJob>>>>,
+}
+
+impl Session {
+    /// Session on the paper's DSE-optimal chip `[16,2,11,3]` with the four
+    /// Table 1 generators registered.
+    pub fn new() -> Result<Session, ApiError> {
+        Session::with_config(ArchConfig::paper_optimum())
+    }
+
+    /// Session on an arbitrary configuration (structurally validated).
+    pub fn with_config(cfg: ArchConfig) -> Result<Session, ApiError> {
+        let acc = Accelerator::new(cfg).map_err(ApiError::from)?;
+        Ok(Session {
+            acc,
+            models: zoo::all_generators(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The session's assembled chip.
+    pub fn accelerator(&self) -> &Accelerator {
+        &self.acc
+    }
+
+    /// Registered models, in registration (paper Table 1) order.
+    pub fn models(&self) -> &[Model] {
+        &self.models
+    }
+
+    /// Registered model names.
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Resolve a model by case-insensitive name.
+    pub fn model(&self, name: &str) -> Result<&Model, ApiError> {
+        self.models
+            .iter()
+            .find(|m| m.name.eq_ignore_ascii_case(name))
+            .ok_or_else(|| ApiError::UnknownModel {
+                name: name.to_string(),
+                available: self.model_names(),
+            })
+    }
+
+    /// Register (or replace, by case-insensitive name) a model. Stale
+    /// cache entries for that name are evicted.
+    pub fn register_model(&mut self, model: Model) {
+        let name = model.name.clone();
+        let mut guard = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        guard.retain(|(cached, _, _), _| !cached.eq_ignore_ascii_case(&name));
+        drop(guard);
+        match self.models.iter_mut().find(|m| m.name.eq_ignore_ascii_case(&name)) {
+            Some(slot) => *slot = model,
+            None => self.models.push(model),
+        }
+    }
+
+    /// Number of memoized mappings (observability / tests).
+    pub fn mapping_cache_entries(&self) -> usize {
+        self.cache.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    /// The memoized layer mapping for `(model, batch, opts)`. Computes and
+    /// caches on first use; mapping runs outside the cache lock so
+    /// concurrent misses don't serialize (first writer wins).
+    ///
+    /// The cache key is the model *name*, so only models structurally
+    /// equal to the registered one participate; a same-named modified
+    /// clone is mapped fresh (uncached) rather than served stale jobs —
+    /// register it via [`Session::register_model`] to cache it.
+    pub fn mapped(&self, model: &Model, batch: usize, opts: OptFlags) -> Arc<Vec<LayerJob>> {
+        if !self.models.iter().any(|m| m == model) {
+            return Arc::new(map_model(model, batch, &opts));
+        }
+        let key: MapKey = (model.name.clone(), batch, opts);
+        {
+            let guard = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(jobs) = guard.get(&key) {
+                return Arc::clone(jobs);
+            }
+        }
+        let jobs = Arc::new(map_model(model, batch, &opts));
+        let mut guard = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        Arc::clone(guard.entry(key).or_insert(jobs))
+    }
+
+    /// Cached simulation of one model on the session accelerator —
+    /// bit-identical to [`crate::sim::simulate`] (the mapping is memoized,
+    /// the cost model is the same code).
+    pub fn sim_report(&self, model: &Model, batch: usize, opts: OptFlags) -> SimReport {
+        self.sim_report_on(&self.acc, model, batch, opts)
+    }
+
+    /// Cached simulation on an explicit accelerator (the mapping cache is
+    /// still shared — mappings are configuration-independent).
+    pub fn sim_report_on(
+        &self,
+        acc: &Accelerator,
+        model: &Model,
+        batch: usize,
+        opts: OptFlags,
+    ) -> SimReport {
+        let jobs = self.mapped(model, batch, opts);
+        simulate_mapped(&model.name, &jobs, acc, batch, opts)
+    }
+
+    /// Execute a [`SimRequest`].
+    pub fn simulate(&self, req: &SimRequest) -> Result<SimOutcome, ApiError> {
+        if req.batch == 0 {
+            return Err(ApiError::InvalidBatch(0));
+        }
+        let models: Vec<&Model> = match &req.models {
+            ModelSelect::All => self.models.iter().collect(),
+            ModelSelect::Named(name) => vec![self.model(name)?],
+        };
+        let custom;
+        let acc = match &req.config {
+            Some(cfg) => {
+                custom = Accelerator::new(cfg.clone()).map_err(ApiError::from)?;
+                &custom
+            }
+            None => &self.acc,
+        };
+        if req.strict_power {
+            acc.validate(req.opts.power_gated).map_err(ApiError::from)?;
+        }
+        let rows = models
+            .into_iter()
+            .map(|m| SimRow::from_report(&self.sim_report_on(acc, m, req.batch, req.opts)))
+            .collect();
+        Ok(SimOutcome {
+            config: (acc.cfg.n, acc.cfg.k, acc.cfg.l, acc.cfg.m),
+            batch: req.batch,
+            opts: req.opts,
+            rows,
+        })
+    }
+
+    /// Execute a [`SweepRequest`] — the Fig. 11 design-space exploration,
+    /// fed from the session mapping cache (each model maps once; every
+    /// grid point re-costs the shared jobs).
+    pub fn sweep(&self, req: &SweepRequest) -> Result<SweepOutcome, ApiError> {
+        if req.grid.is_empty() {
+            return Err(ApiError::EmptyGrid);
+        }
+        if req.threads == 0 {
+            return Err(ApiError::InvalidThreads(0));
+        }
+        let mapped: Vec<MappedModel> = self
+            .models
+            .iter()
+            .map(|m| (m.name.clone(), self.mapped(m, 1, req.opts)))
+            .collect();
+        let points = explore_mapped(&req.grid, &mapped, req.opts, req.threads);
+        Ok(SweepOutcome {
+            grid_configs: req.grid.len(),
+            threads: req.threads,
+            opts: req.opts,
+            points,
+            paper_optimum: PAPER_OPTIMUM,
+        })
+    }
+
+    /// PhotoGAN (on the session chip, all optimizations, batch 1) vs. the
+    /// five analytic baseline platforms — the Figs. 13/14 data.
+    pub fn compare(&self) -> CompareOutcome {
+        let model_names = self.model_names();
+        let opts = OptFlags::all();
+        let mut series = Vec::new();
+        let pg: Vec<SimReport> =
+            self.models.iter().map(|m| self.sim_report(m, 1, opts)).collect();
+        series.push(PlatformSeries {
+            platform: "PhotoGAN".to_string(),
+            gops: pg.iter().map(|r| r.gops()).collect(),
+            epb: pg.iter().map(|r| r.epb()).collect(),
+        });
+        for p in all_platforms() {
+            let rs: Vec<_> = self.models.iter().map(|m| p.evaluate(m, 1)).collect();
+            series.push(PlatformSeries {
+                platform: p.name.to_string(),
+                gops: rs.iter().map(|r| r.gops()).collect(),
+                epb: rs.iter().map(|r| r.epb()).collect(),
+            });
+        }
+        CompareOutcome { model_names, series }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate;
+
+    #[test]
+    fn cache_hits_reuse_mappings() {
+        let s = Session::new().unwrap();
+        let m = s.model("dcgan").unwrap().clone();
+        assert_eq!(s.mapping_cache_entries(), 0);
+        let a = s.mapped(&m, 1, OptFlags::all());
+        assert_eq!(s.mapping_cache_entries(), 1);
+        let b = s.mapped(&m, 1, OptFlags::all());
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must be a cache hit");
+        // different batch / opts are distinct entries
+        s.mapped(&m, 2, OptFlags::all());
+        s.mapped(&m, 1, OptFlags::baseline());
+        assert_eq!(s.mapping_cache_entries(), 3);
+    }
+
+    #[test]
+    fn cached_simulation_is_bit_identical() {
+        let s = Session::new().unwrap();
+        for name in ["DCGAN", "CondGAN"] {
+            let m = s.model(name).unwrap().clone();
+            for (batch, opts) in [(1, OptFlags::all()), (4, OptFlags::baseline())] {
+                let direct = simulate(&m, s.accelerator(), batch, opts);
+                let cached = s.sim_report(&m, batch, opts);
+                let again = s.sim_report(&m, batch, opts);
+                assert_eq!(direct.latency, cached.latency, "{name} latency");
+                assert_eq!(direct.energy.total(), cached.energy.total(), "{name} energy");
+                assert_eq!(direct.gops(), cached.gops(), "{name} gops");
+                assert_eq!(cached.latency, again.latency, "{name} repeat");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_typed() {
+        let s = Session::new().unwrap();
+        let err = s.model("stylegan9").unwrap_err();
+        assert!(matches!(err, ApiError::UnknownModel { ref name, .. } if name == "stylegan9"));
+    }
+
+    #[test]
+    fn model_lookup_is_case_insensitive() {
+        let s = Session::new().unwrap();
+        assert_eq!(s.model("cycleGAN").unwrap().name, "CycleGAN");
+    }
+
+    #[test]
+    fn register_model_evicts_stale_mappings() {
+        let mut s = Session::new().unwrap();
+        let m = s.model("dcgan").unwrap().clone();
+        s.mapped(&m, 1, OptFlags::all());
+        let n_models = s.models().len();
+        assert_eq!(s.mapping_cache_entries(), 1);
+        s.register_model(m.clone());
+        assert_eq!(s.mapping_cache_entries(), 0, "re-registration must evict");
+        assert_eq!(s.models().len(), n_models, "replacement, not append");
+    }
+
+    #[test]
+    fn modified_clone_is_never_served_stale_cache() {
+        let s = Session::new().unwrap();
+        let m = s.model("dcgan").unwrap().clone();
+        let cached = s.sim_report(&m, 1, OptFlags::all());
+        assert_eq!(s.mapping_cache_entries(), 1);
+        // a same-named but structurally different model maps fresh (uncached)
+        let mut modified = m.clone();
+        modified.layers.truncate(2);
+        let fresh = s.sim_report(&modified, 1, OptFlags::all());
+        assert_eq!(s.mapping_cache_entries(), 1, "foreign model must not touch the cache");
+        assert!(
+            fresh.energy.total() < cached.energy.total(),
+            "a 2-layer prefix must cost less than the full model"
+        );
+    }
+
+    #[test]
+    fn strict_power_trips_the_cap() {
+        // a 0.5 W cap no real chip can meet → PowerCapExceeded
+        let mut cfg = ArchConfig::paper_optimum();
+        cfg.params.system.power_cap_w = 0.5;
+        let s = Session::with_config(cfg).unwrap();
+        let req = SimRequest::builder().model("dcgan").strict_power(true).build().unwrap();
+        assert!(matches!(
+            s.simulate(&req).unwrap_err(),
+            ApiError::PowerCapExceeded { cap_w, .. } if cap_w == 0.5
+        ));
+        // without strict_power the same request simulates fine
+        let relaxed = SimRequest::builder().model("dcgan").build().unwrap();
+        assert!(s.simulate(&relaxed).is_ok());
+    }
+}

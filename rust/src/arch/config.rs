@@ -3,7 +3,8 @@
 use crate::photonics::constants::PhotonicParams;
 use crate::photonics::crosstalk;
 use crate::photonics::mr::Microring;
-use thiserror::Error;
+use std::fmt;
+use std::str::FromStr;
 
 /// PhotoGAN architectural parameters (paper §IV.A).
 #[derive(Debug, Clone, PartialEq)]
@@ -23,16 +24,52 @@ pub struct ArchConfig {
 }
 
 /// Why a configuration is invalid.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ConfigError {
-    #[error("N={0} exceeds the {1}-MR/waveguide crosstalk bound (paper §IV)")]
     TooManyWavelengths(usize, usize),
-    #[error("crosstalk check failed: {0}")]
     Crosstalk(String),
-    #[error("all of N, K, L, M must be ≥ 1 (got N={n} K={k} L={l} M={m})")]
     Degenerate { n: usize, k: usize, l: usize, m: usize },
-    #[error("peak power {0:.1} W exceeds the cap {1:.1} W")]
     PowerCap(f64, f64),
+    /// An `N,K,L,M` string did not parse (see [`ArchConfig::from_str`]).
+    BadQuad(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::TooManyWavelengths(n, max) => write!(
+                f,
+                "N={n} exceeds the {max}-MR/waveguide crosstalk bound (paper §IV)"
+            ),
+            ConfigError::Crosstalk(msg) => write!(f, "crosstalk check failed: {msg}"),
+            ConfigError::Degenerate { n, k, l, m } => write!(
+                f,
+                "all of N, K, L, M must be ≥ 1 (got N={n} K={k} L={l} M={m})"
+            ),
+            ConfigError::PowerCap(peak, cap) => {
+                write!(f, "peak power {peak:.1} W exceeds the cap {cap:.1} W")
+            }
+            ConfigError::BadQuad(s) => {
+                write!(f, "'{s}' is not an N,K,L,M quadruple (expected e.g. 16,2,11,3)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl FromStr for ArchConfig {
+    type Err = ConfigError;
+
+    /// Parse `"N,K,L,M"` (whitespace around commas allowed) into a config
+    /// with default device parameters. Structural validity is *not* checked
+    /// here — call [`ArchConfig::validate`] or assemble an
+    /// [`super::Accelerator`].
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        crate::util::cli::parse_quad(s)
+            .map(|(n, k, l, m)| ArchConfig::new(n, k, l, m))
+            .ok_or_else(|| ConfigError::BadQuad(s.to_string()))
+    }
 }
 
 impl ArchConfig {
@@ -106,6 +143,32 @@ mod tests {
             ArchConfig::new(16, 2, 0, 3).validate(),
             Err(ConfigError::Degenerate { .. })
         ));
+    }
+
+    #[test]
+    fn from_str_parses_quads() {
+        let c: ArchConfig = "16,2,11,3".parse().unwrap();
+        assert_eq!((c.n, c.k, c.l, c.m), (16, 2, 11, 3));
+        assert_eq!(
+            " 4, 1, 1, 1 ".parse::<ArchConfig>().map(|c| (c.n, c.k, c.l, c.m)),
+            Ok((4, 1, 1, 1))
+        );
+        assert_eq!(
+            "16,2,11".parse::<ArchConfig>(),
+            Err(ConfigError::BadQuad("16,2,11".into()))
+        );
+        // parsing is syntactic; validation is separate
+        let wide: ArchConfig = "99,1,1,1".parse().unwrap();
+        assert!(wide.validate().is_err());
+    }
+
+    #[test]
+    fn error_messages_render() {
+        let e = ConfigError::PowerCap(123.456, 100.0);
+        assert_eq!(e.to_string(), "peak power 123.5 W exceeds the cap 100.0 W");
+        assert!(ConfigError::Degenerate { n: 0, k: 1, l: 1, m: 1 }
+            .to_string()
+            .contains("N=0"));
     }
 
     #[test]

@@ -55,6 +55,7 @@ pub struct Server {
     leader: Option<JoinHandle<()>>,
     next_id: AtomicU64,
     metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+    models: Vec<String>,
 }
 
 impl Server {
@@ -66,16 +67,32 @@ impl Server {
             Arc::new(Mutex::new(HashMap::new()));
         let metrics_leader = Arc::clone(&metrics);
         let models = executor.models();
+        let models_leader = models.clone();
         let leader = std::thread::Builder::new()
             .name("photogan-leader".into())
-            .spawn(move || leader_loop(intake_rx, executor, config, models, metrics_leader))
+            .spawn(move || {
+                leader_loop(intake_rx, executor, config, models_leader, metrics_leader)
+            })
             .expect("spawn leader");
         Server {
             intake: intake_tx,
             leader: Some(leader),
             next_id: AtomicU64::new(0),
             metrics,
+            models,
         }
+    }
+
+    /// The model names this server routes (callers should validate a
+    /// request's model against these *before* [`Server::submit`]; unknown
+    /// models get an empty error response from the leader loop).
+    pub fn models(&self) -> &[String] {
+        &self.models
+    }
+
+    /// Whether `name` is served (exact match, as executors report names).
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.iter().any(|m| m == name)
     }
 
     /// Submit a generation request; returns the channel the response will
@@ -341,6 +358,15 @@ mod tests {
         assert_eq!(resp.images[0..4], [100.0; 4]);
         assert_eq!(resp.images[4..8], [101.0; 4]);
         assert_eq!(resp.images[8..12], [102.0; 4]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_exposes_model_set_for_validation() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        assert_eq!(server.models(), &["toy".to_string()]);
+        assert!(server.has_model("toy"));
+        assert!(!server.has_model("nope"));
         server.shutdown();
     }
 

@@ -13,6 +13,13 @@ use crate::models::Model;
 use crate::sim::engine::simulate_mapped;
 use crate::sim::mapper::{map_model, LayerJob};
 use crate::sim::options::OptFlags;
+use std::sync::Arc;
+
+/// A model's name plus its (configuration-independent) mapped jobs —
+/// the unit of work the sweep re-costs per configuration. `Arc` so the
+/// [`crate::api::Session`] mapping cache can hand out shared mappings
+/// without cloning the job lists.
+pub type MappedModel = (String, Arc<Vec<LayerJob>>);
 
 /// One evaluated configuration.
 #[derive(Debug, Clone)]
@@ -86,7 +93,7 @@ fn evaluate(
     k: usize,
     l: usize,
     m: usize,
-    mapped: &[(String, Vec<LayerJob>)],
+    mapped: &[MappedModel],
     opts: OptFlags,
 ) -> Option<DsePoint> {
     let cfg = ArchConfig::new(n, k, l, m);
@@ -106,14 +113,17 @@ fn evaluate(
     Some(DsePoint { n, k, l, m, peak_power_w: peak, gops, epb, objective: gops / epb })
 }
 
-/// Run the sweep. Returns all valid points sorted by descending objective
-/// (so `[0]` is the optimum).
-pub fn explore(grid: &Grid, models: &[Model], opts: OptFlags, threads: usize) -> Vec<DsePoint> {
-    assert!(threads >= 1);
-    let mapped: Vec<(String, Vec<LayerJob>)> = models
-        .iter()
-        .map(|m| (m.name.clone(), map_model(m, 1, &opts)))
-        .collect();
+/// Run the sweep over pre-mapped models (the [`crate::api::Session`] path:
+/// mappings come from its memoized cache, so repeated sweeps never re-map).
+/// Returns all valid points sorted by descending objective (so `[0]` is
+/// the optimum). `threads` is clamped to ≥ 1.
+pub fn explore_mapped(
+    grid: &Grid,
+    mapped: &[MappedModel],
+    opts: OptFlags,
+    threads: usize,
+) -> Vec<DsePoint> {
+    let threads = threads.max(1);
     let configs = grid.configs();
     let chunk = configs.len().div_ceil(threads);
     let mut points: Vec<DsePoint> = std::thread::scope(|scope| {
@@ -129,10 +139,26 @@ pub fn explore(grid: &Grid, models: &[Model], opts: OptFlags, threads: usize) ->
                 })
             })
             .collect();
-        handles.into_iter().flat_map(|h| h.join().expect("worker panicked")).collect()
+        handles
+            .into_iter()
+            .flat_map(|h| match h.join() {
+                Ok(points) => points,
+                Err(panic) => std::panic::resume_unwind(panic),
+            })
+            .collect()
     });
-    points.sort_by(|a, b| b.objective.partial_cmp(&a.objective).unwrap());
+    points.sort_by(|a, b| b.objective.total_cmp(&a.objective));
     points
+}
+
+/// Run the sweep, mapping each model once up front. Thin wrapper over
+/// [`explore_mapped`] for callers without a [`crate::api::Session`].
+pub fn explore(grid: &Grid, models: &[Model], opts: OptFlags, threads: usize) -> Vec<DsePoint> {
+    let mapped: Vec<MappedModel> = models
+        .iter()
+        .map(|m| (m.name.clone(), Arc::new(map_model(m, 1, &opts))))
+        .collect();
+    explore_mapped(grid, &mapped, opts, threads)
 }
 
 #[cfg(test)]

@@ -3,7 +3,38 @@
 //! Reproduction of *PhotoGAN: Generative Adversarial Neural Network
 //! Acceleration with Silicon Photonics* (Suresh, Afifi, Pasricha).
 //!
-//! The crate is organised bottom-up:
+//! ## Front door: `photogan::api`
+//!
+//! All evaluation flows — single-model simulation, the Fig. 11
+//! design-space exploration, the Figs. 13/14 platform comparison, report
+//! generation, and artifact serving — go through one typed facade,
+//! [`api::Session`]:
+//!
+//! ```
+//! use photogan::api::{Session, SimRequest, SweepRequest};
+//! use photogan::dse::Grid;
+//!
+//! let session = Session::new()?; // the paper's [16,2,11,3] chip
+//!
+//! // simulate all four Table 1 generators at batch 8
+//! let sim = session.simulate(&SimRequest::builder().batch(8).build()?)?;
+//! sim.to_table().print();
+//!
+//! // sweep a small grid; the session's mapping cache is reused, so the
+//! // models are mapped once, not once per configuration
+//! let dse = session.sweep(
+//!     &SweepRequest::builder().grid(Grid::smoke()).threads(2).build()?,
+//! )?;
+//! assert!(dse.optimum().is_some());
+//! println!("{}", dse.to_json()); // every outcome also renders as JSON
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
+//!
+//! Requests are validated builders, failures are [`api::ApiError`]
+//! variants (no panics, no process exits), and every outcome renders as
+//! both an ASCII table and machine-readable JSON (`--json` on the CLI).
+//!
+//! ## Layer map (bottom-up)
 //!
 //! - [`photonics`] — opto-electronic device models (MRs, VCSELs, PDs, SOAs,
 //!   DAC/ADC, PCMCs, tuning circuits, waveguide loss budget, laser power).
@@ -17,12 +48,16 @@
 //! - [`baselines`] — analytic GPU / CPU / TPU / FPGA / ReRAM comparators.
 //! - [`dse`] — design-space exploration over `[N,K,L,M]` (Fig. 11).
 //! - [`runtime`] — PJRT client that loads the AOT HLO artifacts produced by
-//!   `python/compile/aot.py` and executes real GAN inference.
+//!   `python/compile/aot.py` and executes real GAN inference (requires the
+//!   `pjrt` feature; the `xla` crate is optional in the offline set).
 //! - [`coordinator`] — serving layer: request router, dynamic batcher,
 //!   worker pool, latency metrics.
+//! - [`api`] — the [`api::Session`] facade over all of the above.
 //! - [`report`] — regenerates every table and figure of the paper.
-//! - [`util`] — RNG, stats, table printing, mini property-test harness.
+//! - [`util`] — RNG, stats, tables, JSON, CLI parsing, error plumbing,
+//!   mini property-test harness.
 
+pub mod api;
 pub mod arch;
 pub mod baselines;
 pub mod coordinator;
@@ -31,10 +66,12 @@ pub mod metrics;
 pub mod models;
 pub mod photonics;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod sparse;
 pub mod util;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide untyped result (I/O-ish paths); the API layer uses the
+/// typed [`api::ApiError`] instead.
+pub type Result<T> = crate::util::error::Result<T>;

@@ -1,52 +1,59 @@
 //! `photogan` — leader entrypoint + CLI.
 //!
-//! Subcommands (hand-rolled parser; no clap in the offline crate set):
+//! Every subcommand is a thin shim over [`photogan::api::Session`]: flags
+//! are parsed against an explicit per-command spec, turned into a builder
+//! request, executed, and the typed [`ApiError`] (if any) is mapped onto
+//! an exit code (2 = usage/validation, 1 = runtime failure).
 //!
 //! ```text
-//! photogan simulate [--model NAME] [--batch B] [--config N,K,L,M] [--no-sparse|--no-pipeline|--no-gating]
-//! photogan dse      [--threads T] [--grid paper|smoke]
-//! photogan compare                      # Figs. 13/14 tables
-//! photogan serve    [--artifacts DIR] [--requests R] [--batch B] [--workers W]
-//! photogan report                       # every table/figure in one run
+//! photogan simulate [--model NAME] [--batch B] [--config N,K,L,M]
+//!                   [--no-sparse|--no-pipeline|--no-gating]
+//!                   [--strict-power] [--json]
+//! photogan dse      [--threads T] [--grid paper|smoke] [--json]
+//! photogan compare  [--json]                    # Figs. 13/14 tables
+//! photogan serve    [--artifacts DIR] [--requests R] [--batch B]
+//!                   [--workers W] [--model NAME] [--json]
+//! photogan report   [--threads T]               # every table/figure
 //! ```
 
-use photogan::arch::accelerator::Accelerator;
+use photogan::api::{default_threads, ApiError, Session, SimRequest, SweepRequest};
 use photogan::arch::config::ArchConfig;
-use photogan::coordinator::server::{Server, ServerConfig};
-use photogan::coordinator::BatchPolicy;
 use photogan::dse::Grid;
-use photogan::models::zoo;
 use photogan::report;
-use photogan::runtime::Engine;
-use photogan::sim::{simulate, OptFlags};
-use photogan::util::cli::{parse_quad, Cli};
-use photogan::util::table::Table;
-use photogan::util::units::{fmt_energy, fmt_time};
-use std::collections::HashMap;
-use std::sync::Arc;
-use std::time::Duration;
+use photogan::sim::OptFlags;
+use photogan::util::cli::{switch, value, FlagDef, ParsedFlags};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let cli = Cli::parse(&args);
-    let (cmd, flags) = (cli.command.clone(), cli.flags);
-    let code = match cmd.as_str() {
-        "simulate" => cmd_simulate(&flags),
-        "dse" => cmd_dse(&flags),
-        "compare" => cmd_compare(),
-        "serve" => cmd_serve(&flags),
-        "report" => cmd_report(&flags),
+    std::process::exit(run(&args));
+}
+
+fn run(args: &[String]) -> i32 {
+    let command = args.first().map(|s| s.as_str()).unwrap_or("");
+    let rest = args.get(1..).unwrap_or(&[]);
+    let result = match command {
+        "simulate" => cmd_simulate(rest),
+        "dse" => cmd_dse(rest),
+        "compare" => cmd_compare(rest),
+        "serve" => cmd_serve(rest),
+        "report" => cmd_report(rest),
         "help" | "" => {
             print_help();
-            0
+            Ok(())
         }
         other => {
             eprintln!("unknown command '{other}'");
             print_help();
-            2
+            return 2;
         }
     };
-    std::process::exit(code);
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            e.exit_code()
+        }
+    }
 }
 
 fn print_help() {
@@ -56,163 +63,181 @@ fn print_help() {
          \n\
          simulate  --model dcgan|condgan|artgan|cyclegan  --batch B\n\
         \u{20}          --config N,K,L,M  --no-sparse --no-pipeline --no-gating\n\
-         dse       --threads T  --grid paper|smoke\n\
-         compare   (Figs. 13/14 GOPS + EPB tables)\n\
-         serve     --artifacts DIR --requests R --batch B --workers W --model NAME\n\
+        \u{20}          --strict-power (fail if over the power cap)  --json\n\
+         dse       --threads T  --grid paper|smoke  --json\n\
+         compare   --json  (Figs. 13/14 GOPS + EPB tables)\n\
+         serve     --artifacts DIR --requests R --batch B --workers W\n\
+        \u{20}          --model NAME  --json\n\
          report    --threads T  (all tables & figures)"
     );
 }
 
-fn parse_config(s: &str) -> Option<ArchConfig> {
-    parse_quad(s).map(|(n, k, l, m)| ArchConfig::new(n, k, l, m))
-}
-
-fn model_by_name(name: &str) -> Option<photogan::models::Model> {
-    zoo::all_generators()
-        .into_iter()
-        .find(|m| m.name.eq_ignore_ascii_case(name))
-}
-
-fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
-    let cfg = flags
-        .get("config")
-        .and_then(|s| parse_config(s))
-        .unwrap_or_else(ArchConfig::paper_optimum);
-    let acc = match Accelerator::new(cfg) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("invalid config: {e}");
-            return 2;
-        }
-    };
-    let batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(1);
-    let opts = OptFlags {
-        sparse: !flags.contains_key("no-sparse"),
-        pipelined: !flags.contains_key("no-pipeline"),
-        power_gated: !flags.contains_key("no-gating"),
-    };
-    let models = match flags.get("model") {
-        Some(name) => match model_by_name(name) {
-            Some(m) => vec![m],
-            None => {
-                eprintln!("unknown model '{name}'");
-                return 2;
-            }
-        },
-        None => zoo::all_generators(),
-    };
-    let mut t = Table::new(vec!["model", "latency", "energy", "GOPS", "EPB (fJ/b)", "avg W"])
-        .with_title(format!(
-            "simulate [N,K,L,M]=[{},{},{},{}] batch={} opts={:?}",
-            acc.cfg.n, acc.cfg.k, acc.cfg.l, acc.cfg.m, batch, opts
-        ));
-    for m in &models {
-        let r = simulate(m, &acc, batch, opts);
-        t.row(vec![
-            m.name.clone(),
-            fmt_time(r.latency),
-            fmt_energy(r.energy.total()),
-            format!("{:.1}", r.gops()),
-            format!("{:.2}", r.epb() * 1e15),
-            format!("{:.2}", r.avg_power()),
-        ]);
+fn opt_flags(flags: &ParsedFlags) -> OptFlags {
+    OptFlags {
+        sparse: !flags.has("no-sparse"),
+        pipelined: !flags.has("no-pipeline"),
+        power_gated: !flags.has("no-gating"),
     }
-    t.print();
-    0
 }
 
-fn cmd_dse(flags: &HashMap<String, String>) -> i32 {
-    let threads: usize = flags
-        .get("threads")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
-    let grid = match flags.get("grid").map(|s| s.as_str()) {
+fn cmd_simulate(args: &[String]) -> Result<(), ApiError> {
+    const SPEC: &[FlagDef] = &[
+        value("model"),
+        value("batch"),
+        value("config"),
+        switch("no-sparse"),
+        switch("no-pipeline"),
+        switch("no-gating"),
+        switch("strict-power"),
+        switch("json"),
+    ];
+    let flags = ParsedFlags::parse(args, SPEC)?;
+    let mut builder = SimRequest::builder()
+        .batch(flags.usize_or("batch", 1)?)
+        .opts(opt_flags(&flags))
+        .strict_power(flags.has("strict-power"));
+    if let Some(name) = flags.get("model") {
+        builder = builder.model(name);
+    }
+    if let Some(quad) = flags.get("config") {
+        builder = builder.config(quad.parse::<ArchConfig>().map_err(ApiError::from)?);
+    }
+    let outcome = Session::new()?.simulate(&builder.build()?)?;
+    if flags.has("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        outcome.to_table().print();
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &[String]) -> Result<(), ApiError> {
+    const SPEC: &[FlagDef] = &[value("threads"), value("grid"), switch("json")];
+    let flags = ParsedFlags::parse(args, SPEC)?;
+    let grid = match flags.get("grid") {
+        None | Some("paper") => Grid::paper(),
         Some("smoke") => Grid::smoke(),
-        _ => Grid::paper(),
-    };
-    let (table, pts) = report::fig11(&grid, threads);
-    table.print();
-    if let Some(best) = pts.first() {
-        println!(
-            "optimum: [N,K,L,M]=[{},{},{},{}]  (paper: {:?})",
-            best.n,
-            best.k,
-            best.l,
-            best.m,
-            report::PAPER_OPTIMUM
-        );
-    }
-    0
-}
-
-fn cmd_compare() -> i32 {
-    let data = report::comparison_data();
-    report::fig13(&data).print();
-    println!();
-    report::fig14(&data).print();
-    0
-}
-
-fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
-    let dir = flags
-        .get("artifacts")
-        .cloned()
-        .unwrap_or_else(|| "artifacts".to_string());
-    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(64);
-    let max_batch: usize = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(8);
-    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
-    eprintln!("[serve] loading + compiling artifacts from {dir} …");
-    let engine = match Engine::load(std::path::Path::new(&dir)) {
-        Ok(e) => Arc::new(e),
-        Err(e) => {
-            eprintln!("failed to load artifacts: {e:#}");
-            return 1;
+        Some(other) => {
+            return Err(ApiError::InvalidFlag {
+                flag: "grid".into(),
+                reason: format!("expected 'paper' or 'smoke', got '{other}'"),
+            })
         }
     };
-    let model = flags
-        .get("model")
-        .cloned()
-        .unwrap_or_else(|| engine.model_names()[0].clone());
-    eprintln!("[serve] models: {:?}; driving {requests} requests at {model}", engine.model_names());
-    let server = Server::start(
-        engine,
-        ServerConfig {
-            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(5) },
-            workers,
-        },
-    );
-    let start = std::time::Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| server.submit(&model, i as u64, Some((i % 10) as u32), 1))
-        .collect();
-    for rx in rxs {
-        rx.recv().expect("response");
+    let request = SweepRequest::builder()
+        .grid(grid)
+        .threads(flags.usize_or("threads", default_threads())?)
+        .build()?;
+    let outcome = Session::new()?.sweep(&request)?;
+    if flags.has("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        outcome.to_table().print();
+        if let Some(best) = outcome.optimum() {
+            println!(
+                "optimum: [N,K,L,M]=[{},{},{},{}]  (paper: {:?})",
+                best.n,
+                best.k,
+                best.l,
+                best.m,
+                report::PAPER_OPTIMUM
+            );
+        }
     }
-    let wall = start.elapsed().as_secs_f64();
-    let stats = server.shutdown();
-    println!("served {requests} requests in {wall:.2}s ({:.1} img/s)", requests as f64 / wall);
-    for (m, s) in &stats.per_model {
-        println!("  {m}: {s}");
-    }
-    0
+    Ok(())
 }
 
-fn cmd_report(flags: &HashMap<String, String>) -> i32 {
-    let threads: usize = flags
-        .get("threads")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+fn cmd_compare(args: &[String]) -> Result<(), ApiError> {
+    const SPEC: &[FlagDef] = &[switch("json")];
+    let flags = ParsedFlags::parse(args, SPEC)?;
+    let outcome = Session::new()?.compare();
+    if flags.has("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        for (i, table) in outcome.to_tables().iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            table.print();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
+    use photogan::api::ServeRequest;
+    const SPEC: &[FlagDef] = &[
+        value("artifacts"),
+        value("requests"),
+        value("batch"),
+        value("workers"),
+        value("model"),
+        switch("json"),
+    ];
+    let flags = ParsedFlags::parse(args, SPEC)?;
+    let mut builder = ServeRequest::builder()
+        .requests(flags.usize_or("requests", 64)?)
+        .max_batch(flags.usize_or("batch", 8)?)
+        .workers(flags.usize_or("workers", 2)?);
+    if let Some(dir) = flags.get("artifacts") {
+        builder = builder.artifacts(dir);
+    }
+    if let Some(model) = flags.get("model") {
+        builder = builder.model(model);
+    }
+    let request = builder.build()?;
+    eprintln!(
+        "[serve] loading + compiling artifacts from {} …",
+        request.artifacts.display()
+    );
+    let outcome = Session::new()?.serve(&request)?;
+    if flags.has("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        println!(
+            "served {} requests in {:.2}s ({:.1} img/s)",
+            outcome.requests, outcome.wall_s, outcome.throughput_img_s
+        );
+        for (m, s) in &outcome.per_model {
+            println!("  {m}: {s}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &[String]) -> Result<(), ApiError> {
+    Err(ApiError::ArtifactError(
+        "serving needs the PJRT runtime — rebuild with `--features pjrt`".into(),
+    ))
+}
+
+fn cmd_report(args: &[String]) -> Result<(), ApiError> {
+    const SPEC: &[FlagDef] = &[value("threads")];
+    let flags = ParsedFlags::parse(args, SPEC)?;
+    let threads = flags.usize_or("threads", default_threads())?;
+    if threads == 0 {
+        return Err(ApiError::InvalidThreads(0));
+    }
+    // one session for the whole run: every exhibit shares the mapping cache
+    let session = Session::new()?;
     let (t1, _) = report::table1();
     t1.print();
     println!();
     report::table2().print();
     println!();
-    let (t12, _) = report::fig12();
+    let (t12, _) = report::fig12(&session);
     t12.print();
     println!();
-    cmd_compare();
+    for (i, table) in session.compare().to_tables().iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        table.print();
+    }
     println!();
-    let (t11, _) = report::fig11(&Grid::paper(), threads);
+    let (t11, _) = report::fig11(&session, &Grid::paper(), threads);
     t11.print();
-    0
+    Ok(())
 }

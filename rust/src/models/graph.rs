@@ -4,7 +4,11 @@ use super::layer::{Layer, Shape, ShapeError};
 use crate::arch::norm::NormKind;
 
 /// A GAN model (generator or discriminator) as a validated layer sequence.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the full layer structure — the
+/// [`crate::api::Session`] mapping cache uses it to distinguish a
+/// registered model from a same-named modified clone.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Model {
     pub name: String,
     pub input: Shape,

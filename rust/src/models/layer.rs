@@ -46,15 +46,30 @@ pub enum Layer {
 }
 
 /// Error from shape inference.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ShapeError {
-    #[error("layer {index} ({layer}) expects {expected}, got {got}")]
     Mismatch { index: usize, layer: String, expected: String, got: String },
-    #[error("layer {index}: reshape target {target} elements != input {input}")]
     BadReshape { index: usize, target: usize, input: usize },
-    #[error("layer {index}: conv arithmetic invalid (k={k}, s={s}, p={p} on {h}x{w})")]
     BadConv { index: usize, k: usize, s: usize, p: usize, h: usize, w: usize },
 }
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShapeError::Mismatch { index, layer, expected, got } => {
+                write!(f, "layer {index} ({layer}) expects {expected}, got {got}")
+            }
+            ShapeError::BadReshape { index, target, input } => {
+                write!(f, "layer {index}: reshape target {target} elements != input {input}")
+            }
+            ShapeError::BadConv { index, k, s, p, h, w } => {
+                write!(f, "layer {index}: conv arithmetic invalid (k={k}, s={s}, p={p} on {h}x{w})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShapeError {}
 
 impl Layer {
     /// Output shape for a given input shape.

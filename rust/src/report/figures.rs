@@ -4,13 +4,16 @@
 //! rendered [`Table`] (what the bench target prints). Paper reference
 //! values are carried alongside so every exhibit prints
 //! "ours vs paper" rows.
+//!
+//! Exhibits that simulate take a [`Session`]: one session shared across a
+//! report run memoizes every layer mapping, so e.g. `photogan report`
+//! (Fig. 12 grid + Figs. 13/14 + Fig. 11 sweep) maps each model once per
+//! `(batch, opts)` instead of once per exhibit × configuration.
 
-use crate::arch::accelerator::Accelerator;
-use crate::arch::config::ArchConfig;
-use crate::baselines::platform::all_platforms;
-use crate::dse::{explore, DsePoint, Grid};
+use crate::api::{CompareOutcome, Session, SweepRequest};
+use crate::dse::{DsePoint, Grid};
 use crate::models::zoo;
-use crate::sim::{simulate, OptFlags};
+use crate::sim::OptFlags;
 use crate::util::table::{f2, Table};
 
 /// Paper's reported average ratios (Figs. 13/14), in `all_platforms` order.
@@ -20,11 +23,6 @@ pub const PAPER_EPB_RATIOS: [f64; 5] = [514.67, 60.0, 313.50, 317.85, 2.18];
 pub const PAPER_FIG12_COMBINED: f64 = 45.59;
 /// Paper's DSE optimum (Fig. 11).
 pub const PAPER_OPTIMUM: (usize, usize, usize, usize) = (16, 2, 11, 3);
-
-/// Standard chip for the comparison figures.
-pub fn paper_chip() -> Accelerator {
-    Accelerator::new(ArchConfig::paper_optimum()).expect("paper optimum is valid")
-}
 
 // ---------------------------------------------------------------- Table 1
 
@@ -79,38 +77,36 @@ pub fn table2() -> Table {
 
 // ---------------------------------------------------------------- Fig 11
 
-/// Fig. 11: DSE cloud + optimum. Returns (table of top points, all points).
-pub fn fig11(grid: &Grid, threads: usize) -> (Table, Vec<DsePoint>) {
-    let models = zoo::all_generators();
-    let pts = explore(grid, &models, OptFlags::all(), threads);
-    let mut t = Table::new(vec!["rank", "N", "K", "L", "M", "peak W", "GOPS", "EPB (fJ/b)", "GOPS/EPB"])
-        .with_title(format!(
-            "Fig. 11: DSE over [N,K,L,M] ({} configs, paper optimum {:?})",
-            grid.len(),
-            PAPER_OPTIMUM
-        ));
-    for (i, p) in pts.iter().take(10).enumerate() {
-        t.row(vec![
-            format!("{}", i + 1),
-            p.n.to_string(),
-            p.k.to_string(),
-            p.l.to_string(),
-            p.m.to_string(),
-            f2(p.peak_power_w),
-            f2(p.gops),
-            f2(p.epb * 1e15),
-            format!("{:.3e}", p.objective),
-        ]);
+/// Fig. 11: DSE cloud + optimum over the session's model registry.
+/// Returns (table of top points, all points). Panic-free: `threads` is
+/// clamped to ≥ 1 and an empty grid renders an empty exhibit (CLI-level
+/// validation of user input happens in `main`, with typed errors).
+pub fn fig11(session: &Session, grid: &Grid, threads: usize) -> (Table, Vec<DsePoint>) {
+    let outcome = SweepRequest::builder()
+        .grid(grid.clone())
+        .threads(threads.max(1))
+        .build()
+        .and_then(|req| session.sweep(&req));
+    match outcome {
+        Ok(outcome) => (outcome.to_table(), outcome.points),
+        // only reachable with an empty grid: render an empty exhibit
+        Err(_) => {
+            let t = Table::new(vec![
+                "rank", "N", "K", "L", "M", "peak W", "GOPS", "EPB (fJ/b)", "GOPS/EPB",
+            ])
+            .with_title(format!(
+                "Fig. 11: DSE over [N,K,L,M] (0 configs, paper optimum {PAPER_OPTIMUM:?})"
+            ));
+            (t, Vec::new())
+        }
     }
-    (t, pts)
 }
 
 // ---------------------------------------------------------------- Fig 12
 
 /// Fig. 12: normalized energy per optimization config per model.
 /// Returns (table, per-model normalized energies in sweep order).
-pub fn fig12() -> (Table, Vec<(String, Vec<f64>)>) {
-    let acc = paper_chip();
+pub fn fig12(session: &Session) -> (Table, Vec<(String, Vec<f64>)>) {
     let sweep = OptFlags::fig12_sweep();
     let mut t = Table::new(vec![
         "Model",
@@ -125,10 +121,10 @@ pub fn fig12() -> (Table, Vec<(String, Vec<f64>)>) {
         "Fig. 12: normalized energy (paper: combined avg {PAPER_FIG12_COMBINED}x)"
     ));
     let mut out = Vec::new();
-    for m in zoo::all_generators() {
+    for m in session.models() {
         let energies: Vec<f64> = sweep
             .iter()
-            .map(|(_, f)| simulate(&m, &acc, 1, *f).energy.total())
+            .map(|(_, f)| session.sim_report(m, 1, *f).energy.total())
             .collect();
         let base = energies[0];
         let normalized: Vec<f64> = energies.iter().map(|e| e / base).collect();
@@ -148,37 +144,14 @@ pub fn fig12() -> (Table, Vec<(String, Vec<f64>)>) {
 
 // ------------------------------------------------------------ Figs 13/14
 
-/// Per-model GOPS (Fig. 13) and EPB (Fig. 14) for PhotoGAN + all baselines.
-pub struct ComparisonData {
-    /// (platform name, per-model GOPS, per-model EPB); PhotoGAN first.
-    pub series: Vec<(String, Vec<f64>, Vec<f64>)>,
-    pub model_names: Vec<String>,
-}
-
-pub fn comparison_data() -> ComparisonData {
-    let acc = paper_chip();
-    let models = zoo::all_generators();
-    let model_names: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
-    let mut series = Vec::new();
-    let pg: Vec<_> = models.iter().map(|m| simulate(m, &acc, 1, OptFlags::all())).collect();
-    series.push((
-        "PhotoGAN".to_string(),
-        pg.iter().map(|r| r.gops()).collect(),
-        pg.iter().map(|r| r.epb()).collect(),
-    ));
-    for p in all_platforms() {
-        let rs: Vec<_> = models.iter().map(|m| p.evaluate(m, 1)).collect();
-        series.push((
-            p.name.to_string(),
-            rs.iter().map(|r| r.gops()).collect(),
-            rs.iter().map(|r| r.epb()).collect(),
-        ));
-    }
-    ComparisonData { series, model_names }
+/// Per-model GOPS (Fig. 13) and EPB (Fig. 14) for PhotoGAN + all
+/// baselines. Thin wrapper over [`Session::compare`].
+pub fn comparison_data(session: &Session) -> CompareOutcome {
+    session.compare()
 }
 
 /// Fig. 13 table: GOPS per model per platform + average ratio row.
-pub fn fig13(data: &ComparisonData) -> Table {
+pub fn fig13(data: &CompareOutcome) -> Table {
     let mut t = Table::new(
         std::iter::once("Platform".to_string())
             .chain(data.model_names.iter().cloned())
@@ -186,18 +159,18 @@ pub fn fig13(data: &ComparisonData) -> Table {
             .collect::<Vec<_>>(),
     )
     .with_title("Fig. 13: GOPS comparison");
-    let pg = &data.series[0];
-    for (i, (name, gops, _)) in data.series.iter().enumerate() {
-        let mut row = vec![name.clone()];
-        row.extend(gops.iter().map(|g| f2(*g)));
-        if i == 0 {
-            row.push("-".into());
-            row.push("-".into());
-        } else {
-            let ratio: f64 = pg.1.iter().zip(gops).map(|(a, b)| a / b).sum::<f64>()
-                / gops.len() as f64;
-            row.push(f2(ratio));
-            row.push(f2(PAPER_GOPS_RATIOS[i - 1]));
+    for (i, s) in data.series.iter().enumerate() {
+        let mut row = vec![s.platform.clone()];
+        row.extend(s.gops.iter().map(|g| f2(*g)));
+        match data.avg_gops_ratio(i) {
+            Some(ratio) => {
+                row.push(f2(ratio));
+                row.push(f2(PAPER_GOPS_RATIOS[i - 1]));
+            }
+            None => {
+                row.push("-".into());
+                row.push("-".into());
+            }
         }
         t.row(row);
     }
@@ -205,7 +178,7 @@ pub fn fig13(data: &ComparisonData) -> Table {
 }
 
 /// Fig. 14 table: EPB per model per platform + average ratio row.
-pub fn fig14(data: &ComparisonData) -> Table {
+pub fn fig14(data: &CompareOutcome) -> Table {
     let mut t = Table::new(
         std::iter::once("Platform".to_string())
             .chain(data.model_names.iter().cloned())
@@ -213,18 +186,18 @@ pub fn fig14(data: &ComparisonData) -> Table {
             .collect::<Vec<_>>(),
     )
     .with_title("Fig. 14: EPB comparison (fJ/bit)");
-    let pg = &data.series[0];
-    for (i, (name, _, epb)) in data.series.iter().enumerate() {
-        let mut row = vec![name.clone()];
-        row.extend(epb.iter().map(|e| f2(e * 1e15)));
-        if i == 0 {
-            row.push("-".into());
-            row.push("-".into());
-        } else {
-            let ratio: f64 =
-                epb.iter().zip(&pg.2).map(|(b, a)| b / a).sum::<f64>() / epb.len() as f64;
-            row.push(f2(ratio));
-            row.push(f2(PAPER_EPB_RATIOS[i - 1]));
+    for (i, s) in data.series.iter().enumerate() {
+        let mut row = vec![s.platform.clone()];
+        row.extend(s.epb.iter().map(|e| f2(e * 1e15)));
+        match data.avg_epb_ratio(i) {
+            Some(ratio) => {
+                row.push(f2(ratio));
+                row.push(f2(PAPER_EPB_RATIOS[i - 1]));
+            }
+            None => {
+                row.push("-".into());
+                row.push("-".into());
+            }
         }
         t.row(row);
     }
@@ -234,6 +207,10 @@ pub fn fig14(data: &ComparisonData) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn session() -> Session {
+        Session::new().expect("paper optimum is valid")
+    }
 
     #[test]
     fn table1_rows_cover_models() {
@@ -249,7 +226,7 @@ mod tests {
 
     #[test]
     fn fig12_photogan_config_always_wins() {
-        let (_, per_model) = fig12();
+        let (_, per_model) = fig12(&session());
         for (name, normalized) in &per_model {
             let min = normalized.iter().cloned().fold(f64::INFINITY, f64::min);
             assert!(
@@ -261,18 +238,20 @@ mod tests {
 
     #[test]
     fn comparison_photogan_wins_everywhere() {
-        let data = comparison_data();
+        let data = comparison_data(&session());
         let pg = &data.series[0];
-        for (name, gops, epb) in data.series.iter().skip(1) {
-            for i in 0..gops.len() {
+        for s in data.series.iter().skip(1) {
+            for i in 0..s.gops.len() {
                 assert!(
-                    pg.1[i] > gops[i],
-                    "{name}/{}: PhotoGAN GOPS must win",
+                    pg.gops[i] > s.gops[i],
+                    "{}/{}: PhotoGAN GOPS must win",
+                    s.platform,
                     data.model_names[i]
                 );
                 assert!(
-                    pg.2[i] < epb[i],
-                    "{name}/{}: PhotoGAN EPB must win",
+                    pg.epb[i] < s.epb[i],
+                    "{}/{}: PhotoGAN EPB must win",
+                    s.platform,
                     data.model_names[i]
                 );
             }
@@ -281,18 +260,30 @@ mod tests {
 
     #[test]
     fn reram_is_the_closest_competitor() {
-        let data = comparison_data();
-        let pg = &data.series[0];
+        let data = comparison_data(&session());
         let mut ratios: Vec<(String, f64)> = data
             .series
             .iter()
+            .enumerate()
             .skip(1)
-            .map(|(n, g, _)| {
-                let r = pg.1.iter().zip(g).map(|(a, b)| a / b).sum::<f64>() / g.len() as f64;
-                (n.clone(), r)
+            .map(|(i, s)| {
+                (s.platform.clone(), data.avg_gops_ratio(i).expect("baseline ratio"))
             })
             .collect();
         ratios.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         assert!(ratios[0].0.contains("ReRAM"), "closest is {:?}", ratios[0]);
+    }
+
+    #[test]
+    fn fig11_smoke_reports_optimum_first() {
+        let s = session();
+        let (table, pts) = fig11(&s, &Grid::smoke(), 2);
+        assert!(!pts.is_empty());
+        assert!(table.len() <= 10);
+        for w in pts.windows(2) {
+            assert!(w[0].objective >= w[1].objective);
+        }
+        // the session now has cached mappings for every model
+        assert!(s.mapping_cache_entries() >= 4);
     }
 }

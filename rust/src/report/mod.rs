@@ -1,6 +1,8 @@
 //! Regeneration of every table and figure in the paper's evaluation
 //! (the bench targets call into these so `cargo bench` prints the same
-//! rows/series the paper reports).
+//! rows/series the paper reports). Exhibits that simulate take a
+//! [`crate::api::Session`] so one report run shares a single mapping
+//! cache across every figure.
 
 pub mod figures;
 

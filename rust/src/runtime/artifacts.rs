@@ -15,7 +15,8 @@
 //! `output_elements`, `batch`, `weight_buffers`, `weights_<i>_elements`,
 //! `label_elements` (optional conditioning input).
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

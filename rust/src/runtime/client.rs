@@ -18,7 +18,8 @@
 use super::artifacts::ArtifactSet;
 use crate::coordinator::server::BatchExecutor;
 use crate::util::rng::Pcg32;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{err, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -289,7 +290,7 @@ fn executor_thread(
                 Payload::Seeded(entries) => rt.generate(entries),
                 Payload::Raw { input, label } => rt.run_raw(input, label.as_deref()),
             },
-            None => Err(anyhow::anyhow!("unknown model '{}'", job.model)),
+            None => Err(err(format!("unknown model '{}'", job.model))),
         };
         let _ = job.reply.send(result);
     }

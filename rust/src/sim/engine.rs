@@ -16,6 +16,10 @@ use crate::sim::result::{EnergyBreakdown, LayerTrace, SimReport};
 /// `batch` is the number of inference instances streamed back-to-back
 /// (activations interleave; weights are loaded once per tile regardless of
 /// batch — the main reason batching helps).
+///
+/// This is the thin un-cached wrapper (map + cost); repeated simulations
+/// should go through [`crate::api::Session`], which memoizes the mapping
+/// by `(model, batch, OptFlags)` and produces identical results.
 pub fn simulate(model: &Model, acc: &Accelerator, batch: usize, opts: OptFlags) -> SimReport {
     assert!(batch >= 1);
     let jobs = map_model(model, batch, &opts);

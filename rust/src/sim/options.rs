@@ -1,7 +1,9 @@
 //! Optimization toggles (the paper's Fig. 12 sensitivity axes).
 
 /// Which of the three co-design optimizations are enabled.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash`/`Eq` let the flags key the [`crate::api::Session`] mapping cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct OptFlags {
     /// Sparse computation dataflow for transposed convolutions (§III.C.1).
     pub sparse: bool,

@@ -1,58 +1,161 @@
-//! Tiny CLI argument parser (no clap in the offline crate set).
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
 //!
-//! Grammar: `<command> [--key value | --switch]...`. A flag followed by a
-//! non-`--` token takes it as its value; otherwise it is a boolean switch.
+//! Grammar: `<command> [--switch | --key value | --key=value]...`.
+//!
+//! Unlike the original lookahead heuristic ("a flag followed by a non-`--`
+//! token takes it as a value"), flags are now declared **explicitly** as
+//! either [`FlagKind::Switch`] (boolean, takes no value) or
+//! [`FlagKind::Value`] (requires a value). A valued flag with a missing
+//! value, a switch given a value, an unknown flag, or a stray positional
+//! token all produce a typed [`CliError`] instead of being silently
+//! misparsed or ignored.
 
 use std::collections::HashMap;
+use std::fmt;
 
-/// Parsed command line.
-#[derive(Debug, Clone, Default)]
-pub struct Cli {
-    pub command: String,
-    pub flags: HashMap<String, String>,
+/// Whether a flag is a boolean switch or requires a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlagKind {
+    /// Boolean: present or absent; `--flag=value` is an error.
+    Switch,
+    /// Requires a value: `--flag value` or `--flag=value`.
+    Value,
 }
 
-impl Cli {
-    /// Parse from an argument list (without argv[0]).
-    pub fn parse(args: &[String]) -> Cli {
-        let command = args.first().cloned().unwrap_or_default();
-        let mut flags = HashMap::new();
-        let mut i = 1;
-        while i < args.len() {
-            if let Some(key) = args[i].strip_prefix("--") {
-                let next_is_value =
-                    args.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
-                if next_is_value {
-                    flags.insert(key.to_string(), args[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.insert(key.to_string(), "true".to_string());
-                    i += 1;
-                }
-            } else {
-                i += 1; // stray token: ignored (caller may warn)
+/// Declaration of one accepted flag.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagDef {
+    pub name: &'static str,
+    pub kind: FlagKind,
+}
+
+/// Declare a switch flag.
+pub const fn switch(name: &'static str) -> FlagDef {
+    FlagDef { name, kind: FlagKind::Switch }
+}
+
+/// Declare a valued flag.
+pub const fn value(name: &'static str) -> FlagDef {
+    FlagDef { name, kind: FlagKind::Value }
+}
+
+/// Typed CLI parse error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    /// `--flag` is not in the command's spec.
+    UnknownFlag { flag: String },
+    /// A [`FlagKind::Value`] flag had no value (end of args, or the next
+    /// token is another flag).
+    MissingValue { flag: String },
+    /// A [`FlagKind::Switch`] flag was given `=value`.
+    UnexpectedValue { flag: String, value: String },
+    /// A valued flag's value failed to parse.
+    InvalidValue { flag: String, value: String, expected: &'static str },
+    /// A bare token where a flag was expected.
+    StrayToken { token: String },
+    /// The same flag appeared twice.
+    DuplicateFlag { flag: String },
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownFlag { flag } => write!(f, "unknown flag '--{flag}'"),
+            CliError::MissingValue { flag } => {
+                write!(f, "flag '--{flag}' requires a value (use '--{flag} <value>')")
             }
+            CliError::UnexpectedValue { flag, value } => {
+                write!(f, "switch '--{flag}' takes no value (got '{value}')")
+            }
+            CliError::InvalidValue { flag, value, expected } => {
+                write!(f, "flag '--{flag}': '{value}' is not a valid {expected}")
+            }
+            CliError::StrayToken { token } => {
+                write!(f, "unexpected argument '{token}' (flags start with '--')")
+            }
+            CliError::DuplicateFlag { flag } => write!(f, "flag '--{flag}' given twice"),
         }
-        Cli { command, flags }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed flags for one command.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedFlags {
+    values: HashMap<String, String>,
+}
+
+impl ParsedFlags {
+    /// Parse an argument list (without the command token) against a spec.
+    pub fn parse(args: &[String], spec: &[FlagDef]) -> Result<ParsedFlags, CliError> {
+        let mut values: HashMap<String, String> = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let token = &args[i];
+            let Some(body) = token.strip_prefix("--") else {
+                return Err(CliError::StrayToken { token: token.clone() });
+            };
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let def = spec
+                .iter()
+                .find(|d| d.name == name)
+                .ok_or_else(|| CliError::UnknownFlag { flag: name.to_string() })?;
+            if values.contains_key(def.name) {
+                return Err(CliError::DuplicateFlag { flag: name.to_string() });
+            }
+            let stored = match (def.kind, inline) {
+                (FlagKind::Switch, None) => "true".to_string(),
+                (FlagKind::Switch, Some(v)) => {
+                    return Err(CliError::UnexpectedValue { flag: name.to_string(), value: v })
+                }
+                (FlagKind::Value, Some(v)) => v,
+                (FlagKind::Value, None) => {
+                    let next = args.get(i + 1);
+                    match next {
+                        Some(v) if !v.starts_with("--") => {
+                            i += 1;
+                            v.clone()
+                        }
+                        _ => return Err(CliError::MissingValue { flag: name.to_string() }),
+                    }
+                }
+            };
+            values.insert(def.name.to_string(), stored);
+            i += 1;
+        }
+        Ok(ParsedFlags { values })
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
-    }
-
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+        self.values.get(key).map(|s| s.as_str())
     }
 
     pub fn has(&self, key: &str) -> bool {
-        self.flags.contains_key(key)
+        self.values.contains_key(key)
+    }
+
+    /// Parse a valued flag as `usize`, with a default when absent and a
+    /// typed error when present-but-garbled.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::InvalidValue {
+                flag: key.to_string(),
+                value: v.to_string(),
+                expected: "integer",
+            }),
+        }
     }
 }
 
 /// Parse an `N,K,L,M` quadruple.
 pub fn parse_quad(s: &str) -> Option<(usize, usize, usize, usize)> {
     let parts: Vec<usize> = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
-    if parts.len() == 4 {
+    if parts.len() == 4 && s.split(',').count() == 4 {
         Some((parts[0], parts[1], parts[2], parts[3]))
     } else {
         None
@@ -67,27 +170,86 @@ mod tests {
         s.iter().map(|x| x.to_string()).collect()
     }
 
+    const SPEC: &[FlagDef] = &[
+        value("model"),
+        value("batch"),
+        switch("no-sparse"),
+        switch("json"),
+    ];
+
     #[test]
-    fn parses_command_values_and_switches() {
-        let c = Cli::parse(&argv(&["simulate", "--model", "dcgan", "--no-sparse", "--batch", "4"]));
-        assert_eq!(c.command, "simulate");
-        assert_eq!(c.get("model"), Some("dcgan"));
-        assert!(c.has("no-sparse"));
-        assert_eq!(c.get_usize("batch", 1), 4);
-        assert_eq!(c.get_usize("missing", 7), 7);
+    fn parses_values_and_switches_by_spec() {
+        let f = ParsedFlags::parse(
+            &argv(&["--model", "dcgan", "--no-sparse", "--batch", "4"]),
+            SPEC,
+        )
+        .unwrap();
+        assert_eq!(f.get("model"), Some("dcgan"));
+        assert!(f.has("no-sparse"));
+        assert!(!f.has("json"));
+        assert_eq!(f.usize_or("batch", 1).unwrap(), 4);
+        assert_eq!(f.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let f = ParsedFlags::parse(&argv(&["--batch=8", "--model=artgan"]), SPEC).unwrap();
+        assert_eq!(f.usize_or("batch", 1).unwrap(), 8);
+        assert_eq!(f.get("model"), Some("artgan"));
+    }
+
+    #[test]
+    fn missing_value_is_an_error_not_a_switch() {
+        // trailing valued flag
+        assert_eq!(
+            ParsedFlags::parse(&argv(&["--batch"]), SPEC),
+            Err(CliError::MissingValue { flag: "batch".into() })
+        );
+        // valued flag followed by another flag (the old lookahead heuristic
+        // silently turned this into a boolean)
+        assert_eq!(
+            ParsedFlags::parse(&argv(&["--batch", "--json"]), SPEC),
+            Err(CliError::MissingValue { flag: "batch".into() })
+        );
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        assert_eq!(
+            ParsedFlags::parse(&argv(&["--no-sparse=1"]), SPEC),
+            Err(CliError::UnexpectedValue { flag: "no-sparse".into(), value: "1".into() })
+        );
+    }
+
+    #[test]
+    fn unknown_and_stray_and_duplicate() {
+        assert_eq!(
+            ParsedFlags::parse(&argv(&["--frobnicate"]), SPEC),
+            Err(CliError::UnknownFlag { flag: "frobnicate".into() })
+        );
+        assert_eq!(
+            ParsedFlags::parse(&argv(&["stray"]), SPEC),
+            Err(CliError::StrayToken { token: "stray".into() })
+        );
+        assert_eq!(
+            ParsedFlags::parse(&argv(&["--json", "--json"]), SPEC),
+            Err(CliError::DuplicateFlag { flag: "json".into() })
+        );
+    }
+
+    #[test]
+    fn bad_integer_value_is_typed() {
+        let f = ParsedFlags::parse(&argv(&["--batch", "four"]), SPEC).unwrap();
+        assert!(matches!(
+            f.usize_or("batch", 1),
+            Err(CliError::InvalidValue { .. })
+        ));
     }
 
     #[test]
     fn empty_args_are_fine() {
-        let c = Cli::parse(&[]);
-        assert_eq!(c.command, "");
-        assert!(c.flags.is_empty());
-    }
-
-    #[test]
-    fn trailing_switch_is_boolean() {
-        let c = Cli::parse(&argv(&["dse", "--verbose"]));
-        assert_eq!(c.get("verbose"), Some("true"));
+        let f = ParsedFlags::parse(&[], SPEC).unwrap();
+        assert!(!f.has("json"));
     }
 
     #[test]
@@ -96,5 +258,6 @@ mod tests {
         assert_eq!(parse_quad(" 16 , 2 , 11 , 3 "), Some((16, 2, 11, 3)));
         assert_eq!(parse_quad("16,2,11"), None);
         assert_eq!(parse_quad("a,b,c,d"), None);
+        assert_eq!(parse_quad("1,2,3,4,5"), None);
     }
 }

@@ -1,0 +1,141 @@
+//! Minimal error plumbing for the offline crate set (no `anyhow`): a boxed
+//! dynamic error alias, a [`Context`] extension trait for annotating error
+//! chains, and the [`crate::bail!`] early-return macro.
+//!
+//! This covers the small slice of `anyhow`'s surface the crate actually
+//! uses; typed errors live next to their subsystems ([`crate::api::ApiError`],
+//! [`crate::arch::config::ConfigError`], [`crate::models::layer::ShapeError`]).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error, thread-safe so it can cross channel/thread seams.
+pub type BoxError = Box<dyn StdError + Send + Sync + 'static>;
+
+/// Result alias used by the untyped (I/O-ish) paths of the crate.
+pub type Result<T> = std::result::Result<T, BoxError>;
+
+/// A plain string error.
+#[derive(Debug)]
+pub struct Message(pub String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+/// Build a [`BoxError`] from a message.
+pub fn err(msg: impl Into<String>) -> BoxError {
+    Box::new(Message(msg.into()))
+}
+
+/// An error wrapped with a context message; `Display` renders the whole
+/// chain (`context: cause`) so `{}`/`{:#}` both read like anyhow's chains.
+#[derive(Debug)]
+pub struct Contexted {
+    context: String,
+    source: BoxError,
+}
+
+impl fmt::Display for Contexted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.context, self.source)
+    }
+}
+
+impl StdError for Contexted {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`, mirroring the `anyhow::Context` API.
+pub trait Context<T> {
+    /// Annotate the error with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Annotate the error with a lazily-built message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<BoxError>,
+{
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| {
+            Box::new(Contexted { context: msg.into(), source: e.into() }) as BoxError
+        })
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            Box::new(Contexted { context: f().into(), source: e.into() }) as BoxError
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| err(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| err(f()))
+    }
+}
+
+/// Early-return with a formatted [`BoxError`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::err(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(err("root cause"))
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(7).context("fine").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading file").unwrap_err();
+        assert!(e.to_string().starts_with("reading file:"));
+    }
+
+    #[test]
+    fn bail_macro_formats() {
+        fn f(x: usize) -> Result<()> {
+            if x > 3 {
+                bail!("x too big: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(9).unwrap_err().to_string(), "x too big: 9");
+    }
+}

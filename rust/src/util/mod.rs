@@ -1,11 +1,14 @@
 //! Shared utilities: deterministic RNG, statistics, SI-unit helpers, ASCII
-//! table rendering, and a minimal property-based-testing harness.
+//! table rendering, JSON writing/parsing, error plumbing, and a minimal
+//! property-based-testing harness.
 //!
 //! The offline crate cache for this environment carries neither `rand` nor
 //! `proptest` nor `criterion`, so this module provides the small, audited
 //! subset of each that the rest of the crate needs (see DESIGN.md §2).
 
 pub mod cli;
+pub mod error;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -54,6 +54,16 @@ impl Table {
         self.rows.len()
     }
 
+    /// Column headers.
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// Data rows (used by the JSON/table round-trip tests).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
     /// True if no data rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()

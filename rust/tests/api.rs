@@ -1,0 +1,286 @@
+//! Integration tests for the `photogan::api` Session layer: builder
+//! validation (every `ApiError` variant is reachable), mapping-cache
+//! equivalence (cached results bit-identical to direct `sim::simulate`
+//! calls and to the pre-Session DSE path), and JSON/table round-trips.
+
+use photogan::api::{ApiError, Session, SimRequest, SweepRequest};
+use photogan::arch::config::{ArchConfig, ConfigError};
+use photogan::dse::{explore, Grid};
+use photogan::models::zoo;
+use photogan::sim::{simulate, OptFlags};
+use photogan::util::cli::{CliError, ParsedFlags};
+use photogan::util::json;
+
+// ------------------------------------------------------- builder validation
+
+#[test]
+fn every_api_error_variant_is_reachable() {
+    let session = Session::new().unwrap();
+
+    // UnknownModel — from name resolution
+    let req = SimRequest::builder().model("biggan").build().unwrap();
+    assert!(matches!(
+        session.simulate(&req).unwrap_err(),
+        ApiError::UnknownModel { ref name, ref available }
+            if name == "biggan" && available.len() == 4
+    ));
+
+    // InvalidConfig — from builder-time structural validation
+    assert_eq!(
+        SimRequest::builder().config(ArchConfig::new(40, 2, 11, 3)).build().unwrap_err(),
+        ApiError::InvalidConfig(ConfigError::TooManyWavelengths(40, 36))
+    );
+
+    // PowerCapExceeded — strict power validation against a tightened cap
+    let mut cfg = ArchConfig::paper_optimum();
+    cfg.params.system.power_cap_w = 0.5;
+    let tight = Session::with_config(cfg).unwrap();
+    let req = SimRequest::builder().strict_power(true).build().unwrap();
+    assert!(matches!(
+        tight.simulate(&req).unwrap_err(),
+        ApiError::PowerCapExceeded { cap_w, .. } if cap_w == 0.5
+    ));
+
+    // InvalidBatch
+    assert_eq!(
+        SimRequest::builder().batch(0).build().unwrap_err(),
+        ApiError::InvalidBatch(0)
+    );
+
+    // EmptyGrid
+    let empty = Grid { n: vec![], k: vec![2], l: vec![11], m: vec![3] };
+    assert_eq!(
+        SweepRequest::builder().grid(empty).build().unwrap_err(),
+        ApiError::EmptyGrid
+    );
+
+    // InvalidThreads
+    assert_eq!(
+        SweepRequest::builder().threads(0).build().unwrap_err(),
+        ApiError::InvalidThreads(0)
+    );
+
+    // InvalidFlag — CLI errors funnel into the API error channel
+    let cli_err = ParsedFlags::parse(&["--batch".to_string()], &[photogan::util::cli::value("batch")])
+        .unwrap_err();
+    assert_eq!(cli_err, CliError::MissingValue { flag: "batch".into() });
+    let api_err: ApiError = cli_err.into();
+    assert!(matches!(api_err, ApiError::InvalidFlag { ref flag, .. } if flag == "batch"));
+
+    // ArtifactError / Internal — runtime-failure variants (exit code 1)
+    for e in [
+        ApiError::ArtifactError("no artifacts".into()),
+        ApiError::Internal("worker died".into()),
+    ] {
+        assert_eq!(e.exit_code(), 1);
+        assert!(!e.to_string().is_empty());
+    }
+    // all validation errors are usage errors (exit code 2)
+    assert_eq!(ApiError::InvalidBatch(0).exit_code(), 2);
+    assert_eq!(ApiError::EmptyGrid.exit_code(), 2);
+    // InvalidWorkers comes from the pjrt-gated ServeRequest builder; the
+    // variant itself is feature-independent
+    let workers_err = ApiError::InvalidWorkers(0);
+    assert_eq!(workers_err.exit_code(), 2);
+    assert!(workers_err.to_string().contains("workers"));
+}
+
+#[test]
+fn bad_config_string_is_typed_not_silent() {
+    // the pre-Session CLI silently fell back to the paper optimum on a
+    // malformed --config; the API surfaces it
+    let err = "16,2,eleven,3".parse::<ArchConfig>().unwrap_err();
+    assert_eq!(err, ConfigError::BadQuad("16,2,eleven,3".into()));
+    let api: ApiError = err.into();
+    assert!(matches!(api, ApiError::InvalidConfig(_)));
+}
+
+// --------------------------------------------------- cache equivalence
+
+#[test]
+fn session_results_bit_identical_to_direct_simulate() {
+    let session = Session::new().unwrap();
+    let acc = session.accelerator().clone();
+    for model in zoo::all_generators() {
+        for (batch, opts) in [
+            (1, OptFlags::all()),
+            (8, OptFlags::all()),
+            (1, OptFlags::baseline()),
+            (2, OptFlags::sw_optimized()),
+        ] {
+            let direct = simulate(&model, &acc, batch, opts);
+            let cached = session.sim_report(&model, batch, opts);
+            assert_eq!(direct.latency, cached.latency, "{} b{batch}", model.name);
+            assert_eq!(
+                direct.energy.total(),
+                cached.energy.total(),
+                "{} b{batch}",
+                model.name
+            );
+            assert_eq!(direct.gops(), cached.gops(), "{} b{batch}", model.name);
+            assert_eq!(direct.epb(), cached.epb(), "{} b{batch}", model.name);
+            // and a second (cache-hit) call is identical again
+            let hit = session.sim_report(&model, batch, opts);
+            assert_eq!(cached.latency, hit.latency);
+            assert_eq!(cached.energy.total(), hit.energy.total());
+        }
+    }
+    // 4 models × 4 (batch, opts) points
+    assert_eq!(session.mapping_cache_entries(), 16);
+}
+
+#[test]
+fn session_sweep_matches_seed_dse_path() {
+    let models = zoo::all_generators();
+    let direct = explore(&Grid::smoke(), &models, OptFlags::all(), 4);
+    let session = Session::new().unwrap();
+    let outcome = session
+        .sweep(&SweepRequest::builder().grid(Grid::smoke()).threads(4).build().unwrap())
+        .unwrap();
+    assert_eq!(direct.len(), outcome.points.len());
+    let best = outcome.optimum().expect("smoke grid has valid points");
+    assert_eq!(
+        (direct[0].n, direct[0].k, direct[0].l, direct[0].m),
+        (best.n, best.k, best.l, best.m),
+        "cached sweep must find the same optimum"
+    );
+    for (a, b) in direct.iter().zip(&outcome.points) {
+        assert_eq!((a.n, a.k, a.l, a.m), (b.n, b.k, b.l, b.m));
+        assert_eq!(a.objective, b.objective, "objective must be bit-identical");
+        assert_eq!(a.gops, b.gops);
+        assert_eq!(a.epb, b.epb);
+    }
+}
+
+#[test]
+fn custom_config_requests_share_the_cache() {
+    let session = Session::new().unwrap();
+    let base = session
+        .simulate(&SimRequest::builder().model("dcgan").build().unwrap())
+        .unwrap();
+    let entries_after_first = session.mapping_cache_entries();
+    // same model, different chip: mapping is config-independent → no new entry
+    let custom = session
+        .simulate(
+            &SimRequest::builder()
+                .model("dcgan")
+                .config(ArchConfig::new(8, 1, 3, 1))
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(session.mapping_cache_entries(), entries_after_first);
+    assert_eq!(custom.config, (8, 1, 3, 1));
+    // a smaller chip must not be faster than the paper chip
+    assert!(custom.rows[0].latency_s >= base.rows[0].latency_s);
+}
+
+// ------------------------------------------------------ JSON round-trips
+
+#[test]
+fn simulate_json_round_trips_and_matches_table() {
+    let session = Session::new().unwrap();
+    let outcome = session
+        .simulate(&SimRequest::builder().batch(2).build().unwrap())
+        .unwrap();
+    let doc = json::parse(&outcome.to_json()).expect("to_json output must parse");
+    assert_eq!(doc.get("command").and_then(|v| v.as_str()), Some("simulate"));
+    assert_eq!(doc.get("batch").and_then(|v| v.as_usize()), Some(2));
+    let results = doc.get("results").and_then(|v| v.as_array()).unwrap();
+    let table = outcome.to_table();
+    assert_eq!(results.len(), table.len());
+    for (row, j) in table.rows().iter().zip(results) {
+        assert_eq!(row[0], j.get("model").unwrap().as_str().unwrap());
+        assert_eq!(row[3], format!("{:.1}", j.get("gops").unwrap().as_f64().unwrap()));
+        assert_eq!(row[4], format!("{:.2}", j.get("epb_fj").unwrap().as_f64().unwrap()));
+        assert_eq!(
+            row[5],
+            format!("{:.2}", j.get("avg_power_w").unwrap().as_f64().unwrap())
+        );
+    }
+}
+
+#[test]
+fn sweep_json_round_trips_and_matches_table() {
+    let session = Session::new().unwrap();
+    let outcome = session
+        .sweep(&SweepRequest::builder().grid(Grid::smoke()).threads(2).build().unwrap())
+        .unwrap();
+    let doc = json::parse(&outcome.to_json()).expect("to_json output must parse");
+    assert_eq!(doc.get("command").and_then(|v| v.as_str()), Some("dse"));
+    assert_eq!(
+        doc.get("valid_points").and_then(|v| v.as_usize()),
+        Some(outcome.points.len())
+    );
+    let points = doc.get("points").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(points.len(), outcome.points.len());
+    let table = outcome.to_table();
+    for (row, j) in table.rows().iter().zip(points) {
+        assert_eq!(row[1], format!("{}", j.get("n").unwrap().as_usize().unwrap()));
+        assert_eq!(row[5], format!("{:.2}", j.get("peak_w").unwrap().as_f64().unwrap()));
+        assert_eq!(row[6], format!("{:.2}", j.get("gops").unwrap().as_f64().unwrap()));
+        assert_eq!(
+            row[8],
+            format!("{:.3e}", j.get("objective").unwrap().as_f64().unwrap())
+        );
+    }
+    // optimum in JSON is the first point
+    let opt = doc.get("optimum").unwrap();
+    assert_eq!(
+        opt.get("n").and_then(|v| v.as_usize()),
+        Some(outcome.optimum().unwrap().n)
+    );
+}
+
+#[test]
+fn compare_json_round_trips_and_matches_tables() {
+    let session = Session::new().unwrap();
+    let outcome = session.compare();
+    let doc = json::parse(&outcome.to_json()).expect("to_json output must parse");
+    assert_eq!(doc.get("command").and_then(|v| v.as_str()), Some("compare"));
+    let series = doc.get("series").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(series.len(), outcome.series.len());
+    // PhotoGAN first, with null ratios
+    assert_eq!(series[0].get("platform").and_then(|v| v.as_str()), Some("PhotoGAN"));
+    assert_eq!(series[0].get("avg_gops_ratio"), Some(&json::JsonValue::Null));
+    let tables = outcome.to_tables();
+    assert_eq!(tables.len(), 2, "compare renders Fig. 13 + Fig. 14");
+    for (i, j) in series.iter().enumerate().skip(1) {
+        let ratio = j.get("avg_gops_ratio").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(Some(ratio), outcome.avg_gops_ratio(i));
+        // table row `i`, second-to-last column is the formatted ratio
+        let row = &tables[0].rows()[i];
+        assert_eq!(row[row.len() - 2], format!("{ratio:.2}"));
+        assert!(ratio > 1.0, "PhotoGAN must win on GOPS");
+    }
+}
+
+// ------------------------------------------------------ CLI → API flow
+
+#[test]
+fn unknown_serve_model_is_rejected_before_submission() {
+    // serve validation is feature-gated behind pjrt, but the same
+    // resolution path is exercised by the session registry: an unknown
+    // model never reaches the coordinator.
+    let session = Session::new().unwrap();
+    let err = session.model("not-a-gan").unwrap_err();
+    assert!(matches!(err, ApiError::UnknownModel { .. }));
+    assert_eq!(err.exit_code(), 2);
+}
+
+#[test]
+fn report_exhibits_share_one_cache() {
+    use photogan::report;
+    let session = Session::new().unwrap();
+    let (_, per_model) = report::fig12(&session);
+    assert_eq!(per_model.len(), 4);
+    let after_fig12 = session.mapping_cache_entries();
+    // Fig. 12 sweeps 5 opt-flag configs × 4 models = 20 distinct mappings
+    assert_eq!(after_fig12, 20);
+    let _ = session.compare();
+    assert_eq!(
+        session.mapping_cache_entries(),
+        after_fig12,
+        "compare() must reuse fig12's all-flags mappings"
+    );
+}

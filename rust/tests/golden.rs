@@ -6,7 +6,7 @@
 //! notice) when `artifacts/` is absent so `cargo test` stays green on a
 //! fresh checkout.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 use photogan::runtime::artifacts::{read_f32_file, ArtifactSet};
 use photogan::runtime::Engine;
 use std::path::{Path, PathBuf};
@@ -21,7 +21,11 @@ fn have_artifacts() -> bool {
 
 /// One engine shared across tests — PJRT compilation of the artifacts is
 /// the dominant cost, pay it once.
-static ENGINE: Lazy<Engine> = Lazy::new(|| Engine::load(&artifacts_dir()).expect("engine loads"));
+static ENGINE: OnceLock<Engine> = OnceLock::new();
+
+fn engine() -> &'static Engine {
+    ENGINE.get_or_init(|| Engine::load(&artifacts_dir()).expect("engine loads"))
+}
 
 /// Max |a−b| over paired outputs.
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -41,7 +45,7 @@ fn golden_outputs_match_jax() {
         return;
     }
     let dir = artifacts_dir();
-    let engine = &*ENGINE;
+    let engine = engine();
     for set in ArtifactSet::discover(&dir).unwrap() {
         let input = set.read_f32("golden_in.bin").expect("golden_in");
         let label = set.read_f32("golden_label.bin").ok();
@@ -85,7 +89,7 @@ fn seeded_generation_is_deterministic() {
         eprintln!("[skip] no artifacts — run `make artifacts` first");
         return;
     }
-    let engine = &*ENGINE;
+    let engine = engine();
     let name = engine.model_names()[0].clone();
     let a = engine.generate_sync(&name, &[(7, Some(3)), (8, Some(1))]).unwrap();
     let b = engine.generate_sync(&name, &[(7, Some(3)), (8, Some(1))]).unwrap();
@@ -107,7 +111,7 @@ fn batch_padding_slices_correctly() {
         eprintln!("[skip] no artifacts — run `make artifacts` first");
         return;
     }
-    let engine = &*ENGINE;
+    let engine = engine();
     let name = engine.model_names()[0].clone();
     let n = engine.meta(&name).unwrap().output_elements;
     // single entry vs the same entry within a larger call
@@ -130,7 +134,7 @@ fn oversized_batch_chunks_transparently() {
         eprintln!("[skip] no artifacts — run `make artifacts` first");
         return;
     }
-    let engine = &*ENGINE;
+    let engine = engine();
     let name = engine.model_names()[0].clone();
     let meta = engine.meta(&name).unwrap().clone();
     let entries: Vec<(u64, Option<u32>)> =

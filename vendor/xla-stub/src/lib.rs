@@ -1,0 +1,135 @@
+//! Offline stub of the slice of the `xla` (xla-rs) API that
+//! `photogan::runtime` uses. Every entry point type-checks exactly like
+//! the real bindings but fails at runtime with [`Error::Unavailable`], so
+//! `--features pjrt` builds (and degrades gracefully) without the XLA
+//! shared libraries. Swap this path dependency for a real xla-rs checkout
+//! to run actual inference — see `vendor/xla-stub/Cargo.toml`.
+
+use std::fmt;
+
+/// Stub error: always "PJRT unavailable".
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} unavailable (offline build without the real xla-rs; \
+                 see vendor/xla-stub/Cargo.toml)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Host-side literal (stub: shape-less placeholder).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        // reshaping a placeholder is harmless; execution is what fails
+        Ok(Literal)
+    }
+
+    /// Unwrap a 1-tuple result.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub). `cpu()` fails, so nothing downstream ever runs.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_loudly_not_silently() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1.0]).to_vec::<f32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("xla stub"), "{msg}");
+    }
+
+    #[test]
+    fn literal_construction_is_cheap_and_infallible() {
+        let l = Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_tuple1().is_err());
+    }
+}
