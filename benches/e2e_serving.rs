@@ -1,18 +1,25 @@
-//! End-to-end serving benchmark (EXPERIMENTS.md §E2E): coordinator
-//! batching/routing microbench with a stub executor (always runs), then the
-//! full PJRT path if `make artifacts` has produced a condgan artifact.
+//! End-to-end serving benchmark (EXPERIMENTS.md §E2E):
 //!
-//! The stub half isolates L3 coordinator overhead (the paper's system has
-//! no serving layer — this quantifies that ours is not the bottleneck);
-//! the PJRT half is the real image-serving throughput/latency experiment.
+//! 1. **Coordinator overhead** — stub executor, zero compute: isolates L3
+//!    routing/batching cost (the paper's system has no serving layer; this
+//!    shows ours is not the bottleneck).
+//! 2. **Sim-backed scaling sweep** — a closed-loop load generator over the
+//!    `SimExecutor` (photonic-simulator batch timing, no PJRT artifacts),
+//!    sweeping shards × routing policy × batch policy and reporting
+//!    throughput plus p50/p95/p99 latency. This is the "fleet of N
+//!    PhotoGAN chips under load" scenario engine.
+//! 3. **Backpressure demo** — an open-loop burst against a tiny bounded
+//!    queue, counting typed rejections.
+//! 4. **PJRT serving** (only with `--features pjrt` + `make artifacts`) —
+//!    the real image-serving path.
 
 mod common;
 
-use photogan::coordinator::server::{BatchExecutor, Server, ServerConfig};
-use photogan::coordinator::BatchPolicy;
-use photogan::runtime::Engine;
+use photogan::api::{Session, SimExecutor};
+use photogan::coordinator::server::{BatchExecutor, Server, ServerConfig, SubmitError};
+use photogan::coordinator::{BatchPolicy, RoutingPolicy};
 use photogan::util::stats::percentile;
-use std::path::Path;
+use photogan::util::table::Table;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -34,17 +41,21 @@ impl BatchExecutor for NullExec {
 
 fn coordinator_overhead() {
     println!("== L3 coordinator overhead (stub executor, zero compute) ==");
+    let n = 20_000usize;
     for workers in [1usize, 2, 4] {
         let server = Server::start(
             Arc::new(NullExec),
             ServerConfig {
                 policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
                 workers,
+                // open-loop burst: the whole stream may be in flight at once
+                queue_depth: n,
+                ..ServerConfig::default()
             },
         );
-        let n = 20_000usize;
         let t0 = Instant::now();
-        let rxs: Vec<_> = (0..n).map(|i| server.submit("null", i as u64, None, 1)).collect();
+        let rxs: Vec<_> =
+            (0..n).map(|i| server.submit("null", i as u64, None, 1).expect("submit")).collect();
         let mut lat = Vec::with_capacity(n);
         for rx in rxs {
             lat.push(rx.recv().unwrap().total_time * 1e6);
@@ -60,7 +71,144 @@ fn coordinator_overhead() {
     }
 }
 
+/// Closed-loop load generator: `clients` threads, each keeping exactly one
+/// request in flight, `per_client` requests each. Returns
+/// (latencies_ms, rejections).
+fn closed_loop(
+    server: &Server,
+    model: &str,
+    clients: usize,
+    per_client: usize,
+) -> (Vec<f64>, u64) {
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let handle = server.handle();
+            let model = model.to_string();
+            std::thread::spawn(move || {
+                let mut lats = Vec::with_capacity(per_client);
+                let mut rejected = 0u64;
+                for i in 0..per_client {
+                    let seed = (c * per_client + i) as u64;
+                    loop {
+                        match handle.submit(&model, seed, Some((i % 10) as u32), 1) {
+                            Ok(rx) => {
+                                let resp = rx.recv().expect("response");
+                                lats.push(resp.total_time * 1e3);
+                                break;
+                            }
+                            Err(SubmitError::QueueFull { .. }) => {
+                                rejected += 1;
+                                std::thread::yield_now();
+                            }
+                            Err(e) => panic!("submit failed: {e}"),
+                        }
+                    }
+                }
+                (lats, rejected)
+            })
+        })
+        .collect();
+    let mut all = Vec::with_capacity(clients * per_client);
+    let mut rejections = 0u64;
+    for t in threads {
+        let (lats, rej) = t.join().expect("client thread");
+        all.extend(lats);
+        rejections += rej;
+    }
+    (all, rejections)
+}
+
+fn sim_scaling_sweep() {
+    let session = Arc::new(Session::new().expect("session"));
+    // time_scale 1.0: workers really hold batches for the simulated
+    // photonic latency, so shard scaling behaves like a fleet of chips
+    let exec = Arc::new(SimExecutor::new(Arc::clone(&session)).expect("executor"));
+    let model = "CondGAN";
+    let clients = 16usize;
+    let per_client = 64usize;
+    let mut table = Table::new(vec![
+        "shards", "routing", "max_batch", "wait µs", "req/s", "p50 ms", "p95 ms", "p99 ms",
+    ])
+    .with_title(format!(
+        "sim-backed closed-loop serving sweep ({model}, {clients} clients × {per_client} req, \
+         2 workers/shard)"
+    ));
+    println!("\n== sim-backed shard/routing/batch sweep (no artifacts) ==");
+    for shards in [1usize, 2, 4] {
+        for routing in RoutingPolicy::ALL {
+            for (max_batch, wait_us) in [(1usize, 0u64), (8, 500), (16, 1000)] {
+                let server = Server::start(
+                    Arc::clone(&exec),
+                    ServerConfig {
+                        policy: BatchPolicy {
+                            max_batch,
+                            max_wait: Duration::from_micros(wait_us),
+                        },
+                        workers: 2,
+                        shards,
+                        routing,
+                        queue_depth: 256,
+                    },
+                );
+                let t0 = Instant::now();
+                let (lat, _rej) = closed_loop(&server, model, clients, per_client);
+                let wall = t0.elapsed().as_secs_f64();
+                server.shutdown();
+                table.row(vec![
+                    shards.to_string(),
+                    routing.name().to_string(),
+                    max_batch.to_string(),
+                    wait_us.to_string(),
+                    format!("{:.0}", lat.len() as f64 / wall),
+                    format!("{:.3}", percentile(&lat, 50.0)),
+                    format!("{:.3}", percentile(&lat, 95.0)),
+                    format!("{:.3}", percentile(&lat, 99.0)),
+                ]);
+            }
+        }
+    }
+    table.print();
+}
+
+fn backpressure_demo() {
+    println!("\n== bounded-queue backpressure (open-loop burst, queue_depth=32) ==");
+    let session = Arc::new(Session::new().expect("session"));
+    let exec = Arc::new(SimExecutor::new(Arc::clone(&session)).expect("executor"));
+    let server = Server::start(
+        Arc::clone(&exec),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 1,
+            shards: 1,
+            routing: RoutingPolicy::RoundRobin,
+            queue_depth: 32,
+        },
+    );
+    let burst = 512usize;
+    let mut admitted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..burst {
+        match server.submit("CondGAN", i as u64, Some((i % 10) as u32), 1) {
+            Ok(rx) => admitted.push(rx),
+            Err(SubmitError::QueueFull { .. }) => rejected += 1,
+            Err(e) => panic!("submit failed: {e}"),
+        }
+    }
+    for rx in &admitted {
+        let _ = rx.recv();
+    }
+    server.shutdown();
+    println!(
+        "  burst of {burst}: admitted {} / rejected {rejected} (typed SubmitError::QueueFull)",
+        admitted.len()
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn pjrt_serving() {
+    use photogan::runtime::Engine;
+    use std::path::Path;
+
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = match Engine::load(&artifacts) {
         Ok(e) => Arc::new(e),
@@ -83,11 +231,14 @@ fn pjrt_serving() {
             ServerConfig {
                 policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(4) },
                 workers: 2,
+                ..ServerConfig::default()
             },
         );
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..requests)
-            .map(|i| server.submit(&model, i as u64, Some((i % 10) as u32), 1))
+            .map(|i| {
+                server.submit(&model, i as u64, Some((i % 10) as u32), 1).expect("submit")
+            })
             .collect();
         let mut lat = Vec::with_capacity(requests);
         for rx in rxs {
@@ -106,5 +257,8 @@ fn pjrt_serving() {
 
 fn main() {
     coordinator_overhead();
+    sim_scaling_sweep();
+    backpressure_demo();
+    #[cfg(feature = "pjrt")]
     pjrt_serving();
 }

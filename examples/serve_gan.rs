@@ -55,13 +55,18 @@ fn main() -> photogan::Result<()> {
         ServerConfig {
             policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(5) },
             workers,
+            ..Default::default()
         },
     );
 
     // -- drive an open-loop request stream --------------------------------
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..requests)
-        .map(|i| server.submit(&model, 1000 + i as u64, Some((i % 10) as u32), 1))
+        .map(|i| {
+            server
+                .submit(&model, 1000 + i as u64, Some((i % 10) as u32), 1)
+                .expect("submit within the default queue depth")
+        })
         .collect();
     let mut latencies = Vec::with_capacity(requests);
     let mut queue_times = Vec::with_capacity(requests);

@@ -6,6 +6,7 @@
 //! match on them.
 
 use crate::arch::config::ConfigError;
+use crate::coordinator::server::SubmitError;
 use crate::util::cli::CliError;
 use std::fmt;
 
@@ -33,6 +34,14 @@ pub enum ApiError {
     InvalidThreads(usize),
     /// Serving worker count must be ≥ 1.
     InvalidWorkers(usize),
+    /// Serving shard count must be ≥ 1.
+    InvalidShards(usize),
+    /// Sim-serving time scale must be finite and ≥ 0.
+    InvalidTimeScale(f64),
+    /// A serving submission was rejected because the routed shard's
+    /// bounded queue is full and nothing was in flight to drain —
+    /// typed backpressure instead of unbounded queuing.
+    Backpressure { shard: usize, outstanding: usize, limit: usize },
     /// A command-line flag failed to parse (carried into the API layer so
     /// the CLI has a single error channel). An empty `flag` means the
     /// error is not attributable to one flag (e.g. a stray positional).
@@ -57,6 +66,17 @@ impl fmt::Display for ApiError {
             ApiError::EmptyGrid => write!(f, "sweep grid contains no configurations"),
             ApiError::InvalidThreads(t) => write!(f, "threads must be ≥ 1 (got {t})"),
             ApiError::InvalidWorkers(w) => write!(f, "workers must be ≥ 1 (got {w})"),
+            ApiError::InvalidShards(s) => write!(f, "shards must be ≥ 1 (got {s})"),
+            ApiError::InvalidTimeScale(t) => {
+                write!(f, "time scale must be finite and ≥ 0 (got {t})")
+            }
+            ApiError::Backpressure { shard, outstanding, limit } => {
+                write!(
+                    f,
+                    "backpressure: shard {shard} queue is full \
+                     ({outstanding}/{limit} samples outstanding)"
+                )
+            }
             ApiError::InvalidFlag { flag, reason } if flag.is_empty() => {
                 write!(f, "invalid arguments: {reason}")
             }
@@ -103,13 +123,33 @@ impl From<CliError> for ApiError {
     }
 }
 
+impl From<SubmitError> for ApiError {
+    /// Coordinator submission failures map onto the API vocabulary:
+    /// rejection by a full shard queue is first-class backpressure.
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::UnknownModel { name, available } => {
+                ApiError::UnknownModel { name, available }
+            }
+            SubmitError::QueueFull { shard, outstanding, limit } => {
+                ApiError::Backpressure { shard, outstanding, limit }
+            }
+            SubmitError::Shutdown => {
+                ApiError::Internal("serving coordinator is shut down".into())
+            }
+        }
+    }
+}
+
 impl ApiError {
     /// Process exit code for the CLI: `2` for usage/validation errors,
     /// `1` for runtime failures — matching the pre-Session `main.rs`
     /// conventions.
     pub fn exit_code(&self) -> i32 {
         match self {
-            ApiError::ArtifactError(_) | ApiError::Internal(_) => 1,
+            ApiError::ArtifactError(_) | ApiError::Internal(_) | ApiError::Backpressure { .. } => {
+                1
+            }
             _ => 2,
         }
     }
@@ -130,6 +170,9 @@ mod tests {
             ApiError::EmptyGrid,
             ApiError::InvalidThreads(0),
             ApiError::InvalidWorkers(0),
+            ApiError::InvalidShards(0),
+            ApiError::InvalidTimeScale(-1.0),
+            ApiError::Backpressure { shard: 2, outstanding: 64, limit: 64 },
             ApiError::InvalidFlag { flag: "batch".into(), reason: "missing value".into() },
             ApiError::InvalidFlag { flag: String::new(), reason: "stray 'x'".into() },
             ApiError::ArtifactError("no artifacts".into()),
@@ -154,6 +197,21 @@ mod tests {
         assert_eq!(ApiError::InvalidBatch(0).exit_code(), 2);
         assert_eq!(ApiError::ArtifactError("x".into()).exit_code(), 1);
         assert_eq!(ApiError::Internal("x".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn submit_errors_convert_with_backpressure_first_class() {
+        let e: ApiError = SubmitError::QueueFull { shard: 1, outstanding: 8, limit: 8 }.into();
+        assert_eq!(e, ApiError::Backpressure { shard: 1, outstanding: 8, limit: 8 });
+        assert_eq!(e.exit_code(), 1, "overload is a runtime condition, not a usage error");
+        let e: ApiError = SubmitError::UnknownModel {
+            name: "gan5".into(),
+            available: vec!["DCGAN".into()],
+        }
+        .into();
+        assert!(matches!(e, ApiError::UnknownModel { ref name, .. } if name == "gan5"));
+        let e: ApiError = SubmitError::Shutdown.into();
+        assert!(matches!(e, ApiError::Internal(_)));
     }
 
     #[test]

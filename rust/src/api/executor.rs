@@ -1,0 +1,210 @@
+//! [`SimExecutor`] — a [`BatchExecutor`] backed by the photonic simulator.
+//!
+//! This is what makes `photogan serve --backend sim` work with **zero PJRT
+//! artifacts**: every dispatched batch is costed by the L2 architectural
+//! simulator through the shared [`Session`] mapping cache (one mapping per
+//! `(model, batch, OptFlags)`, re-costed per call), the worker thread
+//! "executes" for the predicted batch latency scaled by `time_scale`, and
+//! deterministic seed-derived samples are emitted. The serving loop
+//! therefore sees *photonic-timing-accurate* latencies: batching amortizes
+//! weight reloads exactly as the simulator predicts, which is what the
+//! multi-shard scaling benches measure.
+//!
+//! ```
+//! use photogan::api::{Session, SimExecutor};
+//! use photogan::coordinator::server::BatchExecutor;
+//! use std::sync::Arc;
+//!
+//! let session = Arc::new(Session::new()?);
+//! let exec = SimExecutor::new(Arc::clone(&session))?;
+//! assert_eq!(exec.models().len(), 4); // the Table 1 generators
+//!
+//! // two samples of CondGAN (28×28 grayscale = 784 elements each)
+//! let images = exec.generate("CondGAN", &[(7, Some(3)), (8, Some(3))]);
+//! assert_eq!(images.len(), 2 * exec.elements_per_sample("CondGAN"));
+//! // the sim mapping was pulled through the session's shared cache
+//! assert!(session.mapping_cache_entries() >= 1);
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
+
+use super::error::ApiError;
+use super::session::Session;
+use crate::coordinator::server::BatchExecutor;
+use crate::sim::OptFlags;
+use crate::util::rng::{splitmix64, Pcg32};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sim-engine-backed batch executor (see the module docs).
+pub struct SimExecutor {
+    session: Arc<Session>,
+    opts: OptFlags,
+    /// Wall-clock seconds slept per simulated second: `1.0` = real time,
+    /// `0.0` = cost model only (tests), `>1.0` = slow motion.
+    time_scale: f64,
+    /// `(model name, output elements per sample)`, precomputed so the hot
+    /// path never re-walks layer shapes.
+    elements: Vec<(String, usize)>,
+}
+
+impl SimExecutor {
+    /// Executor over the session's registered models with all paper
+    /// optimizations on and real-time pacing (`time_scale = 1.0`).
+    pub fn new(session: Arc<Session>) -> Result<SimExecutor, ApiError> {
+        SimExecutor::with_options(session, OptFlags::all(), 1.0)
+    }
+
+    /// Executor with explicit optimization flags and time scaling.
+    pub fn with_options(
+        session: Arc<Session>,
+        opts: OptFlags,
+        time_scale: f64,
+    ) -> Result<SimExecutor, ApiError> {
+        if !time_scale.is_finite() || time_scale < 0.0 {
+            return Err(ApiError::InvalidTimeScale(time_scale));
+        }
+        let mut elements = Vec::with_capacity(session.models().len());
+        for m in session.models() {
+            let out = m.output().map_err(|e| {
+                ApiError::Internal(format!(
+                    "model '{}' has no computable output shape: {e}",
+                    m.name
+                ))
+            })?;
+            elements.push((m.name.clone(), out.elements()));
+        }
+        Ok(SimExecutor { session, opts, time_scale, elements })
+    }
+
+    /// The configured pacing factor.
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// The simulator-predicted end-to-end latency (s) for one batch of
+    /// `batch` samples — exactly what [`BatchExecutor::generate`] paces by.
+    pub fn batch_latency(&self, model: &str, batch: usize) -> Result<f64, ApiError> {
+        let m = self.session.model(model)?;
+        Ok(self.session.sim_report(m, batch.max(1), self.opts).latency)
+    }
+}
+
+impl BatchExecutor for SimExecutor {
+    fn models(&self) -> Vec<String> {
+        self.elements.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    fn elements_per_sample(&self, model: &str) -> usize {
+        self.elements
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(model))
+            .map(|(_, e)| *e)
+            .unwrap_or(0)
+    }
+
+    fn generate(&self, model: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+        let elems = self.elements_per_sample(model);
+        if elems == 0 || entries.is_empty() {
+            // unknown model or empty batch: the worker's size check turns
+            // this into a zero-filled degraded response
+            return Vec::new();
+        }
+        // photonic-timing-accurate pacing: cost the whole batch through
+        // the shared mapping cache, then hold the worker for the scaled
+        // predicted latency
+        if let Ok(m) = self.session.model(model) {
+            let latency = self.session.sim_report(m, entries.len(), self.opts).latency;
+            let wall = latency * self.time_scale;
+            if wall > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wall));
+            }
+        }
+        // deterministic samples: each (seed, label) pair owns an
+        // independent RNG stream, so a sample's pixels are identical no
+        // matter which batch it was served in
+        let mut out = Vec::with_capacity(entries.len() * elems);
+        for &(seed, label) in entries {
+            let mut state =
+                seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(label.map_or(0, |l| u64::from(l) + 1));
+            let mut rng = Pcg32::new(splitmix64(&mut state));
+            out.extend((0..elems).map(|_| rng.f32() * 2.0 - 1.0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn exec() -> (Arc<Session>, SimExecutor) {
+        let session = Arc::new(Session::new().unwrap());
+        let e = SimExecutor::with_options(Arc::clone(&session), OptFlags::all(), 0.0).unwrap();
+        (session, e)
+    }
+
+    #[test]
+    fn serves_every_registered_model() {
+        let (session, e) = exec();
+        assert_eq!(e.models(), session.model_names());
+        for name in e.models() {
+            assert!(e.elements_per_sample(&name) > 0, "{name}");
+        }
+        // CondGAN emits 28×28 grayscale images
+        assert_eq!(e.elements_per_sample("CondGAN"), 784);
+    }
+
+    #[test]
+    fn samples_are_deterministic_and_batch_independent() {
+        let (_s, e) = exec();
+        let solo = e.generate("CondGAN", &[(7, Some(1))]);
+        let pair = e.generate("CondGAN", &[(7, Some(1)), (8, Some(1))]);
+        assert_eq!(solo.len(), 784);
+        assert_eq!(pair.len(), 2 * 784);
+        assert_eq!(solo, pair[..784], "sample must not depend on batch composition");
+        assert_ne!(solo, pair[784..], "different seeds must differ");
+        // a different label is a different stream
+        let other_label = e.generate("CondGAN", &[(7, Some(2))]);
+        assert_ne!(solo, other_label);
+        // pixel range is the generator's tanh-style [-1, 1]
+        assert!(solo.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn uses_the_shared_session_mapping_cache() {
+        let (session, e) = exec();
+        assert_eq!(session.mapping_cache_entries(), 0);
+        e.generate("DCGAN", &[(0, None), (1, None)]);
+        let after_first = session.mapping_cache_entries();
+        assert!(after_first >= 1, "generate must populate the session cache");
+        // same batch size again: pure cache hit, no new entries
+        e.generate("DCGAN", &[(2, None), (3, None)]);
+        assert_eq!(session.mapping_cache_entries(), after_first);
+    }
+
+    #[test]
+    fn batching_amortizes_predicted_latency() {
+        let (_s, e) = exec();
+        let one = e.batch_latency("CondGAN", 1).unwrap();
+        let eight = e.batch_latency("CondGAN", 8).unwrap();
+        assert!(eight / 8.0 < one, "per-sample latency must drop with batching");
+    }
+
+    #[test]
+    fn invalid_time_scale_is_typed() {
+        let session = Arc::new(Session::new().unwrap());
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let err =
+                SimExecutor::with_options(Arc::clone(&session), OptFlags::all(), bad).unwrap_err();
+            assert!(matches!(err, ApiError::InvalidTimeScale(_)), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_degrades_to_empty() {
+        let (_s, e) = exec();
+        assert_eq!(e.elements_per_sample("nope"), 0);
+        assert!(e.generate("nope", &[(0, None)]).is_empty());
+    }
+}

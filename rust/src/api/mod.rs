@@ -45,19 +45,27 @@
 //! ));
 //! # Ok::<(), photogan::api::ApiError>(())
 //! ```
+//!
+//! Serving runs the same facade over the multi-shard coordinator
+//! ([`crate::coordinator`]): the default [`ServeBackend::Sim`] executes
+//! batches at photonic-simulator timing through a [`SimExecutor`] (no
+//! PJRT artifacts), while `--backend pjrt` swaps in the real AOT-HLO
+//! engine. See [`serve`] for the request knobs (shards, routing policy,
+//! bounded queue depth, pacing).
 
 // The typed-error contract is enforced mechanically: no `unwrap`/`expect`
 // may land in the API layer (test modules opt out locally).
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod error;
+pub mod executor;
 pub mod outcome;
 pub mod request;
-#[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod session;
 
 pub use error::{ApiError, ApiResult};
+pub use executor::SimExecutor;
 pub use outcome::{
     CompareOutcome, Outcome, PlatformSeries, ServeOutcome, SimOutcome, SimRow, SweepOutcome,
 };
@@ -65,6 +73,5 @@ pub use request::{
     default_threads, ModelSelect, SimRequest, SimRequestBuilder, SweepRequest,
     SweepRequestBuilder,
 };
-#[cfg(feature = "pjrt")]
-pub use serve::{ServeRequest, ServeRequestBuilder};
+pub use serve::{ServeBackend, ServeRequest, ServeRequestBuilder};
 pub use session::Session;

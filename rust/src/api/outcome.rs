@@ -316,27 +316,55 @@ impl CompareOutcome {
     }
 }
 
-/// Outcome of [`crate::api::Session::serve`] (the coordinator driver).
+/// Outcome of [`crate::api::Session::serve`] (the sharded coordinator
+/// driver): end-to-end throughput, client-observed latency percentiles,
+/// and per-shard / per-model metric summaries.
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
+    /// Backend name (`"sim"` or `"pjrt"`).
+    pub backend: String,
     pub model: String,
+    pub shards: usize,
+    /// Routing policy name (e.g. `"round-robin"`).
+    pub routing: String,
     pub requests: usize,
+    /// Shard-queue-full rejections the driver absorbed by draining.
+    pub rejections: u64,
     pub wall_s: f64,
     pub throughput_img_s: f64,
+    /// Client-observed end-to-end latency percentiles (ms).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
     pub total_requests: u64,
     pub total_samples: u64,
     /// Per-model latency/throughput summary strings from the coordinator.
     pub per_model: Vec<(String, String)>,
+    /// Per-shard summary strings (`"shard 0"` …), indexed by shard id.
+    pub per_shard: Vec<(String, String)>,
 }
 
 impl ServeOutcome {
     pub fn to_table(&self) -> Table {
-        let mut t = Table::new(vec!["model", "summary"]).with_title(format!(
-            "served {} requests in {:.2}s ({:.1} img/s)",
-            self.requests, self.wall_s, self.throughput_img_s
+        let mut t = Table::new(vec!["scope", "summary"]).with_title(format!(
+            "serve[{}] model={} shards={} routing={}: {} req in {:.2}s \
+             ({:.1} img/s) p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            self.backend,
+            self.model,
+            self.shards,
+            self.routing,
+            self.requests,
+            self.wall_s,
+            self.throughput_img_s,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
         ));
+        for (shard, s) in &self.per_shard {
+            t.row(vec![shard.clone(), s.clone()]);
+        }
         for (m, s) in &self.per_model {
-            t.row(vec![m.clone(), s.clone()]);
+            t.row(vec![format!("model {m}"), s.clone()]);
         }
         t
     }
@@ -348,16 +376,32 @@ impl ServeOutcome {
     pub fn json(&self) -> JsonValue {
         obj(vec![
             ("command", JsonValue::Str("serve".into())),
+            ("backend", JsonValue::Str(self.backend.clone())),
             ("model", JsonValue::Str(self.model.clone())),
+            ("shards", JsonValue::Num(self.shards as f64)),
+            ("routing", JsonValue::Str(self.routing.clone())),
             ("requests", JsonValue::Num(self.requests as f64)),
+            ("rejections", JsonValue::Num(self.rejections as f64)),
             ("wall_s", JsonValue::Num(self.wall_s)),
             ("throughput_img_s", JsonValue::Num(self.throughput_img_s)),
+            ("p50_ms", JsonValue::Num(self.p50_ms)),
+            ("p95_ms", JsonValue::Num(self.p95_ms)),
+            ("p99_ms", JsonValue::Num(self.p99_ms)),
             ("total_requests", JsonValue::Num(self.total_requests as f64)),
             ("total_samples", JsonValue::Num(self.total_samples as f64)),
             (
                 "per_model",
                 JsonValue::Obj(
                     self.per_model
+                        .iter()
+                        .map(|(m, s)| (m.clone(), JsonValue::Str(s.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "per_shard",
+                JsonValue::Obj(
+                    self.per_shard
                         .iter()
                         .map(|(m, s)| (m.clone(), JsonValue::Str(s.clone())))
                         .collect(),

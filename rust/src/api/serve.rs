@@ -1,32 +1,114 @@
-//! Serving through the Session API: load PJRT artifacts, validate the
-//! request against the loaded model set **before** submitting anything to
-//! the coordinator (an unknown model used to hang or zero-fill inside the
-//! leader loop), drive the request stream, and return a typed
-//! [`ServeOutcome`].
+//! Serving through the Session API: pick a [`ServeBackend`], start an
+//! N-shard [`Server`], validate the request against the loaded model set
+//! **before** submitting anything, drive the request stream with bounded
+//! in-flight pacing, and return a typed [`ServeOutcome`].
 //!
-//! Only compiled with the `pjrt` feature (the `xla` crate is optional in
-//! the offline crate set).
+//! Two backends share one driver:
+//!
+//! - [`ServeBackend::Sim`] (default) — a [`SimExecutor`] costed by the L2
+//!   photonic simulator through the session mapping cache. Needs **no
+//!   PJRT artifacts**; this is the scenario engine for "what does a fleet
+//!   of N PhotoGAN chips do under load?".
+//! - [`ServeBackend::Pjrt`] — the real AOT-HLO inference engine (requires
+//!   the `pjrt` feature and `make artifacts`); selecting it without the
+//!   feature is a typed [`ApiError`], not a compile hole.
+//!
+//! ```
+//! use photogan::api::{ServeBackend, ServeRequest, Session};
+//! use photogan::coordinator::RoutingPolicy;
+//! use std::sync::Arc;
+//!
+//! let request = ServeRequest::builder()
+//!     .backend(ServeBackend::Sim)
+//!     .model("condgan")
+//!     .shards(2)
+//!     .routing(RoutingPolicy::LeastOutstanding)
+//!     .requests(8)
+//!     .time_scale(0.0) // cost model only — don't sleep simulated latencies
+//!     .build()?;
+//! let outcome = Arc::new(Session::new()?).serve(&request)?;
+//! assert_eq!(outcome.total_requests, 8);
+//! assert_eq!(outcome.shards, 2);
+//! assert!(outcome.to_json().contains("\"backend\":\"sim\""));
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
 
 use super::error::ApiError;
+use super::executor::SimExecutor;
 use super::outcome::ServeOutcome;
 use super::session::Session;
-use crate::coordinator::server::{Server, ServerConfig};
-use crate::coordinator::BatchPolicy;
-use crate::runtime::Engine;
+use crate::coordinator::server::{BatchExecutor, Server, ServerConfig, SubmitError};
+use crate::coordinator::{BatchPolicy, RoutingPolicy};
+use crate::sim::OptFlags;
+use crate::util::stats::percentile_sorted;
+use std::collections::VecDeque;
+use std::fmt;
 use std::path::PathBuf;
+use std::str::FromStr;
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Which executor a [`ServeRequest`] runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeBackend {
+    /// Photonic-simulator timing via [`SimExecutor`]; no artifacts needed.
+    #[default]
+    Sim,
+    /// Real PJRT inference over AOT HLO artifacts (`pjrt` feature).
+    Pjrt,
+}
+
+impl ServeBackend {
+    /// The canonical CLI spelling (`--backend <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeBackend::Sim => "sim",
+            ServeBackend::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl fmt::Display for ServeBackend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ServeBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Ok(ServeBackend::Sim),
+            "pjrt" => Ok(ServeBackend::Pjrt),
+            other => Err(format!("unknown backend '{other}' (expected sim or pjrt)")),
+        }
+    }
+}
 
 /// A validated serving request (construct via [`ServeRequest::builder`]).
 #[derive(Debug, Clone)]
 pub struct ServeRequest {
+    pub backend: ServeBackend,
+    /// PJRT artifact directory (ignored by the sim backend).
     pub artifacts: PathBuf,
-    /// `None` = first loaded model (sorted order).
+    /// `None` = the executor's first served model.
     pub model: Option<String>,
     pub requests: usize,
     pub max_batch: usize,
+    /// Worker threads per shard.
     pub workers: usize,
     pub max_wait: Duration,
+    /// Serving shards (each modeling one chip).
+    pub shards: usize,
+    pub routing: RoutingPolicy,
+    /// Bounded in-flight samples per shard (typed backpressure beyond).
+    pub queue_depth: usize,
+    /// Optimization flags for the sim backend's cost model.
+    pub opts: OptFlags,
+    /// Sim pacing: wall seconds per simulated second (`0` = cost only).
+    pub time_scale: f64,
 }
 
 impl ServeRequest {
@@ -35,32 +117,67 @@ impl ServeRequest {
     }
 }
 
-/// Fluent builder for [`ServeRequest`] (defaults mirror the seed CLI:
-/// `artifacts/`, 64 requests, batch 8, 2 workers, 5 ms batching window).
+/// Fluent builder for [`ServeRequest`].
+///
+/// Defaults: sim backend, 64 requests, batch 8, 2 workers and 1024
+/// in-flight samples per shard, 1 shard, round-robin routing, 5 ms
+/// batching window, all sim optimizations, real-time pacing.
+///
+/// ```
+/// use photogan::api::{ApiError, ServeRequest};
+///
+/// let req = ServeRequest::builder().shards(4).queue_depth(64).build()?;
+/// assert_eq!(req.shards, 4);
+/// assert_eq!(req.routing.name(), "round-robin");
+///
+/// // invalid shapes are typed errors, not panics
+/// assert!(matches!(
+///     ServeRequest::builder().shards(0).build(),
+///     Err(ApiError::InvalidShards(0))
+/// ));
+/// # Ok::<(), ApiError>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct ServeRequestBuilder {
+    backend: ServeBackend,
     artifacts: PathBuf,
     model: Option<String>,
     requests: usize,
     max_batch: usize,
     workers: usize,
     max_wait: Duration,
+    shards: usize,
+    routing: RoutingPolicy,
+    queue_depth: usize,
+    opts: OptFlags,
+    time_scale: f64,
 }
 
 impl Default for ServeRequestBuilder {
     fn default() -> Self {
         ServeRequestBuilder {
+            backend: ServeBackend::Sim,
             artifacts: PathBuf::from("artifacts"),
             model: None,
             requests: 64,
             max_batch: 8,
             workers: 2,
             max_wait: Duration::from_millis(5),
+            shards: 1,
+            routing: RoutingPolicy::RoundRobin,
+            queue_depth: 1024,
+            opts: OptFlags::all(),
+            time_scale: 1.0,
         }
     }
 }
 
 impl ServeRequestBuilder {
+    pub fn backend(mut self, backend: ServeBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
         self.artifacts = dir.into();
         self
@@ -91,6 +208,31 @@ impl ServeRequestBuilder {
         self
     }
 
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    pub fn routing(mut self, policy: RoutingPolicy) -> Self {
+        self.routing = policy;
+        self
+    }
+
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n;
+        self
+    }
+
+    pub fn opts(mut self, opts: OptFlags) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale;
+        self
+    }
+
     /// Validate and freeze the request.
     pub fn build(self) -> Result<ServeRequest, ApiError> {
         if self.max_batch == 0 {
@@ -99,47 +241,105 @@ impl ServeRequestBuilder {
         if self.workers == 0 {
             return Err(ApiError::InvalidWorkers(0));
         }
+        if self.shards == 0 {
+            return Err(ApiError::InvalidShards(0));
+        }
+        if self.queue_depth == 0 {
+            return Err(ApiError::InvalidFlag {
+                flag: "queue-depth".into(),
+                reason: "must admit at least one in-flight sample (got 0)".into(),
+            });
+        }
+        if !self.time_scale.is_finite() || self.time_scale < 0.0 {
+            return Err(ApiError::InvalidTimeScale(self.time_scale));
+        }
         Ok(ServeRequest {
+            backend: self.backend,
             artifacts: self.artifacts,
             model: self.model,
             requests: self.requests,
             max_batch: self.max_batch,
             workers: self.workers,
             max_wait: self.max_wait,
+            shards: self.shards,
+            routing: self.routing,
+            queue_depth: self.queue_depth,
+            opts: self.opts,
+            time_scale: self.time_scale,
         })
     }
 }
 
 impl Session {
-    /// Load artifacts and drive `req.requests` generation requests through
-    /// the coordinator. The model name is resolved against the server's
-    /// routing set ([`Server::models`]) *before* any request is submitted,
-    /// so an unknown model is a typed [`ApiError::UnknownModel`] instead
-    /// of a leader-loop zero-fill.
-    pub fn serve(&self, req: &ServeRequest) -> Result<ServeOutcome, ApiError> {
-        let engine = Engine::load(&req.artifacts)
-            .map_err(|e| ApiError::ArtifactError(format!("{e:#}")))?;
-        let outcome = self.serve_with(Arc::new(engine), req)?;
-        Ok(outcome)
+    /// Serve `req.requests` generation requests on the requested backend.
+    ///
+    /// Takes an `Arc` receiver because the sim backend's executor keeps
+    /// hitting this session's mapping cache from shard worker threads for
+    /// the lifetime of the serving loop (clone the `Arc` first if you need
+    /// the session afterwards — see the module example).
+    pub fn serve(self: Arc<Self>, req: &ServeRequest) -> Result<ServeOutcome, ApiError> {
+        match req.backend {
+            ServeBackend::Sim => {
+                let exec = Arc::new(SimExecutor::with_options(
+                    Arc::clone(&self),
+                    req.opts,
+                    req.time_scale,
+                )?);
+                self.serve_executor(exec, req)
+            }
+            ServeBackend::Pjrt => self.serve_pjrt(req),
+        }
     }
 
-    /// Serving loop over an already-loaded engine (lets tests and warm
-    /// callers skip the PJRT compile).
+    #[cfg(feature = "pjrt")]
+    fn serve_pjrt(&self, req: &ServeRequest) -> Result<ServeOutcome, ApiError> {
+        let engine = crate::runtime::Engine::load(&req.artifacts)
+            .map_err(|e| ApiError::ArtifactError(format!("{e:#}")))?;
+        self.serve_executor(Arc::new(engine), req)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn serve_pjrt(&self, _req: &ServeRequest) -> Result<ServeOutcome, ApiError> {
+        Err(ApiError::ArtifactError(
+            "the pjrt backend needs the PJRT runtime — rebuild with `--features pjrt`, \
+             or use `--backend sim` (no artifacts required)"
+                .into(),
+        ))
+    }
+
+    /// Serving loop over an already-loaded PJRT engine (lets tests and
+    /// warm callers skip the artifact compile).
+    #[cfg(feature = "pjrt")]
     pub fn serve_with(
         &self,
-        engine: Arc<Engine>,
+        engine: Arc<crate::runtime::Engine>,
+        req: &ServeRequest,
+    ) -> Result<ServeOutcome, ApiError> {
+        self.serve_executor(engine, req)
+    }
+
+    /// The backend-agnostic serving driver: start the sharded coordinator,
+    /// resolve the model name against the server's routing set *before*
+    /// any submission (unknown models are a typed
+    /// [`ApiError::UnknownModel`], never a leader-loop zero-fill), then
+    /// drive a closed request stream with at most `queue_depth` samples in
+    /// flight. A shard-queue rejection with nothing left to drain
+    /// surfaces as typed [`ApiError::Backpressure`].
+    pub fn serve_executor<E: BatchExecutor>(
+        &self,
+        executor: Arc<E>,
         req: &ServeRequest,
     ) -> Result<ServeOutcome, ApiError> {
         let server = Server::start(
-            engine,
+            executor,
             ServerConfig {
                 policy: BatchPolicy { max_batch: req.max_batch, max_wait: req.max_wait },
                 workers: req.workers,
+                shards: req.shards,
+                routing: req.routing,
+                queue_depth: req.queue_depth,
             },
         );
-        // resolve against the server's actual routing set *before* any
-        // submission — an unknown model must be a typed error, not a
-        // leader-loop zero-fill
         let resolved = match &req.model {
             Some(wanted) => server
                 .models()
@@ -163,26 +363,84 @@ impl Session {
                 return Err(e);
             }
         };
-        let start = std::time::Instant::now();
-        let rxs: Vec<_> = (0..req.requests)
-            .map(|i| server.submit(&model, i as u64, Some((i % 10) as u32), 1))
-            .collect();
-        for rx in rxs {
-            rx.recv()
+
+        fn recv_one(
+            rx: Receiver<crate::coordinator::GenResponse>,
+            lat_ms: &mut Vec<f64>,
+        ) -> Result<(), ApiError> {
+            let resp = rx
+                .recv()
                 .map_err(|_| ApiError::Internal("response channel closed".into()))?;
+            lat_ms.push(resp.total_time * 1e3);
+            Ok(())
+        }
+
+        let start = std::time::Instant::now();
+        let mut pending: VecDeque<Receiver<crate::coordinator::GenResponse>> = VecDeque::new();
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(req.requests);
+        let mut rejections = 0u64;
+        for i in 0..req.requests {
+            loop {
+                match server.submit(&model, i as u64, Some((i % 10) as u32), 1) {
+                    Ok(rx) => {
+                        pending.push_back(rx);
+                        break;
+                    }
+                    Err(SubmitError::QueueFull { shard, outstanding, limit }) => {
+                        rejections += 1;
+                        // relieve pressure by completing the oldest
+                        // in-flight request; if nothing is in flight the
+                        // configuration can never admit this request
+                        match pending.pop_front() {
+                            Some(rx) => recv_one(rx, &mut lat_ms)?,
+                            None => {
+                                server.shutdown();
+                                return Err(ApiError::Backpressure {
+                                    shard,
+                                    outstanding,
+                                    limit,
+                                });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        server.shutdown();
+                        return Err(ApiError::from(e));
+                    }
+                }
+            }
+        }
+        for rx in pending {
+            recv_one(rx, &mut lat_ms)?;
         }
         let wall = start.elapsed().as_secs_f64();
         let stats = server.shutdown();
+
+        // one sort serves all three quantiles (latencies are finite)
+        lat_ms.sort_by(f64::total_cmp);
         let mut per_model: Vec<(String, String)> = stats.per_model.into_iter().collect();
         per_model.sort();
+        let per_shard: Vec<(String, String)> = stats
+            .per_shard
+            .iter()
+            .map(|s| (format!("shard {}", s.shard), s.summary.clone()))
+            .collect();
         Ok(ServeOutcome {
+            backend: req.backend.name().to_string(),
             model,
+            shards: req.shards,
+            routing: req.routing.name().to_string(),
             requests: req.requests,
+            rejections,
             wall_s: wall,
             throughput_img_s: if wall > 0.0 { req.requests as f64 / wall } else { 0.0 },
+            p50_ms: percentile_sorted(&lat_ms, 50.0),
+            p95_ms: percentile_sorted(&lat_ms, 95.0),
+            p99_ms: percentile_sorted(&lat_ms, 99.0),
             total_requests: stats.total_requests,
             total_samples: stats.total_samples,
             per_model,
+            per_shard,
         })
     }
 }

@@ -5,9 +5,14 @@
 //! Layer mapping (including the sparse-dataflow census) is the expensive,
 //! configuration-independent half of a simulation; the cache keys it by
 //! `(model, batch, OptFlags)` so repeated requests — a DSE sweep, the
-//! Fig. 12 ablation grid, a report run touching every exhibit — map each
-//! workload exactly once. `Session` is `Send + Sync`; the cache is behind
-//! a `Mutex` and mappings are handed out as `Arc`s.
+//! Fig. 12 ablation grid, a report run touching every exhibit, the
+//! sim-serving executor's per-batch costing — map each workload exactly
+//! once. `Session` is `Send + Sync`; the cache is behind a `Mutex` and
+//! mappings are handed out as `Arc`s.
+//!
+//! Serving lives in [`super::serve`] (`Session::serve`, which takes an
+//! `Arc<Session>` receiver so shard workers can keep using this cache),
+//! and the sim-backed executor in [`super::executor`].
 
 use super::error::ApiError;
 use super::outcome::{CompareOutcome, PlatformSeries, SimOutcome, SimRow, SweepOutcome};

@@ -43,6 +43,19 @@ impl ServingMetrics {
         self.samples += samples as u64;
     }
 
+    /// Fold another metrics instance into this one (used to aggregate
+    /// per-shard metrics into per-model and whole-server views). The
+    /// throughput window extends back to the *earlier* of the two start
+    /// times.
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.latency.merge(&other.latency);
+        self.queue.merge(&other.queue);
+        self.batch_size.merge(&other.batch_size);
+        self.requests += other.requests;
+        self.samples += other.samples;
+        self.started = self.started.min(other.started);
+    }
+
     /// Samples per second since construction.
     pub fn throughput(&self) -> f64 {
         let dt = self.started.elapsed().as_secs_f64();
@@ -70,6 +83,23 @@ impl ServingMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_folds_counts_and_histograms() {
+        let mut a = ServingMetrics::new();
+        let mut b = ServingMetrics::new();
+        for i in 1..=5 {
+            a.record(0.001 * i as f64, 0.0001, 2, 2);
+            b.record(0.010 * i as f64, 0.0002, 8, 1);
+        }
+        let b_p99 = b.latency.quantile(0.99);
+        a.merge(&b);
+        assert_eq!(a.requests, 10);
+        assert_eq!(a.samples, 15);
+        assert_eq!(a.latency.count(), 10);
+        // the merged distribution includes b's slower tail
+        assert!(a.latency.quantile(0.99) >= b_p99 * 0.99);
+    }
 
     #[test]
     fn records_accumulate() {

@@ -1,20 +1,31 @@
-//! The serving coordinator — the L3 system layer a deployed PhotoGAN would
-//! sit behind (vLLM-router-style): request intake, dynamic batching,
-//! worker execution, and latency/throughput metrics.
+//! The serving coordinator — the L3 system layer a deployed PhotoGAN fleet
+//! would sit behind (vLLM-router-style): request intake, shard routing,
+//! dynamic batching, worker execution, and latency/throughput metrics.
 //!
 //! GAN inference serving is throughput-oriented: requests for the same
 //! model are batched (weights are loaded onto the MR banks once per tile
 //! regardless of batch, so batching directly amortizes the dominant reload
 //! cost — see `sim::engine`), subject to a latency deadline.
 //!
-//! Built entirely on std threads + channels (no tokio in the offline crate
-//! set, DESIGN.md §2).
+//! # Topology
+//!
+//! A [`Server`] runs N **shards** — each shard models one PhotoGAN chip
+//! and owns a leader thread (per-model [`Batcher`]s) plus a worker pool
+//! executing [`server::BatchExecutor`] batches. A [`RoutingPolicy`] picks
+//! the shard at submission time, and each shard's in-flight samples are
+//! bounded by `queue_depth`: overload is a typed
+//! [`server::SubmitError::QueueFull`] rejection, never unbounded queuing.
+//!
+//! Built entirely on std threads + channels (no tokio in the offline
+//! crate set — see ARCHITECTURE.md).
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub mod routing;
 pub mod server;
 
 pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use request::{GenRequest, GenResponse, RequestId};
-pub use server::{Server, ServerConfig, ServerStats};
+pub use routing::RoutingPolicy;
+pub use server::{Server, ServerConfig, ServerStats, ShardStats, SubmitError, SubmitHandle};

@@ -1,18 +1,27 @@
-//! The serving loop: leader thread (routing + batching) and a worker pool
-//! executing batches against a pluggable [`BatchExecutor`].
+//! The serving loop: N shards, each a leader thread (batching) plus a
+//! worker pool executing batches against a pluggable [`BatchExecutor`].
+//!
+//! Requests are routed to a shard at submission time by a
+//! [`RoutingPolicy`]; each shard bounds its in-flight samples at
+//! `queue_depth` and rejects beyond it with a typed
+//! [`SubmitError::QueueFull`] (backpressure, never silent queuing).
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::ServingMetrics;
 use super::request::{Envelope, GenRequest, GenResponse, RequestId};
+use super::routing::{affinity_hash, RoutingPolicy};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Executes a whole batch of same-model generations. Implemented by
-/// [`crate::runtime::Engine`] (PJRT) in production and by stubs in tests.
+/// [`crate::api::SimExecutor`] (photonic-simulator timing, no artifacts),
+/// by the PJRT `runtime::Engine` when the `pjrt` feature is on, and by
+/// stubs in tests.
 pub trait BatchExecutor: Send + Sync + 'static {
     /// Models this executor can serve.
     fn models(&self) -> Vec<String>;
@@ -23,23 +32,84 @@ pub trait BatchExecutor: Send + Sync + 'static {
     fn generate(&self, model: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32>;
 }
 
-/// Server configuration.
+/// Server configuration. One executor is shared by `shards` independent
+/// shard loops, each with its own batchers and `workers` worker threads.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub policy: BatchPolicy,
+    /// Worker threads **per shard**.
     pub workers: usize,
+    /// Independent serving shards (modeling a fleet of N chips).
+    pub shards: usize,
+    /// How requests pick a shard.
+    pub routing: RoutingPolicy,
+    /// Maximum in-flight (submitted, not yet answered) samples per shard;
+    /// submissions beyond it are rejected with [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { policy: BatchPolicy::default(), workers: 2 }
+        ServerConfig {
+            policy: BatchPolicy::default(),
+            workers: 2,
+            shards: 1,
+            routing: RoutingPolicy::default(),
+            queue_depth: 4096,
+        }
     }
 }
 
-/// Point-in-time statistics snapshot.
+/// Typed submission failure — the caller's request never entered a queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The model is not in the executor's routing set.
+    UnknownModel { name: String, available: Vec<String> },
+    /// The routed shard's bounded queue cannot admit the request
+    /// (backpressure): `outstanding + count > limit`.
+    QueueFull { shard: usize, outstanding: usize, limit: usize },
+    /// The server has shut down (its leader threads are gone).
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownModel { name, available } => {
+                write!(f, "unknown model '{name}' (serving: {})", available.join(", "))
+            }
+            SubmitError::QueueFull { shard, outstanding, limit } => {
+                write!(
+                    f,
+                    "shard {shard} queue full ({outstanding}/{limit} samples outstanding)"
+                )
+            }
+            SubmitError::Shutdown => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Point-in-time statistics for one shard.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub requests: u64,
+    pub samples: u64,
+    /// Per-model metric summaries served by this shard.
+    pub per_model: Vec<(String, String)>,
+    /// One-line summary across all models on this shard.
+    pub summary: String,
+}
+
+/// Point-in-time statistics snapshot across every shard.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
+    /// Per-model summaries, merged across shards.
     pub per_model: HashMap<String, String>,
+    /// Per-shard breakdowns, indexed by shard id.
+    pub per_shard: Vec<ShardStats>,
     pub total_requests: u64,
     pub total_samples: u64,
 }
@@ -49,61 +119,91 @@ enum LeaderMsg {
     Shutdown,
 }
 
-/// The serving coordinator.
-pub struct Server {
-    intake: Sender<LeaderMsg>,
-    leader: Option<JoinHandle<()>>,
-    next_id: AtomicU64,
-    metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
-    models: Vec<String>,
+/// A cloneable, thread-owned submission endpoint. Each client thread of a
+/// closed-loop load generator gets its own handle (`std::sync::mpsc`
+/// senders are cloned per handle, so a handle is `Send` on every
+/// supported toolchain); routing state (round-robin cursor, per-shard
+/// in-flight counters, request ids) is shared through `Arc`s.
+pub struct SubmitHandle {
+    intakes: Vec<Sender<LeaderMsg>>,
+    outstanding: Vec<Arc<AtomicUsize>>,
+    rr: Arc<AtomicUsize>,
+    next_id: Arc<AtomicU64>,
+    routing: RoutingPolicy,
+    queue_depth: usize,
+    models: Arc<Vec<String>>,
 }
 
-impl Server {
-    /// Start the leader + workers over the given executor.
-    pub fn start<E: BatchExecutor>(executor: Arc<E>, config: ServerConfig) -> Self {
-        assert!(config.workers >= 1);
-        let (intake_tx, intake_rx) = channel::<LeaderMsg>();
-        let metrics: Arc<Mutex<HashMap<String, ServingMetrics>>> =
-            Arc::new(Mutex::new(HashMap::new()));
-        let metrics_leader = Arc::clone(&metrics);
-        let models = executor.models();
-        let models_leader = models.clone();
-        let leader = std::thread::Builder::new()
-            .name("photogan-leader".into())
-            .spawn(move || {
-                leader_loop(intake_rx, executor, config, models_leader, metrics_leader)
-            })
-            .expect("spawn leader");
-        Server {
-            intake: intake_tx,
-            leader: Some(leader),
-            next_id: AtomicU64::new(0),
-            metrics,
-            models,
+impl Clone for SubmitHandle {
+    fn clone(&self) -> Self {
+        SubmitHandle {
+            intakes: self.intakes.clone(),
+            outstanding: self.outstanding.clone(),
+            rr: Arc::clone(&self.rr),
+            next_id: Arc::clone(&self.next_id),
+            routing: self.routing,
+            queue_depth: self.queue_depth,
+            models: Arc::clone(&self.models),
+        }
+    }
+}
+
+impl SubmitHandle {
+    /// Pick a shard for `model` under the handle's routing policy.
+    fn route(&self, model: &str) -> usize {
+        let n = self.intakes.len();
+        match self.routing {
+            RoutingPolicy::RoundRobin => self.rr.fetch_add(1, Ordering::SeqCst) % n,
+            RoutingPolicy::LeastOutstanding => {
+                let mut best = 0usize;
+                let mut best_load = usize::MAX;
+                for (i, o) in self.outstanding.iter().enumerate() {
+                    let load = o.load(Ordering::SeqCst);
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+            RoutingPolicy::ModelAffinity => (affinity_hash(model) % n as u64) as usize,
         }
     }
 
-    /// The model names this server routes (callers should validate a
-    /// request's model against these *before* [`Server::submit`]; unknown
-    /// models get an empty error response from the leader loop).
-    pub fn models(&self) -> &[String] {
-        &self.models
-    }
-
-    /// Whether `name` is served (exact match, as executors report names).
-    pub fn has_model(&self, name: &str) -> bool {
-        self.models.iter().any(|m| m == name)
-    }
-
     /// Submit a generation request; returns the channel the response will
-    /// arrive on.
+    /// arrive on, or a typed [`SubmitError`] (unknown model, shard queue
+    /// full, server gone). Capacity is reserved atomically at submission
+    /// and released by the worker as it delivers the response.
     pub fn submit(
         &self,
         model: &str,
         seed: u64,
         label: Option<u32>,
         count: usize,
-    ) -> Receiver<GenResponse> {
+    ) -> Result<Receiver<GenResponse>, SubmitError> {
+        if !self.models.iter().any(|m| m == model) {
+            return Err(SubmitError::UnknownModel {
+                name: model.to_string(),
+                available: self.models.as_ref().clone(),
+            });
+        }
+        let shard = self.route(model);
+        let out = &self.outstanding[shard];
+        // reserve `count` samples of the shard's bounded queue, or reject
+        let mut cur = out.load(Ordering::SeqCst);
+        loop {
+            if cur + count > self.queue_depth {
+                return Err(SubmitError::QueueFull {
+                    shard,
+                    outstanding: cur,
+                    limit: self.queue_depth,
+                });
+            }
+            match out.compare_exchange(cur, cur + count, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
         let (tx, rx) = channel();
         let req = GenRequest {
             id: RequestId(self.next_id.fetch_add(1, Ordering::Relaxed)),
@@ -113,31 +213,153 @@ impl Server {
             count,
             arrival: Instant::now(),
         };
-        self.intake
-            .send(LeaderMsg::Submit(Envelope { request: req, reply: tx }))
-            .expect("leader alive");
-        rx
-    }
-
-    /// Metrics snapshot.
-    pub fn stats(&self) -> ServerStats {
-        let guard = self.metrics.lock().unwrap();
-        let mut per_model = HashMap::new();
-        let mut total_requests = 0;
-        let mut total_samples = 0;
-        for (m, s) in guard.iter() {
-            per_model.insert(m.clone(), s.summary());
-            total_requests += s.requests;
-            total_samples += s.samples;
+        if self.intakes[shard].send(LeaderMsg::Submit(Envelope { request: req, reply: tx })).is_err()
+        {
+            out.fetch_sub(count, Ordering::SeqCst);
+            return Err(SubmitError::Shutdown);
         }
-        ServerStats { per_model, total_requests, total_samples }
+        Ok(rx)
+    }
+}
+
+struct ShardRuntime {
+    intake: Sender<LeaderMsg>,
+    leader: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+}
+
+/// The serving coordinator: routing front door plus N shard loops.
+pub struct Server {
+    handle: SubmitHandle,
+    shards: Vec<ShardRuntime>,
+    models: Arc<Vec<String>>,
+}
+
+impl Server {
+    /// Start `config.shards` shard loops (leader + workers each) over one
+    /// shared executor.
+    pub fn start<E: BatchExecutor>(executor: Arc<E>, config: ServerConfig) -> Self {
+        assert!(config.workers >= 1, "at least one worker per shard");
+        assert!(config.shards >= 1, "at least one shard");
+        assert!(config.queue_depth >= 1, "queue depth must admit at least one sample");
+        let models = Arc::new(executor.models());
+        let mut shards = Vec::with_capacity(config.shards);
+        let mut intakes = Vec::with_capacity(config.shards);
+        let mut outstanding = Vec::with_capacity(config.shards);
+        for shard_id in 0..config.shards {
+            let (tx, rx) = channel::<LeaderMsg>();
+            let metrics: Arc<Mutex<HashMap<String, ServingMetrics>>> =
+                Arc::new(Mutex::new(HashMap::new()));
+            let out = Arc::new(AtomicUsize::new(0));
+            let exec = Arc::clone(&executor);
+            let metrics_leader = Arc::clone(&metrics);
+            let out_leader = Arc::clone(&out);
+            let model_names = models.as_ref().clone();
+            let policy = config.policy;
+            let workers = config.workers;
+            let leader = std::thread::Builder::new()
+                .name(format!("photogan-leader-{shard_id}"))
+                .spawn(move || {
+                    leader_loop(rx, exec, policy, workers, model_names, metrics_leader, out_leader)
+                })
+                .expect("spawn leader");
+            intakes.push(tx.clone());
+            outstanding.push(out);
+            shards.push(ShardRuntime { intake: tx, leader: Some(leader), metrics });
+        }
+        let handle = SubmitHandle {
+            intakes,
+            outstanding,
+            rr: Arc::new(AtomicUsize::new(0)),
+            next_id: Arc::new(AtomicU64::new(0)),
+            routing: config.routing,
+            queue_depth: config.queue_depth,
+            models: Arc::clone(&models),
+        };
+        Server { handle, shards, models }
     }
 
-    /// Graceful shutdown: drain pending batches, then join.
+    /// The model names this server routes.
+    pub fn models(&self) -> &[String] {
+        &self.models
+    }
+
+    /// Whether `name` is served (exact match, as executors report names).
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.iter().any(|m| m == name)
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// A cloneable submission endpoint for client threads (the closed-loop
+    /// bench spawns one per client).
+    pub fn handle(&self) -> SubmitHandle {
+        self.handle.clone()
+    }
+
+    /// Submit a generation request (see [`SubmitHandle::submit`]).
+    pub fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Result<Receiver<GenResponse>, SubmitError> {
+        self.handle.submit(model, seed, label, count)
+    }
+
+    /// Metrics snapshot across all shards.
+    pub fn stats(&self) -> ServerStats {
+        let mut merged: HashMap<String, ServingMetrics> = HashMap::new();
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        let mut total_requests = 0u64;
+        let mut total_samples = 0u64;
+        for (shard_id, shard) in self.shards.iter().enumerate() {
+            let guard = shard.metrics.lock().unwrap();
+            let mut shard_requests = 0u64;
+            let mut shard_samples = 0u64;
+            let mut shard_all: Option<ServingMetrics> = None;
+            let mut per_model: Vec<(String, String)> = Vec::with_capacity(guard.len());
+            for (m, s) in guard.iter() {
+                shard_requests += s.requests;
+                shard_samples += s.samples;
+                per_model.push((m.clone(), s.summary()));
+                merged
+                    .entry(m.clone())
+                    .and_modify(|acc| acc.merge(s))
+                    .or_insert_with(|| s.clone());
+                match shard_all {
+                    Some(ref mut acc) => acc.merge(s),
+                    None => shard_all = Some(s.clone()),
+                }
+            }
+            per_model.sort();
+            total_requests += shard_requests;
+            total_samples += shard_samples;
+            per_shard.push(ShardStats {
+                shard: shard_id,
+                requests: shard_requests,
+                samples: shard_samples,
+                per_model,
+                summary: shard_all.map(|m| m.summary()).unwrap_or_else(|| "idle".to_string()),
+            });
+        }
+        let per_model = merged.into_iter().map(|(m, s)| (m, s.summary())).collect();
+        ServerStats { per_model, per_shard, total_requests, total_samples }
+    }
+
+    /// Graceful shutdown: drain pending batches on every shard, then join.
     pub fn shutdown(mut self) -> ServerStats {
-        let _ = self.intake.send(LeaderMsg::Shutdown);
-        if let Some(h) = self.leader.take() {
-            let _ = h.join();
+        for shard in &mut self.shards {
+            let _ = shard.intake.send(LeaderMsg::Shutdown);
+        }
+        for shard in &mut self.shards {
+            if let Some(h) = shard.leader.take() {
+                let _ = h.join();
+            }
         }
         self.stats()
     }
@@ -145,9 +367,41 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.intake.send(LeaderMsg::Shutdown);
-        if let Some(h) = self.leader.take() {
-            let _ = h.join();
+        for shard in &mut self.shards {
+            let _ = shard.intake.send(LeaderMsg::Shutdown);
+        }
+        for shard in &mut self.shards {
+            if let Some(h) = shard.leader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Route one accepted envelope into its model's batcher (the
+/// unknown-model branch is defense in depth — `submit()` already rejects
+/// unknown models with a typed error — and must release the reserved
+/// queue capacity it will never serve).
+fn enqueue_submit(
+    env: Envelope,
+    batchers: &mut HashMap<String, Batcher>,
+    outstanding: &AtomicUsize,
+) {
+    let model = env.request.model.clone();
+    match batchers.get_mut(&model) {
+        Some(b) => b.push(env),
+        None => {
+            outstanding.fetch_sub(env.request.count, Ordering::SeqCst);
+            let _ = env.reply.send(GenResponse {
+                id: env.request.id,
+                model,
+                images: vec![],
+                elements_per_sample: 0,
+                count: 0,
+                queue_time: 0.0,
+                total_time: 0.0,
+                served_batch: 0,
+            });
         }
     }
 }
@@ -155,25 +409,26 @@ impl Drop for Server {
 fn leader_loop<E: BatchExecutor>(
     intake: Receiver<LeaderMsg>,
     executor: Arc<E>,
-    config: ServerConfig,
+    policy: BatchPolicy,
+    workers: usize,
     models: Vec<String>,
     metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+    outstanding: Arc<AtomicUsize>,
 ) {
-    let mut batchers: HashMap<String, Batcher> = models
-        .iter()
-        .map(|m| (m.clone(), Batcher::new(m, config.policy)))
-        .collect();
+    let mut batchers: HashMap<String, Batcher> =
+        models.iter().map(|m| (m.clone(), Batcher::new(m, policy))).collect();
     // worker pool
     let (work_tx, work_rx) = channel::<Batch>();
     let work_rx = Arc::new(Mutex::new(work_rx));
-    let workers: Vec<JoinHandle<()>> = (0..config.workers)
+    let workers: Vec<JoinHandle<()>> = (0..workers)
         .map(|i| {
             let rx = Arc::clone(&work_rx);
             let exec = Arc::clone(&executor);
             let metrics = Arc::clone(&metrics);
+            let outstanding = Arc::clone(&outstanding);
             std::thread::Builder::new()
                 .name(format!("photogan-worker-{i}"))
-                .spawn(move || worker_loop(rx, exec, metrics))
+                .spawn(move || worker_loop(rx, exec, metrics, outstanding))
                 .expect("spawn worker")
         })
         .collect();
@@ -182,25 +437,7 @@ fn leader_loop<E: BatchExecutor>(
     loop {
         // wait up to the batching deadline for new work
         match intake.recv_timeout(Duration::from_millis(1)) {
-            Ok(LeaderMsg::Submit(env)) => {
-                let model = env.request.model.clone();
-                match batchers.get_mut(&model) {
-                    Some(b) => b.push(env),
-                    None => {
-                        // unknown model: reply with an empty error response
-                        let _ = env.reply.send(GenResponse {
-                            id: env.request.id,
-                            model,
-                            images: vec![],
-                            elements_per_sample: 0,
-                            count: 0,
-                            queue_time: 0.0,
-                            total_time: 0.0,
-                            served_batch: 0,
-                        });
-                    }
-                }
-            }
+            Ok(LeaderMsg::Submit(env)) => enqueue_submit(env, &mut batchers, &outstanding),
             Ok(LeaderMsg::Shutdown) => shutting_down = true,
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
@@ -219,7 +456,20 @@ fn leader_loop<E: BatchExecutor>(
             any_pending |= b.pending_len() > 0;
         }
         if shutting_down && !any_pending {
-            break;
+            // A submit may have raced with (or queued behind) the shutdown
+            // message: its send() succeeded, so dropping the intake now
+            // would silently destroy its reply channel. Drain whatever is
+            // queued and, if anything arrived, loop once more to flush it.
+            let mut drained_any = false;
+            while let Ok(msg) = intake.try_recv() {
+                if let LeaderMsg::Submit(env) = msg {
+                    enqueue_submit(env, &mut batchers, &outstanding);
+                    drained_any = true;
+                }
+            }
+            if !drained_any {
+                break;
+            }
         }
     }
     drop(work_tx);
@@ -232,6 +482,7 @@ fn worker_loop<E: BatchExecutor>(
     rx: Arc<Mutex<Receiver<Batch>>>,
     executor: Arc<E>,
     metrics: Arc<Mutex<HashMap<String, ServingMetrics>>>,
+    outstanding: Arc<AtomicUsize>,
 ) {
     loop {
         let batch = {
@@ -246,7 +497,8 @@ fn worker_loop<E: BatchExecutor>(
             .envelopes
             .iter()
             .flat_map(|e| {
-                (0..e.request.count).map(move |i| (e.request.seed.wrapping_add(i as u64), e.request.label))
+                (0..e.request.count)
+                    .map(move |i| (e.request.seed.wrapping_add(i as u64), e.request.label))
             })
             .collect();
         let elements = executor.elements_per_sample(&batch.model);
@@ -291,6 +543,11 @@ fn worker_loop<E: BatchExecutor>(
                     .or_default()
                     .record(total_time, queue_time, batch.samples, env.request.count);
             }
+            // release the shard's bounded-queue capacity *before* the
+            // reply is delivered: a closed-loop client that resubmits the
+            // instant it receives a response must observe the freed
+            // capacity (the channel send/recv pair orders the two)
+            outstanding.fetch_sub(env.request.count, Ordering::SeqCst);
             let _ = env.reply.send(resp); // requester may have gone away
         }
     }
@@ -323,7 +580,7 @@ mod tests {
     #[test]
     fn round_trip_single_request() {
         let server = Server::start(Arc::new(Stub), ServerConfig::default());
-        let rx = server.submit("toy", 42, None, 1);
+        let rx = server.submit("toy", 42, None, 1).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.count, 1);
         assert_eq!(resp.images, vec![42.0; 4]);
@@ -336,9 +593,10 @@ mod tests {
         let cfg = ServerConfig {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
             workers: 1,
+            ..ServerConfig::default()
         };
         let server = Server::start(Arc::new(Stub), cfg);
-        let rxs: Vec<_> = (0..8).map(|i| server.submit("toy", i, None, 1)).collect();
+        let rxs: Vec<_> = (0..8).map(|i| server.submit("toy", i, None, 1).unwrap()).collect();
         let mut batch_sizes = Vec::new();
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -352,7 +610,7 @@ mod tests {
     #[test]
     fn multi_sample_request_seeds_increment() {
         let server = Server::start(Arc::new(Stub), ServerConfig::default());
-        let rx = server.submit("toy", 100, None, 3);
+        let rx = server.submit("toy", 100, None, 3).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.count, 3);
         assert_eq!(resp.images[0..4], [100.0; 4]);
@@ -371,12 +629,14 @@ mod tests {
     }
 
     #[test]
-    fn unknown_model_gets_empty_response() {
+    fn unknown_model_is_a_typed_submit_error() {
         let server = Server::start(Arc::new(Stub), ServerConfig::default());
-        let rx = server.submit("nope", 1, None, 1);
-        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(resp.count, 0);
-        assert!(resp.images.is_empty());
+        let err = server.submit("nope", 1, None, 1).unwrap_err();
+        assert!(matches!(
+            err,
+            SubmitError::UnknownModel { ref name, ref available }
+                if name == "nope" && available == &["toy".to_string()]
+        ));
         server.shutdown();
     }
 
@@ -386,9 +646,10 @@ mod tests {
             // huge deadline: only shutdown can flush the batch
             policy: BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
             workers: 1,
+            ..ServerConfig::default()
         };
         let server = Server::start(Arc::new(Stub), cfg);
-        let rx = server.submit("toy", 7, None, 2);
+        let rx = server.submit("toy", 7, None, 2).unwrap();
         let stats = server.shutdown();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.count, 2);
@@ -432,11 +693,11 @@ mod tests {
     #[test]
     fn panicking_executor_degrades_to_zero_fill() {
         let server = Server::start(Arc::new(Panicky), ServerConfig::default());
-        let rx = server.submit("boom", 1, None, 1);
+        let rx = server.submit("boom", 1, None, 1).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).expect("must still respond");
         assert_eq!(resp.images, vec![0.0; 2]);
         // and the server keeps serving afterwards
-        let rx2 = server.submit("boom", 2, None, 1);
+        let rx2 = server.submit("boom", 2, None, 1).unwrap();
         assert!(rx2.recv_timeout(Duration::from_secs(5)).is_ok());
         server.shutdown();
     }
@@ -444,7 +705,7 @@ mod tests {
     #[test]
     fn wrong_size_executor_degrades_to_zero_fill() {
         let server = Server::start(Arc::new(WrongSize), ServerConfig::default());
-        let rx = server.submit("short", 1, None, 2);
+        let rx = server.submit("short", 1, None, 2).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.images, vec![0.0; 8]);
         server.shutdown();
@@ -453,7 +714,7 @@ mod tests {
     #[test]
     fn stats_aggregate_across_requests() {
         let server = Server::start(Arc::new(Stub), ServerConfig::default());
-        let rxs: Vec<_> = (0..5).map(|i| server.submit("toy", i, None, 2)).collect();
+        let rxs: Vec<_> = (0..5).map(|i| server.submit("toy", i, None, 2).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -461,5 +722,54 @@ mod tests {
         assert_eq!(stats.total_requests, 5);
         assert_eq!(stats.total_samples, 10);
         assert!(stats.per_model.contains_key("toy"));
+        assert_eq!(stats.per_shard.len(), 1);
+        assert_eq!(stats.per_shard[0].requests, 5);
+    }
+
+    #[test]
+    fn round_robin_spreads_exactly_across_shards() {
+        let cfg = ServerConfig { shards: 4, ..ServerConfig::default() };
+        let server = Server::start(Arc::new(Stub), cfg);
+        let rxs: Vec<_> = (0..16).map(|i| server.submit("toy", i, None, 1).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.per_shard.len(), 4);
+        for s in &stats.per_shard {
+            assert_eq!(s.requests, 4, "shard {} got {}", s.shard, s.requests);
+        }
+        assert_eq!(stats.total_requests, 16);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_queued() {
+        let cfg = ServerConfig { queue_depth: 4, ..ServerConfig::default() };
+        let server = Server::start(Arc::new(Stub), cfg);
+        let err = server.submit("toy", 0, None, 5).unwrap_err();
+        assert!(matches!(
+            err,
+            SubmitError::QueueFull { shard: 0, outstanding: 0, limit: 4 }
+        ));
+        // a request that fits is still served
+        let rx = server.submit("toy", 0, None, 4).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn handles_are_cloneable_and_submit_after_server_moves() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        let handle = server.handle();
+        let h2 = handle.clone();
+        let t = std::thread::spawn(move || {
+            let rx = h2.submit("toy", 9, None, 1).unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().images
+        });
+        assert_eq!(t.join().unwrap(), vec![9.0; 4]);
+        let stats = server.shutdown();
+        assert_eq!(stats.total_requests, 1);
+        // after shutdown the handle reports a typed error
+        assert!(matches!(handle.submit("toy", 1, None, 1), Err(SubmitError::Shutdown)));
     }
 }

@@ -34,6 +34,29 @@
 //! variants (no panics, no process exits), and every outcome renders as
 //! both an ASCII table and machine-readable JSON (`--json` on the CLI).
 //!
+//! Serving needs no PJRT artifacts: the default sim backend executes
+//! batches at photonic-simulator timing through the session mapping cache,
+//! across N coordinator shards with pluggable routing:
+//!
+//! ```
+//! use photogan::api::{ServeRequest, Session};
+//! use photogan::coordinator::RoutingPolicy;
+//! use std::sync::Arc;
+//!
+//! let session = Arc::new(Session::new()?);
+//! let served = session.serve(
+//!     &ServeRequest::builder()
+//!         .requests(8)
+//!         .shards(2)
+//!         .routing(RoutingPolicy::LeastOutstanding)
+//!         .time_scale(0.0) // cost model only: don't sleep sim latencies
+//!         .build()?,
+//! )?;
+//! assert_eq!(served.total_requests, 8);
+//! assert!(served.p99_ms >= served.p50_ms);
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
+//!
 //! ## Layer map (bottom-up)
 //!
 //! - [`photonics`] — opto-electronic device models (MRs, VCSELs, PDs, SOAs,
@@ -47,12 +70,15 @@
 //!   power gating, per-layer latency/energy traces, GOPS / EPB.
 //! - [`baselines`] — analytic GPU / CPU / TPU / FPGA / ReRAM comparators.
 //! - [`dse`] — design-space exploration over `[N,K,L,M]` (Fig. 11).
-//! - [`runtime`] — PJRT client that loads the AOT HLO artifacts produced by
+//! - `runtime` — PJRT client that loads the AOT HLO artifacts produced by
 //!   `python/compile/aot.py` and executes real GAN inference (requires the
-//!   `pjrt` feature; the `xla` crate is optional in the offline set).
-//! - [`coordinator`] — serving layer: request router, dynamic batcher,
-//!   worker pool, latency metrics.
-//! - [`api`] — the [`api::Session`] facade over all of the above.
+//!   `pjrt` feature; the `xla` crate is optional in the offline set, so
+//!   the module is absent from default-feature docs).
+//! - [`coordinator`] — serving layer: N shards with routing policies
+//!   ([`coordinator::RoutingPolicy`]), dynamic batchers, bounded queues
+//!   with typed backpressure, worker pools, latency metrics.
+//! - [`api`] — the [`api::Session`] facade over all of the above,
+//!   including sim-backed serving via [`api::SimExecutor`].
 //! - [`report`] — regenerates every table and figure of the paper.
 //! - [`util`] — RNG, stats, tables, JSON, CLI parsing, error plumbing,
 //!   mini property-test harness.

@@ -11,8 +11,10 @@
 //!                   [--strict-power] [--json]
 //! photogan dse      [--threads T] [--grid paper|smoke] [--json]
 //! photogan compare  [--json]                    # Figs. 13/14 tables
-//! photogan serve    [--artifacts DIR] [--requests R] [--batch B]
-//!                   [--workers W] [--model NAME] [--json]
+//! photogan serve    [--backend sim|pjrt] [--shards N] [--routing POLICY]
+//!                   [--queue-depth D] [--requests R] [--batch B]
+//!                   [--workers W] [--max-wait-ms MS] [--time-scale X]
+//!                   [--artifacts DIR] [--model NAME] [--json]
 //! photogan report   [--threads T]               # every table/figure
 //! ```
 
@@ -66,8 +68,12 @@ fn print_help() {
         \u{20}          --strict-power (fail if over the power cap)  --json\n\
          dse       --threads T  --grid paper|smoke  --json\n\
          compare   --json  (Figs. 13/14 GOPS + EPB tables)\n\
-         serve     --artifacts DIR --requests R --batch B --workers W\n\
-        \u{20}          --model NAME  --json\n\
+         serve     --backend sim|pjrt (sim needs no artifacts)\n\
+        \u{20}          --shards N  --routing round-robin|least-outstanding|model-affinity\n\
+        \u{20}          --queue-depth D (typed backpressure beyond)\n\
+        \u{20}          --requests R --batch B --workers W --max-wait-ms MS\n\
+        \u{20}          --time-scale X (sim pacing; 0 = cost model only)\n\
+        \u{20}          --artifacts DIR --model NAME  --json\n\
          report    --threads T  (all tables & figures)"
     );
 }
@@ -164,22 +170,52 @@ fn cmd_compare(args: &[String]) -> Result<(), ApiError> {
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
-    use photogan::api::ServeRequest;
+    use photogan::api::{ServeBackend, ServeRequest};
+    use photogan::coordinator::RoutingPolicy;
     const SPEC: &[FlagDef] = &[
+        value("backend"),
         value("artifacts"),
         value("requests"),
         value("batch"),
         value("workers"),
         value("model"),
+        value("shards"),
+        value("routing"),
+        value("queue-depth"),
+        value("max-wait-ms"),
+        value("time-scale"),
         switch("json"),
     ];
     let flags = ParsedFlags::parse(args, SPEC)?;
     let mut builder = ServeRequest::builder()
         .requests(flags.usize_or("requests", 64)?)
         .max_batch(flags.usize_or("batch", 8)?)
-        .workers(flags.usize_or("workers", 2)?);
+        .workers(flags.usize_or("workers", 2)?)
+        .shards(flags.usize_or("shards", 1)?)
+        .queue_depth(flags.usize_or("queue-depth", 1024)?)
+        .max_wait(std::time::Duration::from_millis(
+            flags.usize_or("max-wait-ms", 5)? as u64,
+        ));
+    if let Some(be) = flags.get("backend") {
+        let backend: ServeBackend = be
+            .parse()
+            .map_err(|reason| ApiError::InvalidFlag { flag: "backend".into(), reason })?;
+        builder = builder.backend(backend);
+    }
+    if let Some(policy) = flags.get("routing") {
+        let routing: RoutingPolicy = policy
+            .parse()
+            .map_err(|reason| ApiError::InvalidFlag { flag: "routing".into(), reason })?;
+        builder = builder.routing(routing);
+    }
+    if let Some(scale) = flags.get("time-scale") {
+        let parsed: f64 = scale.parse().map_err(|_| ApiError::InvalidFlag {
+            flag: "time-scale".into(),
+            reason: format!("expected a number, got '{scale}'"),
+        })?;
+        builder = builder.time_scale(parsed);
+    }
     if let Some(dir) = flags.get("artifacts") {
         builder = builder.artifacts(dir);
     }
@@ -187,30 +223,27 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
         builder = builder.model(model);
     }
     let request = builder.build()?;
-    eprintln!(
-        "[serve] loading + compiling artifacts from {} …",
-        request.artifacts.display()
-    );
-    let outcome = Session::new()?.serve(&request)?;
+    match request.backend {
+        ServeBackend::Sim => eprintln!(
+            "[serve] sim backend: {} shard(s), {} routing, no artifacts needed",
+            request.shards, request.routing
+        ),
+        ServeBackend::Pjrt => eprintln!(
+            "[serve] loading + compiling artifacts from {} …",
+            request.artifacts.display()
+        ),
+    }
+    let session = std::sync::Arc::new(Session::new()?);
+    let outcome = session.serve(&request)?;
     if flags.has("json") {
         println!("{}", outcome.to_json());
     } else {
-        println!(
-            "served {} requests in {:.2}s ({:.1} img/s)",
-            outcome.requests, outcome.wall_s, outcome.throughput_img_s
-        );
-        for (m, s) in &outcome.per_model {
-            println!("  {m}: {s}");
+        outcome.to_table().print();
+        if outcome.rejections > 0 {
+            println!("(absorbed {} shard-queue rejections by draining)", outcome.rejections);
         }
     }
     Ok(())
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_args: &[String]) -> Result<(), ApiError> {
-    Err(ApiError::ArtifactError(
-        "serving needs the PJRT runtime — rebuild with `--features pjrt`".into(),
-    ))
 }
 
 fn cmd_report(args: &[String]) -> Result<(), ApiError> {

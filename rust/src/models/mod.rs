@@ -6,7 +6,7 @@
 //! semantics (enough for exact op counts and the sparse-dataflow census),
 //! not weights. The functional path — actual inference with weights — lives
 //! in the JAX layer (`python/compile/models/`) and is executed through
-//! [`crate::runtime`].
+//! `crate::runtime` (present only with the `pjrt` feature).
 
 pub mod graph;
 pub mod layer;

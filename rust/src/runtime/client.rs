@@ -335,6 +335,8 @@ fn load_one(client: &xla::PjRtClient, set: &ArtifactSet) -> Result<ModelRuntime>
     })
 }
 
+/// The `--backend pjrt` serving executor: real AOT-HLO inference behind
+/// the same coordinator interface as `api::SimExecutor`.
 impl BatchExecutor for Engine {
     fn models(&self) -> Vec<String> {
         self.model_names()

@@ -4,6 +4,11 @@
 //!
 //! Python never runs at serving time: `make artifacts` is the only python
 //! step, and this module is the only consumer of its outputs.
+//!
+//! In the serving stack this is the `--backend pjrt` executor: [`Engine`]
+//! implements `coordinator::server::BatchExecutor`, interchangeable with
+//! the artifact-free `api::SimExecutor` behind the same multi-shard
+//! coordinator.
 
 pub mod artifacts;
 pub mod client;

@@ -1,5 +1,11 @@
 //! The tile-level scheduling engine: composes device/arch cost models over
 //! a mapped model under the three optimization toggles.
+//!
+//! Besides the paper exhibits (Figs. 11–14), this cost model drives the
+//! serving layer: `api::SimExecutor` calls [`simulate_mapped`] (through
+//! the `api::Session` mapping cache) on every dispatched batch, so the
+//! coordinator's measured latencies are photonic-timing-accurate without
+//! any PJRT artifacts.
 
 use crate::arch::accelerator::Accelerator;
 use crate::arch::activation::ActKind;

@@ -90,6 +90,14 @@ impl SimReport {
     pub fn gops_per_epb(&self) -> f64 {
         self.gops() / self.epb()
     }
+
+    /// Mean per-sample latency (s) within the batch — the quantity a
+    /// serving shard's batch dispatch amortizes (weights load once per
+    /// tile regardless of batch), and what `api::SimExecutor` paces by
+    /// per batch.
+    pub fn latency_per_sample(&self) -> f64 {
+        self.latency / self.batch.max(1) as f64
+    }
 }
 
 #[cfg(test)]
@@ -129,5 +137,8 @@ mod tests {
         assert!((r.gops() - 2000.0).abs() < 1e-9);
         assert!((r.epb() - 1e-3 / 1.6e10).abs() < 1e-20);
         assert!((r.avg_power() - 1.0).abs() < 1e-12);
+        assert_eq!(r.latency_per_sample(), r.latency, "batch 1: per-sample == total");
+        let batched = SimReport { batch: 4, ..r };
+        assert!((batched.latency_per_sample() - 0.25e-3).abs() < 1e-15);
     }
 }

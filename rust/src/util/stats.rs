@@ -27,20 +27,31 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile, `q` in `[0, 100]`. Sorts a copy.
+/// Linear-interpolated percentile, `q` in `[0, 100]`. Sorts a copy —
+/// callers computing several quantiles of the same data should sort once
+/// and use [`percentile_sorted`].
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
-    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, q)
+}
+
+/// [`percentile`] over data that is already sorted ascending (no copy,
+/// no re-sort).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 
@@ -120,6 +131,22 @@ impl Histogram {
         }
     }
 
+    /// Fold another histogram with the *same bucket specification* into
+    /// this one (the coordinator merges per-shard histograms this way).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "histogram merge requires identical bucket specs"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Approximate quantile from the histogram buckets (upper-bound biased).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.n == 0 {
@@ -159,6 +186,11 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 100.0), 40.0);
         assert_eq!(percentile(&xs, 50.0), 25.0);
+        // pre-sorted fast path agrees with the sorting version
+        let unsorted = [30.0, 10.0, 40.0, 20.0];
+        for q in [0.0, 37.5, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&unsorted, q), percentile_sorted(&xs, q), "q={q}");
+        }
     }
 
     #[test]
@@ -179,6 +211,30 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p99 > 0.9, "p99={p99}");
         assert!(h.min() > 0.0 && h.max() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_recording_everything_in_one() {
+        let mut a = Histogram::exponential(1e-3, 10.0, 5);
+        let mut b = Histogram::exponential(1e-3, 10.0, 5);
+        let mut whole = Histogram::exponential(1e-3, 10.0, 5);
+        for i in 1..=50 {
+            let x = i as f64 / 10.0;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            whole.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
     }
 
     #[test]

@@ -78,11 +78,35 @@ fn every_api_error_variant_is_reachable() {
     // all validation errors are usage errors (exit code 2)
     assert_eq!(ApiError::InvalidBatch(0).exit_code(), 2);
     assert_eq!(ApiError::EmptyGrid.exit_code(), 2);
-    // InvalidWorkers comes from the pjrt-gated ServeRequest builder; the
-    // variant itself is feature-independent
-    let workers_err = ApiError::InvalidWorkers(0);
-    assert_eq!(workers_err.exit_code(), 2);
-    assert!(workers_err.to_string().contains("workers"));
+
+    // serving builder validation (backend-independent, no artifacts)
+    use photogan::api::ServeRequest;
+    assert_eq!(
+        ServeRequest::builder().workers(0).build().unwrap_err(),
+        ApiError::InvalidWorkers(0)
+    );
+    assert_eq!(
+        ServeRequest::builder().shards(0).build().unwrap_err(),
+        ApiError::InvalidShards(0)
+    );
+    assert_eq!(
+        ServeRequest::builder().max_batch(0).build().unwrap_err(),
+        ApiError::InvalidBatch(0)
+    );
+    assert_eq!(
+        ServeRequest::builder().time_scale(-2.0).build().unwrap_err(),
+        ApiError::InvalidTimeScale(-2.0)
+    );
+    assert!(matches!(
+        ServeRequest::builder().queue_depth(0).build().unwrap_err(),
+        ApiError::InvalidFlag { ref flag, .. } if flag == "queue-depth"
+    ));
+    assert_eq!(ApiError::InvalidWorkers(0).exit_code(), 2);
+    // backpressure is a runtime condition, not a usage error
+    assert_eq!(
+        ApiError::Backpressure { shard: 0, outstanding: 4, limit: 4 }.exit_code(),
+        1
+    );
 }
 
 #[test]

@@ -153,9 +153,12 @@ fn coordinator_over_simulated_photonic_executor() {
         ServerConfig {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
             workers: 2,
+            ..Default::default()
         },
     );
-    let rxs: Vec<_> = (0..32).map(|i| server.submit("CondGAN", i, Some((i % 10) as u32), 1)).collect();
+    let rxs: Vec<_> = (0..32)
+        .map(|i| server.submit("CondGAN", i, Some((i % 10) as u32), 1).unwrap())
+        .collect();
     let mut served_batches = Vec::new();
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
