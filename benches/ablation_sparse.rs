@@ -2,10 +2,14 @@
 //!
 //! 1. Zero-column census across the (stride, kernel) plane — the op
 //!    reduction structure (≈ s² in the interior).
-//! 2. Functional timing: rust dense (zero-insertion) vs sparse
+//! 2. Replication-fold census for nearest-upsample + conv (the extended
+//!    zoo's second structured-redundancy class).
+//! 3. Functional timing: rust dense (zero-insertion) vs sparse
 //!    (reduced-dot-product) transposed conv on the DCGAN layer shapes —
-//!    the same code path the simulator's op counts model.
-//! 3. Per-model executed-MAC reduction at the mapper level.
+//!    the same code path the simulator's op counts model — plus the
+//!    folded upconv pair on the StyleGAN2 block shapes.
+//! 4. Per-model executed-MAC reduction at the mapper level, over the full
+//!    8-model zoo.
 
 mod common;
 
@@ -13,7 +17,9 @@ use common::{ms, time_it};
 use photogan::models::zoo;
 use photogan::sim::mapper::map_model;
 use photogan::sim::OptFlags;
-use photogan::sparse::{tconv2d_dense, tconv2d_sparse, TconvSpec};
+use photogan::sparse::{
+    tconv2d_dense, tconv2d_sparse, upconv2d_dense, upconv2d_folded, TconvSpec, UpconvSpec,
+};
 use photogan::util::rng::Pcg32;
 use photogan::util::table::Table;
 
@@ -27,7 +33,16 @@ fn main() {
     }
     t.print();
 
-    // --- 2. functional timing on DCGAN layer shapes -------------------------
+    // --- 2. replication-fold census plane -----------------------------------
+    let mut t = Table::new(vec!["kernel", "upsample", "pad", "reduction x"])
+        .with_title("replication-fold census for upsample+conv (16x16 input)");
+    for (k, s, p) in [(3, 2, 1), (3, 4, 1), (5, 2, 2), (1, 2, 0), (3, 1, 1), (7, 2, 3)] {
+        let c = UpconvSpec::new(k, s, p, 16, 16).census();
+        t.row(vec![k.to_string(), s.to_string(), p.to_string(), format!("{:.2}", c.reduction())]);
+    }
+    t.print();
+
+    // --- 3. functional timing on DCGAN layer shapes -------------------------
     println!("\nfunctional tconv: dense (zero-insert) vs sparse (reduced dot products)");
     let mut rng = Pcg32::new(7);
     for (name, k, s, p, h) in [
@@ -56,9 +71,37 @@ fn main() {
         );
     }
 
-    // --- 3. model-level executed-MAC reduction -----------------------------
+    // --- 3b. functional upconv timing on StyleGAN2 block shapes -------------
+    println!("\nfunctional upsample+conv: dense (replicated) vs folded (reduced dot products)");
+    for (name, k, s, p, h) in [
+        ("stylegan2 8x8", 3usize, 2usize, 1usize, 4usize),
+        ("stylegan2 16x16", 3, 2, 1, 8),
+        ("stylegan2 32x32", 3, 2, 1, 16),
+    ] {
+        let spec = UpconvSpec::new(k, s, p, h, h);
+        let mut input = vec![0f32; h * h];
+        let mut kern = vec![0f32; k * k];
+        rng.fill_uniform_f32(&mut input);
+        rng.fill_uniform_f32(&mut kern);
+        let (dense_best, _) = time_it(3, 20, || {
+            std::hint::black_box(upconv2d_dense(&spec, &input, &kern));
+        });
+        let (folded_best, _) = time_it(3, 20, || {
+            std::hint::black_box(upconv2d_folded(&spec, &input, &kern));
+        });
+        let census = spec.census();
+        println!(
+            "  {name:16} dense {} | folded {} | speedup {:.2}x (op-count bound {:.2}x)",
+            ms(dense_best),
+            ms(folded_best),
+            dense_best / folded_best,
+            census.reduction()
+        );
+    }
+
+    // --- 4. model-level executed-MAC reduction (8-model zoo) ----------------
     println!("\nexecuted-MAC reduction from the sparse dataflow (mapper level):");
-    for m in zoo::all_generators() {
+    for m in zoo::extended_generators() {
         let dense: usize = map_model(&m, 1, &OptFlags::baseline())
             .iter()
             .flat_map(|j| &j.mvms)
@@ -70,12 +113,13 @@ fn main() {
             .map(|x| x.exec_macs)
             .sum();
         println!(
-            "  {:10} {:>14} -> {:>14} MACs  ({:.2}x, tconv fraction {:.0}%)",
+            "  {:10} {:>14} -> {:>14} MACs  ({:.2}x, tconv {:.0}%, upconv {:.0}%)",
             m.name,
             dense,
             sparse,
             dense as f64 / sparse as f64,
-            100.0 * m.tconv_mac_fraction().unwrap()
+            100.0 * m.tconv_mac_fraction().unwrap(),
+            100.0 * m.upsample_conv_mac_fraction().unwrap()
         );
     }
 }

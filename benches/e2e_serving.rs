@@ -204,6 +204,51 @@ fn backpressure_demo() {
     );
 }
 
+fn mixed_zoo_demo() {
+    println!("\n== mixed 8-model load (model-affinity routing, 2 shards) ==");
+    let session = Arc::new(Session::new().expect("session"));
+    // cost-model-only pacing: this cell demonstrates routing/batching over
+    // the full zoo, not wall-clock chip timing
+    let exec = Arc::new(
+        SimExecutor::with_options(Arc::clone(&session), photogan::sim::OptFlags::all(), 0.0)
+            .expect("executor"),
+    );
+    let names = exec.models();
+    let server = Server::start(
+        Arc::clone(&exec),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 2,
+            shards: 2,
+            routing: RoutingPolicy::ModelAffinity,
+            queue_depth: 256,
+        },
+    );
+    let per_model = 8usize;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..per_model)
+        .flat_map(|i| {
+            names.iter().map(move |n| (n.clone(), i)).collect::<Vec<_>>()
+        })
+        .map(|(name, i)| server.submit(&name, i as u64, None, 1).expect("submit"))
+        .collect();
+    let mut lat = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        lat.push(rx.recv().expect("response").total_time * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "  {} models × {per_model} req: {:.0} req/s  p50={:.3}ms p99={:.3}ms \
+         ({} per-model series)",
+        names.len(),
+        lat.len() as f64 / wall,
+        percentile(&lat, 50.0),
+        percentile(&lat, 99.0),
+        stats.per_model.len()
+    );
+}
+
 #[cfg(feature = "pjrt")]
 fn pjrt_serving() {
     use photogan::runtime::Engine;
@@ -259,6 +304,7 @@ fn main() {
     coordinator_overhead();
     sim_scaling_sweep();
     backpressure_demo();
+    mixed_zoo_demo();
     #[cfg(feature = "pjrt")]
     pjrt_serving();
 }

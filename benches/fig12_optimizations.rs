@@ -1,35 +1,51 @@
 //! Bench target for paper Fig. 12: normalized energy under each
 //! dataflow/scheduling optimization (Baseline, S/W Optimized, Pipelined,
-//! Power Gating, All), per model.
+//! Power Gating, All), per model — now over the full 8-model zoo.
 //!
-//! Shape assertions mirror the paper's discussion: every optimization
-//! helps, the combined config wins everywhere, and CycleGAN benefits least
-//! from the sparse dataflow (fewest transposed-conv MACs).
+//! Shape assertions mirror the paper's discussion on the Table 1 four
+//! (every optimization helps, CycleGAN benefits least from sparsity, the
+//! combined average stays ≥ 8×); the extended models assert the
+//! idiom-aware relations instead: sparsity helps exactly the models with a
+//! structured-redundancy class (tconv or nearest-upsample+conv), and is
+//! neutral for pixel-shuffle SRGAN.
 
 use photogan::api::Session;
 use photogan::report::{self, PAPER_FIG12_COMBINED};
+
+/// Paper Table 1 models — the scope of the paper-calibrated assertions.
+const TABLE1: [&str; 4] = ["DCGAN", "CondGAN", "ArtGAN", "CycleGAN"];
 
 fn main() {
     let session = Session::new().expect("paper optimum is valid");
     let (table, per_model) = report::fig12(&session);
     table.print();
 
-    let mut combined = Vec::new();
+    let mut combined_t1 = Vec::new();
     let mut sparse_gain = Vec::new();
     for (name, norm) in &per_model {
         // norm = [baseline=1, sw, pipe, gate, all]
-        assert!(norm[1] < 1.0, "{name}: sparse must reduce energy");
+        let sparse_neutral = name == "SRGAN"; // pixel shuffle: nothing to fold
+        if sparse_neutral {
+            assert!(
+                (norm[1] - 1.0).abs() < 1e-12,
+                "{name}: pixel-shuffle upsampling leaves sparsity nothing to do"
+            );
+        } else {
+            assert!(norm[1] < 1.0, "{name}: sparse must reduce energy");
+        }
         assert!(norm[2] < 1.0, "{name}: pipelining must reduce energy");
         assert!(norm[3] < 1.0, "{name}: gating must reduce energy");
         let min = norm.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!((norm[4] - min).abs() < 1e-12, "{name}: combined must be best");
-        combined.push(1.0 / norm[4]);
-        sparse_gain.push((name.clone(), 1.0 / norm[1]));
+        if TABLE1.contains(&name.as_str()) {
+            combined_t1.push(1.0 / norm[4]);
+            sparse_gain.push((name.clone(), 1.0 / norm[1]));
+        }
     }
-    let avg = combined.iter().sum::<f64>() / combined.len() as f64;
+    let avg = combined_t1.iter().sum::<f64>() / combined_t1.len() as f64;
     println!(
-        "\ncombined-optimization energy reduction: avg {:.2}x (paper: {PAPER_FIG12_COMBINED}x; \
-         see EXPERIMENTS.md for the gap analysis)",
+        "\ncombined-optimization energy reduction (Table 1 avg): {:.2}x \
+         (paper: {PAPER_FIG12_COMBINED}x; see EXPERIMENTS.md for the gap analysis)",
         avg
     );
     let cycle = sparse_gain.iter().find(|(n, _)| n == "CycleGAN").unwrap().1;

@@ -11,20 +11,22 @@ fn main() {
     report::fig13(&data).print();
 
     let pg = &data.series[0];
-    // shape assertions: PhotoGAN wins everywhere; ReRAM is closest; the
-    // average ratios track the paper's within 15% (the calibration test in
-    // baselines::platform also enforces this under `cargo test`).
+    // shape assertions: PhotoGAN wins on every model (all 8); the average
+    // ratios over the paper's four Table 1 columns track the paper within
+    // 15% (the calibration test in baselines::platform also enforces this
+    // under `cargo test` — the extended models are excluded from the
+    // paper-calibrated window by construction).
     let mut ratios = Vec::new();
     for (i, s) in data.series.iter().enumerate().skip(1) {
         let name = &s.platform;
         for (j, g) in s.gops.iter().enumerate() {
             assert!(pg.gops[j] > *g, "{name} beats PhotoGAN on {}", data.model_names[j]);
         }
-        let r = data.avg_gops_ratio(i).expect("baseline ratio");
+        let r = data.table1_gops_ratio(i).expect("baseline ratio");
         let paper = PAPER_GOPS_RATIOS[i - 1];
         assert!(
             (r / paper - 1.0).abs() < 0.15,
-            "{name}: ratio {r:.2} vs paper {paper:.2}"
+            "{name}: Table 1 ratio {r:.2} vs paper {paper:.2}"
         );
         ratios.push((name.clone(), r, paper));
     }

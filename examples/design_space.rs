@@ -5,8 +5,9 @@
 //! global top-10 — showing *why* the paper's DSE shapes the chip the way
 //! it does (and where our device-up model disagrees; see EXPERIMENTS.md).
 //!
-//! All five sweeps share one `Session`, so the four models are mapped
-//! exactly once — the per-axis sweeps only re-cost the cached jobs.
+//! All five sweeps share one `Session`, so the registered models (the
+//! 8-model zoo) are mapped exactly once — the per-axis sweeps only
+//! re-cost the cached jobs.
 //!
 //! Run: `cargo run --release --example design_space [-- threads=8]`
 

@@ -17,7 +17,7 @@
 //!
 //! let session = Arc::new(Session::new()?);
 //! let exec = SimExecutor::new(Arc::clone(&session))?;
-//! assert_eq!(exec.models().len(), 4); // the Table 1 generators
+//! assert_eq!(exec.models().len(), 8); // Table 1 + the extended zoo
 //!
 //! // two samples of CondGAN (28×28 grayscale = 784 elements each)
 //! let images = exec.generate("CondGAN", &[(7, Some(3)), (8, Some(3))]);

@@ -6,7 +6,8 @@
 //! the report generator) routes through a `Session`, which owns:
 //!
 //! - an assembled [`crate::arch::Accelerator`],
-//! - a model registry (paper Table 1 generators by default),
+//! - a model registry (the 8-model zoo by default: paper Table 1 plus
+//!   SRGAN, Pix2Pix, StyleGAN2, ProGAN),
 //! - a **memoized mapping cache** keyed by `(model, batch, OptFlags)` so
 //!   repeated requests — DSE sweeps, ablation grids, full report runs —
 //!   map each workload exactly once.

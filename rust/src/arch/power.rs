@@ -20,6 +20,13 @@ pub const DRAM_ENERGY_PER_BYTE: f64 = 20e-12;
 /// (column reintroduction, §III.C.1) and IN statistics.
 pub const ECU_ENERGY_PER_OP: f64 = 1e-12;
 
+/// Digital ECU **data-movement** energy (J/element) — the new op class the
+/// extended zoo introduces: nearest-neighbor replication, pixel-shuffle
+/// rearrangement, and U-Net skip-concat copies are address-generation +
+/// SRAM-to-SRAM moves, cheaper than the MAC-class bookkeeping op above
+/// (no arithmetic datapath engaged).
+pub const ECU_ENERGY_PER_COPY: f64 = 0.4e-12;
+
 /// Itemized chip power (W) in a given operating condition.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PowerBreakdown {
@@ -76,5 +83,9 @@ mod tests {
     fn constants_sane() {
         assert!(DRAM_ENERGY_PER_BYTE > 1e-12 && DRAM_ENERGY_PER_BYTE < 1e-10);
         assert!(ECU_ENERGY_PER_OP < DRAM_ENERGY_PER_BYTE);
+        // a pure data move must cost less than a MAC-class bookkeeping op,
+        // and far less than going out to DRAM
+        assert!(ECU_ENERGY_PER_COPY > 0.0 && ECU_ENERGY_PER_COPY < ECU_ENERGY_PER_OP);
+        assert!(ECU_ENERGY_PER_COPY < DRAM_ENERGY_PER_BYTE);
     }
 }

@@ -18,6 +18,8 @@ impl LayerClass {
             Layer::Dense { .. } => LayerClass::Dense,
             Layer::Conv2d { .. } => LayerClass::Conv,
             Layer::ConvT2d { .. } => LayerClass::TConv,
+            // norm/act/residual — and the zero-MAC data movers (upsample,
+            // pixel shuffle, concat), which `evaluate` skips anyway
             _ => LayerClass::Elementwise,
         }
     }
@@ -174,7 +176,7 @@ mod tests {
 
     #[test]
     fn classes_cover_all_layers() {
-        for m in zoo::all_generators() {
+        for m in zoo::extended_generators() {
             for info in m.infos().unwrap() {
                 let _ = LayerClass::of(&info.layer); // must not panic
             }
@@ -184,7 +186,7 @@ mod tests {
     #[test]
     fn evaluation_produces_positive_metrics() {
         for p in all_platforms() {
-            for m in zoo::all_generators() {
+            for m in zoo::extended_generators() {
                 let r = p.evaluate(&m, 1);
                 assert!(r.latency > 0.0 && r.energy > 0.0, "{} {}", p.name, m.name);
                 assert!(r.gops() > 0.0 && r.epb() > 0.0);

@@ -16,7 +16,8 @@
 //!
 //! let session = Session::new()?; // the paper's [16,2,11,3] chip
 //!
-//! // simulate all four Table 1 generators at batch 8
+//! // simulate all eight registered generators (Table 1 + extended zoo)
+//! // at batch 8
 //! let sim = session.simulate(&SimRequest::builder().batch(8).build()?)?;
 //! sim.to_table().print();
 //!
@@ -63,9 +64,12 @@
 //!   DAC/ADC, PCMCs, tuning circuits, waveguide loss budget, laser power).
 //! - [`arch`] — PhotoGAN's architecture blocks (dense / convolution /
 //!   normalization / activation units) and whole-chip assembly `[N,K,L,M]`.
-//! - [`models`] — GAN workload IR and the four evaluated models (Table 1).
-//! - [`sparse`] — the paper's sparse computation dataflow for transposed
-//!   convolutions (Fig. 9): zero-column census + functional reference.
+//! - [`models`] — GAN workload IR and the model zoo: the four Table 1
+//!   models plus the extended paper-adjacent generators (SRGAN, Pix2Pix,
+//!   StyleGAN2, ProGAN).
+//! - [`sparse`] — the paper's sparse computation dataflow (Fig. 9) for
+//!   transposed convolutions *and* its upsample+conv generalization:
+//!   static censuses + functional references.
 //! - [`sim`] — the architectural simulator: mapping, two-level pipelining,
 //!   power gating, per-layer latency/energy traces, GOPS / EPB.
 //! - [`baselines`] — analytic GPU / CPU / TPU / FPGA / ReRAM comparators.

@@ -5,6 +5,10 @@
 //! request, executed, and the typed [`ApiError`] (if any) is mapped onto
 //! an exit code (2 = usage/validation, 1 = runtime failure).
 //!
+//! `--model` accepts any registered generator (the 8-model zoo:
+//! dcgan, condgan, artgan, cyclegan, srgan, pix2pix, stylegan2, progan);
+//! omitting it runs the whole study.
+//!
 //! ```text
 //! photogan simulate [--model NAME] [--batch B] [--config N,K,L,M]
 //!                   [--no-sparse|--no-pipeline|--no-gating]
@@ -63,7 +67,8 @@ fn print_help() {
         "photogan — silicon-photonic GAN acceleration (paper reproduction)\n\
          USAGE: photogan <simulate|dse|compare|serve|report> [flags]\n\
          \n\
-         simulate  --model dcgan|condgan|artgan|cyclegan  --batch B\n\
+         simulate  --model dcgan|condgan|artgan|cyclegan\n\
+        \u{20}                  |srgan|pix2pix|stylegan2|progan  --batch B\n\
         \u{20}          --config N,K,L,M  --no-sparse --no-pipeline --no-gating\n\
         \u{20}          --strict-power (fail if over the power cap)  --json\n\
          dse       --threads T  --grid paper|smoke  --json\n\

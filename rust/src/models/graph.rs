@@ -1,6 +1,6 @@
 //! Model graph: an ordered layer list with validated shape propagation.
 
-use super::layer::{Layer, Shape, ShapeError};
+use super::layer::{Layer, Shape, ShapeError, UpsampleMode};
 use crate::arch::norm::NormKind;
 
 /// A GAN model (generator or discriminator) as a validated layer sequence.
@@ -95,6 +95,30 @@ impl Model {
         Ok(tconv as f64 / total as f64)
     }
 
+    /// Fraction of MACs in stride-1 convolutions that immediately follow a
+    /// nearest-neighbor upsample — the second structured-redundancy class
+    /// the sparse dataflow can fold (see [`crate::sparse::UpconvSpec`]),
+    /// mirroring [`Model::tconv_mac_fraction`] for the extended zoo's
+    /// upsample+conv generators.
+    pub fn upsample_conv_mac_fraction(&self) -> Result<f64, ShapeError> {
+        let infos = self.infos()?;
+        let total: usize = infos.iter().map(|i| i.macs).sum();
+        if total == 0 {
+            return Ok(0.0);
+        }
+        let mut up = 0usize;
+        for pair in infos.windows(2) {
+            let upsampled = matches!(
+                pair[0].layer,
+                Layer::Upsample2d { mode: UpsampleMode::Nearest, scale } if scale > 1
+            );
+            if upsampled && matches!(pair[1].layer, Layer::Conv2d { s: 1, .. }) {
+                up += pair[1].macs;
+            }
+        }
+        Ok(up as f64 / total as f64)
+    }
+
     /// Bytes of weights at the given precision.
     pub fn weight_bytes(&self, bits: u32) -> Result<usize, ShapeError> {
         Ok(self.params()? * bits as usize / 8)
@@ -148,6 +172,28 @@ mod tests {
     fn tconv_fraction_sensible() {
         let f = toy().tconv_mac_fraction().unwrap();
         assert!((f - 2048.0 / 2288.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upsample_conv_fraction_counts_only_foldable_convs() {
+        let m = Model::new(
+            "up-toy",
+            Shape::Chw(4, 4, 4),
+            vec![
+                // foldable: nearest 2x followed by a stride-1 conv
+                Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: 2 },
+                Layer::Conv2d { in_ch: 4, out_ch: 8, k: 3, s: 1, p: 1, bias: false },
+                // not foldable: a plain conv with no preceding upsample
+                Layer::Conv2d { in_ch: 8, out_ch: 8, k: 3, s: 1, p: 1, bias: false },
+            ],
+        );
+        let infos = m.infos().unwrap();
+        // conv over the 8x8 upsampled input: 8·8·8·4·9; second conv: 8·8·8·8·9
+        assert_eq!(infos[1].macs, 8 * 8 * 8 * 4 * 9);
+        let expect = infos[1].macs as f64 / (infos[1].macs + infos[2].macs) as f64;
+        assert!((m.upsample_conv_mac_fraction().unwrap() - expect).abs() < 1e-12);
+        // models without nearest upsampling report zero
+        assert_eq!(toy().upsample_conv_mac_fraction().unwrap(), 0.0);
     }
 
     #[test]

@@ -21,6 +21,22 @@ impl Shape {
     }
 }
 
+/// How an [`Layer::Upsample2d`] layer produces its `scale×` larger output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpsampleMode {
+    /// Nearest-neighbor replication: every input element fills an
+    /// `scale×scale` output block (ProGAN / StyleGAN2-style generators).
+    /// A stride-1 conv that follows reads each input element up to `k²`
+    /// times — the structured redundancy [`crate::sparse::UpconvSpec`]
+    /// folds away.
+    Nearest,
+    /// Pixel shuffle (depth-to-space): `c·scale²` channels rearrange into
+    /// `c` channels at `scale×` resolution (SRGAN-style). Pure data
+    /// movement — the compute already happened in the conv that fattened
+    /// the channels, so there is no redundancy left to eliminate.
+    PixelShuffle,
+}
+
 /// One layer of a GAN model.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Layer {
@@ -40,9 +56,17 @@ pub enum Layer {
     Flatten,
     /// Concatenate a conditioning vector of length `n` (CondGAN labels).
     ConcatVec(usize),
-    /// Residual skip-add around the previous `span` layers (CycleGAN
-    /// ResNet blocks): `out = in + f(in)`; one add per element.
+    /// Residual skip-add around the previous `span` layers (CycleGAN /
+    /// SRGAN ResNet blocks): `out = in + f(in)`; one add per element.
     ResidualAdd { span: usize },
+    /// Spatial upsampling (generator path): zero MACs — the layer moves
+    /// data; the *following* conv carries the compute.
+    Upsample2d { mode: UpsampleMode, scale: usize },
+    /// Channel-wise concatenation of a skip tensor with `extra_ch`
+    /// channels at the same resolution (U-Net decoder stages):
+    /// `[c, h, w] → [c + extra_ch, h, w]`. The IR carries the channel
+    /// arithmetic; the skip buffer traffic is charged by the mapper.
+    ConcatChw(usize),
 }
 
 /// Error from shape inference.
@@ -51,6 +75,7 @@ pub enum ShapeError {
     Mismatch { index: usize, layer: String, expected: String, got: String },
     BadReshape { index: usize, target: usize, input: usize },
     BadConv { index: usize, k: usize, s: usize, p: usize, h: usize, w: usize },
+    BadUpsample { index: usize, scale: usize, channels: usize },
 }
 
 impl std::fmt::Display for ShapeError {
@@ -64,6 +89,13 @@ impl std::fmt::Display for ShapeError {
             }
             ShapeError::BadConv { index, k, s, p, h, w } => {
                 write!(f, "layer {index}: conv arithmetic invalid (k={k}, s={s}, p={p} on {h}x{w})")
+            }
+            ShapeError::BadUpsample { index, scale, channels } => {
+                write!(
+                    f,
+                    "layer {index}: upsample scale {scale} invalid for {channels} channels \
+                     (scale must be ≥ 1; pixel shuffle needs channels divisible by scale²)"
+                )
             }
         }
     }
@@ -121,6 +153,33 @@ impl Layer {
                 Shape::Vec(m) => Ok(Shape::Vec(m + n)),
                 _ => Err(mismatch("Vec(_)")),
             },
+            Layer::Upsample2d { mode, scale } => match *input {
+                Shape::Chw(c, h, w) => {
+                    if *scale == 0 {
+                        return Err(ShapeError::BadUpsample { index, scale: *scale, channels: c });
+                    }
+                    match mode {
+                        UpsampleMode::Nearest => Ok(Shape::Chw(c, h * scale, w * scale)),
+                        UpsampleMode::PixelShuffle => {
+                            let s2 = scale * scale;
+                            if c % s2 != 0 {
+                                Err(ShapeError::BadUpsample {
+                                    index,
+                                    scale: *scale,
+                                    channels: c,
+                                })
+                            } else {
+                                Ok(Shape::Chw(c / s2, h * scale, w * scale))
+                            }
+                        }
+                    }
+                }
+                _ => Err(mismatch("Chw(_, _, _)")),
+            },
+            Layer::ConcatChw(extra) => match *input {
+                Shape::Chw(c, h, w) => Ok(Shape::Chw(c + extra, h, w)),
+                _ => Err(mismatch("Chw(_, _, _)")),
+            },
         }
     }
 
@@ -164,7 +223,14 @@ impl Layer {
             Layer::Act(ActKind::None) => 0,
             Layer::Act(_) => input.elements(),
             Layer::ResidualAdd { .. } => input.elements(),
-            Layer::Reshape(..) | Layer::Flatten | Layer::ConcatVec(_) => 0,
+            // pure data movement: replication/rearrangement/concat carry no
+            // MACs — the adjacent convs own the compute (and, for nearest
+            // upsampling, the redundancy the sparse dataflow folds away)
+            Layer::Reshape(..)
+            | Layer::Flatten
+            | Layer::ConcatVec(_)
+            | Layer::Upsample2d { .. }
+            | Layer::ConcatChw(_) => 0,
         })
     }
 }
@@ -243,5 +309,61 @@ mod tests {
     fn concat_extends_vec() {
         let l = Layer::ConcatVec(10);
         assert_eq!(l.out_shape(&Shape::Vec(100), 0), Ok(Shape::Vec(110)));
+    }
+
+    #[test]
+    fn nearest_upsample_scales_spatial_dims_only() {
+        let l = Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: 2 };
+        assert_eq!(
+            l.out_shape(&Shape::Chw(64, 8, 8), 0),
+            Ok(Shape::Chw(64, 16, 16))
+        );
+        // data movement only: zero params, zero MACs
+        assert_eq!(l.params(), 0);
+        assert_eq!(l.macs(&Shape::Chw(64, 8, 8), 0), Ok(0));
+        // a vector input is a shape mismatch
+        assert!(l.out_shape(&Shape::Vec(64), 0).is_err());
+    }
+
+    #[test]
+    fn pixel_shuffle_trades_channels_for_resolution() {
+        let l = Layer::Upsample2d { mode: UpsampleMode::PixelShuffle, scale: 2 };
+        assert_eq!(
+            l.out_shape(&Shape::Chw(256, 24, 24), 0),
+            Ok(Shape::Chw(64, 48, 48))
+        );
+        // element count is preserved — it is a pure rearrangement
+        assert_eq!(
+            l.out_shape(&Shape::Chw(256, 24, 24), 0).unwrap().elements(),
+            256 * 24 * 24
+        );
+        // channels not divisible by scale² is a typed shape error
+        assert!(matches!(
+            l.out_shape(&Shape::Chw(10, 4, 4), 3),
+            Err(ShapeError::BadUpsample { index: 3, scale: 2, channels: 10 })
+        ));
+    }
+
+    #[test]
+    fn concat_chw_extends_channels() {
+        let l = Layer::ConcatChw(512);
+        assert_eq!(
+            l.out_shape(&Shape::Chw(512, 2, 2), 0),
+            Ok(Shape::Chw(1024, 2, 2))
+        );
+        assert_eq!(l.params(), 0);
+        assert_eq!(l.macs(&Shape::Chw(512, 2, 2), 0), Ok(0));
+        assert!(l.out_shape(&Shape::Vec(512), 0).is_err());
+    }
+
+    #[test]
+    fn zero_scale_upsample_is_rejected() {
+        for mode in [UpsampleMode::Nearest, UpsampleMode::PixelShuffle] {
+            let l = Layer::Upsample2d { mode, scale: 0 };
+            assert!(matches!(
+                l.out_shape(&Shape::Chw(8, 4, 4), 0),
+                Err(ShapeError::BadUpsample { scale: 0, .. })
+            ));
+        }
     }
 }

@@ -1,9 +1,12 @@
 //! GAN workload IR: layer types, shape propagation, op/param counting, and
-//! the four evaluated models of paper Table 1 (DCGAN, Conditional GAN,
-//! ArtGAN, CycleGAN) plus their discriminators.
+//! the model zoo — the four evaluated models of paper Table 1 (DCGAN,
+//! Conditional GAN, ArtGAN, CycleGAN) plus their discriminators, and the
+//! extended paper-adjacent generators (SRGAN, Pix2Pix, StyleGAN2, ProGAN)
+//! that broaden layer-type coverage (upsample+conv, pixel shuffle, U-Net
+//! skip concatenation).
 //!
 //! The IR is deliberately *architectural*: it carries shapes and layer
-//! semantics (enough for exact op counts and the sparse-dataflow census),
+//! semantics (enough for exact op counts and the sparse-dataflow censuses),
 //! not weights. The functional path — actual inference with weights — lives
 //! in the JAX layer (`python/compile/models/`) and is executed through
 //! `crate::runtime` (present only with the `pjrt` feature).
@@ -13,5 +16,8 @@ pub mod layer;
 pub mod zoo;
 
 pub use graph::Model;
-pub use layer::{Layer, Shape};
-pub use zoo::{all_generators, artgan, condgan, cyclegan, dcgan};
+pub use layer::{Layer, Shape, UpsampleMode};
+pub use zoo::{
+    all_generators, artgan, condgan, cyclegan, dcgan, extended_generators, pix2pix, progan,
+    srgan, stylegan2,
+};

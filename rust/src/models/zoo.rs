@@ -1,4 +1,8 @@
-//! The four evaluated GAN models (paper Table 1) and their discriminators.
+//! The evaluated GAN model zoo: the paper's four Table 1 models (plus
+//! their discriminators) and four paper-adjacent generators that broaden
+//! the layer vocabulary the accelerator study exercises.
+//!
+//! Paper Table 1 (served by [`all_generators`]):
 //!
 //! | Model      | Dataset       | Params (paper) |
 //! |------------|---------------|----------------|
@@ -7,16 +11,32 @@
 //! | ArtGAN     | Art Portraits | 1.27 M         |
 //! | CycleGAN   | horse2zebra   | 11.38 M        |
 //!
-//! Architectures follow the models' reference implementations ([28]–[31])
-//! at the image sizes the datasets imply; each builder's parameter count is
-//! asserted against Table 1 (±10%) in the tests below.
+//! Extended zoo (served by [`extended_generators`] — what the
+//! [`crate::api::Session`] registers, turning every downstream consumer
+//! into an 8-model study). GANAX (arXiv:1806.01107) motivates the
+//! breadth: GAN families differ structurally, and each of these exercises
+//! a distinct generator idiom:
+//!
+//! | Model     | Idiom                                    | Params (ref) |
+//! |-----------|------------------------------------------|--------------|
+//! | SRGAN     | residual stack + pixel-shuffle upsampling | ~1.55 M     |
+//! | Pix2Pix   | U-Net: tconv decoder + skip concatenation | ~54.4 M     |
+//! | StyleGAN2 | nearest-upsample + conv synthesis stack   | ~14.0 M     |
+//! | ProGAN    | nearest-upsample + conv, progressive schedule | ~13.6 M |
+//!
+//! Architectures follow the models' reference implementations at the image
+//! sizes the datasets imply; each builder's parameter count is asserted
+//! (±10%) in the tests below.
 
 use super::graph::Model;
-use super::layer::{Layer, Shape};
+use super::layer::{Layer, Shape, UpsampleMode};
 use crate::arch::activation::ActKind;
 use crate::arch::norm::NormKind;
 
 const LRELU: ActKind = ActKind::LeakyRelu(0.2);
+/// PReLU (SRGAN) modeled as a fixed-slope leaky ReLU — the optical
+/// comparator + dual-SOA unit realizes any fixed slope (§III.B.4).
+const PRELU: ActKind = ActKind::LeakyRelu(0.25);
 
 fn tconv(in_ch: usize, out_ch: usize, k: usize, s: usize, p: usize) -> Layer {
     Layer::ConvT2d { in_ch, out_ch, k, s, p, bias: false }
@@ -212,9 +232,165 @@ pub fn cyclegan_discriminator() -> Model {
     )
 }
 
-/// The four generators the paper evaluates, in Table 1 order.
+/// SRGAN generator (Ledig et al.) for ×4 super-resolution of 24×24 inputs:
+/// k9 stem, 16 residual blocks (conv-BN-PReLU-conv-BN + skip), a global
+/// skip, two pixel-shuffle ×2 upsample stages, k9 to-RGB.
+///
+/// The interesting property for PhotoGAN: upsampling happens by **pixel
+/// shuffle**, so the convs always run at the *low* resolution with fat
+/// channels — there is no structured redundancy for the sparse dataflow to
+/// fold (contrast [`stylegan2`]/[`progan`]), making SRGAN the zoo's
+/// sparse-neutral control.
+pub fn srgan() -> Model {
+    let mut layers = vec![
+        conv(3, 64, 9, 1, 4), // k9 stem at 24x24
+        Layer::Act(PRELU),
+    ];
+    for _ in 0..16 {
+        // residual block: conv-BN-PReLU-conv-BN + skip
+        layers.extend([
+            conv(64, 64, 3, 1, 1),
+            Layer::Norm(NormKind::Batch),
+            Layer::Act(PRELU),
+            conv(64, 64, 3, 1, 1),
+            Layer::Norm(NormKind::Batch),
+            Layer::ResidualAdd { span: 5 },
+        ]);
+    }
+    layers.extend([
+        // post-residual conv + the global skip over the whole trunk
+        conv(64, 64, 3, 1, 1),
+        Layer::Norm(NormKind::Batch),
+        Layer::ResidualAdd { span: 98 },
+        // two ×2 pixel-shuffle stages: conv to 4·64 channels, rearrange
+        conv(64, 256, 3, 1, 1),
+        Layer::Upsample2d { mode: UpsampleMode::PixelShuffle, scale: 2 }, // 48x48
+        Layer::Act(PRELU),
+        conv(64, 256, 3, 1, 1),
+        Layer::Upsample2d { mode: UpsampleMode::PixelShuffle, scale: 2 }, // 96x96
+        Layer::Act(PRELU),
+        conv(64, 3, 9, 1, 4),
+        Layer::Act(ActKind::Tanh),
+    ]);
+    Model::new("SRGAN", Shape::Chw(3, 24, 24), layers)
+}
+
+/// Pix2Pix U-Net generator (Isola et al.) for 256×256 image translation:
+/// eight stride-2 encoder convs (C64…C512), eight transposed-conv decoder
+/// stages, each decoder stage concatenating the same-resolution encoder
+/// activation ([`Layer::ConcatChw`]) — the reference 54.4 M-parameter
+/// configuration.
+pub fn pix2pix() -> Model {
+    let mut layers = vec![
+        conv(3, 64, 4, 2, 1), // 128x128
+        Layer::Act(LRELU),
+    ];
+    // encoder C128..C512 with BN (the innermost stage skips BN)
+    for (i, o) in [(64, 128), (128, 256), (256, 512), (512, 512), (512, 512), (512, 512)] {
+        layers.extend([
+            conv(i, o, 4, 2, 1),
+            Layer::Norm(NormKind::Batch),
+            Layer::Act(LRELU),
+        ]);
+    }
+    layers.extend([conv(512, 512, 4, 2, 1), Layer::Act(ActKind::Relu)]); // 1x1 bottleneck
+    // decoder: tconv, BN, ReLU, then concat the mirrored encoder skip
+    for (i, o, skip) in [
+        (512, 512, 512),
+        (1024, 512, 512),
+        (1024, 512, 512),
+        (1024, 512, 512),
+        (1024, 256, 256),
+        (512, 128, 128),
+        (256, 64, 64),
+    ] {
+        layers.extend([
+            tconv(i, o, 4, 2, 1),
+            Layer::Norm(NormKind::Batch),
+            Layer::Act(ActKind::Relu),
+            Layer::ConcatChw(skip),
+        ]);
+    }
+    layers.extend([tconv(128, 3, 4, 2, 1), Layer::Act(ActKind::Tanh)]); // 256x256
+    Model::new("Pix2Pix", Shape::Chw(3, 256, 256), layers)
+}
+
+/// A StyleGAN2-style synthesis stack (Karras et al.) for 64×64: a learned
+/// 4×4×512 constant, then per-resolution blocks of nearest-neighbor ×2
+/// upsampling followed by two 3×3 convs. Weight demodulation is modeled as
+/// per-instance normalization (per-instance statistics + broadband-MR
+/// re-tune — the same cost class), and the mapped style network is elided
+/// (it is negligible next to synthesis compute).
+pub fn stylegan2() -> Model {
+    let mut layers = vec![
+        conv(512, 512, 3, 1, 1), // stem conv at 4x4
+        Layer::Norm(NormKind::Instance),
+        Layer::Act(LRELU),
+    ];
+    let mut cin = 512;
+    for cout in [512usize, 512, 256, 128] {
+        // one resolution block: 8, 16, 32, 64
+        layers.extend([
+            Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: 2 },
+            conv(cin, cout, 3, 1, 1),
+            Layer::Norm(NormKind::Instance),
+            Layer::Act(LRELU),
+            conv(cout, cout, 3, 1, 1),
+            Layer::Norm(NormKind::Instance),
+            Layer::Act(LRELU),
+        ]);
+        cin = cout;
+    }
+    layers.extend([conv(128, 3, 1, 1, 0), Layer::Act(ActKind::Tanh)]); // toRGB
+    Model::new("StyleGAN2", Shape::Chw(512, 4, 4), layers)
+}
+
+/// ProGAN generator (Karras et al.) for 64×64: latent→4×4 stem transposed
+/// conv, then progressive nearest-upsample + double-conv blocks with
+/// pixelnorm (modeled as per-instance normalization) — the second
+/// upsample+conv workload, on a different channel schedule than
+/// [`stylegan2`].
+pub fn progan() -> Model {
+    let mut layers = vec![
+        tconv(512, 512, 4, 1, 0), // latent 1x1 -> 4x4 stem
+        Layer::Norm(NormKind::Instance),
+        Layer::Act(LRELU),
+        conv(512, 512, 3, 1, 1),
+        Layer::Norm(NormKind::Instance),
+        Layer::Act(LRELU),
+    ];
+    let mut cin = 512;
+    for cout in [512usize, 256, 128, 64] {
+        // 8, 16, 32, 64
+        layers.extend([
+            Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: 2 },
+            conv(cin, cout, 3, 1, 1),
+            Layer::Norm(NormKind::Instance),
+            Layer::Act(LRELU),
+            conv(cout, cout, 3, 1, 1),
+            Layer::Norm(NormKind::Instance),
+            Layer::Act(LRELU),
+        ]);
+        cin = cout;
+    }
+    layers.extend([conv(64, 3, 1, 1, 0), Layer::Act(ActKind::Tanh)]); // toRGB
+    Model::new("ProGAN", Shape::Chw(512, 1, 1), layers)
+}
+
+/// The four generators the paper evaluates, in Table 1 order. Paper
+/// exhibits that reproduce published numbers (Table 1 parity, the
+/// Figs. 13/14 calibration) stay scoped to this set.
 pub fn all_generators() -> Vec<Model> {
     vec![dcgan(), condgan(), artgan(), cyclegan()]
+}
+
+/// The full extended zoo: Table 1 plus the four paper-adjacent
+/// architectures — what [`crate::api::Session`] registers, so `simulate`,
+/// `dse`, `compare`, and `serve` all run the 8-model study.
+pub fn extended_generators() -> Vec<Model> {
+    let mut models = all_generators();
+    models.extend([srgan(), pix2pix(), stylegan2(), progan()]);
+    models
 }
 
 /// Table 1 parameter counts (paper), in the same order.
@@ -223,6 +399,16 @@ pub const PAPER_PARAMS: [(&str, f64); 4] = [
     ("CondGAN", 1.17e6),
     ("ArtGAN", 1.27e6),
     ("CycleGAN", 11.38e6),
+];
+
+/// Reference parameter counts for the extended zoo (from the models'
+/// published configurations), in [`extended_generators`] order after the
+/// Table 1 four.
+pub const EXTENDED_PARAMS: [(&str, f64); 4] = [
+    ("SRGAN", 1.55e6),
+    ("Pix2Pix", 54.41e6),
+    ("StyleGAN2", 14.02e6),
+    ("ProGAN", 13.60e6),
 ];
 
 #[cfg(test)]
@@ -257,6 +443,64 @@ mod tests {
             assert!(d.infos().is_ok(), "{} failed shape check", d.name);
             assert!(d.params().unwrap() > 0);
         }
+    }
+
+    #[test]
+    fn extended_output_shapes_match_datasets() {
+        assert_eq!(srgan().output().unwrap(), Shape::Chw(3, 96, 96));
+        assert_eq!(pix2pix().output().unwrap(), Shape::Chw(3, 256, 256));
+        assert_eq!(stylegan2().output().unwrap(), Shape::Chw(3, 64, 64));
+        assert_eq!(progan().output().unwrap(), Shape::Chw(3, 64, 64));
+    }
+
+    #[test]
+    fn extended_parameter_counts_match_references_within_10pct() {
+        let models = extended_generators();
+        for ((name, expect), model) in EXTENDED_PARAMS.into_iter().zip(&models[4..]) {
+            assert_eq!(model.name, name);
+            let p = model.params().unwrap() as f64;
+            let err = (p - expect).abs() / expect;
+            assert!(
+                err < 0.10,
+                "{name}: {p:.0} params vs reference {expect:.0} ({:.1}% off)",
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn extended_zoo_has_eight_distinct_shape_valid_models() {
+        let models = extended_generators();
+        assert_eq!(models.len(), 8);
+        for m in &models {
+            assert!(m.infos().is_ok(), "{} failed shape check", m.name);
+            assert!(m.params().unwrap() > 0);
+            assert!(m.total_macs().unwrap() > 0);
+        }
+        let mut names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 8, "model names must be distinct");
+    }
+
+    #[test]
+    fn extended_zoo_covers_every_upsampling_idiom() {
+        // tconv decoder (Pix2Pix), pixel shuffle (SRGAN), nearest
+        // upsample + conv (StyleGAN2/ProGAN) — the workload breadth the
+        // GANAX-style generalization is about
+        assert!(pix2pix().tconv_mac_fraction().unwrap() > 0.25);
+        assert!(pix2pix().layers.iter().any(|l| matches!(l, Layer::ConcatChw(_))));
+        assert!(srgan()
+            .layers
+            .iter()
+            .any(|l| matches!(l, Layer::Upsample2d { mode: UpsampleMode::PixelShuffle, .. })));
+        // pixel shuffle leaves nothing for either sparse census
+        assert_eq!(srgan().tconv_mac_fraction().unwrap(), 0.0);
+        assert_eq!(srgan().upsample_conv_mac_fraction().unwrap(), 0.0);
+        // the synthesis stacks put most of their MACs behind nearest
+        // upsampling — the new fold census has real work to do
+        assert!(stylegan2().upsample_conv_mac_fraction().unwrap() > 0.5);
+        assert!(progan().upsample_conv_mac_fraction().unwrap() > 0.5);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use crate::arch::accelerator::Accelerator;
 use crate::arch::activation::ActKind;
 use crate::arch::norm::NormKind;
-use crate::arch::power::{DRAM_ENERGY_PER_BYTE, ECU_ENERGY_PER_OP};
+use crate::arch::power::{DRAM_ENERGY_PER_BYTE, ECU_ENERGY_PER_COPY, ECU_ENERGY_PER_OP};
 use crate::arch::unit::BlockKind;
 use crate::models::Model;
 use crate::sim::mapper::{map_model, LayerJob};
@@ -177,7 +177,12 @@ pub fn simulate_mapped(
         }
 
         // ---- ECU + activation traffic (all layer kinds) --------------
-        e.ecu += job.ecu_ops as f64 * ECU_ENERGY_PER_OP + ecu_w * t_layer;
+        // MAC-class bookkeeping ops and pure data moves (upsample
+        // replication, pixel shuffle, skip concat) are distinct op
+        // classes with distinct energies
+        e.ecu += job.ecu_ops as f64 * ECU_ENERGY_PER_OP
+            + job.copy_ops as f64 * ECU_ENERGY_PER_COPY
+            + ecu_w * t_layer;
         if !job.mvms.is_empty() {
             // input fetch + output write-back for compute layers
             e.dram +=
@@ -230,10 +235,73 @@ mod tests {
     #[test]
     fn all_models_simulate() {
         let acc = chip();
-        for m in zoo::all_generators() {
+        for m in zoo::extended_generators() {
             let r = simulate_default(&m, &acc);
             assert!(r.latency > 0.0 && r.energy.total() > 0.0, "{}", m.name);
             assert!(r.gops() > 0.0 && r.epb() > 0.0);
+            assert!(r.gops().is_finite() && r.epb().is_finite());
+        }
+    }
+
+    #[test]
+    fn upsample_fold_raises_gops_on_synthesis_stacks() {
+        // StyleGAN2/ProGAN put most MACs behind nearest upsampling; the
+        // replication fold must translate into real throughput, exactly as
+        // the zero-column census does for tconv-heavy DCGAN
+        let acc = chip();
+        for m in [zoo::stylegan2(), zoo::progan()] {
+            let dense = simulate(&m, &acc, 1, OptFlags::pipelined_only());
+            let sparse = simulate(
+                &m,
+                &acc,
+                1,
+                OptFlags { sparse: true, pipelined: true, power_gated: false },
+            );
+            assert!(
+                sparse.gops() > 1.2 * dense.gops(),
+                "{}: folded {} vs dense {}",
+                m.name,
+                sparse.gops(),
+                dense.gops()
+            );
+            assert!(sparse.energy.total() < dense.energy.total());
+        }
+    }
+
+    #[test]
+    fn sparse_toggle_is_neutral_for_pixel_shuffle_models() {
+        // SRGAN has no tconv and no nearest upsampling: the sparse flag
+        // must leave its executed work (and thus latency) untouched
+        let acc = chip();
+        let a = simulate(&zoo::srgan(), &acc, 1, OptFlags::pipelined_only());
+        let b = simulate(
+            &zoo::srgan(),
+            &acc,
+            1,
+            OptFlags { sparse: true, pipelined: true, power_gated: false },
+        );
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.energy.total(), b.energy.total());
+    }
+
+    #[test]
+    fn extended_models_respect_power_cap_and_optimization_ordering() {
+        let acc = chip();
+        for m in zoo::extended_generators() {
+            let r = simulate_default(&m, &acc);
+            assert!(
+                r.avg_power() < acc.cfg.params.system.power_cap_w,
+                "{}: {} W",
+                m.name,
+                r.avg_power()
+            );
+            // the combined configuration never loses to the baseline
+            let base = simulate(&m, &acc, 1, OptFlags::baseline());
+            assert!(
+                r.energy.total() < base.energy.total(),
+                "{}: optimizations must reduce energy",
+                m.name
+            );
         }
     }
 
@@ -421,6 +489,39 @@ mod invariant_tests {
             let exec: usize = jobs.iter().flat_map(|j| &j.mvms).map(|x| x.exec_macs).sum();
             let census = TconvSpec::new(k, s, p, h, h).census();
             assert_eq!(exec, cin * cout * census.sparse_macs);
+        });
+    }
+
+    /// A model with one nearest upsample followed by one stride-1 conv.
+    fn single_upconv(cin: usize, cout: usize, k: usize, s: usize, p: usize, h: usize) -> Model {
+        use crate::models::layer::UpsampleMode;
+        Model::new(
+            "single-upconv",
+            Shape::Chw(cin, h, h),
+            vec![
+                Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: s },
+                Layer::Conv2d { in_ch: cin, out_ch: cout, k, s: 1, p, bias: false },
+            ],
+        )
+    }
+
+    #[test]
+    fn executed_macs_match_upconv_census_exactly() {
+        use crate::sparse::UpconvSpec;
+        check("exec macs == cin*cout*upconv census", 32, |g| {
+            let cin = g.usize_in(1, 8);
+            let cout = g.usize_in(1, 8);
+            let k = g.usize_in(2, 5);
+            let s = g.usize_in(2, 3);
+            let p = g.usize_in(0, (k - 1) / 2);
+            let h = g.usize_in(2, 8);
+            let m = single_upconv(cin, cout, k, s, p, h);
+            let jobs = map_model(&m, 1, &OptFlags::all());
+            let exec: usize = jobs.iter().flat_map(|j| &j.mvms).map(|x| x.exec_macs).sum();
+            let census = UpconvSpec::new(k, s, p, h, h).census();
+            assert_eq!(exec, cin * cout * census.sparse_macs);
+            // and the fold is a strict reduction whenever s ≥ 2
+            assert!(census.reduction() > 1.0, "k={k} s={s} p={p} h={h}");
         });
     }
 

@@ -4,10 +4,10 @@
 use crate::arch::activation::ActKind;
 use crate::arch::norm::NormKind;
 use crate::arch::unit::BlockKind;
-use crate::models::layer::{Layer, Shape};
+use crate::models::layer::{Layer, Shape, UpsampleMode};
 use crate::models::Model;
 use crate::sim::options::OptFlags;
-use crate::sparse::TconvSpec;
+use crate::sparse::{TconvSpec, UpconvSpec};
 
 /// One matrix-vector-multiply workload mapped onto a block.
 #[derive(Debug, Clone)]
@@ -47,6 +47,10 @@ pub struct LayerJob {
     pub in_elements: usize,
     /// Digital ECU ops (sparse bookkeeping, IN statistics, residual adds).
     pub ecu_ops: usize,
+    /// Pure data-movement ECU elements (nearest-neighbor replication,
+    /// pixel-shuffle rearrangement, skip-concat copies) — charged at the
+    /// cheaper [`crate::arch::power::ECU_ENERGY_PER_COPY`] rate.
+    pub copy_ops: usize,
 }
 
 /// Lower a model into per-layer jobs. Fusion lookahead: a Norm/Act layer
@@ -54,12 +58,22 @@ pub struct LayerJob {
 /// chain (this is what block-level pipelining exploits); when pipelining is
 /// off the engine still sees them in the chain but charges separate-pass
 /// costs.
+///
+/// Sparse lowering covers **both** structured-redundancy classes: a
+/// transposed conv splits into per-phase reduced-kernel jobs via the
+/// zero-column census ([`TconvSpec`]), and a stride-1 conv immediately
+/// following a nearest-neighbor upsample splits into per-phase *folded*
+/// kernel jobs via the replication census ([`UpconvSpec`]).
 pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> {
     let infos = model.infos().expect("model must be shape-valid");
     let mut jobs: Vec<LayerJob> = Vec::new();
+    // set by an Upsample2d(Nearest) layer for the immediately following
+    // layer: (layer index, scale, pre-upsample h, pre-upsample w)
+    let mut pending_upsample: Option<(usize, usize, usize, usize)> = None;
     for info in &infos {
         let in_el = info.in_shape.elements();
         let out_el = info.out_shape.elements();
+        let upsample_ctx = pending_upsample.take();
         match &info.layer {
             Layer::Dense { in_f, out_f, .. } => {
                 let mvm = MvmJob {
@@ -80,33 +94,61 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     out_elements: out_el * batch,
                     in_elements: in_el * batch,
                     ecu_ops: 0,
+                    copy_ops: 0,
                 });
             }
-            Layer::Conv2d { in_ch, out_ch, k, .. } => {
+            Layer::Conv2d { in_ch, out_ch, k, s, p, .. } => {
                 let (ho, wo) = match info.out_shape {
                     Shape::Chw(_, h, w) => (h, w),
                     _ => unreachable!(),
                 };
-                let red = in_ch * k * k;
-                let mvm = MvmJob {
-                    block: BlockKind::Conv,
-                    out_rows: *out_ch,
-                    reduction: red,
-                    symbols: ho * wo * batch,
-                    exec_macs: out_ch * red * ho * wo * batch,
-                    weight_bytes: out_ch * red,
-                };
+                let mut mvms = Vec::new();
+                let mut ecu_ops = ho * wo * batch; // im2col gather bookkeeping
+                let fold = upsample_ctx.filter(|&(idx, scale, _, _)| {
+                    opts.sparse && *s == 1 && scale > 1 && idx + 1 == info.index
+                });
+                if let Some((_, scale, h, w)) = fold {
+                    // replication fold (§upconv): one MVM job per phase
+                    // class with that class's folded kernel width —
+                    // structurally identical to the tconv lowering below
+                    let spec = UpconvSpec::new(*k, scale, *p, h, w);
+                    let census = spec.census();
+                    for ph in census.per_phase.iter().filter(|ph| ph.taps_total > 0) {
+                        let red = in_ch * ph.taps_max.max(1);
+                        mvms.push(MvmJob {
+                            block: BlockKind::Conv,
+                            out_rows: *out_ch,
+                            reduction: red,
+                            symbols: ph.positions * batch,
+                            // exact executed MACs (edge positions fold fewer)
+                            exec_macs: out_ch * in_ch * ph.taps_total * batch,
+                            weight_bytes: out_ch * red,
+                        });
+                    }
+                    // folded-kernel construction bookkeeping in the ECU
+                    ecu_ops += census.per_phase.len() * batch;
+                } else {
+                    let red = in_ch * k * k;
+                    mvms.push(MvmJob {
+                        block: BlockKind::Conv,
+                        out_rows: *out_ch,
+                        reduction: red,
+                        symbols: ho * wo * batch,
+                        exec_macs: out_ch * red * ho * wo * batch,
+                        weight_bytes: out_ch * red,
+                    });
+                }
                 jobs.push(LayerJob {
                     index: info.index,
                     name: format!("conv{}x{}k{}", in_ch, out_ch, k),
-                    mvms: vec![mvm],
+                    mvms,
                     dense_macs: info.macs * batch,
                     norm: NormKind::None,
                     act: ActKind::None,
                     out_elements: out_el * batch,
                     in_elements: in_el * batch,
-                    // im2col gather bookkeeping
-                    ecu_ops: ho * wo * batch,
+                    ecu_ops,
+                    copy_ops: 0,
                 });
             }
             Layer::ConvT2d { in_ch, out_ch, k, s, p, .. } => {
@@ -159,6 +201,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     out_elements: out_el * batch,
                     in_elements: in_el * batch,
                     ecu_ops,
+                    copy_ops: 0,
                 });
             }
             Layer::Norm(kind) => {
@@ -183,6 +226,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     out_elements: out_el * batch,
                     in_elements: in_el * batch,
                     ecu_ops: if *kind == NormKind::Instance { 2 * out_el * batch } else { 0 },
+                    copy_ops: 0,
                 });
             }
             Layer::Act(kind) => {
@@ -202,6 +246,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     out_elements: out_el * batch,
                     in_elements: in_el * batch,
                     ecu_ops: 0,
+                    copy_ops: 0,
                 });
             }
             Layer::ResidualAdd { .. } => {
@@ -216,6 +261,47 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     in_elements: in_el * batch,
                     // the skip-add happens digitally in the ECU
                     ecu_ops: out_el * batch,
+                    copy_ops: 0,
+                });
+            }
+            Layer::Upsample2d { mode, scale } => {
+                // arm the fold for an immediately following stride-1 conv
+                if *mode == UpsampleMode::Nearest {
+                    if let Shape::Chw(_, h, w) = info.in_shape {
+                        pending_upsample = Some((info.index, *scale, h, w));
+                    }
+                }
+                let name = match mode {
+                    UpsampleMode::Nearest => format!("upsample{scale}x"),
+                    UpsampleMode::PixelShuffle => format!("pixshuf{scale}x"),
+                };
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name,
+                    mvms: vec![],
+                    dense_macs: 0,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops: 0,
+                    // replication / depth-to-space writes in the ECU
+                    copy_ops: out_el * batch,
+                });
+            }
+            Layer::ConcatChw(_) => {
+                jobs.push(LayerJob {
+                    index: info.index,
+                    name: "concat".into(),
+                    mvms: vec![],
+                    dense_macs: 0,
+                    norm: NormKind::None,
+                    act: ActKind::None,
+                    out_elements: out_el * batch,
+                    in_elements: in_el * batch,
+                    ecu_ops: 0,
+                    // the skip tensor is copied alongside the trunk
+                    copy_ops: out_el * batch,
                 });
             }
             // pure bookkeeping
@@ -230,6 +316,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     out_elements: out_el * batch,
                     in_elements: in_el * batch,
                     ecu_ops: 0,
+                    copy_ops: 0,
                 });
             }
         }
@@ -298,5 +385,151 @@ mod tests {
             .collect();
         assert!(dense_blocks.contains(&BlockKind::Dense));
         assert!(dense_blocks.contains(&BlockKind::Conv));
+    }
+
+    #[test]
+    fn extended_zoo_mapping_invariants() {
+        // every compute layer lowers to ≥ 1 MVM job whose executed MACs
+        // never exceed the dense workload count, for every model and both
+        // sparse settings
+        for model in zoo::extended_generators() {
+            for opts in [OptFlags::baseline(), OptFlags::all()] {
+                let jobs = map_model(&model, 1, &opts);
+                let infos = model.infos().unwrap();
+                assert_eq!(
+                    jobs.is_empty(),
+                    infos.is_empty(),
+                    "{}: a non-empty model must lower to jobs",
+                    model.name
+                );
+                for job in &jobs {
+                    let exec: usize = job.mvms.iter().map(|m| m.exec_macs).sum();
+                    assert!(
+                        exec <= job.dense_macs,
+                        "{} layer {} ({}): exec {exec} > dense {}",
+                        model.name,
+                        job.index,
+                        job.name,
+                        job.dense_macs
+                    );
+                    for m in &job.mvms {
+                        assert!(m.out_rows > 0 && m.reduction > 0 && m.symbols > 0);
+                        assert!(m.exec_macs > 0, "{} {}: empty MVM job", model.name, job.name);
+                    }
+                    // compute layers lower to ≥ 1 MVM job; everything else
+                    // (norm/act/residual/upsample/concat/reshape) to none
+                    let compute = matches!(
+                        infos[job.index].layer,
+                        Layer::Dense { .. } | Layer::Conv2d { .. } | Layer::ConvT2d { .. }
+                    );
+                    assert_eq!(
+                        compute,
+                        !job.mvms.is_empty(),
+                        "{} layer {} ({}): compute ⇔ MVM jobs",
+                        model.name,
+                        job.index,
+                        job.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn upsample_conv_folds_into_phase_jobs() {
+        // StyleGAN2/ProGAN: sparse lowering must split upsample-adjacent
+        // convs into phase jobs and strictly cut executed MACs
+        for model in [zoo::stylegan2(), zoo::progan()] {
+            let dense_jobs = map_model(&model, 1, &OptFlags::baseline());
+            let sparse_jobs = map_model(&model, 1, &OptFlags::all());
+            let mvms = |jobs: &[LayerJob]| -> usize { jobs.iter().map(|j| j.mvms.len()).sum() };
+            assert!(
+                mvms(&sparse_jobs) > mvms(&dense_jobs),
+                "{}: folding must create per-phase jobs",
+                model.name
+            );
+            let exec = |jobs: &[LayerJob]| -> usize {
+                jobs.iter().flat_map(|j| &j.mvms).map(|m| m.exec_macs).sum()
+            };
+            let dense = |jobs: &[LayerJob]| -> usize { jobs.iter().map(|j| j.dense_macs).sum() };
+            assert!(
+                exec(&sparse_jobs) < exec(&dense_jobs),
+                "{}: fold must cut executed MACs",
+                model.name
+            );
+            assert_eq!(
+                dense(&dense_jobs),
+                dense(&sparse_jobs),
+                "{}: workload op count is invariant",
+                model.name
+            );
+        }
+    }
+
+    #[test]
+    fn pixel_shuffle_models_see_no_fold() {
+        // SRGAN upsamples by pixel shuffle — already dense-efficient, so
+        // the sparse toggle must not change its executed MACs
+        let exec = |opts: &OptFlags| -> usize {
+            map_model(&zoo::srgan(), 1, opts)
+                .iter()
+                .flat_map(|j| &j.mvms)
+                .map(|m| m.exec_macs)
+                .sum()
+        };
+        assert_eq!(exec(&OptFlags::baseline()), exec(&OptFlags::all()));
+    }
+
+    #[test]
+    fn upsample_and_concat_lower_to_copy_ops() {
+        let jobs = map_model(&zoo::pix2pix(), 1, &OptFlags::all());
+        let concat_copies: usize = jobs
+            .iter()
+            .filter(|j| j.name == "concat")
+            .map(|j| j.copy_ops)
+            .sum();
+        assert!(concat_copies > 0, "skip concats must charge data movement");
+        let jobs = map_model(&zoo::stylegan2(), 1, &OptFlags::all());
+        let upsample_copies: usize = jobs
+            .iter()
+            .filter(|j| j.name.starts_with("upsample"))
+            .map(|j| j.copy_ops)
+            .sum();
+        assert!(upsample_copies > 0, "replication must charge data movement");
+        // copy layers carry no MVM work and no MAC-class ECU ops
+        for j in jobs.iter().filter(|j| j.copy_ops > 0) {
+            assert!(j.mvms.is_empty() && j.ecu_ops == 0 && j.dense_macs == 0);
+        }
+    }
+
+    #[test]
+    fn fold_only_applies_to_adjacent_stride1_convs() {
+        // upsample followed by a *stride-2* conv must not fold (the
+        // replication structure does not survive striding in general)
+        let m = Model::new(
+            "strided",
+            Shape::Chw(4, 8, 8),
+            vec![
+                Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: 2 },
+                Layer::Conv2d { in_ch: 4, out_ch: 8, k: 4, s: 2, p: 1, bias: false },
+            ],
+        );
+        let jobs = map_model(&m, 1, &OptFlags::all());
+        let conv_job = jobs.iter().find(|j| !j.mvms.is_empty()).unwrap();
+        assert_eq!(conv_job.mvms.len(), 1, "strided conv must stay a single dense job");
+        // and an upsample separated from the conv by another layer must
+        // not fold either
+        let m2 = Model::new(
+            "separated",
+            Shape::Chw(4, 8, 8),
+            vec![
+                Layer::Upsample2d { mode: UpsampleMode::Nearest, scale: 2 },
+                Layer::Act(ActKind::Relu),
+                Layer::Conv2d { in_ch: 4, out_ch: 8, k: 3, s: 1, p: 1, bias: false },
+            ],
+        );
+        let jobs = map_model(&m2, 1, &OptFlags::all());
+        let conv_job = jobs.iter().rev().find(|j| !j.mvms.is_empty()).unwrap();
+        assert_eq!(conv_job.mvms.len(), 1, "non-adjacent conv must stay dense");
     }
 }

@@ -1,29 +1,43 @@
-//! The paper's **sparse computation dataflow** for transposed convolutions
-//! (§III.C.1, Fig. 9).
+//! The paper's **sparse computation dataflow** (§III.C.1, Fig. 9) — and
+//! its generalization to the extended zoo's upsampling idiom.
 //!
-//! A transposed convolution is classically executed by zero-inserting the
-//! input (stride-1 lattice → stride-s lattice), padding, and running a
-//! normal convolution — which feeds the compute array mostly zeros. The
-//! paper's optimization: in the flattened (im2col) view, identify the
-//! all-zero columns of the input patch matrix and delete them together with
-//! the corresponding kernel elements, leaving a *reduced dot product* per
-//! output element; the ECU reintroduces the removed columns' bookkeeping to
-//! keep output addressing correct.
+//! Two structured-redundancy classes, one lowering scheme:
 //!
-//! The crucial structure (exploited by both this module and the L1 Pallas
-//! kernel): output positions that share the same **phase**
-//! `(oy mod s, ox mod s)` share an identical zero pattern, so there are
-//! only `s²` distinct reduced kernels — the dataflow never inspects data,
-//! it is fully static.
+//! **Transposed convolutions** ([`tconv`]): classically executed by
+//! zero-inserting the input (stride-1 lattice → stride-s lattice), padding,
+//! and running a normal convolution — which feeds the compute array mostly
+//! zeros. The paper's optimization: in the flattened (im2col) view,
+//! identify the all-zero columns of the input patch matrix and delete them
+//! together with the corresponding kernel elements, leaving a *reduced dot
+//! product* per output element; the ECU reintroduces the removed columns'
+//! bookkeeping to keep output addressing correct.
+//!
+//! **Nearest-neighbor upsample + conv** ([`upconv`]): the StyleGAN2/ProGAN
+//! generator idiom replicates every input element into an `s×s` block
+//! before convolving, so a conv window reads each input element up to `k²`
+//! times. The redundant taps *fold* — their kernel weights pre-sum into
+//! one coefficient per distinct input element — which is the mirror image
+//! of zero-column elimination: tconv deletes taps that are provably zero,
+//! upconv merges taps that are provably equal.
+//!
+//! The crucial shared structure (exploited by this module, the
+//! [`crate::sim::mapper`], and the L1 Pallas kernel): output positions
+//! with the same **phase** (`oy mod s, ox mod s`, padding-offset for
+//! upconv) share an identical pattern, so there are only `s²` distinct
+//! reduced kernels — both dataflows never inspect data, they are fully
+//! static. Both censuses report through the same [`Census`]/[`PhaseInfo`]
+//! shapes, so the mapper lowers both classes identically.
 //!
 //! This module provides:
-//! - [`tconv::TconvSpec`] — tap enumeration + the static zero-column census
-//!   that feeds the simulator's op counts,
-//! - [`tconv::tconv2d_dense`] / [`tconv::tconv2d_sparse`] — functional
-//!   references (zero-insertion path vs reduced-dot-product path) proven
-//!   equal by property tests, mirroring the python `ref.py` ⇄ Pallas-kernel
-//!   pair at L1.
+//! - [`tconv::TconvSpec`] / [`upconv::UpconvSpec`] — tap enumeration and
+//!   the static censuses that feed the simulator's op counts,
+//! - [`tconv::tconv2d_dense`] ⇄ [`tconv::tconv2d_sparse`] and
+//!   [`upconv::upconv2d_dense`] ⇄ [`upconv::upconv2d_folded`] — functional
+//!   reference pairs proven equal by property tests, mirroring the python
+//!   `ref.py` ⇄ Pallas-kernel pair at L1.
 
 pub mod tconv;
+pub mod upconv;
 
-pub use tconv::{tconv2d_dense, tconv2d_sparse, Census, TconvSpec};
+pub use tconv::{tconv2d_dense, tconv2d_sparse, Census, PhaseInfo, TconvSpec};
+pub use upconv::{upconv2d_dense, upconv2d_folded, UpconvSpec};

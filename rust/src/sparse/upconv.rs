@@ -1,0 +1,472 @@
+//! Nearest-neighbor-upsample + convolution fold analysis and functional
+//! references — the second structured-redundancy class in the zoo.
+//!
+//! A nearest-neighbor ×s upsample followed by a stride-1 conv reads every
+//! input element up to `k²` times: inside one conv window, all upsampled
+//! coordinates that fall in the same `s×s` replication block carry the
+//! *same* input value, so their kernel taps can be **folded** (weights
+//! pre-summed) into one multiply per distinct input element. Exactly like
+//! the transposed-conv zero-column census ([`super::tconv`]), the fold
+//! pattern is fully static and depends only on the output position's
+//! **phase** `((oy − p) mod s, (ox − p) mod s)` — there are at most `s²`
+//! distinct folded kernels, and the ECU re-expands addressing digitally.
+//!
+//! Interior reduction: a `k×k` window spans `⌊(r + k − 1)/s⌋ + 1` distinct
+//! input indices per axis (`r` the axis phase), so e.g. `k=3, s=2` folds
+//! 9 taps into 4 — a 2.25× op reduction before edge trimming.
+
+use super::tconv::{Census, PhaseInfo};
+
+/// Static description of one nearest-neighbor ×s upsample followed by a
+/// stride-1 `k×k` conv with padding `p` (channels factor out — every
+/// `(cin, cout)` pair sees the same spatial pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UpconvSpec {
+    /// Square conv kernel size.
+    pub k: usize,
+    /// Upsample factor (replication block edge).
+    pub s: usize,
+    /// Conv padding (on the upsampled image).
+    pub p: usize,
+    /// Input spatial dims **before** upsampling.
+    pub h: usize,
+    pub w: usize,
+}
+
+impl UpconvSpec {
+    pub fn new(k: usize, s: usize, p: usize, h: usize, w: usize) -> Self {
+        assert!(k >= 1 && s >= 1 && h >= 1 && w >= 1);
+        assert!(
+            h * s + 2 * p >= k && w * s + 2 * p >= k,
+            "degenerate upsample+conv: k={k} s={s} p={p} on {h}x{w}"
+        );
+        UpconvSpec { k, s, p, h, w }
+    }
+
+    /// Upsampled spatial dims the conv slides over.
+    pub fn up_dims(&self) -> (usize, usize) {
+        (self.h * self.s, self.w * self.s)
+    }
+
+    /// Conv output dims (stride 1): `h·s + 2p − k + 1`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (
+            self.h * self.s + 2 * self.p - self.k + 1,
+            self.w * self.s + 2 * self.p - self.k + 1,
+        )
+    }
+
+    /// Phase class of an output position: positions congruent modulo the
+    /// upsample factor (offset by the padding) share one fold pattern.
+    pub fn phase_of(&self, oy: usize, ox: usize) -> (usize, usize) {
+        let ph = |o: usize| {
+            (o as isize - self.p as isize).rem_euclid(self.s as isize) as usize
+        };
+        (ph(oy), ph(ox))
+    }
+
+    /// Axis fold groups for output coordinate `o`: each entry is a
+    /// distinct input index paired with the kernel indices whose taps land
+    /// in its replication block (out-of-bounds taps — the padding — are
+    /// absent). Groups are contiguous because the window is contiguous.
+    fn axis_groups(&self, o: usize, extent: usize) -> Vec<(usize, Vec<usize>)> {
+        let mut out: Vec<(usize, Vec<usize>)> = Vec::new();
+        for kk in 0..self.k {
+            let u = o as isize + kk as isize - self.p as isize;
+            if u < 0 || u >= (extent * self.s) as isize {
+                continue;
+            }
+            let i = u as usize / self.s;
+            if let Some(last) = out.last_mut() {
+                if last.0 == i {
+                    last.1.push(kk);
+                    continue;
+                }
+            }
+            out.push((i, vec![kk]));
+        }
+        out
+    }
+
+    /// Number of distinct input elements (= folded MACs) an axis
+    /// contributes at output coordinate `o`.
+    fn axis_fold_count(&self, o: usize, extent: usize) -> usize {
+        let mut count = 0usize;
+        let mut last: Option<usize> = None;
+        for kk in 0..self.k {
+            let u = o as isize + kk as isize - self.p as isize;
+            if u < 0 || u >= (extent * self.s) as isize {
+                continue;
+            }
+            let i = u as usize / self.s;
+            if last != Some(i) {
+                count += 1;
+                last = Some(i);
+            }
+        }
+        count
+    }
+
+    /// Folded taps at one output position: distinct input elements and,
+    /// for each, the kernel taps whose weights fold (sum) onto it.
+    pub fn folded_taps(
+        &self,
+        oy: usize,
+        ox: usize,
+    ) -> Vec<((usize, usize), Vec<(usize, usize)>)> {
+        let ys = self.axis_groups(oy, self.h);
+        let xs = self.axis_groups(ox, self.w);
+        let mut out = Vec::with_capacity(ys.len() * xs.len());
+        for (iy, kys) in &ys {
+            for (ix, kxs) in &xs {
+                let mut ks = Vec::with_capacity(kys.len() * kxs.len());
+                for &ky in kys {
+                    for &kx in kxs {
+                        ks.push((ky, kx));
+                    }
+                }
+                out.push(((*iy, *ix), ks));
+            }
+        }
+        out
+    }
+
+    /// Static fold census over all output positions (spatial level —
+    /// multiply by `cin·cout` for layer MACs). `dense_macs` is the plain
+    /// conv over the materialized upsampled image; `sparse_macs` counts
+    /// one MAC per *distinct* input element under each window. Reuses the
+    /// tconv [`Census`]/[`PhaseInfo`] shapes so the mapper lowers both
+    /// redundancy classes identically.
+    pub fn census(&self) -> Census {
+        let (ho, wo) = self.out_dims();
+        let dense = ho * wo * self.k * self.k;
+        let mut sparse = 0usize;
+        let mut taps_per_phase = vec![vec![0usize; self.s]; self.s];
+        let mut seen = vec![vec![false; self.s]; self.s];
+        let mut positions = vec![vec![0usize; self.s]; self.s];
+        let mut taps_total = vec![vec![0usize; self.s]; self.s];
+        let mut taps_max = vec![vec![0usize; self.s]; self.s];
+        // x-axis fold counts depend only on ox — compute the row once
+        let xs_counts: Vec<usize> =
+            (0..wo).map(|ox| self.axis_fold_count(ox, self.w)).collect();
+        for oy in 0..ho {
+            let ys = self.axis_fold_count(oy, self.h);
+            for (ox, &xc) in xs_counts.iter().enumerate() {
+                let t = ys * xc;
+                sparse += t;
+                let (py, px) = self.phase_of(oy, ox);
+                positions[py][px] += 1;
+                taps_total[py][px] += t;
+                taps_max[py][px] = taps_max[py][px].max(t);
+                // record an interior representative per phase (positions
+                // far from borders have the canonical count)
+                if oy >= self.k && ox >= self.k && oy + self.k < ho && ox + self.k < wo {
+                    taps_per_phase[py][px] = t;
+                    seen[py][px] = true;
+                }
+            }
+        }
+        let mut per_phase = Vec::new();
+        for py in 0..self.s {
+            for px in 0..self.s {
+                if positions[py][px] > 0 {
+                    // small maps may have no interior position at all; the
+                    // canonical (unclipped) fold count per phase is then
+                    // the observed maximum, not the 0 the interior scan
+                    // left behind
+                    if !seen[py][px] {
+                        taps_per_phase[py][px] = taps_max[py][px];
+                    }
+                    per_phase.push(PhaseInfo {
+                        py,
+                        px,
+                        positions: positions[py][px],
+                        taps_total: taps_total[py][px],
+                        taps_max: taps_max[py][px],
+                    });
+                }
+            }
+        }
+        // distinct phase classes actually observed (≤ s²) — per the Census
+        // field contract, independent of whether an interior exists
+        let phases = per_phase.len().max(1);
+        Census { dense_macs: dense, sparse_macs: sparse, phases, taps_per_phase, per_phase }
+    }
+}
+
+/// Dense functional reference: materialize the nearest-neighbor-upsampled
+/// image and run the stride-1 cross-correlation over it (PyTorch `Conv2d`
+/// orientation — no kernel flip). `input` is `h×w` row-major, `kernel`
+/// `k×k` row-major; returns `ho×wo` row-major.
+pub fn upconv2d_dense(spec: &UpconvSpec, input: &[f32], kernel: &[f32]) -> Vec<f32> {
+    assert_eq!(input.len(), spec.h * spec.w);
+    assert_eq!(kernel.len(), spec.k * spec.k);
+    let (uh, uw) = spec.up_dims();
+    let mut up = vec![0f32; uh * uw];
+    for uy in 0..uh {
+        for ux in 0..uw {
+            up[uy * uw + ux] = input[(uy / spec.s) * spec.w + ux / spec.s];
+        }
+    }
+    let (ho, wo) = spec.out_dims();
+    let mut out = vec![0f32; ho * wo];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let mut acc = 0f32;
+            for ky in 0..spec.k {
+                let uy = oy as isize + ky as isize - spec.p as isize;
+                if uy < 0 || uy >= uh as isize {
+                    continue;
+                }
+                for kx in 0..spec.k {
+                    let ux = ox as isize + kx as isize - spec.p as isize;
+                    if ux < 0 || ux >= uw as isize {
+                        continue;
+                    }
+                    acc += up[uy as usize * uw + ux as usize] * kernel[ky * spec.k + kx];
+                }
+            }
+            out[oy * wo + ox] = acc;
+        }
+    }
+    out
+}
+
+/// Folded functional reference: one multiply per *distinct* input element
+/// under each window, with the kernel weights pre-summed per fold group —
+/// the reduced dot product the census counts. Equals [`upconv2d_dense`]
+/// up to float reassociation (the fold regroups exact duplicates, so the
+/// only difference is summation order).
+///
+/// Perf note (mirrors the tconv `§Perf` lesson): the `s²` folded kernels
+/// are built **once per call** — positions sharing a phase share their
+/// fold pattern, so interior positions execute exactly the census's
+/// reduced MAC count with no per-position regrouping or re-summing.
+/// Border positions (clipped windows) fall back to the exact
+/// per-position fold.
+pub fn upconv2d_folded(spec: &UpconvSpec, input: &[f32], kernel: &[f32]) -> Vec<f32> {
+    assert_eq!(input.len(), spec.h * spec.w);
+    assert_eq!(kernel.len(), spec.k * spec.k);
+    let (ho, wo) = spec.out_dims();
+    let s = spec.s;
+    // Unclipped axis fold groups per phase r: kernel offsets kk fold onto
+    // input offset d = (r + kk) / s relative to the window's base index.
+    let groups: Vec<Vec<(usize, Vec<usize>)>> = (0..s)
+        .map(|r| {
+            let mut g: Vec<(usize, Vec<usize>)> = Vec::new();
+            for kk in 0..spec.k {
+                let d = (r + kk) / s;
+                if let Some(last) = g.last_mut() {
+                    if last.0 == d {
+                        last.1.push(kk);
+                        continue;
+                    }
+                }
+                g.push((d, vec![kk]));
+            }
+            g
+        })
+        .collect();
+    // The s² folded 2-D kernels: (dy, dx, folded weight) per phase pair.
+    let folded: Vec<Vec<Vec<(usize, usize, f32)>>> = (0..s)
+        .map(|ry| {
+            (0..s)
+                .map(|rx| {
+                    let mut entries = Vec::new();
+                    for (dy, kys) in &groups[ry] {
+                        for (dx, kxs) in &groups[rx] {
+                            let mut wf = 0f32;
+                            for &ky in kys {
+                                for &kx in kxs {
+                                    wf += kernel[ky * spec.k + kx];
+                                }
+                            }
+                            entries.push((*dy, *dx, wf));
+                        }
+                    }
+                    entries
+                })
+                .collect()
+        })
+        .collect();
+    // A coordinate is "safe" when its window needs no clipping on that
+    // axis: o ≥ p and o − p + k ≤ extent·s.
+    let x_safe: Vec<bool> =
+        (0..wo).map(|ox| ox >= spec.p && ox - spec.p + spec.k <= spec.w * s).collect();
+    let mut out = vec![0f32; ho * wo];
+    for oy in 0..ho {
+        let y_safe = oy >= spec.p && oy - spec.p + spec.k <= spec.h * s;
+        let orow = oy * wo;
+        for ox in 0..wo {
+            let mut acc = 0f32;
+            if y_safe && x_safe[ox] {
+                let (ry, qy) = ((oy - spec.p) % s, (oy - spec.p) / s);
+                let (rx, qx) = ((ox - spec.p) % s, (ox - spec.p) / s);
+                for &(dy, dx, wf) in &folded[ry][rx] {
+                    acc += input[(qy + dy) * spec.w + qx + dx] * wf;
+                }
+            } else {
+                // clipped border: exact per-position fold
+                for ((iy, ix), ks) in spec.folded_taps(oy, ox) {
+                    let wsum: f32 =
+                        ks.iter().map(|&(ky, kx)| kernel[ky * spec.k + kx]).sum();
+                    acc += input[iy * spec.w + ix] * wsum;
+                }
+            }
+            out[orow + ox] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn interior_fold_is_k_over_ceil_squared() {
+        // k=3 conv over a 2x-upsampled image: each axis spans 2 distinct
+        // input indices regardless of phase, so 9 taps fold into 4
+        let spec = UpconvSpec::new(3, 2, 1, 16, 16);
+        let c = spec.census();
+        for row in &c.taps_per_phase {
+            for &t in row {
+                assert_eq!(t, 4, "interior folded taps must be 2·2");
+            }
+        }
+        assert_eq!(c.phases, 4);
+        // the acceptance bar: reduction strictly above 1 on interior
+        // positions (and globally)
+        assert!(c.reduction() > 2.0, "r={}", c.reduction());
+    }
+
+    #[test]
+    fn stride1_upsample_is_identity_fold() {
+        // s=1: nearest upsampling is a no-op, so folding degenerates to the
+        // plain conv — only padding-edge taps are trimmed
+        let spec = UpconvSpec::new(3, 1, 1, 8, 8);
+        let c = spec.census();
+        assert!(c.sparse_macs < c.dense_macs, "padding trims edges");
+        for row in &c.taps_per_phase {
+            for &t in row {
+                assert_eq!(t, 9, "interior positions keep all k² taps at s=1");
+            }
+        }
+    }
+
+    #[test]
+    fn folded_equals_dense_functionally() {
+        check("upconv folded == dense", 64, |g| {
+            let k = g.usize_in(1, 5);
+            let s = g.usize_in(1, 3);
+            let p = g.usize_in(0, (k - 1) / 2 + 1);
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 6);
+            if h * s + 2 * p < k || w * s + 2 * p < k {
+                return; // degenerate geometry — rejected by the ctor
+            }
+            let spec = UpconvSpec::new(k, s, p, h, w);
+            let input = g.vec_f32(h * w, -1.0, 1.0);
+            let kernel = g.vec_f32(k * k, -1.0, 1.0);
+            let dense = upconv2d_dense(&spec, &input, &kernel);
+            let folded = upconv2d_folded(&spec, &input, &kernel);
+            assert_eq!(dense.len(), folded.len());
+            for (i, (d, f)) in dense.iter().zip(&folded).enumerate() {
+                assert!(
+                    (d - f).abs() <= 1e-4,
+                    "k={k} s={s} p={p} {h}x{w} out[{i}]: dense={d} folded={f}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn census_counts_match_fold_enumeration() {
+        check("census == Σ folded taps", 32, |g| {
+            let k = g.usize_in(1, 5);
+            let s = g.usize_in(1, 3);
+            let p = g.usize_in(0, (k - 1) / 2 + 1);
+            let h = g.usize_in(2, 8);
+            let w = g.usize_in(2, 8);
+            if h * s + 2 * p < k || w * s + 2 * p < k {
+                return;
+            }
+            let spec = UpconvSpec::new(k, s, p, h, w);
+            let (ho, wo) = spec.out_dims();
+            let total: usize = (0..ho)
+                .flat_map(|oy| (0..wo).map(move |ox| (oy, ox)))
+                .map(|(oy, ox)| spec.folded_taps(oy, ox).len())
+                .sum();
+            let c = spec.census();
+            assert_eq!(c.sparse_macs, total);
+            // per-phase totals partition the global count
+            let per_phase: usize = c.per_phase.iter().map(|p| p.taps_total).sum();
+            assert_eq!(per_phase, total);
+            let positions: usize = c.per_phase.iter().map(|p| p.positions).sum();
+            assert_eq!(positions, ho * wo);
+        });
+    }
+
+    #[test]
+    fn fold_groups_cover_every_kernel_tap_exactly_once() {
+        // no tap is lost or double-counted by the fold — Σ group sizes
+        // equals the number of in-bounds dense taps
+        let spec = UpconvSpec::new(5, 2, 2, 4, 4);
+        let (ho, wo) = spec.out_dims();
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let groups = spec.folded_taps(oy, ox);
+                let mut seen = std::collections::HashSet::new();
+                for ((iy, ix), ks) in &groups {
+                    assert!(*iy < 4 && *ix < 4, "fold points at a real input element");
+                    assert!(!ks.is_empty());
+                    for &t in ks {
+                        assert!(seen.insert(t), "tap {t:?} folded twice at ({oy},{ox})");
+                    }
+                }
+                // every in-bounds dense tap appears in exactly one group
+                let dense_taps = (0..5)
+                    .flat_map(|ky| (0..5).map(move |kx| (ky, kx)))
+                    .filter(|&(ky, kx)| {
+                        let uy = oy as isize + ky as isize - 2;
+                        let ux = ox as isize + kx as isize - 2;
+                        uy >= 0 && ux >= 0 && uy < 8 && ux < 8
+                    })
+                    .count();
+                assert_eq!(seen.len(), dense_taps);
+            }
+        }
+    }
+
+    #[test]
+    fn census_is_truthful_without_interior_positions() {
+        // 2x2 input, k3 s2 p1 → 4x4 output: no position satisfies the
+        // interior predicate, yet phase accounting must stay correct
+        let spec = UpconvSpec::new(3, 2, 1, 2, 2);
+        let c = spec.census();
+        assert_eq!(c.phases, 4, "all four phase classes are observed");
+        assert_eq!(c.per_phase.len(), 4);
+        let per_phase_total: usize = c.per_phase.iter().map(|p| p.taps_total).sum();
+        assert_eq!(per_phase_total, c.sparse_macs);
+        for ph in &c.per_phase {
+            assert!(ph.taps_max >= 1);
+            assert_eq!(
+                c.taps_per_phase[ph.py][ph.px], ph.taps_max,
+                "canonical per-phase count backfills from the observed max"
+            );
+        }
+    }
+
+    #[test]
+    fn stylegan2_block_census_reduces_interior_by_2_25x() {
+        // the zoo's canonical upsample+conv shape: 2x nearest then k3 p1
+        let spec = UpconvSpec::new(3, 2, 1, 8, 8);
+        assert_eq!(spec.up_dims(), (16, 16));
+        assert_eq!(spec.out_dims(), (16, 16));
+        let c = spec.census();
+        // interior 9 → 4; edges trim further, so global ≥ 2.25
+        assert!(c.reduction() >= 2.25 - 1e-9, "r={}", c.reduction());
+        assert!(c.per_phase.iter().all(|p| p.taps_max <= 4));
+    }
+}

@@ -1,6 +1,8 @@
 //! Small statistics helpers used by the simulator, benches and the
 //! coordinator's latency metrics.
 
+use std::fmt;
+
 /// Arithmetic mean; `0.0` for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -9,13 +11,26 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Geometric mean; `0.0` for an empty slice. All inputs must be positive.
+/// Geometric mean over the **positive, finite** entries of `xs`.
+///
+/// Contract: non-positive and non-finite entries (0, negatives, NaN, ±inf)
+/// are skipped — the geometric mean is undefined for them, and the old
+/// `debug_assert!` guard meant release builds silently returned NaN.
+/// Returns `0.0` when no entry qualifies (including the empty slice).
 pub fn geomean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    let mut log_sum = 0.0f64;
+    let mut n = 0usize;
+    for &x in xs {
+        if x > 0.0 && x.is_finite() {
+            log_sum += x.ln();
+            n += 1;
+        }
     }
-    debug_assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positive inputs");
-    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+    if n == 0 {
+        0.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
 }
 
 /// Population standard deviation.
@@ -29,7 +44,9 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, `q` in `[0, 100]`. Sorts a copy —
 /// callers computing several quantiles of the same data should sort once
-/// and use [`percentile_sorted`].
+/// and use [`percentile_sorted`]. Panics on NaN input; the serving path
+/// never produces one ([`Histogram::record`] drops non-finite samples and
+/// driver latencies come from `Instant` differences).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -55,10 +72,44 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Typed error from [`Histogram::try_merge`]: the operands were built with
+/// different bucket specifications, so folding their counts would silently
+/// attribute observations to the wrong latency ranges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketMismatch {
+    /// Bucket-bound count of the left (receiving) histogram.
+    pub left_bounds: usize,
+    /// Bucket-bound count of the right (merged-in) histogram.
+    pub right_bounds: usize,
+    /// First index at which the bound values differ, when the counts
+    /// match but the edges do not.
+    pub first_divergence: Option<usize>,
+}
+
+impl fmt::Display for BucketMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.first_divergence {
+            Some(i) => write!(
+                f,
+                "histograms share {} bounds but diverge at bucket {i}",
+                self.left_bounds
+            ),
+            None => write!(
+                f,
+                "histograms have {} vs {} bucket bounds",
+                self.left_bounds, self.right_bounds
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BucketMismatch {}
+
 /// Online latency/size histogram with fixed power-of-two style buckets.
 ///
 /// Used by the coordinator's metrics endpoint; allocation-free on the record
-/// path.
+/// path. Non-finite observations are dropped (see [`Histogram::record`]), so
+/// `min`/`max`/`sum` — and every quantile derived from them — stay finite.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     /// Bucket upper bounds (exclusive), ascending; final bucket is +inf.
@@ -68,20 +119,35 @@ pub struct Histogram {
     min: f64,
     max: f64,
     n: u64,
+    /// Non-finite observations rejected by [`Histogram::record`].
+    dropped: u64,
 }
 
 impl Histogram {
     /// Exponential buckets covering `[lo, hi]` with `per_decade` buckets per
     /// decade.
+    ///
+    /// Bounds are computed in closed form (`lo · step^i`), not by an
+    /// accumulating multiply: the running-product version drifts by an ulp
+    /// per bucket, so two histograms covering a large `hi/lo` ratio could
+    /// disagree on their edges depending on how they were built. The final
+    /// bound is asserted to cover `hi`.
     pub fn exponential(lo: f64, hi: f64, per_decade: usize) -> Self {
         assert!(lo > 0.0 && hi > lo && per_decade > 0);
-        let mut bounds = Vec::new();
+        assert!(hi.is_finite());
         let step = 10f64.powf(1.0 / per_decade as f64);
-        let mut b = lo;
-        while b < hi * step {
+        let mut bounds = Vec::new();
+        let mut i = 0i32;
+        loop {
+            let b = lo * step.powi(i);
             bounds.push(b);
-            b *= step;
+            if b >= hi {
+                break;
+            }
+            i += 1;
         }
+        let last = *bounds.last().unwrap_or(&lo);
+        assert!(last >= hi, "final bucket bound {last} must cover hi={hi}");
         let n_buckets = bounds.len() + 1;
         Histogram {
             bounds,
@@ -90,11 +156,21 @@ impl Histogram {
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
             n: 0,
+            dropped: 0,
         }
     }
 
     /// Record one observation.
+    ///
+    /// Non-finite observations (NaN, ±inf) are **ignored** and counted in
+    /// [`Histogram::dropped`]: a single poisoned sample must not corrupt
+    /// `min`/`max`/`sum` — and through them every p50/p95/p99 this
+    /// histogram reports — for the rest of the serving run.
     pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.dropped += 1;
+            return;
+        }
         let idx = self.bounds.partition_point(|&b| b <= x);
         self.counts[idx] += 1;
         self.sum += x;
@@ -105,6 +181,11 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.n
+    }
+
+    /// Observations rejected by [`Histogram::record`] as non-finite.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
     pub fn mean(&self) -> f64 {
@@ -132,19 +213,44 @@ impl Histogram {
     }
 
     /// Fold another histogram with the *same bucket specification* into
-    /// this one (the coordinator merges per-shard histograms this way).
-    pub fn merge(&mut self, other: &Histogram) {
-        assert_eq!(
-            self.bounds, other.bounds,
-            "histogram merge requires identical bucket specs"
-        );
+    /// this one. Returns [`BucketMismatch`] when the bucket bounds differ —
+    /// merging differently-shaped histograms would silently mis-attribute
+    /// counts. The coordinator merges per-shard histograms this way; they
+    /// are all built by `ServingMetrics::new`, so a mismatch there is a
+    /// construction bug, not an operational condition.
+    pub fn try_merge(&mut self, other: &Histogram) -> Result<(), BucketMismatch> {
+        if self.bounds != other.bounds {
+            let first_divergence = if self.bounds.len() == other.bounds.len() {
+                self.bounds.iter().zip(&other.bounds).position(|(a, b)| a != b)
+            } else {
+                None
+            };
+            return Err(BucketMismatch {
+                left_bounds: self.bounds.len(),
+                right_bounds: other.bounds.len(),
+                first_divergence,
+            });
+        }
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
         self.sum += other.sum;
         self.n += other.n;
-        self.min = self.min.min(other.min);
-        self.max = self.max.max(other.max);
+        self.dropped += other.dropped;
+        if other.n > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        Ok(())
+    }
+
+    /// [`Histogram::try_merge`] for callers that construct both operands
+    /// from one spec (the coordinator path). Panics — with the typed
+    /// error's message — on mismatched bucket specifications.
+    pub fn merge(&mut self, other: &Histogram) {
+        if let Err(e) = self.try_merge(other) {
+            panic!("histogram merge requires identical bucket specs: {e}");
+        }
     }
 
     /// Approximate quantile from the histogram buckets (upper-bound biased).
@@ -181,6 +287,16 @@ mod tests {
     }
 
     #[test]
+    fn geomean_skips_nonpositive_and_nonfinite() {
+        // the documented contract: only positive finite entries participate,
+        // in release builds too (the old guard was a debug_assert!)
+        let gm = geomean(&[1.0, 10.0, 100.0, 0.0, -5.0, f64::NAN, f64::INFINITY]);
+        assert!((gm - 10.0).abs() < 1e-9, "gm={gm}");
+        assert!(gm.is_finite());
+        assert_eq!(geomean(&[-1.0, 0.0, f64::NAN]), 0.0);
+    }
+
+    #[test]
     fn percentile_interpolates() {
         let xs = [10.0, 20.0, 30.0, 40.0];
         assert_eq!(percentile(&xs, 0.0), 10.0);
@@ -214,6 +330,23 @@ mod tests {
     }
 
     #[test]
+    fn histogram_rejects_nonfinite_records() {
+        let mut h = Histogram::exponential(1e-3, 10.0, 5);
+        h.record(1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(2.0);
+        // poisoned samples are dropped, not folded into min/max/sum
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.dropped(), 3);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 2.0);
+        assert!((h.mean() - 1.5).abs() < 1e-12);
+        assert!(h.quantile(0.99).is_finite());
+    }
+
+    #[test]
     fn histogram_merge_equals_recording_everything_in_one() {
         let mut a = Histogram::exponential(1e-3, 10.0, 5);
         let mut b = Histogram::exponential(1e-3, 10.0, 5);
@@ -235,6 +368,70 @@ mod tests {
         for q in [0.5, 0.95, 0.99] {
             assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
         }
+    }
+
+    #[test]
+    fn merge_carries_dropped_and_handles_empty_operands() {
+        let mut a = Histogram::exponential(1e-3, 10.0, 5);
+        let mut b = Histogram::exponential(1e-3, 10.0, 5);
+        b.record(f64::NAN);
+        b.record(0.5);
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.dropped(), 1);
+        assert_eq!(a.min(), 0.5);
+        // merging an empty histogram must not disturb min/max
+        let empty = Histogram::exponential(1e-3, 10.0, 5);
+        a.merge(&empty);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 0.5);
+    }
+
+    #[test]
+    fn cross_shape_merge_is_a_typed_error() {
+        let mut a = Histogram::exponential(1e-3, 10.0, 5);
+        let b = Histogram::exponential(1e-3, 10.0, 10);
+        let err = a.try_merge(&b).unwrap_err();
+        assert!(err.left_bounds != err.right_bounds);
+        assert!(err.to_string().contains("bucket bounds"));
+        // same count, different edges → divergence index reported
+        let mut c = Histogram::exponential(1e-3, 10.0, 5);
+        let d = Histogram::exponential(2e-3, 20.0, 5);
+        if c.bounds.len() == d.bounds.len() {
+            let err = c.try_merge(&d).unwrap_err();
+            assert_eq!(err.first_divergence, Some(0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "identical bucket specs")]
+    fn cross_shape_merge_panics_with_typed_message() {
+        let mut a = Histogram::exponential(1e-3, 10.0, 5);
+        let b = Histogram::exponential(1e-3, 10.0, 10);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn exponential_bounds_are_closed_form_over_wide_ranges() {
+        // 18 decades × 10 buckets/decade: the accumulating `b *= step`
+        // construction drifts ~1 ulp per bucket; the closed form must stay
+        // within a few ulps of lo·10^(i/per_decade) at every index.
+        let per_decade = 10usize;
+        let (lo, hi) = (1e-9, 1e9);
+        let h = Histogram::exponential(lo, hi, per_decade);
+        assert!(h.bounds.len() > 180, "expected ≥ one bound per bucket-step");
+        for (i, &b) in h.bounds.iter().enumerate() {
+            let reference = lo * 10f64.powf(i as f64 / per_decade as f64);
+            let rel = (b - reference).abs() / reference;
+            assert!(rel < 1e-13, "bound {i}: {b} vs {reference} (rel {rel:.2e})");
+        }
+        // the final bound covers hi, so in-range samples never land in the
+        // +inf overflow bucket
+        assert!(*h.bounds.last().unwrap() >= hi);
+        // two histograms over the same spec agree bit-for-bit → mergeable
+        let mut a = Histogram::exponential(lo, hi, per_decade);
+        let b = Histogram::exponential(lo, hi, per_decade);
+        assert!(a.try_merge(&b).is_ok());
     }
 
     #[test]

@@ -88,8 +88,60 @@ fn sim_backend_unknown_model_is_typed_before_submission() {
     assert!(matches!(
         err,
         ApiError::UnknownModel { ref name, ref available }
-            if name == "biggan" && available.len() == 4
+            if name == "biggan" && available.len() == 8
     ));
+}
+
+#[test]
+fn sim_backend_serves_every_zoo_model_by_name() {
+    // the expanded --model set: every registered generator must be
+    // servable end-to-end through the same driver
+    let session = Arc::new(Session::new().unwrap());
+    for name in ["srgan", "pix2pix", "stylegan2", "progan"] {
+        let req = ServeRequest::builder()
+            .model(name)
+            .requests(4)
+            .max_batch(4)
+            .time_scale(0.0) // cost model only: keep the test fast
+            .build()
+            .unwrap();
+        let outcome = Arc::clone(&session).serve(&req).unwrap();
+        assert_eq!(outcome.total_requests, 4, "{name}");
+        assert_eq!(outcome.total_samples, 4, "{name}");
+        assert!(outcome.p99_ms >= outcome.p50_ms, "{name}");
+    }
+}
+
+#[test]
+fn mixed_model_load_routes_across_the_expanded_zoo() {
+    // one shared server, requests interleaved across all eight models —
+    // the serving smoke test for the 8-model registry
+    let session = Arc::new(Session::new().unwrap());
+    let exec =
+        Arc::new(SimExecutor::with_options(Arc::clone(&session), OptFlags::all(), 0.0).unwrap());
+    let names = exec.models();
+    assert_eq!(names.len(), 8);
+    let server = Server::start(
+        Arc::clone(&exec),
+        ServerConfig { shards: 2, routing: RoutingPolicy::ModelAffinity, ..Default::default() },
+    );
+    let mut rxs = Vec::new();
+    for round in 0..2u64 {
+        for (i, name) in names.iter().enumerate() {
+            rxs.push((name.clone(), server.submit(name, round * 8 + i as u64, None, 1).unwrap()));
+        }
+    }
+    for (name, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(
+            resp.images.len(),
+            exec.elements_per_sample(&name),
+            "{name}: one full sample per request"
+        );
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.total_requests, 16);
+    assert_eq!(stats.per_model.len(), 8, "every model must have been served");
 }
 
 #[cfg(not(feature = "pjrt"))]
