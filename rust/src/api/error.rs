@@ -30,6 +30,10 @@ pub enum ApiError {
     InvalidBatch(usize),
     /// A sweep grid with zero configurations.
     EmptyGrid,
+    /// A sweep grid with malformed axis values (e.g. a zero dimension) —
+    /// previously these either panicked in downstream asserts or were
+    /// silently dropped during evaluation.
+    InvalidGrid { reason: String },
     /// Thread count must be ≥ 1.
     InvalidThreads(usize),
     /// Serving worker count must be ≥ 1.
@@ -64,6 +68,7 @@ impl fmt::Display for ApiError {
             }
             ApiError::InvalidBatch(b) => write!(f, "batch must be ≥ 1 (got {b})"),
             ApiError::EmptyGrid => write!(f, "sweep grid contains no configurations"),
+            ApiError::InvalidGrid { reason } => write!(f, "invalid sweep grid: {reason}"),
             ApiError::InvalidThreads(t) => write!(f, "threads must be ≥ 1 (got {t})"),
             ApiError::InvalidWorkers(w) => write!(f, "workers must be ≥ 1 (got {w})"),
             ApiError::InvalidShards(s) => write!(f, "shards must be ≥ 1 (got {s})"),
@@ -168,6 +173,7 @@ mod tests {
             ApiError::PowerCapExceeded { peak_w: 120.0, cap_w: 100.0 },
             ApiError::InvalidBatch(0),
             ApiError::EmptyGrid,
+            ApiError::InvalidGrid { reason: "axis n contains 0".into() },
             ApiError::InvalidThreads(0),
             ApiError::InvalidWorkers(0),
             ApiError::InvalidShards(0),

@@ -49,9 +49,12 @@ pub struct SimExecutor {
 
 impl SimExecutor {
     /// Executor over the session's registered models with all paper
-    /// optimizations on and real-time pacing (`time_scale = 1.0`).
+    /// optimizations **plus the event-driven overlap scheduler**
+    /// ([`OptFlags::overlapped`]) and real-time pacing
+    /// (`time_scale = 1.0`): serving latencies reflect pipelined
+    /// inter-layer timing, not the sequential analytical bound.
     pub fn new(session: Arc<Session>) -> Result<SimExecutor, ApiError> {
-        SimExecutor::with_options(session, OptFlags::all(), 1.0)
+        SimExecutor::with_options(session, OptFlags::overlapped(), 1.0)
     }
 
     /// Executor with explicit optimization flags and time scaling.
@@ -189,6 +192,17 @@ mod tests {
         let one = e.batch_latency("CondGAN", 1).unwrap();
         let eight = e.batch_latency("CondGAN", 8).unwrap();
         assert!(eight / 8.0 < one, "per-sample latency must drop with batching");
+    }
+
+    #[test]
+    fn default_executor_paces_at_overlapped_timing() {
+        let session = Arc::new(Session::new().unwrap());
+        let overlapped = SimExecutor::new(Arc::clone(&session)).unwrap();
+        let analytic =
+            SimExecutor::with_options(Arc::clone(&session), OptFlags::all(), 1.0).unwrap();
+        let a = overlapped.batch_latency("DCGAN", 4).unwrap();
+        let b = analytic.batch_latency("DCGAN", 4).unwrap();
+        assert!(a < b, "overlap pacing {a} must beat the analytical bound {b}");
     }
 
     #[test]

@@ -68,7 +68,8 @@ pub mod session;
 pub use error::{ApiError, ApiResult};
 pub use executor::SimExecutor;
 pub use outcome::{
-    CompareOutcome, Outcome, PlatformSeries, ServeOutcome, SimOutcome, SimRow, SweepOutcome,
+    CompareOutcome, Outcome, PlatformSeries, ResourceRow, ServeOutcome, SimOutcome, SimRow,
+    SweepOutcome,
 };
 pub use request::{
     default_threads, ModelSelect, SimRequest, SimRequestBuilder, SweepRequest,

@@ -12,16 +12,36 @@ use crate::util::json::{num_arr, obj, str_arr, JsonValue};
 use crate::util::table::{f2, Table};
 use crate::util::units::{fmt_energy, fmt_time};
 
+/// One resource's busy/utilization/critical-path summary for a model
+/// (the event-scheduler accounting surfaced through the API).
+#[derive(Debug, Clone)]
+pub struct ResourceRow {
+    /// Stable kebab-case name from `sim::Resource::name`.
+    pub resource: String,
+    pub busy_s: f64,
+    /// Busy fraction of the model's end-to-end latency.
+    pub utilization: f64,
+    /// Seconds on the end-to-end critical path (sums to the latency
+    /// across all resources).
+    pub critical_s: f64,
+}
+
 /// One model's simulation metrics (a row of `photogan simulate`).
 #[derive(Debug, Clone)]
 pub struct SimRow {
     pub model: String,
     pub latency_s: f64,
+    /// The closed-form sequential latency (equals `latency_s` unless the
+    /// overlap scheduler ran).
+    pub serial_latency_s: f64,
     pub energy_j: f64,
     pub gops: f64,
     /// Energy per bit in femtojoules (the paper's Fig. 14 unit).
     pub epb_fj: f64,
     pub avg_power_w: f64,
+    /// Per-resource busy/utilization/critical accounting, in
+    /// `sim::Resource::ALL` order.
+    pub resources: Vec<ResourceRow>,
 }
 
 impl SimRow {
@@ -29,11 +49,41 @@ impl SimRow {
         SimRow {
             model: r.model.clone(),
             latency_s: r.latency,
+            serial_latency_s: r.serial_latency,
             energy_j: r.energy.total(),
             gops: r.gops(),
             epb_fj: r.epb() * 1e15,
             avg_power_w: r.avg_power(),
+            resources: r
+                .resources
+                .iter()
+                .map(|u| ResourceRow {
+                    resource: u.resource.name().to_string(),
+                    busy_s: u.busy,
+                    utilization: u.utilization(r.latency),
+                    critical_s: u.critical,
+                })
+                .collect(),
         }
+    }
+
+    /// Overlap speedup vs. the sequential reference (1.0 when the
+    /// scheduler did not run).
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.latency_s > 0.0 {
+            self.serial_latency_s / self.latency_s
+        } else {
+            1.0
+        }
+    }
+
+    /// The resource carrying the largest critical-path share, if any.
+    pub fn dominant_resource(&self) -> Option<&str> {
+        self.resources
+            .iter()
+            .filter(|u| u.critical_s > 0.0)
+            .max_by(|a, b| a.critical_s.total_cmp(&b.critical_s))
+            .map(|u| u.resource.as_str())
     }
 }
 
@@ -52,6 +102,7 @@ fn opts_json(opts: &OptFlags) -> JsonValue {
         ("sparse", JsonValue::Bool(opts.sparse)),
         ("pipelined", JsonValue::Bool(opts.pipelined)),
         ("power_gated", JsonValue::Bool(opts.power_gated)),
+        ("overlap", JsonValue::Bool(opts.overlap)),
     ])
 }
 
@@ -87,8 +138,38 @@ impl SimOutcome {
         t
     }
 
+    /// Per-model × per-resource utilization / critical-path table (the
+    /// event scheduler's headline observability output).
+    pub fn resource_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "model", "speedup", "dominant", "resource", "busy", "util", "crit path",
+        ])
+        .with_title("per-resource busy / utilization / critical-path attribution".to_string());
+        for r in &self.rows {
+            for u in &r.resources {
+                if u.busy_s == 0.0 && u.critical_s == 0.0 {
+                    continue;
+                }
+                t.row(vec![
+                    r.model.clone(),
+                    format!("{:.3}x", r.overlap_speedup()),
+                    r.dominant_resource().unwrap_or("-").to_string(),
+                    u.resource.clone(),
+                    fmt_time(u.busy_s),
+                    format!("{:.1}%", 100.0 * u.utilization),
+                    fmt_time(u.critical_s),
+                ]);
+            }
+        }
+        t
+    }
+
     pub fn to_tables(&self) -> Vec<Table> {
-        vec![self.to_table()]
+        if self.opts.overlap {
+            vec![self.to_table(), self.resource_table()]
+        } else {
+            vec![self.to_table()]
+        }
     }
 
     pub fn json(&self) -> JsonValue {
@@ -106,10 +187,37 @@ impl SimOutcome {
                             obj(vec![
                                 ("model", JsonValue::Str(r.model.clone())),
                                 ("latency_s", JsonValue::Num(r.latency_s)),
+                                ("serial_latency_s", JsonValue::Num(r.serial_latency_s)),
+                                ("overlap_speedup", JsonValue::Num(r.overlap_speedup())),
                                 ("energy_j", JsonValue::Num(r.energy_j)),
                                 ("gops", JsonValue::Num(r.gops)),
                                 ("epb_fj", JsonValue::Num(r.epb_fj)),
                                 ("avg_power_w", JsonValue::Num(r.avg_power_w)),
+                                (
+                                    "resources",
+                                    JsonValue::Arr(
+                                        r.resources
+                                            .iter()
+                                            .map(|u| {
+                                                obj(vec![
+                                                    (
+                                                        "resource",
+                                                        JsonValue::Str(u.resource.clone()),
+                                                    ),
+                                                    ("busy_s", JsonValue::Num(u.busy_s)),
+                                                    (
+                                                        "utilization",
+                                                        JsonValue::Num(u.utilization),
+                                                    ),
+                                                    (
+                                                        "critical_s",
+                                                        JsonValue::Num(u.critical_s),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),

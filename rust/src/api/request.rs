@@ -131,6 +131,11 @@ impl SimRequestBuilder {
 
 /// A validated design-space-exploration request (construct via
 /// [`SweepRequest::builder`]).
+///
+/// Default optimization flags are [`OptFlags::overlapped`]: the Fig. 11
+/// optimum is searched under the event-driven overlap scheduler (the
+/// timing the serving layer actually experiences). Pass
+/// `.opts(OptFlags::all())` for the paper's analytical calibration sweep.
 #[derive(Debug, Clone)]
 pub struct SweepRequest {
     pub grid: Grid,
@@ -156,7 +161,7 @@ impl Default for SweepRequestBuilder {
     fn default() -> Self {
         SweepRequestBuilder {
             grid: Grid::paper(),
-            opts: OptFlags::all(),
+            opts: OptFlags::overlapped(),
             threads: default_threads(),
         }
     }
@@ -174,7 +179,8 @@ impl SweepRequestBuilder {
         self
     }
 
-    /// Optimization toggles applied at every point (default: all).
+    /// Optimization toggles applied at every point (default: every paper
+    /// optimization plus the overlap scheduler — [`OptFlags::overlapped`]).
     pub fn opts(mut self, opts: OptFlags) -> Self {
         self.opts = opts;
         self
@@ -191,6 +197,9 @@ impl SweepRequestBuilder {
         if self.grid.is_empty() {
             return Err(ApiError::EmptyGrid);
         }
+        self.grid
+            .validate()
+            .map_err(|reason| ApiError::InvalidGrid { reason })?;
         if self.threads == 0 {
             return Err(ApiError::InvalidThreads(0));
         }
@@ -245,6 +254,24 @@ mod tests {
             SweepRequest::builder().threads(0).build().unwrap_err(),
             ApiError::InvalidThreads(0)
         );
+    }
+
+    #[test]
+    fn sweep_builder_rejects_zeroed_axes_with_a_typed_error() {
+        let zeroed = Grid { n: vec![8, 0], k: vec![2], l: vec![11], m: vec![3] };
+        assert_eq!(
+            SweepRequest::builder().grid(zeroed).build().unwrap_err(),
+            ApiError::InvalidGrid { reason: "axis n contains 0".into() }
+        );
+    }
+
+    #[test]
+    fn sweep_defaults_to_the_overlap_scheduler() {
+        let r = SweepRequest::builder().build().unwrap();
+        assert_eq!(r.opts, OptFlags::overlapped());
+        // the analytical calibration sweep stays one call away
+        let analytic = SweepRequest::builder().opts(OptFlags::all()).build().unwrap();
+        assert!(!analytic.opts.overlap);
     }
 
     #[test]

@@ -121,7 +121,9 @@ impl ServeRequest {
 ///
 /// Defaults: sim backend, 64 requests, batch 8, 2 workers and 1024
 /// in-flight samples per shard, 1 shard, round-robin routing, 5 ms
-/// batching window, all sim optimizations, real-time pacing.
+/// batching window, all sim optimizations plus the event-driven overlap
+/// scheduler ([`OptFlags::overlapped`] — dispatched batches pace at
+/// pipelined inter-layer timing), real-time pacing.
 ///
 /// ```
 /// use photogan::api::{ApiError, ServeRequest};
@@ -166,7 +168,7 @@ impl Default for ServeRequestBuilder {
             shards: 1,
             routing: RoutingPolicy::RoundRobin,
             queue_depth: 1024,
-            opts: OptFlags::all(),
+            opts: OptFlags::overlapped(),
             time_scale: 1.0,
         }
     }

@@ -114,11 +114,16 @@ impl Session {
     /// equal to the registered one participate; a same-named modified
     /// clone is mapped fresh (uncached) rather than served stale jobs —
     /// register it via [`Session::register_model`] to cache it.
+    ///
+    /// The `overlap` bit is normalized out of the key: it selects the
+    /// timing engine, never the mapping, so an analytical and an
+    /// overlapped request for the same `(model, batch, sparse…)` share
+    /// one cached mapping instead of doubling the work.
     pub fn mapped(&self, model: &Model, batch: usize, opts: OptFlags) -> Arc<Vec<LayerJob>> {
         if !self.models.iter().any(|m| m == model) {
             return Arc::new(map_model(model, batch, &opts));
         }
-        let key: MapKey = (model.name.clone(), batch, opts);
+        let key: MapKey = (model.name.clone(), batch, opts.with_overlap(false));
         {
             let guard = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
             if let Some(jobs) = guard.get(&key) {
@@ -189,6 +194,11 @@ impl Session {
         if req.grid.is_empty() {
             return Err(ApiError::EmptyGrid);
         }
+        // malformed axis values (zeros) are a typed error here instead of
+        // silently evaluating degenerate chips (or worse, panicking in a
+        // downstream assert) — requests built field-by-field bypass the
+        // builder, so the boundary re-checks
+        req.grid.validate().map_err(|reason| ApiError::InvalidGrid { reason })?;
         if req.threads == 0 {
             return Err(ApiError::InvalidThreads(0));
         }
@@ -209,10 +219,18 @@ impl Session {
 
     /// PhotoGAN (on the session chip, all optimizations, batch 1) vs. the
     /// five analytic baseline platforms — the Figs. 13/14 data, widened to
-    /// every registered model (the 8-model study by default).
+    /// every registered model (the 8-model study by default). Uses the
+    /// closed-form analytical engine (the paper's calibration window);
+    /// [`Session::compare_opts`] with [`OptFlags::overlapped`] shows the
+    /// event scheduler's throughput instead.
     pub fn compare(&self) -> CompareOutcome {
+        self.compare_opts(OptFlags::all())
+    }
+
+    /// [`Session::compare`] under explicit optimization flags (e.g.
+    /// `OptFlags::overlapped()` for `photogan compare --overlap`).
+    pub fn compare_opts(&self, opts: OptFlags) -> CompareOutcome {
         let model_names = self.model_names();
-        let opts = OptFlags::all();
         let mut series = Vec::new();
         let pg: Vec<SimReport> =
             self.models.iter().map(|m| self.sim_report(m, 1, opts)).collect();
@@ -251,6 +269,11 @@ mod tests {
         // different batch / opts are distinct entries
         s.mapped(&m, 2, OptFlags::all());
         s.mapped(&m, 1, OptFlags::baseline());
+        assert_eq!(s.mapping_cache_entries(), 3);
+        // the overlap bit selects the timing engine, not the mapping:
+        // overlapped requests share the analytical entry
+        let o = s.mapped(&m, 1, OptFlags::overlapped());
+        assert!(Arc::ptr_eq(&a, &o), "overlap must reuse the analytical mapping");
         assert_eq!(s.mapping_cache_entries(), 3);
     }
 
@@ -311,6 +334,22 @@ mod tests {
             fresh.energy.total() < cached.energy.total(),
             "a 2-layer prefix must cost less than the full model"
         );
+    }
+
+    #[test]
+    fn compare_opts_overlapped_raises_gops_and_keeps_epb() {
+        let s = Session::new().unwrap();
+        let analytic = s.compare();
+        let overlapped = s.compare_opts(OptFlags::overlapped());
+        let (a, o) = (&analytic.series[0], &overlapped.series[0]);
+        assert_eq!(a.gops.len(), o.gops.len());
+        for i in 0..a.gops.len() {
+            assert!(o.gops[i] > a.gops[i], "overlap must raise PhotoGAN GOPS");
+            assert!(
+                (o.epb[i] - a.epb[i]).abs() <= 1e-9 * a.epb[i],
+                "EPB (pure energy) must be unchanged"
+            );
+        }
     }
 
     #[test]

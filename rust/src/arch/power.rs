@@ -16,9 +16,21 @@ pub const ECU_PER_UNIT_W: f64 = 0.01;
 /// chip boundary.
 pub const DRAM_ENERGY_PER_BYTE: f64 = 20e-12;
 
+/// Sustained main-memory bandwidth (B/s) — DDR4-class single channel; the
+/// event-driven scheduler places weight-prefetch segments on the DRAM
+/// timeline at this rate (occupancy/utilization reporting only — prefetch
+/// never stalls compute, matching the energy-only closed-form reference).
+pub const DRAM_BYTES_PER_S: f64 = 25e9;
+
 /// Digital ECU op energy (J/op) for the sparse-dataflow bookkeeping
 /// (column reintroduction, §III.C.1) and IN statistics.
 pub const ECU_ENERGY_PER_OP: f64 = 1e-12;
+
+/// Sustained ECU digital op rate (ops/s) — a GHz-class controller with a
+/// wide SIMD datapath. Used only for ECU busy-time attribution in
+/// [`crate::sim::SimReport`] resource tables; ECU ops are latency-free in
+/// the cost model (they hide behind streaming), so this never adds time.
+pub const ECU_OPS_PER_S: f64 = 1e12;
 
 /// Digital ECU **data-movement** energy (J/element) — the new op class the
 /// extended zoo introduces: nearest-neighbor replication, pixel-shuffle

@@ -71,6 +71,26 @@ impl Grid {
         self.len() == 0
     }
 
+    /// Structural validation: every axis non-empty, every value ≥ 1.
+    /// Oversized values (e.g. N beyond the crosstalk bound) are *not* an
+    /// error — those configurations are individually rejected during the
+    /// sweep, exactly like over-cap ones — but zeros are malformed input
+    /// and surface as a typed `ApiError::InvalidGrid` at the Session
+    /// boundary instead of silently evaluating nothing.
+    pub fn validate(&self) -> Result<(), String> {
+        for (axis, vals) in
+            [("n", &self.n), ("k", &self.k), ("l", &self.l), ("m", &self.m)]
+        {
+            if vals.is_empty() {
+                return Err(format!("axis {axis} is empty"));
+            }
+            if vals.iter().any(|&v| v == 0) {
+                return Err(format!("axis {axis} contains 0"));
+            }
+        }
+        Ok(())
+    }
+
     fn configs(&self) -> Vec<(usize, usize, usize, usize)> {
         let mut out = Vec::with_capacity(self.len());
         for &n in &self.n {
@@ -202,5 +222,99 @@ mod tests {
             (a[0].n, a[0].k, a[0].l, a[0].m),
             (b[0].n, b[0].k, b[0].l, b[0].m)
         );
+    }
+
+    #[test]
+    fn grid_validate_catches_empty_axes_and_zeros() {
+        assert!(Grid::paper().validate().is_ok());
+        assert!(Grid::smoke().validate().is_ok());
+        let empty = Grid { n: vec![], k: vec![1], l: vec![1], m: vec![1] };
+        assert_eq!(empty.validate().unwrap_err(), "axis n is empty");
+        let zeroed = Grid { n: vec![8], k: vec![2], l: vec![0, 3], m: vec![1] };
+        assert_eq!(zeroed.validate().unwrap_err(), "axis l contains 0");
+        // oversized values are dropped per-config, not rejected wholesale
+        let oversized = Grid { n: vec![400], k: vec![1], l: vec![1], m: vec![1] };
+        assert!(oversized.validate().is_ok());
+        assert!(explore(&oversized, &[zoo::condgan()], OptFlags::all(), 1).is_empty());
+    }
+
+    #[test]
+    fn every_point_respects_the_power_cap_for_random_grids() {
+        use crate::util::prop::check;
+        let models = vec![zoo::condgan()];
+        check("dse points under the 100 W cap", 10, |g| {
+            let grid = Grid {
+                n: vec![g.usize_in(1, 36), g.usize_in(1, 36)],
+                k: vec![g.usize_in(1, 8)],
+                l: vec![g.usize_in(1, 13)],
+                m: vec![g.usize_in(1, 5)],
+            };
+            for opts in [OptFlags::all(), OptFlags::overlapped()] {
+                for p in explore(&grid, &models, opts, 2) {
+                    assert!(
+                        p.peak_power_w <= 100.0,
+                        "[{},{},{},{}] peak {} W over cap",
+                        p.n,
+                        p.k,
+                        p.l,
+                        p.m,
+                        p.peak_power_w
+                    );
+                    assert!(p.objective.is_finite() && p.objective > 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn optimum_invariant_under_grid_axis_permutation() {
+        let models = vec![zoo::condgan(), zoo::artgan()];
+        let grid = Grid::smoke();
+        let mut permuted = grid.clone();
+        permuted.n.reverse();
+        permuted.k.reverse();
+        permuted.l.reverse();
+        permuted.m.reverse();
+        for opts in [OptFlags::all(), OptFlags::overlapped()] {
+            let a = explore(&grid, &models, opts, 3);
+            let b = explore(&permuted, &models, opts, 3);
+            assert_eq!(a.len(), b.len(), "permutation must not change the valid set");
+            assert_eq!(
+                (a[0].n, a[0].k, a[0].l, a[0].m),
+                (b[0].n, b[0].k, b[0].l, b[0].m),
+                "optimum must be axis-order invariant"
+            );
+            assert_eq!(a[0].objective, b[0].objective, "objective is order-independent");
+        }
+    }
+
+    #[test]
+    fn mapped_recosting_equals_fresh_simulation() {
+        use crate::sim::simulate;
+        use crate::util::prop::check;
+        let models = [zoo::condgan(), zoo::dcgan()];
+        check("simulate_mapped re-cost == fresh simulate", 12, |g| {
+            let cfg = ArchConfig::new(
+                g.usize_in(2, 36),
+                g.usize_in(1, 8),
+                g.usize_in(1, 13),
+                g.usize_in(1, 5),
+            );
+            let Ok(acc) = Accelerator::new(cfg) else { return };
+            for m in &models {
+                for opts in [OptFlags::all(), OptFlags::overlapped()] {
+                    let jobs = map_model(m, 1, &opts);
+                    let recost = simulate_mapped(&m.name, &jobs, &acc, 1, opts);
+                    let fresh = simulate(m, &acc, 1, opts);
+                    assert_eq!(recost.latency, fresh.latency, "{} {opts:?}", m.name);
+                    assert_eq!(
+                        recost.energy.total(),
+                        fresh.energy.total(),
+                        "{} {opts:?}",
+                        m.name
+                    );
+                }
+            }
+        });
     }
 }

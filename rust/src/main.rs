@@ -11,16 +11,23 @@
 //!
 //! ```text
 //! photogan simulate [--model NAME] [--batch B] [--config N,K,L,M]
-//!                   [--no-sparse|--no-pipeline|--no-gating]
+//!                   [--no-sparse|--no-pipeline|--no-gating] [--overlap]
 //!                   [--strict-power] [--json]
-//! photogan dse      [--threads T] [--grid paper|smoke] [--json]
-//! photogan compare  [--json]                    # Figs. 13/14 tables
+//! photogan dse      [--threads T] [--grid paper|smoke] [--no-overlap]
+//!                   [--json]
+//! photogan compare  [--overlap] [--json]        # Figs. 13/14 tables
 //! photogan serve    [--backend sim|pjrt] [--shards N] [--routing POLICY]
 //!                   [--queue-depth D] [--requests R] [--batch B]
 //!                   [--workers W] [--max-wait-ms MS] [--time-scale X]
-//!                   [--artifacts DIR] [--model NAME] [--json]
+//!                   [--no-overlap] [--artifacts DIR] [--model NAME]
+//!                   [--json]
 //! photogan report   [--threads T]               # every table/figure
 //! ```
+//!
+//! `--overlap` engages the event-driven scheduler (`sim::schedule`) on
+//! exhibits that default to the paper's analytical reference; `dse` and
+//! `serve` run overlapped by default (`--no-overlap` restores the
+//! sequential cost model).
 
 use photogan::api::{default_threads, ApiError, Session, SimRequest, SweepRequest};
 use photogan::arch::config::ArchConfig;
@@ -70,14 +77,16 @@ fn print_help() {
          simulate  --model dcgan|condgan|artgan|cyclegan\n\
         \u{20}                  |srgan|pix2pix|stylegan2|progan  --batch B\n\
         \u{20}          --config N,K,L,M  --no-sparse --no-pipeline --no-gating\n\
+        \u{20}          --overlap (event-driven scheduler + resource table)\n\
         \u{20}          --strict-power (fail if over the power cap)  --json\n\
-         dse       --threads T  --grid paper|smoke  --json\n\
-         compare   --json  (Figs. 13/14 GOPS + EPB tables)\n\
+         dse       --threads T  --grid paper|smoke  --no-overlap  --json\n\
+         compare   --overlap  --json  (Figs. 13/14 GOPS + EPB tables)\n\
          serve     --backend sim|pjrt (sim needs no artifacts)\n\
         \u{20}          --shards N  --routing round-robin|least-outstanding|model-affinity\n\
         \u{20}          --queue-depth D (typed backpressure beyond)\n\
         \u{20}          --requests R --batch B --workers W --max-wait-ms MS\n\
         \u{20}          --time-scale X (sim pacing; 0 = cost model only)\n\
+        \u{20}          --no-overlap (pace at the sequential cost model)\n\
         \u{20}          --artifacts DIR --model NAME  --json\n\
          report    --threads T  (all tables & figures)"
     );
@@ -88,6 +97,7 @@ fn opt_flags(flags: &ParsedFlags) -> OptFlags {
         sparse: !flags.has("no-sparse"),
         pipelined: !flags.has("no-pipeline"),
         power_gated: !flags.has("no-gating"),
+        overlap: flags.has("overlap"),
     }
 }
 
@@ -99,6 +109,7 @@ fn cmd_simulate(args: &[String]) -> Result<(), ApiError> {
         switch("no-sparse"),
         switch("no-pipeline"),
         switch("no-gating"),
+        switch("overlap"),
         switch("strict-power"),
         switch("json"),
     ];
@@ -117,13 +128,19 @@ fn cmd_simulate(args: &[String]) -> Result<(), ApiError> {
     if flags.has("json") {
         println!("{}", outcome.to_json());
     } else {
-        outcome.to_table().print();
+        for (i, table) in outcome.to_tables().iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            table.print();
+        }
     }
     Ok(())
 }
 
 fn cmd_dse(args: &[String]) -> Result<(), ApiError> {
-    const SPEC: &[FlagDef] = &[value("threads"), value("grid"), switch("json")];
+    const SPEC: &[FlagDef] =
+        &[value("threads"), value("grid"), switch("no-overlap"), switch("json")];
     let flags = ParsedFlags::parse(args, SPEC)?;
     let grid = match flags.get("grid") {
         None | Some("paper") => Grid::paper(),
@@ -135,10 +152,14 @@ fn cmd_dse(args: &[String]) -> Result<(), ApiError> {
             })
         }
     };
-    let request = SweepRequest::builder()
+    let mut builder = SweepRequest::builder()
         .grid(grid)
-        .threads(flags.usize_or("threads", default_threads())?)
-        .build()?;
+        .threads(flags.usize_or("threads", default_threads())?);
+    if flags.has("no-overlap") {
+        // the paper's analytical calibration sweep
+        builder = builder.opts(OptFlags::all());
+    }
+    let request = builder.build()?;
     let outcome = Session::new()?.sweep(&request)?;
     if flags.has("json") {
         println!("{}", outcome.to_json());
@@ -159,9 +180,14 @@ fn cmd_dse(args: &[String]) -> Result<(), ApiError> {
 }
 
 fn cmd_compare(args: &[String]) -> Result<(), ApiError> {
-    const SPEC: &[FlagDef] = &[switch("json")];
+    const SPEC: &[FlagDef] = &[switch("overlap"), switch("json")];
     let flags = ParsedFlags::parse(args, SPEC)?;
-    let outcome = Session::new()?.compare();
+    let session = Session::new()?;
+    let outcome = if flags.has("overlap") {
+        session.compare_opts(OptFlags::overlapped())
+    } else {
+        session.compare()
+    };
     if flags.has("json") {
         println!("{}", outcome.to_json());
     } else {
@@ -190,6 +216,7 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
         value("queue-depth"),
         value("max-wait-ms"),
         value("time-scale"),
+        switch("no-overlap"),
         switch("json"),
     ];
     let flags = ParsedFlags::parse(args, SPEC)?;
@@ -226,6 +253,10 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
     }
     if let Some(model) = flags.get("model") {
         builder = builder.model(model);
+    }
+    if flags.has("no-overlap") {
+        // pace dispatched batches at the sequential analytical cost model
+        builder = builder.opts(OptFlags::all());
     }
     let request = builder.build()?;
     match request.backend {
@@ -267,6 +298,9 @@ fn cmd_report(args: &[String]) -> Result<(), ApiError> {
     println!();
     let (t12, _) = report::fig12(&session);
     t12.print();
+    println!();
+    let (t_ovl, _) = report::overlap_ablation(&session);
+    t_ovl.print();
     println!();
     for (i, table) in session.compare().to_tables().iter().enumerate() {
         if i > 0 {

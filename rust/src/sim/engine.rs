@@ -1,5 +1,16 @@
 //! The tile-level scheduling engine: composes device/arch cost models over
-//! a mapped model under the three optimization toggles.
+//! a mapped model under the optimization toggles.
+//!
+//! Two timing modes share one cost decomposition
+//! (`sim::schedule::cost_layer`):
+//!
+//! - **Closed-form (analytical reference)** — this module's loop: layer
+//!   costs accumulate strictly sequentially, exactly as the pre-scheduler
+//!   engine did (bit-identical latencies and energies, pinned by the
+//!   golden-trace suite).
+//! - **Event-driven overlap** (`opts.overlap`) — dispatched to
+//!   [`crate::sim::schedule::simulate_events`]: per-resource timelines
+//!   with double-buffered weight prefetch. Same energy, lower latency.
 //!
 //! Besides the paper exhibits (Figs. 11–14), this cost model drives the
 //! serving layer: `api::SimExecutor` calls [`simulate_mapped`] (through
@@ -8,26 +19,27 @@
 //! any PJRT artifacts.
 
 use crate::arch::accelerator::Accelerator;
-use crate::arch::activation::ActKind;
-use crate::arch::norm::NormKind;
-use crate::arch::power::{DRAM_ENERGY_PER_BYTE, ECU_ENERGY_PER_COPY, ECU_ENERGY_PER_OP};
-use crate::arch::unit::BlockKind;
+use crate::arch::power::DRAM_BYTES_PER_S;
 use crate::models::Model;
 use crate::sim::mapper::{map_model, LayerJob};
 use crate::sim::options::OptFlags;
-use crate::sim::result::{EnergyBreakdown, LayerTrace, SimReport};
+use crate::sim::result::{EnergyBreakdown, LayerTrace, ResourceUsage, SimReport};
+use crate::sim::schedule::{block_resource, cost_layer, simulate_events, Resource, NRES};
 
 /// Simulate one model on one accelerator configuration.
 ///
 /// `batch` is the number of inference instances streamed back-to-back
 /// (activations interleave; weights are loaded once per tile regardless of
-/// batch — the main reason batching helps).
+/// batch — the main reason batching helps). A `batch` of 0 is clamped to 1
+/// rather than aborting the process; user-facing entry points
+/// ([`crate::api::Session::simulate`] and the serve builders) reject it
+/// with a typed `ApiError::InvalidBatch` before reaching this function.
 ///
 /// This is the thin un-cached wrapper (map + cost); repeated simulations
 /// should go through [`crate::api::Session`], which memoizes the mapping
 /// by `(model, batch, OptFlags)` and produces identical results.
 pub fn simulate(model: &Model, acc: &Accelerator, batch: usize, opts: OptFlags) -> SimReport {
-    assert!(batch >= 1);
+    let batch = batch.max(1);
     let jobs = map_model(model, batch, &opts);
     simulate_mapped(&model.name, &jobs, acc, batch, opts)
 }
@@ -36,6 +48,10 @@ pub fn simulate(model: &Model, acc: &Accelerator, batch: usize, opts: OptFlags) 
 /// census) is independent of the accelerator configuration, so DSE sweeps
 /// map each model once and re-cost the same jobs across thousands of
 /// configurations.
+///
+/// With `opts.overlap` set this routes through the event-driven scheduler
+/// ([`crate::sim::schedule::simulate_events`]); otherwise the closed-form
+/// sequential reference below runs.
 pub fn simulate_mapped(
     model_name: &str,
     jobs: &[LayerJob],
@@ -43,175 +59,69 @@ pub fn simulate_mapped(
     batch: usize,
     opts: OptFlags,
 ) -> SimReport {
-    let cfg = &acc.cfg;
-    let d = &cfg.params.device;
-    let ecu_w = acc.ecu_power();
+    if opts.overlap {
+        return simulate_events(model_name, jobs, acc, batch, opts);
+    }
 
     let mut layers = Vec::with_capacity(jobs.len());
     let mut total = EnergyBreakdown::default();
     let mut latency = 0.0f64;
     let mut dense_macs_total = 0usize;
+    let mut busy = [0.0f64; NRES];
+    let mut crit = [0.0f64; NRES];
 
     for job in jobs {
-        let mut e = EnergyBreakdown::default();
-        let mut t_layer = 0.0f64;
-        let mut exec_macs = 0usize;
-        let mut tile_rounds = 0usize;
+        let c = cost_layer(job, acc, batch, &opts);
 
-        // ---- MVM phase(s) --------------------------------------------
-        if !job.mvms.is_empty() {
-            let block = job.mvms[0].block;
-            let unit = acc.mvm_unit(block);
-            let timing = unit.timing();
-            let upower = unit.power();
-            let units = match block {
-                BlockKind::Dense => cfg.l,
-                BlockKind::Conv => cfg.m,
-                _ => unreachable!(),
-            };
-            // Per-symbol period: the egress ADC lane is per-row and runs
-            // concurrently when stage-pipelined; it dominates the stage path
-            // (0.82 ns vs 0.36 ns), making converters the bottleneck —
-            // exactly the paper's §II.C.6 observation.
-            let symbol_time = timing.symbol_time_with_adc(opts.pipelined);
-
-            for mvm in &job.mvms {
-                let tiles_r = mvm.out_rows.div_ceil(cfg.k);
-                let tiles_c = mvm.reduction.div_ceil(cfg.n);
-                let tiles = tiles_r * tiles_c;
-                let rounds = tiles.div_ceil(units);
-                let per_tile = timing.weight_load + mvm.symbols as f64 * symbol_time;
-                let t_mvm = rounds as f64 * per_tile;
-                t_layer += t_mvm;
-                tile_rounds += rounds;
-                exec_macs += mvm.exec_macs;
-
-                // active energy: only working tiles draw active power
-                e.mvm_active += upower.active * tiles as f64 * per_tile;
-                // in-block idle: unit slots without a tile in the last round
-                let idle_slots = rounds * units - tiles;
-                let slot_power = if opts.power_gated { upower.gated } else { upower.idle };
-                e.idle += slot_power * idle_slots as f64 * per_tile;
-                // partial-sum accumulation in the ECU when the reduction
-                // spans multiple column tiles
-                if tiles_c > 1 {
-                    let adds = (tiles_c - 1) * mvm.out_rows * mvm.symbols;
-                    e.ecu += adds as f64 * ECU_ENERGY_PER_OP;
-                }
-                // weight traffic (8-bit: 1 B/param), fetched once per tile
-                e.dram += mvm.weight_bytes as f64 * DRAM_ENERGY_PER_BYTE;
-                if !opts.pipelined {
-                    // without the stage-level pipeline the bias stage is
-                    // done electronically: every output value crosses
-                    // ADC → ECU add → DAC before re-entering the optical
-                    // chain (§III.C.2 is precisely what removes this)
-                    let crossings = (mvm.out_rows * mvm.symbols) as f64;
-                    let oeo_per = d.adc_power * d.adc_latency + d.dac_power * d.dac_latency;
-                    e.oeo += crossings * oeo_per;
-                    e.ecu += crossings * ECU_ENERGY_PER_OP;
-                }
-            }
-
-            // the *other* MVM block while this one runs
-            let (other_units, other_power) = match block {
-                BlockKind::Dense => (cfg.m, acc.conv.unit().power()),
-                _ => (cfg.l, acc.dense.unit().power()),
-            };
-            let other_slot = if opts.power_gated { other_power.gated } else { other_power.idle };
-            e.idle += other_slot * other_units as f64 * t_layer;
-
-            // ---- fused norm/act chain --------------------------------
-            let norm_lat = acc.norm.latency(job.norm)
-                + batch as f64 * acc.norm.retune_latency(job.norm);
-            let act_lat = acc.act.latency(job.act);
-            let stream_time = t_layer;
-            if opts.pipelined {
-                // streams behind the MVM: only pipeline-fill latency is
-                // added; the elementwise hardware runs for the stream time
-                t_layer += norm_lat + act_lat;
-                e.elementwise += acc.norm.power(job.norm) * cfg.m as f64 * stream_time
-                    + acc.act.power(job.act) * (cfg.k * units) as f64 * stream_time;
-            } else {
-                // separate buffered passes: each element crosses O/E/O at
-                // every block boundary (ADC out + DAC back in), and the
-                // pass costs wall-clock time at the converter-limited rate
-                for (on, lanes, unit_power, fill) in [
-                    (job.norm != NormKind::None, cfg.m * cfg.k, acc.norm.power(job.norm), norm_lat),
-                    (job.act != ActKind::None, cfg.k * units, acc.act.power(job.act), act_lat),
-                ] {
-                    if !on {
-                        continue;
-                    }
-                    let pass_symbol = d.adc_latency.max(d.dac_latency) + fill.max(0.0) * 0.0;
-                    let pass_t = (job.out_elements as f64 / lanes.max(1) as f64) * pass_symbol + fill;
-                    t_layer += pass_t;
-                    e.elementwise += unit_power * lanes as f64 * pass_t;
-                    let oeo_per_el = d.adc_power * d.adc_latency + d.dac_power * d.dac_latency;
-                    e.oeo += job.out_elements as f64 * oeo_per_el;
-                    // buffer round-trip
-                    e.dram += 2.0 * job.out_elements as f64 * DRAM_ENERGY_PER_BYTE;
-                }
-            }
-
-            // PCMC route for the block chain (re-established per layer)
-            let (sw_lat, sw_e) = (d.pcmc_switch_latency, 3.0 * d.pcmc_switch_energy);
-            t_layer += sw_lat;
-            e.pcmc += sw_e;
-        } else if job.norm != NormKind::None || job.act != ActKind::None || job.ecu_ops > 0 {
-            // standalone elementwise / bookkeeping layer (unfused)
-            let lanes = (cfg.m * cfg.k).max(1);
-            let pass_symbol = d.adc_latency.max(d.dac_latency);
-            let active = job.norm != NormKind::None || job.act != ActKind::None;
-            if active {
-                let fill = acc.norm.latency(job.norm) + acc.act.latency(job.act);
-                let pass_t = (job.out_elements as f64 / lanes as f64) * pass_symbol + fill;
-                t_layer += pass_t;
-                e.elementwise += (acc.norm.power(job.norm) + acc.act.power(job.act))
-                    * lanes as f64
-                    * pass_t;
-                if !opts.pipelined {
-                    let oeo_per_el = d.adc_power * d.adc_latency + d.dac_power * d.dac_latency;
-                    e.oeo += job.out_elements as f64 * oeo_per_el;
-                }
-            }
+        // resource accounting (reporting only — the latency/energy floats
+        // above are untouched by it)
+        busy[Resource::DacLanes.idx()] += c.dac_busy;
+        busy[Resource::AdcLanes.idx()] += c.adc_busy;
+        busy[Resource::Elementwise.idx()] += c.elem_busy;
+        busy[Resource::Ecu.idx()] += c.ecu_busy;
+        busy[Resource::Dram.idx()] += c.dram_bytes / DRAM_BYTES_PER_S;
+        busy[Resource::Pcmc.idx()] += c.route;
+        if let Some(p) = c.pieces.first() {
+            let b = block_resource(p.block).idx();
+            busy[b] += c.mvm_time;
+            crit[b] += c.mvm_time;
         }
-
-        // ---- ECU + activation traffic (all layer kinds) --------------
-        // MAC-class bookkeeping ops and pure data moves (upsample
-        // replication, pixel shuffle, skip concat) are distinct op
-        // classes with distinct energies
-        e.ecu += job.ecu_ops as f64 * ECU_ENERGY_PER_OP
-            + job.copy_ops as f64 * ECU_ENERGY_PER_COPY
-            + ecu_w * t_layer;
-        if !job.mvms.is_empty() {
-            // input fetch + output write-back for compute layers
-            e.dram +=
-                (job.in_elements + job.out_elements) as f64 * DRAM_ENERGY_PER_BYTE;
-        }
+        let elem_sum: f64 = c.elem.iter().sum();
+        crit[Resource::Elementwise.idx()] += elem_sum;
+        crit[Resource::Pcmc.idx()] += c.route;
 
         dense_macs_total += job.dense_macs;
-        latency += t_layer;
-        total.add(&e);
         layers.push(LayerTrace {
             index: job.index,
             name: job.name.clone(),
-            latency: t_layer,
-            energy: e,
+            start: latency,
+            latency: c.serial_latency,
+            critical: c.serial_latency,
+            energy: c.energy,
             dense_macs: job.dense_macs,
-            exec_macs,
-            tile_rounds,
+            exec_macs: c.exec_macs,
+            tile_rounds: c.tile_rounds,
         });
+        latency += c.serial_latency;
+        total.add(&c.energy);
     }
 
+    let resources = Resource::ALL
+        .iter()
+        .map(|&r| ResourceUsage { resource: r, busy: busy[r.idx()], critical: crit[r.idx()] })
+        .collect();
+
     let total_ops = 2.0 * dense_macs_total as f64;
-    let bits = total_ops * cfg.params.system.precision_bits as f64;
+    let bits = total_ops * acc.cfg.params.system.precision_bits as f64;
     SimReport {
         model: model_name.to_string(),
         opts,
         batch,
         latency,
+        serial_latency: latency,
         energy: total,
         layers,
+        resources,
         total_ops,
         total_bits: bits,
     }
@@ -255,7 +165,7 @@ mod tests {
                 &m,
                 &acc,
                 1,
-                OptFlags { sparse: true, pipelined: true, power_gated: false },
+                OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
             );
             assert!(
                 sparse.gops() > 1.2 * dense.gops(),
@@ -278,7 +188,7 @@ mod tests {
             &zoo::srgan(),
             &acc,
             1,
-            OptFlags { sparse: true, pipelined: true, power_gated: false },
+            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
         );
         assert_eq!(a.latency, b.latency);
         assert_eq!(a.energy.total(), b.energy.total());
@@ -344,7 +254,7 @@ mod tests {
             &m,
             &acc,
             1,
-            OptFlags { sparse: true, pipelined: true, power_gated: false },
+            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
         );
         assert!(
             sparse.gops() > 1.5 * dense.gops(),
@@ -406,6 +316,84 @@ mod tests {
         let e: f64 = r.layers.iter().map(|l| l.energy.total()).sum();
         assert!((t - r.latency).abs() < 1e-12 * r.latency.max(1.0));
         assert!((e - r.energy.total()).abs() < 1e-9 * r.energy.total().max(1.0));
+        // sequential engine: layer starts are the running prefix and
+        // per-layer critical time equals the layer latency
+        let mut prefix = 0.0;
+        for l in &r.layers {
+            assert_eq!(l.start, prefix, "{}", l.name);
+            assert_eq!(l.critical, l.latency, "{}", l.name);
+            prefix += l.latency;
+        }
+    }
+
+    #[test]
+    fn closed_form_resource_accounting_is_consistent() {
+        let acc = chip();
+        for m in zoo::extended_generators() {
+            let r = simulate_default(&m, &acc);
+            let crit_sum: f64 = r.resources.iter().map(|u| u.critical).sum();
+            assert!(
+                (crit_sum - r.latency).abs() <= 1e-9 * r.latency,
+                "{}: Σ critical {} vs latency {}",
+                m.name,
+                crit_sum,
+                r.latency
+            );
+            for u in &r.resources {
+                assert!(u.busy >= 0.0 && u.busy.is_finite(), "{}", m.name);
+                // exclusive resources can never be busier than the run;
+                // lane pools (DAC/ADC/ECU/DRAM) attribute aggregate lane
+                // engagement and may legitimately exceed 1x
+                if matches!(
+                    u.resource,
+                    Resource::DenseMvm
+                        | Resource::ConvMvm
+                        | Resource::Elementwise
+                        | Resource::Pcmc
+                ) {
+                    assert!(
+                        u.utilization(r.latency) <= 1.0 + 1e-9,
+                        "{}: {} utilization {}",
+                        m.name,
+                        u.resource.name(),
+                        u.utilization(r.latency)
+                    );
+                }
+            }
+            assert_eq!(r.serial_latency, r.latency, "sequential mode: no overlap gain");
+        }
+    }
+
+    #[test]
+    fn overlap_flag_dispatches_to_the_event_scheduler() {
+        let acc = chip();
+        for m in zoo::extended_generators() {
+            let analytic = simulate(&m, &acc, 1, OptFlags::all());
+            let overlapped = simulate(&m, &acc, 1, OptFlags::overlapped());
+            assert!(
+                overlapped.latency < analytic.latency,
+                "{}: overlap {} must beat analytic {}",
+                m.name,
+                overlapped.latency,
+                analytic.latency
+            );
+            let rel = (overlapped.energy.total() - analytic.energy.total()).abs()
+                / analytic.energy.total();
+            assert!(rel <= 1e-9, "{}: overlap changed energy by {rel}", m.name);
+            assert!(overlapped.overlap_speedup() > 1.0);
+            assert!(overlapped.gops() > analytic.gops());
+        }
+    }
+
+    #[test]
+    fn zero_batch_is_clamped_not_a_panic() {
+        // the Session boundary rejects batch 0 with a typed error; the raw
+        // engine clamps instead of aborting a serve/CLI process
+        let acc = chip();
+        let a = simulate(&zoo::condgan(), &acc, 0, OptFlags::all());
+        let b = simulate(&zoo::condgan(), &acc, 1, OptFlags::all());
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.batch, 1);
     }
 }
 
@@ -582,7 +570,7 @@ mod invariant_tests {
             &m,
             &acc,
             1,
-            OptFlags { sparse: true, pipelined: true, power_gated: false },
+            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
         );
         assert!(gated.avg_power() < ungated.avg_power());
     }

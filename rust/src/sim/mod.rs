@@ -6,22 +6,35 @@
 //! [`crate::arch::Accelerator`] and a set of [`options::OptFlags`], it maps
 //! every layer onto the MVM blocks, applies the three co-design
 //! optimizations (sparse dataflow, two-level pipelining, power gating) and
-//! produces a [`result::SimReport`] with per-layer latency/energy traces
-//! and the paper's two headline metrics, GOPS and EPB.
+//! produces a [`result::SimReport`] with per-layer latency/energy traces,
+//! per-resource busy/critical-path accounting, and the paper's two
+//! headline metrics, GOPS and EPB.
 //!
-//! Modeling approach: tile-level list scheduling. Each layer becomes a set
-//! of MVM *tile rounds* over the K×N banks of the owning block's units;
-//! per-symbol and per-reload costs come from [`crate::arch::unit`]; the
-//! elementwise chain (norm → activation) either streams fused behind the
-//! MVM block (pipelined) or runs as separate buffered passes with O/E/O
-//! conversions (baseline).
+//! Two timing engines share one cost decomposition:
+//!
+//! - **Closed-form** ([`engine`]): tile-level list scheduling with a
+//!   strictly sequential accumulate loop. Each layer becomes a set of MVM
+//!   *tile rounds* over the K×N banks of the owning block's units;
+//!   per-symbol and per-reload costs come from [`crate::arch::unit`]; the
+//!   elementwise chain (norm → activation) either streams fused behind the
+//!   MVM block (pipelined) or runs as separate buffered passes with O/E/O
+//!   conversions (baseline). This is the analytical reference pinned by
+//!   the golden-trace suite.
+//! - **Event-driven overlap** ([`schedule`], gated by
+//!   [`options::OptFlags::overlap`]): the same per-layer costs decomposed
+//!   into resource-tagged segments and list-scheduled on per-resource
+//!   timelines (MVM blocks, DAC/ADC lanes, elementwise chain, ECU, DRAM
+//!   channel, PCMC controller) with double-buffered weight prefetch.
+//!   Identical energy, strictly lower latency on multi-layer models.
 
 pub mod engine;
 pub mod mapper;
 pub mod options;
 pub mod result;
+pub mod schedule;
 
 pub use engine::{simulate, simulate_mapped};
 pub use mapper::{LayerJob, MvmJob};
 pub use options::OptFlags;
-pub use result::{LayerTrace, SimReport};
+pub use result::{LayerTrace, ResourceUsage, SimReport};
+pub use schedule::{simulate_events, Resource};

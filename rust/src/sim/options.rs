@@ -1,6 +1,9 @@
-//! Optimization toggles (the paper's Fig. 12 sensitivity axes).
+//! Optimization toggles (the paper's Fig. 12 sensitivity axes) plus the
+//! event-driven scheduler gate.
 
-/// Which of the three co-design optimizations are enabled.
+/// Which of the three co-design optimizations are enabled, plus whether
+/// the event-driven overlap scheduler ([`crate::sim::schedule`]) replaces
+/// the closed-form sequential engine.
 ///
 /// `Hash`/`Eq` let the flags key the [`crate::api::Session`] mapping cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -12,36 +15,60 @@ pub struct OptFlags {
     pub pipelined: bool,
     /// Power gating + shared DAC array (§III.C.3).
     pub power_gated: bool,
+    /// Event-driven inter-layer overlap (§II.C.6 concurrency): cost layers
+    /// on per-resource timelines with double-buffered weight prefetch
+    /// instead of the strictly sequential closed-form accumulate loop.
+    /// Energy is unchanged; only latency (and the per-resource busy /
+    /// critical-path attribution in [`crate::sim::SimReport`]) differ.
+    /// Off in every paper-calibrated preset so the closed-form path stays
+    /// the analytical reference.
+    pub overlap: bool,
 }
 
 impl OptFlags {
     /// Paper's "Baseline": none of the optimizations.
     pub fn baseline() -> Self {
-        OptFlags { sparse: false, pipelined: false, power_gated: false }
+        OptFlags { sparse: false, pipelined: false, power_gated: false, overlap: false }
     }
 
     /// Paper's "S/W Optimized": sparse dataflow only.
     pub fn sw_optimized() -> Self {
-        OptFlags { sparse: true, pipelined: false, power_gated: false }
+        OptFlags { sparse: true, pipelined: false, power_gated: false, overlap: false }
     }
 
     /// Paper's "Pipelined": pipelining only.
     pub fn pipelined_only() -> Self {
-        OptFlags { sparse: false, pipelined: true, power_gated: false }
+        OptFlags { sparse: false, pipelined: true, power_gated: false, overlap: false }
     }
 
     /// Paper's "Power Gating": gating only.
     pub fn power_gating_only() -> Self {
-        OptFlags { sparse: false, pipelined: false, power_gated: true }
+        OptFlags { sparse: false, pipelined: false, power_gated: true, overlap: false }
     }
 
     /// Paper's "S/W Optimized + Pipelined + Power Gating" (the PhotoGAN
-    /// operating point).
+    /// operating point, costed by the closed-form analytical engine).
     pub fn all() -> Self {
-        OptFlags { sparse: true, pipelined: true, power_gated: true }
+        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: false }
     }
 
-    /// The five Fig. 12 configurations in presentation order.
+    /// The serving operating point: every paper optimization **plus** the
+    /// event-driven inter-layer overlap scheduler. This is what
+    /// `api::SimExecutor` paces by and what `photogan dse` sweeps by
+    /// default — same energy as [`OptFlags::all`], strictly lower latency
+    /// on multi-layer models.
+    pub fn overlapped() -> Self {
+        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: true }
+    }
+
+    /// This flag set with `overlap` forced to `on`.
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// The five Fig. 12 configurations in presentation order (all costed
+    /// analytically — overlap is not a paper axis).
     pub fn fig12_sweep() -> [(&'static str, OptFlags); 5] {
         [
             ("Baseline", OptFlags::baseline()),
@@ -49,6 +76,17 @@ impl OptFlags {
             ("Pipelined", OptFlags::pipelined_only()),
             ("Power Gating", OptFlags::power_gating_only()),
             ("All (PhotoGAN)", OptFlags::all()),
+        ]
+    }
+
+    /// The golden-trace grid: the four regression-snapshotted flag sets
+    /// (`rust/tests/golden_traces.rs`), named for the snapshot filenames.
+    pub fn golden_sweep() -> [(&'static str, OptFlags); 4] {
+        [
+            ("baseline", OptFlags::baseline()),
+            ("sparse", OptFlags::sw_optimized()),
+            ("pipelined", OptFlags::pipelined_only()),
+            ("all", OptFlags::all()),
         ]
     }
 }
@@ -72,5 +110,19 @@ mod tests {
             }
         }
         assert_eq!(OptFlags::default(), OptFlags::all());
+    }
+
+    #[test]
+    fn overlap_rides_on_top_of_the_paper_presets() {
+        assert_eq!(OptFlags::overlapped(), OptFlags::all().with_overlap(true));
+        assert_ne!(OptFlags::overlapped(), OptFlags::all());
+        // no paper-calibrated preset engages the scheduler
+        for (name, f) in OptFlags::fig12_sweep() {
+            assert!(!f.overlap, "{name} must stay analytical");
+        }
+        for (name, f) in OptFlags::golden_sweep() {
+            assert!(!f.overlap, "golden '{name}' must stay analytical");
+        }
+        assert_eq!(OptFlags::overlapped().with_overlap(false), OptFlags::all());
     }
 }

@@ -1,6 +1,10 @@
-//! Simulation results: per-layer traces, energy breakdown, GOPS / EPB.
+//! Simulation results: per-layer traces, per-resource usage, energy
+//! breakdown, GOPS / EPB, and the full-fidelity JSON snapshot the
+//! golden-trace regression suite pins.
 
 use crate::sim::options::OptFlags;
+use crate::sim::schedule::Resource;
+use crate::util::json::{obj, JsonValue};
 
 /// Energy breakdown by subsystem (J).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -35,6 +39,43 @@ impl EnergyBreakdown {
         self.dram += other.dram;
         self.pcmc += other.pcmc;
     }
+
+    /// Itemized JSON (used by the golden-trace snapshots).
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("mvm_active", JsonValue::Num(self.mvm_active)),
+            ("idle", JsonValue::Num(self.idle)),
+            ("elementwise", JsonValue::Num(self.elementwise)),
+            ("oeo", JsonValue::Num(self.oeo)),
+            ("ecu", JsonValue::Num(self.ecu)),
+            ("dram", JsonValue::Num(self.dram)),
+            ("pcmc", JsonValue::Num(self.pcmc)),
+            ("total", JsonValue::Num(self.total())),
+        ])
+    }
+}
+
+/// One resource's aggregate timeline accounting across a simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceUsage {
+    pub resource: Resource,
+    /// Seconds the resource is occupied (or, for replicated lane pools,
+    /// the attributed per-lane engagement).
+    pub busy: f64,
+    /// Seconds of this resource's segments on the end-to-end critical
+    /// path. Across all resources these sum to the report latency.
+    pub critical: f64,
+}
+
+impl ResourceUsage {
+    /// Busy fraction of the end-to-end latency.
+    pub fn utilization(&self, latency: f64) -> f64 {
+        if latency > 0.0 {
+            self.busy / latency
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Per-layer execution trace.
@@ -42,7 +83,17 @@ impl EnergyBreakdown {
 pub struct LayerTrace {
     pub index: usize,
     pub name: String,
+    /// When this layer's first activity was scheduled (s). In the
+    /// closed-form engine this is the running prefix sum; under the
+    /// overlap scheduler a layer may start before its predecessor's span
+    /// ends (double-buffered setup).
+    pub start: f64,
+    /// Closed-form: the layer's sequential cost. Overlap scheduler: the
+    /// wall-clock span from first activity to output-ready.
     pub latency: f64,
+    /// Seconds of this layer's segments on the end-to-end critical path
+    /// (equals `latency` in the closed-form engine).
+    pub critical: f64,
     pub energy: EnergyBreakdown,
     /// Dense-equivalent (workload) MACs.
     pub dense_macs: usize,
@@ -50,6 +101,23 @@ pub struct LayerTrace {
     pub exec_macs: usize,
     /// Tile rounds scheduled (0 for elementwise layers).
     pub tile_rounds: usize,
+}
+
+impl LayerTrace {
+    /// Full-fidelity JSON (golden-trace snapshots).
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("index", JsonValue::Num(self.index as f64)),
+            ("name", JsonValue::Str(self.name.clone())),
+            ("start_s", JsonValue::Num(self.start)),
+            ("latency_s", JsonValue::Num(self.latency)),
+            ("critical_s", JsonValue::Num(self.critical)),
+            ("dense_macs", JsonValue::Num(self.dense_macs as f64)),
+            ("exec_macs", JsonValue::Num(self.exec_macs as f64)),
+            ("tile_rounds", JsonValue::Num(self.tile_rounds as f64)),
+            ("energy_j", self.energy.json()),
+        ])
+    }
 }
 
 /// Full simulation report for one model × one configuration × one opt set.
@@ -60,8 +128,15 @@ pub struct SimReport {
     pub batch: usize,
     /// End-to-end inference latency (s) for the whole batch.
     pub latency: f64,
+    /// The closed-form sequential latency (s): equals `latency` when
+    /// `opts.overlap` is off; under the overlap scheduler it is the
+    /// analytical reference the speedup is measured against.
+    pub serial_latency: f64,
     pub energy: EnergyBreakdown,
     pub layers: Vec<LayerTrace>,
+    /// Per-resource busy time and critical-path attribution, in
+    /// [`Resource::ALL`] order.
+    pub resources: Vec<ResourceUsage>,
     /// Workload op count (2 ops per MAC) the platform is scored on.
     pub total_ops: f64,
     /// Bits processed (ops × precision) — the denominator of EPB.
@@ -98,6 +173,78 @@ impl SimReport {
     pub fn latency_per_sample(&self) -> f64 {
         self.latency / self.batch.max(1) as f64
     }
+
+    /// Speedup ratio of the overlap scheduler vs. the sequential
+    /// reference (`serial_latency / latency`; 1.0 when `opts.overlap`
+    /// is off).
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.latency > 0.0 {
+            self.serial_latency / self.latency
+        } else {
+            1.0
+        }
+    }
+
+    /// The resource with the largest critical-path share, if any time was
+    /// attributed at all.
+    pub fn dominant_resource(&self) -> Option<Resource> {
+        self.resources
+            .iter()
+            .filter(|u| u.critical > 0.0)
+            .max_by(|a, b| a.critical.total_cmp(&b.critical))
+            .map(|u| u.resource)
+    }
+
+    /// Full-fidelity JSON snapshot: every field a regression would care
+    /// about, rendered with shortest-round-trip floats so parsed values
+    /// compare bit-identical. This is what `rust/tests/golden_traces.rs`
+    /// pins under `rust/tests/golden/`.
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("model", JsonValue::Str(self.model.clone())),
+            (
+                "opts",
+                obj(vec![
+                    ("sparse", JsonValue::Bool(self.opts.sparse)),
+                    ("pipelined", JsonValue::Bool(self.opts.pipelined)),
+                    ("power_gated", JsonValue::Bool(self.opts.power_gated)),
+                    ("overlap", JsonValue::Bool(self.opts.overlap)),
+                ]),
+            ),
+            ("batch", JsonValue::Num(self.batch as f64)),
+            ("latency_s", JsonValue::Num(self.latency)),
+            ("serial_latency_s", JsonValue::Num(self.serial_latency)),
+            ("total_ops", JsonValue::Num(self.total_ops)),
+            ("total_bits", JsonValue::Num(self.total_bits)),
+            ("gops", JsonValue::Num(self.gops())),
+            ("epb", JsonValue::Num(self.epb())),
+            ("avg_power_w", JsonValue::Num(self.avg_power())),
+            ("energy_j", self.energy.json()),
+            (
+                "resources",
+                JsonValue::Arr(
+                    self.resources
+                        .iter()
+                        .map(|u| {
+                            obj(vec![
+                                ("resource", JsonValue::Str(u.resource.name().into())),
+                                ("busy_s", JsonValue::Num(u.busy)),
+                                (
+                                    "utilization",
+                                    JsonValue::Num(u.utilization(self.latency)),
+                                ),
+                                ("critical_s", JsonValue::Num(u.critical)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "layers",
+                JsonValue::Arr(self.layers.iter().map(LayerTrace::json).collect()),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -122,23 +269,67 @@ mod tests {
         assert!((a.total() - 56.0).abs() < 1e-12);
     }
 
-    #[test]
-    fn metrics_derive_from_totals() {
-        let r = SimReport {
+    fn toy_report() -> SimReport {
+        SimReport {
             model: "toy".into(),
             opts: OptFlags::all(),
             batch: 1,
             latency: 1e-3,
+            serial_latency: 1e-3,
             energy: EnergyBreakdown { mvm_active: 1e-3, ..Default::default() },
             layers: vec![],
+            resources: Resource::ALL
+                .iter()
+                .map(|&r| ResourceUsage { resource: r, busy: 0.0, critical: 0.0 })
+                .collect(),
             total_ops: 2e9,
             total_bits: 1.6e10,
-        };
+        }
+    }
+
+    #[test]
+    fn metrics_derive_from_totals() {
+        let r = toy_report();
         assert!((r.gops() - 2000.0).abs() < 1e-9);
         assert!((r.epb() - 1e-3 / 1.6e10).abs() < 1e-20);
         assert!((r.avg_power() - 1.0).abs() < 1e-12);
         assert_eq!(r.latency_per_sample(), r.latency, "batch 1: per-sample == total");
         let batched = SimReport { batch: 4, ..r };
         assert!((batched.latency_per_sample() - 0.25e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn overlap_speedup_and_dominant_resource() {
+        let mut r = toy_report();
+        assert_eq!(r.overlap_speedup(), 1.0, "sequential report: no speedup");
+        assert_eq!(r.dominant_resource(), None, "no attributed time yet");
+        r.serial_latency = 2e-3;
+        assert!((r.overlap_speedup() - 2.0).abs() < 1e-12);
+        r.resources[1] = ResourceUsage {
+            resource: Resource::ConvMvm,
+            busy: 0.5e-3,
+            critical: 0.9e-3,
+        };
+        assert_eq!(r.dominant_resource(), Some(Resource::ConvMvm));
+        assert!((r.resources[1].utilization(r.latency) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let r = toy_report();
+        let text = r.json().render();
+        let back = crate::util::json::parse(&text).expect("report JSON must parse");
+        assert_eq!(back.get("model").and_then(|v| v.as_str()), Some("toy"));
+        assert_eq!(back.get("latency_s").and_then(|v| v.as_f64()), Some(1e-3));
+        assert_eq!(
+            back.get("opts").and_then(|o| o.get("overlap")).and_then(|v| v.as_bool()),
+            Some(false)
+        );
+        let resources = back.get("resources").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(resources.len(), Resource::ALL.len());
+        assert_eq!(
+            resources[0].get("resource").and_then(|v| v.as_str()),
+            Some("dense-mvm")
+        );
     }
 }

@@ -54,6 +54,18 @@ fn every_api_error_variant_is_reachable() {
         ApiError::EmptyGrid
     );
 
+    // InvalidGrid — zeroed axis values are typed at the Session boundary
+    // too (requests built field-by-field bypass the builder)
+    let zeroed = SweepRequest {
+        grid: Grid { n: vec![16], k: vec![2], l: vec![11, 0], m: vec![3] },
+        opts: OptFlags::all(),
+        threads: 2,
+    };
+    assert_eq!(
+        session.sweep(&zeroed).unwrap_err(),
+        ApiError::InvalidGrid { reason: "axis l contains 0".into() }
+    );
+
     // InvalidThreads
     assert_eq!(
         SweepRequest::builder().threads(0).build().unwrap_err(),
@@ -156,9 +168,11 @@ fn session_results_bit_identical_to_direct_simulate() {
 #[test]
 fn session_sweep_matches_seed_dse_path() {
     // the session sweeps its full 8-model registry; feed the seed path
-    // the same set so the objectives are comparable bit-for-bit
+    // the same set so the objectives are comparable bit-for-bit. The
+    // builder's default opts now engage the overlap scheduler, so the
+    // seed path gets the same flags.
     let models = zoo::extended_generators();
-    let direct = explore(&Grid::smoke(), &models, OptFlags::all(), 4);
+    let direct = explore(&Grid::smoke(), &models, OptFlags::overlapped(), 4);
     let session = Session::new().unwrap();
     let outcome = session
         .sweep(&SweepRequest::builder().grid(Grid::smoke()).threads(4).build().unwrap())
@@ -296,6 +310,49 @@ fn unknown_serve_model_is_rejected_before_submission() {
     let err = session.model("not-a-gan").unwrap_err();
     assert!(matches!(err, ApiError::UnknownModel { .. }));
     assert_eq!(err.exit_code(), 2);
+}
+
+#[test]
+fn overlap_requests_surface_resource_accounting() {
+    let session = Session::new().unwrap();
+    let analytic = session
+        .simulate(&SimRequest::builder().model("dcgan").build().unwrap())
+        .unwrap();
+    let overlapped = session
+        .simulate(
+            &SimRequest::builder()
+                .model("dcgan")
+                .opts(OptFlags::overlapped())
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+    let (a, o) = (&analytic.rows[0], &overlapped.rows[0]);
+    assert!(o.latency_s < a.latency_s, "overlap must beat the analytical path");
+    assert!(o.overlap_speedup() > 1.0);
+    assert!((o.energy_j - a.energy_j).abs() <= 1e-9 * a.energy_j, "energy must not change");
+    assert!(o.dominant_resource().is_some());
+
+    // JSON carries the overlap flag and the per-resource accounting, and
+    // the critical-path attribution sums to the reported latency
+    let doc = json::parse(&overlapped.to_json()).expect("overlap JSON must parse");
+    assert_eq!(
+        doc.get("opts").and_then(|o| o.get("overlap")).and_then(|v| v.as_bool()),
+        Some(true)
+    );
+    let row = &doc.get("results").and_then(|v| v.as_array()).unwrap()[0];
+    let resources = row.get("resources").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(resources.len(), 8);
+    let crit: f64 = resources
+        .iter()
+        .map(|r| r.get("critical_s").unwrap().as_f64().unwrap())
+        .sum();
+    let lat = row.get("latency_s").unwrap().as_f64().unwrap();
+    assert!((crit - lat).abs() <= 1e-9 * lat, "Σ critical {crit} vs latency {lat}");
+
+    // the overlap outcome renders the extra per-resource table
+    assert_eq!(overlapped.to_tables().len(), 2);
+    assert_eq!(analytic.to_tables().len(), 1);
 }
 
 #[test]

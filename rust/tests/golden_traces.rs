@@ -1,0 +1,206 @@
+//! Golden-trace regression suite: pins the full [`SimReport`] JSON for
+//! every zoo model × every paper flag combination against snapshots in
+//! `rust/tests/golden/`.
+//!
+//! The cost model is the load-bearing artifact of this repo — Figs. 11–14,
+//! the DSE optimum, and every serving latency derive from it — and with
+//! 8 models × {baseline, sparse, pipelined, all} there was previously no
+//! harness catching silent drift. This suite compares **bit-exactly**:
+//! numbers are rendered with shortest-round-trip float formatting, so a
+//! parsed golden float equals the original bits and any cost-model change
+//! shows up as a field-level diff (`layers[3].energy_j.dram: …`).
+//!
+//! Workflows:
+//! - **Blessed regeneration**: `UPDATE_GOLDEN=1 cargo test --test
+//!   golden_traces` rewrites every snapshot (then review the diff in git).
+//! - **Bootstrap**: a missing snapshot is written on first run and the
+//!   test passes with a note — a fresh checkout (or a checkout whose
+//!   goldens were authored in an environment without a toolchain)
+//!   self-pins on its first green run and regresses from there.
+//! - **Mismatch**: the failing report is written to
+//!   `target/golden-diff/<name>.json` (uploaded as a CI artifact) and the
+//!   test panics with a readable field-level diff.
+//!
+//! The snapshotted flag sets all run the closed-form analytical engine
+//! (`overlap` off): that path is the paper-calibrated reference and must
+//! stay bit-identical across refactors. The event-driven scheduler is
+//! pinned *relative* to it by the equivalence and ≤-latency suites in
+//! `sim::schedule`.
+
+use photogan::arch::accelerator::Accelerator;
+use photogan::arch::config::ArchConfig;
+use photogan::models::zoo;
+use photogan::sim::{simulate, OptFlags};
+use photogan::util::json::{parse, JsonValue};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn diff_dir() -> PathBuf {
+    std::env::var_os("CARGO_TARGET_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("target"))
+        .join("golden-diff")
+}
+
+fn update_requested() -> bool {
+    std::env::var("UPDATE_GOLDEN").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// Recursive field-level diff. Numbers compare exactly (the writer's
+/// shortest-round-trip rendering makes parse(render(x)) == x bit-for-bit).
+fn diff(path: &str, golden: &JsonValue, actual: &JsonValue, out: &mut Vec<String>) {
+    match (golden, actual) {
+        (JsonValue::Obj(gm), JsonValue::Obj(am)) => {
+            for (k, gv) in gm {
+                match actual.get(k) {
+                    Some(av) => diff(&format!("{path}.{k}"), gv, av, out),
+                    None => out.push(format!("{path}.{k}: present in golden, missing in actual")),
+                }
+            }
+            for (k, _) in am {
+                if golden.get(k).is_none() {
+                    out.push(format!("{path}.{k}: new field not in golden (re-bless?)"));
+                }
+            }
+        }
+        (JsonValue::Arr(gs), JsonValue::Arr(as_)) => {
+            if gs.len() != as_.len() {
+                out.push(format!("{path}: length {} != {}", gs.len(), as_.len()));
+            }
+            for (i, (gv, av)) in gs.iter().zip(as_).enumerate() {
+                diff(&format!("{path}[{i}]"), gv, av, out);
+            }
+        }
+        (JsonValue::Num(g), JsonValue::Num(a)) => {
+            if g != a {
+                let rel = (g - a).abs() / g.abs().max(f64::MIN_POSITIVE);
+                out.push(format!("{path}: golden {g:e} != actual {a:e} (rel {rel:.2e})"));
+            }
+        }
+        _ => {
+            if golden != actual {
+                out.push(format!("{path}: golden {golden} != actual {actual}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_traces_for_all_models_and_flag_combos() {
+    let dir = golden_dir();
+    fs::create_dir_all(&dir).expect("golden dir must be creatable");
+    let acc = Accelerator::new(ArchConfig::paper_optimum()).expect("paper optimum is valid");
+    let update = update_requested();
+
+    let mut bootstrapped = Vec::new();
+    let mut updated = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+
+    for model in zoo::extended_generators() {
+        for (combo, flags) in OptFlags::golden_sweep() {
+            assert!(!flags.overlap, "golden combos pin the analytical engine");
+            let report = simulate(&model, &acc, 1, flags);
+            let actual = report.json();
+            let mut rendered = actual.render();
+            rendered.push('\n');
+            let name = format!("{}__{}.json", model.name.to_lowercase(), combo);
+            let file = dir.join(&name);
+
+            if update {
+                fs::write(&file, &rendered).expect("write golden");
+                updated.push(name);
+                continue;
+            }
+            if !file.exists() {
+                // first run on a fresh checkout: self-pin and report it
+                fs::write(&file, &rendered).expect("bootstrap golden");
+                bootstrapped.push(name);
+                continue;
+            }
+            let text = fs::read_to_string(&file).expect("read golden");
+            let golden = match parse(&text) {
+                Ok(v) => v,
+                Err(e) => {
+                    failures.push(format!("{name}: golden file does not parse: {e}"));
+                    continue;
+                }
+            };
+            let mut field_diffs = Vec::new();
+            diff("$", &golden, &actual, &mut field_diffs);
+            checked += 1;
+            if !field_diffs.is_empty() {
+                let dd = diff_dir();
+                let _ = fs::create_dir_all(&dd);
+                let _ = fs::write(dd.join(&name), &rendered);
+                let shown = field_diffs.len().min(20);
+                failures.push(format!(
+                    "{name}: {} field(s) drifted:\n    {}{}",
+                    field_diffs.len(),
+                    field_diffs[..shown].join("\n    "),
+                    if field_diffs.len() > shown { "\n    …" } else { "" },
+                ));
+            }
+        }
+    }
+
+    if !updated.is_empty() {
+        eprintln!("[golden] UPDATE_GOLDEN=1: re-blessed {} snapshot(s)", updated.len());
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "[golden] bootstrapped {} missing snapshot(s): {}",
+            bootstrapped.len(),
+            bootstrapped.join(", ")
+        );
+    }
+    assert!(
+        failures.is_empty(),
+        "cost-model drift against {} checked golden trace(s) \
+         (actual reports written to {}; if the change is intentional, \
+         re-bless with UPDATE_GOLDEN=1 and commit the diff):\n\n{}",
+        checked,
+        diff_dir().display(),
+        failures.join("\n\n")
+    );
+}
+
+#[test]
+fn golden_snapshots_carry_the_full_report_shape() {
+    // independent of snapshot state: the JSON a golden pins must expose
+    // every field a regression would care about
+    let acc = Accelerator::new(ArchConfig::paper_optimum()).expect("valid");
+    let r = simulate(&zoo::dcgan(), &acc, 1, OptFlags::all());
+    let doc = r.json();
+    for key in [
+        "model",
+        "opts",
+        "batch",
+        "latency_s",
+        "serial_latency_s",
+        "total_ops",
+        "total_bits",
+        "gops",
+        "epb",
+        "avg_power_w",
+        "energy_j",
+        "resources",
+        "layers",
+    ] {
+        assert!(doc.get(key).is_some(), "report JSON must carry '{key}'");
+    }
+    let layers = doc.get("layers").and_then(|v| v.as_array()).expect("layers array");
+    assert_eq!(layers.len(), r.layers.len());
+    for key in ["index", "name", "start_s", "latency_s", "critical_s", "energy_j"] {
+        assert!(layers[0].get(key).is_some(), "layer JSON must carry '{key}'");
+    }
+    // and it round-trips through the parser bit-exactly
+    let back = parse(&doc.render()).expect("render must parse");
+    let mut diffs = Vec::new();
+    diff("$", &doc, &back, &mut diffs);
+    assert!(diffs.is_empty(), "round-trip drift: {diffs:?}");
+}
