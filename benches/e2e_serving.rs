@@ -3,23 +3,32 @@
 //! 1. **Coordinator overhead** — stub executor, zero compute: isolates L3
 //!    routing/batching cost (the paper's system has no serving layer; this
 //!    shows ours is not the bottleneck).
-//! 2. **Sim-backed scaling sweep** — a closed-loop load generator over the
-//!    `SimExecutor` (photonic-simulator batch timing, no PJRT artifacts),
-//!    sweeping shards × routing policy × batch policy and reporting
-//!    throughput plus p50/p95/p99 latency. This is the "fleet of N
-//!    PhotoGAN chips under load" scenario engine.
-//! 3. **Backpressure demo** — an open-loop burst against a tiny bounded
+//! 2. **Sim-backed scaling sweep** — the library closed-loop generator
+//!    ([`photogan::workload::generator`]) over the `SimExecutor`
+//!    (photonic-simulator batch timing, no PJRT artifacts), sweeping
+//!    shards × routing policy × batch policy and reporting throughput plus
+//!    p50/p95/p99 latency. This is the "fleet of N PhotoGAN chips under
+//!    load" scenario engine; the same cell is reproducible offline via
+//!    `photogan run examples/scenarios/mixed_zoo.json`.
+//! 3. **Backpressure demo** — an open-loop burst through
+//!    [`photogan::workload::generator::open_loop`] against a tiny bounded
 //!    queue, counting typed rejections.
-//! 4. **PJRT serving** (only with `--features pjrt` + `make artifacts`) —
+//! 4. **Mixed-zoo load** — the closed-loop generator under a uniform
+//!    8-model [`TrafficMix`] with model-affinity routing.
+//! 5. **PJRT serving** (only with `--features pjrt` + `make artifacts`) —
 //!    the real image-serving path.
+//!
+//! The load generators live in the library (`workload::generator`), not
+//! here: this bench only assembles servers and prints tables.
 
 mod common;
 
 use photogan::api::{Session, SimExecutor};
-use photogan::coordinator::server::{BatchExecutor, Server, ServerConfig, SubmitError};
+use photogan::coordinator::server::{BatchExecutor, Server, ServerConfig};
 use photogan::coordinator::{BatchPolicy, RoutingPolicy};
 use photogan::util::stats::percentile;
 use photogan::util::table::Table;
+use photogan::workload::{generator, TrafficMix};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -71,72 +80,30 @@ fn coordinator_overhead() {
     }
 }
 
-/// Closed-loop load generator: `clients` threads, each keeping exactly one
-/// request in flight, `per_client` requests each. Returns
-/// (latencies_ms, rejections).
-fn closed_loop(
-    server: &Server,
-    model: &str,
-    clients: usize,
-    per_client: usize,
-) -> (Vec<f64>, u64) {
-    let threads: Vec<_> = (0..clients)
-        .map(|c| {
-            let handle = server.handle();
-            let model = model.to_string();
-            std::thread::spawn(move || {
-                let mut lats = Vec::with_capacity(per_client);
-                let mut rejected = 0u64;
-                for i in 0..per_client {
-                    let seed = (c * per_client + i) as u64;
-                    loop {
-                        match handle.submit(&model, seed, Some((i % 10) as u32), 1) {
-                            Ok(rx) => {
-                                let resp = rx.recv().expect("response");
-                                lats.push(resp.total_time * 1e3);
-                                break;
-                            }
-                            Err(SubmitError::QueueFull { .. }) => {
-                                rejected += 1;
-                                std::thread::yield_now();
-                            }
-                            Err(e) => panic!("submit failed: {e}"),
-                        }
-                    }
-                }
-                (lats, rejected)
-            })
-        })
-        .collect();
-    let mut all = Vec::with_capacity(clients * per_client);
-    let mut rejections = 0u64;
-    for t in threads {
-        let (lats, rej) = t.join().expect("client thread");
-        all.extend(lats);
-        rejections += rej;
-    }
-    (all, rejections)
-}
+/// The closed-loop sweep's table shape is part of the bench contract
+/// (EXPERIMENTS.md quotes these columns); assert it so refactors of the
+/// shared generator cannot silently change the exhibit.
+const SWEEP_COLUMNS: [&str; 8] =
+    ["shards", "routing", "max_batch", "wait µs", "req/s", "p50 ms", "p95 ms", "p99 ms"];
 
 fn sim_scaling_sweep() {
     let session = Arc::new(Session::new().expect("session"));
     // time_scale 1.0: workers really hold batches for the simulated
     // photonic latency, so shard scaling behaves like a fleet of chips
     let exec = Arc::new(SimExecutor::new(Arc::clone(&session)).expect("executor"));
-    let model = "CondGAN";
+    let mix = TrafficMix::single("CondGAN");
     let clients = 16usize;
     let per_client = 64usize;
-    let mut table = Table::new(vec![
-        "shards", "routing", "max_batch", "wait µs", "req/s", "p50 ms", "p95 ms", "p99 ms",
-    ])
-    .with_title(format!(
-        "sim-backed closed-loop serving sweep ({model}, {clients} clients × {per_client} req, \
+    let shard_axis = [1usize, 2, 4];
+    let batch_axis = [(1usize, 0u64), (8, 500), (16, 1000)];
+    let mut table = Table::new(SWEEP_COLUMNS.to_vec()).with_title(format!(
+        "sim-backed closed-loop serving sweep (CondGAN, {clients} clients × {per_client} req, \
          2 workers/shard)"
     ));
     println!("\n== sim-backed shard/routing/batch sweep (no artifacts) ==");
-    for shards in [1usize, 2, 4] {
+    for shards in shard_axis {
         for routing in RoutingPolicy::ALL {
-            for (max_batch, wait_us) in [(1usize, 0u64), (8, 500), (16, 1000)] {
+            for (max_batch, wait_us) in batch_axis {
                 let server = Server::start(
                     Arc::clone(&exec),
                     ServerConfig {
@@ -151,22 +118,35 @@ fn sim_scaling_sweep() {
                     },
                 );
                 let t0 = Instant::now();
-                let (lat, _rej) = closed_loop(&server, model, clients, per_client);
+                let report =
+                    generator::closed_loop(&server.handle(), &mix, clients, per_client, 42);
                 let wall = t0.elapsed().as_secs_f64();
                 server.shutdown();
+                assert_eq!(
+                    report.completed,
+                    clients * per_client,
+                    "closed loop must complete every request"
+                );
                 table.row(vec![
                     shards.to_string(),
                     routing.name().to_string(),
                     max_batch.to_string(),
                     wait_us.to_string(),
-                    format!("{:.0}", lat.len() as f64 / wall),
-                    format!("{:.3}", percentile(&lat, 50.0)),
-                    format!("{:.3}", percentile(&lat, 95.0)),
-                    format!("{:.3}", percentile(&lat, 99.0)),
+                    format!("{:.0}", report.completed as f64 / wall),
+                    format!("{:.3}", report.latency_percentile_ms(50.0)),
+                    format!("{:.3}", report.latency_percentile_ms(95.0)),
+                    format!("{:.3}", report.latency_percentile_ms(99.0)),
                 ]);
             }
         }
     }
+    // pre-refactor table shape: same columns, one row per sweep cell
+    assert_eq!(table.header(), &SWEEP_COLUMNS, "sweep columns must not drift");
+    assert_eq!(
+        table.len(),
+        shard_axis.len() * RoutingPolicy::ALL.len() * batch_axis.len(),
+        "one row per (shards × routing × batch policy) cell"
+    );
     table.print();
 }
 
@@ -185,22 +165,14 @@ fn backpressure_demo() {
         },
     );
     let burst = 512usize;
-    let mut admitted = Vec::new();
-    let mut rejected = 0u64;
-    for i in 0..burst {
-        match server.submit("CondGAN", i as u64, Some((i % 10) as u32), 1) {
-            Ok(rx) => admitted.push(rx),
-            Err(SubmitError::QueueFull { .. }) => rejected += 1,
-            Err(e) => panic!("submit failed: {e}"),
-        }
-    }
-    for rx in &admitted {
-        let _ = rx.recv();
-    }
+    // one simultaneous burst (offset 0 for every arrival, no pacing)
+    let offsets = vec![0.0f64; burst];
+    let report =
+        generator::open_loop(&server.handle(), &TrafficMix::single("CondGAN"), &offsets, 0.0, 7);
     server.shutdown();
     println!(
-        "  burst of {burst}: admitted {} / rejected {rejected} (typed SubmitError::QueueFull)",
-        admitted.len()
+        "  burst of {burst}: admitted {} / rejected {} (typed SubmitError::QueueFull)",
+        report.completed, report.rejections
     );
 }
 
@@ -213,7 +185,7 @@ fn mixed_zoo_demo() {
         SimExecutor::with_options(Arc::clone(&session), photogan::sim::OptFlags::all(), 0.0)
             .expect("executor"),
     );
-    let names = exec.models();
+    let mix = TrafficMix::uniform(&exec.models()).expect("mix");
     let server = Server::start(
         Arc::clone(&exec),
         ServerConfig {
@@ -224,27 +196,18 @@ fn mixed_zoo_demo() {
             queue_depth: 256,
         },
     );
-    let per_model = 8usize;
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..per_model)
-        .flat_map(|i| {
-            names.iter().map(move |n| (n.clone(), i)).collect::<Vec<_>>()
-        })
-        .map(|(name, i)| server.submit(&name, i as u64, None, 1).expect("submit"))
-        .collect();
-    let mut lat = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        lat.push(rx.recv().expect("response").total_time * 1e3);
-    }
+    let report = generator::closed_loop(&server.handle(), &mix, 8, 8, 11);
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown();
+    let models_hit = report.per_model.iter().filter(|(_, n)| *n > 0).count();
     println!(
-        "  {} models × {per_model} req: {:.0} req/s  p50={:.3}ms p99={:.3}ms \
-         ({} per-model series)",
-        names.len(),
-        lat.len() as f64 / wall,
-        percentile(&lat, 50.0),
-        percentile(&lat, 99.0),
+        "  {} models × uniform mix, 64 closed-loop req: {:.0} req/s  \
+         p50={:.3}ms p99={:.3}ms ({models_hit} models hit, {} per-model series)",
+        mix.len(),
+        report.completed as f64 / wall,
+        report.latency_percentile_ms(50.0),
+        report.latency_percentile_ms(99.0),
         stats.per_model.len()
     );
 }
@@ -280,22 +243,20 @@ fn pjrt_serving() {
             },
         );
         let t0 = Instant::now();
-        let rxs: Vec<_> = (0..requests)
-            .map(|i| {
-                server.submit(&model, i as u64, Some((i % 10) as u32), 1).expect("submit")
-            })
-            .collect();
-        let mut lat = Vec::with_capacity(requests);
-        for rx in rxs {
-            lat.push(rx.recv().unwrap().total_time * 1e3);
-        }
+        let report = generator::closed_loop(
+            &server.handle(),
+            &TrafficMix::single(model.clone()),
+            4,
+            requests / 4,
+            13,
+        );
         let wall = t0.elapsed().as_secs_f64();
         server.shutdown();
         println!(
             "  max_batch={max_batch:2}: {:7.1} img/s  p50={:.1}ms p99={:.1}ms",
-            requests as f64 / wall,
-            percentile(&lat, 50.0),
-            percentile(&lat, 99.0)
+            report.completed as f64 / wall,
+            report.latency_percentile_ms(50.0),
+            report.latency_percentile_ms(99.0)
         );
     }
 }

@@ -1,22 +1,28 @@
-//! **End-to-end serving driver** (the repo's E2E validation): load the
-//! build-time-trained CondGAN artifact, serve a batched request stream
-//! through the full coordinator → batcher → worker → PJRT stack, verify
-//! the trained model produces class-separated images, and report
-//! latency/throughput percentiles.
+//! **End-to-end serving driver** (the repo's E2E validation): serve a
+//! batched request stream from the build-time-trained CondGAN artifact
+//! through the full coordinator → batcher → worker → PJRT stack and
+//! report latency/throughput percentiles.
+//!
+//! This is now a thin *scenario preset*: the example builds a one-stage
+//! threaded serve [`Scenario`] (backend `pjrt`) and runs it through the
+//! same `plan → run` path as `photogan run scenario.json` / `photogan
+//! serve --backend pjrt`. The previous version's image-level "mode check"
+//! (brightest-band class separation of the trained CondGAN) was retired
+//! with this rewrite — the scenario envelope reports serving metrics, not
+//! pixels; to eyeball trained-model output, call
+//! `photogan::runtime::Engine::generate_sync` directly (the `golden` test
+//! suite compares generated outputs against recorded JAX references).
 //!
 //! This is the experiment recorded in EXPERIMENTS.md §E2E. Run:
 //!
 //! ```text
-//! make artifacts && cargo run --release --example serve_gan [-- requests=256 batch=8 workers=2]
+//! make artifacts && cargo run --release --features pjrt --example serve_gan \
+//!     [-- requests=256 batch=8 workers=2]
 //! ```
 
-use photogan::coordinator::server::{Server, ServerConfig};
-use photogan::coordinator::BatchPolicy;
-use photogan::runtime::Engine;
-use photogan::util::stats::percentile;
-use std::path::Path;
+use photogan::api::scenario::{Scenario, ServeEngine, ServeStage, StageSpec};
+use photogan::api::Session;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 fn arg(name: &str, default: usize) -> usize {
     std::env::args()
@@ -24,115 +30,32 @@ fn arg(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn main() -> photogan::Result<()> {
-    let requests = arg("requests", 256);
-    let max_batch = arg("batch", 8);
-    let workers = arg("workers", 2);
-    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-
-    eprintln!("[serve_gan] compiling artifacts (one-time PJRT cost) …");
-    let t_load = Instant::now();
-    let engine = Arc::new(Engine::load(&artifacts)?);
-    let model = if engine.model_names().iter().any(|m| m == "condgan") {
-        "condgan".to_string()
-    } else {
-        engine.model_names()[0].clone()
+fn main() -> Result<(), photogan::api::ApiError> {
+    let artifacts =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let stage = ServeStage {
+        engine: ServeEngine::Threaded,
+        backend: "pjrt".into(),
+        artifacts: Some(artifacts.display().to_string()),
+        model: Some("condgan".into()),
+        requests: arg("requests", 256),
+        max_batch: arg("batch", 8),
+        workers: arg("workers", 2),
+        ..ServeStage::default()
     };
-    let meta = engine.meta(&model).unwrap().clone();
     eprintln!(
-        "[serve_gan] loaded {:?} in {:.1}s; serving '{model}' ({} px/img, compiled batch {})",
-        engine.model_names(),
-        t_load.elapsed().as_secs_f64(),
-        meta.output_elements,
-        meta.batch
+        "[serve_gan] compiling artifacts from {} (one-time PJRT cost) …",
+        artifacts.display()
     );
 
-    // -- warm the executable (first execution pays one-time costs) --------
-    engine.generate_sync(&model, &[(0, Some(0))])?;
-
-    let server = Server::start(
-        Arc::clone(&engine),
-        ServerConfig {
-            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(5) },
-            workers,
-            ..Default::default()
-        },
-    );
-
-    // -- drive an open-loop request stream --------------------------------
-    let t0 = Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| {
-            server
-                .submit(&model, 1000 + i as u64, Some((i % 10) as u32), 1)
-                .expect("submit within the default queue depth")
-        })
-        .collect();
-    let mut latencies = Vec::with_capacity(requests);
-    let mut queue_times = Vec::with_capacity(requests);
-    let mut batch_sizes = Vec::with_capacity(requests);
-    let mut per_class_images: Vec<Vec<f32>> = vec![Vec::new(); 10];
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
-        latencies.push(resp.total_time * 1e3);
-        queue_times.push(resp.queue_time * 1e3);
-        batch_sizes.push(resp.served_batch as f64);
-        if per_class_images[i % 10].is_empty() {
-            per_class_images[i % 10] = resp.images.clone();
-        }
+    let session = Arc::new(Session::new()?);
+    let scenario = Scenario::single("serve-gan", StageSpec::Serve(stage));
+    let plan = session.plan(&scenario)?;
+    let outcome = session.run(&plan)?;
+    for table in outcome.to_tables() {
+        table.print();
+        println!();
     }
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = server.shutdown();
-
-    println!("== E2E serving results ({requests} requests, max_batch={max_batch}, workers={workers}) ==");
-    println!("throughput : {:8.1} images/s  (wall {wall:.2}s)", requests as f64 / wall);
-    println!(
-        "latency    : p50={:.1}ms  p90={:.1}ms  p99={:.1}ms  max={:.1}ms",
-        percentile(&latencies, 50.0),
-        percentile(&latencies, 90.0),
-        percentile(&latencies, 99.0),
-        percentile(&latencies, 100.0),
-    );
-    println!(
-        "queueing   : p50={:.1}ms  p99={:.1}ms   mean batch={:.1}",
-        percentile(&queue_times, 50.0),
-        percentile(&queue_times, 99.0),
-        batch_sizes.iter().sum::<f64>() / batch_sizes.len() as f64,
-    );
-    println!("server     : {} requests / {} samples", stats.total_requests, stats.total_samples);
-
-    // -- verify the *trained* model produces class-separated modes --------
-    // The synthetic training data puts a bright band at row 2+2c for class
-    // c (python/compile/train.py); check the generated images' brightest
-    // band tracks the class. With an untrained artifact this degrades to
-    // chance and we only warn.
-    let side = 28usize;
-    if meta.output_elements == side * side {
-        let mut hits = 0;
-        for (cls, img) in per_class_images.iter().enumerate() {
-            if img.is_empty() {
-                continue;
-            }
-            let row_mean: Vec<f32> = (0..side)
-                .map(|r| img[r * side..(r + 1) * side].iter().sum::<f32>() / side as f32)
-                .collect();
-            let brightest = row_mean
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            let predicted = ((brightest as i64 - 3).clamp(0, 18) / 2) as usize;
-            if predicted == cls {
-                hits += 1;
-            }
-        }
-        println!("mode check : {hits}/10 classes produce their trained band pattern");
-        if hits >= 6 {
-            println!("mode check : PASS (trained generator is class-conditional)");
-        } else {
-            println!("mode check : WEAK — train longer via PHOTOGAN_TRAIN_STEPS before `make artifacts`");
-        }
-    }
+    println!("{}", outcome.to_json());
     Ok(())
 }

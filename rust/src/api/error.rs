@@ -46,6 +46,21 @@ pub enum ApiError {
     /// bounded queue is full and nothing was in flight to drain —
     /// typed backpressure instead of unbounded queuing.
     Backpressure { shard: usize, outstanding: usize, limit: usize },
+    /// A scenario file could not be read (the `photogan run` front door).
+    ScenarioIo { path: String, reason: String },
+    /// A scenario document is structurally malformed: bad JSON, a missing
+    /// or mistyped member, an unknown stage kind / routing policy / opts
+    /// preset… `field` is the JSON path of the offending member (e.g.
+    /// `stages[2].routing`); `$` means the document root.
+    ScenarioParse { field: String, reason: String },
+    /// A traffic-mix entry with a non-positive (or non-finite) weight.
+    /// `field` names the offending member (e.g. `stages[1].mix[0].weight`).
+    InvalidMixWeight { field: String, model: String, weight: f64 },
+    /// An arrival rate that is non-finite or non-positive (NaN included).
+    InvalidRate { field: String, rate: f64 },
+    /// A duration/window that is non-finite or non-positive (zero-duration
+    /// stages can generate no traffic).
+    InvalidDuration { field: String, seconds: f64 },
     /// A command-line flag failed to parse (carried into the API layer so
     /// the CLI has a single error channel). An empty `flag` means the
     /// error is not attributable to one flag (e.g. a stray positional).
@@ -80,6 +95,32 @@ impl fmt::Display for ApiError {
                     f,
                     "backpressure: shard {shard} queue is full \
                      ({outstanding}/{limit} samples outstanding)"
+                )
+            }
+            ApiError::ScenarioIo { path, reason } => {
+                write!(f, "cannot read scenario '{path}': {reason}")
+            }
+            ApiError::ScenarioParse { field, reason } => {
+                write!(f, "scenario field '{field}': {reason}")
+            }
+            ApiError::InvalidMixWeight { field, model, weight } => {
+                write!(
+                    f,
+                    "scenario field '{field}': mix weight for '{model}' must be finite \
+                     and > 0 (got {weight})"
+                )
+            }
+            ApiError::InvalidRate { field, rate } => {
+                write!(
+                    f,
+                    "scenario field '{field}': rate must be finite and > 0 (got {rate})"
+                )
+            }
+            ApiError::InvalidDuration { field, seconds } => {
+                write!(
+                    f,
+                    "scenario field '{field}': duration must be finite and > 0 \
+                     (got {seconds})"
                 )
             }
             ApiError::InvalidFlag { flag, reason } if flag.is_empty() => {
@@ -152,9 +193,10 @@ impl ApiError {
     /// conventions.
     pub fn exit_code(&self) -> i32 {
         match self {
-            ApiError::ArtifactError(_) | ApiError::Internal(_) | ApiError::Backpressure { .. } => {
-                1
-            }
+            ApiError::ArtifactError(_)
+            | ApiError::Internal(_)
+            | ApiError::Backpressure { .. }
+            | ApiError::ScenarioIo { .. } => 1,
             _ => 2,
         }
     }
@@ -179,6 +221,18 @@ mod tests {
             ApiError::InvalidShards(0),
             ApiError::InvalidTimeScale(-1.0),
             ApiError::Backpressure { shard: 2, outstanding: 64, limit: 64 },
+            ApiError::ScenarioIo { path: "x.json".into(), reason: "no such file".into() },
+            ApiError::ScenarioParse { field: "stages[0].kind".into(), reason: "bad".into() },
+            ApiError::InvalidMixWeight {
+                field: "stages[1].mix[0].weight".into(),
+                model: "dcgan".into(),
+                weight: -1.0,
+            },
+            ApiError::InvalidRate { field: "stages[1].arrival.rate_hz".into(), rate: f64::NAN },
+            ApiError::InvalidDuration {
+                field: "stages[1].arrival.duration_s".into(),
+                seconds: 0.0,
+            },
             ApiError::InvalidFlag { flag: "batch".into(), reason: "missing value".into() },
             ApiError::InvalidFlag { flag: String::new(), reason: "stray 'x'".into() },
             ApiError::ArtifactError("no artifacts".into()),
@@ -203,6 +257,19 @@ mod tests {
         assert_eq!(ApiError::InvalidBatch(0).exit_code(), 2);
         assert_eq!(ApiError::ArtifactError("x".into()).exit_code(), 1);
         assert_eq!(ApiError::Internal("x".into()).exit_code(), 1);
+        // a malformed scenario is a usage error; an unreadable file is not
+        assert_eq!(
+            ApiError::ScenarioParse { field: "$".into(), reason: "x".into() }.exit_code(),
+            2
+        );
+        assert_eq!(
+            ApiError::InvalidRate { field: "f".into(), rate: 0.0 }.exit_code(),
+            2
+        );
+        assert_eq!(
+            ApiError::ScenarioIo { path: "x".into(), reason: "gone".into() }.exit_code(),
+            1
+        );
     }
 
     #[test]

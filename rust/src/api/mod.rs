@@ -53,6 +53,13 @@
 //! PJRT artifacts), while `--backend pjrt` swaps in the real AOT-HLO
 //! engine. See [`serve`] for the request knobs (shards, routing policy,
 //! bounded queue depth, pacing).
+//!
+//! On top of the request types sits the declarative [`scenario`] layer:
+//! a JSON [`Scenario`] (traffic mixes, arrival processes, SLO targets,
+//! stage lists) compiles via [`Session::plan`] into a [`Plan`] and
+//! executes via [`Session::run`] into one [`ScenarioOutcome`] envelope
+//! with per-stage SLO verdicts — `photogan run scenario.json`. The five
+//! legacy subcommands are thin presets over the same path.
 
 // The typed-error contract is enforced mechanically: no `unwrap`/`expect`
 // may land in the API layer (test modules opt out locally).
@@ -62,18 +69,23 @@ pub mod error;
 pub mod executor;
 pub mod outcome;
 pub mod request;
+pub mod scenario;
 pub mod serve;
 pub mod session;
 
 pub use error::{ApiError, ApiResult};
 pub use executor::SimExecutor;
 pub use outcome::{
-    CompareOutcome, Outcome, PlatformSeries, ResourceRow, ServeOutcome, SimOutcome, SimRow,
-    SweepOutcome,
+    CompareOutcome, Outcome, PlatformSeries, ReportOutcome, ResourceRow, ServeOutcome,
+    SimOutcome, SimRow, SweepOutcome, WorkloadOutcome,
 };
 pub use request::{
     default_threads, ModelSelect, SimRequest, SimRequestBuilder, SweepRequest,
     SweepRequestBuilder,
+};
+pub use scenario::{
+    CompareStage, DseStage, Plan, PlannedStage, ReportStage, Scenario, ScenarioOutcome,
+    ServeEngine, ServeStage, SimStage, SloCheck, SloSpec, SloVerdict, StageOutcome, StageSpec,
 };
 pub use serve::{ServeBackend, ServeRequest, ServeRequestBuilder};
 pub use session::Session;

@@ -571,6 +571,208 @@ impl ServeOutcome {
     }
 }
 
+/// Outcome of a virtual-time serve stage (the deterministic scenario
+/// engine — see [`crate::workload::vserve`]). Every field is a pure
+/// function of `(scenario, seed)`: no wall-clock quantities appear, which
+/// is what makes scenario JSON byte-identical across runs.
+#[derive(Debug, Clone)]
+pub struct WorkloadOutcome {
+    /// Normalized `(model, weight)` mix, in declaration order.
+    pub mix: Vec<(String, f64)>,
+    /// Arrival-process kind (`"poisson"`, `"closed-loop"`, …).
+    pub arrival_kind: String,
+    /// One-line arrival description.
+    pub arrival: String,
+    pub shards: usize,
+    /// Virtual workers per shard.
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: f64,
+    pub queue_depth: usize,
+    /// Routing policy name.
+    pub routing: String,
+    /// Submission attempts / admissions / typed queue-full rejections.
+    pub offered: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// Virtual seconds from stream start to the last completion.
+    pub makespan_s: f64,
+    /// Admitted requests per virtual second.
+    pub throughput_rps: f64,
+    /// Virtual latency distribution (ms).
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Dispatched batches and their mean size.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Admitted requests per mix model, declaration order.
+    pub per_model: Vec<(String, u64)>,
+    /// `(shard, requests, utilization)` per shard.
+    pub per_shard: Vec<(usize, u64, f64)>,
+}
+
+impl WorkloadOutcome {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec!["scope", "summary"]).with_title(format!(
+            "serve[virtual] {}: shards={} workers={} routing={} — {} offered, \
+             {} admitted, {} rejected in {:.4}s virtual ({:.0} req/s) \
+             p50={:.3}ms p95={:.3}ms p99={:.3}ms mean batch={:.2}",
+            self.arrival,
+            self.shards,
+            self.workers,
+            self.routing,
+            self.offered,
+            self.admitted,
+            self.rejected,
+            self.makespan_s,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_batch,
+        ));
+        for (shard, requests, util) in &self.per_shard {
+            t.row(vec![
+                format!("shard {shard}"),
+                format!("{requests} req, {:.1}% worker occupancy", 100.0 * util),
+            ]);
+        }
+        for (model, n) in &self.per_model {
+            t.row(vec![format!("model {model}"), format!("{n} req")]);
+        }
+        t
+    }
+
+    pub fn to_tables(&self) -> Vec<Table> {
+        vec![self.to_table()]
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("command", JsonValue::Str("serve".into())),
+            ("engine", JsonValue::Str("virtual".into())),
+            (
+                "mix",
+                JsonValue::Arr(
+                    self.mix
+                        .iter()
+                        .map(|(m, w)| {
+                            obj(vec![
+                                ("model", JsonValue::Str(m.clone())),
+                                ("weight", JsonValue::Num(*w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("arrival_kind", JsonValue::Str(self.arrival_kind.clone())),
+            ("arrival", JsonValue::Str(self.arrival.clone())),
+            ("shards", JsonValue::Num(self.shards as f64)),
+            ("workers", JsonValue::Num(self.workers as f64)),
+            ("max_batch", JsonValue::Num(self.max_batch as f64)),
+            ("max_wait_ms", JsonValue::Num(self.max_wait_ms)),
+            ("queue_depth", JsonValue::Num(self.queue_depth as f64)),
+            ("routing", JsonValue::Str(self.routing.clone())),
+            ("offered", JsonValue::Num(self.offered as f64)),
+            ("admitted", JsonValue::Num(self.admitted as f64)),
+            ("rejected", JsonValue::Num(self.rejected as f64)),
+            ("makespan_s", JsonValue::Num(self.makespan_s)),
+            ("throughput_rps", JsonValue::Num(self.throughput_rps)),
+            ("mean_ms", JsonValue::Num(self.mean_ms)),
+            ("p50_ms", JsonValue::Num(self.p50_ms)),
+            ("p95_ms", JsonValue::Num(self.p95_ms)),
+            ("p99_ms", JsonValue::Num(self.p99_ms)),
+            ("batches", JsonValue::Num(self.batches as f64)),
+            ("mean_batch", JsonValue::Num(self.mean_batch)),
+            (
+                "per_model",
+                JsonValue::Obj(
+                    self.per_model
+                        .iter()
+                        .map(|(m, n)| (m.clone(), JsonValue::Num(*n as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "per_shard",
+                JsonValue::Arr(
+                    self.per_shard
+                        .iter()
+                        .map(|(shard, requests, util)| {
+                            obj(vec![
+                                ("shard", JsonValue::Num(*shard as f64)),
+                                ("requests", JsonValue::Num(*requests as f64)),
+                                ("utilization", JsonValue::Num(*util)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
+/// Outcome of a report stage: every paper exhibit, rendered. The tables
+/// are held structurally so both the CLI path (`to_tables`) and the JSON
+/// path can replay them.
+#[derive(Debug, Clone)]
+pub struct ReportOutcome {
+    pub threads: usize,
+    pub tables: Vec<Table>,
+}
+
+impl ReportOutcome {
+    pub fn to_table(&self) -> Table {
+        self.tables.first().cloned().unwrap_or_default()
+    }
+
+    pub fn to_tables(&self) -> Vec<Table> {
+        self.tables.clone()
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("command", JsonValue::Str("report".into())),
+            ("threads", JsonValue::Num(self.threads as f64)),
+            (
+                "tables",
+                JsonValue::Arr(
+                    self.tables
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                (
+                                    "title",
+                                    t.title()
+                                        .map(|s| JsonValue::Str(s.to_string()))
+                                        .unwrap_or(JsonValue::Null),
+                                ),
+                                ("header", str_arr(t.header())),
+                                (
+                                    "rows",
+                                    JsonValue::Arr(
+                                        t.rows().iter().map(|r| str_arr(r)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
 /// Any Session outcome — lets callers hold/render results uniformly.
 #[derive(Debug, Clone)]
 pub enum Outcome {
@@ -578,6 +780,8 @@ pub enum Outcome {
     Sweep(SweepOutcome),
     Compare(CompareOutcome),
     Serve(ServeOutcome),
+    Workload(WorkloadOutcome),
+    Report(ReportOutcome),
 }
 
 impl Outcome {
@@ -588,6 +792,8 @@ impl Outcome {
             Outcome::Sweep(o) => o.to_table(),
             Outcome::Compare(o) => o.to_table(),
             Outcome::Serve(o) => o.to_table(),
+            Outcome::Workload(o) => o.to_table(),
+            Outcome::Report(o) => o.to_table(),
         }
     }
 
@@ -598,16 +804,25 @@ impl Outcome {
             Outcome::Sweep(o) => o.to_tables(),
             Outcome::Compare(o) => o.to_tables(),
             Outcome::Serve(o) => o.to_tables(),
+            Outcome::Workload(o) => o.to_tables(),
+            Outcome::Report(o) => o.to_tables(),
+        }
+    }
+
+    /// Machine-readable JSON document (structured form).
+    pub fn json(&self) -> JsonValue {
+        match self {
+            Outcome::Sim(o) => o.json(),
+            Outcome::Sweep(o) => o.json(),
+            Outcome::Compare(o) => o.json(),
+            Outcome::Serve(o) => o.json(),
+            Outcome::Workload(o) => o.json(),
+            Outcome::Report(o) => o.json(),
         }
     }
 
     /// Machine-readable JSON document.
     pub fn to_json(&self) -> String {
-        match self {
-            Outcome::Sim(o) => o.to_json(),
-            Outcome::Sweep(o) => o.to_json(),
-            Outcome::Compare(o) => o.to_json(),
-            Outcome::Serve(o) => o.to_json(),
-        }
+        self.json().render()
     }
 }

@@ -25,6 +25,9 @@ pub enum ModelSelect {
     All,
     /// One model by (case-insensitive) name.
     Named(String),
+    /// An explicit ordered subset by (case-insensitive) name — what a
+    /// scenario's `models` list compiles to.
+    Subset(Vec<String>),
 }
 
 /// A validated simulation request (construct via [`SimRequest::builder`]).
@@ -81,6 +84,19 @@ impl SimRequestBuilder {
     /// Simulate every registered model (the default).
     pub fn all_models(mut self) -> Self {
         self.models = ModelSelect::All;
+        self
+    }
+
+    /// Restrict to an ordered subset of models by name (each resolved
+    /// against the session registry at execution time; an empty list means
+    /// every registered model, matching [`ModelSelect::All`]).
+    pub fn models<S: Into<String>>(mut self, names: Vec<S>) -> Self {
+        let names: Vec<String> = names.into_iter().map(Into::into).collect();
+        self.models = if names.is_empty() {
+            ModelSelect::All
+        } else {
+            ModelSelect::Subset(names)
+        };
         self
     }
 

@@ -1,0 +1,1705 @@
+//! The declarative Scenario layer: JSON workload descriptions compiled
+//! into validated plans and executed into one outcome envelope.
+//!
+//! A [`Scenario`] is a typed IR for an experiment: a name, a seed, and a
+//! stage list drawing on the session's five capabilities (simulate / dse /
+//! compare / serve / report). Serve stages carry a weighted model
+//! [`TrafficMix`], an [`ArrivalProcess`] (closed-loop, open-loop Poisson,
+//! bursty on/off, or recorded-trace replay), a fleet shape, and optional
+//! SLO targets.
+//!
+//! The pipeline is `parse → plan → run`:
+//!
+//! 1. [`Scenario::from_json`] parses the document into the IR (shape
+//!    errors are per-field [`ApiError::ScenarioParse`]).
+//! 2. [`Session::plan`] validates the IR against the session — model
+//!    names resolve against the registry ([`ApiError::UnknownModel`]),
+//!    mix weights must be positive ([`ApiError::InvalidMixWeight`]),
+//!    rates and durations must be finite and positive
+//!    ([`ApiError::InvalidRate`] / [`ApiError::InvalidDuration`]) — and
+//!    compiles each stage into an executable [`PlannedStage`].
+//! 3. [`Session::run`] executes the [`Plan`] into a [`ScenarioOutcome`]:
+//!    one envelope holding every stage's [`Outcome`] plus a per-stage
+//!    [`SloVerdict`], rendering as tables or JSON.
+//!
+//! Serve stages default to the **virtual** engine
+//! ([`crate::workload::vserve`]): a deterministic virtual-time simulation
+//! whose results are byte-identical for a fixed seed. `engine:
+//! "threaded"` instead drives the real multi-shard coordinator through
+//! [`Session::serve`] (wall-clock timing — what `photogan serve`
+//! compiles to).
+//!
+//! The five legacy CLI subcommands are thin presets over this layer (see
+//! [`Scenario::single`] and the `*Stage::default` impls): `photogan
+//! simulate --model dcgan` builds a one-stage scenario and runs it through
+//! the same `plan → run` path as `photogan run scenario.json`.
+//!
+//! ```
+//! use photogan::api::{Scenario, Session};
+//! use std::sync::Arc;
+//!
+//! let text = r#"{
+//!   "name": "demo", "seed": 3,
+//!   "stages": [
+//!     { "kind": "simulate", "name": "sim", "models": ["dcgan"], "batch": 2 },
+//!     { "kind": "serve", "name": "fleet",
+//!       "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+//!       "arrival": { "process": "closed-loop", "clients": 2, "per_client": 8 },
+//!       "shards": 2, "slo": { "p99_ms": 1000.0 } }
+//!   ]
+//! }"#;
+//! let scenario = Scenario::from_json(text)?;
+//! let session = Arc::new(Session::new()?);
+//! let plan = session.plan(&scenario)?;
+//! let outcome = session.run(&plan)?;
+//! assert_eq!(outcome.stages.len(), 2);
+//! assert!(outcome.to_json().contains("\"slo\""));
+//! // the IR round-trips: parse(to_json(s)) == s
+//! assert_eq!(Scenario::from_json(&scenario.to_json())?, scenario);
+//! # Ok::<(), photogan::api::ApiError>(())
+//! ```
+
+use super::error::ApiError;
+use super::outcome::{Outcome, ReportOutcome, SimOutcome, SweepOutcome, WorkloadOutcome};
+use super::request::{SimRequest, SweepRequest};
+use super::serve::{ServeBackend, ServeRequest};
+use super::session::Session;
+use crate::arch::config::ArchConfig;
+use crate::coordinator::RoutingPolicy;
+use crate::dse::Grid;
+use crate::report;
+use crate::sim::OptFlags;
+use crate::util::json::{obj, JsonValue};
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::vserve::{simulate_serve, ServiceModel, VirtualServeConfig};
+use crate::workload::{ArrivalProcess, MixError, TrafficMix};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------- SLOs
+
+/// Optional per-stage service-level objectives. Which members apply
+/// depends on the stage kind: serve stages check `p99_ms` /
+/// `min_throughput_rps` / `max_reject_frac`, simulate stages check
+/// `max_latency_ms` / `min_gops`, dse stages check `min_gops` (of the
+/// sweep optimum). Setting an inapplicable member is a typed plan error.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SloSpec {
+    /// Serve: p99 end-to-end latency must be ≤ this many milliseconds.
+    pub p99_ms: Option<f64>,
+    /// Serve: goodput must be ≥ this many requests per second.
+    pub min_throughput_rps: Option<f64>,
+    /// Serve: rejected fraction of submissions must be ≤ this.
+    pub max_reject_frac: Option<f64>,
+    /// Simulate: worst per-model latency must be ≤ this many ms.
+    pub max_latency_ms: Option<f64>,
+    /// Simulate / dse: worst per-model (or optimum) GOPS must be ≥ this.
+    pub min_gops: Option<f64>,
+}
+
+impl SloSpec {
+    /// True when no objective is set.
+    pub fn is_empty(&self) -> bool {
+        self.p99_ms.is_none()
+            && self.min_throughput_rps.is_none()
+            && self.max_reject_frac.is_none()
+            && self.max_latency_ms.is_none()
+            && self.min_gops.is_none()
+    }
+}
+
+/// One evaluated SLO check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloCheck {
+    /// Metric name (an [`SloSpec`] member name).
+    pub metric: String,
+    pub target: f64,
+    pub actual: f64,
+    pub pass: bool,
+}
+
+/// The per-stage SLO verdict: every check evaluated, and the conjunction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloVerdict {
+    pub pass: bool,
+    pub checks: Vec<SloCheck>,
+}
+
+impl SloVerdict {
+    /// A verdict with no checks (stages without SLOs pass vacuously).
+    pub fn empty() -> SloVerdict {
+        SloVerdict { pass: true, checks: Vec::new() }
+    }
+
+    fn from_checks(checks: Vec<SloCheck>) -> SloVerdict {
+        SloVerdict { pass: checks.iter().all(|c| c.pass), checks }
+    }
+
+    /// `"pass"`, `"FAIL"`, or `"-"` (no checks) — the table cell.
+    pub fn label(&self) -> &'static str {
+        if self.checks.is_empty() {
+            "-"
+        } else if self.pass {
+            "pass"
+        } else {
+            "FAIL"
+        }
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("pass", JsonValue::Bool(self.pass)),
+            (
+                "checks",
+                JsonValue::Arr(
+                    self.checks
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("metric", JsonValue::Str(c.metric.clone())),
+                                ("target", JsonValue::Num(c.target)),
+                                ("actual", JsonValue::Num(c.actual)),
+                                ("pass", JsonValue::Bool(c.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ------------------------------------------------------------ stage IR
+
+/// Which engine a serve stage runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeEngine {
+    /// Deterministic virtual-time simulation ([`crate::workload::vserve`]):
+    /// byte-identical results for a fixed seed.
+    #[default]
+    Virtual,
+    /// The real threaded coordinator via [`Session::serve`] (wall-clock
+    /// timing; what `photogan serve` compiles to).
+    Threaded,
+}
+
+impl ServeEngine {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeEngine::Virtual => "virtual",
+            ServeEngine::Threaded => "threaded",
+        }
+    }
+}
+
+impl fmt::Display for ServeEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ServeEngine {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "virtual" => Ok(ServeEngine::Virtual),
+            "threaded" => Ok(ServeEngine::Threaded),
+            other => Err(format!("unknown engine '{other}' (expected virtual or threaded)")),
+        }
+    }
+}
+
+/// A simulate stage: per-model latency/energy/GOPS/EPB rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimStage {
+    pub name: String,
+    /// Model subset (empty = every registered model).
+    pub models: Vec<String>,
+    pub batch: usize,
+    pub opts: OptFlags,
+    /// Optional `"N,K,L,M"` chip override.
+    pub config: Option<String>,
+    pub strict_power: bool,
+    pub slo: SloSpec,
+}
+
+impl Default for SimStage {
+    fn default() -> Self {
+        SimStage {
+            name: "simulate".into(),
+            models: Vec::new(),
+            batch: 1,
+            opts: OptFlags::all(),
+            config: None,
+            strict_power: false,
+            slo: SloSpec::default(),
+        }
+    }
+}
+
+/// A design-space-exploration stage (paper Fig. 11).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseStage {
+    pub name: String,
+    /// `"paper"` or `"smoke"`.
+    pub grid: String,
+    /// Worker threads (`None` = available parallelism).
+    pub threads: Option<usize>,
+    pub opts: OptFlags,
+    pub slo: SloSpec,
+}
+
+impl Default for DseStage {
+    fn default() -> Self {
+        DseStage {
+            name: "dse".into(),
+            grid: "paper".into(),
+            threads: None,
+            opts: OptFlags::overlapped(),
+            slo: SloSpec::default(),
+        }
+    }
+}
+
+/// A platform-comparison stage (paper Figs. 13/14).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompareStage {
+    pub name: String,
+    pub opts: OptFlags,
+}
+
+impl Default for CompareStage {
+    fn default() -> Self {
+        CompareStage { name: "compare".into(), opts: OptFlags::all() }
+    }
+}
+
+/// A serve stage: a traffic mix under an arrival process on a fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStage {
+    pub name: String,
+    pub engine: ServeEngine,
+    /// Threaded engine only: `"sim"` or `"pjrt"`.
+    pub backend: String,
+    /// Threaded pjrt backend only: artifact directory.
+    pub artifacts: Option<String>,
+    /// Threaded engine only: the single served model (`None` = first).
+    pub model: Option<String>,
+    /// Threaded engine only: closed request count.
+    pub requests: usize,
+    /// Virtual engine: weighted `(model, weight)` traffic mix.
+    pub mix: Vec<(String, f64)>,
+    /// Virtual engine: when requests arrive.
+    pub arrival: Option<ArrivalProcess>,
+    pub shards: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: f64,
+    pub queue_depth: usize,
+    pub routing: String,
+    pub opts: OptFlags,
+    /// Threaded sim backend: wall seconds per simulated second.
+    pub time_scale: f64,
+    pub slo: SloSpec,
+}
+
+impl Default for ServeStage {
+    fn default() -> Self {
+        ServeStage {
+            name: "serve".into(),
+            engine: ServeEngine::Virtual,
+            backend: "sim".into(),
+            artifacts: None,
+            model: None,
+            requests: 64,
+            mix: Vec::new(),
+            arrival: None,
+            shards: 1,
+            workers: 2,
+            max_batch: 8,
+            max_wait_ms: 5.0,
+            queue_depth: 1024,
+            routing: "round-robin".into(),
+            opts: OptFlags::overlapped(),
+            time_scale: 1.0,
+            slo: SloSpec::default(),
+        }
+    }
+}
+
+/// A report stage: every paper table/figure in one pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportStage {
+    pub name: String,
+    pub threads: Option<usize>,
+}
+
+impl Default for ReportStage {
+    fn default() -> Self {
+        ReportStage { name: "report".into(), threads: None }
+    }
+}
+
+/// One stage of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageSpec {
+    Simulate(SimStage),
+    Dse(DseStage),
+    Compare(CompareStage),
+    Serve(ServeStage),
+    Report(ReportStage),
+}
+
+impl StageSpec {
+    /// The stage kind (the JSON `kind` discriminator).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StageSpec::Simulate(_) => "simulate",
+            StageSpec::Dse(_) => "dse",
+            StageSpec::Compare(_) => "compare",
+            StageSpec::Serve(_) => "serve",
+            StageSpec::Report(_) => "report",
+        }
+    }
+
+    /// The stage's display name.
+    pub fn name(&self) -> &str {
+        match self {
+            StageSpec::Simulate(s) => &s.name,
+            StageSpec::Dse(s) => &s.name,
+            StageSpec::Compare(s) => &s.name,
+            StageSpec::Serve(s) => &s.name,
+            StageSpec::Report(s) => &s.name,
+        }
+    }
+}
+
+/// A declarative experiment: name, seed, and stage list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Root seed; stage `i` derives its streams via
+    /// [`Pcg32::fork`]`(i)`, so stages are independently reproducible.
+    ///
+    /// JSON numbers are `f64`, so seeds round-trip exactly only up to
+    /// 2^53 − 1; larger values lose low bits through `to_json`/`from_json`
+    /// (documents in the wild use small seeds, and the parser reads any
+    /// non-negative integer the document can express).
+    pub seed: u64,
+    pub stages: Vec<StageSpec>,
+}
+
+impl Scenario {
+    /// A one-stage scenario (what the legacy CLI subcommands compile to).
+    pub fn single(name: impl Into<String>, stage: StageSpec) -> Scenario {
+        Scenario { name: name.into(), seed: 0, stages: vec![stage] }
+    }
+}
+
+// ----------------------------------------------------- JSON: helpers
+
+fn parse_err(field: impl Into<String>, reason: impl Into<String>) -> ApiError {
+    ApiError::ScenarioParse { field: field.into(), reason: reason.into() }
+}
+
+fn req_member<'a>(v: &'a JsonValue, path: &str, key: &str) -> Result<&'a JsonValue, ApiError> {
+    v.get(key)
+        .ok_or_else(|| parse_err(format!("{path}.{key}"), "missing required member"))
+}
+
+fn str_member(v: &JsonValue, path: &str, key: &str) -> Result<String, ApiError> {
+    req_member(v, path, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| parse_err(format!("{path}.{key}"), "expected a string"))
+}
+
+fn opt_str_member(v: &JsonValue, path: &str, key: &str) -> Result<Option<String>, ApiError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(m) => m
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| parse_err(format!("{path}.{key}"), "expected a string")),
+    }
+}
+
+fn num_member(v: &JsonValue, path: &str, key: &str) -> Result<f64, ApiError> {
+    req_member(v, path, key)?
+        .as_f64()
+        .ok_or_else(|| parse_err(format!("{path}.{key}"), "expected a number"))
+}
+
+fn opt_num_member(
+    v: &JsonValue,
+    path: &str,
+    key: &str,
+    default: f64,
+) -> Result<f64, ApiError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(m) => m
+            .as_f64()
+            .ok_or_else(|| parse_err(format!("{path}.{key}"), "expected a number")),
+    }
+}
+
+fn opt_usize_member(
+    v: &JsonValue,
+    path: &str,
+    key: &str,
+    default: usize,
+) -> Result<usize, ApiError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(m) => m
+            .as_usize()
+            .ok_or_else(|| parse_err(format!("{path}.{key}"), "expected a non-negative integer")),
+    }
+}
+
+fn opt_bool_member(
+    v: &JsonValue,
+    path: &str,
+    key: &str,
+    default: bool,
+) -> Result<bool, ApiError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(m) => m
+            .as_bool()
+            .ok_or_else(|| parse_err(format!("{path}.{key}"), "expected a boolean")),
+    }
+}
+
+/// Parse an `opts` member: a preset name (`"baseline"`, `"sw"`,
+/// `"pipelined"`, `"gating"`, `"all"`, `"overlapped"`) or an object of
+/// booleans (absent members default to the `all` preset's values).
+fn parse_opts(v: &JsonValue, path: &str, default: OptFlags) -> Result<OptFlags, ApiError> {
+    let Some(m) = v.get("opts") else { return Ok(default) };
+    let path = format!("{path}.opts");
+    match m {
+        JsonValue::Str(s) => match s.to_ascii_lowercase().as_str() {
+            "baseline" => Ok(OptFlags::baseline()),
+            "sw" | "sw-optimized" | "sparse" => Ok(OptFlags::sw_optimized()),
+            "pipelined" | "pipeline" => Ok(OptFlags::pipelined_only()),
+            "gating" | "power-gating" => Ok(OptFlags::power_gating_only()),
+            "all" => Ok(OptFlags::all()),
+            "overlapped" | "overlap" => Ok(OptFlags::overlapped()),
+            other => Err(parse_err(
+                path,
+                format!(
+                    "unknown opts preset '{other}' (expected baseline, sw, pipelined, \
+                     gating, all, or overlapped — or an object of booleans)"
+                ),
+            )),
+        },
+        JsonValue::Obj(_) => {
+            let base = OptFlags::all();
+            Ok(OptFlags {
+                sparse: opt_bool_member(m, &path, "sparse", base.sparse)?,
+                pipelined: opt_bool_member(m, &path, "pipelined", base.pipelined)?,
+                power_gated: opt_bool_member(m, &path, "power_gated", base.power_gated)?,
+                overlap: opt_bool_member(m, &path, "overlap", base.overlap)?,
+            })
+        }
+        _ => Err(parse_err(path, "expected a preset name or an object of booleans")),
+    }
+}
+
+fn opts_json(opts: OptFlags) -> JsonValue {
+    obj(vec![
+        ("sparse", JsonValue::Bool(opts.sparse)),
+        ("pipelined", JsonValue::Bool(opts.pipelined)),
+        ("power_gated", JsonValue::Bool(opts.power_gated)),
+        ("overlap", JsonValue::Bool(opts.overlap)),
+    ])
+}
+
+fn parse_slo(v: &JsonValue, path: &str) -> Result<SloSpec, ApiError> {
+    let Some(m) = v.get("slo") else { return Ok(SloSpec::default()) };
+    let path = format!("{path}.slo");
+    let JsonValue::Obj(members) = m else {
+        return Err(parse_err(path, "expected an object of SLO targets"));
+    };
+    let mut slo = SloSpec::default();
+    for (key, val) in members {
+        let num = match val.as_f64() {
+            Some(n) => n,
+            None => return Err(parse_err(format!("{path}.{key}"), "expected a number")),
+        };
+        match key.as_str() {
+            "p99_ms" => slo.p99_ms = Some(num),
+            "min_throughput_rps" => slo.min_throughput_rps = Some(num),
+            "max_reject_frac" => slo.max_reject_frac = Some(num),
+            "max_latency_ms" => slo.max_latency_ms = Some(num),
+            "min_gops" => slo.min_gops = Some(num),
+            other => {
+                return Err(parse_err(
+                    path,
+                    format!(
+                        "unknown SLO metric '{other}' (expected p99_ms, \
+                         min_throughput_rps, max_reject_frac, max_latency_ms, min_gops)"
+                    ),
+                ))
+            }
+        }
+    }
+    Ok(slo)
+}
+
+fn slo_json(slo: &SloSpec) -> Option<JsonValue> {
+    if slo.is_empty() {
+        return None;
+    }
+    let mut members = Vec::new();
+    for (key, val) in [
+        ("p99_ms", slo.p99_ms),
+        ("min_throughput_rps", slo.min_throughput_rps),
+        ("max_reject_frac", slo.max_reject_frac),
+        ("max_latency_ms", slo.max_latency_ms),
+        ("min_gops", slo.min_gops),
+    ] {
+        if let Some(v) = val {
+            members.push((key, JsonValue::Num(v)));
+        }
+    }
+    Some(obj(members))
+}
+
+fn parse_arrival(v: &JsonValue, path: &str) -> Result<Option<ArrivalProcess>, ApiError> {
+    let Some(m) = v.get("arrival") else { return Ok(None) };
+    let path = format!("{path}.arrival");
+    if !matches!(m, JsonValue::Obj(_)) {
+        return Err(parse_err(path, "expected an object with a 'process' member"));
+    }
+    let process = str_member(m, &path, "process")?;
+    let arrival = match process.as_str() {
+        "closed-loop" => ArrivalProcess::ClosedLoop {
+            clients: req_member(m, &path, "clients")?
+                .as_usize()
+                .ok_or_else(|| parse_err(format!("{path}.clients"), "expected an integer"))?,
+            per_client: req_member(m, &path, "per_client")?
+                .as_usize()
+                .ok_or_else(|| parse_err(format!("{path}.per_client"), "expected an integer"))?,
+        },
+        "poisson" => ArrivalProcess::Poisson {
+            rate_hz: num_member(m, &path, "rate_hz")?,
+            duration_s: num_member(m, &path, "duration_s")?,
+        },
+        "bursty" => ArrivalProcess::Bursty {
+            rate_hz: num_member(m, &path, "rate_hz")?,
+            on_s: num_member(m, &path, "on_s")?,
+            off_s: opt_num_member(m, &path, "off_s", 0.0)?,
+            duration_s: num_member(m, &path, "duration_s")?,
+        },
+        "trace" => {
+            let arr = req_member(m, &path, "arrivals_s")?
+                .as_array()
+                .ok_or_else(|| {
+                    parse_err(format!("{path}.arrivals_s"), "expected an array of numbers")
+                })?;
+            let mut arrivals_s = Vec::with_capacity(arr.len());
+            for (i, t) in arr.iter().enumerate() {
+                arrivals_s.push(t.as_f64().ok_or_else(|| {
+                    parse_err(format!("{path}.arrivals_s[{i}]"), "expected a number")
+                })?);
+            }
+            ArrivalProcess::Trace { arrivals_s }
+        }
+        other => {
+            return Err(parse_err(
+                format!("{path}.process"),
+                format!(
+                    "unknown arrival process '{other}' (expected closed-loop, poisson, \
+                     bursty, or trace)"
+                ),
+            ))
+        }
+    };
+    Ok(Some(arrival))
+}
+
+fn arrival_json(a: &ArrivalProcess) -> JsonValue {
+    match a {
+        ArrivalProcess::ClosedLoop { clients, per_client } => obj(vec![
+            ("process", JsonValue::Str("closed-loop".into())),
+            ("clients", JsonValue::Num(*clients as f64)),
+            ("per_client", JsonValue::Num(*per_client as f64)),
+        ]),
+        ArrivalProcess::Poisson { rate_hz, duration_s } => obj(vec![
+            ("process", JsonValue::Str("poisson".into())),
+            ("rate_hz", JsonValue::Num(*rate_hz)),
+            ("duration_s", JsonValue::Num(*duration_s)),
+        ]),
+        ArrivalProcess::Bursty { rate_hz, on_s, off_s, duration_s } => obj(vec![
+            ("process", JsonValue::Str("bursty".into())),
+            ("rate_hz", JsonValue::Num(*rate_hz)),
+            ("on_s", JsonValue::Num(*on_s)),
+            ("off_s", JsonValue::Num(*off_s)),
+            ("duration_s", JsonValue::Num(*duration_s)),
+        ]),
+        ArrivalProcess::Trace { arrivals_s } => obj(vec![
+            ("process", JsonValue::Str("trace".into())),
+            (
+                "arrivals_s",
+                JsonValue::Arr(arrivals_s.iter().map(|&t| JsonValue::Num(t)).collect()),
+            ),
+        ]),
+    }
+}
+
+// ------------------------------------------------- JSON: parse stages
+
+impl Scenario {
+    /// Parse a scenario document. Shape problems are per-field
+    /// [`ApiError::ScenarioParse`]; semantic validation happens in
+    /// [`Session::plan`].
+    pub fn from_json(text: &str) -> Result<Scenario, ApiError> {
+        let doc = crate::util::json::parse(text).map_err(|e| parse_err("$", e.to_string()))?;
+        Scenario::from_value(&doc)
+    }
+
+    /// Parse an already-parsed JSON document.
+    pub fn from_value(doc: &JsonValue) -> Result<Scenario, ApiError> {
+        if !matches!(doc, JsonValue::Obj(_)) {
+            return Err(parse_err("$", "expected a JSON object"));
+        }
+        let name = str_member(doc, "$", "name")?;
+        let seed = opt_usize_member(doc, "$", "seed", 0)? as u64;
+        let stages_val = req_member(doc, "$", "stages")?
+            .as_array()
+            .ok_or_else(|| parse_err("$.stages", "expected an array of stage objects"))?;
+        if stages_val.is_empty() {
+            return Err(parse_err("$.stages", "a scenario needs at least one stage"));
+        }
+        let mut stages = Vec::with_capacity(stages_val.len());
+        for (i, sv) in stages_val.iter().enumerate() {
+            stages.push(parse_stage(sv, i)?);
+        }
+        Ok(Scenario { name, seed, stages })
+    }
+
+    /// Canonical JSON rendering — every field materialized, member order
+    /// fixed, so `from_json(to_json(s)) == s` (the round-trip fixpoint).
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+
+    /// Structured form of [`Scenario::to_json`].
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("name", JsonValue::Str(self.name.clone())),
+            ("seed", JsonValue::Num(self.seed as f64)),
+            (
+                "stages",
+                JsonValue::Arr(self.stages.iter().map(stage_json).collect()),
+            ),
+        ])
+    }
+}
+
+fn parse_stage(v: &JsonValue, index: usize) -> Result<StageSpec, ApiError> {
+    let path = format!("stages[{index}]");
+    if !matches!(v, JsonValue::Obj(_)) {
+        return Err(parse_err(path, "expected a stage object"));
+    }
+    let kind = str_member(v, &path, "kind")?;
+    let name = opt_str_member(v, &path, "name")?.unwrap_or_else(|| format!("{kind}-{index}"));
+    match kind.as_str() {
+        "simulate" => {
+            let models = match v.get("models") {
+                None => Vec::new(),
+                Some(arr) => {
+                    let items = arr.as_array().ok_or_else(|| {
+                        parse_err(format!("{path}.models"), "expected an array of model names")
+                    })?;
+                    let mut out = Vec::with_capacity(items.len());
+                    for (i, it) in items.iter().enumerate() {
+                        out.push(
+                            it.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| {
+                                    parse_err(
+                                        format!("{path}.models[{i}]"),
+                                        "expected a model name string",
+                                    )
+                                })?,
+                        );
+                    }
+                    out
+                }
+            };
+            Ok(StageSpec::Simulate(SimStage {
+                name,
+                models,
+                batch: opt_usize_member(v, &path, "batch", 1)?,
+                opts: parse_opts(v, &path, OptFlags::all())?,
+                config: opt_str_member(v, &path, "config")?,
+                strict_power: opt_bool_member(v, &path, "strict_power", false)?,
+                slo: parse_slo(v, &path)?,
+            }))
+        }
+        "dse" => Ok(StageSpec::Dse(DseStage {
+            name,
+            grid: opt_str_member(v, &path, "grid")?.unwrap_or_else(|| "paper".into()),
+            threads: match v.get("threads") {
+                None => None,
+                Some(_) => Some(opt_usize_member(v, &path, "threads", 0)?),
+            },
+            opts: parse_opts(v, &path, OptFlags::overlapped())?,
+            slo: parse_slo(v, &path)?,
+        })),
+        "compare" => Ok(StageSpec::Compare(CompareStage {
+            name,
+            opts: parse_opts(v, &path, OptFlags::all())?,
+        })),
+        "serve" => {
+            let engine = match opt_str_member(v, &path, "engine")? {
+                None => ServeEngine::Virtual,
+                Some(s) => s
+                    .parse()
+                    .map_err(|reason| parse_err(format!("{path}.engine"), reason))?,
+            };
+            let mix = match v.get("mix") {
+                None => Vec::new(),
+                Some(arr) => {
+                    let items = arr.as_array().ok_or_else(|| {
+                        parse_err(format!("{path}.mix"), "expected an array of mix entries")
+                    })?;
+                    let mut out = Vec::with_capacity(items.len());
+                    for (i, it) in items.iter().enumerate() {
+                        let epath = format!("{path}.mix[{i}]");
+                        if !matches!(it, JsonValue::Obj(_)) {
+                            return Err(parse_err(epath, "expected a {model, weight} object"));
+                        }
+                        let model = str_member(it, &epath, "model")?;
+                        let weight = opt_num_member(it, &epath, "weight", 1.0)?;
+                        out.push((model, weight));
+                    }
+                    out
+                }
+            };
+            Ok(StageSpec::Serve(ServeStage {
+                name,
+                engine,
+                backend: opt_str_member(v, &path, "backend")?.unwrap_or_else(|| "sim".into()),
+                artifacts: opt_str_member(v, &path, "artifacts")?,
+                model: opt_str_member(v, &path, "model")?,
+                requests: opt_usize_member(v, &path, "requests", 64)?,
+                mix,
+                arrival: parse_arrival(v, &path)?,
+                shards: opt_usize_member(v, &path, "shards", 1)?,
+                workers: opt_usize_member(v, &path, "workers", 2)?,
+                max_batch: opt_usize_member(v, &path, "max_batch", 8)?,
+                max_wait_ms: opt_num_member(v, &path, "max_wait_ms", 5.0)?,
+                queue_depth: opt_usize_member(v, &path, "queue_depth", 1024)?,
+                routing: opt_str_member(v, &path, "routing")?
+                    .unwrap_or_else(|| "round-robin".into()),
+                opts: parse_opts(v, &path, OptFlags::overlapped())?,
+                time_scale: opt_num_member(v, &path, "time_scale", 1.0)?,
+                slo: parse_slo(v, &path)?,
+            }))
+        }
+        "report" => Ok(StageSpec::Report(ReportStage {
+            name,
+            threads: match v.get("threads") {
+                None => None,
+                Some(_) => Some(opt_usize_member(v, &path, "threads", 0)?),
+            },
+        })),
+        other => Err(parse_err(
+            format!("{path}.kind"),
+            format!(
+                "unknown stage kind '{other}' (expected simulate, dse, compare, serve, \
+                 or report)"
+            ),
+        )),
+    }
+}
+
+fn stage_json(stage: &StageSpec) -> JsonValue {
+    match stage {
+        StageSpec::Simulate(s) => {
+            let mut members = vec![
+                ("kind", JsonValue::Str("simulate".into())),
+                ("name", JsonValue::Str(s.name.clone())),
+                (
+                    "models",
+                    JsonValue::Arr(
+                        s.models.iter().map(|m| JsonValue::Str(m.clone())).collect(),
+                    ),
+                ),
+                ("batch", JsonValue::Num(s.batch as f64)),
+                ("opts", opts_json(s.opts)),
+            ];
+            if let Some(cfg) = &s.config {
+                members.push(("config", JsonValue::Str(cfg.clone())));
+            }
+            members.push(("strict_power", JsonValue::Bool(s.strict_power)));
+            if let Some(slo) = slo_json(&s.slo) {
+                members.push(("slo", slo));
+            }
+            obj(members)
+        }
+        StageSpec::Dse(s) => {
+            let mut members = vec![
+                ("kind", JsonValue::Str("dse".into())),
+                ("name", JsonValue::Str(s.name.clone())),
+                ("grid", JsonValue::Str(s.grid.clone())),
+            ];
+            if let Some(t) = s.threads {
+                members.push(("threads", JsonValue::Num(t as f64)));
+            }
+            members.push(("opts", opts_json(s.opts)));
+            if let Some(slo) = slo_json(&s.slo) {
+                members.push(("slo", slo));
+            }
+            obj(members)
+        }
+        StageSpec::Compare(s) => obj(vec![
+            ("kind", JsonValue::Str("compare".into())),
+            ("name", JsonValue::Str(s.name.clone())),
+            ("opts", opts_json(s.opts)),
+        ]),
+        StageSpec::Serve(s) => {
+            let mut members = vec![
+                ("kind", JsonValue::Str("serve".into())),
+                ("name", JsonValue::Str(s.name.clone())),
+                ("engine", JsonValue::Str(s.engine.name().into())),
+                ("backend", JsonValue::Str(s.backend.clone())),
+            ];
+            if let Some(a) = &s.artifacts {
+                members.push(("artifacts", JsonValue::Str(a.clone())));
+            }
+            if let Some(m) = &s.model {
+                members.push(("model", JsonValue::Str(m.clone())));
+            }
+            members.push(("requests", JsonValue::Num(s.requests as f64)));
+            members.push((
+                "mix",
+                JsonValue::Arr(
+                    s.mix
+                        .iter()
+                        .map(|(m, w)| {
+                            obj(vec![
+                                ("model", JsonValue::Str(m.clone())),
+                                ("weight", JsonValue::Num(*w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            if let Some(a) = &s.arrival {
+                members.push(("arrival", arrival_json(a)));
+            }
+            members.push(("shards", JsonValue::Num(s.shards as f64)));
+            members.push(("workers", JsonValue::Num(s.workers as f64)));
+            members.push(("max_batch", JsonValue::Num(s.max_batch as f64)));
+            members.push(("max_wait_ms", JsonValue::Num(s.max_wait_ms)));
+            members.push(("queue_depth", JsonValue::Num(s.queue_depth as f64)));
+            members.push(("routing", JsonValue::Str(s.routing.clone())));
+            members.push(("opts", opts_json(s.opts)));
+            members.push(("time_scale", JsonValue::Num(s.time_scale)));
+            if let Some(slo) = slo_json(&s.slo) {
+                members.push(("slo", slo));
+            }
+            obj(members)
+        }
+        StageSpec::Report(s) => {
+            let mut members = vec![
+                ("kind", JsonValue::Str("report".into())),
+                ("name", JsonValue::Str(s.name.clone())),
+            ];
+            if let Some(t) = s.threads {
+                members.push(("threads", JsonValue::Num(t as f64)));
+            }
+            obj(members)
+        }
+    }
+}
+
+// --------------------------------------------------------------- plan
+
+/// An executable stage, compiled and validated by [`Session::plan`].
+#[derive(Debug, Clone)]
+pub enum PlannedStage {
+    Simulate { name: String, req: SimRequest, slo: SloSpec },
+    Dse { name: String, req: SweepRequest, slo: SloSpec },
+    Compare { name: String, opts: OptFlags },
+    /// Deterministic virtual-time serving over the session cost model.
+    ServeVirtual {
+        name: String,
+        cfg: VirtualServeConfig,
+        mix: TrafficMix,
+        arrival: ArrivalProcess,
+        opts: OptFlags,
+        slo: SloSpec,
+    },
+    /// The real threaded coordinator via [`Session::serve`].
+    ServeThreaded { name: String, req: ServeRequest, slo: SloSpec },
+    Report { name: String, threads: usize },
+}
+
+/// A validated, executable scenario.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub scenario: String,
+    pub seed: u64,
+    pub stages: Vec<PlannedStage>,
+}
+
+/// SLO members each stage kind may set.
+fn check_slo_applies(slo: &SloSpec, allowed: &[&str], path: &str) -> Result<(), ApiError> {
+    for (name, present) in [
+        ("p99_ms", slo.p99_ms.is_some()),
+        ("min_throughput_rps", slo.min_throughput_rps.is_some()),
+        ("max_reject_frac", slo.max_reject_frac.is_some()),
+        ("max_latency_ms", slo.max_latency_ms.is_some()),
+        ("min_gops", slo.min_gops.is_some()),
+    ] {
+        if present && !allowed.contains(&name) {
+            return Err(parse_err(
+                format!("{path}.slo.{name}"),
+                format!("not applicable to this stage kind (allowed: {})", allowed.join(", ")),
+            ));
+        }
+    }
+    for (name, value, allow_zero, hi) in [
+        ("p99_ms", slo.p99_ms, false, f64::INFINITY),
+        ("min_throughput_rps", slo.min_throughput_rps, false, f64::INFINITY),
+        // a zero rejection budget is a legitimate (strict) target
+        ("max_reject_frac", slo.max_reject_frac, true, 1.0),
+        ("max_latency_ms", slo.max_latency_ms, false, f64::INFINITY),
+        ("min_gops", slo.min_gops, false, f64::INFINITY),
+    ] {
+        if let Some(v) = value {
+            let positive_ok = if allow_zero { v >= 0.0 } else { v > 0.0 };
+            if !v.is_finite() || !positive_ok || v > hi {
+                return Err(parse_err(
+                    format!("{path}.slo.{name}"),
+                    format!("target must be a finite value in a sane range (got {v})"),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate an arrival process with exact per-field error attribution.
+///
+/// This deliberately re-states the predicates of
+/// [`ArrivalProcess::validate`] (whose `ArrivalError` cannot name which
+/// JSON member of a bursty/trace process failed): keep the two in sync
+/// when the workload-level rules change.
+fn check_arrival(a: &ArrivalProcess, path: &str) -> Result<(), ApiError> {
+    let apath = format!("{path}.arrival");
+    match a {
+        ArrivalProcess::ClosedLoop { clients, per_client } => {
+            if *clients == 0 {
+                return Err(parse_err(format!("{apath}.clients"), "must be >= 1"));
+            }
+            if *per_client == 0 {
+                return Err(parse_err(format!("{apath}.per_client"), "must be >= 1"));
+            }
+        }
+        ArrivalProcess::Poisson { rate_hz, duration_s } => {
+            if !rate_hz.is_finite() || *rate_hz <= 0.0 {
+                return Err(ApiError::InvalidRate {
+                    field: format!("{apath}.rate_hz"),
+                    rate: *rate_hz,
+                });
+            }
+            if !duration_s.is_finite() || *duration_s <= 0.0 {
+                return Err(ApiError::InvalidDuration {
+                    field: format!("{apath}.duration_s"),
+                    seconds: *duration_s,
+                });
+            }
+        }
+        ArrivalProcess::Bursty { rate_hz, on_s, off_s, duration_s } => {
+            if !rate_hz.is_finite() || *rate_hz <= 0.0 {
+                return Err(ApiError::InvalidRate {
+                    field: format!("{apath}.rate_hz"),
+                    rate: *rate_hz,
+                });
+            }
+            if !on_s.is_finite() || *on_s <= 0.0 {
+                return Err(ApiError::InvalidDuration {
+                    field: format!("{apath}.on_s"),
+                    seconds: *on_s,
+                });
+            }
+            if !off_s.is_finite() || *off_s < 0.0 {
+                return Err(ApiError::InvalidDuration {
+                    field: format!("{apath}.off_s"),
+                    seconds: *off_s,
+                });
+            }
+            if !duration_s.is_finite() || *duration_s <= 0.0 {
+                return Err(ApiError::InvalidDuration {
+                    field: format!("{apath}.duration_s"),
+                    seconds: *duration_s,
+                });
+            }
+        }
+        ArrivalProcess::Trace { arrivals_s } => {
+            if arrivals_s.is_empty() {
+                return Err(parse_err(
+                    format!("{apath}.arrivals_s"),
+                    "must contain at least one arrival",
+                ));
+            }
+            let mut prev = 0.0f64;
+            for (i, &t) in arrivals_s.iter().enumerate() {
+                if !t.is_finite() || t < 0.0 || t < prev {
+                    return Err(parse_err(
+                        format!("{apath}.arrivals_s[{i}]"),
+                        format!("offsets must be finite, >= 0, and non-decreasing (got {t})"),
+                    ));
+                }
+                prev = t;
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Session {
+    /// Validate a [`Scenario`] against this session and compile it into an
+    /// executable [`Plan`]. All semantic failures are typed: unknown
+    /// models, non-positive mix weights, malformed rates/durations,
+    /// degenerate fleet shapes, inapplicable SLO targets.
+    pub fn plan(&self, scenario: &Scenario) -> Result<Plan, ApiError> {
+        let mut stages = Vec::with_capacity(scenario.stages.len());
+        for (i, stage) in scenario.stages.iter().enumerate() {
+            let path = format!("stages[{i}]");
+            stages.push(self.plan_stage(stage, &path)?);
+        }
+        Ok(Plan {
+            scenario: scenario.name.clone(),
+            seed: scenario.seed,
+            stages,
+        })
+    }
+
+    fn plan_stage(&self, stage: &StageSpec, path: &str) -> Result<PlannedStage, ApiError> {
+        match stage {
+            StageSpec::Simulate(s) => {
+                check_slo_applies(&s.slo, &["max_latency_ms", "min_gops"], path)?;
+                // resolve names against the registry now (canonical casing)
+                let mut resolved = Vec::with_capacity(s.models.len());
+                for name in &s.models {
+                    resolved.push(self.model(name)?.name.clone());
+                }
+                let mut builder = SimRequest::builder().batch(s.batch).opts(s.opts);
+                builder = match resolved.len() {
+                    0 => builder.all_models(),
+                    1 => builder.model(resolved.remove(0)),
+                    _ => builder.models(resolved),
+                };
+                if let Some(cfg) = &s.config {
+                    let parsed: ArchConfig = cfg.parse().map_err(ApiError::from)?;
+                    builder = builder.config(parsed);
+                }
+                builder = builder.strict_power(s.strict_power);
+                Ok(PlannedStage::Simulate {
+                    name: s.name.clone(),
+                    req: builder.build()?,
+                    slo: s.slo.clone(),
+                })
+            }
+            StageSpec::Dse(s) => {
+                check_slo_applies(&s.slo, &["min_gops"], path)?;
+                let grid = match s.grid.as_str() {
+                    "paper" => Grid::paper(),
+                    "smoke" => Grid::smoke(),
+                    other => {
+                        return Err(parse_err(
+                            format!("{path}.grid"),
+                            format!("expected 'paper' or 'smoke', got '{other}'"),
+                        ))
+                    }
+                };
+                let threads = s.threads.unwrap_or_else(super::request::default_threads);
+                let req = SweepRequest::builder()
+                    .grid(grid)
+                    .threads(threads)
+                    .opts(s.opts)
+                    .build()?;
+                Ok(PlannedStage::Dse { name: s.name.clone(), req, slo: s.slo.clone() })
+            }
+            StageSpec::Compare(s) => Ok(PlannedStage::Compare {
+                name: s.name.clone(),
+                opts: s.opts,
+            }),
+            StageSpec::Serve(s) => self.plan_serve(s, path),
+            StageSpec::Report(s) => {
+                if s.threads == Some(0) {
+                    return Err(ApiError::InvalidThreads(0));
+                }
+                Ok(PlannedStage::Report {
+                    name: s.name.clone(),
+                    threads: s.threads.unwrap_or_else(super::request::default_threads),
+                })
+            }
+        }
+    }
+
+    fn plan_serve(&self, s: &ServeStage, path: &str) -> Result<PlannedStage, ApiError> {
+        check_slo_applies(&s.slo, &["p99_ms", "min_throughput_rps", "max_reject_frac"], path)?;
+        if !s.max_wait_ms.is_finite() || s.max_wait_ms < 0.0 {
+            return Err(parse_err(
+                format!("{path}.max_wait_ms"),
+                format!("must be finite and >= 0 (got {})", s.max_wait_ms),
+            ));
+        }
+        match s.engine {
+            ServeEngine::Virtual => {
+                if s.mix.is_empty() {
+                    return Err(parse_err(
+                        format!("{path}.mix"),
+                        "a virtual serve stage needs at least one mix entry",
+                    ));
+                }
+                let mut resolved = Vec::with_capacity(s.mix.len());
+                for (model, weight) in &s.mix {
+                    resolved.push((self.model(model)?.name.clone(), *weight));
+                }
+                // weight validation lives in TrafficMix::new (one rule
+                // set); its typed MixError maps onto the per-field ApiError
+                let mix = TrafficMix::new(resolved).map_err(|e| match e {
+                    MixError::BadWeight { index, weight, .. } => ApiError::InvalidMixWeight {
+                        field: format!("{path}.mix[{index}].weight"),
+                        // report the name the document used, not the
+                        // canonical registry casing
+                        model: s.mix[index].0.clone(),
+                        weight,
+                    },
+                    MixError::Empty => parse_err(format!("{path}.mix"), e.to_string()),
+                })?;
+                let arrival = s.arrival.clone().ok_or_else(|| {
+                    parse_err(
+                        format!("{path}.arrival"),
+                        "a virtual serve stage needs an arrival process",
+                    )
+                })?;
+                check_arrival(&arrival, path)?;
+                if s.shards == 0 {
+                    return Err(ApiError::InvalidShards(0));
+                }
+                if s.workers == 0 {
+                    return Err(ApiError::InvalidWorkers(0));
+                }
+                if s.max_batch == 0 {
+                    return Err(ApiError::InvalidBatch(0));
+                }
+                if s.queue_depth == 0 {
+                    return Err(parse_err(format!("{path}.queue_depth"), "must be >= 1"));
+                }
+                let routing: RoutingPolicy = s
+                    .routing
+                    .parse()
+                    .map_err(|reason| parse_err(format!("{path}.routing"), reason))?;
+                Ok(PlannedStage::ServeVirtual {
+                    name: s.name.clone(),
+                    cfg: VirtualServeConfig {
+                        shards: s.shards,
+                        workers: s.workers,
+                        max_batch: s.max_batch,
+                        max_wait_s: s.max_wait_ms * 1e-3,
+                        queue_depth: s.queue_depth,
+                        routing,
+                    },
+                    mix,
+                    arrival,
+                    opts: s.opts,
+                    slo: s.slo.clone(),
+                })
+            }
+            ServeEngine::Threaded => {
+                if !s.mix.is_empty() {
+                    return Err(parse_err(
+                        format!("{path}.mix"),
+                        "the threaded engine serves one model — use 'model', not 'mix'",
+                    ));
+                }
+                if s.arrival.is_some() {
+                    return Err(parse_err(
+                        format!("{path}.arrival"),
+                        "the threaded engine drives a fixed request count ('requests'); \
+                         arrival processes apply to the virtual engine",
+                    ));
+                }
+                let backend: ServeBackend = s
+                    .backend
+                    .parse()
+                    .map_err(|reason| parse_err(format!("{path}.backend"), reason))?;
+                let routing: RoutingPolicy = s
+                    .routing
+                    .parse()
+                    .map_err(|reason| parse_err(format!("{path}.routing"), reason))?;
+                let mut builder = ServeRequest::builder()
+                    .backend(backend)
+                    .requests(s.requests)
+                    .max_batch(s.max_batch)
+                    .workers(s.workers)
+                    .shards(s.shards)
+                    .routing(routing)
+                    .queue_depth(s.queue_depth)
+                    .max_wait(Duration::from_secs_f64(s.max_wait_ms * 1e-3))
+                    .opts(s.opts)
+                    .time_scale(s.time_scale);
+                if let Some(dir) = &s.artifacts {
+                    builder = builder.artifacts(dir.clone());
+                }
+                if let Some(model) = &s.model {
+                    builder = builder.model(model.clone());
+                }
+                Ok(PlannedStage::ServeThreaded {
+                    name: s.name.clone(),
+                    req: builder.build()?,
+                    slo: s.slo.clone(),
+                })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- run
+
+/// [`crate::workload::vserve::ServiceModel`] over the session: batch
+/// service times come from the photonic simulator through the shared
+/// mapping cache.
+struct SessionCost<'a> {
+    session: &'a Session,
+    opts: OptFlags,
+}
+
+impl ServiceModel for SessionCost<'_> {
+    fn batch_latency_s(&self, model: &str, batch: usize) -> f64 {
+        match self.session.model(model) {
+            Ok(m) => self.session.sim_report(m, batch.max(1), self.opts).latency,
+            // unreachable: plan() resolved every mix model already
+            Err(_) => 0.0,
+        }
+    }
+}
+
+fn slo_for_sim(slo: &SloSpec, out: &SimOutcome) -> SloVerdict {
+    let mut checks = Vec::new();
+    if let Some(target) = slo.max_latency_ms {
+        let actual = out.rows.iter().map(|r| r.latency_s * 1e3).fold(0.0, f64::max);
+        checks.push(SloCheck {
+            metric: "max_latency_ms".into(),
+            target,
+            actual,
+            pass: actual <= target,
+        });
+    }
+    if let Some(target) = slo.min_gops {
+        let worst = out.rows.iter().map(|r| r.gops).fold(f64::INFINITY, f64::min);
+        let actual = if worst.is_finite() { worst } else { 0.0 };
+        checks.push(SloCheck { metric: "min_gops".into(), target, actual, pass: actual >= target });
+    }
+    SloVerdict::from_checks(checks)
+}
+
+fn slo_for_dse(slo: &SloSpec, out: &SweepOutcome) -> SloVerdict {
+    let mut checks = Vec::new();
+    if let Some(target) = slo.min_gops {
+        let actual = out.optimum().map(|p| p.gops).unwrap_or(0.0);
+        checks.push(SloCheck { metric: "min_gops".into(), target, actual, pass: actual >= target });
+    }
+    SloVerdict::from_checks(checks)
+}
+
+fn slo_for_serve(slo: &SloSpec, p99_ms: f64, throughput_rps: f64, reject_frac: f64) -> SloVerdict {
+    let mut checks = Vec::new();
+    if let Some(target) = slo.p99_ms {
+        checks.push(SloCheck {
+            metric: "p99_ms".into(),
+            target,
+            actual: p99_ms,
+            pass: p99_ms <= target,
+        });
+    }
+    if let Some(target) = slo.min_throughput_rps {
+        checks.push(SloCheck {
+            metric: "min_throughput_rps".into(),
+            target,
+            actual: throughput_rps,
+            pass: throughput_rps >= target,
+        });
+    }
+    if let Some(target) = slo.max_reject_frac {
+        checks.push(SloCheck {
+            metric: "max_reject_frac".into(),
+            target,
+            actual: reject_frac,
+            pass: reject_frac <= target,
+        });
+    }
+    SloVerdict::from_checks(checks)
+}
+
+/// One executed stage: its outcome plus its SLO verdict.
+#[derive(Debug, Clone)]
+pub struct StageOutcome {
+    pub name: String,
+    /// Stage kind (`"simulate"`, `"dse"`, `"compare"`, `"serve"`,
+    /// `"report"`).
+    pub kind: String,
+    pub outcome: Outcome,
+    pub slo: SloVerdict,
+}
+
+/// The single envelope a scenario run produces: every stage outcome and
+/// verdict, rendering as tables or one JSON document. With virtual serve
+/// stages the JSON is a pure function of `(scenario, seed)` — running the
+/// same scenario twice yields byte-identical output.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub seed: u64,
+    pub stages: Vec<StageOutcome>,
+}
+
+impl ScenarioOutcome {
+    /// Conjunction of every stage verdict.
+    pub fn slo_pass(&self) -> bool {
+        self.stages.iter().all(|s| s.slo.pass)
+    }
+
+    /// The per-stage SLO verdict summary table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec!["stage", "kind", "slo checks", "verdict"]).with_title(
+            format!(
+                "scenario '{}' (seed {}) — {} stage(s), SLO {}",
+                self.scenario,
+                self.seed,
+                self.stages.len(),
+                if self.slo_pass() { "PASS" } else { "FAIL" },
+            ),
+        );
+        for s in &self.stages {
+            let checks = if s.slo.checks.is_empty() {
+                "-".to_string()
+            } else {
+                s.slo
+                    .checks
+                    .iter()
+                    .map(|c| format!("{} {:.4} (target {:.4})", c.metric, c.actual, c.target))
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            };
+            t.row(vec![
+                s.name.clone(),
+                s.kind.clone(),
+                checks,
+                s.slo.label().to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Every stage's tables, then the verdict summary.
+    pub fn to_tables(&self) -> Vec<Table> {
+        let mut tables = Vec::new();
+        for s in &self.stages {
+            tables.extend(s.outcome.to_tables());
+        }
+        tables.push(self.to_table());
+        tables
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("command", JsonValue::Str("run".into())),
+            ("scenario", JsonValue::Str(self.scenario.clone())),
+            ("seed", JsonValue::Num(self.seed as f64)),
+            ("slo_pass", JsonValue::Bool(self.slo_pass())),
+            (
+                "stages",
+                JsonValue::Arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("name", JsonValue::Str(s.name.clone())),
+                                ("kind", JsonValue::Str(s.kind.clone())),
+                                ("slo", s.slo.json()),
+                                ("outcome", s.outcome.json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json().render()
+    }
+}
+
+impl Session {
+    /// Execute a compiled [`Plan`], stage by stage, into one
+    /// [`ScenarioOutcome`]. Takes an `Arc` receiver (like
+    /// [`Session::serve`]) because threaded serve stages hand the
+    /// session's mapping cache to shard workers; clone the `Arc` first if
+    /// you need the session afterwards.
+    pub fn run(self: Arc<Self>, plan: &Plan) -> Result<ScenarioOutcome, ApiError> {
+        let mut stages = Vec::with_capacity(plan.stages.len());
+        for (i, stage) in plan.stages.iter().enumerate() {
+            stages.push(run_stage(&self, plan, i, stage)?);
+        }
+        Ok(ScenarioOutcome {
+            scenario: plan.scenario.clone(),
+            seed: plan.seed,
+            stages,
+        })
+    }
+}
+
+fn run_stage(
+    session: &Arc<Session>,
+    plan: &Plan,
+    index: usize,
+    stage: &PlannedStage,
+) -> Result<StageOutcome, ApiError> {
+    Ok(match stage {
+        PlannedStage::Simulate { name, req, slo } => {
+            let out = session.simulate(req)?;
+            let verdict = slo_for_sim(slo, &out);
+            StageOutcome {
+                name: name.clone(),
+                kind: "simulate".into(),
+                outcome: Outcome::Sim(out),
+                slo: verdict,
+            }
+        }
+        PlannedStage::Dse { name, req, slo } => {
+            let out = session.sweep(req)?;
+            let verdict = slo_for_dse(slo, &out);
+            StageOutcome {
+                name: name.clone(),
+                kind: "dse".into(),
+                outcome: Outcome::Sweep(out),
+                slo: verdict,
+            }
+        }
+        PlannedStage::Compare { name, opts } => StageOutcome {
+            name: name.clone(),
+            kind: "compare".into(),
+            outcome: Outcome::Compare(session.compare_opts(*opts)),
+            slo: SloVerdict::empty(),
+        },
+        PlannedStage::ServeVirtual { name, cfg, mix, arrival, opts, slo } => {
+            // stage i owns fork(i) of the scenario seed, so editing one
+            // stage never perturbs another's traffic
+            let mut stage_rng = Pcg32::new(plan.seed).fork(index as u64);
+            let stage_seed = stage_rng.next_u64();
+            let cost = SessionCost { session: session.as_ref(), opts: *opts };
+                let v = simulate_serve(cfg, mix, arrival, &cost, stage_seed);
+                let out = WorkloadOutcome {
+                    mix: mix.normalized(),
+                    arrival_kind: arrival.kind().into(),
+                    arrival: arrival.describe(),
+                    shards: cfg.shards,
+                    workers: cfg.workers,
+                    max_batch: cfg.max_batch,
+                    max_wait_ms: cfg.max_wait_s * 1e3,
+                    queue_depth: cfg.queue_depth,
+                    routing: cfg.routing.name().into(),
+                    offered: v.offered,
+                    admitted: v.admitted,
+                    rejected: v.rejected,
+                    makespan_s: v.makespan_s,
+                    throughput_rps: v.throughput_rps(),
+                    mean_ms: v.mean_latency_ms(),
+                    p50_ms: v.latency_percentile_ms(50.0),
+                    p95_ms: v.latency_percentile_ms(95.0),
+                    p99_ms: v.latency_percentile_ms(99.0),
+                    batches: v.batches,
+                    mean_batch: v.mean_batch,
+                    per_model: v.per_model.clone(),
+                    per_shard: v
+                        .per_shard
+                        .iter()
+                        .map(|s| (s.shard, s.requests, s.utilization))
+                        .collect(),
+                };
+                let verdict =
+                    slo_for_serve(slo, out.p99_ms, out.throughput_rps, v.reject_fraction());
+                StageOutcome {
+                    name: name.clone(),
+                    kind: "serve".into(),
+                    outcome: Outcome::Workload(out),
+                    slo: verdict,
+                }
+            }
+        PlannedStage::ServeThreaded { name, req, slo } => {
+            let out = Arc::clone(session).serve(req)?;
+            let attempts = out.requests as f64 + out.rejections as f64;
+            let reject_frac =
+                if attempts > 0.0 { out.rejections as f64 / attempts } else { 0.0 };
+            let verdict = slo_for_serve(slo, out.p99_ms, out.throughput_img_s, reject_frac);
+            StageOutcome {
+                name: name.clone(),
+                kind: "serve".into(),
+                outcome: Outcome::Serve(out),
+                slo: verdict,
+            }
+        }
+        PlannedStage::Report { name, threads } => {
+            let session: &Session = session.as_ref();
+            let mut tables = Vec::new();
+            let (t1, _) = report::table1();
+            tables.push(t1);
+            tables.push(report::table2());
+            let (t12, _) = report::fig12(session);
+            tables.push(t12);
+            let (t_ovl, _) = report::overlap_ablation(session);
+            tables.push(t_ovl);
+            tables.extend(session.compare().to_tables());
+            let (t11, _) = report::fig11(session, &Grid::paper(), *threads);
+            tables.push(t11);
+            StageOutcome {
+                name: name.clone(),
+                kind: "report".into(),
+                outcome: Outcome::Report(ReportOutcome { threads: *threads, tables }),
+                slo: SloVerdict::empty(),
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opts_presets_and_objects_parse() {
+        let doc =
+            crate::util::json::parse(r#"{"opts":"overlapped"}"#).unwrap();
+        assert_eq!(parse_opts(&doc, "x", OptFlags::all()).unwrap(), OptFlags::overlapped());
+        let doc = crate::util::json::parse(r#"{"opts":{"sparse":false}}"#).unwrap();
+        let flags = parse_opts(&doc, "x", OptFlags::all()).unwrap();
+        assert!(!flags.sparse && flags.pipelined && flags.power_gated && !flags.overlap);
+        let doc = crate::util::json::parse(r#"{"opts":"warp-speed"}"#).unwrap();
+        let err = parse_opts(&doc, "x", OptFlags::all()).unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. } if field == "x.opts"));
+        // absent → the caller's default
+        let doc = crate::util::json::parse("{}").unwrap();
+        assert_eq!(parse_opts(&doc, "x", OptFlags::baseline()).unwrap(), OptFlags::baseline());
+    }
+
+    #[test]
+    fn unknown_slo_metric_is_a_parse_error() {
+        let doc = crate::util::json::parse(r#"{"slo":{"p42_ms":1.0}}"#).unwrap();
+        let err = parse_slo(&doc, "stages[0]").unwrap_err();
+        assert!(
+            matches!(err, ApiError::ScenarioParse { ref field, ref reason }
+                if field == "stages[0].slo" && reason.contains("p42_ms")),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn stage_names_default_to_kind_and_index() {
+        let sc = Scenario::from_json(
+            r#"{"name":"n","stages":[{"kind":"compare"},{"kind":"report"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.stages[0].name(), "compare-0");
+        assert_eq!(sc.stages[1].name(), "report-1");
+        assert_eq!(sc.seed, 0, "seed defaults to 0");
+    }
+
+    #[test]
+    fn unknown_stage_kind_names_the_field() {
+        let err = Scenario::from_json(r#"{"name":"n","stages":[{"kind":"mine"}]}"#).unwrap_err();
+        assert!(
+            matches!(err, ApiError::ScenarioParse { ref field, .. }
+                if field == "stages[0].kind"),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn empty_scenarios_and_bad_json_are_typed() {
+        assert!(matches!(
+            Scenario::from_json(r#"{"name":"n","stages":[]}"#).unwrap_err(),
+            ApiError::ScenarioParse { ref field, .. } if field == "$.stages"
+        ));
+        assert!(matches!(
+            Scenario::from_json("{nope").unwrap_err(),
+            ApiError::ScenarioParse { ref field, .. } if field == "$"
+        ));
+        assert!(matches!(
+            Scenario::from_json(r#"{"stages":[]}"#).unwrap_err(),
+            ApiError::ScenarioParse { ref field, .. } if field == "$.name"
+        ));
+    }
+
+    #[test]
+    fn arrival_shapes_parse_and_round_trip() {
+        for (text, kind) in [
+            (r#"{"arrival":{"process":"closed-loop","clients":2,"per_client":4}}"#, "closed-loop"),
+            (r#"{"arrival":{"process":"poisson","rate_hz":100.0,"duration_s":1.0}}"#, "poisson"),
+            (
+                r#"{"arrival":{"process":"bursty","rate_hz":50.0,"on_s":0.1,"off_s":0.2,"duration_s":1.0}}"#,
+                "bursty",
+            ),
+            (r#"{"arrival":{"process":"trace","arrivals_s":[0.0,0.5]}}"#, "trace"),
+        ] {
+            let doc = crate::util::json::parse(text).unwrap();
+            let a = parse_arrival(&doc, "x").unwrap().expect(kind);
+            assert_eq!(a.kind(), kind);
+            // serialize → reparse → equal
+            let rendered = obj(vec![("arrival", arrival_json(&a))]).render();
+            let doc2 = crate::util::json::parse(&rendered).unwrap();
+            assert_eq!(parse_arrival(&doc2, "x").unwrap().unwrap(), a, "{kind}");
+        }
+        let doc = crate::util::json::parse(r#"{"arrival":{"process":"psychic"}}"#).unwrap();
+        assert!(matches!(
+            parse_arrival(&doc, "x").unwrap_err(),
+            ApiError::ScenarioParse { ref field, .. } if field == "x.arrival.process"
+        ));
+    }
+
+    #[test]
+    fn slo_applicability_is_enforced() {
+        let slo = SloSpec { p99_ms: Some(5.0), ..SloSpec::default() };
+        let err = check_slo_applies(&slo, &["min_gops"], "stages[0]").unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].slo.p99_ms"));
+        assert!(check_slo_applies(&slo, &["p99_ms"], "stages[0]").is_ok());
+        let bad = SloSpec { p99_ms: Some(f64::NAN), ..SloSpec::default() };
+        assert!(check_slo_applies(&bad, &["p99_ms"], "s").is_err());
+        let frac = SloSpec { max_reject_frac: Some(1.5), ..SloSpec::default() };
+        assert!(check_slo_applies(&frac, &["max_reject_frac"], "s").is_err());
+        let zero_frac = SloSpec { max_reject_frac: Some(0.0), ..SloSpec::default() };
+        assert!(check_slo_applies(&zero_frac, &["max_reject_frac"], "s").is_ok());
+    }
+
+    #[test]
+    fn verdicts_aggregate() {
+        let v = SloVerdict::from_checks(vec![
+            SloCheck { metric: "a".into(), target: 1.0, actual: 0.5, pass: true },
+            SloCheck { metric: "b".into(), target: 1.0, actual: 2.0, pass: false },
+        ]);
+        assert!(!v.pass);
+        assert_eq!(v.label(), "FAIL");
+        assert_eq!(SloVerdict::empty().label(), "-");
+        assert!(SloVerdict::empty().pass);
+        let json = v.json().render();
+        assert!(json.contains("\"pass\":false") && json.contains("\"metric\":\"a\""));
+    }
+}

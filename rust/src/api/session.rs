@@ -163,6 +163,13 @@ impl Session {
         let models: Vec<&Model> = match &req.models {
             ModelSelect::All => self.models.iter().collect(),
             ModelSelect::Named(name) => vec![self.model(name)?],
+            ModelSelect::Subset(names) => {
+                let mut subset = Vec::with_capacity(names.len());
+                for name in names {
+                    subset.push(self.model(name)?);
+                }
+                subset
+            }
         };
         let custom;
         let acc = match &req.config {

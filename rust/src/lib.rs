@@ -81,8 +81,14 @@
 //! - [`coordinator`] — serving layer: N shards with routing policies
 //!   ([`coordinator::RoutingPolicy`]), dynamic batchers, bounded queues
 //!   with typed backpressure, worker pools, latency metrics.
+//! - [`workload`] — declarative traffic: weighted model mixes, seeded
+//!   arrival processes (closed-loop / Poisson / bursty / trace), threaded
+//!   load generators for the coordinator, and a deterministic
+//!   virtual-time serving simulation ([`workload::vserve`]).
 //! - [`api`] — the [`api::Session`] facade over all of the above,
-//!   including sim-backed serving via [`api::SimExecutor`].
+//!   including sim-backed serving via [`api::SimExecutor`] and the
+//!   declarative scenario layer ([`api::scenario`]: JSON → `Plan` →
+//!   `ScenarioOutcome` with SLO verdicts).
 //! - [`report`] — regenerates every table and figure of the paper.
 //! - [`util`] — RNG, stats, tables, JSON, CLI parsing, error plumbing,
 //!   mini property-test harness.
@@ -101,6 +107,7 @@ pub mod runtime;
 pub mod sim;
 pub mod sparse;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide untyped result (I/O-ish paths); the API layer uses the
 /// typed [`api::ApiError`] instead.

@@ -1,40 +1,93 @@
 //! `photogan` — leader entrypoint + CLI.
 //!
-//! Every subcommand is a thin shim over [`photogan::api::Session`]: flags
-//! are parsed against an explicit per-command spec, turned into a builder
-//! request, executed, and the typed [`ApiError`] (if any) is mapped onto
-//! an exit code (2 = usage/validation, 1 = runtime failure).
+//! Every subcommand is a thin preset over the declarative scenario layer
+//! ([`photogan::api::scenario`]): flags are parsed against an explicit
+//! per-command spec, compiled into a one-stage [`Scenario`], validated by
+//! [`Session::plan`], and executed by [`Session::run`] — the same
+//! `parse → plan → run` path `photogan run scenario.json` takes, so there
+//! is exactly one orchestration path. Typed [`ApiError`]s map onto exit
+//! codes (2 = usage/validation, 1 = runtime failure).
 //!
 //! `--model` accepts any registered generator (the 8-model zoo:
 //! dcgan, condgan, artgan, cyclegan, srgan, pix2pix, stylegan2, progan);
-//! omitting it runs the whole study.
-//!
-//! ```text
-//! photogan simulate [--model NAME] [--batch B] [--config N,K,L,M]
-//!                   [--no-sparse|--no-pipeline|--no-gating] [--overlap]
-//!                   [--strict-power] [--json]
-//! photogan dse      [--threads T] [--grid paper|smoke] [--no-overlap]
-//!                   [--json]
-//! photogan compare  [--overlap] [--json]        # Figs. 13/14 tables
-//! photogan serve    [--backend sim|pjrt] [--shards N] [--routing POLICY]
-//!                   [--queue-depth D] [--requests R] [--batch B]
-//!                   [--workers W] [--max-wait-ms MS] [--time-scale X]
-//!                   [--no-overlap] [--artifacts DIR] [--model NAME]
-//!                   [--json]
-//! photogan report   [--threads T]               # every table/figure
-//! ```
-//!
-//! `--overlap` engages the event-driven scheduler (`sim::schedule`) on
-//! exhibits that default to the paper's analytical reference; `dse` and
-//! `serve` run overlapped by default (`--no-overlap` restores the
-//! sequential cost model).
+//! omitting it runs the whole study. The usage text below is generated
+//! from one subcommand table (`COMMANDS`) so it cannot drift from the
+//! dispatch.
 
-use photogan::api::{default_threads, ApiError, Session, SimRequest, SweepRequest};
-use photogan::arch::config::ArchConfig;
-use photogan::dse::Grid;
-use photogan::report;
+use photogan::api::scenario::{
+    CompareStage, DseStage, ReportStage, Scenario, ServeEngine, ServeStage, SimStage,
+    StageSpec,
+};
+use photogan::api::{ApiError, ScenarioOutcome, Session};
 use photogan::sim::OptFlags;
 use photogan::util::cli::{switch, value, FlagDef, ParsedFlags};
+use std::sync::Arc;
+
+/// One row of the subcommand table — the single source for both the
+/// dispatch and the usage text.
+struct CommandSpec {
+    name: &'static str,
+    summary: &'static str,
+    /// Flag lines printed under the command (wrapped by hand).
+    flags: &'static [&'static str],
+    /// Whether the command supports `--json`.
+    json: bool,
+}
+
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "simulate",
+        summary: "per-model latency / energy / GOPS / EPB on one chip",
+        flags: &[
+            "--model NAME  --batch B  --config N,K,L,M",
+            "--no-sparse --no-pipeline --no-gating  --overlap",
+            "--strict-power (fail if over the power cap)",
+        ],
+        json: true,
+    },
+    CommandSpec {
+        name: "dse",
+        summary: "Fig. 11 design-space exploration over [N,K,L,M]",
+        flags: &["--threads T  --grid paper|smoke  --no-overlap"],
+        json: true,
+    },
+    CommandSpec {
+        name: "compare",
+        summary: "Figs. 13/14 GOPS + EPB vs the baseline platforms",
+        flags: &["--overlap"],
+        json: true,
+    },
+    CommandSpec {
+        name: "serve",
+        summary: "multi-shard serving (sim backend needs no artifacts)",
+        flags: &[
+            "--backend sim|pjrt  --shards N",
+            "--routing round-robin|least-outstanding|model-affinity",
+            "--queue-depth D (typed backpressure beyond)",
+            "--requests R --batch B --workers W --max-wait-ms MS",
+            "--time-scale X (sim pacing; 0 = cost model only)",
+            "--no-overlap (pace at the sequential cost model)",
+            "--artifacts DIR  --model NAME",
+        ],
+        json: true,
+    },
+    CommandSpec {
+        name: "run",
+        summary: "execute a declarative scenario file with per-stage SLO verdicts",
+        flags: &[
+            "<scenario.json>  (starters in examples/scenarios/)",
+            "stages: simulate/dse/compare/serve/report; serve stages carry",
+            "traffic mixes + arrival processes (closed-loop|poisson|bursty|trace)",
+        ],
+        json: true,
+    },
+    CommandSpec {
+        name: "report",
+        summary: "every paper table & figure in one pass",
+        flags: &["--threads T"],
+        json: false,
+    },
+];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,7 +102,12 @@ fn run(args: &[String]) -> i32 {
         "dse" => cmd_dse(rest),
         "compare" => cmd_compare(rest),
         "serve" => cmd_serve(rest),
+        "run" => cmd_run(rest),
         "report" => cmd_report(rest),
+        "--version" | "-V" | "version" => {
+            println!("photogan {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
         "help" | "" => {
             print_help();
             Ok(())
@@ -69,27 +127,24 @@ fn run(args: &[String]) -> i32 {
     }
 }
 
+/// Usage text generated from [`COMMANDS`]; every row lists its `--json`
+/// support so the table cannot drift from the dispatch.
 fn print_help() {
+    let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
     eprintln!(
-        "photogan — silicon-photonic GAN acceleration (paper reproduction)\n\
-         USAGE: photogan <simulate|dse|compare|serve|report> [flags]\n\
-         \n\
-         simulate  --model dcgan|condgan|artgan|cyclegan\n\
-        \u{20}                  |srgan|pix2pix|stylegan2|progan  --batch B\n\
-        \u{20}          --config N,K,L,M  --no-sparse --no-pipeline --no-gating\n\
-        \u{20}          --overlap (event-driven scheduler + resource table)\n\
-        \u{20}          --strict-power (fail if over the power cap)  --json\n\
-         dse       --threads T  --grid paper|smoke  --no-overlap  --json\n\
-         compare   --overlap  --json  (Figs. 13/14 GOPS + EPB tables)\n\
-         serve     --backend sim|pjrt (sim needs no artifacts)\n\
-        \u{20}          --shards N  --routing round-robin|least-outstanding|model-affinity\n\
-        \u{20}          --queue-depth D (typed backpressure beyond)\n\
-        \u{20}          --requests R --batch B --workers W --max-wait-ms MS\n\
-        \u{20}          --time-scale X (sim pacing; 0 = cost model only)\n\
-        \u{20}          --no-overlap (pace at the sequential cost model)\n\
-        \u{20}          --artifacts DIR --model NAME  --json\n\
-         report    --threads T  (all tables & figures)"
+        "photogan {} — silicon-photonic GAN acceleration (paper reproduction)\n\
+         USAGE: photogan <{}> [flags]\n\
+        \u{20}      photogan --version | -V",
+        env!("CARGO_PKG_VERSION"),
+        names.join("|")
     );
+    for c in COMMANDS {
+        let json = if c.json { "  [--json]" } else { "" };
+        eprintln!("\n {:9} {}{}", c.name, c.summary, json);
+        for line in c.flags {
+            eprintln!(" {:9} {}", "", line);
+        }
+    }
 }
 
 fn opt_flags(flags: &ParsedFlags) -> OptFlags {
@@ -99,6 +154,27 @@ fn opt_flags(flags: &ParsedFlags) -> OptFlags {
         power_gated: !flags.has("no-gating"),
         overlap: flags.has("overlap"),
     }
+}
+
+/// Run a one-stage preset scenario and print the stage's own outcome
+/// (tables or JSON) — byte-compatible with the pre-scenario CLI.
+fn run_preset(scenario: Scenario, json: bool) -> Result<ScenarioOutcome, ApiError> {
+    let session = Arc::new(Session::new()?);
+    let plan = session.plan(&scenario)?;
+    let outcome = session.run(&plan)?;
+    if let Some(stage) = outcome.stages.first() {
+        if json {
+            println!("{}", stage.outcome.to_json());
+        } else {
+            for (i, table) in stage.outcome.to_tables().iter().enumerate() {
+                if i > 0 {
+                    println!();
+                }
+                table.print();
+            }
+        }
+    }
+    Ok(outcome)
 }
 
 fn cmd_simulate(args: &[String]) -> Result<(), ApiError> {
@@ -114,27 +190,15 @@ fn cmd_simulate(args: &[String]) -> Result<(), ApiError> {
         switch("json"),
     ];
     let flags = ParsedFlags::parse(args, SPEC)?;
-    let mut builder = SimRequest::builder()
-        .batch(flags.usize_or("batch", 1)?)
-        .opts(opt_flags(&flags))
-        .strict_power(flags.has("strict-power"));
-    if let Some(name) = flags.get("model") {
-        builder = builder.model(name);
-    }
-    if let Some(quad) = flags.get("config") {
-        builder = builder.config(quad.parse::<ArchConfig>().map_err(ApiError::from)?);
-    }
-    let outcome = Session::new()?.simulate(&builder.build()?)?;
-    if flags.has("json") {
-        println!("{}", outcome.to_json());
-    } else {
-        for (i, table) in outcome.to_tables().iter().enumerate() {
-            if i > 0 {
-                println!();
-            }
-            table.print();
-        }
-    }
+    let stage = SimStage {
+        models: flags.get("model").map(|m| vec![m.to_string()]).unwrap_or_default(),
+        batch: flags.usize_or("batch", 1)?,
+        opts: opt_flags(&flags),
+        config: flags.get("config").map(str::to_string),
+        strict_power: flags.has("strict-power"),
+        ..SimStage::default()
+    };
+    run_preset(Scenario::single("cli-simulate", StageSpec::Simulate(stage)), flags.has("json"))?;
     Ok(())
 }
 
@@ -142,38 +206,32 @@ fn cmd_dse(args: &[String]) -> Result<(), ApiError> {
     const SPEC: &[FlagDef] =
         &[value("threads"), value("grid"), switch("no-overlap"), switch("json")];
     let flags = ParsedFlags::parse(args, SPEC)?;
-    let grid = match flags.get("grid") {
-        None | Some("paper") => Grid::paper(),
-        Some("smoke") => Grid::smoke(),
-        Some(other) => {
-            return Err(ApiError::InvalidFlag {
-                flag: "grid".into(),
-                reason: format!("expected 'paper' or 'smoke', got '{other}'"),
-            })
-        }
+    let stage = DseStage {
+        grid: flags.get("grid").unwrap_or("paper").to_string(),
+        threads: match flags.get("threads") {
+            Some(_) => Some(flags.usize_or("threads", 0)?),
+            None => None,
+        },
+        // --no-overlap restores the paper's analytical calibration sweep
+        opts: if flags.has("no-overlap") { OptFlags::all() } else { OptFlags::overlapped() },
+        ..DseStage::default()
     };
-    let mut builder = SweepRequest::builder()
-        .grid(grid)
-        .threads(flags.usize_or("threads", default_threads())?);
-    if flags.has("no-overlap") {
-        // the paper's analytical calibration sweep
-        builder = builder.opts(OptFlags::all());
-    }
-    let request = builder.build()?;
-    let outcome = Session::new()?.sweep(&request)?;
-    if flags.has("json") {
-        println!("{}", outcome.to_json());
-    } else {
-        outcome.to_table().print();
-        if let Some(best) = outcome.optimum() {
-            println!(
-                "optimum: [N,K,L,M]=[{},{},{},{}]  (paper: {:?})",
-                best.n,
-                best.k,
-                best.l,
-                best.m,
-                report::PAPER_OPTIMUM
-            );
+    let outcome =
+        run_preset(Scenario::single("cli-dse", StageSpec::Dse(stage)), flags.has("json"))?;
+    if !flags.has("json") {
+        if let Some(photogan::api::Outcome::Sweep(sweep)) =
+            outcome.stages.first().map(|s| &s.outcome)
+        {
+            if let Some(best) = sweep.optimum() {
+                println!(
+                    "optimum: [N,K,L,M]=[{},{},{},{}]  (paper: {:?})",
+                    best.n,
+                    best.k,
+                    best.l,
+                    best.m,
+                    photogan::report::PAPER_OPTIMUM
+                );
+            }
         }
     }
     Ok(())
@@ -182,28 +240,15 @@ fn cmd_dse(args: &[String]) -> Result<(), ApiError> {
 fn cmd_compare(args: &[String]) -> Result<(), ApiError> {
     const SPEC: &[FlagDef] = &[switch("overlap"), switch("json")];
     let flags = ParsedFlags::parse(args, SPEC)?;
-    let session = Session::new()?;
-    let outcome = if flags.has("overlap") {
-        session.compare_opts(OptFlags::overlapped())
-    } else {
-        session.compare()
+    let stage = CompareStage {
+        opts: if flags.has("overlap") { OptFlags::overlapped() } else { OptFlags::all() },
+        ..CompareStage::default()
     };
-    if flags.has("json") {
-        println!("{}", outcome.to_json());
-    } else {
-        for (i, table) in outcome.to_tables().iter().enumerate() {
-            if i > 0 {
-                println!();
-            }
-            table.print();
-        }
-    }
+    run_preset(Scenario::single("cli-compare", StageSpec::Compare(stage)), flags.has("json"))?;
     Ok(())
 }
 
 fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
-    use photogan::api::{ServeBackend, ServeRequest};
-    use photogan::coordinator::RoutingPolicy;
     const SPEC: &[FlagDef] = &[
         value("backend"),
         value("artifacts"),
@@ -220,63 +265,93 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
         switch("json"),
     ];
     let flags = ParsedFlags::parse(args, SPEC)?;
-    let mut builder = ServeRequest::builder()
-        .requests(flags.usize_or("requests", 64)?)
-        .max_batch(flags.usize_or("batch", 8)?)
-        .workers(flags.usize_or("workers", 2)?)
-        .shards(flags.usize_or("shards", 1)?)
-        .queue_depth(flags.usize_or("queue-depth", 1024)?)
-        .max_wait(std::time::Duration::from_millis(
-            flags.usize_or("max-wait-ms", 5)? as u64,
-        ));
-    if let Some(be) = flags.get("backend") {
-        let backend: ServeBackend = be
-            .parse()
-            .map_err(|reason| ApiError::InvalidFlag { flag: "backend".into(), reason })?;
-        builder = builder.backend(backend);
-    }
-    if let Some(policy) = flags.get("routing") {
-        let routing: RoutingPolicy = policy
-            .parse()
-            .map_err(|reason| ApiError::InvalidFlag { flag: "routing".into(), reason })?;
-        builder = builder.routing(routing);
-    }
-    if let Some(scale) = flags.get("time-scale") {
-        let parsed: f64 = scale.parse().map_err(|_| ApiError::InvalidFlag {
+    let time_scale = match flags.get("time-scale") {
+        None => 1.0,
+        Some(scale) => scale.parse().map_err(|_| ApiError::InvalidFlag {
             flag: "time-scale".into(),
             reason: format!("expected a number, got '{scale}'"),
-        })?;
-        builder = builder.time_scale(parsed);
-    }
-    if let Some(dir) = flags.get("artifacts") {
-        builder = builder.artifacts(dir);
-    }
-    if let Some(model) = flags.get("model") {
-        builder = builder.model(model);
-    }
-    if flags.has("no-overlap") {
-        // pace dispatched batches at the sequential analytical cost model
-        builder = builder.opts(OptFlags::all());
-    }
-    let request = builder.build()?;
-    match request.backend {
-        ServeBackend::Sim => eprintln!(
-            "[serve] sim backend: {} shard(s), {} routing, no artifacts needed",
-            request.shards, request.routing
-        ),
-        ServeBackend::Pjrt => eprintln!(
+        })?,
+    };
+    let stage = ServeStage {
+        engine: ServeEngine::Threaded,
+        backend: flags.get("backend").unwrap_or("sim").to_string(),
+        artifacts: flags.get("artifacts").map(str::to_string),
+        model: flags.get("model").map(str::to_string),
+        requests: flags.usize_or("requests", 64)?,
+        shards: flags.usize_or("shards", 1)?,
+        workers: flags.usize_or("workers", 2)?,
+        max_batch: flags.usize_or("batch", 8)?,
+        max_wait_ms: flags.usize_or("max-wait-ms", 5)? as f64,
+        queue_depth: flags.usize_or("queue-depth", 1024)?,
+        routing: flags.get("routing").unwrap_or("round-robin").to_string(),
+        // --no-overlap paces dispatched batches at the sequential model
+        opts: if flags.has("no-overlap") { OptFlags::all() } else { OptFlags::overlapped() },
+        time_scale,
+        ..ServeStage::default()
+    };
+    match stage.backend.as_str() {
+        "pjrt" => eprintln!(
             "[serve] loading + compiling artifacts from {} …",
-            request.artifacts.display()
+            stage.artifacts.as_deref().unwrap_or("artifacts")
+        ),
+        _ => eprintln!(
+            "[serve] sim backend: {} shard(s), {} routing, no artifacts needed",
+            stage.shards, stage.routing
         ),
     }
-    let session = std::sync::Arc::new(Session::new()?);
-    let outcome = session.serve(&request)?;
+    let json = flags.has("json");
+    let outcome = run_preset(Scenario::single("cli-serve", StageSpec::Serve(stage)), json)?;
+    if !json {
+        if let Some(photogan::api::Outcome::Serve(served)) =
+            outcome.stages.first().map(|s| &s.outcome)
+        {
+            if served.rejections > 0 {
+                println!(
+                    "(absorbed {} shard-queue rejections by draining)",
+                    served.rejections
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), ApiError> {
+    const SPEC: &[FlagDef] = &[switch("json")];
+    // one positional (the scenario path) plus ordinary flags
+    let mut path: Option<String> = None;
+    let mut flag_args: Vec<String> = Vec::new();
+    for a in args {
+        if a.starts_with("--") {
+            flag_args.push(a.clone());
+        } else if path.is_none() {
+            path = Some(a.clone());
+        } else {
+            return Err(ApiError::InvalidFlag {
+                flag: String::new(),
+                reason: format!("unexpected extra argument '{a}' (one scenario file expected)"),
+            });
+        }
+    }
+    let flags = ParsedFlags::parse(&flag_args, SPEC)?;
+    let path = path.ok_or_else(|| ApiError::InvalidFlag {
+        flag: String::new(),
+        reason: "usage: photogan run <scenario.json> [--json]".into(),
+    })?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| ApiError::ScenarioIo { path: path.clone(), reason: e.to_string() })?;
+    let scenario = Scenario::from_json(&text)?;
+    let session = Arc::new(Session::new()?);
+    let plan = session.plan(&scenario)?;
+    let outcome = session.run(&plan)?;
     if flags.has("json") {
         println!("{}", outcome.to_json());
     } else {
-        outcome.to_table().print();
-        if outcome.rejections > 0 {
-            println!("(absorbed {} shard-queue rejections by draining)", outcome.rejections);
+        for (i, table) in outcome.to_tables().iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            table.print();
         }
     }
     Ok(())
@@ -285,31 +360,16 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
 fn cmd_report(args: &[String]) -> Result<(), ApiError> {
     const SPEC: &[FlagDef] = &[value("threads")];
     let flags = ParsedFlags::parse(args, SPEC)?;
-    let threads = flags.usize_or("threads", default_threads())?;
-    if threads == 0 {
+    let stage = ReportStage {
+        threads: match flags.get("threads") {
+            Some(_) => Some(flags.usize_or("threads", 0)?),
+            None => None,
+        },
+        ..ReportStage::default()
+    };
+    if let Some(0) = stage.threads {
         return Err(ApiError::InvalidThreads(0));
     }
-    // one session for the whole run: every exhibit shares the mapping cache
-    let session = Session::new()?;
-    let (t1, _) = report::table1();
-    t1.print();
-    println!();
-    report::table2().print();
-    println!();
-    let (t12, _) = report::fig12(&session);
-    t12.print();
-    println!();
-    let (t_ovl, _) = report::overlap_ablation(&session);
-    t_ovl.print();
-    println!();
-    for (i, table) in session.compare().to_tables().iter().enumerate() {
-        if i > 0 {
-            println!();
-        }
-        table.print();
-    }
-    println!();
-    let (t11, _) = report::fig11(&session, &Grid::paper(), threads);
-    t11.print();
+    run_preset(Scenario::single("cli-report", StageSpec::Report(stage)), false)?;
     Ok(())
 }

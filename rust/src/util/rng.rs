@@ -102,6 +102,25 @@ impl Pcg32 {
             xs.swap(i, j);
         }
     }
+
+    /// Derive a deterministic child stream for `stream_id`.
+    ///
+    /// The child seed is expanded from the parent's *current* `(state,
+    /// inc)` pair and the stream id via SplitMix64, so:
+    ///
+    /// - forking is a pure read — the parent's own sequence is unchanged;
+    /// - the same parent state and the same `stream_id` always yield the
+    ///   same child, no matter which thread forks or when it is consumed
+    ///   (this is what makes per-worker / per-model arrival streams
+    ///   reproducible independent of scheduling);
+    /// - different stream ids yield decorrelated, effectively disjoint
+    ///   streams (distinct PCG32 increments select distinct sequences).
+    pub fn fork(&self, stream_id: u64) -> Pcg32 {
+        let mut s = self.state.rotate_left(29)
+            ^ self.inc
+            ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Pcg32::new(splitmix64(&mut s))
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +180,61 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn fork_is_deterministic_and_pure() {
+        let parent = Pcg32::new(42);
+        let mut a = parent.fork(3);
+        let mut b = parent.fork(3);
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32(), "same id must yield the same child");
+        }
+        // forking never advances the parent
+        let mut p1 = Pcg32::new(42);
+        let mut p2 = Pcg32::new(42);
+        let _ = p1.fork(0);
+        let _ = p1.fork(u64::MAX);
+        for _ in 0..64 {
+            assert_eq!(p1.next_u32(), p2.next_u32(), "fork must be a pure read");
+        }
+    }
+
+    #[test]
+    fn forked_streams_are_disjoint() {
+        let mut parent = Pcg32::new(7);
+        parent.next_u32(); // fork from a mid-sequence state, not just the seed
+        let ids = [0u64, 1, 2, 63, u64::MAX];
+        let mut streams: Vec<Vec<u32>> = ids
+            .iter()
+            .map(|&id| {
+                let mut c = parent.fork(id);
+                (0..256).map(|_| c.next_u32()).collect()
+            })
+            .collect();
+        // the parent's own continuation is one more stream to compare
+        streams.push((0..256).map(|_| parent.next_u32()).collect());
+        for i in 0..streams.len() {
+            for j in (i + 1)..streams.len() {
+                let collisions =
+                    streams[i].iter().zip(&streams[j]).filter(|(a, b)| a == b).count();
+                assert!(
+                    collisions <= 1,
+                    "streams {i} and {j} overlap ({collisions} positionwise collisions)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fork_depends_on_parent_state() {
+        // the same id forked from two different parent positions must differ
+        let mut parent = Pcg32::new(11);
+        let mut early = parent.fork(5);
+        parent.next_u32();
+        let mut late = parent.fork(5);
+        let equal = (0..64).filter(|_| early.next_u32() == late.next_u32()).count();
+        assert!(equal <= 1, "children must track the parent state: {equal} collisions");
     }
 
     #[test]

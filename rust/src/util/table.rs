@@ -54,6 +54,11 @@ impl Table {
         self.rows.len()
     }
 
+    /// The table title, if one was attached.
+    pub fn title(&self) -> Option<&str> {
+        self.title.as_deref()
+    }
+
     /// Column headers.
     pub fn header(&self) -> &[String] {
         &self.header

@@ -1,0 +1,305 @@
+//! Arrival processes — the "when" of a workload scenario.
+//!
+//! Four processes cover the serving studies the paper's evaluation (and
+//! the byte-size scaling literature) call for:
+//!
+//! - **closed-loop** — N clients, each keeping exactly one request in
+//!   flight: the classic saturation benchmark.
+//! - **open-loop Poisson** — memoryless arrivals at a fixed rate: the
+//!   latency-under-load benchmark.
+//! - **bursty on/off** — Poisson arrivals modulated by an on/off square
+//!   wave: stresses queue drain and backpressure.
+//! - **trace replay** — an explicit list of arrival offsets: reproduces a
+//!   recorded production trace exactly.
+//!
+//! Open-loop schedules are *materialized up front* from a seeded
+//! [`Pcg32`] stream, so the arrival times of a scenario are a pure
+//! function of `(process, seed)` — independent of threads, wall clock,
+//! and host speed.
+
+use crate::util::rng::Pcg32;
+use std::fmt;
+
+/// Typed, process-local validation failure. The API layer maps these onto
+/// per-field [`crate::api::ApiError`] variants with the offending JSON
+/// path attached.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalError {
+    /// A rate that is non-finite or non-positive.
+    BadRate(f64),
+    /// A duration (or on/off window) that is non-finite or non-positive.
+    BadDuration(f64),
+    /// A closed loop needs at least one client issuing at least one
+    /// request.
+    BadClients { clients: usize, per_client: usize },
+    /// A trace offset that is negative, non-finite, or out of order.
+    BadTrace { index: usize, offset_s: f64 },
+    /// A trace with no arrivals.
+    EmptyTrace,
+}
+
+impl fmt::Display for ArrivalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArrivalError::BadRate(r) => {
+                write!(f, "arrival rate must be finite and > 0 (got {r})")
+            }
+            ArrivalError::BadDuration(d) => {
+                write!(f, "duration must be finite and > 0 (got {d})")
+            }
+            ArrivalError::BadClients { clients, per_client } => write!(
+                f,
+                "closed loop needs clients >= 1 and per_client >= 1 \
+                 (got {clients} x {per_client})"
+            ),
+            ArrivalError::BadTrace { index, offset_s } => write!(
+                f,
+                "trace offset {index} must be finite, >= 0, and non-decreasing \
+                 (got {offset_s})"
+            ),
+            ArrivalError::EmptyTrace => write!(f, "trace replay has no arrivals"),
+        }
+    }
+}
+
+impl std::error::Error for ArrivalError {}
+
+/// When requests of a scenario arrive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// `clients` concurrent clients, each keeping one request in flight
+    /// and issuing `per_client` requests total.
+    ClosedLoop { clients: usize, per_client: usize },
+    /// Open-loop Poisson arrivals at `rate_hz` for `duration_s` seconds.
+    Poisson { rate_hz: f64, duration_s: f64 },
+    /// Poisson arrivals at `rate_hz` gated by an on/off square wave
+    /// (`on_s` seconds of traffic, `off_s` of silence, repeating) for
+    /// `duration_s` seconds total.
+    Bursty { rate_hz: f64, on_s: f64, off_s: f64, duration_s: f64 },
+    /// Replay recorded arrival offsets (seconds from stream start,
+    /// non-decreasing).
+    Trace { arrivals_s: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    /// Stable kind name (the JSON `process` discriminator).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalProcess::ClosedLoop { .. } => "closed-loop",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Trace { .. } => "trace",
+        }
+    }
+
+    /// Structural validation (rates, durations, trace monotonicity).
+    pub fn validate(&self) -> Result<(), ArrivalError> {
+        match self {
+            ArrivalProcess::ClosedLoop { clients, per_client } => {
+                if *clients == 0 || *per_client == 0 {
+                    return Err(ArrivalError::BadClients {
+                        clients: *clients,
+                        per_client: *per_client,
+                    });
+                }
+            }
+            ArrivalProcess::Poisson { rate_hz, duration_s } => {
+                if !rate_hz.is_finite() || *rate_hz <= 0.0 {
+                    return Err(ArrivalError::BadRate(*rate_hz));
+                }
+                if !duration_s.is_finite() || *duration_s <= 0.0 {
+                    return Err(ArrivalError::BadDuration(*duration_s));
+                }
+            }
+            ArrivalProcess::Bursty { rate_hz, on_s, off_s, duration_s } => {
+                if !rate_hz.is_finite() || *rate_hz <= 0.0 {
+                    return Err(ArrivalError::BadRate(*rate_hz));
+                }
+                for d in [on_s, duration_s] {
+                    if !d.is_finite() || *d <= 0.0 {
+                        return Err(ArrivalError::BadDuration(*d));
+                    }
+                }
+                // a zero off window is legal (degenerates to pure Poisson)
+                if !off_s.is_finite() || *off_s < 0.0 {
+                    return Err(ArrivalError::BadDuration(*off_s));
+                }
+            }
+            ArrivalProcess::Trace { arrivals_s } => {
+                if arrivals_s.is_empty() {
+                    return Err(ArrivalError::EmptyTrace);
+                }
+                let mut prev = 0.0f64;
+                for (index, &t) in arrivals_s.iter().enumerate() {
+                    if !t.is_finite() || t < 0.0 || t < prev {
+                        return Err(ArrivalError::BadTrace { index, offset_s: t });
+                    }
+                    prev = t;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the open-loop arrival offsets (seconds from stream
+    /// start, non-decreasing), drawing inter-arrival gaps from `rng`.
+    /// Returns `None` for [`ArrivalProcess::ClosedLoop`], whose arrivals
+    /// are completion-driven rather than scheduled.
+    pub fn schedule(&self, rng: &mut Pcg32) -> Option<Vec<f64>> {
+        match self {
+            ArrivalProcess::ClosedLoop { .. } => None,
+            ArrivalProcess::Poisson { rate_hz, duration_s } => {
+                let mut out = Vec::new();
+                let mut t = 0.0f64;
+                loop {
+                    t += exp_gap(rng, *rate_hz);
+                    if t >= *duration_s {
+                        return Some(out);
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Bursty { rate_hz, on_s, off_s, duration_s } => {
+                let mut out = Vec::new();
+                let cycle = on_s + off_s;
+                let mut window_start = 0.0f64;
+                // walk on-windows; inside each, draw Poisson gaps at rate_hz
+                while window_start < *duration_s {
+                    let window_end = if *off_s == 0.0 {
+                        // degenerate square wave: one continuous window
+                        *duration_s
+                    } else {
+                        (window_start + on_s).min(*duration_s)
+                    };
+                    let mut t = window_start;
+                    loop {
+                        t += exp_gap(rng, *rate_hz);
+                        if t >= window_end {
+                            break;
+                        }
+                        out.push(t);
+                    }
+                    if *off_s == 0.0 {
+                        break;
+                    }
+                    window_start += cycle;
+                }
+                Some(out)
+            }
+            ArrivalProcess::Trace { arrivals_s } => Some(arrivals_s.clone()),
+        }
+    }
+
+    /// One-line human description (used in outcome tables and JSON).
+    pub fn describe(&self) -> String {
+        match self {
+            ArrivalProcess::ClosedLoop { clients, per_client } => {
+                format!("closed-loop {clients} clients x {per_client} req")
+            }
+            ArrivalProcess::Poisson { rate_hz, duration_s } => {
+                format!("poisson {rate_hz} req/s for {duration_s}s")
+            }
+            ArrivalProcess::Bursty { rate_hz, on_s, off_s, duration_s } => {
+                format!("bursty {rate_hz} req/s ({on_s}s on / {off_s}s off) for {duration_s}s")
+            }
+            ArrivalProcess::Trace { arrivals_s } => {
+                format!("trace replay of {} arrivals", arrivals_s.len())
+            }
+        }
+    }
+}
+
+/// Exponential inter-arrival gap at `rate_hz` (inverse-CDF of `1 - u`,
+/// which is never zero, so the gap is always finite and positive).
+fn exp_gap(rng: &mut Pcg32, rate_hz: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_catches_each_malformed_case() {
+        for bad in [0.0, -3.0, f64::NAN, f64::NEG_INFINITY] {
+            assert!(matches!(
+                ArrivalProcess::Poisson { rate_hz: bad, duration_s: 1.0 }.validate(),
+                Err(ArrivalError::BadRate(_))
+            ));
+        }
+        assert!(matches!(
+            ArrivalProcess::Poisson { rate_hz: 10.0, duration_s: 0.0 }.validate(),
+            Err(ArrivalError::BadDuration(_))
+        ));
+        assert!(matches!(
+            ArrivalProcess::ClosedLoop { clients: 0, per_client: 4 }.validate(),
+            Err(ArrivalError::BadClients { .. })
+        ));
+        assert!(matches!(
+            ArrivalProcess::Trace { arrivals_s: vec![] }.validate(),
+            Err(ArrivalError::EmptyTrace)
+        ));
+        assert!(matches!(
+            ArrivalProcess::Trace { arrivals_s: vec![0.0, 0.5, 0.2] }.validate(),
+            Err(ArrivalError::BadTrace { index: 2, .. })
+        ));
+        // negative off window is rejected, zero is allowed
+        assert!(ArrivalProcess::Bursty {
+            rate_hz: 10.0,
+            on_s: 0.1,
+            off_s: -0.1,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Bursty {
+            rate_hz: 10.0,
+            on_s: 0.1,
+            off_s: 0.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_plausible() {
+        let p = ArrivalProcess::Poisson { rate_hz: 1_000.0, duration_s: 2.0 };
+        let a = p.schedule(&mut Pcg32::new(9)).unwrap();
+        let b = p.schedule(&mut Pcg32::new(9)).unwrap();
+        assert_eq!(a, b, "same seed must yield the same schedule");
+        // ~2000 expected arrivals; allow wide slack
+        assert!((1_500..2_500).contains(&a.len()), "{} arrivals", a.len());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "must be non-decreasing");
+        assert!(a.iter().all(|&t| (0.0..2.0).contains(&t)));
+    }
+
+    #[test]
+    fn bursty_schedule_respects_off_windows() {
+        let p = ArrivalProcess::Bursty {
+            rate_hz: 2_000.0,
+            on_s: 0.1,
+            off_s: 0.1,
+            duration_s: 1.0,
+        };
+        let times = p.schedule(&mut Pcg32::new(4)).unwrap();
+        assert!(!times.is_empty());
+        for &t in &times {
+            let phase = t % 0.2;
+            assert!(phase < 0.1, "arrival at {t} falls in an off window");
+        }
+        // roughly half the pure-Poisson count
+        assert!((700..1_300).contains(&times.len()), "{} arrivals", times.len());
+    }
+
+    #[test]
+    fn trace_replays_verbatim_and_closed_loop_has_no_schedule() {
+        let offs = vec![0.0, 0.25, 0.25, 1.5];
+        let p = ArrivalProcess::Trace { arrivals_s: offs.clone() };
+        assert!(p.validate().is_ok());
+        assert_eq!(p.schedule(&mut Pcg32::new(1)).unwrap(), offs);
+        assert!(ArrivalProcess::ClosedLoop { clients: 2, per_client: 2 }
+            .schedule(&mut Pcg32::new(1))
+            .is_none());
+    }
+}

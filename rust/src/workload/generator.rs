@@ -1,0 +1,247 @@
+//! Threaded load generation against a live [`crate::coordinator::Server`].
+//!
+//! These are the drivers that used to live as private copies inside
+//! `benches/e2e_serving.rs`, promoted to the library so benches, examples,
+//! and the scenario layer all share one implementation:
+//!
+//! - [`closed_loop`] — `clients` threads, each keeping exactly one request
+//!   in flight for `per_client` requests (saturation load).
+//! - [`open_loop`] — one pacing thread submitting at pre-materialized
+//!   arrival offsets (latency-under-load / burst load), dropping rejected
+//!   requests instead of retrying.
+//!
+//! **Traffic is deterministic under a fixed seed regardless of worker
+//! interleaving**: every client owns a [`Pcg32::fork`] child stream keyed
+//! by its client id (the same stream layout as
+//! [`crate::workload::vserve`]), so the *sequence of (model, seed, label)
+//! submissions* is a pure function of `(mix, seed)`. Wall-clock latencies
+//! of course still vary run to run — for bit-reproducible serving
+//! results, use the virtual-time engine.
+
+use super::mix::TrafficMix;
+use crate::coordinator::server::{SubmitError, SubmitHandle};
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+use std::time::{Duration, Instant};
+
+/// Aggregate result of one generated traffic run.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficReport {
+    /// Submission attempts (closed-loop retries count again).
+    pub submitted: usize,
+    /// Responses received.
+    pub completed: usize,
+    /// Typed queue-full rejections observed.
+    pub rejections: u64,
+    /// End-to-end wall latencies (ms), in completion-collection order.
+    pub latencies_ms: Vec<f64>,
+    /// Requests admitted per mix model, in mix declaration order.
+    pub per_model: Vec<(String, u64)>,
+}
+
+impl TrafficReport {
+    /// Latency percentile (`q` in `[0, 100]`), in milliseconds.
+    pub fn latency_percentile_ms(&self, q: f64) -> f64 {
+        percentile(&self.latencies_ms, q)
+    }
+}
+
+/// Closed-loop load: `clients` threads each keep one request in flight
+/// until they have completed `per_client` requests. Queue-full rejections
+/// are counted and retried (after a yield), so every request eventually
+/// lands unless the server shuts down.
+pub fn closed_loop(
+    handle: &SubmitHandle,
+    mix: &TrafficMix,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+) -> TrafficReport {
+    let root = Pcg32::new(seed);
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let handle = handle.clone();
+            let mix = mix.clone();
+            // stream ids 2+c match the virtual engine's client streams
+            let mut rng = root.fork(2 + c as u64);
+            std::thread::spawn(move || {
+                let mut lats = Vec::with_capacity(per_client);
+                let mut rejected = 0u64;
+                let mut submitted = 0usize;
+                let mut counts = vec![0u64; mix.len()];
+                for i in 0..per_client {
+                    let m = mix.sample_index(&mut rng);
+                    let model = mix.entries()[m].0.clone();
+                    let req_seed = rng.next_u64();
+                    loop {
+                        submitted += 1;
+                        match handle.submit(&model, req_seed, Some((i % 10) as u32), 1) {
+                            Ok(rx) => {
+                                if let Ok(resp) = rx.recv() {
+                                    lats.push(resp.total_time * 1e3);
+                                }
+                                counts[m] += 1;
+                                break;
+                            }
+                            Err(SubmitError::QueueFull { .. }) => {
+                                rejected += 1;
+                                std::thread::yield_now();
+                            }
+                            // server shut down mid-run: stop this client
+                            Err(_) => return (lats, rejected, submitted, counts),
+                        }
+                    }
+                }
+                (lats, rejected, submitted, counts)
+            })
+        })
+        .collect();
+
+    let mut report = TrafficReport {
+        per_model: mix.models().into_iter().map(|m| (m, 0u64)).collect(),
+        ..TrafficReport::default()
+    };
+    for t in threads {
+        let (lats, rejected, submitted, counts) =
+            t.join().expect("workload client thread panicked");
+        report.completed += lats.len();
+        report.latencies_ms.extend(lats);
+        report.rejections += rejected;
+        report.submitted += submitted;
+        for (slot, n) in report.per_model.iter_mut().zip(counts) {
+            slot.1 += n;
+        }
+    }
+    report
+}
+
+/// Open-loop load: submit one request per arrival offset (seconds from
+/// stream start, non-decreasing — see
+/// [`crate::workload::ArrivalProcess::schedule`]), pacing the submissions
+/// at `offset × time_scale` wall seconds (`time_scale = 0` submits the
+/// whole stream as one burst). Queue-full rejections are *dropped*, not
+/// retried — open-loop sources do not slow down for an overloaded server,
+/// which is exactly what makes this the backpressure probe.
+pub fn open_loop(
+    handle: &SubmitHandle,
+    mix: &TrafficMix,
+    offsets_s: &[f64],
+    time_scale: f64,
+    seed: u64,
+) -> TrafficReport {
+    let root = Pcg32::new(seed);
+    // stream id 1 matches the virtual engine's open-loop mix stream
+    let mut rng = root.fork(1);
+    let mut report = TrafficReport {
+        per_model: mix.models().into_iter().map(|m| (m, 0u64)).collect(),
+        ..TrafficReport::default()
+    };
+    let mut pending = Vec::with_capacity(offsets_s.len());
+    let start = Instant::now();
+    for (i, &off) in offsets_s.iter().enumerate() {
+        let target = off * time_scale;
+        if target > 0.0 && target.is_finite() {
+            let target = Duration::from_secs_f64(target);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        let m = mix.sample_index(&mut rng);
+        let model = &mix.entries()[m].0;
+        let req_seed = rng.next_u64();
+        report.submitted += 1;
+        match handle.submit(model, req_seed, Some((i % 10) as u32), 1) {
+            Ok(rx) => {
+                report.per_model[m].1 += 1;
+                pending.push(rx);
+            }
+            Err(SubmitError::QueueFull { .. }) => report.rejections += 1,
+            Err(_) => break, // server shut down mid-run
+        }
+    }
+    for rx in pending {
+        if let Ok(resp) = rx.recv() {
+            report.latencies_ms.push(resp.total_time * 1e3);
+            report.completed += 1;
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{BatchExecutor, Server, ServerConfig};
+    use crate::coordinator::BatchPolicy;
+    use std::sync::Arc;
+
+    /// Instant stub executor serving two models.
+    struct Stub;
+
+    impl BatchExecutor for Stub {
+        fn models(&self) -> Vec<String> {
+            vec!["a".into(), "b".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            2
+        }
+
+        fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+            vec![0.0; entries.len() * 2]
+        }
+    }
+
+    fn mix_ab() -> TrafficMix {
+        TrafficMix::new(vec![("a".into(), 1.0), ("b".into(), 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn closed_loop_completes_every_request() {
+        let server = Server::start(Arc::new(Stub), ServerConfig::default());
+        let report = closed_loop(&server.handle(), &mix_ab(), 4, 16, 42);
+        assert_eq!(report.completed, 64);
+        assert_eq!(report.latencies_ms.len(), 64);
+        assert_eq!(report.per_model.iter().map(|(_, n)| n).sum::<u64>(), 64);
+        // both mix entries see traffic under a uniform split of 64 draws
+        assert!(report.per_model.iter().all(|(_, n)| *n > 0), "{:?}", report.per_model);
+        server.shutdown();
+    }
+
+    #[test]
+    fn open_loop_burst_counts_rejections_against_a_tiny_queue() {
+        let server = Server::start(
+            Arc::new(Stub),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(5),
+                },
+                workers: 1,
+                queue_depth: 4,
+                ..ServerConfig::default()
+            },
+        );
+        // one simultaneous burst far over the queue depth
+        let offsets = vec![0.0; 256];
+        let report = open_loop(&server.handle(), &mix_ab(), &offsets, 0.0, 7);
+        assert_eq!(report.submitted, 256);
+        assert_eq!(report.completed + report.rejections as usize, 256);
+        assert!(report.rejections > 0, "queue of 4 must shed a 256 burst");
+        server.shutdown();
+    }
+
+    #[test]
+    fn traffic_sequence_is_seed_deterministic() {
+        // the per-model admission counts depend only on (mix, seed): run
+        // the same closed loop against two separate servers
+        let run = || {
+            let server = Server::start(Arc::new(Stub), ServerConfig::default());
+            let r = closed_loop(&server.handle(), &mix_ab(), 3, 32, 9);
+            server.shutdown();
+            r.per_model
+        };
+        assert_eq!(run(), run(), "model sequence must not depend on scheduling");
+    }
+}

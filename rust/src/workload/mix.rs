@@ -1,0 +1,195 @@
+//! Weighted model traffic mixes.
+//!
+//! A [`TrafficMix`] is the "what" of a workload scenario: which models a
+//! request stream draws from and with what relative weight (the GANAX
+//! observation — GAN serving traffic is an irregular mix of architectures,
+//! not one model — made first-class). Sampling is deterministic given a
+//! [`Pcg32`] stream, so a mix plus a seed fully determines the model
+//! sequence of a generated workload.
+
+use crate::util::rng::Pcg32;
+use std::fmt;
+
+/// A typed, mix-local validation failure. The API layer maps these onto
+/// per-field [`crate::api::ApiError`] variants with the offending JSON
+/// path attached.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MixError {
+    /// A mix with no entries cannot generate traffic.
+    Empty,
+    /// A weight that is non-positive or non-finite (index into the entry
+    /// list, model name, and the rejected weight).
+    BadWeight { index: usize, model: String, weight: f64 },
+}
+
+impl fmt::Display for MixError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MixError::Empty => write!(f, "traffic mix has no entries"),
+            MixError::BadWeight { index, model, weight } => write!(
+                f,
+                "mix entry {index} ('{model}') has non-positive weight {weight}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MixError {}
+
+/// A validated weighted mix of model names.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficMix {
+    entries: Vec<(String, f64)>,
+    /// Cumulative normalized weights, same length as `entries`; the last
+    /// element is exactly 1.0.
+    cumulative: Vec<f64>,
+}
+
+impl TrafficMix {
+    /// Build a mix from `(model, weight)` pairs. Weights must be finite
+    /// and strictly positive; they need not sum to 1 (normalization is
+    /// internal).
+    pub fn new(entries: Vec<(String, f64)>) -> Result<TrafficMix, MixError> {
+        if entries.is_empty() {
+            return Err(MixError::Empty);
+        }
+        for (index, (model, weight)) in entries.iter().enumerate() {
+            if !weight.is_finite() || *weight <= 0.0 {
+                return Err(MixError::BadWeight {
+                    index,
+                    model: model.clone(),
+                    weight: *weight,
+                });
+            }
+        }
+        let total: f64 = entries.iter().map(|(_, w)| w).sum();
+        let mut acc = 0.0;
+        let mut cumulative: Vec<f64> = entries
+            .iter()
+            .map(|(_, w)| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        // pin the top so rounding can never leave sample() past the end
+        if let Some(last) = cumulative.last_mut() {
+            *last = 1.0;
+        }
+        Ok(TrafficMix { entries, cumulative })
+    }
+
+    /// A single-model mix (weight 1) — what the legacy single-model serve
+    /// path reduces to.
+    pub fn single(model: impl Into<String>) -> TrafficMix {
+        TrafficMix {
+            entries: vec![(model.into(), 1.0)],
+            cumulative: vec![1.0],
+        }
+    }
+
+    /// A uniform mix over `models`.
+    pub fn uniform<S: AsRef<str>>(models: &[S]) -> Result<TrafficMix, MixError> {
+        TrafficMix::new(models.iter().map(|m| (m.as_ref().to_string(), 1.0)).collect())
+    }
+
+    /// The raw `(model, weight)` entries, in declaration order.
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    /// The entries with weights normalized to sum to 1.
+    pub fn normalized(&self) -> Vec<(String, f64)> {
+        let total: f64 = self.entries.iter().map(|(_, w)| w).sum();
+        self.entries.iter().map(|(m, w)| (m.clone(), w / total)).collect()
+    }
+
+    /// Model names in declaration order.
+    pub fn models(&self) -> Vec<String> {
+        self.entries.iter().map(|(m, _)| m.clone()).collect()
+    }
+
+    /// Number of models in the mix.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True for the (unconstructible) empty mix — present for API
+    /// symmetry with `len`.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sample a model *index* from the mix (one `rng` draw). Indices are
+    /// what the virtual-time engine keys its queues by; use
+    /// [`TrafficMix::sample`] for the name.
+    pub fn sample_index(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.f64();
+        // cumulative is ascending and ends at exactly 1.0 > u
+        self.cumulative
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.entries.len() - 1)
+    }
+
+    /// Sample a model name from the mix (one `rng` draw).
+    pub fn sample(&self, rng: &mut Pcg32) -> &str {
+        &self.entries[self.sample_index(rng)].0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_empty_and_bad_weights() {
+        assert_eq!(TrafficMix::new(vec![]), Err(MixError::Empty));
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = TrafficMix::new(vec![
+                ("a".into(), 1.0),
+                ("b".into(), bad),
+            ])
+            .unwrap_err();
+            assert!(
+                matches!(err, MixError::BadWeight { index: 1, ref model, .. } if model == "b"),
+                "{bad}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn normalization_and_single() {
+        let mix = TrafficMix::new(vec![("a".into(), 3.0), ("b".into(), 1.0)]).unwrap();
+        let norm = mix.normalized();
+        assert!((norm[0].1 - 0.75).abs() < 1e-12);
+        assert!((norm[1].1 - 0.25).abs() < 1e-12);
+        assert_eq!(mix.models(), vec!["a".to_string(), "b".to_string()]);
+        let solo = TrafficMix::single("only");
+        assert_eq!(solo.len(), 1);
+        assert_eq!(solo.normalized()[0], ("only".to_string(), 1.0));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_tracks_weights() {
+        let mix = TrafficMix::new(vec![("hot".into(), 9.0), ("cold".into(), 1.0)]).unwrap();
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Pcg32::new(seed);
+            (0..2_000).map(|_| mix.sample_index(&mut rng)).collect()
+        };
+        assert_eq!(draw(5), draw(5), "same seed must reproduce the sequence");
+        let hot = draw(5).iter().filter(|&&i| i == 0).count();
+        let frac = hot as f64 / 2_000.0;
+        assert!((frac - 0.9).abs() < 0.03, "hot fraction {frac}");
+    }
+
+    #[test]
+    fn uniform_covers_every_model() {
+        let mix = TrafficMix::uniform(&["a", "b", "c"]).unwrap();
+        let mut rng = Pcg32::new(3);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[mix.sample_index(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+}

@@ -1,0 +1,38 @@
+//! Library-level workload description and traffic generation.
+//!
+//! This module is the "load" half of the declarative scenario layer
+//! ([`crate::api::scenario`]): it owns *what* traffic looks like and *how*
+//! it is generated, independent of which engine serves it.
+//!
+//! - [`TrafficMix`] — weighted model mixes (GAN serving traffic is an
+//!   irregular mix of architectures, not a single model).
+//! - [`ArrivalProcess`] — closed-loop, open-loop Poisson, bursty on/off,
+//!   and recorded-trace arrival processes, materialized deterministically
+//!   from seeded [`crate::util::rng::Pcg32`] streams.
+//! - [`generator`] — threaded load drivers for the real multi-shard
+//!   coordinator (promoted out of `benches/e2e_serving.rs`); traffic
+//!   sequences are reproducible under a fixed seed regardless of worker
+//!   interleaving.
+//! - [`vserve`] — a deterministic virtual-time discrete-event simulation
+//!   of the same serving semantics (routing, bounded queues, dynamic
+//!   batching, worker pools) with service times from a pluggable
+//!   [`vserve::ServiceModel`]; this is what makes scenario outcomes
+//!   byte-identical for a fixed seed.
+//!
+//! Layering: `workload` sits between `coordinator` (it drives
+//! [`crate::coordinator::SubmitHandle`]s and mirrors
+//! [`crate::coordinator::RoutingPolicy`]) and `api` (which compiles
+//! scenarios into mixes, arrivals, and virtual fleet shapes). It never
+//! depends on `api`.
+
+pub mod arrival;
+pub mod generator;
+pub mod mix;
+pub mod vserve;
+
+pub use arrival::{ArrivalError, ArrivalProcess};
+pub use generator::TrafficReport;
+pub use mix::{MixError, TrafficMix};
+pub use vserve::{
+    simulate_serve, ServiceModel, VirtualOutcome, VirtualServeConfig, VirtualShardLoad,
+};

@@ -1,0 +1,753 @@
+//! Virtual-time multi-shard serving simulation.
+//!
+//! The threaded coordinator ([`crate::coordinator::Server`]) measures real
+//! wall-clock latencies, which makes its outputs irreproducible by
+//! construction. Scenario runs need the opposite: **bit-identical results
+//! for a fixed seed**, so SLO verdicts and regression diffs are stable
+//! across hosts and runs. This module re-implements the coordinator's
+//! serving semantics — shard routing, bounded per-shard queues with
+//! rejection, per-model dynamic batching under `(max_batch, max_wait)`,
+//! and a fixed worker pool per shard — as a deterministic discrete-event
+//! simulation in *virtual seconds*, with batch service times supplied by a
+//! pluggable [`ServiceModel`] (the API layer plugs in the photonic
+//! simulator through the session mapping cache).
+//!
+//! Every source of nondeterminism is removed: arrivals are materialized
+//! from seeded [`Pcg32`] streams ([`crate::workload::ArrivalProcess`]),
+//! event ties break on insertion order, routing ties break on the lowest
+//! shard index, and all accounting is plain `f64` arithmetic. Running the
+//! same `(config, mix, arrival, seed)` twice yields byte-identical
+//! outcomes.
+
+use super::arrival::ArrivalProcess;
+use super::mix::TrafficMix;
+use crate::coordinator::routing::{affinity_hash, RoutingPolicy};
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile_sorted;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Supplies the virtual service time of one dispatched batch.
+///
+/// (Deliberately not blanket-implemented for closures: downstream code
+/// implements it for named types — e.g. the API layer's session-backed
+/// cost model — which a `Fn` blanket impl would conflict with under
+/// coherence.)
+pub trait ServiceModel {
+    /// End-to-end latency (seconds) of serving `batch` samples of `model`
+    /// on one chip. Must be deterministic for determinism of the DES.
+    fn batch_latency_s(&self, model: &str, batch: usize) -> f64;
+}
+
+/// Virtual serving fleet shape — the deterministic mirror of
+/// [`crate::coordinator::ServerConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualServeConfig {
+    /// Independent serving shards (chips).
+    pub shards: usize,
+    /// Virtual workers per shard (concurrent batches in flight per chip).
+    pub workers: usize,
+    /// Maximum samples per dispatched batch.
+    pub max_batch: usize,
+    /// Maximum virtual seconds the oldest pending request waits before its
+    /// batch is dispatched anyway.
+    pub max_wait_s: f64,
+    /// Bounded in-flight samples per shard; arrivals beyond are rejected.
+    pub queue_depth: usize,
+    /// How arrivals pick a shard.
+    pub routing: RoutingPolicy,
+}
+
+impl Default for VirtualServeConfig {
+    fn default() -> Self {
+        VirtualServeConfig {
+            shards: 1,
+            workers: 2,
+            max_batch: 8,
+            max_wait_s: 5e-4,
+            queue_depth: 1024,
+            routing: RoutingPolicy::RoundRobin,
+        }
+    }
+}
+
+/// Per-shard load accounting of a virtual run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualShardLoad {
+    pub shard: usize,
+    /// Requests admitted onto this shard.
+    pub requests: u64,
+    /// Worker-seconds spent serving batches.
+    pub busy_s: f64,
+    /// `busy_s / (workers × makespan)` — mean worker occupancy.
+    pub utilization: f64,
+}
+
+/// Deterministic outcome of a virtual serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualOutcome {
+    /// Submission attempts (closed-loop retries count again).
+    pub offered: usize,
+    /// Requests admitted past the bounded queues (all complete by end).
+    pub admitted: usize,
+    /// Typed queue-full rejections.
+    pub rejected: usize,
+    /// Virtual time from stream start to the last completion/arrival.
+    pub makespan_s: f64,
+    /// Per-request virtual latencies in milliseconds, sorted ascending.
+    pub latencies_ms: Vec<f64>,
+    /// Dispatched batches and their mean size.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Admitted requests per mix model, in mix declaration order.
+    pub per_model: Vec<(String, u64)>,
+    pub per_shard: Vec<VirtualShardLoad>,
+}
+
+impl VirtualOutcome {
+    /// Admitted requests per virtual second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.admitted as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency percentile (`q` in `[0, 100]`), in milliseconds.
+    pub fn latency_percentile_ms(&self, q: f64) -> f64 {
+        percentile_sorted(&self.latencies_ms, q)
+    }
+
+    /// Mean latency in milliseconds.
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            0.0
+        } else {
+            self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+        }
+    }
+
+    /// Rejected fraction of all submission attempts.
+    pub fn reject_fraction(&self) -> f64 {
+        if self.offered > 0 {
+            self.rejected as f64 / self.offered as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Virtual backoff before a rejected closed-loop client retries (the
+/// deterministic analogue of the threaded generator's `yield_now`).
+const RETRY_BACKOFF_S: f64 = 1e-5;
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// A scheduled open-loop arrival of one `mix` model.
+    Arrival { model: usize },
+    /// A closed-loop client is ready to issue its next request.
+    ClientNext { client: usize },
+    /// A rejected closed-loop submission retries (same sampled model).
+    ClientRetry { client: usize, model: usize },
+    /// A shard worker finished a batch, releasing `release` samples of
+    /// the shard's bounded queue capacity (the coordinator holds capacity
+    /// until the response is delivered, not until dispatch).
+    WorkerFree { shard: usize, release: usize },
+    /// A shard's oldest pending request reached `max_wait_s`.
+    Deadline { shard: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+// BinaryHeap is a max-heap: invert the ordering so the earliest (time,
+// seq) pops first. seq is unique, so the order is total and deterministic.
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Req {
+    arrival: f64,
+    /// The closed-loop client to wake on completion, if any. (The model
+    /// is identified by which per-model queue holds the request.)
+    client: Option<usize>,
+}
+
+struct Shard {
+    /// Free-at virtual time per worker.
+    worker_free: Vec<f64>,
+    /// Pending requests per mix model (FIFO).
+    pending: Vec<VecDeque<Req>>,
+    outstanding: usize,
+    requests: u64,
+    busy_s: f64,
+}
+
+struct Dispatcher<'a, C: ServiceModel> {
+    cfg: &'a VirtualServeConfig,
+    names: &'a [String],
+    cost: &'a C,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    latencies_ms: Vec<f64>,
+    per_model: Vec<u64>,
+    batches: u64,
+    batch_samples: u64,
+    makespan: f64,
+    /// `(client, completion)` wakeups produced by the last dispatch pass.
+    completions: Vec<(usize, f64)>,
+}
+
+impl<'a, C: ServiceModel> Dispatcher<'a, C> {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// Dispatch every batch that is ready on `shard` at virtual time
+    /// `now`; schedules the deadline/worker-free events that guarantee
+    /// progress for anything left pending.
+    fn try_dispatch(&mut self, shard_idx: usize, sh: &mut Shard, now: f64) {
+        loop {
+            // idle worker with the earliest free-at (ties → lowest index)
+            let mut worker: Option<(usize, f64)> = None;
+            for (i, &free) in sh.worker_free.iter().enumerate() {
+                if free <= now {
+                    match worker {
+                        Some((_, best)) if best <= free => {}
+                        _ => worker = Some((i, free)),
+                    }
+                }
+            }
+            let Some((w, _)) = worker else { break };
+            // A batch is ready when it is full or its head has waited
+            // max_wait. The coordinator drains *every* ready batcher
+            // (`Batcher::ready`), so an unready queue must never block a
+            // ready one: serve the ready model with the oldest head, and
+            // remember the oldest unready head for the progress deadline.
+            let mut ready: Option<(usize, f64)> = None;
+            let mut waiting: Option<f64> = None;
+            for (m, q) in sh.pending.iter().enumerate() {
+                if let Some(r) = q.front() {
+                    let head = r.arrival;
+                    if q.len() >= self.cfg.max_batch || now >= head + self.cfg.max_wait_s {
+                        match ready {
+                            Some((_, best)) if best <= head => {}
+                            _ => ready = Some((m, head)),
+                        }
+                    } else {
+                        match waiting {
+                            Some(best) if best <= head => {}
+                            _ => waiting = Some(head),
+                        }
+                    }
+                }
+            }
+            let Some((m, _)) = ready else {
+                if let Some(head) = waiting {
+                    // progress guarantee: revisit when the oldest unready
+                    // head times out
+                    self.push(
+                        head + self.cfg.max_wait_s,
+                        EventKind::Deadline { shard: shard_idx },
+                    );
+                }
+                break;
+            };
+            let k = sh.pending[m].len().min(self.cfg.max_batch);
+            let service = self.cost.batch_latency_s(&self.names[m], k).max(0.0);
+            let done = now + service;
+            sh.worker_free[w] = done;
+            sh.busy_s += service;
+            self.batches += 1;
+            self.batch_samples += k as u64;
+            for _ in 0..k {
+                if let Some(r) = sh.pending[m].pop_front() {
+                    self.latencies_ms.push((done - r.arrival) * 1e3);
+                    self.per_model[m] += 1;
+                    if let Some(c) = r.client {
+                        self.completions.push((c, done));
+                    }
+                }
+            }
+            self.makespan = self.makespan.max(done);
+            // queue capacity stays reserved until the batch completes
+            self.push(done, EventKind::WorkerFree { shard: shard_idx, release: k });
+        }
+    }
+}
+
+/// Pick a shard for `model` under `routing` (deterministic; ties break
+/// toward the lowest shard index).
+fn route(routing: RoutingPolicy, rr: &mut usize, shards: &[Shard], model: &str) -> usize {
+    match routing {
+        RoutingPolicy::RoundRobin => {
+            let s = *rr % shards.len();
+            *rr += 1;
+            s
+        }
+        RoutingPolicy::LeastOutstanding => {
+            let mut best = 0usize;
+            let mut best_load = usize::MAX;
+            for (i, sh) in shards.iter().enumerate() {
+                if sh.outstanding < best_load {
+                    best = i;
+                    best_load = sh.outstanding;
+                }
+            }
+            best
+        }
+        RoutingPolicy::ModelAffinity => (affinity_hash(model) % shards.len() as u64) as usize,
+    }
+}
+
+/// Run a deterministic virtual-time serving simulation.
+///
+/// `seed` derives every random stream ([`Pcg32::fork`]): stream 0 feeds
+/// the open-loop arrival schedule, stream 1 the open-loop model mix, and
+/// streams `2 + c` the closed-loop clients — the same stream layout the
+/// threaded [`crate::workload::generator`] uses, so virtual and threaded
+/// runs of one scenario draw identical traffic.
+pub fn simulate_serve<C: ServiceModel>(
+    cfg: &VirtualServeConfig,
+    mix: &TrafficMix,
+    arrival: &ArrivalProcess,
+    cost: &C,
+    seed: u64,
+) -> VirtualOutcome {
+    assert!(cfg.shards >= 1, "at least one shard");
+    assert!(cfg.workers >= 1, "at least one worker per shard");
+    assert!(cfg.max_batch >= 1, "batches must admit a sample");
+    assert!(cfg.queue_depth >= 1, "queue depth must admit a sample");
+    assert!(
+        cfg.max_wait_s.is_finite() && cfg.max_wait_s >= 0.0,
+        "max_wait must be finite and >= 0"
+    );
+
+    let root = Pcg32::new(seed);
+    let names = mix.models();
+    let n_models = names.len();
+    let mut shards: Vec<Shard> = (0..cfg.shards)
+        .map(|_| Shard {
+            worker_free: vec![0.0; cfg.workers],
+            pending: (0..n_models).map(|_| VecDeque::new()).collect(),
+            outstanding: 0,
+            requests: 0,
+            busy_s: 0.0,
+        })
+        .collect();
+
+    let mut d = Dispatcher {
+        cfg,
+        names: &names,
+        cost,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        latencies_ms: Vec::new(),
+        per_model: vec![0u64; n_models],
+        batches: 0,
+        batch_samples: 0,
+        makespan: 0.0,
+        completions: Vec::new(),
+    };
+
+    // seed the event stream
+    let mut client_rngs: Vec<Pcg32> = Vec::new();
+    let mut client_remaining: Vec<usize> = Vec::new();
+    match arrival.schedule(&mut root.fork(0)) {
+        Some(times) => {
+            let mut mix_rng = root.fork(1);
+            for t in times {
+                let model = mix.sample_index(&mut mix_rng);
+                // burn the draw the threaded generator spends on the
+                // per-request seed, so both engines sample the same
+                // model sequence from one scenario seed
+                let _ = mix_rng.next_u64();
+                d.push(t, EventKind::Arrival { model });
+            }
+        }
+        None => {
+            if let ArrivalProcess::ClosedLoop { clients, per_client } = arrival {
+                for c in 0..*clients {
+                    client_rngs.push(root.fork(2 + c as u64));
+                    client_remaining.push(*per_client);
+                    d.push(0.0, EventKind::ClientNext { client: c });
+                }
+            }
+        }
+    }
+
+    let mut offered = 0usize;
+    let mut rejected = 0usize;
+    let mut rr = 0usize;
+
+    while let Some(ev) = d.heap.pop() {
+        let now = ev.time;
+        match ev.kind {
+            EventKind::Arrival { model } => {
+                // makespan tracks arrivals and completions only — stale
+                // deadline/retry events must not inflate it
+                d.makespan = d.makespan.max(now);
+                offered += 1;
+                let s = route(cfg.routing, &mut rr, &shards, &names[model]);
+                let sh = &mut shards[s];
+                if sh.outstanding + 1 > cfg.queue_depth {
+                    rejected += 1;
+                } else {
+                    sh.outstanding += 1;
+                    sh.requests += 1;
+                    sh.pending[model].push_back(Req { arrival: now, client: None });
+                    d.try_dispatch(s, sh, now);
+                }
+            }
+            EventKind::ClientNext { client } => {
+                if client_remaining[client] == 0 {
+                    continue;
+                }
+                let model = mix.sample_index(&mut client_rngs[client]);
+                // keep the per-client stream aligned with the threaded
+                // generator (which also draws a request seed here)
+                let _ = client_rngs[client].next_u64();
+                submit_closed(
+                    &mut d, cfg, &names, &mut shards, &mut rr, &mut offered, &mut rejected,
+                    &mut client_remaining, client, model, now,
+                );
+            }
+            EventKind::ClientRetry { client, model } => {
+                submit_closed(
+                    &mut d, cfg, &names, &mut shards, &mut rr, &mut offered, &mut rejected,
+                    &mut client_remaining, client, model, now,
+                );
+            }
+            EventKind::WorkerFree { shard, release } => {
+                let sh = &mut shards[shard];
+                sh.outstanding -= release;
+                d.try_dispatch(shard, sh, now);
+            }
+            EventKind::Deadline { shard } => {
+                let sh = &mut shards[shard];
+                d.try_dispatch(shard, sh, now);
+            }
+        }
+        // wake closed-loop clients whose requests just completed
+        let wakeups = std::mem::take(&mut d.completions);
+        for (client, done) in wakeups {
+            if client_remaining[client] > 0 {
+                d.push(done, EventKind::ClientNext { client });
+            }
+        }
+    }
+
+    let mut latencies_ms = d.latencies_ms;
+    latencies_ms.sort_by(f64::total_cmp);
+    let admitted = latencies_ms.len();
+    debug_assert_eq!(offered, admitted + rejected, "request conservation");
+    let makespan_s = d.makespan;
+    let per_shard = shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| VirtualShardLoad {
+            shard: i,
+            requests: sh.requests,
+            busy_s: sh.busy_s,
+            utilization: if makespan_s > 0.0 {
+                sh.busy_s / (cfg.workers as f64 * makespan_s)
+            } else {
+                0.0
+            },
+        })
+        .collect();
+    let mean_batch = if d.batches > 0 {
+        d.batch_samples as f64 / d.batches as f64
+    } else {
+        0.0
+    };
+    VirtualOutcome {
+        offered,
+        admitted,
+        rejected,
+        makespan_s,
+        latencies_ms,
+        batches: d.batches,
+        mean_batch,
+        // cloned, not moved: the dispatcher still borrows `names`
+        per_model: names.iter().cloned().zip(d.per_model.clone()).collect(),
+        per_shard,
+    }
+}
+
+/// One closed-loop submission attempt: admit (consuming one of the
+/// client's remaining requests) or count a rejection and schedule a
+/// deterministic retry with the *same* sampled model.
+#[allow(clippy::too_many_arguments)]
+fn submit_closed<C: ServiceModel>(
+    d: &mut Dispatcher<'_, C>,
+    cfg: &VirtualServeConfig,
+    names: &[String],
+    shards: &mut [Shard],
+    rr: &mut usize,
+    offered: &mut usize,
+    rejected: &mut usize,
+    client_remaining: &mut [usize],
+    client: usize,
+    model: usize,
+    now: f64,
+) {
+    *offered += 1;
+    d.makespan = d.makespan.max(now);
+    let s = route(cfg.routing, rr, shards, &names[model]);
+    let sh = &mut shards[s];
+    if sh.outstanding + 1 > cfg.queue_depth {
+        *rejected += 1;
+        d.push(now + RETRY_BACKOFF_S, EventKind::ClientRetry { client, model });
+        return;
+    }
+    client_remaining[client] -= 1;
+    sh.outstanding += 1;
+    sh.requests += 1;
+    sh.pending[model].push_back(Req { arrival: now, client: Some(client) });
+    d.try_dispatch(s, sh, now);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Constant service time regardless of model/batch.
+    struct FlatCost(f64);
+
+    impl ServiceModel for FlatCost {
+        fn batch_latency_s(&self, _model: &str, _batch: usize) -> f64 {
+            self.0
+        }
+    }
+
+    fn mix_ab() -> TrafficMix {
+        TrafficMix::new(vec![("a".into(), 1.0), ("b".into(), 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn identical_inputs_yield_identical_outcomes() {
+        let cfg = VirtualServeConfig { shards: 2, ..VirtualServeConfig::default() };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 5_000.0, duration_s: 0.1 };
+        let run = || simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-4), 42);
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "virtual serving must be bit-deterministic");
+        assert!(a.admitted > 0);
+        assert_eq!(a.offered, a.admitted + a.rejected);
+    }
+
+    #[test]
+    fn closed_loop_conserves_requests() {
+        let cfg = VirtualServeConfig::default();
+        let arrival = ArrivalProcess::ClosedLoop { clients: 4, per_client: 25 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-4), 7);
+        assert_eq!(out.admitted, 100, "{out:?}");
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.per_model.iter().map(|(_, n)| n).sum::<u64>(), 100);
+        assert!(out.makespan_s > 0.0);
+        assert!(out.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_retries_through_a_tiny_queue() {
+        let cfg = VirtualServeConfig {
+            queue_depth: 1,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            ..VirtualServeConfig::default()
+        };
+        let arrival = ArrivalProcess::ClosedLoop { clients: 4, per_client: 10 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 11);
+        // every request eventually lands despite the 1-deep queue
+        assert_eq!(out.admitted, 40);
+        assert!(out.rejected > 0, "contended clients must see rejections");
+    }
+
+    #[test]
+    fn open_loop_overload_rejects_deterministically() {
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            queue_depth: 2,
+            routing: RoutingPolicy::RoundRobin,
+        };
+        // service is 10x slower than the arrival gap: the queue must shed
+        let arrival = ArrivalProcess::Poisson { rate_hz: 1_000.0, duration_s: 0.1 };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-2), 3);
+        assert!(out.rejected > 0);
+        assert_eq!(out.offered, out.admitted + out.rejected);
+        let again = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-2), 3);
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn simultaneous_burst_batches_under_max_wait() {
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 1,
+            max_batch: 4,
+            max_wait_s: 1e-3,
+            queue_depth: 64,
+            routing: RoutingPolicy::RoundRobin,
+        };
+        let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0; 8] };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-4), 1);
+        assert_eq!(out.admitted, 8);
+        assert_eq!(out.batches, 2, "8 simultaneous arrivals → two max_batch batches");
+        assert_eq!(out.mean_batch, 4.0);
+    }
+
+    #[test]
+    fn zero_wait_dispatches_immediately() {
+        let cfg = VirtualServeConfig {
+            workers: 4,
+            max_batch: 8,
+            max_wait_s: 0.0,
+            ..VirtualServeConfig::default()
+        };
+        let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0, 1e-5, 2e-5] };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-6), 1);
+        // each arrival found an idle worker and zero wait → singleton batches
+        assert_eq!(out.batches, 3);
+        assert_eq!(out.mean_batch, 1.0);
+    }
+
+    #[test]
+    fn model_affinity_pins_each_model_to_one_shard() {
+        let cfg = VirtualServeConfig {
+            shards: 4,
+            routing: RoutingPolicy::ModelAffinity,
+            ..VirtualServeConfig::default()
+        };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 2_000.0, duration_s: 0.05 };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-5), 9);
+        let loaded: Vec<_> = out.per_shard.iter().filter(|s| s.requests > 0).collect();
+        assert_eq!(loaded.len(), 1, "one model must land on exactly one shard: {out:?}");
+        assert_eq!(loaded[0].requests as usize, out.admitted);
+    }
+
+    #[test]
+    fn least_outstanding_spreads_load() {
+        let cfg = VirtualServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            queue_depth: 1024,
+            routing: RoutingPolicy::LeastOutstanding,
+        };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 5_000.0, duration_s: 0.05 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 5);
+        assert!(out.per_shard.iter().all(|s| s.requests > 0), "{:?}", out.per_shard);
+    }
+
+    #[test]
+    fn a_full_batch_is_not_blocked_by_a_colder_queue() {
+        // one stale "cold" request (not yet at max_wait) must not block a
+        // full "hot" batch — the coordinator drains every ready batcher
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 1,
+            max_batch: 4,
+            max_wait_s: 1e-3,
+            queue_depth: 64,
+            routing: RoutingPolicy::RoundRobin,
+        };
+        let names = vec!["cold".to_string(), "hot".to_string()];
+        let cost = FlatCost(1e-3);
+        let mut d = Dispatcher {
+            cfg: &cfg,
+            names: &names,
+            cost: &cost,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            latencies_ms: Vec::new(),
+            per_model: vec![0; 2],
+            batches: 0,
+            batch_samples: 0,
+            makespan: 0.0,
+            completions: Vec::new(),
+        };
+        let mut sh = Shard {
+            worker_free: vec![0.0],
+            pending: vec![VecDeque::new(), VecDeque::new()],
+            outstanding: 5,
+            requests: 5,
+            busy_s: 0.0,
+        };
+        sh.pending[0].push_back(Req { arrival: 0.0, client: None });
+        for _ in 0..4 {
+            sh.pending[1].push_back(Req { arrival: 1e-4, client: None });
+        }
+        d.try_dispatch(0, &mut sh, 2e-4);
+        assert_eq!(d.batches, 1, "the full hot batch must dispatch immediately");
+        assert_eq!(d.per_model[1], 4, "hot requests served");
+        assert_eq!(d.per_model[0], 0, "cold head still pending");
+        assert_eq!(sh.pending[0].len(), 1);
+        // the cold head got a progress deadline after the worker freed up?
+        // (the worker is busy until 1.2e-4 + service; a WorkerFree event is
+        // queued, which re-runs dispatch — here we just check one was pushed)
+        assert!(!d.heap.is_empty(), "a follow-up event must exist for the cold head");
+    }
+
+    #[test]
+    fn stale_deadlines_do_not_inflate_the_makespan() {
+        // burst of 8 at t=0 fills two batches fast; the deadlines pushed by
+        // the early not-ready passes must not stretch the makespan
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 2,
+            max_batch: 4,
+            max_wait_s: 1e-2,
+            queue_depth: 64,
+            routing: RoutingPolicy::RoundRobin,
+        };
+        let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0; 8] };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-4), 2);
+        assert_eq!(out.admitted, 8);
+        assert!(
+            (out.makespan_s - 1e-4).abs() < 1e-12,
+            "makespan must be the last completion (1e-4), got {}",
+            out.makespan_s
+        );
+    }
+
+    #[test]
+    fn utilization_and_percentiles_are_sane() {
+        let cfg = VirtualServeConfig::default();
+        let arrival = ArrivalProcess::Poisson { rate_hz: 1_000.0, duration_s: 0.1 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(2e-4), 13);
+        assert!(out.latency_percentile_ms(50.0) <= out.latency_percentile_ms(99.0));
+        assert!(out.mean_latency_ms() > 0.0);
+        for s in &out.per_shard {
+            assert!((0.0..=1.0 + 1e-9).contains(&s.utilization), "{s:?}");
+        }
+        assert!(out.reject_fraction() >= 0.0);
+    }
+}

@@ -1,0 +1,363 @@
+//! Integration tests for the declarative scenario layer: JSON round-trip
+//! fixpoint, per-field typed error paths, preset equivalence with the
+//! direct Session API, and seed-determinism of full scenario runs
+//! (`parse → plan → run → to_json` must be byte-identical for one seed).
+
+use photogan::api::scenario::{
+    CompareStage, Scenario, ServeEngine, ServeStage, SimStage, StageSpec,
+};
+use photogan::api::{ApiError, Outcome, Session, SimRequest};
+use photogan::sim::OptFlags;
+use photogan::util::json;
+use photogan::workload::ArrivalProcess;
+use std::sync::Arc;
+
+/// A representative scenario exercising every stage knob the acceptance
+/// cell needs: a multi-model simulate stage with SLOs and a multi-shard
+/// Poisson-mix virtual serve stage.
+const MIXED: &str = r#"{
+  "name": "mixed",
+  "seed": 9,
+  "stages": [
+    {
+      "kind": "simulate",
+      "name": "sim",
+      "models": ["dcgan", "srgan", "stylegan2"],
+      "batch": 2,
+      "opts": "all",
+      "slo": { "max_latency_ms": 1e9 }
+    },
+    {
+      "kind": "serve",
+      "name": "fleet",
+      "engine": "virtual",
+      "mix": [
+        { "model": "dcgan", "weight": 3.0 },
+        { "model": "srgan", "weight": 1.0 },
+        { "model": "stylegan2", "weight": 1.0 }
+      ],
+      "arrival": { "process": "poisson", "rate_hz": 800.0, "duration_s": 0.05 },
+      "shards": 2,
+      "workers": 2,
+      "max_batch": 8,
+      "max_wait_ms": 0.5,
+      "queue_depth": 64,
+      "routing": "least-outstanding",
+      "slo": { "p99_ms": 1e9, "max_reject_frac": 1.0 }
+    }
+  ]
+}"#;
+
+fn session() -> Arc<Session> {
+    Arc::new(Session::new().expect("session"))
+}
+
+#[test]
+fn parse_plan_to_json_parse_is_a_fixpoint() {
+    let scenario = Scenario::from_json(MIXED).expect("parse");
+    let session = session();
+    session.plan(&scenario).expect("plan must accept the canonical example");
+    // parse → to_json → parse is the identity on the IR
+    let rendered = scenario.to_json();
+    let reparsed = Scenario::from_json(&rendered).expect("reparse");
+    assert_eq!(reparsed, scenario, "IR round-trip must be lossless");
+    // and the rendering itself is a fixpoint
+    assert_eq!(reparsed.to_json(), rendered, "canonical rendering must be stable");
+    // the rendered document is valid JSON for any consumer
+    json::parse(&rendered).expect("canonical scenario JSON parses");
+}
+
+#[test]
+fn unknown_model_is_typed_at_plan_time() {
+    let text = MIXED.replace("\"dcgan\"", "\"notagan\"");
+    let scenario = Scenario::from_json(&text).expect("parse");
+    let err = session().plan(&scenario).unwrap_err();
+    assert!(
+        matches!(err, ApiError::UnknownModel { ref name, .. } if name == "notagan"),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn non_positive_mix_weight_names_the_field() {
+    for bad in ["0.0", "-2.5"] {
+        let text = MIXED.replace("\"weight\": 1.0", &format!("\"weight\": {bad}"));
+        let scenario = Scenario::from_json(&text).expect("parse");
+        let err = session().plan(&scenario).unwrap_err();
+        assert!(
+            matches!(err, ApiError::InvalidMixWeight { ref field, ref model, .. }
+                if field == "stages[1].mix[1].weight" && model == "srgan"),
+            "{bad}: {err:?}"
+        );
+    }
+}
+
+#[test]
+fn zero_duration_stage_names_the_field() {
+    let text = MIXED.replace("\"duration_s\": 0.05", "\"duration_s\": 0.0");
+    let scenario = Scenario::from_json(&text).expect("parse");
+    let err = session().plan(&scenario).unwrap_err();
+    assert!(
+        matches!(err, ApiError::InvalidDuration { ref field, seconds }
+            if field == "stages[1].arrival.duration_s" && seconds == 0.0),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn nan_rate_names_the_field() {
+    // JSON cannot carry NaN, so build the IR directly — the plan-time
+    // check is what guards programmatic construction too
+    let mut scenario = Scenario::from_json(MIXED).expect("parse");
+    if let StageSpec::Serve(serve) = &mut scenario.stages[1] {
+        serve.arrival =
+            Some(ArrivalProcess::Poisson { rate_hz: f64::NAN, duration_s: 0.05 });
+    } else {
+        panic!("stage 1 must be the serve stage");
+    }
+    let err = session().plan(&scenario).unwrap_err();
+    assert!(
+        matches!(err, ApiError::InvalidRate { ref field, rate }
+            if field == "stages[1].arrival.rate_hz" && rate.is_nan()),
+        "{err:?}"
+    );
+    // a negative rate in the document itself takes the same path
+    let text = MIXED.replace("\"rate_hz\": 800.0", "\"rate_hz\": -1.0");
+    let err = session().plan(&Scenario::from_json(&text).expect("parse")).unwrap_err();
+    assert!(
+        matches!(err, ApiError::InvalidRate { ref field, rate }
+            if field == "stages[1].arrival.rate_hz" && rate == -1.0),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn same_seed_means_byte_identical_json() {
+    let scenario = Scenario::from_json(MIXED).expect("parse");
+    let run_once = || {
+        let session = session();
+        let plan = session.plan(&scenario).expect("plan");
+        session.run(&plan).expect("run").to_json()
+    };
+    let (a, b) = (run_once(), run_once());
+    assert_eq!(a, b, "virtual scenarios must be byte-deterministic per seed");
+    // a different seed produces different traffic (and different bytes)
+    let mut reseeded = scenario.clone();
+    reseeded.seed = 10;
+    let session = session();
+    let plan = session.plan(&reseeded).expect("plan");
+    let c = session.run(&plan).expect("run").to_json();
+    assert_ne!(a, c, "the seed must actually steer the workload");
+}
+
+#[test]
+fn envelope_carries_per_stage_slo_verdicts() {
+    let scenario = Scenario::from_json(MIXED).expect("parse");
+    let session = session();
+    let plan = session.plan(&scenario).expect("plan");
+    let outcome = session.run(&plan).expect("run");
+    assert_eq!(outcome.scenario, "mixed");
+    assert_eq!(outcome.seed, 9);
+    assert_eq!(outcome.stages.len(), 2);
+    assert_eq!(outcome.stages[0].kind, "simulate");
+    assert_eq!(outcome.stages[1].kind, "serve");
+    // generous SLOs: both stages must pass, with real checks evaluated
+    assert!(!outcome.stages[0].slo.checks.is_empty());
+    assert!(!outcome.stages[1].slo.checks.is_empty());
+    assert!(outcome.slo_pass(), "{:?}", outcome.to_table().render());
+
+    // the envelope is one parseable JSON document with per-stage verdicts
+    let doc = json::parse(&outcome.to_json()).expect("envelope parses");
+    assert_eq!(doc.get("command").and_then(|v| v.as_str()), Some("run"));
+    assert_eq!(doc.get("slo_pass").and_then(|v| v.as_bool()), Some(true));
+    let stages = doc.get("stages").and_then(|v| v.as_array()).expect("stages");
+    assert_eq!(stages.len(), 2);
+    for stage in stages {
+        let slo = stage.get("slo").expect("per-stage slo verdict");
+        assert!(slo.get("pass").and_then(|v| v.as_bool()).is_some());
+        assert!(stage.get("outcome").is_some());
+    }
+    // the serve stage outcome is the deterministic virtual engine
+    assert_eq!(
+        stages[1]
+            .get("outcome")
+            .and_then(|o| o.get("engine"))
+            .and_then(|v| v.as_str()),
+        Some("virtual")
+    );
+    let admitted = stages[1]
+        .get("outcome")
+        .and_then(|o| o.get("admitted"))
+        .and_then(|v| v.as_f64())
+        .expect("admitted");
+    assert!(admitted > 0.0, "the fleet must actually serve traffic");
+}
+
+#[test]
+fn failing_slo_yields_a_fail_verdict_not_an_error() {
+    let text = MIXED.replace("\"p99_ms\": 1e9", "\"p99_ms\": 1e-9");
+    let scenario = Scenario::from_json(&text).expect("parse");
+    let session = session();
+    let plan = session.plan(&scenario).expect("plan");
+    let outcome = session.run(&plan).expect("an SLO miss is a verdict, not a failure");
+    assert!(!outcome.slo_pass());
+    assert!(!outcome.stages[1].slo.pass);
+    assert!(outcome.to_json().contains("\"slo_pass\":false"));
+}
+
+#[test]
+fn simulate_preset_matches_the_direct_api() {
+    let session = session();
+    // preset path
+    let stage = SimStage {
+        models: vec!["dcgan".into()],
+        batch: 4,
+        opts: OptFlags::all(),
+        ..SimStage::default()
+    };
+    let plan = session
+        .plan(&Scenario::single("preset", StageSpec::Simulate(stage)))
+        .expect("plan");
+    let outcome = Arc::clone(&session).run(&plan).expect("run");
+    let Some(Outcome::Sim(via_scenario)) = outcome.stages.first().map(|s| &s.outcome) else {
+        panic!("expected a sim outcome");
+    };
+    // direct path
+    let req = SimRequest::builder().model("dcgan").batch(4).build().expect("req");
+    let direct = session.simulate(&req).expect("simulate");
+    assert_eq!(via_scenario.to_json(), direct.to_json(), "presets must not fork behavior");
+}
+
+#[test]
+fn compare_preset_runs_and_renders() {
+    let session = session();
+    let plan = session
+        .plan(&Scenario::single("cmp", StageSpec::Compare(CompareStage::default())))
+        .expect("plan");
+    let outcome = session.run(&plan).expect("run");
+    assert!(matches!(outcome.stages[0].outcome, Outcome::Compare(_)));
+    assert!(outcome.stages[0].slo.pass, "no SLO → vacuous pass");
+    assert!(outcome.to_json().contains("\"command\":\"run\""));
+}
+
+#[test]
+fn threaded_serve_stage_rejects_virtual_only_members() {
+    let session = session();
+    let mut stage = ServeStage {
+        engine: ServeEngine::Threaded,
+        mix: vec![("dcgan".into(), 1.0)],
+        ..ServeStage::default()
+    };
+    let err = session
+        .plan(&Scenario::single("bad", StageSpec::Serve(stage.clone())))
+        .unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. } if field == "stages[0].mix"),
+        "{err:?}"
+    );
+    stage.mix.clear();
+    stage.arrival = Some(ArrivalProcess::ClosedLoop { clients: 1, per_client: 1 });
+    let err = session
+        .plan(&Scenario::single("bad", StageSpec::Serve(stage)))
+        .unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].arrival"),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn threaded_serve_stage_runs_the_real_coordinator() {
+    let session = session();
+    let stage = ServeStage {
+        engine: ServeEngine::Threaded,
+        model: Some("condgan".into()),
+        requests: 8,
+        shards: 2,
+        time_scale: 0.0, // cost model only — no wall-clock pacing in tests
+        ..ServeStage::default()
+    };
+    let plan = session
+        .plan(&Scenario::single("threaded", StageSpec::Serve(stage)))
+        .expect("plan");
+    let outcome = session.run(&plan).expect("run");
+    let Some(Outcome::Serve(served)) = outcome.stages.first().map(|s| &s.outcome) else {
+        panic!("expected a threaded serve outcome");
+    };
+    assert_eq!(served.total_requests, 8);
+    assert_eq!(served.shards, 2);
+    assert_eq!(served.backend, "sim");
+}
+
+#[test]
+fn virtual_serve_requires_mix_and_arrival() {
+    let session = session();
+    let no_mix = ServeStage::default();
+    let err = session
+        .plan(&Scenario::single("bad", StageSpec::Serve(no_mix)))
+        .unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. } if field == "stages[0].mix"),
+        "{err:?}"
+    );
+    let no_arrival = ServeStage { mix: vec![("dcgan".into(), 1.0)], ..ServeStage::default() };
+    let err = session
+        .plan(&Scenario::single("bad", StageSpec::Serve(no_arrival)))
+        .unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].arrival"),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn checked_in_starter_scenarios_plan_and_run() {
+    for (file, min_stages) in
+        [("mixed_zoo.json", 2usize), ("closed_loop_burst.json", 2usize)]
+    {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("examples/scenarios")
+            .join(file);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let scenario = Scenario::from_json(&text).expect(file);
+        assert!(scenario.stages.len() >= min_stages, "{file}");
+        let session = session();
+        let plan = session.plan(&scenario).expect(file);
+        let outcome = Arc::clone(&session).run(&plan).expect(file);
+        // deterministic: a second full run is byte-identical
+        let again = session.run(&plan).expect(file);
+        assert_eq!(outcome.to_json(), again.to_json(), "{file} must be deterministic");
+    }
+}
+
+#[test]
+fn mixed_zoo_meets_the_acceptance_shape() {
+    // the acceptance cell: ≥2 stages, one sim/compare stage, one
+    // multi-shard Poisson-mix serve stage over ≥3 zoo models, with
+    // per-stage SLO verdicts in one envelope
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/scenarios/mixed_zoo.json");
+    let text = std::fs::read_to_string(path).expect("mixed_zoo.json");
+    let scenario = Scenario::from_json(&text).expect("parse");
+    assert!(scenario.stages.len() >= 2);
+    assert!(matches!(scenario.stages[0], StageSpec::Simulate(_)));
+    let StageSpec::Serve(serve) = &scenario.stages[1] else {
+        panic!("stage 1 must serve");
+    };
+    assert!(serve.shards >= 2, "multi-shard");
+    assert!(serve.mix.len() >= 3, "mix over >= 3 zoo models");
+    assert!(matches!(serve.arrival, Some(ArrivalProcess::Poisson { .. })));
+
+    let session = session();
+    let plan = session.plan(&scenario).expect("plan");
+    let outcome = session.run(&plan).expect("run");
+    let doc = json::parse(&outcome.to_json()).expect("envelope");
+    let stages = doc.get("stages").and_then(|v| v.as_array()).expect("stages");
+    assert!(stages.len() >= 2);
+    for stage in stages {
+        assert!(stage.get("slo").is_some(), "per-stage SLO verdict required");
+    }
+}
