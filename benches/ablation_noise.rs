@@ -1,0 +1,132 @@
+//! Ablation: the fidelity engine's noise sources (EXPERIMENTS.md §NOISE).
+//!
+//! Four sweeps:
+//! - the accuracy/throughput Pareto frontier across the 8-model zoo
+//!   (the [`photogan::report::fidelity_pareto`] exhibit);
+//! - per-source contribution: each noise source isolated by zeroing the
+//!   other stochastic/drift terms, so the dominant error mechanism is
+//!   visible per model;
+//! - drift sensitivity: effective bits as the thermal walk rate scales
+//!   ×0.5 … ×4 (the knob the calibration schedule exists to bound);
+//! - the derived calibration schedule itself (interval, per-bank outage)
+//!   that virtual-serve scenarios inject as availability dynamics.
+
+mod common;
+
+use photogan::api::Session;
+use photogan::fidelity::{CalibrationModel, MonteCarlo, NoiseModel};
+use photogan::models::zoo;
+use photogan::sim::OptFlags;
+use photogan::util::table::Table;
+
+const TRIALS: usize = 32;
+const SEED: u64 = 7;
+
+fn main() {
+    let session = Session::new().expect("paper optimum config is valid");
+
+    // --- Pareto frontier (the report exhibit) ----------------------------
+    let (table, rows) = photogan::report::fidelity_pareto(&session);
+    table.print();
+    let span = rows
+        .iter()
+        .map(|(_, _, _, bits)| bits)
+        .fold((f64::INFINITY, 0.0f64), |(lo, hi), &b| (lo.min(b), hi.max(b)));
+    println!(
+        "(effective bits span {:.3} .. {:.3} across the sweep — longer symbols buy \
+         accuracy at 1/x throughput)\n",
+        span.0, span.1
+    );
+
+    // --- per-source contribution -----------------------------------------
+    // Each variant keeps the converters (the floor everything sits on)
+    // and enables one analog source; "all" is the paper model.
+    let paper = NoiseModel::paper();
+    let sources: Vec<(&str, NoiseModel)> = vec![
+        ("quantization only", {
+            let mut n = paper.clone();
+            n.photons_per_symbol = f64::INFINITY;
+            n.drift_linewidths_per_s = 0.0;
+            n.pcm_drift_per_decade = 0.0;
+            n.max_channels = 1;
+            n
+        }),
+        ("+ shot noise", {
+            let mut n = paper.clone();
+            n.drift_linewidths_per_s = 0.0;
+            n.pcm_drift_per_decade = 0.0;
+            n.max_channels = 1;
+            n
+        }),
+        ("+ crosstalk", {
+            let mut n = paper.clone();
+            n.drift_linewidths_per_s = 0.0;
+            n.pcm_drift_per_decade = 0.0;
+            n
+        }),
+        ("+ thermal drift", {
+            let mut n = paper.clone();
+            n.pcm_drift_per_decade = 0.0;
+            n
+        }),
+        ("all (paper)", paper.clone()),
+    ];
+    let mut t = Table::new(vec!["noise sources", "SNR (dB)", "eff bits", "worst layer"])
+        .with_title(format!(
+            "per-source ablation, DCGAN batch 1 ({TRIALS} trials, seed {SEED})"
+        ));
+    let dcgan = zoo::dcgan();
+    for (label, noise) in sources {
+        let mc = MonteCarlo { noise, trials: TRIALS, integration: 1.0, seed: SEED };
+        let fr = session.fidelity_report(&dcgan, 1, OptFlags::all(), &mc);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", fr.snr_db),
+            format!("{:.3}", fr.effective_bits),
+            format!("{:.3}", fr.min_effective_bits),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- drift sensitivity -------------------------------------------------
+    let mut t = Table::new(vec!["drift scale", "interval (s)", "SNR (dB)", "eff bits"])
+        .with_title("thermal-drift sensitivity (longer walks, shorter calibration budget)");
+    for scale in [0.5, 1.0, 2.0, 4.0] {
+        let mut noise = NoiseModel::paper();
+        noise.drift_linewidths_per_s *= scale;
+        let interval = CalibrationModel::from_noise(&noise).interval_s();
+        let mc = MonteCarlo { noise, trials: TRIALS, integration: 1.0, seed: SEED };
+        let fr = session.fidelity_report(&dcgan, 1, OptFlags::all(), &mc);
+        t.row(vec![
+            format!("{scale:.1}x"),
+            format!("{interval:.3}"),
+            format!("{:.2}", fr.snr_db),
+            format!("{:.3}", fr.effective_bits),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- derived calibration schedule --------------------------------------
+    let cal = CalibrationModel::from_noise(&paper);
+    println!(
+        "calibration schedule: {:.4} linewidths of budget / {:.4} linewidths-per-s drift \
+         = re-lock every {:.3} s; {:.2} µs per bank ({:.1} µs for an 8-bank shard)",
+        cal.budget_linewidths,
+        cal.drift_linewidths_per_s,
+        cal.interval_s(),
+        cal.bank_retune_s * 1e6,
+        cal.outage_s(8) * 1e6,
+    );
+
+    // --- Monte Carlo driver cost -------------------------------------------
+    let mc = MonteCarlo { noise: paper, trials: TRIALS, integration: 1.0, seed: SEED };
+    let (best, _) = common::time_it(2, 10, || {
+        std::hint::black_box(session.fidelity_report(&dcgan, 1, OptFlags::all(), &mc));
+    });
+    println!(
+        "fidelity_report(DCGAN, {TRIALS} trials) {} per evaluation",
+        common::ms(best)
+    );
+}

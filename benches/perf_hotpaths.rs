@@ -1,24 +1,43 @@
 //! L3 hot-path microbenches for the performance pass (EXPERIMENTS.md
 //! §Perf): simulator throughput, mapper cost, DSE sweep rate, batcher
-//! push/pop, and the sparse functional kernels.
+//! push/pop, virtual-serve event rate, and threaded serving — and a
+//! machine-readable summary written to `BENCH_perf.json` at the repo
+//! root (uploaded as a CI artifact) so throughput regressions are
+//! diffable across commits.
 
 mod common;
 
 use common::{ms, time_it};
-use photogan::api::Session;
+use photogan::api::{ServeRequest, Session};
 use photogan::arch::accelerator::Accelerator;
 use photogan::arch::config::ArchConfig;
 use photogan::coordinator::batcher::{BatchPolicy, Batcher};
 use photogan::coordinator::request::{Envelope, GenRequest, RequestId};
+use photogan::coordinator::RoutingPolicy;
 use photogan::dse::{explore, Grid};
 use photogan::models::zoo;
 use photogan::sim::engine::simulate_mapped;
 use photogan::sim::mapper::map_model;
 use photogan::sim::{simulate, OptFlags};
+use photogan::util::json::{obj, JsonValue};
+use photogan::workload::vserve::{simulate_serve, ServiceModel, VirtualServeConfig};
+use photogan::workload::{ArrivalProcess, TrafficMix};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Flat-cost service model: isolates the event engine's own overhead
+/// from the (cached) photonic cost model.
+struct FlatCost;
+
+impl ServiceModel for FlatCost {
+    fn batch_latency_s(&self, _model: &str, batch: usize) -> f64 {
+        2e-5 * batch as f64
+    }
+}
 
 fn main() {
     let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+    let mut metrics: Vec<(&str, f64)> = Vec::new();
 
     // --- mapper (includes the sparse census) -------------------------------
     for m in [zoo::dcgan(), zoo::cyclegan()] {
@@ -27,6 +46,26 @@ fn main() {
         });
         println!("map_model({:10}) {:>12}", m.name, ms(best));
     }
+
+    // mapped-layers/sec across the whole zoo (the serving layer's cold path)
+    let models = zoo::extended_generators();
+    let total_layers: usize = models
+        .iter()
+        .map(|m| map_model(m, 1, &OptFlags::all()).len())
+        .sum();
+    let (best, _) = time_it(1, 5, || {
+        for m in &models {
+            std::hint::black_box(map_model(m, 1, &OptFlags::all()));
+        }
+    });
+    let mapped_layers_per_s = total_layers as f64 / best;
+    println!(
+        "map zoo              {} layers in {:>10} = {:.0} layers/s",
+        total_layers,
+        ms(best),
+        mapped_layers_per_s
+    );
+    metrics.push(("mapped_layers_per_s", mapped_layers_per_s));
 
     // --- simulate: mapped vs full -------------------------------------------
     let cycle = zoo::cyclegan();
@@ -58,16 +97,16 @@ fn main() {
 
     // --- DSE sweep rate -------------------------------------------------------
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let models = zoo::all_generators();
+    let all = zoo::all_generators();
     let grid = Grid::paper();
     let t0 = Instant::now();
-    let pts = explore(&grid, &models, OptFlags::all(), threads);
+    let pts = explore(&grid, &all, OptFlags::all(), threads);
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "dse::explore         {} configs in {:.2}s = {:.0} sims/s ({} valid, {} threads)",
         grid.len(),
         wall,
-        (grid.len() * models.len()) as f64 / wall,
+        (grid.len() * all.len()) as f64 / wall,
         pts.len(),
         threads
     );
@@ -96,4 +135,51 @@ fn main() {
         while b.pop().map(|x| x.samples > 0).unwrap_or(false) {}
     });
     println!("batcher 10k push/pop {:>12}  ({:.0} req/s)", ms(best), 10_000.0 / best);
+
+    // --- virtual-serve event engine -----------------------------------------
+    let cfg = VirtualServeConfig {
+        shards: 4,
+        workers: 2,
+        max_batch: 8,
+        max_wait_s: 1e-4,
+        queue_depth: 4096,
+        routing: RoutingPolicy::LeastOutstanding,
+        calibration: None,
+    };
+    let mix = TrafficMix::new(vec![("m".to_string(), 1.0)]).unwrap();
+    let arrival = ArrivalProcess::Poisson { rate_hz: 50_000.0, duration_s: 0.5 };
+    let probe = simulate_serve(&cfg, &mix, &arrival, &FlatCost, 11);
+    let (best, _) = time_it(1, 5, || {
+        std::hint::black_box(simulate_serve(&cfg, &mix, &arrival, &FlatCost, 11));
+    });
+    let vserve_steps_per_s = probe.admitted as f64 / best;
+    println!(
+        "vserve               {} admitted in {:>10} = {:.0} sim-steps/s",
+        probe.admitted,
+        ms(best),
+        vserve_steps_per_s
+    );
+    metrics.push(("vserve_steps_per_s", vserve_steps_per_s));
+
+    // --- threaded serve (sim backend, no pacing) ----------------------------
+    let session = Arc::new(Session::new().expect("paper optimum is valid"));
+    let req = ServeRequest::builder()
+        .requests(128)
+        .shards(2)
+        .routing(RoutingPolicy::LeastOutstanding)
+        .time_scale(0.0)
+        .build()
+        .unwrap();
+    let served = Arc::clone(&session).serve(&req).expect("sim-backed serve");
+    println!(
+        "threaded serve       {} req in {:.3}s = {:.0} req/s (p99 {:.2} ms)",
+        served.requests, served.wall_s, served.throughput_img_s, served.p99_ms
+    );
+    metrics.push(("threaded_serve_req_per_s", served.throughput_img_s));
+
+    // --- machine-readable summary -------------------------------------------
+    let doc = obj(metrics.into_iter().map(|(k, v)| (k, JsonValue::Num(v))).collect());
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_perf.json");
+    std::fs::write(path, format!("{}\n", doc.render())).expect("write BENCH_perf.json");
+    println!("wrote {path}");
 }

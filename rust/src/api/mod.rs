@@ -84,8 +84,9 @@ pub use request::{
     SweepRequestBuilder,
 };
 pub use scenario::{
-    CompareStage, DseStage, Plan, PlannedStage, ReportStage, Scenario, ScenarioOutcome,
-    ServeEngine, ServeStage, SimStage, SloCheck, SloSpec, SloVerdict, StageOutcome, StageSpec,
+    CalibrationSpec, CompareStage, DseStage, Plan, PlannedStage, ReportStage, Scenario,
+    ScenarioOutcome, ServeEngine, ServeStage, SimStage, SloCheck, SloSpec, SloVerdict,
+    StageOutcome, StageSpec,
 };
 pub use serve::{ServeBackend, ServeRequest, ServeRequestBuilder};
 pub use session::Session;

@@ -494,6 +494,9 @@ pub struct ServeOutcome {
     pub p99_ms: f64,
     pub total_requests: u64,
     pub total_samples: u64,
+    /// Latency samples shed by the bounded reservoirs across all shards
+    /// (0 means the percentiles above saw every completion).
+    pub dropped_samples: u64,
     /// Per-model latency/throughput summary strings from the coordinator.
     pub per_model: Vec<(String, String)>,
     /// Per-shard summary strings (`"shard 0"` …), indexed by shard id.
@@ -516,6 +519,12 @@ impl ServeOutcome {
             self.p95_ms,
             self.p99_ms,
         ));
+        if self.dropped_samples > 0 {
+            t.row(vec![
+                "histograms".into(),
+                format!("{} latency samples shed by bounded reservoirs", self.dropped_samples),
+            ]);
+        }
         for (shard, s) in &self.per_shard {
             t.row(vec![shard.clone(), s.clone()]);
         }
@@ -545,6 +554,7 @@ impl ServeOutcome {
             ("p99_ms", JsonValue::Num(self.p99_ms)),
             ("total_requests", JsonValue::Num(self.total_requests as f64)),
             ("total_samples", JsonValue::Num(self.total_samples as f64)),
+            ("dropped_samples", JsonValue::Num(self.dropped_samples as f64)),
             (
                 "per_model",
                 JsonValue::Obj(
@@ -607,6 +617,14 @@ pub struct WorkloadOutcome {
     /// Dispatched batches and their mean size.
     pub batches: u64,
     pub mean_batch: f64,
+    /// Re-calibration outages taken across all shards (0 without a
+    /// calibration model).
+    pub outages: u64,
+    /// Total virtual shard-seconds lost to those outages.
+    pub downtime_s: f64,
+    /// `1 − downtime / (shards × makespan)` — the availability the
+    /// `min_availability` SLO checks.
+    pub availability: f64,
     /// Admitted requests per mix model, declaration order.
     pub per_model: Vec<(String, u64)>,
     /// `(shard, requests, utilization)` per shard.
@@ -633,6 +651,17 @@ impl WorkloadOutcome {
             self.p99_ms,
             self.mean_batch,
         ));
+        if self.outages > 0 {
+            t.row(vec![
+                "calibration".into(),
+                format!(
+                    "{} outage(s), {:.4}s downtime, {:.2}% availability",
+                    self.outages,
+                    self.downtime_s,
+                    100.0 * self.availability
+                ),
+            ]);
+        }
         for (shard, requests, util) in &self.per_shard {
             t.row(vec![
                 format!("shard {shard}"),
@@ -686,6 +715,9 @@ impl WorkloadOutcome {
             ("p99_ms", JsonValue::Num(self.p99_ms)),
             ("batches", JsonValue::Num(self.batches as f64)),
             ("mean_batch", JsonValue::Num(self.mean_batch)),
+            ("outages", JsonValue::Num(self.outages as f64)),
+            ("downtime_s", JsonValue::Num(self.downtime_s)),
+            ("availability", JsonValue::Num(self.availability)),
             (
                 "per_model",
                 JsonValue::Obj(

@@ -72,7 +72,9 @@ use crate::sim::OptFlags;
 use crate::util::json::{obj, JsonValue};
 use crate::util::rng::Pcg32;
 use crate::util::table::Table;
-use crate::workload::vserve::{simulate_serve, ServiceModel, VirtualServeConfig};
+use crate::workload::vserve::{
+    simulate_serve, CalibrationConfig, ServiceModel, VirtualServeConfig,
+};
 use crate::workload::{ArrivalProcess, MixError, TrafficMix};
 use std::fmt;
 use std::str::FromStr;
@@ -98,6 +100,9 @@ pub struct SloSpec {
     pub max_latency_ms: Option<f64>,
     /// Simulate / dse: worst per-model (or optimum) GOPS must be ≥ this.
     pub min_gops: Option<f64>,
+    /// Serve (virtual): shard availability — the fraction of shard-time
+    /// not lost to re-calibration outages — must be ≥ this.
+    pub min_availability: Option<f64>,
 }
 
 impl SloSpec {
@@ -108,6 +113,7 @@ impl SloSpec {
             && self.max_reject_frac.is_none()
             && self.max_latency_ms.is_none()
             && self.min_gops.is_none()
+            && self.min_availability.is_none()
     }
 }
 
@@ -278,6 +284,20 @@ impl Default for CompareStage {
     }
 }
 
+/// Re-calibration dynamics for a virtual serve stage: every
+/// `interval_ms` of virtual time a shard goes down for `outage_ms` while
+/// its MR banks re-lock ([`crate::workload::vserve::CalibrationConfig`]).
+/// The physics-grounded defaults come from
+/// [`crate::fidelity::CalibrationModel`]; scenarios set the knob in
+/// milliseconds directly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationSpec {
+    /// Virtual milliseconds between the start of consecutive outages.
+    pub interval_ms: f64,
+    /// Length of each outage in virtual milliseconds.
+    pub outage_ms: f64,
+}
+
 /// A serve stage: a traffic mix under an arrival process on a fleet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeStage {
@@ -304,6 +324,8 @@ pub struct ServeStage {
     pub opts: OptFlags,
     /// Threaded sim backend: wall seconds per simulated second.
     pub time_scale: f64,
+    /// Virtual engine: periodic re-calibration outages.
+    pub calibration: Option<CalibrationSpec>,
     pub slo: SloSpec,
 }
 
@@ -326,6 +348,7 @@ impl Default for ServeStage {
             routing: "round-robin".into(),
             opts: OptFlags::overlapped(),
             time_scale: 1.0,
+            calibration: None,
             slo: SloSpec::default(),
         }
     }
@@ -538,12 +561,14 @@ fn parse_slo(v: &JsonValue, path: &str) -> Result<SloSpec, ApiError> {
             "max_reject_frac" => slo.max_reject_frac = Some(num),
             "max_latency_ms" => slo.max_latency_ms = Some(num),
             "min_gops" => slo.min_gops = Some(num),
+            "min_availability" => slo.min_availability = Some(num),
             other => {
                 return Err(parse_err(
                     path,
                     format!(
                         "unknown SLO metric '{other}' (expected p99_ms, \
-                         min_throughput_rps, max_reject_frac, max_latency_ms, min_gops)"
+                         min_throughput_rps, max_reject_frac, max_latency_ms, min_gops, \
+                         min_availability)"
                     ),
                 ))
             }
@@ -563,12 +588,32 @@ fn slo_json(slo: &SloSpec) -> Option<JsonValue> {
         ("max_reject_frac", slo.max_reject_frac),
         ("max_latency_ms", slo.max_latency_ms),
         ("min_gops", slo.min_gops),
+        ("min_availability", slo.min_availability),
     ] {
         if let Some(v) = val {
             members.push((key, JsonValue::Num(v)));
         }
     }
     Some(obj(members))
+}
+
+fn parse_calibration(v: &JsonValue, path: &str) -> Result<Option<CalibrationSpec>, ApiError> {
+    let Some(m) = v.get("calibration") else { return Ok(None) };
+    let path = format!("{path}.calibration");
+    if !matches!(m, JsonValue::Obj(_)) {
+        return Err(parse_err(path, "expected an object with interval_ms and outage_ms"));
+    }
+    Ok(Some(CalibrationSpec {
+        interval_ms: num_member(m, &path, "interval_ms")?,
+        outage_ms: num_member(m, &path, "outage_ms")?,
+    }))
+}
+
+fn calibration_json(c: &CalibrationSpec) -> JsonValue {
+    obj(vec![
+        ("interval_ms", JsonValue::Num(c.interval_ms)),
+        ("outage_ms", JsonValue::Num(c.outage_ms)),
+    ])
 }
 
 fn parse_arrival(v: &JsonValue, path: &str) -> Result<Option<ArrivalProcess>, ApiError> {
@@ -802,6 +847,7 @@ fn parse_stage(v: &JsonValue, index: usize) -> Result<StageSpec, ApiError> {
                     .unwrap_or_else(|| "round-robin".into()),
                 opts: parse_opts(v, &path, OptFlags::overlapped())?,
                 time_scale: opt_num_member(v, &path, "time_scale", 1.0)?,
+                calibration: parse_calibration(v, &path)?,
                 slo: parse_slo(v, &path)?,
             }))
         }
@@ -905,6 +951,9 @@ fn stage_json(stage: &StageSpec) -> JsonValue {
             members.push(("routing", JsonValue::Str(s.routing.clone())));
             members.push(("opts", opts_json(s.opts)));
             members.push(("time_scale", JsonValue::Num(s.time_scale)));
+            if let Some(c) = &s.calibration {
+                members.push(("calibration", calibration_json(c)));
+            }
             if let Some(slo) = slo_json(&s.slo) {
                 members.push(("slo", slo));
             }
@@ -961,6 +1010,7 @@ fn check_slo_applies(slo: &SloSpec, allowed: &[&str], path: &str) -> Result<(), 
         ("max_reject_frac", slo.max_reject_frac.is_some()),
         ("max_latency_ms", slo.max_latency_ms.is_some()),
         ("min_gops", slo.min_gops.is_some()),
+        ("min_availability", slo.min_availability.is_some()),
     ] {
         if present && !allowed.contains(&name) {
             return Err(parse_err(
@@ -976,6 +1026,7 @@ fn check_slo_applies(slo: &SloSpec, allowed: &[&str], path: &str) -> Result<(), 
         ("max_reject_frac", slo.max_reject_frac, true, 1.0),
         ("max_latency_ms", slo.max_latency_ms, false, f64::INFINITY),
         ("min_gops", slo.min_gops, false, f64::INFINITY),
+        ("min_availability", slo.min_availability, false, 1.0),
     ] {
         if let Some(v) = value {
             let positive_ok = if allow_zero { v >= 0.0 } else { v > 0.0 };
@@ -1151,7 +1202,11 @@ impl Session {
     }
 
     fn plan_serve(&self, s: &ServeStage, path: &str) -> Result<PlannedStage, ApiError> {
-        check_slo_applies(&s.slo, &["p99_ms", "min_throughput_rps", "max_reject_frac"], path)?;
+        check_slo_applies(
+            &s.slo,
+            &["p99_ms", "min_throughput_rps", "max_reject_frac", "min_availability"],
+            path,
+        )?;
         if !s.max_wait_ms.is_finite() || s.max_wait_ms < 0.0 {
             return Err(parse_err(
                 format!("{path}.max_wait_ms"),
@@ -1205,6 +1260,27 @@ impl Session {
                     .routing
                     .parse()
                     .map_err(|reason| parse_err(format!("{path}.routing"), reason))?;
+                let calibration = match &s.calibration {
+                    None => None,
+                    Some(c) => {
+                        if !c.interval_ms.is_finite() || c.interval_ms <= 0.0 {
+                            return Err(ApiError::InvalidDuration {
+                                field: format!("{path}.calibration.interval_ms"),
+                                seconds: c.interval_ms * 1e-3,
+                            });
+                        }
+                        if !c.outage_ms.is_finite() || c.outage_ms < 0.0 {
+                            return Err(ApiError::InvalidDuration {
+                                field: format!("{path}.calibration.outage_ms"),
+                                seconds: c.outage_ms * 1e-3,
+                            });
+                        }
+                        Some(CalibrationConfig {
+                            interval_s: c.interval_ms * 1e-3,
+                            outage_s: c.outage_ms * 1e-3,
+                        })
+                    }
+                };
                 Ok(PlannedStage::ServeVirtual {
                     name: s.name.clone(),
                     cfg: VirtualServeConfig {
@@ -1214,6 +1290,7 @@ impl Session {
                         max_wait_s: s.max_wait_ms * 1e-3,
                         queue_depth: s.queue_depth,
                         routing,
+                        calibration,
                     },
                     mix,
                     arrival,
@@ -1233,6 +1310,13 @@ impl Session {
                         format!("{path}.arrival"),
                         "the threaded engine drives a fixed request count ('requests'); \
                          arrival processes apply to the virtual engine",
+                    ));
+                }
+                if s.calibration.is_some() {
+                    return Err(parse_err(
+                        format!("{path}.calibration"),
+                        "re-calibration outages are a virtual-engine model; the threaded \
+                         engine has no calibration knob",
                     ));
                 }
                 let backend: ServeBackend = s
@@ -1318,7 +1402,13 @@ fn slo_for_dse(slo: &SloSpec, out: &SweepOutcome) -> SloVerdict {
     SloVerdict::from_checks(checks)
 }
 
-fn slo_for_serve(slo: &SloSpec, p99_ms: f64, throughput_rps: f64, reject_frac: f64) -> SloVerdict {
+fn slo_for_serve(
+    slo: &SloSpec,
+    p99_ms: f64,
+    throughput_rps: f64,
+    reject_frac: f64,
+    availability: f64,
+) -> SloVerdict {
     let mut checks = Vec::new();
     if let Some(target) = slo.p99_ms {
         checks.push(SloCheck {
@@ -1342,6 +1432,14 @@ fn slo_for_serve(slo: &SloSpec, p99_ms: f64, throughput_rps: f64, reject_frac: f
             target,
             actual: reject_frac,
             pass: reject_frac <= target,
+        });
+    }
+    if let Some(target) = slo.min_availability {
+        checks.push(SloCheck {
+            metric: "min_availability".into(),
+            target,
+            actual: availability,
+            pass: availability >= target,
         });
     }
     SloVerdict::from_checks(checks)
@@ -1505,50 +1603,59 @@ fn run_stage(
             let mut stage_rng = Pcg32::new(plan.seed).fork(index as u64);
             let stage_seed = stage_rng.next_u64();
             let cost = SessionCost { session: session.as_ref(), opts: *opts };
-                let v = simulate_serve(cfg, mix, arrival, &cost, stage_seed);
-                let out = WorkloadOutcome {
-                    mix: mix.normalized(),
-                    arrival_kind: arrival.kind().into(),
-                    arrival: arrival.describe(),
-                    shards: cfg.shards,
-                    workers: cfg.workers,
-                    max_batch: cfg.max_batch,
-                    max_wait_ms: cfg.max_wait_s * 1e3,
-                    queue_depth: cfg.queue_depth,
-                    routing: cfg.routing.name().into(),
-                    offered: v.offered,
-                    admitted: v.admitted,
-                    rejected: v.rejected,
-                    makespan_s: v.makespan_s,
-                    throughput_rps: v.throughput_rps(),
-                    mean_ms: v.mean_latency_ms(),
-                    p50_ms: v.latency_percentile_ms(50.0),
-                    p95_ms: v.latency_percentile_ms(95.0),
-                    p99_ms: v.latency_percentile_ms(99.0),
-                    batches: v.batches,
-                    mean_batch: v.mean_batch,
-                    per_model: v.per_model.clone(),
-                    per_shard: v
-                        .per_shard
-                        .iter()
-                        .map(|s| (s.shard, s.requests, s.utilization))
-                        .collect(),
-                };
-                let verdict =
-                    slo_for_serve(slo, out.p99_ms, out.throughput_rps, v.reject_fraction());
-                StageOutcome {
-                    name: name.clone(),
-                    kind: "serve".into(),
-                    outcome: Outcome::Workload(out),
-                    slo: verdict,
-                }
+            let v = simulate_serve(cfg, mix, arrival, &cost, stage_seed);
+            let out = WorkloadOutcome {
+                mix: mix.normalized(),
+                arrival_kind: arrival.kind().into(),
+                arrival: arrival.describe(),
+                shards: cfg.shards,
+                workers: cfg.workers,
+                max_batch: cfg.max_batch,
+                max_wait_ms: cfg.max_wait_s * 1e3,
+                queue_depth: cfg.queue_depth,
+                routing: cfg.routing.name().into(),
+                offered: v.offered,
+                admitted: v.admitted,
+                rejected: v.rejected,
+                makespan_s: v.makespan_s,
+                throughput_rps: v.throughput_rps(),
+                mean_ms: v.mean_latency_ms(),
+                p50_ms: v.latency_percentile_ms(50.0),
+                p95_ms: v.latency_percentile_ms(95.0),
+                p99_ms: v.latency_percentile_ms(99.0),
+                batches: v.batches,
+                mean_batch: v.mean_batch,
+                outages: v.outages,
+                downtime_s: v.downtime_s,
+                availability: v.availability,
+                per_model: v.per_model.clone(),
+                per_shard: v
+                    .per_shard
+                    .iter()
+                    .map(|s| (s.shard, s.requests, s.utilization))
+                    .collect(),
+            };
+            let verdict = slo_for_serve(
+                slo,
+                out.p99_ms,
+                out.throughput_rps,
+                v.reject_fraction(),
+                v.availability,
+            );
+            StageOutcome {
+                name: name.clone(),
+                kind: "serve".into(),
+                outcome: Outcome::Workload(out),
+                slo: verdict,
             }
+        }
         PlannedStage::ServeThreaded { name, req, slo } => {
             let out = Arc::clone(session).serve(req)?;
             let attempts = out.requests as f64 + out.rejections as f64;
             let reject_frac =
                 if attempts > 0.0 { out.rejections as f64 / attempts } else { 0.0 };
-            let verdict = slo_for_serve(slo, out.p99_ms, out.throughput_img_s, reject_frac);
+            // the threaded coordinator has no calibration model: always up
+            let verdict = slo_for_serve(slo, out.p99_ms, out.throughput_img_s, reject_frac, 1.0);
             StageOutcome {
                 name: name.clone(),
                 kind: "serve".into(),
@@ -1566,6 +1673,8 @@ fn run_stage(
             tables.push(t12);
             let (t_ovl, _) = report::overlap_ablation(session);
             tables.push(t_ovl);
+            let (t_fid, _) = report::fidelity_pareto(session);
+            tables.push(t_fid);
             tables.extend(session.compare().to_tables());
             let (t11, _) = report::fig11(session, &Grid::paper(), *threads);
             tables.push(t11);
@@ -1687,6 +1796,58 @@ mod tests {
         assert!(check_slo_applies(&frac, &["max_reject_frac"], "s").is_err());
         let zero_frac = SloSpec { max_reject_frac: Some(0.0), ..SloSpec::default() };
         assert!(check_slo_applies(&zero_frac, &["max_reject_frac"], "s").is_ok());
+    }
+
+    #[test]
+    fn calibration_parses_validates_and_round_trips() {
+        let text = r#"{"name":"n","stages":[{
+            "kind":"serve",
+            "mix":[{"model":"dcgan","weight":1.0}],
+            "arrival":{"process":"poisson","rate_hz":100.0,"duration_s":0.1},
+            "calibration":{"interval_ms":40.0,"outage_ms":6.0}
+        }]}"#;
+        let sc = Scenario::from_json(text).unwrap();
+        let StageSpec::Serve(s) = &sc.stages[0] else { panic!("not a serve stage") };
+        assert_eq!(
+            s.calibration,
+            Some(CalibrationSpec { interval_ms: 40.0, outage_ms: 6.0 })
+        );
+        // serialize → reparse → equal (the fixpoint covers the new member)
+        assert_eq!(Scenario::from_json(&sc.to_json()).unwrap(), sc);
+        // member must be an object with both durations
+        let err = Scenario::from_json(
+            r#"{"name":"n","stages":[{"kind":"serve","calibration":true}]}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].calibration"));
+        let err = Scenario::from_json(
+            r#"{"name":"n","stages":[{"kind":"serve","calibration":{"interval_ms":1.0}}]}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].calibration.outage_ms"));
+    }
+
+    #[test]
+    fn min_availability_is_a_serve_slo_in_the_unit_interval() {
+        let doc = crate::util::json::parse(r#"{"slo":{"min_availability":0.95}}"#).unwrap();
+        let slo = parse_slo(&doc, "stages[0]").unwrap();
+        assert_eq!(slo.min_availability, Some(0.95));
+        assert!(!slo.is_empty());
+        assert!(check_slo_applies(&slo, &["min_availability"], "s").is_ok());
+        // not applicable outside serve stages
+        assert!(check_slo_applies(&slo, &["min_gops"], "s").is_err());
+        // must land in (0, 1]
+        let hi = SloSpec { min_availability: Some(1.5), ..SloSpec::default() };
+        assert!(check_slo_applies(&hi, &["min_availability"], "s").is_err());
+        let zero = SloSpec { min_availability: Some(0.0), ..SloSpec::default() };
+        assert!(check_slo_applies(&zero, &["min_availability"], "s").is_err());
+        // the verdict compares availability against the floor
+        let v = slo_for_serve(&slo, 1.0, 10.0, 0.0, 0.9);
+        assert!(!v.pass && v.checks[0].metric == "min_availability");
+        let v = slo_for_serve(&slo, 1.0, 10.0, 0.0, 0.99);
+        assert!(v.pass);
     }
 
     #[test]

@@ -441,6 +441,7 @@ impl Session {
             p99_ms: percentile_sorted(&lat_ms, 99.0),
             total_requests: stats.total_requests,
             total_samples: stats.total_samples,
+            dropped_samples: stats.dropped_samples,
             per_model,
             per_shard,
         })

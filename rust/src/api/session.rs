@@ -155,6 +155,23 @@ impl Session {
         simulate_mapped(&model.name, &jobs, acc, batch, opts)
     }
 
+    /// Monte Carlo fidelity evaluation of one model: the cached mapping
+    /// and timing report plus a noise envelope from
+    /// [`crate::fidelity::evaluate`]. The timing path is untouched — with
+    /// [`crate::fidelity::NoiseModel::ideal`] the latency/energy numbers
+    /// are bit-identical to [`Session::sim_report`].
+    pub fn fidelity_report(
+        &self,
+        model: &Model,
+        batch: usize,
+        opts: OptFlags,
+        mc: &crate::fidelity::MonteCarlo,
+    ) -> crate::fidelity::FidelityReport {
+        let jobs = self.mapped(model, batch, opts);
+        let report = self.sim_report(model, batch, opts);
+        crate::fidelity::evaluate(mc, &jobs, &report)
+    }
+
     /// Execute a [`SimRequest`].
     pub fn simulate(&self, req: &SimRequest) -> Result<SimOutcome, ApiError> {
         if req.batch == 0 {

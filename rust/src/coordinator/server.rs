@@ -112,6 +112,9 @@ pub struct ServerStats {
     pub per_shard: Vec<ShardStats>,
     pub total_requests: u64,
     pub total_samples: u64,
+    /// Non-finite latency observations shed by the shard histograms
+    /// ([`crate::util::stats::Histogram::dropped`]), summed server-wide.
+    pub dropped_samples: u64,
 }
 
 enum LeaderMsg {
@@ -317,6 +320,7 @@ impl Server {
         let mut per_shard = Vec::with_capacity(self.shards.len());
         let mut total_requests = 0u64;
         let mut total_samples = 0u64;
+        let mut dropped_samples = 0u64;
         for (shard_id, shard) in self.shards.iter().enumerate() {
             let guard = shard.metrics.lock().unwrap();
             let mut shard_requests = 0u64;
@@ -326,6 +330,7 @@ impl Server {
             for (m, s) in guard.iter() {
                 shard_requests += s.requests;
                 shard_samples += s.samples;
+                dropped_samples += s.latency.dropped();
                 per_model.push((m.clone(), s.summary()));
                 merged
                     .entry(m.clone())
@@ -348,7 +353,7 @@ impl Server {
             });
         }
         let per_model = merged.into_iter().map(|(m, s)| (m, s.summary())).collect();
-        ServerStats { per_model, per_shard, total_requests, total_samples }
+        ServerStats { per_model, per_shard, total_requests, total_samples, dropped_samples }
     }
 
     /// Graceful shutdown: drain pending batches on every shard, then join.
@@ -654,6 +659,8 @@ mod tests {
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.count, 2);
         assert_eq!(stats.total_samples, 2);
+        // wall-clock latencies are always finite: nothing shed
+        assert_eq!(stats.dropped_samples, 0);
     }
 
     /// Executor that panics on every generate call.

@@ -1,0 +1,89 @@
+//! Calibration process model: how long drift may accumulate before a
+//! shard must take a re-calibration outage, and how long that outage
+//! lasts.
+//!
+//! Thermal drift walks every MR resonance off its programmed detuning at
+//! [`NoiseModel::drift_linewidths_per_s`]. A deployment tolerates that
+//! walk until the transmission error it induces reaches one weight LSB —
+//! past that point the analog error is no longer hidden under the
+//! quantization floor and the shard re-locks its rings (TO tuner settle)
+//! and re-programs its PCM cells (programming pulse). The interval and
+//! outage derived here are the physics-grounded defaults behind the
+//! `calibration` knob of virtual-serve scenarios
+//! ([`crate::workload::vserve::CalibrationConfig`]); scenarios may also
+//! set the knob directly in milliseconds.
+
+use crate::fidelity::noise::NoiseModel;
+
+/// Drift-budget calibration schedule derived from a [`NoiseModel`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationModel {
+    /// Resonance walk rate (linewidths/s) — copied from the noise model.
+    pub drift_linewidths_per_s: f64,
+    /// Accumulated detuning (in linewidths) at which the drift-induced
+    /// transmission error equals one weight LSB.
+    pub budget_linewidths: f64,
+    /// Time to re-lock one MR bank and re-program its PCM cells (s).
+    pub bank_retune_s: f64,
+}
+
+impl CalibrationModel {
+    /// Derive the schedule: the budget is the detuning where the MR
+    /// through-port leak equals the quantization step, and the per-bank
+    /// retune cost is TO settle + PCM programming pulse.
+    pub fn from_noise(noise: &NoiseModel) -> CalibrationModel {
+        let lsb = noise.ring.max_quantization_error(noise.quantization_bits);
+        let budget_linewidths =
+            noise.ring.detuning_for_transmission(lsb) / noise.ring.linewidth();
+        CalibrationModel {
+            drift_linewidths_per_s: noise.drift_linewidths_per_s,
+            budget_linewidths,
+            bank_retune_s: noise.retune_s + noise.pcm_program_s,
+        }
+    }
+
+    /// Seconds of operation before the drift budget is spent
+    /// (`∞` when the model does not drift).
+    pub fn interval_s(&self) -> f64 {
+        if self.drift_linewidths_per_s > 0.0 {
+            self.budget_linewidths / self.drift_linewidths_per_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Outage length for a shard that re-calibrates `banks` MR banks
+    /// sequentially.
+    pub fn outage_s(&self, banks: usize) -> f64 {
+        banks as f64 * self.bank_retune_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_model_recalibrates_on_a_sub_second_cadence() {
+        let cal = CalibrationModel::from_noise(&NoiseModel::paper());
+        let interval = cal.interval_s();
+        // ~0.022 linewidths of budget against ~0.027 linewidths/s of
+        // drift: the shard re-locks about once a second
+        assert!(
+            interval > 0.1 && interval < 10.0,
+            "interval {interval}s is outside the physical ballpark"
+        );
+        assert!(cal.budget_linewidths > 0.0 && cal.budget_linewidths < 1.0);
+        // outage scales linearly with bank count and is µs-class per bank
+        let one = cal.outage_s(1);
+        assert!(one > 1e-6 && one < 1e-4, "per-bank retune {one}s");
+        assert!((cal.outage_s(8) - 8.0 * one).abs() < 1e-18);
+    }
+
+    #[test]
+    fn a_drift_free_model_never_needs_recalibration() {
+        let mut noise = NoiseModel::paper();
+        noise.drift_linewidths_per_s = 0.0;
+        assert_eq!(CalibrationModel::from_noise(&noise).interval_s(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,30 @@
+//! Noise- and variation-aware fidelity engine (ROADMAP item 4).
+//!
+//! Turns the repo's latency/energy story into a latency/energy/accuracy
+//! story. Three pieces:
+//!
+//! - [`noise`] — a typed [`noise::NoiseModel`] for the analog error
+//!   sources of the photonic datapath (shot noise, MR crosstalk, thermal
+//!   drift, PCM conductance drift, converter quantization), every
+//!   parameter derived from the `photonics` device constants.
+//! - [`montecarlo`] — a deterministic Monte Carlo driver that threads
+//!   per-layer noise through the mapped jobs and the timing schedule,
+//!   reporting SNR / effective bits per layer and per model alongside
+//!   the untouched latency/energy numbers. Sweeping the symbol
+//!   integration factor yields the accuracy-vs-throughput Pareto
+//!   frontier ([`crate::report::fidelity_pareto`]).
+//! - [`calibration`] — the drift-budget schedule: how long a shard can
+//!   serve before re-calibration, feeding the availability dynamics of
+//!   [`crate::workload::vserve`].
+//!
+//! Determinism: all sampling forks [`crate::util::rng::Pcg32`] child
+//! streams, so envelopes are byte-identical per seed, and
+//! [`noise::NoiseModel::ideal`] leaves every golden trace bit-exact.
+
+pub mod calibration;
+pub mod montecarlo;
+pub mod noise;
+
+pub use calibration::CalibrationModel;
+pub use montecarlo::{evaluate, FidelityReport, LayerFidelity, MonteCarlo};
+pub use noise::NoiseModel;

@@ -1,0 +1,302 @@
+//! Monte Carlo fidelity driver: per-layer SNR / effective-bits envelopes.
+//!
+//! Threads a [`NoiseModel`] through the same artifacts the timing
+//! simulator already produces — the mapped [`LayerJob`]s (for each
+//! layer's WDM channel count) and the [`SimReport`] layer schedule (for
+//! each layer's position inside the drift window) — and reports an
+//! accuracy proxy alongside the existing latency/energy numbers. The
+//! proxy is an SNR: per trial, the relative error variances of shot
+//! noise, crosstalk, thermal drift, PCM drift, and quantization add on a
+//! full-scale symbol, and `10·log10(1/σ²)` (capped at the converter
+//! limit) is the layer's delivered SNR, converted to effective bits via
+//! the ENOB relation.
+//!
+//! Determinism contract: all sampling flows through [`Pcg32::fork`]
+//! child streams — stream `seed → trial → layer` — so envelopes are
+//! byte-identical per seed, independent of layer count or trial order
+//! changes elsewhere. The driver never mutates the [`SimReport`]; with
+//! [`NoiseModel::ideal`] the reported accuracy is exactly the
+//! quantization bit budget and every golden trace stays bit-exact.
+//!
+//! The **integration factor** is the accuracy/throughput knob: holding a
+//! symbol on the detector `f×` longer collects `f×` more photons
+//! (shot variance `∝ 1/f`) but stretches the pipeline to `f×` the
+//! latency (`gops ∝ 1/f`). Sweeping it yields the
+//! [`crate::report::fidelity_pareto`] frontier.
+
+use crate::fidelity::calibration::CalibrationModel;
+use crate::fidelity::noise::{effective_bits_for_snr_db, NoiseModel};
+use crate::sim::{LayerJob, SimReport};
+use crate::util::json::{obj, JsonValue};
+use crate::util::rng::Pcg32;
+
+/// A Monte Carlo fidelity experiment: which noise model, how many
+/// trials, how long each symbol integrates, and the root seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonteCarlo {
+    /// Noise parameters (see [`NoiseModel`]).
+    pub noise: NoiseModel,
+    /// Independent noise realizations to average the envelope over.
+    pub trials: usize,
+    /// Symbol integration-time multiplier (`1.0` = the converter-paced
+    /// symbol the timing model assumes).
+    pub integration: f64,
+    /// Root seed; all sampling forks from `Pcg32::new(seed)`.
+    pub seed: u64,
+}
+
+impl Default for MonteCarlo {
+    fn default() -> Self {
+        MonteCarlo { noise: NoiseModel::paper(), trials: 32, integration: 1.0, seed: 0 }
+    }
+}
+
+/// Fidelity envelope for one mapped layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerFidelity {
+    /// Layer index (matches [`LayerJob::index`] / the `SimReport` trace).
+    pub index: usize,
+    /// Layer name.
+    pub name: String,
+    /// Active WDM channels the layer's widest MVM drives (the crosstalk
+    /// operand), capped at the §IV waveguide bound.
+    pub channels: usize,
+    /// Mean delivered SNR over the trials (dB, capped at the converter
+    /// limit).
+    pub snr_db: f64,
+    /// ENOB-equivalent bits at that SNR, in `[0, precision_bits]`.
+    pub effective_bits: f64,
+}
+
+/// Fidelity + throughput summary for one model under one noise model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FidelityReport {
+    /// Model name (from the underlying [`SimReport`]).
+    pub model: String,
+    /// Trials averaged into the envelope.
+    pub trials: usize,
+    /// Symbol integration-time multiplier the run used.
+    pub integration: f64,
+    /// Root seed.
+    pub seed: u64,
+    /// Batch latency stretched by the integration factor (s).
+    pub latency_s: f64,
+    /// Batch energy (J) — unchanged from the timing model.
+    pub energy_j: f64,
+    /// Throughput at the stretched symbol time (GOPS).
+    pub gops: f64,
+    /// MAC-weighted mean SNR across layers (dB).
+    pub snr_db: f64,
+    /// MAC-weighted mean effective bits across layers.
+    pub effective_bits: f64,
+    /// Worst layer's effective bits — the error a generated image
+    /// actually sees is bounded by the weakest stage.
+    pub min_effective_bits: f64,
+    /// Per-layer envelopes, in mapping order.
+    pub layers: Vec<LayerFidelity>,
+}
+
+impl FidelityReport {
+    /// JSON form (order-stable; rendered byte-identically per seed).
+    pub fn json(&self) -> JsonValue {
+        let layers: Vec<JsonValue> = self
+            .layers
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("index", JsonValue::Num(l.index as f64)),
+                    ("name", JsonValue::Str(l.name.clone())),
+                    ("channels", JsonValue::Num(l.channels as f64)),
+                    ("snr_db", JsonValue::Num(l.snr_db)),
+                    ("effective_bits", JsonValue::Num(l.effective_bits)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("model", JsonValue::Str(self.model.clone())),
+            ("trials", JsonValue::Num(self.trials as f64)),
+            ("integration", JsonValue::Num(self.integration)),
+            ("seed", JsonValue::Num(self.seed as f64)),
+            ("latency_s", JsonValue::Num(self.latency_s)),
+            ("energy_j", JsonValue::Num(self.energy_j)),
+            ("gops", JsonValue::Num(self.gops)),
+            ("snr_db", JsonValue::Num(self.snr_db)),
+            ("effective_bits", JsonValue::Num(self.effective_bits)),
+            ("min_effective_bits", JsonValue::Num(self.min_effective_bits)),
+            ("layers", JsonValue::Arr(layers)),
+        ])
+    }
+}
+
+/// SNR (dB) for a realized total relative error variance, capped at the
+/// converter limit (also the zero-variance answer, so the ideal model
+/// never pushes an infinity toward the JSON writer).
+fn snr_db_for_variance(variance: f64, cap_db: f64) -> f64 {
+    if variance > 0.0 {
+        (10.0 * (1.0 / variance).log10()).min(cap_db)
+    } else {
+        cap_db
+    }
+}
+
+/// Run the Monte Carlo envelope for one mapped model.
+///
+/// `jobs` and `report` must come from the same `(model, batch, opts)`
+/// mapping — the driver pairs `jobs[i]` with `report.layers[i]` to place
+/// each layer inside the drift window. The report is only read; latency
+/// and energy pass through untouched (stretched by the integration
+/// factor for the throughput proxy).
+pub fn evaluate(mc: &MonteCarlo, jobs: &[LayerJob], report: &SimReport) -> FidelityReport {
+    assert!(mc.trials > 0, "Monte Carlo needs at least one trial");
+    assert!(
+        mc.integration.is_finite() && mc.integration > 0.0,
+        "integration factor must be positive and finite: {}",
+        mc.integration
+    );
+    let noise = &mc.noise;
+    let cap_db = noise.snr_cap_db();
+    // Drift and PCM ages are uniform over one calibration interval: the
+    // serving layer re-locks resonances and re-programs weights each
+    // outage, so steady state sees every phase of the window equally.
+    let interval_s = CalibrationModel::from_noise(noise).interval_s();
+    let window_s = if interval_s.is_finite() { interval_s } else { 0.0 };
+    let root = Pcg32::new(mc.seed);
+    let shot_sigma = noise.shot_variance(mc.integration).sqrt();
+    let quant_var = noise.quantization_variance();
+    let amplitude_sq = noise.scale * noise.scale;
+
+    let mut layers = Vec::with_capacity(jobs.len());
+    let mut weighted_snr = 0.0;
+    let mut weighted_bits = 0.0;
+    let mut weight = 0.0;
+    let mut min_bits = f64::INFINITY;
+    for (li, job) in jobs.iter().enumerate() {
+        let channels = job
+            .mvms
+            .iter()
+            .map(|m| m.reduction)
+            .max()
+            .unwrap_or(1)
+            .clamp(1, noise.max_channels);
+        let xt_sigma = noise.crosstalk_variance(channels).sqrt();
+        let start_s = report.layers.get(li).map(|l| l.start).unwrap_or(0.0);
+        let mut snr_sum = 0.0;
+        for trial in 0..mc.trials {
+            // stream: seed → trial → layer, so every (trial, layer)
+            // cell draws from its own child stream
+            let mut rng = root.fork(trial as u64).fork(li as u64);
+            let drift_age = rng.f64() * window_s + start_s;
+            let pcm_age = rng.f64() * window_s + start_s;
+            let e_shot = rng.normal() * shot_sigma;
+            let e_xt = rng.normal() * xt_sigma;
+            let e_drift = noise.drift_error(drift_age);
+            let e_pcm = noise.pcm_sigma(pcm_age);
+            let variance = amplitude_sq
+                * (e_shot * e_shot
+                    + e_xt * e_xt
+                    + quant_var
+                    + e_drift * e_drift
+                    + e_pcm * e_pcm);
+            snr_sum += snr_db_for_variance(variance, cap_db);
+        }
+        let snr_db = snr_sum / mc.trials as f64;
+        let effective_bits = effective_bits_for_snr_db(snr_db, noise.quantization_bits);
+        let w = (job.dense_macs as f64).max(1.0);
+        weighted_snr += w * snr_db;
+        weighted_bits += w * effective_bits;
+        weight += w;
+        min_bits = min_bits.min(effective_bits);
+        layers.push(LayerFidelity {
+            index: job.index,
+            name: job.name.clone(),
+            channels,
+            snr_db,
+            effective_bits,
+        });
+    }
+
+    let bit_budget = f64::from(noise.quantization_bits);
+    let (snr_db, effective_bits) = if weight > 0.0 {
+        (weighted_snr / weight, weighted_bits / weight)
+    } else {
+        (cap_db, bit_budget)
+    };
+    FidelityReport {
+        model: report.model.clone(),
+        trials: mc.trials,
+        integration: mc.integration,
+        seed: mc.seed,
+        latency_s: report.latency * mc.integration,
+        energy_j: report.energy.total(),
+        gops: report.gops() / mc.integration,
+        snr_db,
+        effective_bits,
+        min_effective_bits: if min_bits.is_finite() { min_bits } else { bit_budget },
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::accelerator::Accelerator;
+    use crate::arch::config::ArchConfig;
+    use crate::models::zoo;
+    use crate::sim::mapper::map_model;
+    use crate::sim::{simulate, OptFlags};
+
+    fn fixtures() -> (Vec<LayerJob>, SimReport) {
+        let model = zoo::dcgan();
+        let acc = Accelerator::new(ArchConfig::paper_optimum()).expect("paper optimum");
+        let jobs = map_model(&model, 1, &OptFlags::all());
+        let report = simulate(&model, &acc, 1, OptFlags::all());
+        (jobs, report)
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_and_seeds_differ() {
+        let (jobs, report) = fixtures();
+        let mc = MonteCarlo { trials: 8, seed: 42, ..MonteCarlo::default() };
+        let a = evaluate(&mc, &jobs, &report).json().render();
+        let b = evaluate(&mc, &jobs, &report).json().render();
+        assert_eq!(a, b, "same seed must be byte-identical");
+        let other = MonteCarlo { seed: 43, ..mc };
+        assert_ne!(a, evaluate(&other, &jobs, &report).json().render());
+    }
+
+    #[test]
+    fn ideal_noise_reports_the_full_bit_budget() {
+        let (jobs, report) = fixtures();
+        let mc = MonteCarlo { noise: NoiseModel::ideal(), trials: 4, ..MonteCarlo::default() };
+        let fr = evaluate(&mc, &jobs, &report);
+        for l in &fr.layers {
+            assert!((l.effective_bits - 8.0).abs() < 1e-9, "{}: {}", l.name, l.effective_bits);
+            assert!((l.snr_db - mc.noise.snr_cap_db()).abs() < 1e-9);
+        }
+        assert!((fr.effective_bits - 8.0).abs() < 1e-9);
+        assert!((fr.min_effective_bits - 8.0).abs() < 1e-9);
+        // latency/energy pass straight through from the timing model
+        assert_eq!(fr.latency_s, report.latency);
+        assert_eq!(fr.energy_j, report.energy.total());
+        assert_eq!(fr.gops, report.gops());
+    }
+
+    #[test]
+    fn longer_integration_buys_accuracy_and_costs_throughput() {
+        let (jobs, report) = fixtures();
+        let mut last_bits = 0.0;
+        let mut last_gops = f64::INFINITY;
+        for f in [0.25, 1.0, 4.0] {
+            let mc = MonteCarlo { trials: 8, integration: f, ..MonteCarlo::default() };
+            let fr = evaluate(&mc, &jobs, &report);
+            assert!(
+                fr.effective_bits > last_bits,
+                "integration {f}: {} <= {last_bits}",
+                fr.effective_bits
+            );
+            assert!(fr.gops < last_gops, "integration {f}: gops must fall");
+            last_bits = fr.effective_bits;
+            last_gops = fr.gops;
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Typed noise model for the analog photonic datapath (ROADMAP item 4).
+//!
+//! Every number the simulator produces elsewhere assumes ideal analog
+//! behavior. This module types the four places where that assumption
+//! breaks — shot noise at the photodetector, inter-channel crosstalk on
+//! the MR banks, thermal drift of MR resonances, and PCM conductance
+//! drift with time-since-program — plus the ADC/DAC quantization floor
+//! they all sit on. "Harnessing Optoelectronic Noises in a Photonic
+//! Generative Network" (arXiv 2109.08622) motivates treating these as
+//! first-class for GAN workloads.
+//!
+//! Every parameter is **derived from the device constants that already
+//! drive the timing/energy simulator** ([`PhotonicParams`], [`Microring`],
+//! `photonics::crosstalk`) — no new magic numbers:
+//!
+//! | source        | derivation                                              |
+//! |---------------|---------------------------------------------------------|
+//! | shot noise    | photons per symbol at PD sensitivity over one ADC symbol |
+//! | crosstalk     | 2nd-order MR filter skirts at the layer's channel count  |
+//! | thermal drift | TED residual fraction of a TO tuner, in linewidths/s     |
+//! | PCM drift     | one weight LSB of conductance error per decade of age    |
+//! | quantization  | ENOB floor of the 8-bit DAC→ADC conversion pair          |
+//!
+//! A single [`NoiseModel::scale`] multiplier scales every error
+//! *amplitude*: `scale = 0.0` is [`NoiseModel::ideal`] (bit-exact with
+//! the noiseless simulator, pinned by the golden-trace suite), `1.0` is
+//! the paper-parameterized model, and intermediate values support
+//! sensitivity sweeps. Sampling itself lives in
+//! [`crate::fidelity::montecarlo`]; this module is pure parameters.
+
+use crate::photonics::constants::PhotonicParams;
+use crate::photonics::crosstalk;
+use crate::photonics::mr::Microring;
+use crate::util::units::dbm_to_watts;
+
+/// Planck constant (J·s), for photon energy at the MR resonance.
+const PLANCK_J_S: f64 = 6.626_070_15e-34;
+/// Speed of light in vacuum (m/s) — same constant `arch::unit` uses for
+/// waveguide time-of-flight.
+const LIGHT_SPEED_M_S: f64 = 299_792_458.0;
+/// ENOB relation `SNR_dB = 6.02·bits + 1.76` — the same constants behind
+/// [`crosstalk::required_sxr_db`], inverted here to turn an SNR back into
+/// effective bits.
+const ENOB_SLOPE_DB_PER_BIT: f64 = 6.02;
+const ENOB_OFFSET_DB: f64 = 1.76;
+
+/// Invert the ENOB relation: effective bits delivered by `snr_db`,
+/// clamped to `[0, cap_bits]` (an analog channel can never beat its own
+/// converters).
+pub fn effective_bits_for_snr_db(snr_db: f64, cap_bits: u32) -> f64 {
+    ((snr_db - ENOB_OFFSET_DB) / ENOB_SLOPE_DB_PER_BIT).clamp(0.0, f64::from(cap_bits))
+}
+
+/// Analog noise parameters for one photonic MVM datapath.
+///
+/// All error terms are expressed as *relative* amplitudes on a
+/// full-scale symbol, so variances add and `10·log10(1/σ²)` is directly
+/// an SNR in dB.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NoiseModel {
+    /// The resonator the MR banks are built from — carries the resonance
+    /// wavelength, linewidth, and filter-skirt shape every term below
+    /// references.
+    pub ring: Microring,
+    /// Photons detected per analog symbol at the photodetector
+    /// sensitivity floor (shot-noise statistics: relative variance is
+    /// `1/photons`).
+    pub photons_per_symbol: f64,
+    /// Channel-count ceiling for the crosstalk term (the §IV 36-MR
+    /// waveguide bound).
+    pub max_channels: usize,
+    /// Thermal resonance walk, in MR linewidths per second of operation:
+    /// the TED-cancelled residual fraction of the TO tuner's thermal
+    /// authority.
+    pub drift_linewidths_per_s: f64,
+    /// PCM conductance drift amplitude per decade of time-since-program:
+    /// one weight LSB per decade.
+    pub pcm_drift_per_decade: f64,
+    /// Reference age for the PCM drift logarithm — the programming pulse
+    /// width itself.
+    pub pcm_program_s: f64,
+    /// Time to thermally re-lock one MR bank during re-calibration (the
+    /// TO tuner settle time).
+    pub retune_s: f64,
+    /// DAC/ADC precision (bits) — both the quantization noise floor and
+    /// the cap on achievable effective bits.
+    pub quantization_bits: u32,
+    /// Global multiplier on every error *amplitude*. `0.0` disables all
+    /// noise ([`NoiseModel::ideal`]); `1.0` is the paper model. With a
+    /// fixed seed, realized errors scale monotonically with this knob.
+    pub scale: f64,
+}
+
+impl NoiseModel {
+    /// Derive every parameter from an existing device-constant bundle.
+    pub fn from_params(p: &PhotonicParams) -> NoiseModel {
+        let ring = Microring::default();
+        // Photon energy at the MR resonance; one symbol lasts as long as
+        // the slower converter in the DAC→MVM→ADC chain.
+        let photon_j = PLANCK_J_S * LIGHT_SPEED_M_S / ring.resonant_wavelength();
+        let symbol_s = p.device.dac_latency.max(p.device.adc_latency);
+        let photons_per_symbol =
+            dbm_to_watts(p.system.pd_sensitivity_dbm) * symbol_s / photon_j;
+        // TED cancels most of a TO tuner's thermal authority; the
+        // residual (0.75 / 27.5 mW per FSR) keeps walking the resonance.
+        let drift_linewidths_per_s =
+            p.device.to_ted_power_per_fsr / p.device.to_tuning_power_per_fsr;
+        NoiseModel {
+            photons_per_symbol,
+            max_channels: p.system.max_mrs_per_waveguide,
+            drift_linewidths_per_s,
+            pcm_drift_per_decade: ring.max_quantization_error(p.system.precision_bits),
+            pcm_program_s: p.device.pcmc_switch_latency,
+            retune_s: p.device.to_tuning_latency,
+            quantization_bits: p.system.precision_bits,
+            scale: 1.0,
+            ring,
+        }
+    }
+
+    /// The paper-parameterized model ([`PhotonicParams::default`]).
+    pub fn paper() -> NoiseModel {
+        NoiseModel::from_params(&PhotonicParams::default())
+    }
+
+    /// The zero-noise model: identical parameters, `scale = 0.0`. Under
+    /// this model the Monte Carlo driver reports exactly
+    /// `quantization_bits` effective bits for every layer and leaves
+    /// every golden trace bit-exact.
+    pub fn ideal() -> NoiseModel {
+        NoiseModel::paper().with_scale(0.0)
+    }
+
+    /// Same model with a different global error-amplitude multiplier.
+    pub fn with_scale(mut self, scale: f64) -> NoiseModel {
+        self.scale = scale;
+        self
+    }
+
+    /// True when no noise is injected at all.
+    pub fn is_ideal(&self) -> bool {
+        self.scale == 0.0
+    }
+
+    /// The SNR ceiling (dB) imposed by the converters — no analog trial
+    /// can report better than the quantization limit of the DAC/ADC
+    /// pair, and capping here keeps infinities out of the JSON writer.
+    pub fn snr_cap_db(&self) -> f64 {
+        crosstalk::required_sxr_db(self.quantization_bits)
+    }
+
+    /// Relative shot-noise variance for one detection integrated over
+    /// `integration` symbol times (Poisson statistics: `1/N` at `N`
+    /// detected photons; longer integration collects more photons).
+    pub fn shot_variance(&self, integration: f64) -> f64 {
+        1.0 / (self.photons_per_symbol * integration)
+    }
+
+    /// Relative quantization-noise variance of the DAC→ADC pair: each
+    /// converter contributes the ENOB floor at `quantization_bits`.
+    pub fn quantization_variance(&self) -> f64 {
+        2.0 * 10f64.powf(-self.snr_cap_db() / 10.0)
+    }
+
+    /// Relative crosstalk variance with `channels` active WDM channels
+    /// on the waveguide (2nd-order MR filter skirts, §IV analysis).
+    pub fn crosstalk_variance(&self, channels: usize) -> f64 {
+        crosstalk::crosstalk_fraction(&self.ring, channels.min(self.max_channels))
+    }
+
+    /// Deterministic relative error of an MR programmed to full
+    /// extinction after `age_s` seconds of uncorrected thermal drift:
+    /// the through-port transmission leaked at the walked-off detuning.
+    pub fn drift_error(&self, age_s: f64) -> f64 {
+        let detuning = self.drift_linewidths_per_s * age_s * self.ring.linewidth();
+        self.ring.through_transmission(detuning)
+    }
+
+    /// Relative PCM conductance error after `age_s` seconds since the
+    /// programming pulse: one weight LSB per decade of normalized age.
+    pub fn pcm_sigma(&self, age_s: f64) -> f64 {
+        self.pcm_drift_per_decade * (1.0 + age_s / self.pcm_program_s).log10()
+    }
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameters_derive_from_device_constants() {
+        let p = PhotonicParams::default();
+        let n = NoiseModel::paper();
+        // −20 dBm over an 0.82 ns ADC symbol at ~1.55 µm is a few 1e4
+        // photons — shot-limited near the 8-bit floor, as the paper's
+        // precision choice implies.
+        assert!(
+            n.photons_per_symbol > 1e4 && n.photons_per_symbol < 1e6,
+            "photons/symbol {}",
+            n.photons_per_symbol
+        );
+        let ted_residual =
+            p.device.to_ted_power_per_fsr / p.device.to_tuning_power_per_fsr;
+        assert!((n.drift_linewidths_per_s - ted_residual).abs() < 1e-15);
+        assert_eq!(
+            n.pcm_drift_per_decade,
+            n.ring.max_quantization_error(p.system.precision_bits)
+        );
+        assert_eq!(n.max_channels, p.system.max_mrs_per_waveguide);
+        assert_eq!(n.quantization_bits, p.system.precision_bits);
+        assert_eq!(n.pcm_program_s, p.device.pcmc_switch_latency);
+        assert_eq!(n.retune_s, p.device.to_tuning_latency);
+    }
+
+    #[test]
+    fn ideal_is_scale_zero_with_paper_parameters() {
+        let ideal = NoiseModel::ideal();
+        assert!(ideal.is_ideal());
+        assert_eq!(ideal.with_scale(1.0), NoiseModel::paper());
+        assert!(!NoiseModel::paper().is_ideal());
+    }
+
+    #[test]
+    fn quantization_floor_matches_the_enob_relation() {
+        let n = NoiseModel::paper();
+        // one converter at the cap SNR has variance 10^(-cap/10); the
+        // DAC→ADC pair doubles it
+        let one = 10f64.powf(-n.snr_cap_db() / 10.0);
+        assert!((n.quantization_variance() - 2.0 * one).abs() < 1e-18);
+        // and the inverse relation recovers the bit budget at the cap
+        let bits = effective_bits_for_snr_db(n.snr_cap_db(), n.quantization_bits);
+        assert!((bits - 8.0).abs() < 1e-9, "cap SNR must map back to 8 bits, got {bits}");
+        assert_eq!(effective_bits_for_snr_db(-3.0, 8), 0.0);
+        assert_eq!(effective_bits_for_snr_db(1e6, 8), 8.0);
+    }
+
+    #[test]
+    fn crosstalk_grows_with_channel_count_and_is_capped() {
+        let n = NoiseModel::paper();
+        assert_eq!(n.crosstalk_variance(1), 0.0);
+        let few = n.crosstalk_variance(4);
+        let many = n.crosstalk_variance(36);
+        assert!(few > 0.0 && many > few, "few {few} many {many}");
+        // past the §IV waveguide bound the model clamps
+        assert_eq!(n.crosstalk_variance(400), many);
+    }
+
+    #[test]
+    fn drift_and_pcm_errors_grow_monotonically_with_age() {
+        let n = NoiseModel::paper();
+        assert_eq!(n.drift_error(0.0), 0.0);
+        assert_eq!(n.pcm_sigma(0.0), 0.0);
+        let mut last_d = 0.0;
+        let mut last_p = 0.0;
+        for age in [1e-3, 1e-1, 1.0, 10.0] {
+            let d = n.drift_error(age);
+            let p = n.pcm_sigma(age);
+            assert!(d > last_d, "drift at {age}s: {d} <= {last_d}");
+            assert!(p > last_p, "pcm at {age}s: {p} <= {last_p}");
+            last_d = d;
+            last_p = p;
+        }
+        // drift saturates at full transmission leak
+        assert!(n.drift_error(1e9) <= 1.0);
+    }
+}

@@ -73,6 +73,11 @@
 //! - [`sim`] — the architectural simulator: mapping, two-level pipelining,
 //!   power gating, per-layer latency/energy traces, GOPS / EPB.
 //! - [`baselines`] — analytic GPU / CPU / TPU / FPGA / ReRAM comparators.
+//! - [`fidelity`] — noise- and variation-aware accuracy proxy: a typed
+//!   [`fidelity::NoiseModel`] derived from the `photonics` constants, a
+//!   deterministic Monte Carlo driver over the mapped layers (SNR /
+//!   effective bits per layer), and the drift-budget calibration
+//!   schedule behind virtual-serve re-calibration outages.
 //! - [`dse`] — design-space exploration over `[N,K,L,M]` (Fig. 11).
 //! - `runtime` — PJRT client that loads the AOT HLO artifacts produced by
 //!   `python/compile/aot.py` and executes real GAN inference (requires the
@@ -98,6 +103,7 @@ pub mod arch;
 pub mod baselines;
 pub mod coordinator;
 pub mod dse;
+pub mod fidelity;
 pub mod metrics;
 pub mod models;
 pub mod photonics;

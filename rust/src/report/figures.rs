@@ -190,6 +190,66 @@ pub fn fig12(session: &Session) -> (Table, Vec<(String, Vec<f64>)>) {
     (t, out)
 }
 
+// ----------------------------------------------------- Fidelity Pareto
+
+/// Symbol-integration factors swept for the accuracy/throughput
+/// frontier (see [`crate::fidelity`]): ×0.25 … ×4 the converter-paced
+/// symbol time.
+pub const PARETO_INTEGRATIONS: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+
+/// Trials per Monte Carlo point — enough to stabilize the mean envelope
+/// while keeping a full 8-model report run cheap.
+const PARETO_TRIALS: usize = 16;
+
+/// Root seed for the exhibit (fixed, so the table is reproducible).
+const PARETO_SEED: u64 = 7;
+
+/// Accuracy-vs-throughput Pareto frontier (not a paper exhibit — the
+/// fidelity-engine counterpart of the §IV precision discussion): per
+/// model, per integration factor, delivered GOPS against the Monte Carlo
+/// accuracy proxy (MAC-weighted SNR / effective bits under the paper
+/// noise model). Longer integration collects more photons (higher SNR)
+/// at proportionally lower throughput, so each model traces a frontier.
+/// Returns `(table, rows)` with one `(model, integration, gops,
+/// effective_bits)` row per point.
+pub fn fidelity_pareto(session: &Session) -> (Table, Vec<(String, f64, f64, f64)>) {
+    use crate::fidelity::{MonteCarlo, NoiseModel};
+    let mut t = Table::new(vec![
+        "Model",
+        "integration",
+        "GOPS",
+        "SNR (dB)",
+        "eff bits",
+        "worst layer",
+    ])
+    .with_title(format!(
+        "Fidelity Pareto: symbol integration vs accuracy proxy \
+         ({PARETO_TRIALS} trials, seed {PARETO_SEED}, paper noise model)"
+    ));
+    let mut rows = Vec::new();
+    for m in session.models() {
+        for &f in &PARETO_INTEGRATIONS {
+            let mc = MonteCarlo {
+                noise: NoiseModel::paper(),
+                trials: PARETO_TRIALS,
+                integration: f,
+                seed: PARETO_SEED,
+            };
+            let fr = session.fidelity_report(m, 1, OptFlags::all(), &mc);
+            t.row(vec![
+                m.name.clone(),
+                format!("{f:.2}x"),
+                format!("{:.1}", fr.gops),
+                format!("{:.2}", fr.snr_db),
+                format!("{:.3}", fr.effective_bits),
+                format!("{:.3}", fr.min_effective_bits),
+            ]);
+            rows.push((m.name.clone(), f, fr.gops, fr.effective_bits));
+        }
+    }
+    (t, rows)
+}
+
 // ------------------------------------------------------------ Figs 13/14
 
 /// Per-model GOPS (Fig. 13) and EPB (Fig. 14) for PhotoGAN + all
@@ -336,6 +396,39 @@ mod tests {
         for (name, seq, ovl, dominant) in &rows {
             assert!(ovl < seq, "{name}: overlap must be faster");
             assert!(!dominant.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn fidelity_pareto_frontier_is_monotone_and_non_degenerate() {
+        let s = session();
+        let (t, rows) = fidelity_pareto(&s);
+        let n_models = s.models().len();
+        assert_eq!(rows.len(), n_models * PARETO_INTEGRATIONS.len());
+        assert_eq!(t.len(), rows.len());
+        for model in ["SRGAN", "CycleGAN"] {
+            let pts: Vec<&(String, f64, f64, f64)> =
+                rows.iter().filter(|r| r.0 == model).collect();
+            assert_eq!(pts.len(), PARETO_INTEGRATIONS.len(), "{model}");
+            for w in pts.windows(2) {
+                assert!(
+                    w[1].2 < w[0].2,
+                    "{model}: gops must fall with integration ({} -> {})",
+                    w[0].2,
+                    w[1].2
+                );
+                assert!(
+                    w[1].3 > w[0].3,
+                    "{model}: effective bits must rise with integration \
+                     ({} -> {})",
+                    w[0].3,
+                    w[1].3
+                );
+            }
+            // non-degenerate: the frontier spans a real accuracy range
+            let lo = pts.first().unwrap().3;
+            let hi = pts.last().unwrap().3;
+            assert!(hi - lo > 0.01, "{model}: frontier is flat ({lo} .. {hi})");
         }
     }
 

@@ -34,5 +34,6 @@ pub use arrival::{ArrivalError, ArrivalProcess};
 pub use generator::TrafficReport;
 pub use mix::{MixError, TrafficMix};
 pub use vserve::{
-    simulate_serve, ServiceModel, VirtualOutcome, VirtualServeConfig, VirtualShardLoad,
+    simulate_serve, CalibrationConfig, ServiceModel, VirtualOutcome, VirtualServeConfig,
+    VirtualShardLoad,
 };

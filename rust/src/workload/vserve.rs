@@ -18,6 +18,14 @@
 //! shard index, and all accounting is plain `f64` arithmetic. Running the
 //! same `(config, mix, arrival, seed)` twice yields byte-identical
 //! outcomes.
+//!
+//! An optional [`CalibrationConfig`] injects the fidelity layer's drift
+//! dynamics ([`crate::fidelity::calibration`]): each shard periodically
+//! goes down for a re-calibration outage, during which its in-flight
+//! batches finish but nothing new dispatches. Arrivals still enqueue (and
+//! the bounded queue still rejects), so the run surfaces the
+//! tail-latency/availability cost of drift and how routing/admission
+//! absorb shards going offline.
 
 use super::arrival::ArrivalProcess;
 use super::mix::TrafficMix;
@@ -38,6 +46,29 @@ pub trait ServiceModel {
     fn batch_latency_s(&self, model: &str, batch: usize) -> f64;
 }
 
+/// Periodic per-shard re-calibration outages (virtual seconds).
+///
+/// Models the fidelity layer's drift budget: a shard serves for
+/// `interval_s`, then goes offline for `outage_s` to re-lock its MR
+/// banks and re-program PCM weights. Shard start times are staggered
+/// across the interval so the fleet never calibrates all at once.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationConfig {
+    /// Virtual seconds of serving between outages (must be positive).
+    pub interval_s: f64,
+    /// Virtual seconds a shard is down per outage (must be `>= 0`).
+    pub outage_s: f64,
+}
+
+impl CalibrationConfig {
+    /// Derive the schedule from a physics-grounded
+    /// [`CalibrationModel`][crate::fidelity::CalibrationModel] for a
+    /// shard that re-calibrates `banks` MR banks per outage.
+    pub fn from_model(model: &crate::fidelity::CalibrationModel, banks: usize) -> Self {
+        CalibrationConfig { interval_s: model.interval_s(), outage_s: model.outage_s(banks) }
+    }
+}
+
 /// Virtual serving fleet shape — the deterministic mirror of
 /// [`crate::coordinator::ServerConfig`].
 #[derive(Debug, Clone, PartialEq)]
@@ -55,6 +86,9 @@ pub struct VirtualServeConfig {
     pub queue_depth: usize,
     /// How arrivals pick a shard.
     pub routing: RoutingPolicy,
+    /// Periodic re-calibration outages; `None` (the default) keeps the
+    /// pre-fidelity behavior byte-identical.
+    pub calibration: Option<CalibrationConfig>,
 }
 
 impl Default for VirtualServeConfig {
@@ -66,6 +100,7 @@ impl Default for VirtualServeConfig {
             max_wait_s: 5e-4,
             queue_depth: 1024,
             routing: RoutingPolicy::RoundRobin,
+            calibration: None,
         }
     }
 }
@@ -80,6 +115,11 @@ pub struct VirtualShardLoad {
     pub busy_s: f64,
     /// `busy_s / (workers × makespan)` — mean worker occupancy.
     pub utilization: f64,
+    /// Re-calibration outages this shard took within the makespan.
+    pub outages: u64,
+    /// Virtual seconds this shard was down for re-calibration (clipped
+    /// to the makespan).
+    pub downtime_s: f64,
 }
 
 /// Deterministic outcome of a virtual serving run.
@@ -101,6 +141,13 @@ pub struct VirtualOutcome {
     /// Admitted requests per mix model, in mix declaration order.
     pub per_model: Vec<(String, u64)>,
     pub per_shard: Vec<VirtualShardLoad>,
+    /// Re-calibration outages across all shards (within the makespan).
+    pub outages: u64,
+    /// Total shard-seconds of re-calibration downtime.
+    pub downtime_s: f64,
+    /// `1 − downtime / (shards × makespan)` — fraction of fleet
+    /// capacity that was up (1.0 without calibration).
+    pub availability: f64,
 }
 
 impl VirtualOutcome {
@@ -155,6 +202,10 @@ enum EventKind {
     WorkerFree { shard: usize, release: usize },
     /// A shard's oldest pending request reached `max_wait_s`.
     Deadline { shard: usize },
+    /// A shard's drift budget is spent: it goes down for re-calibration.
+    CalibrationStart { shard: usize },
+    /// A shard finished re-calibrating and resumes dispatching.
+    CalibrationEnd { shard: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -202,6 +253,8 @@ struct Shard {
     outstanding: usize,
     requests: u64,
     busy_s: f64,
+    /// Down for re-calibration until this virtual time (0.0 = up).
+    down_until: f64,
 }
 
 struct Dispatcher<'a, C: ServiceModel> {
@@ -230,6 +283,12 @@ impl<'a, C: ServiceModel> Dispatcher<'a, C> {
     /// `now`; schedules the deadline/worker-free events that guarantee
     /// progress for anything left pending.
     fn try_dispatch(&mut self, shard_idx: usize, sh: &mut Shard, now: f64) {
+        // a shard that is down for re-calibration dispatches nothing;
+        // the CalibrationEnd event re-runs dispatch, so pending heads
+        // cannot starve
+        if now < sh.down_until {
+            return;
+        }
         loop {
             // idle worker with the earliest free-at (ties → lowest index)
             let mut worker: Option<(usize, f64)> = None;
@@ -345,6 +404,16 @@ pub fn simulate_serve<C: ServiceModel>(
         cfg.max_wait_s.is_finite() && cfg.max_wait_s >= 0.0,
         "max_wait must be finite and >= 0"
     );
+    if let Some(cal) = cfg.calibration {
+        assert!(
+            cal.interval_s.is_finite() && cal.interval_s > 0.0,
+            "calibration interval must be finite and positive"
+        );
+        assert!(
+            cal.outage_s.is_finite() && cal.outage_s >= 0.0,
+            "calibration outage must be finite and >= 0"
+        );
+    }
 
     let root = Pcg32::new(seed);
     let names = mix.models();
@@ -356,8 +425,10 @@ pub fn simulate_serve<C: ServiceModel>(
             outstanding: 0,
             requests: 0,
             busy_s: 0.0,
+            down_until: 0.0,
         })
         .collect();
+    let mut outage_windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); cfg.shards];
 
     let mut d = Dispatcher {
         cfg,
@@ -374,6 +445,14 @@ pub fn simulate_serve<C: ServiceModel>(
     };
 
     // seed the event stream
+    if let Some(cal) = cfg.calibration {
+        for s in 0..cfg.shards {
+            // stagger the first outage across the interval so the fleet
+            // never calibrates all at once
+            let offset = cal.interval_s * s as f64 / cfg.shards as f64;
+            d.push(cal.interval_s + offset, EventKind::CalibrationStart { shard: s });
+        }
+    }
     let mut client_rngs: Vec<Pcg32> = Vec::new();
     let mut client_remaining: Vec<usize> = Vec::new();
     match arrival.schedule(&mut root.fork(0)) {
@@ -450,6 +529,35 @@ pub fn simulate_serve<C: ServiceModel>(
                 let sh = &mut shards[shard];
                 d.try_dispatch(shard, sh, now);
             }
+            EventKind::CalibrationStart { shard } => {
+                if let Some(cal) = cfg.calibration {
+                    // the calibration cycle re-arms itself only while
+                    // traffic is still live (requests in flight, or any
+                    // non-calibration event still queued) — otherwise
+                    // the cycle would keep the event loop alive forever
+                    let live = shards.iter().any(|sh| sh.outstanding > 0)
+                        || d.heap.iter().any(|e| {
+                            !matches!(
+                                e.kind,
+                                EventKind::CalibrationStart { .. }
+                                    | EventKind::CalibrationEnd { .. }
+                            )
+                        });
+                    if live {
+                        let end = now + cal.outage_s;
+                        shards[shard].down_until = end;
+                        outage_windows[shard].push((now, end));
+                        d.push(end, EventKind::CalibrationEnd { shard });
+                    }
+                }
+            }
+            EventKind::CalibrationEnd { shard } => {
+                if let Some(cal) = cfg.calibration {
+                    let sh = &mut shards[shard];
+                    d.try_dispatch(shard, sh, now);
+                    d.push(now + cal.interval_s, EventKind::CalibrationStart { shard });
+                }
+            }
         }
         // wake closed-loop clients whose requests just completed
         let wakeups = std::mem::take(&mut d.completions);
@@ -465,20 +573,45 @@ pub fn simulate_serve<C: ServiceModel>(
     let admitted = latencies_ms.len();
     debug_assert_eq!(offered, admitted + rejected, "request conservation");
     let makespan_s = d.makespan;
-    let per_shard = shards
+    let mut outages = 0u64;
+    let mut downtime_s = 0.0;
+    let per_shard: Vec<VirtualShardLoad> = shards
         .iter()
         .enumerate()
-        .map(|(i, sh)| VirtualShardLoad {
-            shard: i,
-            requests: sh.requests,
-            busy_s: sh.busy_s,
-            utilization: if makespan_s > 0.0 {
-                sh.busy_s / (cfg.workers as f64 * makespan_s)
-            } else {
-                0.0
-            },
+        .map(|(i, sh)| {
+            // count only the downtime the workload actually saw: windows
+            // clipped to the makespan (post-traffic calibration noise is
+            // not an availability cost)
+            let mut shard_outages = 0u64;
+            let mut shard_down = 0.0;
+            for &(start, end) in &outage_windows[i] {
+                if start >= makespan_s {
+                    continue;
+                }
+                shard_outages += 1;
+                shard_down += end.min(makespan_s) - start;
+            }
+            outages += shard_outages;
+            downtime_s += shard_down;
+            VirtualShardLoad {
+                shard: i,
+                requests: sh.requests,
+                busy_s: sh.busy_s,
+                utilization: if makespan_s > 0.0 {
+                    sh.busy_s / (cfg.workers as f64 * makespan_s)
+                } else {
+                    0.0
+                },
+                outages: shard_outages,
+                downtime_s: shard_down,
+            }
         })
         .collect();
+    let availability = if makespan_s > 0.0 {
+        1.0 - downtime_s / (cfg.shards as f64 * makespan_s)
+    } else {
+        1.0
+    };
     let mean_batch = if d.batches > 0 {
         d.batch_samples as f64 / d.batches as f64
     } else {
@@ -495,6 +628,9 @@ pub fn simulate_serve<C: ServiceModel>(
         // cloned, not moved: the dispatcher still borrows `names`
         per_model: names.iter().cloned().zip(d.per_model.clone()).collect(),
         per_shard,
+        outages,
+        downtime_s,
+        availability,
     }
 }
 
@@ -596,6 +732,7 @@ mod tests {
             max_wait_s: 0.0,
             queue_depth: 2,
             routing: RoutingPolicy::RoundRobin,
+            calibration: None,
         };
         // service is 10x slower than the arrival gap: the queue must shed
         let arrival = ArrivalProcess::Poisson { rate_hz: 1_000.0, duration_s: 0.1 };
@@ -615,6 +752,7 @@ mod tests {
             max_wait_s: 1e-3,
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
+            calibration: None,
         };
         let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0; 8] };
         let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-4), 1);
@@ -661,6 +799,7 @@ mod tests {
             max_wait_s: 0.0,
             queue_depth: 1024,
             routing: RoutingPolicy::LeastOutstanding,
+            calibration: None,
         };
         let arrival = ArrivalProcess::Poisson { rate_hz: 5_000.0, duration_s: 0.05 };
         let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 5);
@@ -678,6 +817,7 @@ mod tests {
             max_wait_s: 1e-3,
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
+            calibration: None,
         };
         let names = vec!["cold".to_string(), "hot".to_string()];
         let cost = FlatCost(1e-3);
@@ -700,6 +840,7 @@ mod tests {
             outstanding: 5,
             requests: 5,
             busy_s: 0.0,
+            down_until: 0.0,
         };
         sh.pending[0].push_back(Req { arrival: 0.0, client: None });
         for _ in 0..4 {
@@ -727,6 +868,7 @@ mod tests {
             max_wait_s: 1e-2,
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
+            calibration: None,
         };
         let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0; 8] };
         let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-4), 2);
@@ -749,5 +891,89 @@ mod tests {
             assert!((0.0..=1.0 + 1e-9).contains(&s.utilization), "{s:?}");
         }
         assert!(out.reject_fraction() >= 0.0);
+    }
+
+    #[test]
+    fn no_calibration_reports_full_availability() {
+        let cfg = VirtualServeConfig::default();
+        let arrival = ArrivalProcess::Poisson { rate_hz: 2_000.0, duration_s: 0.05 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-4), 17);
+        assert_eq!(out.outages, 0);
+        assert_eq!(out.downtime_s, 0.0);
+        assert_eq!(out.availability, 1.0);
+        assert!(out.per_shard.iter().all(|s| s.outages == 0 && s.downtime_s == 0.0));
+    }
+
+    #[test]
+    fn calibration_outages_cost_availability_and_tail_latency() {
+        let base = VirtualServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 4,
+            max_wait_s: 1e-4,
+            queue_depth: 256,
+            routing: RoutingPolicy::LeastOutstanding,
+            calibration: None,
+        };
+        let with_cal = VirtualServeConfig {
+            calibration: Some(CalibrationConfig { interval_s: 2e-2, outage_s: 1e-2 }),
+            ..base.clone()
+        };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 3_000.0, duration_s: 0.2 };
+        let quiet = simulate_serve(&base, &mix_ab(), &arrival, &FlatCost(2e-4), 23);
+        let noisy = simulate_serve(&with_cal, &mix_ab(), &arrival, &FlatCost(2e-4), 23);
+        // run twice: the calibration cycle must stay bit-deterministic
+        assert_eq!(noisy, simulate_serve(&with_cal, &mix_ab(), &arrival, &FlatCost(2e-4), 23));
+        assert!(noisy.outages > 0, "{noisy:?}");
+        assert!(noisy.downtime_s > 0.0);
+        assert!(noisy.availability < 1.0, "availability {}", noisy.availability);
+        assert!(noisy.availability > 0.0);
+        assert_eq!(
+            noisy.per_shard.iter().map(|s| s.outages).sum::<u64>(),
+            noisy.outages
+        );
+        // every admitted request still completes (conservation holds)
+        assert_eq!(noisy.offered, noisy.admitted + noisy.rejected);
+        // the outages must be visible in the tail, not hidden
+        assert!(
+            noisy.latency_percentile_ms(99.0) > quiet.latency_percentile_ms(99.0),
+            "p99 with outages {} must exceed p99 without {}",
+            noisy.latency_percentile_ms(99.0),
+            quiet.latency_percentile_ms(99.0)
+        );
+    }
+
+    #[test]
+    fn in_flight_batches_finish_through_an_outage() {
+        // one shard, one worker: a long batch is in flight when the
+        // outage starts; it must complete, and the queued head must
+        // dispatch at calibration end rather than starve
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            queue_depth: 64,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: Some(CalibrationConfig { interval_s: 5e-3, outage_s: 2e-3 }),
+        };
+        let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0, 4.9e-3, 5.5e-3] };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-3), 1);
+        assert_eq!(out.admitted, 3, "{out:?}");
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.outages, 1);
+        // the request that arrived mid-outage waited for calibration end
+        let worst = out.latencies_ms.last().copied().unwrap_or(0.0);
+        assert!(worst >= 1.0, "a mid-outage arrival must absorb the outage: {out:?}");
+    }
+
+    #[test]
+    fn calibration_config_derives_from_the_fidelity_model() {
+        use crate::fidelity::{CalibrationModel, NoiseModel};
+        let model = CalibrationModel::from_noise(&NoiseModel::paper());
+        let cfg = CalibrationConfig::from_model(&model, 16);
+        assert_eq!(cfg.interval_s, model.interval_s());
+        assert_eq!(cfg.outage_s, model.outage_s(16));
+        assert!(cfg.interval_s > 0.0 && cfg.outage_s > 0.0);
     }
 }

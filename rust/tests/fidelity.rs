@@ -1,0 +1,139 @@
+//! Fidelity-engine contract tests (the tier-1 face of `fidelity/`):
+//!
+//! - **Ideal neutrality**: `NoiseModel::ideal()` must be a pure
+//!   pass-through — for every golden combo (8 models × 4 flag sets) the
+//!   fidelity path reports exactly the simulator's latency/energy/GOPS,
+//!   full converter precision, and leaves the `SimReport` JSON untouched
+//!   bit-for-bit. This is what lets the golden-trace suite stay green
+//!   with the fidelity engine in the tree.
+//! - **Determinism**: same-seed Monte Carlo envelopes are byte-identical
+//!   JSON; a different seed moves the envelope.
+//! - **Physics sanity**: more thermal drift ⇒ strictly fewer effective
+//!   bits; longer symbol integration ⇒ strictly more bits at strictly
+//!   less throughput (the Pareto frontier is non-degenerate).
+
+use photogan::api::Session;
+use photogan::fidelity::{evaluate, MonteCarlo, NoiseModel};
+use photogan::models::zoo;
+use photogan::report;
+use photogan::sim::OptFlags;
+
+#[test]
+fn ideal_noise_is_a_bit_exact_pass_through_for_every_golden_combo() {
+    let session = Session::new().expect("paper optimum config is valid");
+    let mc = MonteCarlo {
+        noise: NoiseModel::ideal(),
+        trials: 4,
+        integration: 1.0,
+        seed: 0,
+    };
+    let cap_bits = mc.noise.quantization_bits as f64;
+    let cap_db = mc.noise.snr_cap_db();
+
+    for model in zoo::extended_generators() {
+        for (combo, flags) in OptFlags::golden_sweep() {
+            let report = session.sim_report(&model, 1, flags);
+            let before = report.json().render();
+
+            let fr = session.fidelity_report(&model, 1, flags, &mc);
+
+            // the fidelity pass reads the report; it must not perturb it
+            let after = session.sim_report(&model, 1, flags).json().render();
+            assert_eq!(before, after, "{}/{combo}: SimReport JSON drifted", model.name);
+
+            assert_eq!(fr.latency_s, report.latency, "{}/{combo}: latency", model.name);
+            assert_eq!(fr.energy_j, report.energy.total(), "{}/{combo}: energy", model.name);
+            assert_eq!(fr.gops, report.gops(), "{}/{combo}: gops", model.name);
+            // SNR/bits go through trial averaging and the ENOB formula,
+            // so "exactly the cap" means up-to-rounding, not bit-equal
+            assert!(
+                (fr.snr_db - cap_db).abs() < 1e-9,
+                "{}/{combo}: ideal SNR must sit at the cap, got {}",
+                model.name,
+                fr.snr_db
+            );
+            assert!(
+                (fr.effective_bits - cap_bits).abs() < 1e-9,
+                "{}/{combo}: ideal bits, got {}",
+                model.name,
+                fr.effective_bits
+            );
+            assert!(
+                (fr.min_effective_bits - cap_bits).abs() < 1e-9,
+                "{}/{combo}: worst layer, got {}",
+                model.name,
+                fr.min_effective_bits
+            );
+            for layer in &fr.layers {
+                assert!((layer.effective_bits - cap_bits).abs() < 1e-9);
+                assert!((layer.snr_db - cap_db).abs() < 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn same_seed_monte_carlo_envelopes_are_byte_identical() {
+    let session = Session::new().expect("paper optimum config is valid");
+    let model = zoo::cyclegan();
+    let mc = MonteCarlo { noise: NoiseModel::paper(), trials: 16, integration: 1.0, seed: 42 };
+
+    let a = session.fidelity_report(&model, 1, OptFlags::all(), &mc).json().render();
+    let b = session.fidelity_report(&model, 1, OptFlags::all(), &mc).json().render();
+    assert_eq!(a, b, "same seed must reproduce the envelope byte-for-byte");
+
+    // the seed is live: a different fork lineage moves the envelope
+    let other = MonteCarlo { seed: 43, ..mc.clone() };
+    let c = session.fidelity_report(&model, 1, OptFlags::all(), &other).json().render();
+    assert_ne!(a, c, "different seeds must draw different noise");
+
+    // and the standalone evaluate() entry point agrees with the session path
+    let jobs = session.mapped(&model, 1, OptFlags::all());
+    let report = session.sim_report(&model, 1, OptFlags::all());
+    let d = evaluate(&mc, &jobs, &report).json().render();
+    assert_eq!(a, d, "Session::fidelity_report must be evaluate() verbatim");
+}
+
+#[test]
+fn effective_bits_degrade_monotonically_with_drift_magnitude() {
+    let session = Session::new().expect("paper optimum config is valid");
+    let model = zoo::dcgan();
+    let mut last = f64::INFINITY;
+    for scale in [0.5, 1.0, 2.0, 4.0] {
+        let mut noise = NoiseModel::paper();
+        noise.drift_linewidths_per_s *= scale;
+        let mc = MonteCarlo { noise, trials: 16, integration: 1.0, seed: 9 };
+        let fr = session.fidelity_report(&model, 1, OptFlags::all(), &mc);
+        assert!(
+            fr.effective_bits < last,
+            "drift x{scale}: {} bits must be below {last}",
+            fr.effective_bits
+        );
+        assert!(fr.effective_bits > 0.0, "drift x{scale}: bits must stay positive");
+        last = fr.effective_bits;
+    }
+}
+
+#[test]
+fn pareto_frontier_trades_throughput_for_accuracy() {
+    let session = Session::new().expect("paper optimum config is valid");
+    let (_, rows) = report::fidelity_pareto(&session);
+    assert_eq!(
+        rows.len(),
+        session.models().len() * report::PARETO_INTEGRATIONS.len(),
+        "one Pareto point per model per integration setting"
+    );
+    for want in ["SRGAN", "CycleGAN"] {
+        let pts: Vec<_> = rows.iter().filter(|(m, _, _, _)| m == want).collect();
+        assert_eq!(pts.len(), report::PARETO_INTEGRATIONS.len());
+        for pair in pts.windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            assert!(b.1 > a.1, "{want}: rows ordered by integration");
+            assert!(b.2 < a.2, "{want}: longer symbols must cost throughput");
+            assert!(b.3 > a.3, "{want}: longer symbols must buy accuracy");
+        }
+        let lo = pts.first().expect("non-empty").3;
+        let hi = pts.last().expect("non-empty").3;
+        assert!(hi - lo > 0.01, "{want}: frontier must be non-degenerate ({lo}..{hi})");
+    }
+}

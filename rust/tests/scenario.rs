@@ -4,7 +4,7 @@
 //! (`parse → plan → run → to_json` must be byte-identical for one seed).
 
 use photogan::api::scenario::{
-    CompareStage, Scenario, ServeEngine, ServeStage, SimStage, StageSpec,
+    CalibrationSpec, CompareStage, Scenario, ServeEngine, ServeStage, SimStage, StageSpec,
 };
 use photogan::api::{ApiError, Outcome, Session, SimRequest};
 use photogan::sim::OptFlags;
@@ -314,9 +314,11 @@ fn virtual_serve_requires_mix_and_arrival() {
 
 #[test]
 fn checked_in_starter_scenarios_plan_and_run() {
-    for (file, min_stages) in
-        [("mixed_zoo.json", 2usize), ("closed_loop_burst.json", 2usize)]
-    {
+    for (file, min_stages) in [
+        ("mixed_zoo.json", 2usize),
+        ("closed_loop_burst.json", 2usize),
+        ("noisy_fleet.json", 1usize),
+    ] {
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("examples/scenarios")
             .join(file);
@@ -331,6 +333,67 @@ fn checked_in_starter_scenarios_plan_and_run() {
         let again = session.run(&plan).expect(file);
         assert_eq!(outcome.to_json(), again.to_json(), "{file} must be deterministic");
     }
+}
+
+#[test]
+fn calibration_outages_shape_availability_and_the_envelope() {
+    // the same fleet with and without the calibration process model: the
+    // outages must be visible in availability, downtime, and the JSON
+    let scenario = Scenario::from_json(MIXED).expect("parse");
+    let mut calibrated = scenario.clone();
+    let StageSpec::Serve(serve) = &mut calibrated.stages[1] else {
+        panic!("stage 1 must be the serve stage");
+    };
+    // 50 ms of traffic with a 5 ms re-lock cadence: ~9 outages per shard
+    serve.calibration = Some(CalibrationSpec { interval_ms: 5.0, outage_ms: 1.0 });
+
+    let session = session();
+    let run = |s: &Scenario| {
+        let plan = session.plan(s).expect("plan");
+        session.run(&plan).expect("run")
+    };
+    let baseline = run(&scenario);
+    let noisy = run(&calibrated);
+
+    let workload = |o: &photogan::api::ScenarioOutcome| match &o.stages[1].outcome {
+        Outcome::Workload(w) => w.clone(),
+        other => panic!("expected a virtual serve outcome, got {other:?}"),
+    };
+    let (base, cal) = (workload(&baseline), workload(&noisy));
+    assert_eq!(base.outages, 0, "no calibration knob → no outages");
+    assert_eq!(base.availability, 1.0);
+    assert!(cal.outages > 0, "the re-lock cadence must actually fire");
+    assert!(cal.downtime_s > 0.0);
+    assert!(cal.availability < 1.0, "downtime must dent availability");
+    assert!(cal.availability > 0.0, "but outages are brief, not total");
+    // same seed, same traffic: any envelope difference is the outage model
+    assert_ne!(
+        noisy.to_json(),
+        baseline.to_json(),
+        "the calibration knob must measurably move the serve envelope"
+    );
+    assert!(noisy.to_json().contains("\"availability\""));
+    assert!(noisy.to_json().contains("\"outages\""));
+}
+
+#[test]
+fn threaded_serve_stage_rejects_the_calibration_knob() {
+    let stage = ServeStage {
+        engine: ServeEngine::Threaded,
+        model: Some("dcgan".into()),
+        requests: 1,
+        time_scale: 0.0,
+        calibration: Some(CalibrationSpec { interval_ms: 10.0, outage_ms: 1.0 }),
+        ..ServeStage::default()
+    };
+    let err = session()
+        .plan(&Scenario::single("bad", StageSpec::Serve(stage)))
+        .unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].calibration"),
+        "{err:?}"
+    );
 }
 
 #[test]
