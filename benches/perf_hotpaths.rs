@@ -8,7 +8,7 @@
 mod common;
 
 use common::{ms, time_it};
-use photogan::api::{ServeRequest, Session};
+use photogan::api::{ServeCore, ServeRequest, Session};
 use photogan::arch::accelerator::Accelerator;
 use photogan::arch::config::ArchConfig;
 use photogan::coordinator::batcher::{BatchPolicy, Batcher};
@@ -145,6 +145,7 @@ fn main() {
         queue_depth: 4096,
         routing: RoutingPolicy::LeastOutstanding,
         calibration: None,
+        deadline_s: None,
     };
     let mix = TrafficMix::new(vec![("m".to_string(), 1.0)]).unwrap();
     let arrival = ArrivalProcess::Poisson { rate_hz: 50_000.0, duration_s: 0.5 };
@@ -176,6 +177,22 @@ fn main() {
         served.requests, served.wall_s, served.throughput_img_s, served.p99_ms
     );
     metrics.push(("threaded_serve_req_per_s", served.throughput_img_s));
+
+    // --- async serve (continuous batching, same shape) ----------------------
+    let req = ServeRequest::builder()
+        .core(ServeCore::Async)
+        .requests(128)
+        .shards(2)
+        .routing(RoutingPolicy::LeastOutstanding)
+        .time_scale(0.0)
+        .build()
+        .unwrap();
+    let served = Arc::clone(&session).serve(&req).expect("async sim-backed serve");
+    println!(
+        "async serve          {} req in {:.3}s = {:.0} req/s (p99 {:.2} ms)",
+        served.requests, served.wall_s, served.throughput_img_s, served.p99_ms
+    );
+    metrics.push(("async_serve_req_per_s", served.throughput_img_s));
 
     // --- machine-readable summary -------------------------------------------
     let doc = obj(metrics.into_iter().map(|(k, v)| (k, JsonValue::Num(v))).collect());

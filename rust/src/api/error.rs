@@ -46,6 +46,11 @@ pub enum ApiError {
     /// bounded queue is full and nothing was in flight to drain —
     /// typed backpressure instead of unbounded queuing.
     Backpressure { shard: usize, outstanding: usize, limit: usize },
+    /// A serving submission was refused by SLO-aware admission control:
+    /// the routed shard's predicted queueing delay exceeds the request
+    /// deadline (async core only — see
+    /// [`crate::api::ServeRequestBuilder::deadline`]).
+    Shed { shard: usize, predicted_ms: u64, deadline_ms: u64 },
     /// A scenario file could not be read (the `photogan run` front door).
     ScenarioIo { path: String, reason: String },
     /// A scenario document is structurally malformed: bad JSON, a missing
@@ -95,6 +100,13 @@ impl fmt::Display for ApiError {
                     f,
                     "backpressure: shard {shard} queue is full \
                      ({outstanding}/{limit} samples outstanding)"
+                )
+            }
+            ApiError::Shed { shard, predicted_ms, deadline_ms } => {
+                write!(
+                    f,
+                    "shed: shard {shard} predicted {predicted_ms}ms queueing delay \
+                     against a {deadline_ms}ms deadline"
                 )
             }
             ApiError::ScenarioIo { path, reason } => {
@@ -180,6 +192,9 @@ impl From<SubmitError> for ApiError {
             SubmitError::QueueFull { shard, outstanding, limit } => {
                 ApiError::Backpressure { shard, outstanding, limit }
             }
+            SubmitError::Shed { shard, predicted_ms, deadline_ms, .. } => {
+                ApiError::Shed { shard, predicted_ms, deadline_ms }
+            }
             SubmitError::Shutdown => {
                 ApiError::Internal("serving coordinator is shut down".into())
             }
@@ -196,6 +211,7 @@ impl ApiError {
             ApiError::ArtifactError(_)
             | ApiError::Internal(_)
             | ApiError::Backpressure { .. }
+            | ApiError::Shed { .. }
             | ApiError::ScenarioIo { .. } => 1,
             _ => 2,
         }
@@ -221,6 +237,7 @@ mod tests {
             ApiError::InvalidShards(0),
             ApiError::InvalidTimeScale(-1.0),
             ApiError::Backpressure { shard: 2, outstanding: 64, limit: 64 },
+            ApiError::Shed { shard: 1, predicted_ms: 40, deadline_ms: 25 },
             ApiError::ScenarioIo { path: "x.json".into(), reason: "no such file".into() },
             ApiError::ScenarioParse { field: "stages[0].kind".into(), reason: "bad".into() },
             ApiError::InvalidMixWeight {
@@ -285,6 +302,15 @@ mod tests {
         assert!(matches!(e, ApiError::UnknownModel { ref name, .. } if name == "gan5"));
         let e: ApiError = SubmitError::Shutdown.into();
         assert!(matches!(e, ApiError::Internal(_)));
+        let e: ApiError = SubmitError::Shed {
+            shard: 3,
+            outstanding: 17,
+            predicted_ms: 40,
+            deadline_ms: 25,
+        }
+        .into();
+        assert_eq!(e, ApiError::Shed { shard: 3, predicted_ms: 40, deadline_ms: 25 });
+        assert_eq!(e.exit_code(), 1, "a shed is a runtime overload signal, like backpressure");
     }
 
     #[test]

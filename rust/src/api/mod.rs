@@ -88,5 +88,5 @@ pub use scenario::{
     ScenarioOutcome, ServeEngine, ServeStage, SimStage, SloCheck, SloSpec, SloVerdict,
     StageOutcome, StageSpec,
 };
-pub use serve::{ServeBackend, ServeRequest, ServeRequestBuilder};
+pub use serve::{ServeBackend, ServeCore, ServeRequest, ServeRequestBuilder};
 pub use session::Session;

@@ -479,6 +479,8 @@ impl CompareOutcome {
 pub struct ServeOutcome {
     /// Backend name (`"sim"` or `"pjrt"`).
     pub backend: String,
+    /// Serving core name (`"threaded"` or `"async"`).
+    pub core: String,
     pub model: String,
     pub shards: usize,
     /// Routing policy name (e.g. `"round-robin"`).
@@ -486,6 +488,9 @@ pub struct ServeOutcome {
     pub requests: usize,
     /// Shard-queue-full rejections the driver absorbed by draining.
     pub rejections: u64,
+    /// Requests refused by SLO-aware admission control (async core only;
+    /// the driver moves on instead of retrying a shed request).
+    pub sheds: u64,
     pub wall_s: f64,
     pub throughput_img_s: f64,
     /// Client-observed end-to-end latency percentiles (ms).
@@ -506,9 +511,10 @@ pub struct ServeOutcome {
 impl ServeOutcome {
     pub fn to_table(&self) -> Table {
         let mut t = Table::new(vec!["scope", "summary"]).with_title(format!(
-            "serve[{}] model={} shards={} routing={}: {} req in {:.2}s \
+            "serve[{}/{}] model={} shards={} routing={}: {} req in {:.2}s \
              ({:.1} img/s) p50={:.2}ms p95={:.2}ms p99={:.2}ms",
             self.backend,
+            self.core,
             self.model,
             self.shards,
             self.routing,
@@ -519,6 +525,12 @@ impl ServeOutcome {
             self.p95_ms,
             self.p99_ms,
         ));
+        if self.sheds > 0 {
+            t.row(vec![
+                "admission".into(),
+                format!("{} requests shed by SLO admission control", self.sheds),
+            ]);
+        }
         if self.dropped_samples > 0 {
             t.row(vec![
                 "histograms".into(),
@@ -542,11 +554,13 @@ impl ServeOutcome {
         obj(vec![
             ("command", JsonValue::Str("serve".into())),
             ("backend", JsonValue::Str(self.backend.clone())),
+            ("core", JsonValue::Str(self.core.clone())),
             ("model", JsonValue::Str(self.model.clone())),
             ("shards", JsonValue::Num(self.shards as f64)),
             ("routing", JsonValue::Str(self.routing.clone())),
             ("requests", JsonValue::Num(self.requests as f64)),
             ("rejections", JsonValue::Num(self.rejections as f64)),
+            ("sheds", JsonValue::Num(self.sheds as f64)),
             ("wall_s", JsonValue::Num(self.wall_s)),
             ("throughput_img_s", JsonValue::Num(self.throughput_img_s)),
             ("p50_ms", JsonValue::Num(self.p50_ms)),
@@ -579,6 +593,30 @@ impl ServeOutcome {
     pub fn to_json(&self) -> String {
         self.json().render()
     }
+
+    /// The run-to-run deterministic subset of [`ServeOutcome::json`]:
+    /// counts and identity only, no wall-clock-derived quantity (latency
+    /// percentiles, throughput, per-model summary strings). Two runs with
+    /// the same seed, the same shape, and no SLO deadline render
+    /// byte-identical `stable_json` — CI diffs it with `cmp` to catch
+    /// nondeterminism in the submission path.
+    pub fn stable_json(&self) -> String {
+        obj(vec![
+            ("command", JsonValue::Str("serve".into())),
+            ("backend", JsonValue::Str(self.backend.clone())),
+            ("core", JsonValue::Str(self.core.clone())),
+            ("model", JsonValue::Str(self.model.clone())),
+            ("shards", JsonValue::Num(self.shards as f64)),
+            ("routing", JsonValue::Str(self.routing.clone())),
+            ("requests", JsonValue::Num(self.requests as f64)),
+            ("rejections", JsonValue::Num(self.rejections as f64)),
+            ("sheds", JsonValue::Num(self.sheds as f64)),
+            ("total_requests", JsonValue::Num(self.total_requests as f64)),
+            ("total_samples", JsonValue::Num(self.total_samples as f64)),
+            ("dropped_samples", JsonValue::Num(self.dropped_samples as f64)),
+        ])
+        .render()
+    }
 }
 
 /// Outcome of a virtual-time serve stage (the deterministic scenario
@@ -605,6 +643,9 @@ pub struct WorkloadOutcome {
     pub offered: usize,
     pub admitted: usize,
     pub rejected: usize,
+    /// Requests refused by the deterministic SLO admission-control mirror
+    /// (0 unless the stage sets a deadline).
+    pub shed: usize,
     /// Virtual seconds from stream start to the last completion.
     pub makespan_s: f64,
     /// Admitted requests per virtual second.
@@ -651,6 +692,12 @@ impl WorkloadOutcome {
             self.p99_ms,
             self.mean_batch,
         ));
+        if self.shed > 0 {
+            t.row(vec![
+                "admission".into(),
+                format!("{} requests shed by the SLO deadline model", self.shed),
+            ]);
+        }
         if self.outages > 0 {
             t.row(vec![
                 "calibration".into(),
@@ -707,6 +754,7 @@ impl WorkloadOutcome {
             ("offered", JsonValue::Num(self.offered as f64)),
             ("admitted", JsonValue::Num(self.admitted as f64)),
             ("rejected", JsonValue::Num(self.rejected as f64)),
+            ("shed", JsonValue::Num(self.shed as f64)),
             ("makespan_s", JsonValue::Num(self.makespan_s)),
             ("throughput_rps", JsonValue::Num(self.throughput_rps)),
             ("mean_ms", JsonValue::Num(self.mean_ms)),

@@ -62,7 +62,7 @@
 use super::error::ApiError;
 use super::outcome::{Outcome, ReportOutcome, SimOutcome, SweepOutcome, WorkloadOutcome};
 use super::request::{SimRequest, SweepRequest};
-use super::serve::{ServeBackend, ServeRequest};
+use super::serve::{ServeBackend, ServeCore, ServeRequest};
 use super::session::Session;
 use crate::arch::config::ArchConfig;
 use crate::coordinator::RoutingPolicy;
@@ -190,6 +190,10 @@ pub enum ServeEngine {
     /// The real threaded coordinator via [`Session::serve`] (wall-clock
     /// timing; what `photogan serve` compiles to).
     Threaded,
+    /// The real async continuous-batching coordinator
+    /// ([`crate::coordinator::AsyncServer`]) via the same driver —
+    /// wall-clock timing, and the only engine that honors `deadline_ms`.
+    Async,
 }
 
 impl ServeEngine {
@@ -197,6 +201,7 @@ impl ServeEngine {
         match self {
             ServeEngine::Virtual => "virtual",
             ServeEngine::Threaded => "threaded",
+            ServeEngine::Async => "async",
         }
     }
 }
@@ -214,7 +219,10 @@ impl FromStr for ServeEngine {
         match s.to_ascii_lowercase().as_str() {
             "virtual" => Ok(ServeEngine::Virtual),
             "threaded" => Ok(ServeEngine::Threaded),
-            other => Err(format!("unknown engine '{other}' (expected virtual or threaded)")),
+            "async" => Ok(ServeEngine::Async),
+            other => {
+                Err(format!("unknown engine '{other}' (expected virtual, threaded, or async)"))
+            }
         }
     }
 }
@@ -326,6 +334,11 @@ pub struct ServeStage {
     pub time_scale: f64,
     /// Virtual engine: periodic re-calibration outages.
     pub calibration: Option<CalibrationSpec>,
+    /// SLO admission-control deadline in milliseconds: the async engine
+    /// sheds submissions whose predicted queueing delay exceeds it, and
+    /// the virtual engine mirrors the same heuristic deterministically.
+    /// The threaded engine has no shed path and rejects this member.
+    pub deadline_ms: Option<f64>,
     pub slo: SloSpec,
 }
 
@@ -349,6 +362,7 @@ impl Default for ServeStage {
             opts: OptFlags::overlapped(),
             time_scale: 1.0,
             calibration: None,
+            deadline_ms: None,
             slo: SloSpec::default(),
         }
     }
@@ -848,6 +862,19 @@ fn parse_stage(v: &JsonValue, index: usize) -> Result<StageSpec, ApiError> {
                 opts: parse_opts(v, &path, OptFlags::overlapped())?,
                 time_scale: opt_num_member(v, &path, "time_scale", 1.0)?,
                 calibration: parse_calibration(v, &path)?,
+                deadline_ms: match v.get("deadline_ms") {
+                    None => None,
+                    Some(_) => {
+                        let ms = opt_num_member(v, &path, "deadline_ms", 0.0)?;
+                        if !ms.is_finite() || ms <= 0.0 {
+                            return Err(parse_err(
+                                format!("{path}.deadline_ms"),
+                                format!("SLO deadline must be finite and > 0 (got {ms})"),
+                            ));
+                        }
+                        Some(ms)
+                    }
+                },
                 slo: parse_slo(v, &path)?,
             }))
         }
@@ -953,6 +980,9 @@ fn stage_json(stage: &StageSpec) -> JsonValue {
             members.push(("time_scale", JsonValue::Num(s.time_scale)));
             if let Some(c) = &s.calibration {
                 members.push(("calibration", calibration_json(c)));
+            }
+            if let Some(ms) = s.deadline_ms {
+                members.push(("deadline_ms", JsonValue::Num(ms)));
             }
             if let Some(slo) = slo_json(&s.slo) {
                 members.push(("slo", slo));
@@ -1291,6 +1321,7 @@ impl Session {
                         queue_depth: s.queue_depth,
                         routing,
                         calibration,
+                        deadline_s: s.deadline_ms.map(|ms| ms * 1e-3),
                     },
                     mix,
                     arrival,
@@ -1298,25 +1329,32 @@ impl Session {
                     slo: s.slo.clone(),
                 })
             }
-            ServeEngine::Threaded => {
+            ServeEngine::Threaded | ServeEngine::Async => {
                 if !s.mix.is_empty() {
                     return Err(parse_err(
                         format!("{path}.mix"),
-                        "the threaded engine serves one model — use 'model', not 'mix'",
+                        "a wall-clock engine serves one model — use 'model', not 'mix'",
                     ));
                 }
                 if s.arrival.is_some() {
                     return Err(parse_err(
                         format!("{path}.arrival"),
-                        "the threaded engine drives a fixed request count ('requests'); \
+                        "a wall-clock engine drives a fixed request count ('requests'); \
                          arrival processes apply to the virtual engine",
                     ));
                 }
                 if s.calibration.is_some() {
                     return Err(parse_err(
                         format!("{path}.calibration"),
-                        "re-calibration outages are a virtual-engine model; the threaded \
-                         engine has no calibration knob",
+                        "re-calibration outages are a virtual-engine model; the wall-clock \
+                         engines have no calibration knob",
+                    ));
+                }
+                if s.engine == ServeEngine::Threaded && s.deadline_ms.is_some() {
+                    return Err(parse_err(
+                        format!("{path}.deadline_ms"),
+                        "the threaded engine has no shed path — SLO admission control \
+                         needs the async or virtual engine",
                     ));
                 }
                 let backend: ServeBackend = s
@@ -1327,8 +1365,13 @@ impl Session {
                     .routing
                     .parse()
                     .map_err(|reason| parse_err(format!("{path}.routing"), reason))?;
+                let core = match s.engine {
+                    ServeEngine::Async => ServeCore::Async,
+                    _ => ServeCore::Threaded,
+                };
                 let mut builder = ServeRequest::builder()
                     .backend(backend)
+                    .core(core)
                     .requests(s.requests)
                     .max_batch(s.max_batch)
                     .workers(s.workers)
@@ -1343,6 +1386,9 @@ impl Session {
                 }
                 if let Some(model) = &s.model {
                     builder = builder.model(model.clone());
+                }
+                if let Some(ms) = s.deadline_ms {
+                    builder = builder.deadline(Duration::from_secs_f64(ms * 1e-3));
                 }
                 Ok(PlannedStage::ServeThreaded {
                     name: s.name.clone(),
@@ -1617,6 +1663,7 @@ fn run_stage(
                 offered: v.offered,
                 admitted: v.admitted,
                 rejected: v.rejected,
+                shed: v.shed,
                 makespan_s: v.makespan_s,
                 throughput_rps: v.throughput_rps(),
                 mean_ms: v.mean_latency_ms(),
@@ -1652,9 +1699,9 @@ fn run_stage(
         PlannedStage::ServeThreaded { name, req, slo } => {
             let out = Arc::clone(session).serve(req)?;
             let attempts = out.requests as f64 + out.rejections as f64;
-            let reject_frac =
-                if attempts > 0.0 { out.rejections as f64 / attempts } else { 0.0 };
-            // the threaded coordinator has no calibration model: always up
+            let refused = out.rejections as f64 + out.sheds as f64;
+            let reject_frac = if attempts > 0.0 { refused / attempts } else { 0.0 };
+            // the wall-clock coordinators have no calibration model: always up
             let verdict = slo_for_serve(slo, out.p99_ms, out.throughput_img_s, reject_frac, 1.0);
             StageOutcome {
                 name: name.clone(),

@@ -37,15 +37,16 @@ use super::error::ApiError;
 use super::executor::SimExecutor;
 use super::outcome::ServeOutcome;
 use super::session::Session;
-use crate::coordinator::server::{BatchExecutor, Server, ServerConfig, SubmitError};
-use crate::coordinator::{BatchPolicy, RoutingPolicy};
+use crate::coordinator::server::{BatchExecutor, Server, ServerConfig, ServerStats, SubmitError};
+use crate::coordinator::{
+    AsyncServer, AsyncServerConfig, BatchPolicy, PendingReply, RoutingPolicy, TrafficSink,
+};
 use crate::sim::OptFlags;
 use crate::util::stats::percentile_sorted;
 use std::collections::VecDeque;
 use std::fmt;
 use std::path::PathBuf;
 use std::str::FromStr;
-use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -87,10 +88,55 @@ impl FromStr for ServeBackend {
     }
 }
 
+/// Which serving core a [`ServeRequest`] runs on (orthogonal to the
+/// backend: both cores drive the same [`BatchExecutor`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeCore {
+    /// The leader-thread dispatch-and-wait coordinator
+    /// ([`crate::coordinator::Server`]).
+    #[default]
+    Threaded,
+    /// The continuous-batching submit-queue/completion core
+    /// ([`crate::coordinator::AsyncServer`]) — required for SLO
+    /// admission control ([`ServeRequestBuilder::deadline`]).
+    Async,
+}
+
+impl ServeCore {
+    /// The canonical CLI spelling (`--core <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeCore::Threaded => "threaded",
+            ServeCore::Async => "async",
+        }
+    }
+}
+
+impl fmt::Display for ServeCore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ServeCore {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "threaded" => Ok(ServeCore::Threaded),
+            "async" => Ok(ServeCore::Async),
+            other => Err(format!("unknown core '{other}' (expected threaded or async)")),
+        }
+    }
+}
+
 /// A validated serving request (construct via [`ServeRequest::builder`]).
 #[derive(Debug, Clone)]
 pub struct ServeRequest {
     pub backend: ServeBackend,
+    /// Serving core: threaded dispatch-and-wait or async continuous
+    /// batching.
+    pub core: ServeCore,
     /// PJRT artifact directory (ignored by the sim backend).
     pub artifacts: PathBuf,
     /// `None` = the executor's first served model.
@@ -109,6 +155,10 @@ pub struct ServeRequest {
     pub opts: OptFlags,
     /// Sim pacing: wall seconds per simulated second (`0` = cost only).
     pub time_scale: f64,
+    /// SLO deadline for admission control (async core only): a submission
+    /// whose predicted queueing delay exceeds it is shed with a typed
+    /// [`crate::coordinator::SubmitError::Shed`]. `None` disarms shedding.
+    pub deadline: Option<Duration>,
 }
 
 impl ServeRequest {
@@ -142,6 +192,7 @@ impl ServeRequest {
 #[derive(Debug, Clone)]
 pub struct ServeRequestBuilder {
     backend: ServeBackend,
+    core: ServeCore,
     artifacts: PathBuf,
     model: Option<String>,
     requests: usize,
@@ -153,12 +204,14 @@ pub struct ServeRequestBuilder {
     queue_depth: usize,
     opts: OptFlags,
     time_scale: f64,
+    deadline: Option<Duration>,
 }
 
 impl Default for ServeRequestBuilder {
     fn default() -> Self {
         ServeRequestBuilder {
             backend: ServeBackend::Sim,
+            core: ServeCore::Threaded,
             artifacts: PathBuf::from("artifacts"),
             model: None,
             requests: 64,
@@ -170,6 +223,7 @@ impl Default for ServeRequestBuilder {
             queue_depth: 1024,
             opts: OptFlags::overlapped(),
             time_scale: 1.0,
+            deadline: None,
         }
     }
 }
@@ -177,6 +231,18 @@ impl Default for ServeRequestBuilder {
 impl ServeRequestBuilder {
     pub fn backend(mut self, backend: ServeBackend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    pub fn core(mut self, core: ServeCore) -> Self {
+        self.core = core;
+        self
+    }
+
+    /// SLO deadline for admission control — requires [`ServeCore::Async`]
+    /// (the threaded core has no shed path; `build` rejects the combo).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
         self
     }
 
@@ -255,8 +321,26 @@ impl ServeRequestBuilder {
         if !self.time_scale.is_finite() || self.time_scale < 0.0 {
             return Err(ApiError::InvalidTimeScale(self.time_scale));
         }
+        match self.deadline {
+            Some(d) if d.is_zero() => {
+                return Err(ApiError::InvalidFlag {
+                    flag: "deadline-ms".into(),
+                    reason: "SLO deadline must be > 0 (a zero deadline sheds everything)"
+                        .into(),
+                });
+            }
+            Some(_) if self.core == ServeCore::Threaded => {
+                return Err(ApiError::InvalidFlag {
+                    flag: "deadline-ms".into(),
+                    reason: "SLO admission control needs the async core (--core async)"
+                        .into(),
+                });
+            }
+            _ => {}
+        }
         Ok(ServeRequest {
             backend: self.backend,
+            core: self.core,
             artifacts: self.artifacts,
             model: self.model,
             requests: self.requests,
@@ -268,6 +352,7 @@ impl ServeRequestBuilder {
             queue_depth: self.queue_depth,
             opts: self.opts,
             time_scale: self.time_scale,
+            deadline: self.deadline,
         })
     }
 }
@@ -320,130 +405,193 @@ impl Session {
         self.serve_executor(engine, req)
     }
 
-    /// The backend-agnostic serving driver: start the sharded coordinator,
-    /// resolve the model name against the server's routing set *before*
-    /// any submission (unknown models are a typed
+    /// The backend-agnostic serving driver: start the requested serving
+    /// core ([`ServeCore`]), resolve the model name against the server's
+    /// routing set *before* any submission (unknown models are a typed
     /// [`ApiError::UnknownModel`], never a leader-loop zero-fill), then
     /// drive a closed request stream with at most `queue_depth` samples in
     /// flight. A shard-queue rejection with nothing left to drain
-    /// surfaces as typed [`ApiError::Backpressure`].
+    /// surfaces as typed [`ApiError::Backpressure`]; an SLO shed on the
+    /// async core consumes its request (retrying a shed would livelock
+    /// against the same deadline heuristic) and is counted in
+    /// [`ServeOutcome::sheds`].
     pub fn serve_executor<E: BatchExecutor>(
         &self,
         executor: Arc<E>,
         req: &ServeRequest,
     ) -> Result<ServeOutcome, ApiError> {
-        let server = Server::start(
-            executor,
-            ServerConfig {
-                policy: BatchPolicy { max_batch: req.max_batch, max_wait: req.max_wait },
-                workers: req.workers,
-                shards: req.shards,
-                routing: req.routing,
-                queue_depth: req.queue_depth,
-            },
-        );
-        let resolved = match &req.model {
-            Some(wanted) => server
-                .models()
-                .iter()
-                .find(|n| n.eq_ignore_ascii_case(wanted))
-                .cloned()
-                .ok_or_else(|| ApiError::UnknownModel {
-                    name: wanted.clone(),
-                    available: server.models().to_vec(),
-                }),
-            None => server
-                .models()
-                .first()
-                .cloned()
-                .ok_or_else(|| ApiError::ArtifactError("no models loaded".into())),
-        };
-        let model = match resolved {
-            Ok(m) => m,
-            Err(e) => {
-                server.shutdown();
-                return Err(e);
-            }
-        };
-
-        fn recv_one(
-            rx: Receiver<crate::coordinator::GenResponse>,
-            lat_ms: &mut Vec<f64>,
-        ) -> Result<(), ApiError> {
-            let resp = rx
-                .recv()
-                .map_err(|_| ApiError::Internal("response channel closed".into()))?;
-            lat_ms.push(resp.total_time * 1e3);
-            Ok(())
-        }
-
-        let start = std::time::Instant::now();
-        let mut pending: VecDeque<Receiver<crate::coordinator::GenResponse>> = VecDeque::new();
-        let mut lat_ms: Vec<f64> = Vec::with_capacity(req.requests);
-        let mut rejections = 0u64;
-        for i in 0..req.requests {
-            loop {
-                match server.submit(&model, i as u64, Some((i % 10) as u32), 1) {
-                    Ok(rx) => {
-                        pending.push_back(rx);
-                        break;
-                    }
-                    Err(SubmitError::QueueFull { shard, outstanding, limit }) => {
-                        rejections += 1;
-                        // relieve pressure by completing the oldest
-                        // in-flight request; if nothing is in flight the
-                        // configuration can never admit this request
-                        match pending.pop_front() {
-                            Some(rx) => recv_one(rx, &mut lat_ms)?,
-                            None => {
-                                server.shutdown();
-                                return Err(ApiError::Backpressure {
-                                    shard,
-                                    outstanding,
-                                    limit,
-                                });
-                            }
-                        }
-                    }
+        let policy = BatchPolicy { max_batch: req.max_batch, max_wait: req.max_wait };
+        match req.core {
+            ServeCore::Threaded => {
+                let server = Server::start(
+                    executor,
+                    ServerConfig {
+                        policy,
+                        workers: req.workers,
+                        shards: req.shards,
+                        routing: req.routing,
+                        queue_depth: req.queue_depth,
+                    },
+                );
+                let model = match resolve_model(server.models(), req.model.as_deref()) {
+                    Ok(m) => m,
                     Err(e) => {
                         server.shutdown();
-                        return Err(ApiError::from(e));
+                        return Err(e);
                     }
-                }
+                };
+                let start = std::time::Instant::now();
+                let driven = drive(&server.handle(), &model, req.requests);
+                let wall = start.elapsed().as_secs_f64();
+                let stats = server.shutdown();
+                Ok(finish(req, model, driven?, wall, stats))
+            }
+            ServeCore::Async => {
+                let server = AsyncServer::start(
+                    executor,
+                    AsyncServerConfig {
+                        policy,
+                        workers: req.workers,
+                        shards: req.shards,
+                        routing: req.routing,
+                        queue_depth: req.queue_depth,
+                        deadline: req.deadline,
+                    },
+                );
+                let model = match resolve_model(server.models(), req.model.as_deref()) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        server.shutdown();
+                        return Err(e);
+                    }
+                };
+                let start = std::time::Instant::now();
+                let driven = drive(&server.handle(), &model, req.requests);
+                let wall = start.elapsed().as_secs_f64();
+                let stats = server.shutdown();
+                Ok(finish(req, model, driven?, wall, stats))
             }
         }
-        for rx in pending {
-            recv_one(rx, &mut lat_ms)?;
-        }
-        let wall = start.elapsed().as_secs_f64();
-        let stats = server.shutdown();
+    }
+}
 
-        // one sort serves all three quantiles (latencies are finite)
-        lat_ms.sort_by(f64::total_cmp);
-        let mut per_model: Vec<(String, String)> = stats.per_model.into_iter().collect();
-        per_model.sort();
-        let per_shard: Vec<(String, String)> = stats
-            .per_shard
+/// Resolve the requested model name against the serving core's routed set
+/// (case-insensitive); `None` picks the executor's first served model.
+fn resolve_model(models: &[String], wanted: Option<&str>) -> Result<String, ApiError> {
+    match wanted {
+        Some(w) => models
             .iter()
-            .map(|s| (format!("shard {}", s.shard), s.summary.clone()))
-            .collect();
-        Ok(ServeOutcome {
-            backend: req.backend.name().to_string(),
-            model,
-            shards: req.shards,
-            routing: req.routing.name().to_string(),
-            requests: req.requests,
-            rejections,
-            wall_s: wall,
-            throughput_img_s: if wall > 0.0 { req.requests as f64 / wall } else { 0.0 },
-            p50_ms: percentile_sorted(&lat_ms, 50.0),
-            p95_ms: percentile_sorted(&lat_ms, 95.0),
-            p99_ms: percentile_sorted(&lat_ms, 99.0),
-            total_requests: stats.total_requests,
-            total_samples: stats.total_samples,
-            dropped_samples: stats.dropped_samples,
-            per_model,
-            per_shard,
-        })
+            .find(|n| n.eq_ignore_ascii_case(w))
+            .cloned()
+            .ok_or_else(|| ApiError::UnknownModel {
+                name: w.to_string(),
+                available: models.to_vec(),
+            }),
+        None => models
+            .first()
+            .cloned()
+            .ok_or_else(|| ApiError::ArtifactError("no models loaded".into())),
+    }
+}
+
+/// What one driver pass observed: per-completion client latencies (ms),
+/// queue-full rejections absorbed by draining, and SLO sheds.
+struct Driven {
+    lat_ms: Vec<f64>,
+    rejections: u64,
+    sheds: u64,
+}
+
+/// The closed-stream driver, generic over the serving core's
+/// [`TrafficSink`]: a `QueueFull` is relieved by completing the oldest
+/// in-flight request (typed [`ApiError::Backpressure`] when nothing is in
+/// flight), a `Shed` consumes its request, and every admitted request is
+/// awaited before returning.
+fn drive<S: TrafficSink>(sink: &S, model: &str, requests: usize) -> Result<Driven, ApiError> {
+    fn settle<P: PendingReply>(pending: P, lat_ms: &mut Vec<f64>) -> Result<(), ApiError> {
+        let resp = pending
+            .wait()
+            .ok_or_else(|| ApiError::Internal("response channel closed".into()))?;
+        lat_ms.push(resp.total_time * 1e3);
+        Ok(())
+    }
+
+    let mut pending: VecDeque<S::Pending> = VecDeque::new();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    let mut rejections = 0u64;
+    let mut sheds = 0u64;
+    for i in 0..requests {
+        loop {
+            match sink.submit(model, i as u64, Some((i % 10) as u32), 1) {
+                Ok(p) => {
+                    pending.push_back(p);
+                    break;
+                }
+                Err(SubmitError::QueueFull { shard, outstanding, limit }) => {
+                    rejections += 1;
+                    // relieve pressure by completing the oldest in-flight
+                    // request; if nothing is in flight the configuration
+                    // can never admit this request
+                    match pending.pop_front() {
+                        Some(p) => settle(p, &mut lat_ms)?,
+                        None => {
+                            return Err(ApiError::Backpressure { shard, outstanding, limit })
+                        }
+                    }
+                }
+                Err(SubmitError::Shed { .. }) => {
+                    // admission control refused the request outright:
+                    // count it and move to the next one
+                    sheds += 1;
+                    break;
+                }
+                Err(e) => return Err(ApiError::from(e)),
+            }
+        }
+    }
+    for p in pending {
+        settle(p, &mut lat_ms)?;
+    }
+    Ok(Driven { lat_ms, rejections, sheds })
+}
+
+/// Assemble the outcome from driver observations and coordinator stats.
+fn finish(
+    req: &ServeRequest,
+    model: String,
+    driven: Driven,
+    wall: f64,
+    stats: ServerStats,
+) -> ServeOutcome {
+    let Driven { mut lat_ms, rejections, sheds } = driven;
+    // one sort serves all three quantiles (latencies are finite)
+    lat_ms.sort_by(f64::total_cmp);
+    let mut per_model: Vec<(String, String)> = stats.per_model.into_iter().collect();
+    per_model.sort();
+    let per_shard: Vec<(String, String)> = stats
+        .per_shard
+        .iter()
+        .map(|s| (format!("shard {}", s.shard), s.summary.clone()))
+        .collect();
+    let completed = lat_ms.len();
+    ServeOutcome {
+        backend: req.backend.name().to_string(),
+        core: req.core.name().to_string(),
+        model,
+        shards: req.shards,
+        routing: req.routing.name().to_string(),
+        requests: req.requests,
+        rejections,
+        sheds,
+        wall_s: wall,
+        throughput_img_s: if wall > 0.0 { completed as f64 / wall } else { 0.0 },
+        p50_ms: percentile_sorted(&lat_ms, 50.0),
+        p95_ms: percentile_sorted(&lat_ms, 95.0),
+        p99_ms: percentile_sorted(&lat_ms, 99.0),
+        total_requests: stats.total_requests,
+        total_samples: stats.total_samples,
+        dropped_samples: stats.dropped_samples,
+        per_model,
+        per_shard,
     }
 }

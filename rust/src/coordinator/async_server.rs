@@ -1,0 +1,882 @@
+//! The async serving core: lock-free submit queues, worker-as-collector
+//! continuous batching, oneshot completions, and SLO-aware admission.
+//!
+//! Where the threaded [`super::server::Server`] runs a leader thread per
+//! shard that *dispatches and waits* (pop a batch, hand it to the worker
+//! pool, collect the next only after the channel round-trip), the async
+//! core has no leader at all. Each worker is its own collector:
+//!
+//! 1. drain the shard's lock-free [`JobQueue`] intake into per-model
+//!    [`Batcher`]s under a short-lived collector lock,
+//! 2. pop the ready batch whose head has waited longest,
+//! 3. release the lock and execute — the *other* workers keep
+//!    collecting and dispatching while this one is busy.
+//!
+//! That is continuous batching: a freed worker slot refills from the
+//! queue the instant its batch completes, rather than the whole shard
+//! stalling on the slowest sample of a dispatched wave. The occupancy
+//! advantage is pinned by a unit test in [`super::batcher`].
+//!
+//! Submission is wait-free for producers ([`JobQueue::push`] is one CAS)
+//! and replies travel over oneshot [`completion`] channels, so a caller
+//! holds a future-like [`CompletionHandle`] it can block on, poll, or
+//! drop. Admission control happens *before* the queue: capacity is
+//! reserved through an RAII [`CapacityGuard`] (released exactly once on
+//! every exit path), and when a completion `deadline` is configured the
+//! shard predicts the new request's finish time from an EWMA of observed
+//! per-sample service time — a request predicted to miss its deadline is
+//! refused with [`SubmitError::Shed`] instead of queued to fail.
+//!
+//! Idleness does not spin: a collector with no pending work parks on the
+//! shard condvar (untimed when nothing is queued, timed to the earliest
+//! [`Batcher::deadline`] otherwise). Producers take the collector mutex
+//! in an empty critical section between pushing and notifying, which
+//! closes the missed-wakeup race: a parked collector either saw the job
+//! in its final drain or is guaranteed to receive the notification.
+//! [`AsyncServer::scheduler_passes`] exposes the loop-iteration counter
+//! the no-spin regression test observes.
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::completion::{completion, CapacityGuard, CompletionHandle};
+use super::metrics::ServingMetrics;
+use super::queue::JobQueue;
+use super::request::{AsyncEnvelope, GenRequest, GenResponse, RequestId};
+use super::routing::{pick_shard, RoutingPolicy};
+use super::server::{aggregate_stats, BatchExecutor, ServerConfig, ServerStats, SubmitError,
+                    TrafficSink};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// EWMA smoothing factor for the per-sample service-time estimate.
+const EST_ALPHA: f64 = 0.2;
+
+/// Async-core configuration. Mirrors [`ServerConfig`] plus the optional
+/// completion deadline that arms SLO-aware load shedding.
+#[derive(Debug, Clone)]
+pub struct AsyncServerConfig {
+    pub policy: BatchPolicy,
+    /// Worker threads **per shard** (each worker is also a collector).
+    pub workers: usize,
+    /// Independent serving shards (modeling a fleet of N chips).
+    pub shards: usize,
+    /// How requests pick a shard.
+    pub routing: RoutingPolicy,
+    /// Maximum in-flight (submitted, not yet answered) samples per shard.
+    pub queue_depth: usize,
+    /// Completion-deadline SLO. When set, a submission whose predicted
+    /// completion time (backlog × EWMA service estimate ÷ workers)
+    /// exceeds the deadline is refused with [`SubmitError::Shed`].
+    /// `None` disables shedding entirely.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for AsyncServerConfig {
+    fn default() -> Self {
+        let base = ServerConfig::default();
+        AsyncServerConfig {
+            policy: base.policy,
+            workers: base.workers,
+            shards: base.shards,
+            routing: base.routing,
+            queue_depth: base.queue_depth,
+            deadline: None,
+        }
+    }
+}
+
+impl From<ServerConfig> for AsyncServerConfig {
+    /// Adopt a threaded-path configuration verbatim (no deadline — the
+    /// threaded semantics never shed, so neither does the translation).
+    fn from(c: ServerConfig) -> Self {
+        AsyncServerConfig {
+            policy: c.policy,
+            workers: c.workers,
+            shards: c.shards,
+            routing: c.routing,
+            queue_depth: c.queue_depth,
+            deadline: None,
+        }
+    }
+}
+
+/// Mutable collector state, shared by a shard's workers under one mutex.
+struct CollectorState {
+    batchers: HashMap<String, Batcher<AsyncEnvelope>>,
+}
+
+/// One shard of the async core: intake queue, collector state, and the
+/// counters submission and observability read lock-free.
+struct ShardCore {
+    intake: JobQueue<AsyncEnvelope>,
+    state: Mutex<CollectorState>,
+    cv: Condvar,
+    /// In-flight samples (reserved at submit, released before reply).
+    outstanding: Arc<AtomicUsize>,
+    /// Collector loop iterations — the no-spin observable.
+    passes: AtomicU64,
+    shutdown: AtomicBool,
+    /// EWMA per-sample service time, stored as `f64::to_bits` (0 = no
+    /// observation yet, so shedding stays disarmed until the first batch).
+    est_sample_s: AtomicU64,
+    metrics: Mutex<HashMap<String, ServingMetrics>>,
+    policy: BatchPolicy,
+}
+
+impl ShardCore {
+    /// Fold one observed per-sample service time into the EWMA estimate.
+    fn observe_service(&self, sample_s: f64) {
+        if !sample_s.is_finite() || sample_s <= 0.0 {
+            return;
+        }
+        let mut cur = self.est_sample_s.load(Ordering::Relaxed);
+        loop {
+            let next = if cur == 0 {
+                sample_s
+            } else {
+                (1.0 - EST_ALPHA) * f64::from_bits(cur) + EST_ALPHA * sample_s
+            };
+            match self.est_sample_s.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Cloneable submission endpoint for the async core; the counterpart of
+/// the threaded [`super::server::SubmitHandle`]. Submission never blocks:
+/// one routing decision, one capacity CAS, one queue CAS, one notify.
+#[derive(Clone)]
+pub struct AsyncSubmitHandle {
+    shards: Vec<Arc<ShardCore>>,
+    rr: Arc<AtomicUsize>,
+    next_id: Arc<AtomicU64>,
+    routing: RoutingPolicy,
+    queue_depth: usize,
+    workers: usize,
+    deadline: Option<Duration>,
+    models: Arc<Vec<String>>,
+}
+
+impl AsyncSubmitHandle {
+    /// Submit a generation request; returns the completion the response
+    /// will arrive on, or a typed [`SubmitError`] — unknown model, shard
+    /// queue full, load shed against the deadline SLO, or server gone.
+    pub fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Result<CompletionHandle<GenResponse>, SubmitError> {
+        if !self.models.iter().any(|m| m == model) {
+            return Err(SubmitError::UnknownModel {
+                name: model.to_string(),
+                available: self.models.as_ref().clone(),
+            });
+        }
+        let shard = pick_shard(self.routing, model, self.shards.len(), &self.rr, |s| {
+            self.shards[s].outstanding.load(Ordering::SeqCst)
+        });
+        let core = &self.shards[shard];
+        let guard = CapacityGuard::reserve(&core.outstanding, count, self.queue_depth)
+            .map_err(|outstanding| SubmitError::QueueFull {
+                shard,
+                outstanding,
+                limit: self.queue_depth,
+            })?;
+        // SLO-aware admission: predict this request's completion time from
+        // the post-reservation backlog and the EWMA service estimate. A
+        // predicted miss is refused *now* — the guard drops on the error
+        // path, handing the just-reserved capacity straight back.
+        if let Some(deadline) = self.deadline {
+            let est_bits = core.est_sample_s.load(Ordering::Relaxed);
+            if est_bits != 0 {
+                let est = f64::from_bits(est_bits);
+                let queued = core.outstanding.load(Ordering::SeqCst);
+                let predicted = queued as f64 * est / self.workers as f64;
+                if predicted > deadline.as_secs_f64() {
+                    core.metrics
+                        .lock()
+                        .unwrap()
+                        .entry(model.to_string())
+                        .or_default()
+                        .record_shed();
+                    return Err(SubmitError::Shed {
+                        shard,
+                        outstanding: queued,
+                        predicted_ms: (predicted * 1e3).round() as u64,
+                        deadline_ms: deadline.as_millis() as u64,
+                    });
+                }
+            }
+        }
+        let (tx, rx) = completion();
+        let req = GenRequest {
+            id: RequestId(self.next_id.fetch_add(1, Ordering::Relaxed)),
+            model: model.to_string(),
+            seed,
+            label,
+            count,
+            arrival: Instant::now(),
+        };
+        // the envelope takes ownership of the reservation: from here on,
+        // whoever drops the envelope (worker after serving, shutdown
+        // flush, bounced push below) releases the capacity
+        if core.intake.push(AsyncEnvelope { request: req, reply: tx, guard }).is_err() {
+            // queue closed: the bounced envelope just dropped, releasing
+            // its reservation and disconnecting the completion
+            return Err(SubmitError::Shutdown);
+        }
+        // Missed-wakeup protocol: taking (and immediately dropping) the
+        // collector mutex orders this push against any collector that was
+        // deciding to park — it either drained the job already or is
+        // parked and will receive the notify.
+        drop(core.state.lock().unwrap());
+        core.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// In-flight samples across every shard (0 once all work has drained
+    /// and every reservation was handed back — the conservation check the
+    /// property tests pin).
+    pub fn outstanding(&self) -> usize {
+        self.shards.iter().map(|c| c.outstanding.load(Ordering::SeqCst)).sum()
+    }
+}
+
+impl TrafficSink for AsyncSubmitHandle {
+    type Pending = CompletionHandle<GenResponse>;
+
+    fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Result<CompletionHandle<GenResponse>, SubmitError> {
+        AsyncSubmitHandle::submit(self, model, seed, label, count)
+    }
+}
+
+impl std::fmt::Debug for AsyncSubmitHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AsyncSubmitHandle")
+            .field("shards", &self.shards.len())
+            .field("routing", &self.routing)
+            .field("queue_depth", &self.queue_depth)
+            .field("deadline", &self.deadline)
+            .finish()
+    }
+}
+
+/// The async serving coordinator: N shards of worker-collectors over one
+/// shared executor.
+pub struct AsyncServer {
+    handle: AsyncSubmitHandle,
+    shards: Vec<Arc<ShardCore>>,
+    models: Arc<Vec<String>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl AsyncServer {
+    /// Start `config.shards` shards with `config.workers` worker-collector
+    /// threads each over one shared executor.
+    pub fn start<E: BatchExecutor>(executor: Arc<E>, config: AsyncServerConfig) -> Self {
+        assert!(config.workers >= 1, "at least one worker per shard");
+        assert!(config.shards >= 1, "at least one shard");
+        assert!(config.queue_depth >= 1, "queue depth must admit at least one sample");
+        let models = Arc::new(executor.models());
+        let mut shards = Vec::with_capacity(config.shards);
+        let mut workers = Vec::with_capacity(config.shards * config.workers);
+        for shard_id in 0..config.shards {
+            let core = Arc::new(ShardCore {
+                intake: JobQueue::new(),
+                state: Mutex::new(CollectorState { batchers: HashMap::new() }),
+                cv: Condvar::new(),
+                outstanding: Arc::new(AtomicUsize::new(0)),
+                passes: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                est_sample_s: AtomicU64::new(0),
+                metrics: Mutex::new(HashMap::new()),
+                policy: config.policy,
+            });
+            for worker_id in 0..config.workers {
+                let core = Arc::clone(&core);
+                let exec = Arc::clone(&executor);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("photogan-async-{shard_id}-{worker_id}"))
+                        .spawn(move || worker_loop(&core, exec))
+                        .expect("spawn async worker"),
+                );
+            }
+            shards.push(core);
+        }
+        let handle = AsyncSubmitHandle {
+            shards: shards.clone(),
+            rr: Arc::new(AtomicUsize::new(0)),
+            next_id: Arc::new(AtomicU64::new(0)),
+            routing: config.routing,
+            queue_depth: config.queue_depth,
+            workers: config.workers,
+            deadline: config.deadline,
+            models: Arc::clone(&models),
+        };
+        AsyncServer { handle, shards, models, workers }
+    }
+
+    /// The model names this server routes.
+    pub fn models(&self) -> &[String] {
+        &self.models
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// A cloneable submission endpoint for client threads.
+    pub fn handle(&self) -> AsyncSubmitHandle {
+        self.handle.clone()
+    }
+
+    /// Submit a generation request (see [`AsyncSubmitHandle::submit`]).
+    pub fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Result<CompletionHandle<GenResponse>, SubmitError> {
+        self.handle.submit(model, seed, label, count)
+    }
+
+    /// Metrics snapshot across all shards — same aggregation as the
+    /// threaded [`super::server::Server::stats`], so cross-engine
+    /// comparisons see identically shaped numbers.
+    pub fn stats(&self) -> ServerStats {
+        aggregate_stats(self.shards.iter().map(|c| &c.metrics))
+    }
+
+    /// Total collector-loop iterations across every worker. An idle
+    /// server's count stays flat (workers park on the shard condvar);
+    /// growth without traffic would mean the collector is spinning.
+    pub fn scheduler_passes(&self) -> u64 {
+        self.shards.iter().map(|c| c.passes.load(Ordering::Relaxed)).sum()
+    }
+
+    /// In-flight samples across every shard.
+    pub fn outstanding(&self) -> usize {
+        self.handle.outstanding()
+    }
+
+    fn stop(&mut self) {
+        for core in &self.shards {
+            core.shutdown.store(true, Ordering::SeqCst);
+            // Close the intake: later pushes bounce back to their callers
+            // as Shutdown, and any job that won the submit race comes back
+            // here — re-enqueue it under the lock so the drain below
+            // serves it instead of stranding it.
+            let leftovers = core.intake.close();
+            {
+                let mut state = core.state.lock().unwrap();
+                for env in leftovers {
+                    let model = env.request.model.clone();
+                    state
+                        .batchers
+                        .entry(model.clone())
+                        .or_insert_with(|| Batcher::new(&model, core.policy))
+                        .push(env);
+                }
+            }
+            core.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Graceful shutdown: flush every pending batch, join the workers,
+    /// and return the final statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.stop();
+        self.stats()
+    }
+}
+
+impl Drop for AsyncServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One worker-collector: alternate between collecting a ready batch
+/// (under the shard lock) and executing it (outside the lock).
+fn worker_loop<E: BatchExecutor>(core: &ShardCore, executor: Arc<E>) {
+    while let Some(batch) = collect(core) {
+        execute(core, &*executor, batch);
+    }
+}
+
+/// Take the next ready batch, parking when there is nothing to do.
+/// Returns `None` exactly once per worker, at shutdown with everything
+/// drained.
+fn collect(core: &ShardCore) -> Option<Batch<AsyncEnvelope>> {
+    let mut state = core.state.lock().unwrap();
+    loop {
+        core.passes.fetch_add(1, Ordering::Relaxed);
+        for env in core.intake.drain() {
+            let model = env.request.model.clone();
+            state
+                .batchers
+                .entry(model.clone())
+                .or_insert_with(|| Batcher::new(&model, core.policy))
+                .push(env);
+        }
+        let now = Instant::now();
+        // continuous batching: dispatch the ready batcher whose head has
+        // waited longest; the lock drops before execution, so sibling
+        // workers keep collecting while this batch runs
+        let ready = state
+            .batchers
+            .iter()
+            .filter(|(_, b)| b.ready(now))
+            .max_by_key(|(_, b)| b.oldest_wait(now))
+            .map(|(m, _)| m.clone());
+        if let Some(model) = ready {
+            return state.batchers.get_mut(&model).unwrap().pop();
+        }
+        if core.shutdown.load(Ordering::SeqCst) {
+            // force-flush pending sub-deadline batches, oldest head first
+            let pending = state
+                .batchers
+                .iter()
+                .filter(|(_, b)| b.pending_len() > 0)
+                .max_by_key(|(_, b)| b.oldest_wait(now))
+                .map(|(m, _)| m.clone());
+            return match pending {
+                Some(model) => state.batchers.get_mut(&model).unwrap().pop(),
+                None => None,
+            };
+        }
+        if !core.intake.is_empty() {
+            continue; // new work raced in while we scanned
+        }
+        // park: timed to the earliest batching deadline when requests are
+        // pending, untimed when the shard is fully idle (no spinning —
+        // producers notify through the empty-critical-section protocol)
+        match state.batchers.values().filter_map(|b| b.deadline()).min() {
+            Some(deadline) => {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    continue;
+                }
+                let (guard, _) = core.cv.wait_timeout(state, wait).unwrap();
+                state = guard;
+            }
+            None => {
+                state = core.cv.wait(state).unwrap();
+            }
+        }
+    }
+}
+
+/// Run one batch against the executor and deliver completions. Mirrors
+/// the threaded worker: panic isolation with zero-fill, per-model
+/// metrics, and capacity release *before* the reply so a closed-loop
+/// client resubmitting on receipt observes the freed slot.
+fn execute<E: BatchExecutor>(core: &ShardCore, executor: &E, batch: Batch<AsyncEnvelope>) {
+    let start = Instant::now();
+    let entries: Vec<(u64, Option<u32>)> = batch
+        .envelopes
+        .iter()
+        .flat_map(|e| {
+            (0..e.request.count)
+                .map(move |i| (e.request.seed.wrapping_add(i as u64), e.request.label))
+        })
+        .collect();
+    let elements = executor.elements_per_sample(&batch.model);
+    let images = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        executor.generate(&batch.model, &entries)
+    }))
+    .ok()
+    .filter(|v| v.len() == entries.len() * elements)
+    .unwrap_or_else(|| {
+        eprintln!(
+            "[photogan] executor failed or returned wrong size for {}; zero-filling {} samples",
+            batch.model,
+            entries.len()
+        );
+        vec![0.0; entries.len() * elements]
+    });
+    let end = Instant::now();
+    if batch.samples > 0 {
+        core.observe_service(end.duration_since(start).as_secs_f64() / batch.samples as f64);
+    }
+    let mut offset = 0usize;
+    for env in batch.envelopes {
+        let AsyncEnvelope { request, reply, mut guard } = env;
+        let n = request.count * elements;
+        let queue_time = start.duration_since(request.arrival).as_secs_f64();
+        let total_time = end.duration_since(request.arrival).as_secs_f64();
+        let resp = GenResponse {
+            id: request.id,
+            model: batch.model.clone(),
+            images: images[offset..offset + n].to_vec(),
+            elements_per_sample: elements,
+            count: request.count,
+            queue_time,
+            total_time,
+            served_batch: batch.samples,
+        };
+        offset += n;
+        {
+            let mut metrics = core.metrics.lock().unwrap();
+            metrics
+                .entry(batch.model.clone())
+                .or_default()
+                .record(total_time, queue_time, batch.samples, request.count);
+        }
+        // release-before-reply: same ordering contract as the threaded
+        // worker — the woken client must observe the freed capacity
+        guard.release();
+        reply.send(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    /// Deterministic stub executor: sample value = seed as f32.
+    struct Stub;
+
+    impl BatchExecutor for Stub {
+        fn models(&self) -> Vec<String> {
+            vec!["toy".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            4
+        }
+
+        fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+            entries
+                .iter()
+                .flat_map(|&(seed, _)| std::iter::repeat(seed as f32).take(4))
+                .collect()
+        }
+    }
+
+    /// Stub that sleeps per batch — establishes a visible service-time
+    /// estimate for the shedding tests.
+    struct Sleepy(Duration);
+
+    impl BatchExecutor for Sleepy {
+        fn models(&self) -> Vec<String> {
+            vec!["slow".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            1
+        }
+
+        fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+            std::thread::sleep(self.0);
+            vec![0.5; entries.len()]
+        }
+    }
+
+    #[test]
+    fn round_trip_single_request() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        let rx = server.submit("toy", 42, None, 1).unwrap();
+        let resp = rx.wait().expect("served before shutdown");
+        assert_eq!(resp.count, 1);
+        assert_eq!(resp.images, vec![42.0; 4]);
+        let stats = server.shutdown();
+        assert_eq!(stats.total_requests, 1);
+        assert_eq!(stats.total_sheds, 0);
+    }
+
+    #[test]
+    fn batches_multiple_requests_together() {
+        let cfg = AsyncServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+            workers: 1,
+            ..AsyncServerConfig::default()
+        };
+        let server = AsyncServer::start(Arc::new(Stub), cfg);
+        let rxs: Vec<_> = (0..8).map(|i| server.submit("toy", i, None, 1).unwrap()).collect();
+        let mut batch_sizes = Vec::new();
+        for rx in rxs {
+            batch_sizes.push(rx.wait().unwrap().served_batch);
+        }
+        assert!(batch_sizes.iter().any(|&b| b > 1), "batching never engaged: {batch_sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_sample_request_seeds_increment() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        let rx = server.submit("toy", 100, None, 3).unwrap();
+        let resp = rx.wait().unwrap();
+        assert_eq!(resp.count, 3);
+        assert_eq!(resp.images[0..4], [100.0; 4]);
+        assert_eq!(resp.images[4..8], [101.0; 4]);
+        assert_eq!(resp.images[8..12], [102.0; 4]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_a_typed_submit_error() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        let err = server.submit("nope", 1, None, 1).unwrap_err();
+        assert!(matches!(
+            err,
+            SubmitError::UnknownModel { ref name, ref available }
+                if name == "nope" && available == &["toy".to_string()]
+        ));
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let cfg = AsyncServerConfig {
+            // huge deadline: only shutdown can flush the batch
+            policy: BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
+            workers: 1,
+            ..AsyncServerConfig::default()
+        };
+        let server = AsyncServer::start(Arc::new(Stub), cfg);
+        let rx = server.submit("toy", 7, None, 2).unwrap();
+        let stats = server.shutdown();
+        let resp = rx.wait().expect("shutdown must flush, not strand");
+        assert_eq!(resp.count, 2);
+        assert_eq!(stats.total_samples, 2);
+        assert_eq!(stats.dropped_samples, 0);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed_and_releases_capacity() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        let handle = server.handle();
+        server.shutdown();
+        assert!(matches!(handle.submit("toy", 1, None, 3), Err(SubmitError::Shutdown)));
+        assert_eq!(handle.outstanding(), 0, "bounced submit must release its reservation");
+    }
+
+    /// Executor that panics on every generate call.
+    struct Panicky;
+
+    impl BatchExecutor for Panicky {
+        fn models(&self) -> Vec<String> {
+            vec!["boom".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            2
+        }
+
+        fn generate(&self, _m: &str, _e: &[(u64, Option<u32>)]) -> Vec<f32> {
+            panic!("kernel exploded");
+        }
+    }
+
+    #[test]
+    fn panicking_executor_degrades_to_zero_fill() {
+        let server = AsyncServer::start(Arc::new(Panicky), AsyncServerConfig::default());
+        let rx = server.submit("boom", 1, None, 1).unwrap();
+        let resp = rx.wait().expect("must still respond");
+        assert_eq!(resp.images, vec![0.0; 2]);
+        let rx2 = server.submit("boom", 2, None, 1).unwrap();
+        assert!(rx2.wait().is_some());
+        assert_eq!(server.outstanding(), 0, "panic path must release capacity");
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_queued() {
+        let cfg = AsyncServerConfig { queue_depth: 4, ..AsyncServerConfig::default() };
+        let server = AsyncServer::start(Arc::new(Stub), cfg);
+        let err = server.submit("toy", 0, None, 5).unwrap_err();
+        assert!(matches!(err, SubmitError::QueueFull { shard: 0, outstanding: 0, limit: 4 }));
+        let rx = server.submit("toy", 0, None, 4).unwrap();
+        assert!(rx.wait().is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn round_robin_spreads_exactly_across_shards() {
+        let cfg = AsyncServerConfig { shards: 4, ..AsyncServerConfig::default() };
+        let server = AsyncServer::start(Arc::new(Stub), cfg);
+        let rxs: Vec<_> = (0..16).map(|i| server.submit("toy", i, None, 1).unwrap()).collect();
+        for rx in rxs {
+            rx.wait().unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.per_shard.len(), 4);
+        for s in &stats.per_shard {
+            assert_eq!(s.requests, 4, "shard {} got {}", s.shard, s.requests);
+        }
+        assert_eq!(stats.total_requests, 16);
+    }
+
+    #[test]
+    fn deadline_slo_sheds_with_typed_error() {
+        let service = Duration::from_millis(25);
+        let cfg = AsyncServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            workers: 1,
+            deadline: Some(Duration::from_millis(1)),
+            ..AsyncServerConfig::default()
+        };
+        let server = AsyncServer::start(Arc::new(Sleepy(service)), cfg);
+        // first request passes: no estimate yet, shedding is disarmed
+        let rx = server.submit("slow", 0, None, 1).unwrap();
+        rx.wait().unwrap();
+        // estimate is now ~25ms/sample ≫ 1ms deadline: refuse at admission
+        let err = server.submit("slow", 1, None, 1).unwrap_err();
+        match err {
+            SubmitError::Shed { shard, outstanding, predicted_ms, deadline_ms } => {
+                assert_eq!(shard, 0);
+                assert_eq!(outstanding, 1, "prediction includes the new reservation");
+                assert!(predicted_ms >= deadline_ms, "{predicted_ms} vs {deadline_ms}");
+                assert_eq!(deadline_ms, 1);
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(server.outstanding(), 0, "shed must release its reservation");
+        let stats = server.shutdown();
+        assert_eq!(stats.total_sheds, 1);
+        assert_eq!(stats.total_requests, 1, "shed requests are never served");
+    }
+
+    #[test]
+    fn no_deadline_means_no_shedding() {
+        let server = AsyncServer::start(
+            Arc::new(Sleepy(Duration::from_millis(5))),
+            AsyncServerConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                workers: 1,
+                deadline: None,
+                ..AsyncServerConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..8).map(|i| server.submit("slow", i, None, 1).unwrap()).collect();
+        for rx in rxs {
+            rx.wait().unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.total_sheds, 0);
+        assert_eq!(stats.total_requests, 8);
+    }
+
+    #[test]
+    fn idle_collectors_park_instead_of_spinning() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        let rx = server.submit("toy", 1, None, 1).unwrap();
+        rx.wait().unwrap();
+        // settle, then observe the pass counter across an idle window
+        std::thread::sleep(Duration::from_millis(20));
+        let before = server.scheduler_passes();
+        std::thread::sleep(Duration::from_millis(50));
+        let after = server.scheduler_passes();
+        // a spinning collector would take ~10^5+ passes in 50ms; parked
+        // workers take none (spurious condvar wakeups allowed a handful)
+        assert!(
+            after - before <= 100,
+            "collector spun while idle: {} passes in 50ms",
+            after - before
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn dropped_handle_does_not_leak_capacity() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        for i in 0..8 {
+            drop(server.submit("toy", i, None, 2).unwrap()); // client walks away
+        }
+        // the server still executes the work and releases every slot
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.outstanding() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(server.outstanding(), 0);
+        let stats = server.shutdown();
+        assert_eq!(stats.total_requests, 8, "abandoned requests are still served");
+    }
+
+    #[test]
+    fn prop_capacity_released_exactly_once_on_every_exit_path() {
+        check("async capacity conservation", 25, |g| {
+            let depth = g.usize_in(2, 12);
+            let deadline = if g.bool() {
+                Some(Duration::from_micros(g.usize_in(1, 500) as u64))
+            } else {
+                None
+            };
+            let slow = g.bool();
+            let cfg = AsyncServerConfig {
+                policy: BatchPolicy {
+                    max_batch: g.usize_in(1, 6),
+                    max_wait: Duration::from_micros(g.usize_in(0, 2000) as u64),
+                },
+                workers: g.usize_in(1, 3),
+                shards: g.usize_in(1, 2),
+                queue_depth: depth,
+                deadline,
+                ..AsyncServerConfig::default()
+            };
+            let (server, model) = if slow {
+                (AsyncServer::start(Arc::new(Sleepy(Duration::from_micros(300))), cfg), "slow")
+            } else {
+                (AsyncServer::start(Arc::new(Stub), cfg), "toy")
+            };
+            let handle = server.handle();
+            let mut pending = Vec::new();
+            let mut admitted = 0u64;
+            let mut refused = 0u64;
+            for i in 0..g.usize_in(1, 24) {
+                match handle.submit(model, i as u64, None, g.usize_in(1, 3)) {
+                    Ok(h) => {
+                        admitted += 1;
+                        // three client exit paths: wait, drop now, drop later
+                        match g.usize_in(0, 2) {
+                            0 => pending.push(h),
+                            1 => drop(h),
+                            _ => {
+                                let _ = h.wait_timeout(Duration::from_micros(50));
+                            }
+                        }
+                    }
+                    Err(SubmitError::QueueFull { .. }) | Err(SubmitError::Shed { .. }) => {
+                        refused += 1;
+                    }
+                    Err(other) => panic!("unexpected submit error: {other}"),
+                }
+            }
+            for h in pending {
+                let _ = h.wait();
+            }
+            let stats = server.shutdown();
+            // conservation: every admitted request was served exactly once,
+            // every refusal left no trace in the served counters, and every
+            // reservation came back
+            assert_eq!(stats.total_requests, admitted, "served must equal admitted");
+            assert!(stats.total_sheds <= refused, "sheds are a subset of refusals");
+            assert_eq!(handle.outstanding(), 0, "capacity must return to zero");
+        });
+    }
+}

@@ -6,8 +6,17 @@
 //!   oldest pending request has waited `max_wait`;
 //! - never split a request across batches (a request's samples stay
 //!   together, simplifying seed bookkeeping).
+//!
+//! The batcher is generic over its [`Carrier`] — the threaded path
+//! batches [`Envelope`]s, the async core batches
+//! [`super::request::AsyncEnvelope`]s — with `Envelope` as the default
+//! type parameter so existing threaded-path code reads unchanged. The
+//! batcher itself is discipline-agnostic: dispatch-and-wait (the
+//! threaded leader) and continuous refill (the async collector) are
+//! caller policies over the same `push`/`ready`/`pop` surface, and the
+//! tests below pin the occupancy advantage continuous refill buys.
 
-use super::request::Envelope;
+use super::request::{Carrier, Envelope};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -28,23 +37,23 @@ impl Default for BatchPolicy {
 
 /// A dispatched batch of same-model envelopes.
 #[derive(Debug)]
-pub struct Batch {
+pub struct Batch<C = Envelope> {
     pub model: String,
-    pub envelopes: Vec<Envelope>,
+    pub envelopes: Vec<C>,
     /// Total samples across envelopes.
     pub samples: usize,
 }
 
 /// Per-model pending queue with the dispatch policy.
 #[derive(Debug)]
-pub struct Batcher {
+pub struct Batcher<C: Carrier = Envelope> {
     policy: BatchPolicy,
-    pending: VecDeque<Envelope>,
+    pending: VecDeque<C>,
     pending_samples: usize,
     model: String,
 }
 
-impl Batcher {
+impl<C: Carrier> Batcher<C> {
     pub fn new(model: &str, policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         Batcher {
@@ -56,9 +65,9 @@ impl Batcher {
     }
 
     /// Enqueue a request envelope (must match this batcher's model).
-    pub fn push(&mut self, env: Envelope) {
-        assert_eq!(env.request.model, self.model, "routed to wrong batcher");
-        self.pending_samples += env.request.count;
+    pub fn push(&mut self, env: C) {
+        assert_eq!(env.request().model, self.model, "routed to wrong batcher");
+        self.pending_samples += env.request().count;
         self.pending.push_back(env);
     }
 
@@ -72,7 +81,7 @@ impl Batcher {
 
     /// Age of the oldest pending request, if any.
     pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
-        self.pending.front().map(|e| now.duration_since(e.request.arrival))
+        self.pending.front().map(|e| now.duration_since(e.request().arrival))
     }
 
     /// Should we dispatch now?
@@ -84,16 +93,24 @@ impl Batcher {
             || self.oldest_wait(now).unwrap() >= self.policy.max_wait
     }
 
+    /// The wall-clock instant `max_wait` forces dispatch of the oldest
+    /// pending request — what an idle collector parks its condvar wait
+    /// on. `None` when nothing is pending: there is no timer to honor,
+    /// so the caller can park unconditionally instead of spinning.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.pending.front().map(|e| e.request().arrival + self.policy.max_wait)
+    }
+
     /// Pop a batch respecting `max_batch` (never splits an envelope; a
     /// single over-sized request dispatches alone).
-    pub fn pop(&mut self) -> Option<Batch> {
+    pub fn pop(&mut self) -> Option<Batch<C>> {
         if self.pending.is_empty() {
             return None;
         }
         let mut envs = Vec::new();
         let mut samples = 0usize;
         while let Some(front) = self.pending.front() {
-            let c = front.request.count;
+            let c = front.request().count;
             if !envs.is_empty() && samples + c > self.policy.max_batch {
                 break;
             }
@@ -174,6 +191,121 @@ mod tests {
         b.push(env(0, 9, now));
         let batch = b.pop().unwrap();
         assert_eq!(batch.samples, 9);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_and_empties_to_none() {
+        let mut b = Batcher::new(
+            "m",
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+        );
+        // no pending work → no timer → collectors park instead of spinning
+        assert!(b.deadline().is_none());
+        let t0 = Instant::now();
+        b.push(env(0, 1, t0));
+        b.push(env(1, 1, t0 + Duration::from_millis(1)));
+        assert_eq!(b.deadline(), Some(t0 + Duration::from_millis(5)), "oldest head owns the timer");
+        b.pop().unwrap();
+        assert!(b.deadline().is_none(), "drained batcher must drop its timer");
+    }
+
+    /// Virtual service time for sample `id` — deliberately uneven so a
+    /// dispatch-and-wait round is held hostage by its slowest sample.
+    fn service_s(id: u64) -> f64 {
+        1.0 + (id % 3) as f64
+    }
+
+    #[test]
+    fn continuous_refill_occupancy_beats_dispatch_and_wait() {
+        let now = Instant::now();
+        let jobs = 24u64;
+        let slots = 4usize;
+        let busy: f64 = (0..jobs).map(service_s).sum();
+
+        // dispatch-and-wait: pop a full batch, hold every slot until the
+        // slowest sample lands, only then collect the next batch
+        let mut dw =
+            Batcher::new("m", BatchPolicy { max_batch: slots, max_wait: Duration::ZERO });
+        for i in 0..jobs {
+            dw.push(env(i, 1, now));
+        }
+        let mut wall_dw = 0.0f64;
+        while let Some(batch) = dw.pop() {
+            let slowest = batch
+                .envelopes
+                .iter()
+                .map(|e| service_s(e.request.seed))
+                .fold(0.0, f64::max);
+            wall_dw += slowest;
+        }
+
+        // continuous refill: whenever a slot frees, top it up with the
+        // next pending sample immediately (single-slot pops)
+        let mut cont = Batcher::new("m", BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
+        for i in 0..jobs {
+            cont.push(env(i, 1, now));
+        }
+        let mut slot_free = vec![0.0f64; slots];
+        while let Some(batch) = cont.pop() {
+            let slot = slot_free
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+            slot_free[slot] += service_s(batch.envelopes[0].request.seed);
+        }
+        let wall_cont = slot_free.iter().fold(0.0f64, |a, &b| a.max(b));
+
+        let occ_dw = busy / (slots as f64 * wall_dw);
+        let occ_cont = busy / (slots as f64 * wall_cont);
+        assert!(
+            occ_cont >= occ_dw,
+            "refill occupancy {occ_cont:.3} must be >= dispatch-and-wait {occ_dw:.3}"
+        );
+        assert!(
+            occ_cont > occ_dw + 0.05,
+            "uneven service times must make refill strictly better \
+             ({occ_cont:.3} vs {occ_dw:.3})"
+        );
+    }
+
+    #[test]
+    fn batches_async_envelopes_too() {
+        use crate::coordinator::completion::{completion, CapacityGuard};
+        use crate::coordinator::request::AsyncEnvelope;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        let counter = Arc::new(AtomicUsize::new(0));
+        let now = Instant::now();
+        let mut b: Batcher<AsyncEnvelope> =
+            Batcher::new("m", BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+        let mut handles = Vec::new();
+        for i in 0..2u64 {
+            let (tx, rx) = completion();
+            handles.push(rx);
+            b.push(AsyncEnvelope {
+                request: GenRequest {
+                    id: RequestId(i),
+                    model: "m".into(),
+                    seed: i,
+                    label: None,
+                    count: 1,
+                    arrival: now,
+                },
+                reply: tx,
+                guard: CapacityGuard::reserve(&counter, 1, 8).unwrap(),
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+        let batch = b.pop().unwrap();
+        assert_eq!(batch.samples, 2);
+        // dropping the batch drops the envelopes: reservations release,
+        // waiters wake with None — no leak on any exit path
+        drop(batch);
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+        assert!(handles.into_iter().all(|h| h.wait().is_none()));
     }
 
     #[test]

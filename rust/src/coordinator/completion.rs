@@ -1,0 +1,295 @@
+//! Oneshot completion channels and RAII capacity accounting for the
+//! async serving core ([`super::async_server`]).
+//!
+//! A [`completion`] pair is the future half of the submit path: the
+//! caller keeps the [`CompletionHandle`] and parks on it (or polls it),
+//! the shard worker consumes the [`CompletionSender`] exactly once when
+//! the batch lands. Dropping the sender without sending wakes the waiter
+//! with `None` — the same disconnection semantics `mpsc` gives the
+//! threaded path, so neither engine can strand a client.
+//!
+//! [`CapacityGuard`] makes the bounded-queue invariant structural:
+//! reserving admission capacity returns a guard that releases the
+//! reservation in `Drop`, so every exit path — completed, shed at
+//! admission, client gone, worker panic unwinding — gives the slots back
+//! exactly once. The happy path calls [`CapacityGuard::release`]
+//! explicitly *before* the completion is sent so a closed-loop client
+//! can immediately resubmit into the freed slot (the same
+//! release-before-reply ordering the threaded worker documents).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Slot state machine: `Pending → Ready(T)` (sender delivered) or
+/// `Pending → Dropped` (sender destroyed without sending). Terminal
+/// states never transition again.
+enum CompletionState<T> {
+    Pending,
+    Ready(T),
+    Dropped,
+}
+
+struct Shared<T> {
+    slot: Mutex<CompletionState<T>>,
+    cv: Condvar,
+}
+
+/// Producer half of a [`completion`] pair; consumed by [`CompletionSender::send`].
+pub struct CompletionSender<T> {
+    shared: Arc<Shared<T>>,
+    sent: bool,
+}
+
+/// Consumer half of a [`completion`] pair; consumed by [`CompletionHandle::wait`].
+pub struct CompletionHandle<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Build a oneshot completion pair.
+pub fn completion<T>() -> (CompletionSender<T>, CompletionHandle<T>) {
+    let shared = Arc::new(Shared {
+        slot: Mutex::new(CompletionState::Pending),
+        cv: Condvar::new(),
+    });
+    (
+        CompletionSender { shared: Arc::clone(&shared), sent: false },
+        CompletionHandle { shared },
+    )
+}
+
+impl<T> CompletionSender<T> {
+    /// Deliver the value and wake the waiter. Consumes the sender, so a
+    /// completion can fire at most once.
+    pub fn send(mut self, value: T) {
+        {
+            let mut slot =
+                self.shared.slot.lock().unwrap_or_else(PoisonError::into_inner);
+            *slot = CompletionState::Ready(value);
+        }
+        self.sent = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl<T> Drop for CompletionSender<T> {
+    fn drop(&mut self) {
+        if self.sent {
+            return;
+        }
+        {
+            let mut slot =
+                self.shared.slot.lock().unwrap_or_else(PoisonError::into_inner);
+            if let CompletionState::Pending = *slot {
+                *slot = CompletionState::Dropped;
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+}
+
+impl<T> std::fmt::Debug for CompletionSender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompletionSender").field("sent", &self.sent).finish()
+    }
+}
+
+impl<T> CompletionHandle<T> {
+    /// Block until the completion fires. `None` means the sender was
+    /// dropped without sending (server shut down mid-flight).
+    pub fn wait(self) -> Option<T> {
+        let mut slot = self.shared.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            match std::mem::replace(&mut *slot, CompletionState::Dropped) {
+                CompletionState::Ready(value) => return Some(value),
+                CompletionState::Dropped => return None,
+                CompletionState::Pending => {
+                    *slot = CompletionState::Pending;
+                    slot = self
+                        .shared
+                        .cv
+                        .wait(slot)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// Block up to `timeout`. `Err(self)` hands the handle back on
+    /// timeout so the caller can keep waiting or drop it.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Option<T>, CompletionHandle<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.shared.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            match std::mem::replace(&mut *slot, CompletionState::Dropped) {
+                CompletionState::Ready(value) => {
+                    drop(slot);
+                    return Ok(Some(value));
+                }
+                CompletionState::Dropped => {
+                    drop(slot);
+                    return Ok(None);
+                }
+                CompletionState::Pending => {
+                    *slot = CompletionState::Pending;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(slot);
+                        return Err(self);
+                    }
+                    let (guard, _) = self
+                        .shared
+                        .cv
+                        .wait_timeout(slot, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    slot = guard;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking readiness probe (true once the sender delivered or
+    /// disconnected).
+    pub fn is_ready(&self) -> bool {
+        let slot = self.shared.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        !matches!(*slot, CompletionState::Pending)
+    }
+}
+
+impl<T> std::fmt::Debug for CompletionHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompletionHandle").field("ready", &self.is_ready()).finish()
+    }
+}
+
+/// RAII reservation against a shared admission counter.
+///
+/// [`CapacityGuard::reserve`] atomically bumps `counter` by `count` iff
+/// the result stays within `limit`; the reservation is returned exactly
+/// once — by an explicit [`CapacityGuard::release`] or, failing that, by
+/// `Drop`. Double release is impossible (the guard disarms itself).
+#[derive(Debug)]
+pub struct CapacityGuard {
+    counter: Arc<AtomicUsize>,
+    count: usize,
+    armed: bool,
+}
+
+impl CapacityGuard {
+    /// Try to reserve `count` slots. On failure returns the counter value
+    /// that made the reservation overflow `limit`.
+    pub fn reserve(
+        counter: &Arc<AtomicUsize>,
+        count: usize,
+        limit: usize,
+    ) -> Result<CapacityGuard, usize> {
+        let mut cur = counter.load(Ordering::SeqCst);
+        loop {
+            if cur + count > limit {
+                return Err(cur);
+            }
+            match counter.compare_exchange(
+                cur,
+                cur + count,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        Ok(CapacityGuard { counter: Arc::clone(counter), count, armed: true })
+    }
+
+    /// Give the reservation back. Idempotent: the first call disarms the
+    /// guard, later calls (and `Drop`) are no-ops.
+    pub fn release(&mut self) {
+        if self.armed {
+            self.armed = false;
+            self.counter.fetch_sub(self.count, Ordering::SeqCst);
+        }
+    }
+
+    /// Reserved slot count.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+impl Drop for CapacityGuard {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_then_wait_delivers() {
+        let (tx, rx) = completion();
+        tx.send(42u32);
+        assert_eq!(rx.wait(), Some(42));
+    }
+
+    #[test]
+    fn wait_blocks_until_send() {
+        let (tx, rx) = completion();
+        let waiter = thread::spawn(move || rx.wait());
+        thread::sleep(Duration::from_millis(10));
+        tx.send("done".to_string());
+        assert_eq!(waiter.join().unwrap(), Some("done".to_string()));
+    }
+
+    #[test]
+    fn dropped_sender_wakes_with_none() {
+        let (tx, rx) = completion::<u32>();
+        let waiter = thread::spawn(move || rx.wait());
+        thread::sleep(Duration::from_millis(10));
+        drop(tx);
+        assert_eq!(waiter.join().unwrap(), None);
+    }
+
+    #[test]
+    fn wait_timeout_returns_handle_then_value() {
+        let (tx, rx) = completion();
+        let rx = match rx.wait_timeout(Duration::from_millis(5)) {
+            Err(rx) => rx,
+            Ok(v) => panic!("must time out while pending, got {v:?}"),
+        };
+        assert!(!rx.is_ready());
+        tx.send(7u64);
+        assert!(rx.is_ready());
+        match rx.wait_timeout(Duration::from_millis(5)) {
+            Ok(v) => assert_eq!(v, Some(7)),
+            Err(_) => panic!("value was ready, wait_timeout must not time out"),
+        }
+    }
+
+    #[test]
+    fn capacity_guard_releases_exactly_once() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut g = CapacityGuard::reserve(&counter, 3, 4).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+        // beyond the limit → typed failure carrying the observed count
+        assert_eq!(CapacityGuard::reserve(&counter, 2, 4).unwrap_err(), 3);
+        g.release();
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+        // second release and the Drop are both no-ops
+        g.release();
+        drop(g);
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn capacity_guard_drop_releases() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let _g = CapacityGuard::reserve(&counter, 2, 8).unwrap();
+            assert_eq!(counter.load(Ordering::SeqCst), 2);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+}

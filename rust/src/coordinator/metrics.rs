@@ -14,6 +14,10 @@ pub struct ServingMetrics {
     pub batch_size: Histogram,
     pub requests: u64,
     pub samples: u64,
+    /// Requests refused at admission by SLO-aware load shedding
+    /// ([`crate::coordinator::SubmitError::Shed`]); never counted in
+    /// `requests`/`samples`.
+    pub sheds: u64,
     started: Instant,
 }
 
@@ -31,6 +35,7 @@ impl ServingMetrics {
             batch_size: Histogram::exponential(1.0, 1024.0, 10),
             requests: 0,
             samples: 0,
+            sheds: 0,
             started: Instant::now(),
         }
     }
@@ -43,6 +48,11 @@ impl ServingMetrics {
         self.samples += samples as u64;
     }
 
+    /// Count one shed (admission refused to protect the deadline SLO).
+    pub fn record_shed(&mut self) {
+        self.sheds += 1;
+    }
+
     /// Fold another metrics instance into this one (used to aggregate
     /// per-shard metrics into per-model and whole-server views). The
     /// throughput window extends back to the *earlier* of the two start
@@ -53,6 +63,7 @@ impl ServingMetrics {
         self.batch_size.merge(&other.batch_size);
         self.requests += other.requests;
         self.samples += other.samples;
+        self.sheds += other.sheds;
         self.started = self.started.min(other.started);
     }
 
@@ -92,9 +103,11 @@ mod tests {
             a.record(0.001 * i as f64, 0.0001, 2, 2);
             b.record(0.010 * i as f64, 0.0002, 8, 1);
         }
+        b.record_shed();
         let b_p99 = b.latency.quantile(0.99);
         a.merge(&b);
         assert_eq!(a.requests, 10);
+        assert_eq!(a.sheds, 1, "merge must fold sheds");
         assert_eq!(a.samples, 15);
         assert_eq!(a.latency.count(), 10);
         // the merged distribution includes b's slower tail
@@ -107,8 +120,10 @@ mod tests {
         for i in 1..=10 {
             m.record(0.001 * i as f64, 0.0001, 4, 4);
         }
-        assert_eq!(m.requests, 10);
+        m.record_shed();
+        assert_eq!(m.requests, 10, "a shed is not a served request");
         assert_eq!(m.samples, 40);
+        assert_eq!(m.sheds, 1);
         assert!(m.latency.quantile(0.5) >= 0.001);
         assert!(m.summary().contains("requests=10"));
     }

@@ -9,23 +9,44 @@
 //!
 //! # Topology
 //!
-//! A [`Server`] runs N **shards** — each shard models one PhotoGAN chip
-//! and owns a leader thread (per-model [`Batcher`]s) plus a worker pool
-//! executing [`server::BatchExecutor`] batches. A [`RoutingPolicy`] picks
-//! the shard at submission time, and each shard's in-flight samples are
-//! bounded by `queue_depth`: overload is a typed
-//! [`server::SubmitError::QueueFull`] rejection, never unbounded queuing.
+//! Two serving cores share one request model and one statistics shape:
 //!
-//! Built entirely on std threads + channels (no tokio in the offline
-//! crate set — see ARCHITECTURE.md).
+//! - The threaded [`Server`] runs N **shards** — each shard models one
+//!   PhotoGAN chip and owns a leader thread (per-model [`Batcher`]s) plus
+//!   a worker pool executing [`server::BatchExecutor`] batches in
+//!   dispatch-and-wait rounds.
+//! - The [`AsyncServer`] replaces the leader with worker-as-collector
+//!   **continuous batching**: submissions are one-CAS pushes onto a
+//!   lock-free [`queue::JobQueue`], replies are oneshot
+//!   [`completion::CompletionHandle`] futures, and a freed worker slot
+//!   refills from the queue the instant its batch lands. It also carries
+//!   SLO-aware admission control ([`server::SubmitError::Shed`]).
+//!
+//! A [`RoutingPolicy`] picks the shard at submission time, and each
+//! shard's in-flight samples are bounded by `queue_depth`: overload is a
+//! typed [`server::SubmitError::QueueFull`] rejection, never unbounded
+//! queuing. On the async core the bound is structural — an RAII
+//! [`completion::CapacityGuard`] rides inside every envelope, so every
+//! exit path returns its reservation exactly once.
+//!
+//! Built entirely on std threads, atomics, and condvars (no tokio in the
+//! offline crate set — see ARCHITECTURE.md).
 
+pub mod async_server;
 pub mod batcher;
+pub mod completion;
 pub mod metrics;
+pub mod queue;
 pub mod request;
 pub mod routing;
 pub mod server;
 
+pub use async_server::{AsyncServer, AsyncServerConfig, AsyncSubmitHandle};
 pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use request::{GenRequest, GenResponse, RequestId};
+pub use completion::{completion, CapacityGuard, CompletionHandle, CompletionSender};
+pub use queue::JobQueue;
+pub use request::{AsyncEnvelope, GenRequest, GenResponse, PendingReply, RequestId};
 pub use routing::RoutingPolicy;
-pub use server::{Server, ServerConfig, ServerStats, ShardStats, SubmitError, SubmitHandle};
+pub use server::{
+    Server, ServerConfig, ServerStats, ShardStats, SubmitError, SubmitHandle, TrafficSink,
+};

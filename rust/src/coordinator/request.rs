@@ -1,6 +1,14 @@
 //! Request/response types for the serving layer.
+//!
+//! Two envelope shapes share one [`GenRequest`]: the threaded path's
+//! [`Envelope`] replies over an `mpsc` channel, the async core's
+//! [`AsyncEnvelope`] replies over a oneshot completion and carries its
+//! own RAII capacity reservation. The [`Carrier`] trait is what lets
+//! [`super::batcher::Batcher`] batch either shape, and [`PendingReply`]
+//! is the wait-side dual the load generators block on.
 
-use std::sync::mpsc::Sender;
+use super::completion::{CapacityGuard, CompletionHandle, CompletionSender};
+use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 /// Monotonic request identifier.
@@ -45,6 +53,55 @@ pub struct GenResponse {
 pub struct Envelope {
     pub request: GenRequest,
     pub reply: Sender<GenResponse>,
+}
+
+/// Anything a [`super::batcher::Batcher`] can batch: a request plus
+/// whatever reply/bookkeeping machinery rides along.
+pub trait Carrier: std::fmt::Debug {
+    fn request(&self) -> &GenRequest;
+}
+
+impl Carrier for Envelope {
+    fn request(&self) -> &GenRequest {
+        &self.request
+    }
+}
+
+/// Async-core envelope: request + oneshot completion + the admission
+/// reservation, which travels with the job so every exit path (served,
+/// dropped at shutdown, panicking worker) releases capacity exactly once.
+#[derive(Debug)]
+pub struct AsyncEnvelope {
+    pub request: GenRequest,
+    pub reply: CompletionSender<GenResponse>,
+    pub guard: CapacityGuard,
+}
+
+impl Carrier for AsyncEnvelope {
+    fn request(&self) -> &GenRequest {
+        &self.request
+    }
+}
+
+/// The caller-side wait on an in-flight request — `Receiver` for the
+/// threaded path, [`CompletionHandle`] for the async core — so the load
+/// generators ([`crate::workload::generator`]) drive either engine.
+pub trait PendingReply {
+    /// Block for the response; `None` means the server dropped the
+    /// request (shutdown mid-flight).
+    fn wait(self) -> Option<GenResponse>;
+}
+
+impl PendingReply for Receiver<GenResponse> {
+    fn wait(self) -> Option<GenResponse> {
+        self.recv().ok()
+    }
+}
+
+impl PendingReply for CompletionHandle<GenResponse> {
+    fn wait(self) -> Option<GenResponse> {
+        CompletionHandle::wait(self)
+    }
 }
 
 #[cfg(test)]

@@ -78,6 +78,38 @@ impl FromStr for RoutingPolicy {
     }
 }
 
+/// Route one request: the policy dispatch shared by the threaded
+/// [`crate::coordinator::Server`] and the async core, so the two engines
+/// cannot drift. `rr` is the caller's round-robin cursor; `load` reports
+/// a shard's outstanding samples (only consulted by
+/// [`RoutingPolicy::LeastOutstanding`]).
+pub(crate) fn pick_shard(
+    policy: RoutingPolicy,
+    model: &str,
+    shards: usize,
+    rr: &std::sync::atomic::AtomicUsize,
+    load: impl Fn(usize) -> usize,
+) -> usize {
+    match policy {
+        RoutingPolicy::RoundRobin => {
+            rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % shards
+        }
+        RoutingPolicy::LeastOutstanding => {
+            let mut best = 0usize;
+            let mut best_load = load(0);
+            for s in 1..shards {
+                let l = load(s);
+                if l < best_load {
+                    best = s;
+                    best_load = l;
+                }
+            }
+            best
+        }
+        RoutingPolicy::ModelAffinity => (affinity_hash(model) % shards as u64) as usize,
+    }
+}
+
 /// Stable 64-bit FNV-1a hash used by [`RoutingPolicy::ModelAffinity`]; the
 /// shard assignment must not change across runs or platforms.
 pub(crate) fn affinity_hash(s: &str) -> u64 {

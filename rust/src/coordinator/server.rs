@@ -8,8 +8,8 @@
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::ServingMetrics;
-use super::request::{Envelope, GenRequest, GenResponse, RequestId};
-use super::routing::{affinity_hash, RoutingPolicy};
+use super::request::{Envelope, GenRequest, GenResponse, PendingReply, RequestId};
+use super::routing::{pick_shard, RoutingPolicy};
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -68,6 +68,11 @@ pub enum SubmitError {
     /// The routed shard's bounded queue cannot admit the request
     /// (backpressure): `outstanding + count > limit`.
     QueueFull { shard: usize, outstanding: usize, limit: usize },
+    /// SLO-aware load shedding (async core only): the shard predicts the
+    /// request would miss its completion deadline given the current
+    /// backlog, so it is refused at admission rather than queued to fail.
+    /// Times are integer milliseconds so the error stays `Eq`.
+    Shed { shard: usize, outstanding: usize, predicted_ms: u64, deadline_ms: u64 },
     /// The server has shut down (its leader threads are gone).
     Shutdown,
 }
@@ -82,6 +87,13 @@ impl fmt::Display for SubmitError {
                 write!(
                     f,
                     "shard {shard} queue full ({outstanding}/{limit} samples outstanding)"
+                )
+            }
+            SubmitError::Shed { shard, outstanding, predicted_ms, deadline_ms } => {
+                write!(
+                    f,
+                    "shard {shard} shed load ({outstanding} samples queued, predicted \
+                     {predicted_ms}ms > deadline {deadline_ms}ms)"
                 )
             }
             SubmitError::Shutdown => write!(f, "server is shut down"),
@@ -115,6 +127,84 @@ pub struct ServerStats {
     /// Non-finite latency observations shed by the shard histograms
     /// ([`crate::util::stats::Histogram::dropped`]), summed server-wide.
     pub dropped_samples: u64,
+    /// Requests refused at admission by SLO-aware load shedding
+    /// ([`SubmitError::Shed`]), summed server-wide. Always 0 on the
+    /// threaded path (only the async core sheds).
+    pub total_sheds: u64,
+}
+
+/// Merge per-shard metric maps into one [`ServerStats`] snapshot — the
+/// aggregation shared by the threaded [`Server`] and the async core so
+/// the two engines report identically shaped statistics.
+pub(crate) fn aggregate_stats<'a>(
+    shards: impl Iterator<Item = &'a Mutex<HashMap<String, ServingMetrics>>>,
+) -> ServerStats {
+    let mut merged: HashMap<String, ServingMetrics> = HashMap::new();
+    let mut per_shard = Vec::new();
+    let mut total_requests = 0u64;
+    let mut total_samples = 0u64;
+    let mut dropped_samples = 0u64;
+    let mut total_sheds = 0u64;
+    for (shard_id, metrics) in shards.enumerate() {
+        let guard = metrics.lock().unwrap();
+        let mut shard_requests = 0u64;
+        let mut shard_samples = 0u64;
+        let mut shard_all: Option<ServingMetrics> = None;
+        let mut per_model: Vec<(String, String)> = Vec::with_capacity(guard.len());
+        for (m, s) in guard.iter() {
+            shard_requests += s.requests;
+            shard_samples += s.samples;
+            dropped_samples += s.latency.dropped();
+            total_sheds += s.sheds;
+            per_model.push((m.clone(), s.summary()));
+            merged
+                .entry(m.clone())
+                .and_modify(|acc| acc.merge(s))
+                .or_insert_with(|| s.clone());
+            match shard_all {
+                Some(ref mut acc) => acc.merge(s),
+                None => shard_all = Some(s.clone()),
+            }
+        }
+        per_model.sort();
+        total_requests += shard_requests;
+        total_samples += shard_samples;
+        per_shard.push(ShardStats {
+            shard: shard_id,
+            requests: shard_requests,
+            samples: shard_samples,
+            per_model,
+            summary: shard_all.map(|m| m.summary()).unwrap_or_else(|| "idle".to_string()),
+        });
+    }
+    let per_model = merged.into_iter().map(|(m, s)| (m, s.summary())).collect();
+    ServerStats {
+        per_model,
+        per_shard,
+        total_requests,
+        total_samples,
+        dropped_samples,
+        total_sheds,
+    }
+}
+
+/// Engine-agnostic submission endpoint: what the load generators
+/// ([`crate::workload::generator`]) need from either serving core. The
+/// threaded [`SubmitHandle`] pends on an `mpsc` receiver, the async
+/// handle on a completion future; `Clone + Send` is what lets a
+/// closed-loop generator hand every client thread its own endpoint.
+pub trait TrafficSink: Clone + Send + 'static {
+    /// The caller-side wait for one in-flight request.
+    type Pending: PendingReply;
+
+    /// Submit a generation request (see [`SubmitHandle::submit`]).
+    fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Result<Self::Pending, SubmitError>;
 }
 
 enum LeaderMsg {
@@ -152,25 +242,12 @@ impl Clone for SubmitHandle {
 }
 
 impl SubmitHandle {
-    /// Pick a shard for `model` under the handle's routing policy.
+    /// Pick a shard for `model` under the handle's routing policy (the
+    /// dispatch itself is [`pick_shard`], shared with the async core).
     fn route(&self, model: &str) -> usize {
-        let n = self.intakes.len();
-        match self.routing {
-            RoutingPolicy::RoundRobin => self.rr.fetch_add(1, Ordering::SeqCst) % n,
-            RoutingPolicy::LeastOutstanding => {
-                let mut best = 0usize;
-                let mut best_load = usize::MAX;
-                for (i, o) in self.outstanding.iter().enumerate() {
-                    let load = o.load(Ordering::SeqCst);
-                    if load < best_load {
-                        best = i;
-                        best_load = load;
-                    }
-                }
-                best
-            }
-            RoutingPolicy::ModelAffinity => (affinity_hash(model) % n as u64) as usize,
-        }
+        pick_shard(self.routing, model, self.intakes.len(), &self.rr, |s| {
+            self.outstanding[s].load(Ordering::SeqCst)
+        })
     }
 
     /// Submit a generation request; returns the channel the response will
@@ -222,6 +299,20 @@ impl SubmitHandle {
             return Err(SubmitError::Shutdown);
         }
         Ok(rx)
+    }
+}
+
+impl TrafficSink for SubmitHandle {
+    type Pending = Receiver<GenResponse>;
+
+    fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+        label: Option<u32>,
+        count: usize,
+    ) -> Result<Receiver<GenResponse>, SubmitError> {
+        SubmitHandle::submit(self, model, seed, label, count)
     }
 }
 
@@ -316,44 +407,7 @@ impl Server {
 
     /// Metrics snapshot across all shards.
     pub fn stats(&self) -> ServerStats {
-        let mut merged: HashMap<String, ServingMetrics> = HashMap::new();
-        let mut per_shard = Vec::with_capacity(self.shards.len());
-        let mut total_requests = 0u64;
-        let mut total_samples = 0u64;
-        let mut dropped_samples = 0u64;
-        for (shard_id, shard) in self.shards.iter().enumerate() {
-            let guard = shard.metrics.lock().unwrap();
-            let mut shard_requests = 0u64;
-            let mut shard_samples = 0u64;
-            let mut shard_all: Option<ServingMetrics> = None;
-            let mut per_model: Vec<(String, String)> = Vec::with_capacity(guard.len());
-            for (m, s) in guard.iter() {
-                shard_requests += s.requests;
-                shard_samples += s.samples;
-                dropped_samples += s.latency.dropped();
-                per_model.push((m.clone(), s.summary()));
-                merged
-                    .entry(m.clone())
-                    .and_modify(|acc| acc.merge(s))
-                    .or_insert_with(|| s.clone());
-                match shard_all {
-                    Some(ref mut acc) => acc.merge(s),
-                    None => shard_all = Some(s.clone()),
-                }
-            }
-            per_model.sort();
-            total_requests += shard_requests;
-            total_samples += shard_samples;
-            per_shard.push(ShardStats {
-                shard: shard_id,
-                requests: shard_requests,
-                samples: shard_samples,
-                per_model,
-                summary: shard_all.map(|m| m.summary()).unwrap_or_else(|| "idle".to_string()),
-            });
-        }
-        let per_model = merged.into_iter().map(|(m, s)| (m, s.summary())).collect();
-        ServerStats { per_model, per_shard, total_requests, total_samples, dropped_samples }
+        aggregate_stats(self.shards.iter().map(|s| s.metrics.as_ref()))
     }
 
     /// Graceful shutdown: drain pending batches on every shard, then join.

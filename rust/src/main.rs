@@ -61,12 +61,14 @@ const COMMANDS: &[CommandSpec] = &[
         name: "serve",
         summary: "multi-shard serving (sim backend needs no artifacts)",
         flags: &[
-            "--backend sim|pjrt  --shards N",
+            "--backend sim|pjrt  --core threaded|async  --shards N",
             "--routing round-robin|least-outstanding|model-affinity",
             "--queue-depth D (typed backpressure beyond)",
+            "--deadline-ms MS (async core: SLO admission control sheds)",
             "--requests R --batch B --workers W --max-wait-ms MS",
             "--time-scale X (sim pacing; 0 = cost model only)",
             "--no-overlap (pace at the sequential cost model)",
+            "--stable-json (deterministic count-only JSON, for diffing runs)",
             "--artifacts DIR  --model NAME",
         ],
         json: true,
@@ -251,6 +253,7 @@ fn cmd_compare(args: &[String]) -> Result<(), ApiError> {
 fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
     const SPEC: &[FlagDef] = &[
         value("backend"),
+        value("core"),
         value("artifacts"),
         value("requests"),
         value("batch"),
@@ -261,8 +264,10 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
         value("queue-depth"),
         value("max-wait-ms"),
         value("time-scale"),
+        value("deadline-ms"),
         switch("no-overlap"),
         switch("json"),
+        switch("stable-json"),
     ];
     let flags = ParsedFlags::parse(args, SPEC)?;
     let time_scale = match flags.get("time-scale") {
@@ -272,8 +277,29 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
             reason: format!("expected a number, got '{scale}'"),
         })?,
     };
+    let engine = match flags.get("core") {
+        None => ServeEngine::Threaded,
+        Some(core) => match core.to_ascii_lowercase().as_str() {
+            "threaded" => ServeEngine::Threaded,
+            "async" => ServeEngine::Async,
+            other => {
+                return Err(ApiError::InvalidFlag {
+                    flag: "core".into(),
+                    reason: format!("unknown core '{other}' (expected threaded or async)"),
+                })
+            }
+        },
+    };
+    let deadline_ms = match flags.get("deadline-ms") {
+        None => None,
+        Some(ms) => Some(ms.parse::<f64>().map_err(|_| ApiError::InvalidFlag {
+            flag: "deadline-ms".into(),
+            reason: format!("expected a number of milliseconds, got '{ms}'"),
+        })?),
+    };
     let stage = ServeStage {
-        engine: ServeEngine::Threaded,
+        engine,
+        deadline_ms,
         backend: flags.get("backend").unwrap_or("sim").to_string(),
         artifacts: flags.get("artifacts").map(str::to_string),
         model: flags.get("model").map(str::to_string),
@@ -299,8 +325,22 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
             stage.shards, stage.routing
         ),
     }
+    let scenario = Scenario::single("cli-serve", StageSpec::Serve(stage));
+    if flags.has("stable-json") {
+        // deterministic count-only JSON: two same-shape runs print
+        // byte-identical output (CI diffs them with `cmp`)
+        let session = Arc::new(Session::new()?);
+        let plan = session.plan(&scenario)?;
+        let outcome = session.run(&plan)?;
+        if let Some(photogan::api::Outcome::Serve(served)) =
+            outcome.stages.first().map(|s| &s.outcome)
+        {
+            println!("{}", served.stable_json());
+        }
+        return Ok(());
+    }
     let json = flags.has("json");
-    let outcome = run_preset(Scenario::single("cli-serve", StageSpec::Serve(stage)), json)?;
+    let outcome = run_preset(scenario, json)?;
     if !json {
         if let Some(photogan::api::Outcome::Serve(served)) =
             outcome.stages.first().map(|s| &s.outcome)
@@ -310,6 +350,9 @@ fn cmd_serve(args: &[String]) -> Result<(), ApiError> {
                     "(absorbed {} shard-queue rejections by draining)",
                     served.rejections
                 );
+            }
+            if served.sheds > 0 {
+                println!("(admission control shed {} requests)", served.sheds);
             }
         }
     }

@@ -1,4 +1,4 @@
-//! Threaded load generation against a live [`crate::coordinator::Server`].
+//! Threaded load generation against a live serving core.
 //!
 //! These are the drivers that used to live as private copies inside
 //! `benches/e2e_serving.rs`, promoted to the library so benches, examples,
@@ -10,6 +10,21 @@
 //!   arrival offsets (latency-under-load / burst load), dropping rejected
 //!   requests instead of retrying.
 //!
+//! Both are generic over [`TrafficSink`], so one implementation drives the
+//! threaded [`crate::coordinator::Server`] and the continuous-batching
+//! [`crate::coordinator::AsyncServer`] identically — which is what the
+//! cross-engine conformance suite leans on.
+//!
+//! Rejection semantics differ by error and loop discipline:
+//!
+//! - `QueueFull` is *transient* backpressure. The closed loop counts it
+//!   and retries (the slot will free); the open loop drops the request
+//!   (open-loop sources do not slow down).
+//! - `Shed` is a *server decision* — the request was refused against the
+//!   deadline SLO, and retrying the identical request would be refused
+//!   again for as long as the backlog stands (a livelock under saturation).
+//!   Both loops count it and move on to the next request.
+//!
 //! **Traffic is deterministic under a fixed seed regardless of worker
 //! interleaving**: every client owns a [`Pcg32::fork`] child stream keyed
 //! by its client id (the same stream layout as
@@ -19,7 +34,8 @@
 //! results, use the virtual-time engine.
 
 use super::mix::TrafficMix;
-use crate::coordinator::server::{SubmitError, SubmitHandle};
+use crate::coordinator::request::PendingReply;
+use crate::coordinator::server::{SubmitError, TrafficSink};
 use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
 use std::time::{Duration, Instant};
@@ -33,6 +49,8 @@ pub struct TrafficReport {
     pub completed: usize,
     /// Typed queue-full rejections observed.
     pub rejections: u64,
+    /// Typed SLO sheds observed (never retried — see the module docs).
+    pub sheds: u64,
     /// End-to-end wall latencies (ms), in completion-collection order.
     pub latencies_ms: Vec<f64>,
     /// Requests admitted per mix model, in mix declaration order.
@@ -47,11 +65,11 @@ impl TrafficReport {
 }
 
 /// Closed-loop load: `clients` threads each keep one request in flight
-/// until they have completed `per_client` requests. Queue-full rejections
-/// are counted and retried (after a yield), so every request eventually
-/// lands unless the server shuts down.
-pub fn closed_loop(
-    handle: &SubmitHandle,
+/// until they have walked `per_client` requests. Queue-full rejections
+/// are counted and retried (after a yield); sheds are counted and the
+/// client moves on to its next request.
+pub fn closed_loop<S: TrafficSink>(
+    handle: &S,
     mix: &TrafficMix,
     clients: usize,
     per_client: usize,
@@ -67,6 +85,7 @@ pub fn closed_loop(
             std::thread::spawn(move || {
                 let mut lats = Vec::with_capacity(per_client);
                 let mut rejected = 0u64;
+                let mut shed = 0u64;
                 let mut submitted = 0usize;
                 let mut counts = vec![0u64; mix.len()];
                 for i in 0..per_client {
@@ -77,7 +96,7 @@ pub fn closed_loop(
                         submitted += 1;
                         match handle.submit(&model, req_seed, Some((i % 10) as u32), 1) {
                             Ok(rx) => {
-                                if let Ok(resp) = rx.recv() {
+                                if let Some(resp) = rx.wait() {
                                     lats.push(resp.total_time * 1e3);
                                 }
                                 counts[m] += 1;
@@ -87,12 +106,17 @@ pub fn closed_loop(
                                 rejected += 1;
                                 std::thread::yield_now();
                             }
+                            Err(SubmitError::Shed { .. }) => {
+                                // server refusal, not transient: next request
+                                shed += 1;
+                                break;
+                            }
                             // server shut down mid-run: stop this client
-                            Err(_) => return (lats, rejected, submitted, counts),
+                            Err(_) => return (lats, rejected, shed, submitted, counts),
                         }
                     }
                 }
-                (lats, rejected, submitted, counts)
+                (lats, rejected, shed, submitted, counts)
             })
         })
         .collect();
@@ -102,11 +126,12 @@ pub fn closed_loop(
         ..TrafficReport::default()
     };
     for t in threads {
-        let (lats, rejected, submitted, counts) =
+        let (lats, rejected, shed, submitted, counts) =
             t.join().expect("workload client thread panicked");
         report.completed += lats.len();
         report.latencies_ms.extend(lats);
         report.rejections += rejected;
+        report.sheds += shed;
         report.submitted += submitted;
         for (slot, n) in report.per_model.iter_mut().zip(counts) {
             slot.1 += n;
@@ -119,11 +144,12 @@ pub fn closed_loop(
 /// stream start, non-decreasing — see
 /// [`crate::workload::ArrivalProcess::schedule`]), pacing the submissions
 /// at `offset × time_scale` wall seconds (`time_scale = 0` submits the
-/// whole stream as one burst). Queue-full rejections are *dropped*, not
-/// retried — open-loop sources do not slow down for an overloaded server,
-/// which is exactly what makes this the backpressure probe.
-pub fn open_loop(
-    handle: &SubmitHandle,
+/// whole stream as one burst). Queue-full rejections and sheds are both
+/// *dropped*, not retried — open-loop sources do not slow down for an
+/// overloaded server, which is exactly what makes this the backpressure
+/// probe — but they are counted separately.
+pub fn open_loop<S: TrafficSink>(
+    handle: &S,
     mix: &TrafficMix,
     offsets_s: &[f64],
     time_scale: f64,
@@ -157,11 +183,12 @@ pub fn open_loop(
                 pending.push(rx);
             }
             Err(SubmitError::QueueFull { .. }) => report.rejections += 1,
+            Err(SubmitError::Shed { .. }) => report.sheds += 1,
             Err(_) => break, // server shut down mid-run
         }
     }
     for rx in pending {
-        if let Ok(resp) = rx.recv() {
+        if let Some(resp) = rx.wait() {
             report.latencies_ms.push(resp.total_time * 1e3);
             report.completed += 1;
         }
@@ -172,6 +199,7 @@ pub fn open_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::async_server::{AsyncServer, AsyncServerConfig};
     use crate::coordinator::server::{BatchExecutor, Server, ServerConfig};
     use crate::coordinator::BatchPolicy;
     use std::sync::Arc;
@@ -210,6 +238,15 @@ mod tests {
     }
 
     #[test]
+    fn closed_loop_drives_the_async_core_too() {
+        let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+        let report = closed_loop(&server.handle(), &mix_ab(), 4, 16, 42);
+        assert_eq!(report.completed, 64);
+        assert_eq!(report.sheds, 0);
+        server.shutdown();
+    }
+
+    #[test]
     fn open_loop_burst_counts_rejections_against_a_tiny_queue() {
         let server = Server::start(
             Arc::new(Stub),
@@ -243,5 +280,67 @@ mod tests {
             r.per_model
         };
         assert_eq!(run(), run(), "model sequence must not depend on scheduling");
+    }
+
+    #[test]
+    fn engines_admit_identical_model_sequences() {
+        // the whole point of TrafficSink: the submission stream a seed
+        // produces must be engine-independent
+        let threaded = {
+            let server = Server::start(Arc::new(Stub), ServerConfig::default());
+            let r = closed_loop(&server.handle(), &mix_ab(), 3, 32, 9);
+            server.shutdown();
+            r.per_model
+        };
+        let async_ = {
+            let server = AsyncServer::start(Arc::new(Stub), AsyncServerConfig::default());
+            let r = closed_loop(&server.handle(), &mix_ab(), 3, 32, 9);
+            server.shutdown();
+            r.per_model
+        };
+        assert_eq!(threaded, async_);
+    }
+
+    /// Slow executor for shedding: every batch takes ~2ms.
+    struct SlowStub;
+
+    impl BatchExecutor for SlowStub {
+        fn models(&self) -> Vec<String> {
+            vec!["a".into(), "b".into()]
+        }
+
+        fn elements_per_sample(&self, _m: &str) -> usize {
+            1
+        }
+
+        fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+            std::thread::sleep(Duration::from_millis(2));
+            vec![0.0; entries.len()]
+        }
+    }
+
+    #[test]
+    fn closed_loop_moves_past_sheds_instead_of_livelocking() {
+        // deadline far below the service estimate: once the estimate is
+        // seeded, nearly everything sheds — the loop must still terminate
+        // with submitted bounded by clients × per_client (no shed retries)
+        let server = AsyncServer::start(
+            Arc::new(SlowStub),
+            AsyncServerConfig {
+                policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+                workers: 1,
+                deadline: Some(Duration::from_micros(10)),
+                ..AsyncServerConfig::default()
+            },
+        );
+        let report = closed_loop(&server.handle(), &mix_ab(), 2, 8, 11);
+        assert!(report.sheds > 0, "tiny deadline must shed");
+        assert_eq!(
+            report.completed as u64 + report.sheds,
+            16,
+            "every walked request either completed or shed exactly once"
+        );
+        let stats = server.shutdown();
+        assert_eq!(stats.total_sheds, report.sheds, "server and client shed counts agree");
     }
 }

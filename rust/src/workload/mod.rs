@@ -9,9 +9,11 @@
 //! - [`ArrivalProcess`] — closed-loop, open-loop Poisson, bursty on/off,
 //!   and recorded-trace arrival processes, materialized deterministically
 //!   from seeded [`crate::util::rng::Pcg32`] streams.
-//! - [`generator`] — threaded load drivers for the real multi-shard
-//!   coordinator (promoted out of `benches/e2e_serving.rs`); traffic
-//!   sequences are reproducible under a fixed seed regardless of worker
+//! - [`generator`] — threaded load drivers generic over
+//!   [`crate::coordinator::TrafficSink`], so one implementation drives
+//!   both the threaded coordinator and the async continuous-batching
+//!   core (promoted out of `benches/e2e_serving.rs`); traffic sequences
+//!   are reproducible under a fixed seed regardless of worker
 //!   interleaving.
 //! - [`vserve`] — a deterministic virtual-time discrete-event simulation
 //!   of the same serving semantics (routing, bounded queues, dynamic
@@ -20,7 +22,7 @@
 //!   byte-identical for a fixed seed.
 //!
 //! Layering: `workload` sits between `coordinator` (it drives
-//! [`crate::coordinator::SubmitHandle`]s and mirrors
+//! [`crate::coordinator::TrafficSink`]s and mirrors
 //! [`crate::coordinator::RoutingPolicy`]) and `api` (which compiles
 //! scenarios into mixes, arrivals, and virtual fleet shapes). It never
 //! depends on `api`.

@@ -89,6 +89,16 @@ pub struct VirtualServeConfig {
     /// Periodic re-calibration outages; `None` (the default) keeps the
     /// pre-fidelity behavior byte-identical.
     pub calibration: Option<CalibrationConfig>,
+    /// Completion-deadline SLO (virtual seconds) — the deterministic
+    /// mirror of [`crate::coordinator::AsyncServerConfig::deadline`]. A
+    /// submission whose predicted completion (post-admission backlog ×
+    /// per-sample service estimate ÷ workers) exceeds the deadline is
+    /// shed instead of queued. The estimate here is
+    /// `batch_latency_s(model, max_batch) / max_batch` from the cost
+    /// model — known upfront, where the async core learns it by EWMA, so
+    /// the virtual engine sheds from the first arrival while the real
+    /// core's first request always passes. `None` disables shedding.
+    pub deadline_s: Option<f64>,
 }
 
 impl Default for VirtualServeConfig {
@@ -101,6 +111,7 @@ impl Default for VirtualServeConfig {
             queue_depth: 1024,
             routing: RoutingPolicy::RoundRobin,
             calibration: None,
+            deadline_s: None,
         }
     }
 }
@@ -131,6 +142,9 @@ pub struct VirtualOutcome {
     pub admitted: usize,
     /// Typed queue-full rejections.
     pub rejected: usize,
+    /// Requests refused at admission by the deadline SLO (never retried —
+    /// a shed is a server decision, not transient backpressure).
+    pub shed: usize,
     /// Virtual time from stream start to the last completion/arrival.
     pub makespan_s: f64,
     /// Per-request virtual latencies in milliseconds, sorted ascending.
@@ -174,10 +188,12 @@ impl VirtualOutcome {
         }
     }
 
-    /// Rejected fraction of all submission attempts.
+    /// Fraction of offered requests refused — queue-full rejections and
+    /// SLO sheds both count (the `max_reject_frac` SLO bounds refusals of
+    /// any kind).
     pub fn reject_fraction(&self) -> f64 {
         if self.offered > 0 {
-            self.rejected as f64 / self.offered as f64
+            (self.rejected + self.shed) as f64 / self.offered as f64
         } else {
             0.0
         }
@@ -404,6 +420,9 @@ pub fn simulate_serve<C: ServiceModel>(
         cfg.max_wait_s.is_finite() && cfg.max_wait_s >= 0.0,
         "max_wait must be finite and >= 0"
     );
+    if let Some(dl) = cfg.deadline_s {
+        assert!(dl.is_finite() && dl >= 0.0, "deadline must be finite and >= 0");
+    }
     if let Some(cal) = cfg.calibration {
         assert!(
             cal.interval_s.is_finite() && cal.interval_s > 0.0,
@@ -418,6 +437,16 @@ pub fn simulate_serve<C: ServiceModel>(
     let root = Pcg32::new(seed);
     let names = mix.models();
     let n_models = names.len();
+    // deterministic per-sample service estimate backing the deadline SLO
+    // (the virtual analogue of the async core's EWMA)
+    let est_sample_s: Vec<f64> = if cfg.deadline_s.is_some() {
+        names
+            .iter()
+            .map(|m| cost.batch_latency_s(m, cfg.max_batch).max(0.0) / cfg.max_batch as f64)
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut shards: Vec<Shard> = (0..cfg.shards)
         .map(|_| Shard {
             worker_free: vec![0.0; cfg.workers],
@@ -480,6 +509,7 @@ pub fn simulate_serve<C: ServiceModel>(
 
     let mut offered = 0usize;
     let mut rejected = 0usize;
+    let mut shed = 0usize;
     let mut rr = 0usize;
 
     while let Some(ev) = d.heap.pop() {
@@ -494,6 +524,9 @@ pub fn simulate_serve<C: ServiceModel>(
                 let sh = &mut shards[s];
                 if sh.outstanding + 1 > cfg.queue_depth {
                     rejected += 1;
+                } else if sheds_at(cfg, &est_sample_s, model, sh.outstanding + 1) {
+                    // open-loop sources never retry: the shed is terminal
+                    shed += 1;
                 } else {
                     sh.outstanding += 1;
                     sh.requests += 1;
@@ -510,14 +543,14 @@ pub fn simulate_serve<C: ServiceModel>(
                 // generator (which also draws a request seed here)
                 let _ = client_rngs[client].next_u64();
                 submit_closed(
-                    &mut d, cfg, &names, &mut shards, &mut rr, &mut offered, &mut rejected,
-                    &mut client_remaining, client, model, now,
+                    &mut d, cfg, &names, &est_sample_s, &mut shards, &mut rr, &mut offered,
+                    &mut rejected, &mut shed, &mut client_remaining, client, model, now,
                 );
             }
             EventKind::ClientRetry { client, model } => {
                 submit_closed(
-                    &mut d, cfg, &names, &mut shards, &mut rr, &mut offered, &mut rejected,
-                    &mut client_remaining, client, model, now,
+                    &mut d, cfg, &names, &est_sample_s, &mut shards, &mut rr, &mut offered,
+                    &mut rejected, &mut shed, &mut client_remaining, client, model, now,
                 );
             }
             EventKind::WorkerFree { shard, release } => {
@@ -571,7 +604,7 @@ pub fn simulate_serve<C: ServiceModel>(
     let mut latencies_ms = d.latencies_ms;
     latencies_ms.sort_by(f64::total_cmp);
     let admitted = latencies_ms.len();
-    debug_assert_eq!(offered, admitted + rejected, "request conservation");
+    debug_assert_eq!(offered, admitted + rejected + shed, "request conservation");
     let makespan_s = d.makespan;
     let mut outages = 0u64;
     let mut downtime_s = 0.0;
@@ -621,6 +654,7 @@ pub fn simulate_serve<C: ServiceModel>(
         offered,
         admitted,
         rejected,
+        shed,
         makespan_s,
         latencies_ms,
         batches: d.batches,
@@ -634,18 +668,39 @@ pub fn simulate_serve<C: ServiceModel>(
     }
 }
 
+/// Deadline-SLO admission check: would a request that brings `model`'s
+/// shard to `queued` outstanding samples (itself included) be predicted
+/// past the deadline? Mirrors the async core's check with the cost
+/// model's upfront estimate in place of the learned EWMA.
+fn sheds_at(
+    cfg: &VirtualServeConfig,
+    est_sample_s: &[f64],
+    model: usize,
+    queued: usize,
+) -> bool {
+    match cfg.deadline_s {
+        Some(deadline) => queued as f64 * est_sample_s[model] / cfg.workers as f64 > deadline,
+        None => false,
+    }
+}
+
 /// One closed-loop submission attempt: admit (consuming one of the
-/// client's remaining requests) or count a rejection and schedule a
-/// deterministic retry with the *same* sampled model.
+/// client's remaining requests), count a queue-full rejection and
+/// schedule a deterministic retry with the *same* sampled model, or count
+/// a shed and move the client straight to its next request (sheds are
+/// server decisions and are never retried — retrying into the same
+/// backlog would livelock).
 #[allow(clippy::too_many_arguments)]
 fn submit_closed<C: ServiceModel>(
     d: &mut Dispatcher<'_, C>,
     cfg: &VirtualServeConfig,
     names: &[String],
+    est_sample_s: &[f64],
     shards: &mut [Shard],
     rr: &mut usize,
     offered: &mut usize,
     rejected: &mut usize,
+    shed: &mut usize,
     client_remaining: &mut [usize],
     client: usize,
     model: usize,
@@ -658,6 +713,14 @@ fn submit_closed<C: ServiceModel>(
     if sh.outstanding + 1 > cfg.queue_depth {
         *rejected += 1;
         d.push(now + RETRY_BACKOFF_S, EventKind::ClientRetry { client, model });
+        return;
+    }
+    if sheds_at(cfg, est_sample_s, model, sh.outstanding + 1) {
+        *shed += 1;
+        client_remaining[client] -= 1;
+        if client_remaining[client] > 0 {
+            d.push(now, EventKind::ClientNext { client });
+        }
         return;
     }
     client_remaining[client] -= 1;
@@ -692,7 +755,7 @@ mod tests {
         let (a, b) = (run(), run());
         assert_eq!(a, b, "virtual serving must be bit-deterministic");
         assert!(a.admitted > 0);
-        assert_eq!(a.offered, a.admitted + a.rejected);
+        assert_eq!(a.offered, a.admitted + a.rejected + a.shed);
     }
 
     #[test]
@@ -733,12 +796,13 @@ mod tests {
             queue_depth: 2,
             routing: RoutingPolicy::RoundRobin,
             calibration: None,
+            deadline_s: None,
         };
         // service is 10x slower than the arrival gap: the queue must shed
         let arrival = ArrivalProcess::Poisson { rate_hz: 1_000.0, duration_s: 0.1 };
         let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-2), 3);
         assert!(out.rejected > 0);
-        assert_eq!(out.offered, out.admitted + out.rejected);
+        assert_eq!(out.offered, out.admitted + out.rejected + out.shed);
         let again = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-2), 3);
         assert_eq!(out, again);
     }
@@ -753,6 +817,7 @@ mod tests {
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
             calibration: None,
+            deadline_s: None,
         };
         let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0; 8] };
         let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-4), 1);
@@ -800,6 +865,7 @@ mod tests {
             queue_depth: 1024,
             routing: RoutingPolicy::LeastOutstanding,
             calibration: None,
+            deadline_s: None,
         };
         let arrival = ArrivalProcess::Poisson { rate_hz: 5_000.0, duration_s: 0.05 };
         let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 5);
@@ -818,6 +884,7 @@ mod tests {
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
             calibration: None,
+            deadline_s: None,
         };
         let names = vec!["cold".to_string(), "hot".to_string()];
         let cost = FlatCost(1e-3);
@@ -869,6 +936,7 @@ mod tests {
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
             calibration: None,
+            deadline_s: None,
         };
         let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0; 8] };
         let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-4), 2);
@@ -914,9 +982,11 @@ mod tests {
             queue_depth: 256,
             routing: RoutingPolicy::LeastOutstanding,
             calibration: None,
+            deadline_s: None,
         };
         let with_cal = VirtualServeConfig {
             calibration: Some(CalibrationConfig { interval_s: 2e-2, outage_s: 1e-2 }),
+            deadline_s: None,
             ..base.clone()
         };
         let arrival = ArrivalProcess::Poisson { rate_hz: 3_000.0, duration_s: 0.2 };
@@ -933,7 +1003,7 @@ mod tests {
             noisy.outages
         );
         // every admitted request still completes (conservation holds)
-        assert_eq!(noisy.offered, noisy.admitted + noisy.rejected);
+        assert_eq!(noisy.offered, noisy.admitted + noisy.rejected + noisy.shed);
         // the outages must be visible in the tail, not hidden
         assert!(
             noisy.latency_percentile_ms(99.0) > quiet.latency_percentile_ms(99.0),
@@ -956,6 +1026,7 @@ mod tests {
             queue_depth: 64,
             routing: RoutingPolicy::RoundRobin,
             calibration: Some(CalibrationConfig { interval_s: 5e-3, outage_s: 2e-3 }),
+            deadline_s: None,
         };
         let arrival = ArrivalProcess::Trace { arrivals_s: vec![0.0, 4.9e-3, 5.5e-3] };
         let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-3), 1);
@@ -975,5 +1046,65 @@ mod tests {
         assert_eq!(cfg.interval_s, model.interval_s());
         assert_eq!(cfg.outage_s, model.outage_s(16));
         assert!(cfg.interval_s > 0.0 && cfg.outage_s > 0.0);
+    }
+
+    #[test]
+    fn deadline_sheds_deterministically_under_open_loop_overload() {
+        // per-sample estimate is 1e-2/1 = 10ms ≫ the 1ms deadline once a
+        // couple of requests queue — a saturating Poisson stream must shed
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            queue_depth: 1024,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: None,
+            deadline_s: Some(1e-3),
+        };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 1_000.0, duration_s: 0.1 };
+        let out = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-2), 3);
+        assert!(out.shed > 0, "{out:?}");
+        assert_eq!(out.offered, out.admitted + out.rejected + out.shed);
+        // deep queue: overload shows up as sheds, not queue-full rejects
+        assert_eq!(out.rejected, 0);
+        let again = simulate_serve(&cfg, &TrafficMix::single("a"), &arrival, &FlatCost(1e-2), 3);
+        assert_eq!(out, again, "shedding must stay bit-deterministic");
+    }
+
+    #[test]
+    fn closed_loop_sheds_consume_requests_instead_of_livelocking() {
+        // the deadline is below even a single request's predicted service:
+        // every submission sheds, and the run must still terminate with
+        // each client's budget fully consumed
+        let cfg = VirtualServeConfig {
+            shards: 1,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            queue_depth: 64,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: None,
+            deadline_s: Some(1e-6),
+        };
+        let arrival = ArrivalProcess::ClosedLoop { clients: 3, per_client: 10 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 19);
+        assert_eq!(out.shed, 30, "all 30 requests shed exactly once: {out:?}");
+        assert_eq!(out.admitted, 0);
+        assert_eq!(out.offered, 30);
+    }
+
+    #[test]
+    fn no_deadline_matches_pre_slo_behavior_exactly() {
+        // deadline_s: None must leave outcomes byte-identical to the
+        // config that predates the field
+        let base = VirtualServeConfig { shards: 2, ..VirtualServeConfig::default() };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 5_000.0, duration_s: 0.1 };
+        let out = simulate_serve(&base, &mix_ab(), &arrival, &FlatCost(1e-4), 42);
+        assert_eq!(out.shed, 0);
+        // and a generous deadline that never binds changes nothing either
+        let roomy = VirtualServeConfig { deadline_s: Some(1e9), ..base };
+        let same = simulate_serve(&roomy, &mix_ab(), &arrival, &FlatCost(1e-4), 42);
+        assert_eq!(out, same);
     }
 }

@@ -1,0 +1,523 @@
+//! Cross-engine serving conformance: the same seeded traffic driven
+//! through the threaded dispatch-and-wait core, the async
+//! continuous-batching core, and the virtual-time discrete-event engine
+//! must agree on the queueing math.
+//!
+//! Contract (and its documented tolerances):
+//!
+//! - **Admission counts are exact** when no deadline is armed: all three
+//!   engines share the per-client seed streams (`fork(2 + c)`), the
+//!   bounded-queue reservation rule, and the capacity-held-until-response
+//!   invariant, so accepted/rejected totals and per-model admission
+//!   counts must match to the request.
+//! - **Latency histograms agree coarsely**: the wall-clock engines pay OS
+//!   scheduling on top of service time, so the conformance claim is a
+//!   shared service-time floor and agreement within an order of magnitude
+//!   (factor 20 here), not equality.
+//! - **Sheds conserve, but do not match**: the async core's EWMA service
+//!   estimate is unseeded until the first completion (the first request
+//!   always passes), while the virtual engine computes its estimate
+//!   upfront and can shed from the very first arrival. With a deadline
+//!   armed the cross-engine contract is conservation
+//!   (`offered == completed + rejected + shed`), not equal shed counts.
+//!
+//! The 10^5-virtual-client stress run doubles as the deterministic-
+//! interleaving test; the 10^6 variant is `#[ignore]`d for CI time.
+
+use photogan::api::{
+    Outcome, Scenario, ServeCore, ServeEngine, ServeRequest, ServeStage, Session, StageSpec,
+};
+use photogan::coordinator::server::{BatchExecutor, Server, ServerConfig};
+use photogan::coordinator::{AsyncServer, AsyncServerConfig, BatchPolicy, RoutingPolicy};
+use photogan::workload::generator::{closed_loop, open_loop};
+use photogan::workload::vserve::{simulate_serve, ServiceModel, VirtualOutcome, VirtualServeConfig};
+use photogan::workload::{ArrivalProcess, TrafficMix};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ----------------------------------------------------------- test stubs
+
+/// Instant two-model stub: pure admission math, no service time.
+struct Echo;
+
+impl BatchExecutor for Echo {
+    fn models(&self) -> Vec<String> {
+        vec!["a".into(), "b".into()]
+    }
+
+    fn elements_per_sample(&self, _m: &str) -> usize {
+        1
+    }
+
+    fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+        vec![0.0; entries.len()]
+    }
+}
+
+/// Fixed service time per batch call — the wall-clock analogue of the
+/// virtual engine's flat-cost service model.
+struct Fixed(Duration);
+
+impl BatchExecutor for Fixed {
+    fn models(&self) -> Vec<String> {
+        vec!["m".into()]
+    }
+
+    fn elements_per_sample(&self, _m: &str) -> usize {
+        1
+    }
+
+    fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+        std::thread::sleep(self.0);
+        vec![0.0; entries.len()]
+    }
+}
+
+/// Records the seed order the executor observes (FIFO-ordering probe).
+struct Recording(Mutex<Vec<u64>>);
+
+impl BatchExecutor for Recording {
+    fn models(&self) -> Vec<String> {
+        vec!["m".into()]
+    }
+
+    fn elements_per_sample(&self, _m: &str) -> usize {
+        1
+    }
+
+    fn generate(&self, _m: &str, entries: &[(u64, Option<u32>)]) -> Vec<f32> {
+        let mut seen = self.0.lock().unwrap();
+        seen.extend(entries.iter().map(|(seed, _)| *seed));
+        vec![0.0; entries.len()]
+    }
+}
+
+/// `per_sample × batch` seconds: the virtual twin of [`Fixed`]/[`Echo`].
+struct FlatCost(f64);
+
+impl ServiceModel for FlatCost {
+    fn batch_latency_s(&self, _m: &str, batch: usize) -> f64 {
+        self.0 * batch as f64
+    }
+}
+
+fn wall_config() -> ServerConfig {
+    ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
+        workers: 2,
+        shards: 2,
+        routing: RoutingPolicy::RoundRobin,
+        queue_depth: 4096,
+    }
+}
+
+fn virtual_config() -> VirtualServeConfig {
+    VirtualServeConfig {
+        shards: 2,
+        workers: 2,
+        max_batch: 8,
+        max_wait_s: 1e-4,
+        queue_depth: 4096,
+        routing: RoutingPolicy::RoundRobin,
+        calibration: None,
+        deadline_s: None,
+    }
+}
+
+fn conserves(v: &VirtualOutcome) {
+    assert_eq!(
+        v.offered,
+        v.admitted + v.rejected + v.shed,
+        "every submission attempt must be admitted, rejected, or shed"
+    );
+    assert_eq!(v.latencies_ms.len(), v.admitted, "every admitted request completes");
+}
+
+// -------------------------------------------- exact admission conformance
+
+#[test]
+fn cross_engine_admission_counts_match_exactly() {
+    // deep queues, no deadline: nothing is refused, so all three engines
+    // must complete every request and agree per-model to the request
+    let mix = TrafficMix::new(vec![("a".to_string(), 3.0), ("b".to_string(), 1.0)]).unwrap();
+    let (clients, per_client, seed) = (6usize, 50usize, 42u64);
+    let total = clients * per_client;
+
+    let threaded = Server::start(Arc::new(Echo), wall_config());
+    let t = closed_loop(&threaded.handle(), &mix, clients, per_client, seed);
+    threaded.shutdown();
+
+    let asynced = AsyncServer::start(Arc::new(Echo), AsyncServerConfig::from(wall_config()));
+    let a = closed_loop(&asynced.handle(), &mix, clients, per_client, seed);
+    asynced.shutdown();
+
+    let arrival = ArrivalProcess::ClosedLoop { clients, per_client };
+    let v = simulate_serve(&virtual_config(), &mix, &arrival, &FlatCost(1e-4), seed);
+
+    for (name, completed, rejected, shed) in [
+        ("threaded", t.completed, t.rejections, t.sheds),
+        ("async", a.completed, a.rejections, a.sheds),
+        ("virtual", v.admitted, v.rejected as u64, v.shed as u64),
+    ] {
+        assert_eq!(completed, total, "{name}: every request must complete");
+        assert_eq!(rejected, 0, "{name}: deep queues must not reject");
+        assert_eq!(shed, 0, "{name}: no deadline, no sheds");
+    }
+    // the per-client seed streams are shared, so per-model admission
+    // counts are identical — not merely statistically similar
+    assert_eq!(t.per_model, a.per_model, "threaded vs async per-model counts");
+    assert_eq!(t.per_model, v.per_model, "threaded vs virtual per-model counts");
+    conserves(&v);
+}
+
+#[test]
+fn cross_engine_bounded_queue_admits_exactly_queue_depth() {
+    // a zero-offset burst of 12 against queue_depth 4 with service long
+    // enough to pin capacity: every engine must admit exactly 4. Capacity
+    // is held until the response is delivered, so the first dispatch does
+    // not free a slot mid-burst.
+    let mix = TrafficMix::new(vec![("m".to_string(), 1.0)]).unwrap();
+    let offsets = vec![0.0; 12];
+    let burst_cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+        workers: 1,
+        shards: 1,
+        routing: RoutingPolicy::RoundRobin,
+        queue_depth: 4,
+    };
+
+    let threaded = Server::start(Arc::new(Fixed(Duration::from_millis(150))), burst_cfg.clone());
+    let t = open_loop(&threaded.handle(), &mix, &offsets, 0.0, 7);
+    threaded.shutdown();
+
+    let asynced = AsyncServer::start(
+        Arc::new(Fixed(Duration::from_millis(150))),
+        AsyncServerConfig::from(burst_cfg),
+    );
+    let a = open_loop(&asynced.handle(), &mix, &offsets, 0.0, 7);
+    asynced.shutdown();
+
+    let cfg = VirtualServeConfig {
+        shards: 1,
+        workers: 1,
+        max_batch: 1,
+        max_wait_s: 0.0,
+        queue_depth: 4,
+        ..virtual_config()
+    };
+    let arrival = ArrivalProcess::Trace { arrivals_s: offsets };
+    let v = simulate_serve(&cfg, &mix, &arrival, &FlatCost(1000.0), 7);
+
+    for (name, submitted, completed, rejected) in [
+        ("threaded", t.submitted, t.completed, t.rejections),
+        ("async", a.submitted, a.completed, a.rejections),
+        ("virtual", v.offered, v.admitted, v.rejected as u64),
+    ] {
+        assert_eq!(submitted, 12, "{name}: open loop submits the whole trace");
+        assert_eq!(completed, 4, "{name}: exactly queue_depth admitted");
+        assert_eq!(rejected, 8, "{name}: the overflow is rejected, not dropped silently");
+    }
+}
+
+// --------------------------------------------- latency-envelope tolerance
+
+#[test]
+fn cross_engine_latency_envelopes_overlap() {
+    // 5 ms of service per batch on every engine. The wall-clock cores pay
+    // OS scheduling on top, so the documented tolerance is coarse: every
+    // engine's p50 sits above the service floor, below a 500 ms ceiling,
+    // and within a factor of 20 of its siblings.
+    const SERVICE: f64 = 5e-3;
+    let mix = TrafficMix::new(vec![("m".to_string(), 1.0)]).unwrap();
+    let (clients, per_client, seed) = (4usize, 25usize, 11u64);
+    let lat_cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        workers: 2,
+        shards: 1,
+        routing: RoutingPolicy::RoundRobin,
+        queue_depth: 4096,
+    };
+
+    let threaded =
+        Server::start(Arc::new(Fixed(Duration::from_secs_f64(SERVICE))), lat_cfg.clone());
+    let t = closed_loop(&threaded.handle(), &mix, clients, per_client, seed);
+    threaded.shutdown();
+
+    let asynced = AsyncServer::start(
+        Arc::new(Fixed(Duration::from_secs_f64(SERVICE))),
+        AsyncServerConfig::from(lat_cfg),
+    );
+    let a = closed_loop(&asynced.handle(), &mix, clients, per_client, seed);
+    asynced.shutdown();
+
+    let cfg = VirtualServeConfig {
+        shards: 1,
+        workers: 2,
+        max_batch: 4,
+        max_wait_s: 2e-4,
+        ..virtual_config()
+    };
+    let arrival = ArrivalProcess::ClosedLoop { clients, per_client };
+    // flat per-batch cost: SERVICE seconds regardless of fill, like Fixed
+    struct PerBatch(f64);
+    impl ServiceModel for PerBatch {
+        fn batch_latency_s(&self, _m: &str, _batch: usize) -> f64 {
+            self.0
+        }
+    }
+    let v = simulate_serve(&cfg, &mix, &arrival, &PerBatch(SERVICE), seed);
+
+    let p50 = [
+        ("threaded", t.latency_percentile_ms(50.0)),
+        ("async", a.latency_percentile_ms(50.0)),
+        ("virtual", v.latency_percentile_ms(50.0)),
+    ];
+    for (name, ms) in p50 {
+        assert!(ms >= SERVICE * 1e3, "{name}: p50 {ms:.2}ms under the 5ms service floor");
+        assert!(ms <= 500.0, "{name}: p50 {ms:.2}ms beyond the tolerance ceiling");
+    }
+    for (x, y) in [(0, 1), (0, 2), (1, 2)] {
+        let ratio = (p50[x].1 / p50[y].1).max(p50[y].1 / p50[x].1);
+        assert!(
+            ratio <= 20.0,
+            "{} vs {} p50 disagree beyond tolerance: {:.2}ms vs {:.2}ms",
+            p50[x].0,
+            p50[y].0,
+            p50[x].1,
+            p50[y].1
+        );
+    }
+}
+
+// --------------------------------------------- async-core ordering & sheds
+
+#[test]
+fn async_core_preserves_per_client_completion_order() {
+    // one producer, one shard, one worker, max_batch 1: the lock-free
+    // intake is FIFO per producer and the collector dispatches serially,
+    // so the executor must observe seeds in exact submission order
+    let recorder = Arc::new(Recording(Mutex::new(Vec::new())));
+    let server = AsyncServer::start(
+        Arc::clone(&recorder),
+        AsyncServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            workers: 1,
+            shards: 1,
+            routing: RoutingPolicy::RoundRobin,
+            queue_depth: 1024,
+            deadline: None,
+        },
+    );
+    let pending: Vec<_> =
+        (0..64u64).map(|seed| server.submit("m", seed, None, 1).unwrap()).collect();
+    for (i, p) in pending.into_iter().enumerate() {
+        let resp = p.wait().unwrap_or_else(|| panic!("request {i} lost its completion"));
+        assert_eq!(resp.served_batch, 1);
+    }
+    server.shutdown();
+    let seen = recorder.0.lock().unwrap();
+    assert_eq!(*seen, (0..64).collect::<Vec<u64>>(), "per-client FIFO order broke");
+}
+
+#[test]
+fn shed_accounting_conserves_requests_on_both_shedding_engines() {
+    // deadline far below service time: the async core sheds once its EWMA
+    // is seeded by the first completion; the virtual engine sheds from the
+    // first arrival (upfront estimate). Counts differ by design — the
+    // cross-engine contract under a deadline is conservation.
+    let mix = TrafficMix::new(vec![("m".to_string(), 1.0)]).unwrap();
+    let server = AsyncServer::start(
+        Arc::new(Fixed(Duration::from_millis(2))),
+        AsyncServerConfig {
+            deadline: Some(Duration::from_micros(10)),
+            ..AsyncServerConfig::from(wall_config())
+        },
+    );
+    let report = closed_loop(&server.handle(), &mix, 2, 10, 3);
+    server.shutdown();
+    assert!(report.sheds > 0, "a 10µs deadline against 2ms service must shed");
+    assert_eq!(
+        report.submitted as u64,
+        report.completed as u64 + report.rejections + report.sheds,
+        "closed loop: every attempt completes, retries, or is shed"
+    );
+
+    let cfg = VirtualServeConfig { deadline_s: Some(1e-5), ..virtual_config() };
+    let arrival = ArrivalProcess::ClosedLoop { clients: 2, per_client: 10 };
+    let v = simulate_serve(&cfg, &mix, &arrival, &FlatCost(2e-3), 3);
+    assert!(v.shed > 0, "the virtual deadline mirror must shed");
+    conserves(&v);
+}
+
+// ------------------------------------------------ API-level conformance
+
+#[test]
+fn serve_request_async_core_matches_threaded_counts() {
+    // the ServeRequest driver: same request count through both cores on
+    // the sim backend must complete everything with identical totals
+    let session = Arc::new(Session::new().unwrap());
+    let mut outcomes = Vec::new();
+    for core in [ServeCore::Threaded, ServeCore::Async] {
+        let req = ServeRequest::builder()
+            .model("condgan")
+            .core(core)
+            .requests(16)
+            .max_batch(4)
+            .shards(2)
+            .time_scale(0.0)
+            .build()
+            .unwrap();
+        outcomes.push(Arc::clone(&session).serve(&req).unwrap());
+    }
+    assert_eq!(outcomes[0].core, "threaded");
+    assert_eq!(outcomes[1].core, "async");
+    for o in &outcomes {
+        assert_eq!(o.total_requests, 16, "{}: all requests served", o.core);
+        assert_eq!(o.total_samples, 16, "{}", o.core);
+        assert_eq!(o.sheds, 0, "{}: no deadline, no sheds", o.core);
+        assert!(o.throughput_img_s > 0.0, "{}", o.core);
+    }
+}
+
+#[test]
+fn stable_json_is_run_to_run_identical() {
+    // the deterministic subset CI diffs with `cmp`: two runs of the same
+    // async request must render byte-identical stable JSON even though
+    // wall timing differs
+    let session = Arc::new(Session::new().unwrap());
+    let render = || {
+        let req = ServeRequest::builder()
+            .model("dcgan")
+            .core(ServeCore::Async)
+            .requests(12)
+            .max_batch(4)
+            .time_scale(0.0)
+            .build()
+            .unwrap();
+        Arc::clone(&session).serve(&req).unwrap().stable_json()
+    };
+    let first = render();
+    assert_eq!(first, render(), "stable_json must be timing-free");
+    for key in ["\"core\":\"async\"", "\"sheds\":0", "\"rejections\":0"] {
+        assert!(first.contains(key), "missing {key} in {first}");
+    }
+}
+
+// ---------------------------------------------- scenario-layer conformance
+
+#[test]
+fn scenario_async_engine_round_trips_and_serves() {
+    let stage = ServeStage {
+        name: "async-stage".into(),
+        engine: ServeEngine::Async,
+        model: Some("condgan".into()),
+        requests: 8,
+        max_batch: 4,
+        time_scale: 0.0,
+        deadline_ms: Some(250.0),
+        ..ServeStage::default()
+    };
+    let scenario = Scenario::single("async-conformance", StageSpec::Serve(stage));
+    // the deadline and engine survive the JSON round trip exactly
+    assert_eq!(Scenario::from_json(&scenario.to_json()).unwrap(), scenario);
+
+    let session = Arc::new(Session::new().unwrap());
+    let plan = session.plan(&scenario).unwrap();
+    let outcome = Arc::clone(&session).run(&plan).unwrap();
+    let Outcome::Serve(served) = &outcome.stages[0].outcome else {
+        panic!("serve stage must produce a serve outcome");
+    };
+    assert_eq!(served.core, "async");
+    assert_eq!(served.total_requests + served.sheds, 8, "driven requests are accounted for");
+}
+
+#[test]
+fn scenario_threaded_engine_rejects_deadline_at_plan_time() {
+    let stage = ServeStage {
+        engine: ServeEngine::Threaded,
+        model: Some("condgan".into()),
+        time_scale: 0.0,
+        deadline_ms: Some(5.0),
+        ..ServeStage::default()
+    };
+    let scenario = Scenario::single("bad", StageSpec::Serve(stage));
+    let session = Session::new().unwrap();
+    let err = session.plan(&scenario).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("async"), "the error must steer to a shedding engine: {msg}");
+}
+
+#[test]
+fn virtual_scenario_same_seed_json_is_byte_identical() {
+    // the scenario envelope over a virtual serve stage is a pure function
+    // of (scenario, seed): two runs must render byte-identical JSON —
+    // the property the CI `cmp` smoke step relies on
+    let stage = ServeStage {
+        name: "fleet".into(),
+        engine: ServeEngine::Virtual,
+        mix: vec![("dcgan".to_string(), 4.0), ("srgan".to_string(), 1.0)],
+        arrival: Some(ArrivalProcess::Poisson { rate_hz: 300.0, duration_s: 0.2 }),
+        shards: 2,
+        queue_depth: 64,
+        deadline_ms: Some(2.0),
+        ..ServeStage::default()
+    };
+    let scenario = Scenario::single("byte-identical", StageSpec::Serve(stage));
+    let session = Arc::new(Session::new().unwrap());
+    let plan = session.plan(&scenario).unwrap();
+    let first = Arc::clone(&session).run(&plan).unwrap().to_json();
+    let second = Arc::clone(&session).run(&plan).unwrap().to_json();
+    assert_eq!(first, second, "virtual serving must be wall-clock-free");
+    assert!(first.contains("\"shed\""), "the shed counter must be part of the envelope");
+}
+
+// --------------------------------------------- virtual-client stress scale
+
+fn stress_config(queue_depth: usize) -> VirtualServeConfig {
+    VirtualServeConfig {
+        shards: 4,
+        workers: 2,
+        max_batch: 16,
+        max_wait_s: 1e-4,
+        queue_depth,
+        routing: RoutingPolicy::LeastOutstanding,
+        calibration: None,
+        deadline_s: None,
+    }
+}
+
+#[test]
+fn vserve_100k_clients_is_deterministic_and_conserving() {
+    // 10^5 closed-loop clients all arriving at virtual t=0: the event
+    // engine must stay exact (conservation) and bit-for-bit reproducible
+    let clients = 100_000usize;
+    let mix = TrafficMix::new(vec![("a".to_string(), 2.0), ("b".to_string(), 1.0)]).unwrap();
+    let arrival = ArrivalProcess::ClosedLoop { clients, per_client: 1 };
+    let cfg = stress_config(32_768);
+    let run = || simulate_serve(&cfg, &mix, &arrival, &FlatCost(2e-5), 9);
+    let first = run();
+    conserves(&first);
+    assert_eq!(first.admitted, clients, "capacity covers the fleet: everything admits");
+    let second = run();
+    assert_eq!(first.admitted, second.admitted);
+    assert_eq!(first.rejected, second.rejected);
+    assert_eq!(first.shed, second.shed);
+    assert_eq!(first.per_model, second.per_model);
+    assert_eq!(
+        first.makespan_s.to_bits(),
+        second.makespan_s.to_bits(),
+        "virtual time must replay bit-for-bit"
+    );
+    assert_eq!(first.latencies_ms, second.latencies_ms, "full latency vector must replay");
+}
+
+#[test]
+#[ignore = "10^6-client stress run (~seconds of CPU): cargo test --test async_serving -- --ignored"]
+fn vserve_1m_clients_conserves() {
+    let clients = 1_000_000usize;
+    let mix = TrafficMix::new(vec![("a".to_string(), 1.0)]).unwrap();
+    let arrival = ArrivalProcess::ClosedLoop { clients, per_client: 1 };
+    let v = simulate_serve(&stress_config(262_144), &mix, &arrival, &FlatCost(2e-5), 13);
+    conserves(&v);
+    assert_eq!(v.admitted, clients);
+}
