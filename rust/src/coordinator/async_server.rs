@@ -44,9 +44,11 @@ use super::request::{AsyncEnvelope, GenRequest, GenResponse, RequestId};
 use super::routing::{pick_shard, RoutingPolicy};
 use super::server::{aggregate_stats, BatchExecutor, ServerConfig, ServerStats, SubmitError,
                     TrafficSink};
+use crate::util::check::sync::{
+    Arc, AtomicBool, AtomicU64, AtomicUsize, Condvar, Mutex, Ordering,
+};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::PoisonError;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -206,7 +208,7 @@ impl AsyncSubmitHandle {
                 if predicted > deadline.as_secs_f64() {
                     core.metrics
                         .lock()
-                        .unwrap()
+                        .unwrap_or_else(PoisonError::into_inner)
                         .entry(model.to_string())
                         .or_default()
                         .record_shed();
@@ -240,7 +242,7 @@ impl AsyncSubmitHandle {
         // collector mutex orders this push against any collector that was
         // deciding to park — it either drained the job already or is
         // parked and will receive the notify.
-        drop(core.state.lock().unwrap());
+        drop(core.state.lock().unwrap_or_else(PoisonError::into_inner));
         core.cv.notify_one();
         Ok(rx)
     }
@@ -316,7 +318,7 @@ impl AsyncServer {
                     std::thread::Builder::new()
                         .name(format!("photogan-async-{shard_id}-{worker_id}"))
                         .spawn(move || worker_loop(&core, exec))
-                        .expect("spawn async worker"),
+                        .unwrap_or_else(|e| panic!("spawn async worker: {e}")),
                 );
             }
             shards.push(core);
@@ -388,7 +390,7 @@ impl AsyncServer {
             // serves it instead of stranding it.
             let leftovers = core.intake.close();
             {
-                let mut state = core.state.lock().unwrap();
+                let mut state = core.state.lock().unwrap_or_else(PoisonError::into_inner);
                 for env in leftovers {
                     let model = env.request.model.clone();
                     state
@@ -431,7 +433,7 @@ fn worker_loop<E: BatchExecutor>(core: &ShardCore, executor: Arc<E>) {
 /// Returns `None` exactly once per worker, at shutdown with everything
 /// drained.
 fn collect(core: &ShardCore) -> Option<Batch<AsyncEnvelope>> {
-    let mut state = core.state.lock().unwrap();
+    let mut state = core.state.lock().unwrap_or_else(PoisonError::into_inner);
     loop {
         core.passes.fetch_add(1, Ordering::Relaxed);
         for env in core.intake.drain() {
@@ -453,7 +455,9 @@ fn collect(core: &ShardCore) -> Option<Batch<AsyncEnvelope>> {
             .max_by_key(|(_, b)| b.oldest_wait(now))
             .map(|(m, _)| m.clone());
         if let Some(model) = ready {
-            return state.batchers.get_mut(&model).unwrap().pop();
+            // the key was just taken from this map under the same lock,
+            // so the entry is present and `and_then` never sees `None`
+            return state.batchers.get_mut(&model).and_then(|b| b.pop());
         }
         if core.shutdown.load(Ordering::SeqCst) {
             // force-flush pending sub-deadline batches, oldest head first
@@ -464,7 +468,7 @@ fn collect(core: &ShardCore) -> Option<Batch<AsyncEnvelope>> {
                 .max_by_key(|(_, b)| b.oldest_wait(now))
                 .map(|(m, _)| m.clone());
             return match pending {
-                Some(model) => state.batchers.get_mut(&model).unwrap().pop(),
+                Some(model) => state.batchers.get_mut(&model).and_then(|b| b.pop()),
                 None => None,
             };
         }
@@ -480,11 +484,14 @@ fn collect(core: &ShardCore) -> Option<Batch<AsyncEnvelope>> {
                 if wait.is_zero() {
                     continue;
                 }
-                let (guard, _) = core.cv.wait_timeout(state, wait).unwrap();
+                let (guard, _) = core
+                    .cv
+                    .wait_timeout(state, wait)
+                    .unwrap_or_else(PoisonError::into_inner);
                 state = guard;
             }
             None => {
-                state = core.cv.wait(state).unwrap();
+                state = core.cv.wait(state).unwrap_or_else(PoisonError::into_inner);
             }
         }
     }
@@ -540,7 +547,7 @@ fn execute<E: BatchExecutor>(core: &ShardCore, executor: &E, batch: Batch<AsyncE
         };
         offset += n;
         {
-            let mut metrics = core.metrics.lock().unwrap();
+            let mut metrics = core.metrics.lock().unwrap_or_else(PoisonError::into_inner);
             metrics
                 .entry(batch.model.clone())
                 .or_default()
@@ -554,6 +561,7 @@ fn execute<E: BatchExecutor>(core: &ShardCore, executor: &E, batch: Batch<AsyncE
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::prop::check;

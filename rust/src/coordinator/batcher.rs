@@ -86,11 +86,10 @@ impl<C: Carrier> Batcher<C> {
 
     /// Should we dispatch now?
     pub fn ready(&self, now: Instant) -> bool {
-        if self.pending.is_empty() {
-            return false;
-        }
-        self.pending_samples >= self.policy.max_batch
-            || self.oldest_wait(now).unwrap() >= self.policy.max_wait
+        let Some(oldest) = self.oldest_wait(now) else {
+            return false; // nothing pending, nothing to dispatch
+        };
+        self.pending_samples >= self.policy.max_batch || oldest >= self.policy.max_wait
     }
 
     /// The wall-clock instant `max_wait` forces dispatch of the oldest
@@ -109,14 +108,15 @@ impl<C: Carrier> Batcher<C> {
         }
         let mut envs = Vec::new();
         let mut samples = 0usize;
-        while let Some(front) = self.pending.front() {
-            let c = front.request().count;
+        while let Some(env) = self.pending.pop_front() {
+            let c = env.request().count;
             if !envs.is_empty() && samples + c > self.policy.max_batch {
+                self.pending.push_front(env); // doesn't fit: stays at the head
                 break;
             }
             samples += c;
             self.pending_samples -= c;
-            envs.push(self.pending.pop_front().unwrap());
+            envs.push(env);
             if samples >= self.policy.max_batch {
                 break;
             }
@@ -126,6 +126,7 @@ impl<C: Carrier> Batcher<C> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::request::{GenRequest, RequestId};
@@ -274,8 +275,7 @@ mod tests {
     fn batches_async_envelopes_too() {
         use crate::coordinator::completion::{completion, CapacityGuard};
         use crate::coordinator::request::AsyncEnvelope;
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        use std::sync::Arc;
+        use crate::util::check::sync::{Arc, AtomicUsize, Ordering};
 
         let counter = Arc::new(AtomicUsize::new(0));
         let now = Instant::now();

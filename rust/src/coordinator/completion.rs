@@ -17,8 +17,8 @@
 //! can immediately resubmit into the freed slot (the same
 //! release-before-reply ordering the threaded worker documents).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use crate::util::check::sync::{Arc, AtomicUsize, Condvar, Mutex, Ordering};
+use std::sync::PoisonError;
 use std::time::{Duration, Instant};
 
 /// Slot state machine: `Pending → Ready(T)` (sender delivered) or
@@ -185,7 +185,11 @@ impl CapacityGuard {
     ) -> Result<CapacityGuard, usize> {
         let mut cur = counter.load(Ordering::SeqCst);
         loop {
-            if cur + count > limit {
+            // Overflow-safe admission check: `cur + count > limit` wraps
+            // for huge `count` in release builds and would admit an
+            // over-limit reservation (found by the model-check/ledger
+            // audit of this path — see the regression test below).
+            if count > limit || cur > limit - count {
                 return Err(cur);
             }
             match counter.compare_exchange(
@@ -223,6 +227,7 @@ impl Drop for CapacityGuard {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::thread;
@@ -290,6 +295,35 @@ mod tests {
             let _g = CapacityGuard::reserve(&counter, 2, 8).unwrap();
             assert_eq!(counter.load(Ordering::SeqCst), 2);
         }
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn capacity_guard_reserve_rejects_overflowing_counts() {
+        // Regression: `cur + count > limit` wraps for count near
+        // usize::MAX and would admit the reservation. The check must be
+        // overflow-safe for any (cur, count, limit).
+        let counter = Arc::new(AtomicUsize::new(0));
+        assert_eq!(CapacityGuard::reserve(&counter, usize::MAX, 8).unwrap_err(), 0);
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+        let mut g = CapacityGuard::reserve(&counter, 3, 8).unwrap();
+        assert_eq!(CapacityGuard::reserve(&counter, usize::MAX - 1, 8).unwrap_err(), 3);
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+        g.release();
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn capacity_guard_releases_on_panic_unwind() {
+        // The RAII exit path the async worker relies on: a panicking
+        // executor must still give its reservation back exactly once.
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let unwound = std::panic::catch_unwind(move || {
+            let _g = CapacityGuard::reserve(&c2, 4, 8).unwrap();
+            panic!("executor blew up mid-batch");
+        });
+        assert!(unwound.is_err());
         assert_eq!(counter.load(Ordering::SeqCst), 0);
     }
 }

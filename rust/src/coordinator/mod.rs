@@ -30,7 +30,15 @@
 //! exit path returns its reservation exactly once.
 //!
 //! Built entirely on std threads, atomics, and condvars (no tokio in the
-//! offline crate set — see ARCHITECTURE.md).
+//! offline crate set — see ARCHITECTURE.md). The sync primitives come
+//! from [`crate::util::check::sync`], so the `model_check` suites can
+//! run the queue/completion/guard protocols under a controlled scheduler
+//! (zero-cost re-exports in normal builds).
+
+// Serving-layer error-handling contract (same as `crate::api`): every
+// fallible path returns a typed error or documents why it cannot fail —
+// a panicking coordinator takes the whole fleet's front door down.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod async_server;
 pub mod batcher;

@@ -18,9 +18,17 @@
 //! are local: nodes are heap-allocated by `push`, ownership transfers to
 //! the queue on a successful CAS, and exactly one party (a drain, a
 //! close, or `Drop`) ever detaches and frees a chain.
+//!
+//! The atomics come from [`crate::util::check::sync`] and the node
+//! allocations go through [`crate::util::check::alloc`], so the
+//! `model_check` suites explore the push/drain/close races under a
+//! controlled scheduler with an exact node ledger (leaks and double
+//! frees fail the schedule); in normal builds both shims are the plain
+//! `std`/`Box` operations. See ARCHITECTURE.md §Concurrency invariants.
 
+use crate::util::check::alloc::{box_from_raw, box_into_raw};
+use crate::util::check::sync::{AtomicPtr, Ordering};
 use std::ptr;
-use std::sync::atomic::{AtomicPtr, Ordering};
 
 struct Node<T> {
     value: T,
@@ -39,9 +47,14 @@ pub struct JobQueue<T> {
     head: AtomicPtr<Node<T>>,
 }
 
-// The queue owns T values behind raw pointers; moving them across
-// threads is exactly as safe as T itself is to send.
+// SAFETY: the queue owns T values behind raw pointers; moving them
+// across threads is exactly as safe as T itself is to send, so both
+// impls require `T: Send`. No `&T` access is ever handed out (values
+// only leave by move in `drain`/`close`/`Drop`), so `Sync` does not
+// need `T: Sync`.
 unsafe impl<T: Send> Send for JobQueue<T> {}
+// SAFETY: see the `Send` impl above — shared access only performs
+// atomic head operations and moves owned values out.
 unsafe impl<T: Send> Sync for JobQueue<T> {}
 
 impl<T> JobQueue<T> {
@@ -53,14 +66,20 @@ impl<T> JobQueue<T> {
     /// closed — the producer observes shutdown synchronously instead of
     /// stranding work.
     pub fn push(&self, value: T) -> Result<(), T> {
-        let node = Box::into_raw(Box::new(Node { value, next: ptr::null_mut() }));
+        let node = box_into_raw(Box::new(Node { value, next: ptr::null_mut() }));
         let mut head = self.head.load(Ordering::Acquire);
         loop {
             if head == closed_sentinel() {
                 // reclaim the staged node and bounce the value back
-                let boxed = unsafe { Box::from_raw(node) };
+                // SAFETY: `node` came from `box_into_raw` above and was
+                // never published (every CAS attempt failed), so this
+                // thread still uniquely owns it.
+                let boxed = unsafe { box_from_raw(node) };
                 return Err(boxed.value);
             }
+            // SAFETY: `node` is unpublished until the CAS below
+            // succeeds, so this thread has exclusive access to it; a
+            // failed CAS loops back here with a fresh `head`.
             unsafe { (*node).next = head };
             match self.head.compare_exchange_weak(
                 head,
@@ -133,7 +152,12 @@ fn collect_chain<T>(head: *mut Node<T>) -> Vec<T> {
     let mut out = Vec::new();
     let mut cur = head;
     while !cur.is_null() {
-        let node = unsafe { Box::from_raw(cur) };
+        // SAFETY: the chain was detached from the shared head by
+        // exactly one successful CAS (in `drain`/`close`) or by `Drop`'s
+        // exclusive `&mut self` access, so this walker is the sole owner
+        // of every node it frees; each node was allocated by `push` via
+        // `box_into_raw` and is freed exactly once here.
+        let node = unsafe { box_from_raw(cur) };
         cur = node.next;
         out.push(node.value);
     }
@@ -158,8 +182,10 @@ impl<T> Drop for JobQueue<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
     use std::thread;
 
@@ -232,5 +258,51 @@ mod tests {
             q.push(vec![i; 32]).unwrap();
         }
         drop(q);
+    }
+
+    /// Value whose destructor counts — under Miri this turns "drop frees
+    /// every unconsumed node exactly once" into a checked property (a
+    /// leak keeps the count low and trips Miri's leak checker; a double
+    /// free is UB Miri reports directly).
+    struct CountedDrop(Arc<AtomicUsize>);
+
+    impl Drop for CountedDrop {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn drop_frees_all_unconsumed_nodes_exactly_once() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let q = JobQueue::new();
+        for _ in 0..2 {
+            q.push(CountedDrop(Arc::clone(&drops))).unwrap();
+        }
+        // consumed values drop on the caller's side, exactly once each
+        drop(q.drain());
+        assert_eq!(drops.load(std::sync::atomic::Ordering::SeqCst), 2);
+        // six unconsumed values must be freed by the queue's Drop
+        for _ in 0..6 {
+            q.push(CountedDrop(Arc::clone(&drops))).unwrap();
+        }
+        drop(q);
+        assert_eq!(drops.load(std::sync::atomic::Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn drain_after_close_is_empty_and_ordered() {
+        // Once close() has returned the leftovers, a later drain must
+        // return nothing — the leftovers already left in FIFO order and
+        // every post-close push bounces, so no value can reappear.
+        let q = JobQueue::new();
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        let leftovers = q.close();
+        assert_eq!(leftovers, vec![0, 1, 2, 3]);
+        assert_eq!(q.drain(), Vec::<i32>::new());
+        assert_eq!(q.push(99), Err(99));
+        assert_eq!(q.drain(), Vec::<i32>::new());
     }
 }

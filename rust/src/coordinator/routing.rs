@@ -87,7 +87,7 @@ pub(crate) fn pick_shard(
     policy: RoutingPolicy,
     model: &str,
     shards: usize,
-    rr: &std::sync::atomic::AtomicUsize,
+    rr: &crate::util::check::sync::AtomicUsize,
     load: impl Fn(usize) -> usize,
 ) -> usize {
     match policy {
@@ -122,6 +122,7 @@ pub(crate) fn affinity_hash(s: &str) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

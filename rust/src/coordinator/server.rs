@@ -10,11 +10,11 @@ use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::ServingMetrics;
 use super::request::{Envelope, GenRequest, GenResponse, PendingReply, RequestId};
 use super::routing::{pick_shard, RoutingPolicy};
+use crate::util::check::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::PoisonError;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -146,7 +146,7 @@ pub(crate) fn aggregate_stats<'a>(
     let mut dropped_samples = 0u64;
     let mut total_sheds = 0u64;
     for (shard_id, metrics) in shards.enumerate() {
-        let guard = metrics.lock().unwrap();
+        let guard = metrics.lock().unwrap_or_else(PoisonError::into_inner);
         let mut shard_requests = 0u64;
         let mut shard_samples = 0u64;
         let mut shard_all: Option<ServingMetrics> = None;
@@ -272,7 +272,10 @@ impl SubmitHandle {
         // reserve `count` samples of the shard's bounded queue, or reject
         let mut cur = out.load(Ordering::SeqCst);
         loop {
-            if cur + count > self.queue_depth {
+            // Overflow-safe admission check (mirrors
+            // `CapacityGuard::reserve` — `cur + count` wraps for huge
+            // `count` in release builds and would admit the request).
+            if count > self.queue_depth || cur > self.queue_depth - count {
                 return Err(SubmitError::QueueFull {
                     shard,
                     outstanding: cur,
@@ -356,7 +359,7 @@ impl Server {
                 .spawn(move || {
                     leader_loop(rx, exec, policy, workers, model_names, metrics_leader, out_leader)
                 })
-                .expect("spawn leader");
+                .unwrap_or_else(|e| panic!("spawn leader: {e}"));
             intakes.push(tx.clone());
             outstanding.push(out);
             shards.push(ShardRuntime { intake: tx, leader: Some(leader), metrics });
@@ -488,7 +491,7 @@ fn leader_loop<E: BatchExecutor>(
             std::thread::Builder::new()
                 .name(format!("photogan-worker-{i}"))
                 .spawn(move || worker_loop(rx, exec, metrics, outstanding))
-                .expect("spawn worker")
+                .unwrap_or_else(|e| panic!("spawn worker: {e}"))
         })
         .collect();
 
@@ -507,7 +510,9 @@ fn leader_loop<E: BatchExecutor>(
         for b in batchers.values_mut() {
             while b.ready(now) || (shutting_down && b.pending_len() > 0) {
                 if let Some(batch) = b.pop() {
-                    work_tx.send(batch).expect("workers alive");
+                    // workers only exit once this sender is dropped, so a
+                    // failed send means a worker crashed hard — surface it
+                    work_tx.send(batch).unwrap_or_else(|e| panic!("workers alive: {e}"));
                 } else {
                     break;
                 }
@@ -545,7 +550,7 @@ fn worker_loop<E: BatchExecutor>(
 ) {
     loop {
         let batch = {
-            let guard = rx.lock().unwrap();
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
             match guard.recv() {
                 Ok(b) => b,
                 Err(_) => return, // channel closed: shutdown
@@ -596,7 +601,7 @@ fn worker_loop<E: BatchExecutor>(
             };
             offset += n;
             {
-                let mut guard = metrics.lock().unwrap();
+                let mut guard = metrics.lock().unwrap_or_else(PoisonError::into_inner);
                 guard
                     .entry(batch.model.clone())
                     .or_default()
@@ -613,6 +618,7 @@ fn worker_loop<E: BatchExecutor>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

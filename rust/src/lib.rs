@@ -96,7 +96,17 @@
 //!   `ScenarioOutcome` with SLO verdicts).
 //! - [`report`] — regenerates every table and figure of the paper.
 //! - [`util`] — RNG, stats, tables, JSON, CLI parsing, error plumbing,
-//!   mini property-test harness.
+//!   mini property-test harness, and the in-tree concurrency model
+//!   checker ([`util::check`]) behind the serving core's sync shims.
+
+// Unsafe hygiene, crate-wide: every unsafe operation sits in an explicit
+// `unsafe` block (even inside `unsafe fn`), and every such block carries
+// a `// SAFETY:` comment (`undocumented_unsafe_blocks` is `warn` here and
+// promoted to an error by CI's `-D warnings`; `deny` outright would need
+// the lint in every dependent's config). The only unsafe code lives in
+// `coordinator::queue` and `util::check::alloc`.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod api;
 pub mod arch;

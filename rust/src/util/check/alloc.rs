@@ -1,0 +1,43 @@
+//! Node-accounting ledger for raw-pointer code under the model checker.
+//!
+//! The lock-free [`crate::coordinator::queue::JobQueue`] moves heap
+//! nodes through `Box::into_raw` / `Box::from_raw`. Routing those two
+//! calls through this module gives every model execution an exact
+//! allocation ledger: a `from_raw` of a pointer the ledger does not
+//! know fails the schedule as a double free, and any pointer still live
+//! when the execution quiesces fails it as a leak. Outside a model run
+//! both functions compile down to the plain `Box` calls (the ledger
+//! branch is one thread-local read).
+
+use super::sched;
+
+/// [`Box::into_raw`], recorded in the model execution's allocation
+/// ledger when called from a model thread.
+#[inline]
+pub fn box_into_raw<T>(b: Box<T>) -> *mut T {
+    let p = Box::into_raw(b);
+    if let Some(c) = sched::ctx() {
+        sched::ledger_alloc(&c, p as usize);
+    }
+    p
+}
+
+/// [`Box::from_raw`], checked against the model execution's allocation
+/// ledger when called from a model thread (double frees and frees of
+/// foreign pointers fail the schedule).
+///
+/// # Safety
+///
+/// Exactly the [`Box::from_raw`] contract: `p` must have come from
+/// [`box_into_raw`] (or `Box::into_raw`) and ownership must not have
+/// been reclaimed already. The ledger *detects* violations under the
+/// model checker; it does not make them safe.
+#[inline]
+pub unsafe fn box_from_raw<T>(p: *mut T) -> Box<T> {
+    if let Some(c) = sched::ctx() {
+        sched::ledger_free(&c, p as usize);
+    }
+    // SAFETY: forwarded caller contract — `p` is a live, uniquely-owned
+    // pointer produced by `box_into_raw`.
+    unsafe { Box::from_raw(p) }
+}

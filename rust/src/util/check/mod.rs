@@ -1,0 +1,203 @@
+//! In-tree systematic concurrency model checker (a loom-lite).
+//!
+//! The serving core's lock-free structures — the Treiber-stack
+//! [`crate::coordinator::queue::JobQueue`], the condvar-parked oneshot
+//! [`crate::coordinator::completion`] channel, the RAII
+//! [`crate::coordinator::completion::CapacityGuard`] — are correct only
+//! under claims about *interleavings*, and ordinary tests execute a
+//! handful of lucky ones. This module makes the claims checkable:
+//!
+//! - [`sync`] shims `std::sync` (atomics, `Mutex`, `Condvar`, `Arc`).
+//!   In a normal build every operation is the `std` operation plus one
+//!   thread-local read; inside [`model`] every operation first reaches
+//!   a deterministic scheduler decision point.
+//! - [`sched`] explores interleavings of 2–4 model threads by
+//!   depth-first backtracking with a CHESS-style bounded preemption
+//!   budget. A failing schedule (panic, deadlock, livelock, ledger
+//!   violation) prints a replay token; [`replay`] re-runs exactly that
+//!   schedule.
+//! - [`alloc`] is a node-accounting ledger for the queue's raw-pointer
+//!   paths: double frees and leaked nodes fail the schedule that
+//!   produced them.
+//! - [`thread`] spawns model threads that the scheduler controls.
+//!
+//! ```
+//! use photogan::util::check;
+//! use photogan::util::check::sync::{Arc, AtomicUsize, Ordering};
+//!
+//! let outcome = check::model(check::CheckOpts::default(), || {
+//!     let n = Arc::new(AtomicUsize::new(0));
+//!     let n2 = Arc::clone(&n);
+//!     let t = check::thread::spawn(move || {
+//!         n2.fetch_add(1, Ordering::SeqCst);
+//!     });
+//!     n.fetch_add(1, Ordering::SeqCst);
+//!     t.join().unwrap();
+//!     assert_eq!(n.load(Ordering::SeqCst), 2);
+//! });
+//! outcome.assert_pass();
+//! assert!(outcome.schedules() >= 2); // both orders of the two adds ran
+//! ```
+//!
+//! Compiling with `--cfg model_check` switches [`CheckOpts::default`]
+//! to an effectively unbounded schedule budget (the CI exhaustive
+//! mode); the tier-1 default keeps every suite under a few seconds.
+
+pub mod alloc;
+pub mod sched;
+pub mod sync;
+pub mod thread;
+
+pub use sched::{model, parse_token, replay, CheckOpts, CheckOutcome, QuietPanic, EXHAUSTIVE};
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::sync::{Arc, AtomicUsize, Condvar, Mutex, Ordering};
+    use super::*;
+    use std::sync::PoisonError;
+
+    #[test]
+    fn explores_both_orders_of_a_two_thread_race() {
+        // A classic increment race written with plain load/store: some
+        // interleaving must lose an update, and the checker must find it.
+        let outcome = model(CheckOpts::default(), || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = Arc::clone(&n);
+            let t = thread::spawn(move || {
+                let v = n2.load(Ordering::SeqCst);
+                n2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = n.load(Ordering::SeqCst);
+            n.store(v + 1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+        });
+        match outcome {
+            CheckOutcome::Fail { ref message, ref token, .. } => {
+                assert!(message.contains("lost update"), "wrong failure: {message}");
+                assert!(parse_token(token).is_some(), "token must parse: {token}");
+            }
+            CheckOutcome::Pass { .. } => panic!("checker missed the load/store race"),
+        }
+    }
+
+    #[test]
+    fn cas_increments_pass_under_all_schedules() {
+        let outcome = model(CheckOpts::default(), || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = Arc::clone(&n);
+            let bump = |a: &AtomicUsize| loop {
+                let v = a.load(Ordering::SeqCst);
+                if a.compare_exchange(v, v + 1, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+                    break;
+                }
+            };
+            let t = thread::spawn(move || bump(&n2));
+            bump(&n);
+            t.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+        outcome.assert_pass();
+        assert!(outcome.schedules() >= 2, "must explore more than one schedule");
+    }
+
+    #[test]
+    fn lock_order_inversion_is_reported_as_deadlock() {
+        let outcome = model(CheckOpts::default(), || {
+            let a = Arc::new(Mutex::new(0u32));
+            let b = Arc::new(Mutex::new(0u32));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t = thread::spawn(move || {
+                let _ga = a2.lock().unwrap_or_else(PoisonError::into_inner);
+                let _gb = b2.lock().unwrap_or_else(PoisonError::into_inner);
+            });
+            let _gb = b.lock().unwrap_or_else(PoisonError::into_inner);
+            let _ga = a.lock().unwrap_or_else(PoisonError::into_inner);
+            drop((_ga, _gb));
+            t.join().unwrap();
+        });
+        match outcome {
+            CheckOutcome::Fail { ref message, .. } => {
+                assert!(message.contains("deadlock"), "expected a deadlock, got: {message}")
+            }
+            CheckOutcome::Pass { .. } => panic!("checker missed the lock-order deadlock"),
+        }
+    }
+
+    #[test]
+    fn failing_schedule_replays_to_the_same_failure() {
+        let body = || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = Arc::clone(&n);
+            let t = thread::spawn(move || {
+                let v = n2.load(Ordering::SeqCst);
+                n2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = n.load(Ordering::SeqCst);
+            n.store(v + 1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+        };
+        let token = match model(CheckOpts::default(), body) {
+            CheckOutcome::Fail { token, .. } => token,
+            CheckOutcome::Pass { .. } => panic!("race must be found"),
+        };
+        match replay(&token, body) {
+            CheckOutcome::Fail { message, schedules, .. } => {
+                assert!(message.contains("lost update"), "replay diverged: {message}");
+                assert_eq!(schedules, 1, "replay runs exactly one schedule");
+            }
+            CheckOutcome::Pass { .. } => panic!("replay token did not reproduce the failure"),
+        }
+    }
+
+    #[test]
+    fn condvar_handshake_has_no_lost_wakeup() {
+        // flag-under-mutex + condvar: the textbook protocol must pass
+        // under every explored interleaving (a lost notify would park
+        // the waiter forever and be reported as a deadlock).
+        let outcome = model(CheckOpts::default(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let t = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().unwrap_or_else(PoisonError::into_inner) = true;
+                cv.notify_one();
+            });
+            let (m, cv) = &*pair;
+            let mut done = m.lock().unwrap_or_else(PoisonError::into_inner);
+            while !*done {
+                done = cv.wait(done).unwrap_or_else(PoisonError::into_inner);
+            }
+            drop(done);
+            t.join().unwrap();
+        });
+        outcome.assert_pass();
+    }
+
+    #[test]
+    fn seeded_exploration_still_finds_the_race() {
+        let outcome = model(CheckOpts { seed: 0xfeed, ..CheckOpts::default() }, || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = Arc::clone(&n);
+            let t = thread::spawn(move || {
+                let v = n2.load(Ordering::SeqCst);
+                n2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = n.load(Ordering::SeqCst);
+            n.store(v + 1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+        });
+        assert!(!outcome.is_pass(), "seeded run must still find the race");
+    }
+
+    #[test]
+    fn token_round_trips_through_parse() {
+        assert_eq!(parse_token("mc1:s7:b2:0.1.0"), Some((7, 2, vec![0, 1, 0])));
+        assert_eq!(parse_token("mc1:s0:b3:"), Some((0, 3, vec![])));
+        assert_eq!(parse_token("mc2:s0:b3:"), None);
+        assert_eq!(parse_token("garbage"), None);
+    }
+}

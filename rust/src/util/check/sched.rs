@@ -1,0 +1,949 @@
+//! The deterministic controlled scheduler behind [`super::sync`].
+//!
+//! One *model execution* runs the user closure on real OS threads, but
+//! only one model thread holds the run token at a time: every shim
+//! operation (atomic access, lock, park, wake) first reaches a
+//! *decision point* where the scheduler picks the next thread to run.
+//! Recording the option list and the chosen index at every decision
+//! point makes executions replayable; depth-first backtracking over the
+//! recorded choices enumerates interleavings, bounded CHESS-style by a
+//! preemption budget (a decision that switches away from a still-runnable
+//! thread costs one preemption).
+//!
+//! Simplifications relative to loom, stated so nobody over-trusts the
+//! tool: only sequentially-consistent interleavings are explored (no C11
+//! weak-memory reorderings — Miri/TSan cover the ordering axis in CI),
+//! mutex release hands off to the longest-waiting thread (no barging),
+//! and a timed condvar wait only times out when nothing else can run
+//! (model time advances only at quiescence). Panics inside a model
+//! thread fail the whole execution; code that *intends* to panic (e.g.
+//! exercising RAII unwind paths) must wrap the panic in
+//! `std::panic::catch_unwind` inside the model closure.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, Once, PoisonError};
+
+/// True when the crate was compiled with `--cfg model_check`: the
+/// exhaustive mode the CI checker job uses. It raises the default
+/// schedule budget so [`CheckOpts::default`] explores until completion
+/// instead of stopping at the bounded tier-1 budget.
+pub const EXHAUSTIVE: bool = cfg!(model_check);
+
+/// Budgets and exploration knobs for [`model`].
+#[derive(Debug, Clone, Copy)]
+pub struct CheckOpts {
+    /// CHESS-style bound: how many times the scheduler may switch away
+    /// from a thread that could have kept running. Bound 2 finds the
+    /// overwhelming majority of real bugs at a tiny fraction of the
+    /// full interleaving space.
+    pub preemption_bound: usize,
+    /// Stop exploring after this many schedules even if the DFS
+    /// frontier is not exhausted (tier-1 time budget).
+    pub max_schedules: usize,
+    /// Per-execution decision cap; exceeding it fails the execution as
+    /// a livelock.
+    pub max_steps: usize,
+    /// Exploration seed: 0 explores in canonical order; any other value
+    /// deterministically rotates non-default options so repeated seeded
+    /// runs walk the space from different directions.
+    pub seed: u64,
+}
+
+impl Default for CheckOpts {
+    fn default() -> CheckOpts {
+        CheckOpts {
+            preemption_bound: 2,
+            max_schedules: if EXHAUSTIVE { usize::MAX / 2 } else { 2_000 },
+            max_steps: 20_000,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a [`model`] run.
+#[derive(Debug, Clone)]
+pub enum CheckOutcome {
+    /// No explored schedule violated an assertion, deadlocked, leaked,
+    /// or double-freed.
+    Pass {
+        /// Number of distinct schedules executed.
+        schedules: usize,
+        /// True when the DFS frontier was exhausted (every schedule
+        /// within the preemption bound ran); false when the
+        /// `max_schedules` budget stopped exploration early.
+        complete: bool,
+    },
+    /// A schedule failed; `token` replays it via [`replay`].
+    Fail {
+        /// Replay token (`mc1:s<seed>:b<bound>:<i.i.i>`).
+        token: String,
+        /// Human-readable failure (panic message, deadlock dump, ledger
+        /// violation).
+        message: String,
+        /// Number of schedules executed up to and including the failure.
+        schedules: usize,
+    },
+}
+
+impl CheckOutcome {
+    /// True on [`CheckOutcome::Pass`].
+    pub fn is_pass(&self) -> bool {
+        matches!(self, CheckOutcome::Pass { .. })
+    }
+
+    /// Number of schedules executed.
+    pub fn schedules(&self) -> usize {
+        match self {
+            CheckOutcome::Pass { schedules, .. } => *schedules,
+            CheckOutcome::Fail { schedules, .. } => *schedules,
+        }
+    }
+
+    /// The replay token of a failing schedule, if any.
+    pub fn failure_token(&self) -> Option<&str> {
+        match self {
+            CheckOutcome::Fail { token, .. } => Some(token),
+            CheckOutcome::Pass { .. } => None,
+        }
+    }
+
+    /// Panic with the failure message and replay token on
+    /// [`CheckOutcome::Fail`]. When the `MODEL_CHECK_TOKEN_DIR`
+    /// environment variable is set, the token is also written there so
+    /// CI can upload it as an artifact.
+    pub fn assert_pass(&self) {
+        if let CheckOutcome::Fail { token, message, schedules } = self {
+            dump_token(token, message);
+            panic!(
+                "model check failed after {schedules} schedule(s): {message}\n  \
+                 replay token: {token}\n  \
+                 reproduce with photogan::util::check::replay(\"{token}\", ...)"
+            );
+        }
+    }
+}
+
+fn dump_token(token: &str, message: &str) {
+    if let Ok(dir) = std::env::var("MODEL_CHECK_TOKEN_DIR") {
+        let _ = std::fs::create_dir_all(&dir);
+        let path = format!("{dir}/token-{:016x}.txt", mix(0x746f6b, token.len() as u64));
+        let _ = std::fs::write(path, format!("{token}\n{message}\n"));
+    }
+}
+
+/// splitmix64-style mixer: the only "randomness" in the checker, used
+/// for seeded option rotation and token file names. Fully deterministic.
+fn mix(seed: u64, step: u64) -> u64 {
+    let mut z = seed ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Execution state
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    BlockedMutex(usize),
+    BlockedCv(usize),
+    BlockedJoin(usize),
+    Finished,
+}
+
+#[derive(Debug)]
+struct ThreadState {
+    status: Status,
+    timed_out: bool,
+}
+
+impl ThreadState {
+    fn new() -> ThreadState {
+        ThreadState { status: Status::Runnable, timed_out: false }
+    }
+}
+
+#[derive(Debug, Default)]
+struct MutexModel {
+    owner: Option<usize>,
+    waiting: Vec<usize>,
+}
+
+#[derive(Debug)]
+struct CvWaiter {
+    tid: usize,
+    mutex: usize,
+    timed: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Choice {
+    options: Vec<usize>,
+    chosen: usize,
+}
+
+struct ExecState {
+    threads: Vec<ThreadState>,
+    running: Option<usize>,
+    replay: Vec<usize>,
+    cursor: usize,
+    trace: Vec<Choice>,
+    preemptions: usize,
+    preemption_bound: usize,
+    steps: usize,
+    max_steps: usize,
+    seed: u64,
+    abort: bool,
+    failure: Option<String>,
+    mutexes: HashMap<usize, MutexModel>,
+    cvs: HashMap<usize, Vec<CvWaiter>>,
+    live_nodes: HashSet<usize>,
+}
+
+impl ExecState {
+    fn new(opts: CheckOpts, replay: Vec<usize>) -> ExecState {
+        ExecState {
+            threads: Vec::new(),
+            running: None,
+            replay,
+            cursor: 0,
+            trace: Vec::new(),
+            preemptions: 0,
+            preemption_bound: opts.preemption_bound,
+            steps: 0,
+            max_steps: opts.max_steps,
+            seed: opts.seed,
+            abort: false,
+            failure: None,
+            mutexes: HashMap::new(),
+            cvs: HashMap::new(),
+            live_nodes: HashSet::new(),
+        }
+    }
+}
+
+/// One model execution: the scheduler state plus the real thread handles
+/// the controller joins between schedules.
+pub(crate) struct Execution {
+    state: StdMutex<ExecState>,
+    cv: StdCondvar,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Execution {
+    fn new(opts: CheckOpts, replay: Vec<usize>) -> Execution {
+        Execution {
+            state: StdMutex::new(ExecState::new(opts, replay)),
+            cv: StdCondvar::new(),
+            handles: StdMutex::new(Vec::new()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ExecState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Per-thread handle to the active model execution. `None` outside a
+/// model run — the shim's production fast path.
+pub(crate) struct Ctx {
+    pub(crate) exec: Arc<Execution>,
+    pub(crate) tid: usize,
+}
+
+impl Clone for Ctx {
+    fn clone(&self) -> Ctx {
+        Ctx { exec: Arc::clone(&self.exec), tid: self.tid }
+    }
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = RefCell::new(None);
+}
+
+/// The calling thread's model context, if it is a model thread.
+pub(crate) fn ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(ctx: Option<Ctx>) {
+    CTX.with(|c| *c.borrow_mut() = ctx);
+}
+
+/// Unwind sentinel used to tear model threads down after an abort; the
+/// thread wrapper catches it and does not report it as a user panic.
+struct SchedAbort;
+
+fn panic_abort() -> ! {
+    std::panic::panic_any(SchedAbort)
+}
+
+/// Panic payload for unwinds a model body raises *on purpose* (e.g. to
+/// exercise RAII release-on-unwind paths under `catch_unwind`): the
+/// panic hook stays silent for it, so exploring hundreds of schedules
+/// does not print hundreds of expected backtraces. Raise it with
+/// `std::panic::panic_any(QuietPanic("why"))`.
+#[derive(Debug)]
+pub struct QuietPanic(pub &'static str);
+
+/// Silence the default panic hook for [`SchedAbort`] teardown unwinds —
+/// they are control flow, not failures, and would otherwise print a
+/// "thread 'model-N' panicked" line per torn-down thread — and for
+/// deliberate [`QuietPanic`]s. User panics still reach the previous hook
+/// unchanged. Installed once, process-wide (the wrapped hook chain keeps
+/// working for everything else).
+fn install_teardown_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().is::<SchedAbort>() || info.payload().is::<QuietPanic>() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+fn fail(st: &mut ExecState, msg: String) {
+    if st.failure.is_none() {
+        st.failure = Some(msg);
+    }
+    st.abort = true;
+}
+
+// ---------------------------------------------------------------------------
+// The decision procedure
+// ---------------------------------------------------------------------------
+
+/// Pick the next thread to run. `cur` is the thread that just yielded
+/// (it may have blocked or finished, in which case it is absent from
+/// the runnable set and switching away from it is free). Returns `Err`
+/// after recording a failure (deadlock or step-budget livelock); the
+/// caller must notify and unwind.
+fn choose_next(st: &mut ExecState, cur: Option<usize>) -> Result<(), ()> {
+    st.steps += 1;
+    if st.steps > st.max_steps {
+        fail(
+            st,
+            format!("step budget exceeded ({} decisions): possible livelock", st.max_steps),
+        );
+        return Err(());
+    }
+    loop {
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            if st.threads.iter().all(|t| t.status == Status::Finished) {
+                st.running = None;
+                return Ok(());
+            }
+            // Model time advances only at quiescence: when nothing can
+            // run, the lowest-tid timed condvar waiter times out.
+            if let Some(tid) = lowest_timed_waiter(st) {
+                wake_timed_waiter(st, tid);
+                continue;
+            }
+            let dump: Vec<String> = st
+                .threads
+                .iter()
+                .enumerate()
+                .map(|(i, t)| format!("t{i}:{:?}", t.status))
+                .collect();
+            fail(st, format!("deadlock: no runnable threads [{}]", dump.join(" ")));
+            return Err(());
+        }
+
+        let cur_runnable = match cur {
+            Some(c) => runnable.contains(&c),
+            None => false,
+        };
+        let mut options: Vec<usize> = Vec::with_capacity(runnable.len());
+        if cur_runnable {
+            // Canonical order: keep running first; alternatives are
+            // preemptions and only offered while budget remains.
+            if let Some(c) = cur {
+                options.push(c);
+                if st.preemptions < st.preemption_bound {
+                    options.extend(runnable.iter().copied().filter(|&t| t != c));
+                }
+            }
+        } else {
+            options.extend(runnable.iter().copied());
+        }
+        if st.seed != 0 && options.len() > 1 {
+            let start = usize::from(cur_runnable);
+            let n = options.len() - start;
+            if n > 1 {
+                let r = (mix(st.seed, st.trace.len() as u64) as usize) % n;
+                options[start..].rotate_left(r);
+            }
+        }
+
+        let idx = if st.cursor < st.replay.len() {
+            st.replay[st.cursor].min(options.len() - 1)
+        } else {
+            0
+        };
+        st.cursor += 1;
+        st.trace.push(Choice { options: options.clone(), chosen: idx });
+        let next = options[idx];
+        if cur_runnable && Some(next) != cur {
+            st.preemptions += 1;
+        }
+        st.running = Some(next);
+        return Ok(());
+    }
+}
+
+fn lowest_timed_waiter(st: &ExecState) -> Option<usize> {
+    for (tid, t) in st.threads.iter().enumerate() {
+        if let Status::BlockedCv(cv) = t.status {
+            let timed = st
+                .cvs
+                .get(&cv)
+                .map(|ws| ws.iter().any(|w| w.tid == tid && w.timed))
+                .unwrap_or(false);
+            if timed {
+                return Some(tid);
+            }
+        }
+    }
+    None
+}
+
+fn wake_timed_waiter(st: &mut ExecState, tid: usize) {
+    let cv = match st.threads[tid].status {
+        Status::BlockedCv(cv) => cv,
+        _ => return,
+    };
+    let mutex = {
+        let waiters = match st.cvs.get_mut(&cv) {
+            Some(w) => w,
+            None => return,
+        };
+        let pos = match waiters.iter().position(|w| w.tid == tid) {
+            Some(p) => p,
+            None => return,
+        };
+        waiters.remove(pos).mutex
+    };
+    st.threads[tid].timed_out = true;
+    wake_into_mutex(st, tid, mutex);
+}
+
+/// A condvar waiter woken (by notify or timeout) re-contends its mutex:
+/// it becomes runnable owning the mutex if free, else joins the mutex
+/// wait queue.
+fn wake_into_mutex(st: &mut ExecState, tid: usize, mutex: usize) {
+    let m = st.mutexes.entry(mutex).or_default();
+    if m.owner.is_none() {
+        m.owner = Some(tid);
+        st.threads[tid].status = Status::Runnable;
+    } else {
+        m.waiting.push(tid);
+        st.threads[tid].status = Status::BlockedMutex(mutex);
+    }
+}
+
+fn release_mutex_inner(st: &mut ExecState, mutex: usize) {
+    let handoff = {
+        let m = st.mutexes.entry(mutex).or_default();
+        m.owner = None;
+        if m.waiting.is_empty() {
+            None
+        } else {
+            let w = m.waiting.remove(0);
+            m.owner = Some(w);
+            Some(w)
+        }
+    };
+    if let Some(w) = handoff {
+        st.threads[w].status = Status::Runnable;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-side primitives (called from the shim on a model thread)
+// ---------------------------------------------------------------------------
+
+/// Park until this thread holds the run token (or the execution aborts).
+///
+/// Abort teardown: a thread that is not already unwinding leaves via the
+/// [`SchedAbort`] sentinel; a thread that *is* unwinding (its Drop
+/// handlers reached a shim op mid-panic) just returns — panicking again
+/// would double-panic and abort the whole process. After an abort the
+/// scheduler no longer serializes threads; that is safe because the real
+/// `std::sync` primitives underneath still protect the data.
+fn park(c: &Ctx) {
+    let mut st = c.exec.lock();
+    loop {
+        if st.abort {
+            drop(st);
+            if std::thread::panicking() {
+                return;
+            }
+            panic_abort();
+        }
+        if st.running == Some(c.tid) && st.threads[c.tid].status == Status::Runnable {
+            return;
+        }
+        st = c.exec.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+}
+
+/// A schedule point before a shared-memory operation: the scheduler may
+/// hand the token to any runnable thread (costing a preemption) before
+/// the operation executes.
+pub(crate) fn op_point(c: &Ctx) {
+    let mut st = c.exec.lock();
+    if st.abort {
+        drop(st);
+        if std::thread::panicking() {
+            return;
+        }
+        panic_abort();
+    }
+    let ok = choose_next(&mut st, Some(c.tid)).is_ok();
+    let next = st.running;
+    drop(st);
+    c.exec.cv.notify_all();
+    if !ok {
+        if std::thread::panicking() {
+            return;
+        }
+        panic_abort();
+    }
+    if next != Some(c.tid) {
+        park(c);
+    }
+}
+
+/// Model-acquire a mutex (schedule point included). On return the
+/// calling thread owns the model mutex; the caller then takes the real
+/// lock, which is uncontended modulo a transient hand-over window.
+pub(crate) fn mutex_lock(c: &Ctx, mutex: usize) {
+    op_point(c);
+    let mut st = c.exec.lock();
+    if st.abort {
+        drop(st);
+        if std::thread::panicking() {
+            return;
+        }
+        panic_abort();
+    }
+    let m = st.mutexes.entry(mutex).or_default();
+    if m.owner.is_none() {
+        m.owner = Some(c.tid);
+        return;
+    }
+    m.waiting.push(c.tid);
+    st.threads[c.tid].status = Status::BlockedMutex(mutex);
+    let ok = choose_next(&mut st, Some(c.tid)).is_ok();
+    drop(st);
+    c.exec.cv.notify_all();
+    if !ok {
+        if std::thread::panicking() {
+            return;
+        }
+        panic_abort();
+    }
+    park(c);
+}
+
+/// Model-release a mutex. Not itself a decision point (the next shared
+/// operation is); a no-op during abort teardown so guards can drop
+/// freely while unwinding.
+pub(crate) fn mutex_unlock(c: &Ctx, mutex: usize) {
+    let mut st = c.exec.lock();
+    if st.abort {
+        return;
+    }
+    release_mutex_inner(&mut st, mutex);
+    drop(st);
+    c.exec.cv.notify_all();
+}
+
+/// Atomically release the mutex and join the condvar wait queue (no
+/// decision point in between — exactly the release-and-sleep atomicity
+/// real condvars guarantee), then hand the token on. The caller drops
+/// the real lock *after* this returns and parks via [`cv_wait_finish`].
+pub(crate) fn cv_wait_begin(c: &Ctx, cv: usize, mutex: usize, timed: bool) {
+    let mut st = c.exec.lock();
+    if st.abort {
+        drop(st);
+        if std::thread::panicking() {
+            return;
+        }
+        panic_abort();
+    }
+    release_mutex_inner(&mut st, mutex);
+    st.cvs.entry(cv).or_default().push(CvWaiter { tid: c.tid, mutex, timed });
+    st.threads[c.tid].status = Status::BlockedCv(cv);
+    st.threads[c.tid].timed_out = false;
+    let ok = choose_next(&mut st, Some(c.tid)).is_ok();
+    drop(st);
+    c.exec.cv.notify_all();
+    if !ok && !std::thread::panicking() {
+        panic_abort();
+    }
+}
+
+/// Park after [`cv_wait_begin`]; on return the thread owns the model
+/// mutex again. Returns true when the wake was the timeout fallback.
+pub(crate) fn cv_wait_finish(c: &Ctx) -> bool {
+    park(c);
+    let st = c.exec.lock();
+    st.threads[c.tid].timed_out
+}
+
+/// Wake one (or all) condvar waiters. Waiters move to the mutex queue
+/// exactly as a real notify does; a no-op during abort teardown.
+pub(crate) fn cv_notify(c: &Ctx, cv: usize, all: bool) {
+    op_point(c);
+    let mut st = c.exec.lock();
+    if st.abort {
+        return;
+    }
+    loop {
+        let next = match st.cvs.get_mut(&cv) {
+            Some(ws) if !ws.is_empty() => ws.remove(0),
+            _ => break,
+        };
+        wake_into_mutex(&mut st, next.tid, next.mutex);
+        if !all {
+            break;
+        }
+    }
+    drop(st);
+    c.exec.cv.notify_all();
+}
+
+// ---------------------------------------------------------------------------
+// Allocation ledger
+// ---------------------------------------------------------------------------
+
+/// Record a node allocation handed to raw-pointer code.
+pub(crate) fn ledger_alloc(c: &Ctx, ptr: usize) {
+    let mut st = c.exec.lock();
+    if st.abort {
+        return;
+    }
+    st.live_nodes.insert(ptr);
+}
+
+/// Record a node reclamation; a pointer the ledger does not know is a
+/// double free (or a free of foreign memory) and fails the execution.
+pub(crate) fn ledger_free(c: &Ctx, ptr: usize) {
+    let mut st = c.exec.lock();
+    if st.abort {
+        return;
+    }
+    if !st.live_nodes.remove(&ptr) {
+        fail(&mut st, format!("allocation ledger: double free of node {ptr:#x}"));
+        drop(st);
+        c.exec.cv.notify_all();
+        // Never panic inside an unwind (double panic aborts the process);
+        // the recorded failure already dooms the execution.
+        if !std::thread::panicking() {
+            panic_abort();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model threads
+// ---------------------------------------------------------------------------
+
+/// Join half of [`spawn_model`].
+pub(crate) struct ModelJoin<T> {
+    tid: usize,
+    result: Arc<StdMutex<Option<T>>>,
+}
+
+impl<T> ModelJoin<T> {
+    /// Block (model-blocking) until the target thread finishes, then
+    /// take its result. If the target panicked the execution is already
+    /// aborting and this unwinds with the abort sentinel.
+    pub(crate) fn join(self) -> T {
+        let c = match ctx() {
+            Some(c) => c,
+            None => panic!("model JoinHandle joined outside the model execution"),
+        };
+        let mut st = c.exec.lock();
+        if st.abort {
+            drop(st);
+            panic_abort();
+        }
+        if st.threads[self.tid].status != Status::Finished {
+            st.threads[c.tid].status = Status::BlockedJoin(self.tid);
+            let ok = choose_next(&mut st, Some(c.tid)).is_ok();
+            drop(st);
+            c.exec.cv.notify_all();
+            if !ok {
+                panic_abort();
+            }
+            park(&c);
+        } else {
+            drop(st);
+        }
+        let taken = self.result.lock().unwrap_or_else(PoisonError::into_inner).take();
+        match taken {
+            Some(v) => v,
+            // The target unwound (user panic recorded as the failure, or
+            // abort teardown) — propagate the teardown.
+            None => panic_abort(),
+        }
+    }
+}
+
+/// Spawn a model thread; registering it is a schedule point, so the new
+/// thread may run immediately or later, like a real spawn.
+pub(crate) fn spawn_model<F, T>(c: &Ctx, f: F) -> ModelJoin<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let tid = {
+        let mut st = c.exec.lock();
+        st.threads.push(ThreadState::new());
+        st.threads.len() - 1
+    };
+    let result: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+    let out = Arc::clone(&result);
+    let exec = Arc::clone(&c.exec);
+    let handle = std::thread::Builder::new()
+        .name(format!("model-{tid}"))
+        .spawn(move || {
+            run_model_thread(exec, tid, f, out);
+        })
+        .unwrap_or_else(|e| panic!("model checker could not spawn an OS thread: {e}"));
+    c.exec
+        .handles
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .push(handle);
+    op_point(c);
+    ModelJoin { tid, result }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(q) = p.downcast_ref::<QuietPanic>() {
+        q.0.to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn run_model_thread<F, T>(
+    exec: Arc<Execution>,
+    tid: usize,
+    f: F,
+    out: Arc<StdMutex<Option<T>>>,
+) where
+    F: FnOnce() -> T,
+{
+    let c = Ctx { exec: Arc::clone(&exec), tid };
+    set_ctx(Some(c.clone()));
+    // Wait for the first turn.
+    let aborted_before_start = {
+        let mut st = exec.lock();
+        loop {
+            if st.abort {
+                break true;
+            }
+            if st.running == Some(tid) && st.threads[tid].status == Status::Runnable {
+                break false;
+            }
+            st = exec.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    };
+    if !aborted_before_start {
+        match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => {
+                *out.lock().unwrap_or_else(PoisonError::into_inner) = Some(v);
+            }
+            Err(p) => {
+                if !p.is::<SchedAbort>() {
+                    let mut st = exec.lock();
+                    fail(&mut st, format!("model thread {tid} panicked: {}", panic_message(&*p)));
+                }
+            }
+        }
+    }
+    // Finish: wake joiners, pass the token on (or quiesce).
+    {
+        let mut st = exec.lock();
+        st.threads[tid].status = Status::Finished;
+        for i in 0..st.threads.len() {
+            if st.threads[i].status == Status::BlockedJoin(tid) {
+                st.threads[i].status = Status::Runnable;
+            }
+        }
+        if !st.abort {
+            let _ = choose_next(&mut st, Some(tid));
+        } else if st.threads.iter().all(|t| t.status == Status::Finished) {
+            st.running = None;
+        }
+    }
+    exec.cv.notify_all();
+    set_ctx(None);
+}
+
+// ---------------------------------------------------------------------------
+// The controller: explore / replay
+// ---------------------------------------------------------------------------
+
+/// Run `body` under the controlled scheduler, exploring interleavings
+/// by depth-first backtracking until the space (within the preemption
+/// bound) is exhausted or the schedule budget runs out. The closure is
+/// re-run once per schedule, so it must be `Fn` and self-contained.
+pub fn model<F>(opts: CheckOpts, body: F) -> CheckOutcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    explore(opts, None, Arc::new(body))
+}
+
+/// Re-run exactly one schedule from a replay token produced by a
+/// failing [`model`] run (see [`CheckOutcome::Fail`]). The closure must
+/// be the same model body that produced the token.
+pub fn replay<F>(token: &str, body: F) -> CheckOutcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let (seed, bound, choices) = match parse_token(token) {
+        Some(t) => t,
+        None => {
+            return CheckOutcome::Fail {
+                token: token.to_string(),
+                message: format!("unparseable replay token '{token}'"),
+                schedules: 0,
+            }
+        }
+    };
+    let opts = CheckOpts {
+        preemption_bound: bound,
+        max_schedules: 1,
+        seed,
+        ..CheckOpts::default()
+    };
+    explore(opts, Some(choices), Arc::new(body))
+}
+
+fn encode_token(seed: u64, bound: usize, trace: &[Choice]) -> String {
+    let idx: Vec<String> = trace.iter().map(|c| c.chosen.to_string()).collect();
+    format!("mc1:s{seed}:b{bound}:{}", idx.join("."))
+}
+
+/// Parse `mc1:s<seed>:b<bound>:<i.i.i>` back into its parts.
+pub fn parse_token(token: &str) -> Option<(u64, usize, Vec<usize>)> {
+    let rest = token.strip_prefix("mc1:s")?;
+    let (seed_s, rest) = rest.split_once(":b")?;
+    let (bound_s, idx_s) = rest.split_once(':')?;
+    let seed = seed_s.parse::<u64>().ok()?;
+    let bound = bound_s.parse::<usize>().ok()?;
+    let choices = if idx_s.is_empty() {
+        Vec::new()
+    } else {
+        idx_s
+            .split('.')
+            .map(|s| s.parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .ok()?
+    };
+    Some((seed, bound, choices))
+}
+
+fn explore(opts: CheckOpts, forced: Option<Vec<usize>>, body: Arc<dyn Fn() + Send + Sync>) -> CheckOutcome {
+    install_teardown_hook();
+    let replay_only = forced.is_some();
+    let mut next_replay: Vec<usize> = forced.unwrap_or_default();
+    let mut schedules = 0usize;
+    loop {
+        let exec = Arc::new(Execution::new(opts, std::mem::take(&mut next_replay)));
+        run_one(&exec, Arc::clone(&body));
+        schedules += 1;
+        let st = exec.lock();
+        if let Some(msg) = &st.failure {
+            return CheckOutcome::Fail {
+                token: encode_token(opts.seed, opts.preemption_bound, &st.trace),
+                message: msg.clone(),
+                schedules,
+            };
+        }
+        if replay_only {
+            return CheckOutcome::Pass { schedules, complete: false };
+        }
+        // Backtrack: deepest decision with an untried option.
+        let mut found = false;
+        for i in (0..st.trace.len()).rev() {
+            if st.trace[i].chosen + 1 < st.trace[i].options.len() {
+                next_replay = st.trace[..i].iter().map(|c| c.chosen).collect();
+                next_replay.push(st.trace[i].chosen + 1);
+                found = true;
+                break;
+            }
+        }
+        if !found {
+            return CheckOutcome::Pass { schedules, complete: true };
+        }
+        if schedules >= opts.max_schedules {
+            return CheckOutcome::Pass { schedules, complete: false };
+        }
+    }
+}
+
+fn run_one(exec: &Arc<Execution>, body: Arc<dyn Fn() + Send + Sync>) {
+    {
+        let mut st = exec.lock();
+        st.threads.push(ThreadState::new());
+        st.running = Some(0);
+    }
+    let e2 = Arc::clone(exec);
+    let out: Arc<StdMutex<Option<()>>> = Arc::new(StdMutex::new(None));
+    let handle = std::thread::Builder::new()
+        .name("model-0".to_string())
+        .spawn(move || {
+            run_model_thread(e2, 0, move || body(), out);
+        })
+        .unwrap_or_else(|e| panic!("model checker could not spawn an OS thread: {e}"));
+    exec.handles
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .push(handle);
+    // Wait for quiescence: every model thread finished (normally or via
+    // abort teardown).
+    {
+        let mut st = exec.lock();
+        while !st.threads.iter().all(|t| t.status == Status::Finished) {
+            st = exec.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+    // Join the real OS threads so nothing leaks into the next schedule.
+    let handles = std::mem::take(
+        &mut *exec.handles.lock().unwrap_or_else(PoisonError::into_inner),
+    );
+    for h in handles {
+        let _ = h.join();
+    }
+    // Leak check: every ledger allocation must have been reclaimed.
+    let mut st = exec.lock();
+    if st.failure.is_none() && !st.live_nodes.is_empty() {
+        let n = st.live_nodes.len();
+        fail(&mut st, format!("allocation ledger: {n} node(s) leaked at end of execution"));
+    }
+}

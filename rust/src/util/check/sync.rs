@@ -1,0 +1,500 @@
+//! Shim `std::sync` types routed through the model-check scheduler.
+//!
+//! Outside a model execution every type here is a thin newtype over the
+//! corresponding `std::sync` primitive: the only added cost is one
+//! thread-local read and an untaken branch per operation (the
+//! `perf_hotpaths` checker-overhead guard pins this at noise level).
+//! Inside [`super::model`], every atomic access, lock, park, and wake
+//! first reaches a scheduler decision point, which is what lets the
+//! checker enumerate interleavings deterministically.
+//!
+//! Drop-in compatibility: `lock`/`wait`/`wait_timeout` return
+//! [`std::sync::LockResult`]-shaped values so existing
+//! `unwrap_or_else(PoisonError::into_inner)` call sites compile
+//! unchanged. [`WaitTimeoutResult`] is this module's own type because
+//! std's has no public constructor. Under the model, `Ordering` is
+//! accepted but interleavings are explored at sequential consistency
+//! (see `super::sched` for the documented simplification).
+
+use super::sched;
+use std::sync::{LockResult, PoisonError};
+use std::time::Duration;
+
+pub use std::sync::atomic::Ordering;
+pub use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Insert a scheduler decision point when called from a model thread;
+/// free (one TLS read) otherwise.
+#[inline]
+fn point() {
+    if let Some(c) = sched::ctx() {
+        sched::op_point(&c);
+    }
+}
+
+macro_rules! shim_atomic {
+    ($(#[$doc:meta])* $name:ident, $std:ty, $prim:ty) => {
+        $(#[$doc])*
+        #[derive(Debug, Default)]
+        pub struct $name {
+            inner: $std,
+        }
+
+        impl $name {
+            /// Create the atomic (identical to the `std` constructor).
+            pub const fn new(v: $prim) -> $name {
+                $name { inner: <$std>::new(v) }
+            }
+
+            /// Atomic load (a model decision point under checking).
+            #[inline]
+            pub fn load(&self, order: Ordering) -> $prim {
+                point();
+                self.inner.load(order)
+            }
+
+            /// Atomic store (a model decision point under checking).
+            #[inline]
+            pub fn store(&self, v: $prim, order: Ordering) {
+                point();
+                self.inner.store(v, order)
+            }
+
+            /// Atomic swap (a model decision point under checking).
+            #[inline]
+            pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                point();
+                self.inner.swap(v, order)
+            }
+
+            /// Atomic compare-and-exchange (one decision point for the
+            /// whole read-modify-write, like a single instruction).
+            #[inline]
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                point();
+                self.inner.compare_exchange(current, new, success, failure)
+            }
+
+            /// Weak compare-and-exchange (may spuriously fail on real
+            /// hardware; deterministic under the model).
+            #[inline]
+            pub fn compare_exchange_weak(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                point();
+                self.inner.compare_exchange_weak(current, new, success, failure)
+            }
+
+            /// Exclusive access needs no scheduling: `&mut self` proves
+            /// no other thread can observe the value.
+            #[inline]
+            pub fn get_mut(&mut self) -> &mut $prim {
+                self.inner.get_mut()
+            }
+
+            /// Consume the atomic, returning the value.
+            #[inline]
+            pub fn into_inner(self) -> $prim {
+                self.inner.into_inner()
+            }
+        }
+    };
+}
+
+shim_atomic!(
+    /// Shim over [`std::sync::atomic::AtomicUsize`].
+    AtomicUsize,
+    std::sync::atomic::AtomicUsize,
+    usize
+);
+shim_atomic!(
+    /// Shim over [`std::sync::atomic::AtomicU64`].
+    AtomicU64,
+    std::sync::atomic::AtomicU64,
+    u64
+);
+shim_atomic!(
+    /// Shim over [`std::sync::atomic::AtomicBool`].
+    AtomicBool,
+    std::sync::atomic::AtomicBool,
+    bool
+);
+
+macro_rules! shim_fetch_arith {
+    ($name:ident, $prim:ty) => {
+        impl $name {
+            /// Atomic add, returning the previous value.
+            #[inline]
+            pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                point();
+                self.inner.fetch_add(v, order)
+            }
+
+            /// Atomic subtract, returning the previous value.
+            #[inline]
+            pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                point();
+                self.inner.fetch_sub(v, order)
+            }
+        }
+    };
+}
+
+shim_fetch_arith!(AtomicUsize, usize);
+shim_fetch_arith!(AtomicU64, u64);
+
+/// Shim over [`std::sync::atomic::AtomicPtr`].
+#[derive(Debug)]
+pub struct AtomicPtr<T> {
+    inner: std::sync::atomic::AtomicPtr<T>,
+}
+
+impl<T> AtomicPtr<T> {
+    /// Create the atomic pointer (identical to the `std` constructor).
+    pub const fn new(p: *mut T) -> AtomicPtr<T> {
+        AtomicPtr { inner: std::sync::atomic::AtomicPtr::new(p) }
+    }
+
+    /// Atomic load (a model decision point under checking).
+    #[inline]
+    pub fn load(&self, order: Ordering) -> *mut T {
+        point();
+        self.inner.load(order)
+    }
+
+    /// Atomic store (a model decision point under checking).
+    #[inline]
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        point();
+        self.inner.store(p, order)
+    }
+
+    /// Atomic swap (a model decision point under checking).
+    #[inline]
+    pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+        point();
+        self.inner.swap(p, order)
+    }
+
+    /// Atomic compare-and-exchange (one decision point).
+    #[inline]
+    pub fn compare_exchange(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        point();
+        self.inner.compare_exchange(current, new, success, failure)
+    }
+
+    /// Weak compare-and-exchange (one decision point).
+    #[inline]
+    pub fn compare_exchange_weak(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        point();
+        self.inner.compare_exchange_weak(current, new, success, failure)
+    }
+
+    /// Exclusive access needs no scheduling.
+    #[inline]
+    pub fn get_mut(&mut self) -> &mut *mut T {
+        self.inner.get_mut()
+    }
+}
+
+impl<T> Default for AtomicPtr<T> {
+    fn default() -> AtomicPtr<T> {
+        AtomicPtr::new(std::ptr::null_mut())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Shim over [`std::sync::Mutex`]. Under the model the scheduler owns
+/// the blocking protocol (so lock-ordering deadlocks and lost wake-ups
+/// are detected deterministically); the real inner lock is only ever
+/// taken by the thread the model granted ownership to, so it is
+/// uncontended modulo a transient hand-over window.
+#[derive(Debug, Default)]
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Create the mutex (identical to the `std` constructor).
+    pub const fn new(value: T) -> Mutex<T> {
+        Mutex { inner: std::sync::Mutex::new(value) }
+    }
+
+    /// The model identity of this mutex: its address. Stable for the
+    /// lifetime of the value, which is all the per-execution scheduler
+    /// tables need.
+    fn key(&self) -> usize {
+        self as *const Mutex<T> as usize
+    }
+
+    /// Acquire the lock, blocking through the model scheduler on a
+    /// model thread and through the OS otherwise. Poisoning is
+    /// reported exactly as `std` does on the production path; the model
+    /// path never observes poison (a panicking model execution aborts).
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some(c) = sched::ctx() {
+            sched::mutex_lock(&c, self.key());
+            let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok(MutexGuard {
+                inner: Some(inner),
+                lock_ref: &self.inner,
+                mutex_key: self.key(),
+                model: true,
+            });
+        }
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard {
+                inner: Some(g),
+                lock_ref: &self.inner,
+                mutex_key: 0,
+                model: false,
+            }),
+            Err(pe) => Err(PoisonError::new(MutexGuard {
+                inner: Some(pe.into_inner()),
+                lock_ref: &self.inner,
+                mutex_key: 0,
+                model: false,
+            })),
+        }
+    }
+
+    /// Consume the mutex, returning the value (never blocks).
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    /// Exclusive access to the value (never blocks).
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+/// Guard returned by [`Mutex::lock`]; releases the model ownership (and
+/// the real lock) on drop.
+pub struct MutexGuard<'a, T> {
+    /// `None` only after the guard was consumed by a condvar wait or
+    /// already dropped — the two paths that hand the real lock back
+    /// without the model release below.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    lock_ref: &'a std::sync::Mutex<T>,
+    mutex_key: usize,
+    model: bool,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    fn inner(&self) -> &std::sync::MutexGuard<'a, T> {
+        match &self.inner {
+            Some(g) => g,
+            None => unreachable!("mutex guard used after release"),
+        }
+    }
+
+    fn inner_mut(&mut self) -> &mut std::sync::MutexGuard<'a, T> {
+        match &mut self.inner {
+            Some(g) => g,
+            None => unreachable!("mutex guard used after release"),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner()
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner_mut()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            drop(g);
+            if self.model {
+                if let Some(c) = sched::ctx() {
+                    sched::mutex_unlock(&c, self.mutex_key);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Timeout verdict returned by [`Condvar::wait_timeout`]. This module's
+/// own type ([`std::sync::WaitTimeoutResult`] has no public
+/// constructor); API-compatible via [`WaitTimeoutResult::timed_out`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult {
+    timed: bool,
+}
+
+impl WaitTimeoutResult {
+    /// True when the wait returned because the timeout elapsed.
+    pub fn timed_out(&self) -> bool {
+        self.timed
+    }
+}
+
+/// Shim over [`std::sync::Condvar`]. Under the model, waiters queue in
+/// FIFO order, release-and-sleep is atomic with respect to scheduler
+/// decisions (so a lost notify manifests as a detected deadlock, not a
+/// flaky hang), and a timed wait only times out when nothing else in
+/// the model can run.
+#[derive(Debug, Default)]
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    /// Create the condvar (identical to the `std` constructor).
+    pub const fn new() -> Condvar {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    fn key(&self) -> usize {
+        self as *const Condvar as usize
+    }
+
+    /// Release the lock and park until notified.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if guard.model {
+            return Ok(self.model_wait(guard, false).0);
+        }
+        self.std_wait(guard)
+    }
+
+    /// Release the lock and park until notified or `timeout` elapses
+    /// (under the model: until nothing else can run).
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        timeout: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.model {
+            let (g, timed) = self.model_wait(guard, true);
+            return Ok((g, WaitTimeoutResult { timed }));
+        }
+        let lock_ref = guard.lock_ref;
+        let inner = take_inner(guard);
+        match self.inner.wait_timeout(inner, timeout) {
+            Ok((g, t)) => Ok((
+                remade(g, lock_ref),
+                WaitTimeoutResult { timed: t.timed_out() },
+            )),
+            Err(pe) => {
+                let (g, t) = pe.into_inner();
+                Err(PoisonError::new((
+                    remade(g, lock_ref),
+                    WaitTimeoutResult { timed: t.timed_out() },
+                )))
+            }
+        }
+    }
+
+    /// Wake one waiter (FIFO under the model).
+    pub fn notify_one(&self) {
+        if let Some(c) = sched::ctx() {
+            sched::cv_notify(&c, self.key(), false);
+            return;
+        }
+        self.inner.notify_one();
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        if let Some(c) = sched::ctx() {
+            sched::cv_notify(&c, self.key(), true);
+            return;
+        }
+        self.inner.notify_all();
+    }
+
+    fn model_wait<'a, T>(&self, guard: MutexGuard<'a, T>, timed: bool) -> (MutexGuard<'a, T>, bool) {
+        let c = match sched::ctx() {
+            Some(c) => c,
+            None => unreachable!("model guard outside a model thread"),
+        };
+        let mutex_key = guard.mutex_key;
+        let lock_ref = guard.lock_ref;
+        // Atomically (w.r.t. scheduler decisions) release the model
+        // mutex and join the wait queue, then release the real lock and
+        // park. On wake the scheduler has already granted the model
+        // mutex back, so retaking the real lock cannot deadlock.
+        sched::cv_wait_begin(&c, self.key(), mutex_key, timed);
+        drop(take_inner(guard));
+        let timed_out = sched::cv_wait_finish(&c);
+        let inner = lock_ref.lock().unwrap_or_else(PoisonError::into_inner);
+        (
+            MutexGuard { inner: Some(inner), lock_ref, mutex_key, model: true },
+            timed_out,
+        )
+    }
+
+    fn std_wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock_ref = guard.lock_ref;
+        let inner = take_inner(guard);
+        match self.inner.wait(inner) {
+            Ok(g) => Ok(remade(g, lock_ref)),
+            Err(pe) => Err(PoisonError::new(remade(pe.into_inner(), lock_ref))),
+        }
+    }
+}
+
+/// Extract the real guard; the shim guard's drop then becomes a no-op
+/// (its model release, if any, is the caller's responsibility).
+fn take_inner<'a, T>(mut guard: MutexGuard<'a, T>) -> std::sync::MutexGuard<'a, T> {
+    match guard.inner.take() {
+        Some(g) => g,
+        None => unreachable!("mutex guard consumed twice"),
+    }
+}
+
+fn remade<'a, T>(
+    inner: std::sync::MutexGuard<'a, T>,
+    lock_ref: &'a std::sync::Mutex<T>,
+) -> MutexGuard<'a, T> {
+    MutexGuard { inner: Some(inner), lock_ref, mutex_key: 0, model: false }
+}

@@ -1,0 +1,44 @@
+//! Thread spawn/join that participates in the model scheduler.
+//!
+//! [`spawn`] from a production thread is exactly
+//! [`std::thread::spawn`]. From inside a model execution it registers a
+//! new model thread: the spawn is a scheduler decision point (the child
+//! may run immediately or much later), `join` blocks through the model
+//! (so join cycles surface as detected deadlocks), and a child panic
+//! fails the whole execution with a replayable schedule token.
+
+use super::sched;
+
+/// Join handle returned by [`spawn`]; OS-backed or model-backed.
+pub struct JoinHandle<T>(Inner<T>);
+
+enum Inner<T> {
+    Os(std::thread::JoinHandle<T>),
+    Model(sched::ModelJoin<T>),
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish and take its result. The model
+    /// path always returns `Ok` — a panicking model thread aborts the
+    /// execution (recorded as the schedule failure) instead of
+    /// surfacing here.
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            Inner::Os(h) => h.join(),
+            Inner::Model(m) => Ok(m.join()),
+        }
+    }
+}
+
+/// [`std::thread::spawn`] outside a model execution; a scheduled model
+/// thread inside one.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match sched::ctx() {
+        Some(c) => JoinHandle(Inner::Model(sched::spawn_model(&c, f))),
+        None => JoinHandle(Inner::Os(std::thread::spawn(f))),
+    }
+}

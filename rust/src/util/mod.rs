@@ -1,11 +1,14 @@
 //! Shared utilities: deterministic RNG, statistics, SI-unit helpers, ASCII
-//! table rendering, JSON writing/parsing, error plumbing, and a minimal
-//! property-based-testing harness.
+//! table rendering, JSON writing/parsing, error plumbing, a minimal
+//! property-based-testing harness, and an in-tree concurrency model
+//! checker ([`check`]) for the serving core's lock-free structures.
 //!
 //! The offline crate cache for this environment carries neither `rand` nor
-//! `proptest` nor `criterion`, so this module provides the small, audited
-//! subset of each that the rest of the crate needs (see DESIGN.md §2).
+//! `proptest` nor `criterion` nor `loom`, so this module provides the
+//! small, audited subset of each that the rest of the crate needs (see
+//! DESIGN.md §2).
 
+pub mod check;
 pub mod cli;
 pub mod error;
 pub mod json;

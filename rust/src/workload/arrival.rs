@@ -216,6 +216,7 @@ fn exp_gap(rng: &mut Pcg32, rate_hz: f64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -126,8 +126,12 @@ pub fn closed_loop<S: TrafficSink>(
         ..TrafficReport::default()
     };
     for t in threads {
-        let (lats, rejected, shed, submitted, counts) =
-            t.join().expect("workload client thread panicked");
+        // a panicking client thread is a test/driver bug: propagate the
+        // original panic payload instead of masking it with a new one
+        let (lats, rejected, shed, submitted, counts) = match t.join() {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
         report.completed += lats.len();
         report.latencies_ms.extend(lats);
         report.rejections += rejected;
@@ -197,6 +201,7 @@ pub fn open_loop<S: TrafficSink>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::async_server::{AsyncServer, AsyncServerConfig};

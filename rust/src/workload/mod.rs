@@ -27,6 +27,10 @@
 //! scenarios into mixes, arrivals, and virtual fleet shapes). It never
 //! depends on `api`.
 
+// Same error-handling contract as `crate::api` and `crate::coordinator`:
+// typed errors on every fallible path, no panicking shortcuts.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod arrival;
 pub mod generator;
 pub mod mix;

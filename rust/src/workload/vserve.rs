@@ -731,6 +731,7 @@ fn submit_closed<C: ServiceModel>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
