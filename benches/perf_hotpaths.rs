@@ -20,7 +20,10 @@ use photogan::sim::engine::simulate_mapped;
 use photogan::sim::mapper::map_model;
 use photogan::sim::{simulate, OptFlags};
 use photogan::util::json::{obj, parse, JsonValue};
-use photogan::workload::vserve::{simulate_serve, ServiceModel, VirtualServeConfig};
+use photogan::workload::vserve::{
+    simulate_fleet, simulate_serve, FleetConfig, FleetCost, QueueKind, ServiceModel, ShardClass,
+    VirtualServeConfig,
+};
 use photogan::workload::{ArrivalProcess, TrafficMix};
 use std::sync::Arc;
 use std::time::Instant;
@@ -32,6 +35,51 @@ struct FlatCost;
 impl ServiceModel for FlatCost {
     fn batch_latency_s(&self, _model: &str, batch: usize) -> f64 {
         2e-5 * batch as f64
+    }
+}
+
+/// Class-tiered fleet cost (photonic fast, GPU slow) — flat per sample so
+/// the fleet cell measures the event engine, not the cost model.
+struct TieredFleetCost;
+
+impl FleetCost for TieredFleetCost {
+    fn batch_latency_s(&self, class: usize, _model: &str, batch: usize) -> f64 {
+        let per_sample = if class == 0 { 2e-5 } else { 1e-4 };
+        per_sample * batch as f64
+    }
+
+    fn batch_energy_j(&self, class: usize, _model: &str, batch: usize) -> f64 {
+        let per_sample = if class == 0 { 1e-3 } else { 5e-3 };
+        per_sample * batch as f64
+    }
+}
+
+/// Today's UTC date (`YYYY-MM-DD`) for the `BENCH_perf.json` history —
+/// Howard Hinnant's `civil_from_days`, no date crates needed.
+fn today_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// The previous run's metrics from a `BENCH_perf.json` document: the last
+/// `history` entry, or the whole document when it predates the history
+/// format (a flat metric object).
+fn previous_metrics(doc: &JsonValue) -> Option<JsonValue> {
+    match doc.get("history").and_then(JsonValue::as_array) {
+        Some(entries) => entries.last().and_then(|e| e.get("metrics")).cloned(),
+        None => Some(doc.clone()),
     }
 }
 
@@ -162,6 +210,67 @@ fn main() {
     );
     metrics.push(("vserve_steps_per_s", vserve_steps_per_s));
 
+    // --- fleet-scale vserve: 32 heterogeneous shards, wheel vs heap ---------
+    // The acceptance cell for the indexed event wheel: a 32-shard fleet
+    // (16 photonic + 16 GPU-class shards) under sustained overload, run
+    // once on the calendar queue and once on the reference BinaryHeap.
+    let mut fleet = FleetConfig {
+        base: VirtualServeConfig {
+            shards: 32,
+            workers: 2,
+            max_batch: 8,
+            max_wait_s: 1e-4,
+            queue_depth: 4096,
+            routing: RoutingPolicy::LeastOutstanding,
+            calibration: None,
+            deadline_s: None,
+        },
+        classes: vec![
+            ShardClass {
+                name: "photonic".into(),
+                workers: 2,
+                idle_w: 1.5,
+                cost_per_hour: 3.0,
+            },
+            ShardClass { name: "gpu".into(), workers: 4, idle_w: 80.0, cost_per_hour: 4.0 },
+        ],
+        shard_class: (0..32).map(|s| usize::from(s >= 16)).collect(),
+        failures: None,
+        autoscale: None,
+        queue: QueueKind::Wheel,
+    };
+    let arrival = ArrivalProcess::Poisson { rate_hz: 200_000.0, duration_s: 0.25 };
+    let probe = simulate_fleet(&fleet, &mix, &arrival, &TieredFleetCost, 13);
+    let (wheel_best, _) = time_it(1, 5, || {
+        std::hint::black_box(simulate_fleet(&fleet, &mix, &arrival, &TieredFleetCost, 13));
+    });
+    fleet.queue = QueueKind::Heap;
+    let heap_probe = simulate_fleet(&fleet, &mix, &arrival, &TieredFleetCost, 13);
+    assert_eq!(probe, heap_probe, "the queue swap must not change outcomes");
+    let (heap_best, _) = time_it(1, 5, || {
+        std::hint::black_box(simulate_fleet(&fleet, &mix, &arrival, &TieredFleetCost, 13));
+    });
+    fleet.queue = QueueKind::Wheel;
+    let fleet_steps_per_s = probe.admitted as f64 / wheel_best;
+    let fleet_heap_steps_per_s = heap_probe.admitted as f64 / heap_best;
+    println!(
+        "fleet vserve (32 sh) {} admitted: wheel {:>10} ({:.0}/s)  heap {:>10} ({:.0}/s)  \
+         = {:.2}x",
+        probe.admitted,
+        ms(wheel_best),
+        fleet_steps_per_s,
+        ms(heap_best),
+        fleet_heap_steps_per_s,
+        fleet_steps_per_s / fleet_heap_steps_per_s
+    );
+    metrics.push(("fleet_vserve_steps_per_s", fleet_steps_per_s));
+    metrics.push(("fleet_vserve_heap_steps_per_s", fleet_heap_steps_per_s));
+    // the wheel must hold a >= 2x edge over the heap on this cell (warn
+    // rather than fail: CI runners are noisy)
+    let ratio = fleet_steps_per_s / fleet_heap_steps_per_s;
+    let verdict = if ratio >= 2.0 { "PASS" } else { "WARN" };
+    println!("guard wheel_vs_heap_speedup        {verdict} ({ratio:.2}x, target 2.00x)");
+
     // --- threaded serve (sim backend, no pacing) ----------------------------
     let session = Arc::new(Session::new().expect("paper optimum is valid"));
     let req = ServeRequest::builder()
@@ -194,34 +303,54 @@ fn main() {
     );
     metrics.push(("async_serve_req_per_s", served.throughput_img_s));
 
-    // --- checker-overhead guard ---------------------------------------------
-    // The serving hot paths now run through the `util::check::sync` shims
-    // (one thread-local read + branch per atomic/lock op in production
-    // builds). Guard that the shim stays invisible: compare both serve
-    // throughputs against the checked-in baseline *before* overwriting it.
-    // CI runners are noisy, so this warns rather than fails — but the WARN
-    // line in the bench log is the regression signal to chase.
+    // --- regression guard vs the previous history entry ---------------------
+    // Every metric is compared against the most recent `BENCH_perf.json`
+    // history entry (a pre-history flat document counts as one entry).
+    // A drop past 25% is beyond machine noise for these cells and means a
+    // hot path grew real work. CI runners are noisy, so this warns rather
+    // than fails — but the WARN line in the bench log is the regression
+    // signal to chase.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_perf.json");
     let baseline = std::fs::read_to_string(path).ok().and_then(|s| parse(&s).ok());
-    for key in ["threaded_serve_req_per_s", "async_serve_req_per_s"] {
-        let Some(base) = baseline.as_ref().and_then(|b| b.get(key)).and_then(JsonValue::as_f64)
+    let prev = baseline.as_ref().and_then(previous_metrics);
+    for (key, now) in &metrics {
+        let Some(base) = prev.as_ref().and_then(|p| p.get(key)).and_then(JsonValue::as_f64)
         else {
-            println!("guard {key:<28} SKIP (no checked-in baseline)");
+            println!("guard {key:<32} SKIP (no previous entry)");
             continue;
         };
-        let now = metrics
-            .iter()
-            .find(|(k, _)| *k == key)
-            .map(|(_, v)| *v)
-            .expect("metric recorded above");
-        // Shim overhead budget: > 25% below baseline is beyond machine
-        // noise for these cells and means the fast path grew real work.
-        let verdict = if now >= base * 0.75 { "PASS" } else { "WARN" };
-        println!("guard {key:<28} {verdict} ({now:.0} vs baseline {base:.0} req/s)");
+        let verdict = if *now >= base * 0.75 { "PASS" } else { "WARN" };
+        println!("guard {key:<32} {verdict} ({now:.0} vs previous {base:.0})");
     }
 
-    // --- machine-readable summary -------------------------------------------
-    let doc = obj(metrics.into_iter().map(|(k, v)| (k, JsonValue::Num(v))).collect());
+    // --- machine-readable history -------------------------------------------
+    // Dated entries accumulate so the file records a throughput trajectory
+    // rather than a single snapshot; a legacy flat document is folded in
+    // as the oldest entry.
+    let mut history: Vec<JsonValue> = match baseline
+        .as_ref()
+        .and_then(|b| b.get("history"))
+        .and_then(JsonValue::as_array)
+    {
+        Some(entries) => entries.to_vec(),
+        None => baseline
+            .iter()
+            .map(|legacy| {
+                obj(vec![
+                    ("date", JsonValue::Str("pre-history".into())),
+                    ("metrics", legacy.clone()),
+                ])
+            })
+            .collect(),
+    };
+    history.push(obj(vec![
+        ("date", JsonValue::Str(today_utc())),
+        (
+            "metrics",
+            obj(metrics.into_iter().map(|(k, v)| (k, JsonValue::Num(v))).collect()),
+        ),
+    ]));
+    let doc = obj(vec![("history", JsonValue::Arr(history))]);
     std::fs::write(path, format!("{}\n", doc.render())).expect("write BENCH_perf.json");
     println!("wrote {path}");
 }

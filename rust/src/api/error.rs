@@ -63,6 +63,10 @@ pub enum ApiError {
     InvalidMixWeight { field: String, model: String, weight: f64 },
     /// An arrival rate that is non-finite or non-positive (NaN included).
     InvalidRate { field: String, rate: f64 },
+    /// A fleet group names a service platform the baselines layer does not
+    /// know. `field` is the JSON path of the offending member (e.g.
+    /// `stages[0].fleet[1].platform`).
+    UnknownPlatform { field: String, name: String },
     /// A duration/window that is non-finite or non-positive (zero-duration
     /// stages can generate no traffic).
     InvalidDuration { field: String, seconds: f64 },
@@ -126,6 +130,14 @@ impl fmt::Display for ApiError {
                 write!(
                     f,
                     "scenario field '{field}': rate must be finite and > 0 (got {rate})"
+                )
+            }
+            ApiError::UnknownPlatform { field, name } => {
+                write!(
+                    f,
+                    "scenario field '{field}': unknown platform '{name}' \
+                     (expected photonic, gpu, cpu, tpu, fpga, reram, or a full \
+                     platform name)"
                 )
             }
             ApiError::InvalidDuration { field, seconds } => {
@@ -246,6 +258,10 @@ mod tests {
                 weight: -1.0,
             },
             ApiError::InvalidRate { field: "stages[1].arrival.rate_hz".into(), rate: f64::NAN },
+            ApiError::UnknownPlatform {
+                field: "stages[0].fleet[1].platform".into(),
+                name: "quantum".into(),
+            },
             ApiError::InvalidDuration {
                 field: "stages[1].arrival.duration_s".into(),
                 seconds: 0.0,

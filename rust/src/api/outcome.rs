@@ -11,6 +11,7 @@ use crate::sim::{OptFlags, SimReport};
 use crate::util::json::{num_arr, obj, str_arr, JsonValue};
 use crate::util::table::{f2, Table};
 use crate::util::units::{fmt_energy, fmt_time};
+use crate::workload::vserve::VirtualShardLoad;
 
 /// One resource's busy/utilization/critical-path summary for a model
 /// (the event-scheduler accounting surfaced through the API).
@@ -661,15 +662,32 @@ pub struct WorkloadOutcome {
     /// Re-calibration outages taken across all shards (0 without a
     /// calibration model).
     pub outages: u64,
-    /// Total virtual shard-seconds lost to those outages.
+    /// Injected shard failures across the fleet (0 without a failure
+    /// model).
+    pub failures: u64,
+    /// Total virtual shard-seconds lost to outages and failures (merged
+    /// windows, overlaps counted once).
     pub downtime_s: f64,
     /// `1 − downtime / (shards × makespan)` — the availability the
     /// `min_availability` SLO checks.
     pub availability: f64,
+    /// Total fleet energy (batch energy + idle draw), joules.
+    pub energy_j: f64,
+    /// Total fleet cost ($) from per-class billing rates.
+    pub cost: f64,
+    /// Autoscaler decisions taken (0 without an autoscale policy).
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Time-weighted mean size of the active routing set (equals the
+    /// shard count without autoscaling).
+    pub avg_active_shards: f64,
+    /// Fleet class names, indexed by [`VirtualShardLoad::class`]
+    /// (`["uniform"]` for homogeneous stages).
+    pub classes: Vec<String>,
     /// Admitted requests per mix model, declaration order.
     pub per_model: Vec<(String, u64)>,
-    /// `(shard, requests, utilization)` per shard.
-    pub per_shard: Vec<(usize, u64, f64)>,
+    /// Per-shard load/downtime/energy accounting from the virtual engine.
+    pub per_shard: Vec<VirtualShardLoad>,
 }
 
 impl WorkloadOutcome {
@@ -698,21 +716,46 @@ impl WorkloadOutcome {
                 format!("{} requests shed by the SLO deadline model", self.shed),
             ]);
         }
-        if self.outages > 0 {
+        if self.outages > 0 || self.failures > 0 {
             t.row(vec![
-                "calibration".into(),
+                "downtime".into(),
                 format!(
-                    "{} outage(s), {:.4}s downtime, {:.2}% availability",
+                    "{} outage(s), {} failure(s), {:.4}s downtime, {:.2}% availability",
                     self.outages,
+                    self.failures,
                     self.downtime_s,
                     100.0 * self.availability
                 ),
             ]);
         }
-        for (shard, requests, util) in &self.per_shard {
+        if self.energy_j > 0.0 || self.cost > 0.0 {
             t.row(vec![
-                format!("shard {shard}"),
-                format!("{requests} req, {:.1}% worker occupancy", 100.0 * util),
+                "fleet".into(),
+                format!("{:.4} J total energy, ${:.6} billed", self.energy_j, self.cost),
+            ]);
+        }
+        if self.scale_ups > 0 || self.scale_downs > 0 {
+            t.row(vec![
+                "autoscale".into(),
+                format!(
+                    "{} up / {} down, {:.2} mean active shards",
+                    self.scale_ups, self.scale_downs, self.avg_active_shards
+                ),
+            ]);
+        }
+        for s in &self.per_shard {
+            let class = self
+                .classes
+                .get(s.class)
+                .map(String::as_str)
+                .unwrap_or("uniform");
+            t.row(vec![
+                format!("shard {}", s.shard),
+                format!(
+                    "[{class}] {} req, {:.1}% worker occupancy",
+                    s.requests,
+                    100.0 * s.utilization
+                ),
             ]);
         }
         for (model, n) in &self.per_model {
@@ -764,8 +807,15 @@ impl WorkloadOutcome {
             ("batches", JsonValue::Num(self.batches as f64)),
             ("mean_batch", JsonValue::Num(self.mean_batch)),
             ("outages", JsonValue::Num(self.outages as f64)),
+            ("failures", JsonValue::Num(self.failures as f64)),
             ("downtime_s", JsonValue::Num(self.downtime_s)),
             ("availability", JsonValue::Num(self.availability)),
+            ("energy_j", JsonValue::Num(self.energy_j)),
+            ("cost", JsonValue::Num(self.cost)),
+            ("scale_ups", JsonValue::Num(self.scale_ups as f64)),
+            ("scale_downs", JsonValue::Num(self.scale_downs as f64)),
+            ("avg_active_shards", JsonValue::Num(self.avg_active_shards)),
+            ("classes", str_arr(&self.classes)),
             (
                 "per_model",
                 JsonValue::Obj(
@@ -780,11 +830,24 @@ impl WorkloadOutcome {
                 JsonValue::Arr(
                     self.per_shard
                         .iter()
-                        .map(|(shard, requests, util)| {
+                        .map(|s| {
+                            let class = self
+                                .classes
+                                .get(s.class)
+                                .map(String::as_str)
+                                .unwrap_or("uniform");
                             obj(vec![
-                                ("shard", JsonValue::Num(*shard as f64)),
-                                ("requests", JsonValue::Num(*requests as f64)),
-                                ("utilization", JsonValue::Num(*util)),
+                                ("shard", JsonValue::Num(s.shard as f64)),
+                                ("class", JsonValue::Str(class.into())),
+                                ("requests", JsonValue::Num(s.requests as f64)),
+                                ("busy_s", JsonValue::Num(s.busy_s)),
+                                ("utilization", JsonValue::Num(s.utilization)),
+                                ("outages", JsonValue::Num(s.outages as f64)),
+                                ("failures", JsonValue::Num(s.failures as f64)),
+                                ("downtime_s", JsonValue::Num(s.downtime_s)),
+                                ("active_s", JsonValue::Num(s.active_s)),
+                                ("energy_j", JsonValue::Num(s.energy_j)),
+                                ("cost", JsonValue::Num(s.cost)),
                             ])
                         })
                         .collect(),

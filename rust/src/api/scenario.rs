@@ -65,6 +65,7 @@ use super::request::{SimRequest, SweepRequest};
 use super::serve::{ServeBackend, ServeCore, ServeRequest};
 use super::session::Session;
 use crate::arch::config::ArchConfig;
+use crate::baselines::{all_platforms, platform_named, Platform};
 use crate::coordinator::RoutingPolicy;
 use crate::dse::Grid;
 use crate::report;
@@ -73,9 +74,12 @@ use crate::util::json::{obj, JsonValue};
 use crate::util::rng::Pcg32;
 use crate::util::table::Table;
 use crate::workload::vserve::{
-    simulate_serve, CalibrationConfig, ServiceModel, VirtualServeConfig,
+    simulate_fleet, AutoscaleConfig, AutoscalePolicy, CalibrationConfig, FailureConfig,
+    FleetConfig, FleetCost, QueueKind, ShardClass, VirtualServeConfig,
 };
 use crate::workload::{ArrivalProcess, MixError, TrafficMix};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
 use std::sync::Arc;
@@ -306,6 +310,62 @@ pub struct CalibrationSpec {
     pub outage_ms: f64,
 }
 
+/// One group of identical shards in a heterogeneous virtual fleet
+/// (virtual engine only). `platform` is `"photonic"` (the session's
+/// photonic cost model) or a baseline key resolved against
+/// [`crate::baselines::all_platforms`] — `"gpu"`, `"cpu"`, `"tpu"`,
+/// `"fpga"`, `"reram"`, or a full platform name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetGroup {
+    /// Hardware class key (see above).
+    pub platform: String,
+    /// Number of shards in this group (default 1).
+    pub count: usize,
+    /// Workers per shard; `None` inherits the stage-level `workers`.
+    pub workers: Option<usize>,
+    /// Idle power draw in watts (default 0).
+    pub idle_w: f64,
+    /// Billing rate in $/hour of active shard time (default 0).
+    pub cost_per_hour: f64,
+}
+
+/// Shard failure/recovery injection for a virtual serve stage
+/// ([`crate::workload::vserve::FailureConfig`] in milliseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureSpec {
+    /// Mean virtual milliseconds between failures.
+    pub mtbf_ms: f64,
+    /// Mean virtual milliseconds to repair.
+    pub mttr_ms: f64,
+}
+
+/// Autoscaling of a virtual fleet's active set
+/// ([`crate::workload::vserve::AutoscaleConfig`] in milliseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleSpec {
+    /// `"target-utilization"` or `"queue-depth"`.
+    pub policy: AutoscalePolicyKind,
+    /// Smallest active set (default 1).
+    pub min_shards: usize,
+    /// Largest active set (required; capped by the fleet size at plan
+    /// time).
+    pub max_shards: usize,
+    /// Active set at time zero; `None` starts at `max_shards`.
+    pub initial: Option<usize>,
+    /// Virtual milliseconds between decisions.
+    pub interval_ms: f64,
+}
+
+/// The autoscale policy discriminator with its parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscalePolicyKind {
+    /// Scale on mean worker occupancy vs `target`.
+    TargetUtilization { target: f64 },
+    /// Scale on mean outstanding samples per active shard vs the
+    /// `high`/`low` watermarks.
+    QueueDepth { high: usize, low: usize },
+}
+
 /// A serve stage: a traffic mix under an arrival process on a fleet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeStage {
@@ -334,6 +394,14 @@ pub struct ServeStage {
     pub time_scale: f64,
     /// Virtual engine: periodic re-calibration outages.
     pub calibration: Option<CalibrationSpec>,
+    /// Virtual engine: heterogeneous shard groups. Empty = a homogeneous
+    /// photonic fleet of `shards` shards (the pre-fleet behavior). When
+    /// non-empty, the group counts replace `shards`.
+    pub fleet: Vec<FleetGroup>,
+    /// Virtual engine: shard failure/recovery injection.
+    pub failures: Option<FailureSpec>,
+    /// Virtual engine: autoscaling of the active routing set.
+    pub autoscale: Option<AutoscaleSpec>,
     /// SLO admission-control deadline in milliseconds: the async engine
     /// sheds submissions whose predicted queueing delay exceeds it, and
     /// the virtual engine mirrors the same heuristic deterministically.
@@ -362,6 +430,9 @@ impl Default for ServeStage {
             opts: OptFlags::overlapped(),
             time_scale: 1.0,
             calibration: None,
+            fleet: Vec::new(),
+            failures: None,
+            autoscale: None,
             deadline_ms: None,
             slo: SloSpec::default(),
         }
@@ -630,6 +701,135 @@ fn calibration_json(c: &CalibrationSpec) -> JsonValue {
     ])
 }
 
+fn parse_fleet(v: &JsonValue, path: &str) -> Result<Vec<FleetGroup>, ApiError> {
+    let Some(m) = v.get("fleet") else { return Ok(Vec::new()) };
+    let path = format!("{path}.fleet");
+    let Some(arr) = m.as_array() else {
+        return Err(parse_err(path, "expected an array of shard groups"));
+    };
+    let mut groups = Vec::with_capacity(arr.len());
+    for (i, g) in arr.iter().enumerate() {
+        let gpath = format!("{path}[{i}]");
+        if !matches!(g, JsonValue::Obj(_)) {
+            return Err(parse_err(gpath, "expected an object with a 'platform' member"));
+        }
+        groups.push(FleetGroup {
+            platform: str_member(g, &gpath, "platform")?,
+            count: opt_usize_member(g, &gpath, "count", 1)?,
+            workers: match g.get("workers") {
+                None => None,
+                Some(_) => Some(opt_usize_member(g, &gpath, "workers", 0)?),
+            },
+            idle_w: opt_num_member(g, &gpath, "idle_w", 0.0)?,
+            cost_per_hour: opt_num_member(g, &gpath, "cost_per_hour", 0.0)?,
+        });
+    }
+    Ok(groups)
+}
+
+fn fleet_json(groups: &[FleetGroup]) -> JsonValue {
+    JsonValue::Arr(
+        groups
+            .iter()
+            .map(|g| {
+                let mut members = vec![
+                    ("platform", JsonValue::Str(g.platform.clone())),
+                    ("count", JsonValue::Num(g.count as f64)),
+                ];
+                if let Some(w) = g.workers {
+                    members.push(("workers", JsonValue::Num(w as f64)));
+                }
+                members.push(("idle_w", JsonValue::Num(g.idle_w)));
+                members.push(("cost_per_hour", JsonValue::Num(g.cost_per_hour)));
+                obj(members)
+            })
+            .collect(),
+    )
+}
+
+fn parse_failures(v: &JsonValue, path: &str) -> Result<Option<FailureSpec>, ApiError> {
+    let Some(m) = v.get("failures") else { return Ok(None) };
+    let path = format!("{path}.failures");
+    if !matches!(m, JsonValue::Obj(_)) {
+        return Err(parse_err(path, "expected an object with mtbf_ms and mttr_ms"));
+    }
+    Ok(Some(FailureSpec {
+        mtbf_ms: num_member(m, &path, "mtbf_ms")?,
+        mttr_ms: num_member(m, &path, "mttr_ms")?,
+    }))
+}
+
+fn failures_json(f: &FailureSpec) -> JsonValue {
+    obj(vec![
+        ("mtbf_ms", JsonValue::Num(f.mtbf_ms)),
+        ("mttr_ms", JsonValue::Num(f.mttr_ms)),
+    ])
+}
+
+fn parse_autoscale(v: &JsonValue, path: &str) -> Result<Option<AutoscaleSpec>, ApiError> {
+    let Some(m) = v.get("autoscale") else { return Ok(None) };
+    let path = format!("{path}.autoscale");
+    if !matches!(m, JsonValue::Obj(_)) {
+        return Err(parse_err(path, "expected an object with a 'policy' member"));
+    }
+    let policy = match str_member(m, &path, "policy")?.as_str() {
+        "target-utilization" => AutoscalePolicyKind::TargetUtilization {
+            target: num_member(m, &path, "target")?,
+        },
+        "queue-depth" => AutoscalePolicyKind::QueueDepth {
+            high: req_member(m, &path, "high")?
+                .as_usize()
+                .ok_or_else(|| parse_err(format!("{path}.high"), "expected an integer"))?,
+            low: req_member(m, &path, "low")?
+                .as_usize()
+                .ok_or_else(|| parse_err(format!("{path}.low"), "expected an integer"))?,
+        },
+        other => {
+            return Err(parse_err(
+                format!("{path}.policy"),
+                format!(
+                    "unknown autoscale policy '{other}' (expected target-utilization \
+                     or queue-depth)"
+                ),
+            ))
+        }
+    };
+    Ok(Some(AutoscaleSpec {
+        policy,
+        min_shards: opt_usize_member(m, &path, "min_shards", 1)?,
+        max_shards: req_member(m, &path, "max_shards")?
+            .as_usize()
+            .ok_or_else(|| parse_err(format!("{path}.max_shards"), "expected an integer"))?,
+        initial: match m.get("initial") {
+            None => None,
+            Some(_) => Some(opt_usize_member(m, &path, "initial", 0)?),
+        },
+        interval_ms: num_member(m, &path, "interval_ms")?,
+    }))
+}
+
+fn autoscale_json(a: &AutoscaleSpec) -> JsonValue {
+    let mut members = Vec::new();
+    match a.policy {
+        AutoscalePolicyKind::TargetUtilization { target } => {
+            members.push(("policy", JsonValue::Str("target-utilization".into())));
+            members.push(("target", JsonValue::Num(target)));
+        }
+        AutoscalePolicyKind::QueueDepth { high, low } => {
+            members.push(("policy", JsonValue::Str("queue-depth".into())));
+            members.push(("high", JsonValue::Num(high as f64)));
+            members.push(("low", JsonValue::Num(low as f64)));
+        }
+    }
+    members.push(("min_shards", JsonValue::Num(a.min_shards as f64)));
+    members.push(("max_shards", JsonValue::Num(a.max_shards as f64)));
+    if let Some(i) = a.initial {
+        members.push(("initial", JsonValue::Num(i as f64)));
+    }
+    members.push(("interval_ms", JsonValue::Num(a.interval_ms)));
+    obj(members)
+}
+
 fn parse_arrival(v: &JsonValue, path: &str) -> Result<Option<ArrivalProcess>, ApiError> {
     let Some(m) = v.get("arrival") else { return Ok(None) };
     let path = format!("{path}.arrival");
@@ -656,6 +856,19 @@ fn parse_arrival(v: &JsonValue, path: &str) -> Result<Option<ArrivalProcess>, Ap
             off_s: opt_num_member(m, &path, "off_s", 0.0)?,
             duration_s: num_member(m, &path, "duration_s")?,
         },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base_hz: num_member(m, &path, "base_hz")?,
+            peak_hz: num_member(m, &path, "peak_hz")?,
+            period_s: num_member(m, &path, "period_s")?,
+            duration_s: num_member(m, &path, "duration_s")?,
+        },
+        "flash-crowd" => ArrivalProcess::FlashCrowd {
+            base_hz: num_member(m, &path, "base_hz")?,
+            spike_hz: num_member(m, &path, "spike_hz")?,
+            spike_at_s: num_member(m, &path, "spike_at_s")?,
+            spike_s: num_member(m, &path, "spike_s")?,
+            duration_s: num_member(m, &path, "duration_s")?,
+        },
         "trace" => {
             let arr = req_member(m, &path, "arrivals_s")?
                 .as_array()
@@ -675,7 +888,7 @@ fn parse_arrival(v: &JsonValue, path: &str) -> Result<Option<ArrivalProcess>, Ap
                 format!("{path}.process"),
                 format!(
                     "unknown arrival process '{other}' (expected closed-loop, poisson, \
-                     bursty, or trace)"
+                     bursty, diurnal, flash-crowd, or trace)"
                 ),
             ))
         }
@@ -702,6 +915,23 @@ fn arrival_json(a: &ArrivalProcess) -> JsonValue {
             ("off_s", JsonValue::Num(*off_s)),
             ("duration_s", JsonValue::Num(*duration_s)),
         ]),
+        ArrivalProcess::Diurnal { base_hz, peak_hz, period_s, duration_s } => obj(vec![
+            ("process", JsonValue::Str("diurnal".into())),
+            ("base_hz", JsonValue::Num(*base_hz)),
+            ("peak_hz", JsonValue::Num(*peak_hz)),
+            ("period_s", JsonValue::Num(*period_s)),
+            ("duration_s", JsonValue::Num(*duration_s)),
+        ]),
+        ArrivalProcess::FlashCrowd { base_hz, spike_hz, spike_at_s, spike_s, duration_s } => {
+            obj(vec![
+                ("process", JsonValue::Str("flash-crowd".into())),
+                ("base_hz", JsonValue::Num(*base_hz)),
+                ("spike_hz", JsonValue::Num(*spike_hz)),
+                ("spike_at_s", JsonValue::Num(*spike_at_s)),
+                ("spike_s", JsonValue::Num(*spike_s)),
+                ("duration_s", JsonValue::Num(*duration_s)),
+            ])
+        }
         ArrivalProcess::Trace { arrivals_s } => obj(vec![
             ("process", JsonValue::Str("trace".into())),
             (
@@ -862,6 +1092,9 @@ fn parse_stage(v: &JsonValue, index: usize) -> Result<StageSpec, ApiError> {
                 opts: parse_opts(v, &path, OptFlags::overlapped())?,
                 time_scale: opt_num_member(v, &path, "time_scale", 1.0)?,
                 calibration: parse_calibration(v, &path)?,
+                fleet: parse_fleet(v, &path)?,
+                failures: parse_failures(v, &path)?,
+                autoscale: parse_autoscale(v, &path)?,
                 deadline_ms: match v.get("deadline_ms") {
                     None => None,
                     Some(_) => {
@@ -981,6 +1214,15 @@ fn stage_json(stage: &StageSpec) -> JsonValue {
             if let Some(c) = &s.calibration {
                 members.push(("calibration", calibration_json(c)));
             }
+            if !s.fleet.is_empty() {
+                members.push(("fleet", fleet_json(&s.fleet)));
+            }
+            if let Some(f) = &s.failures {
+                members.push(("failures", failures_json(f)));
+            }
+            if let Some(a) = &s.autoscale {
+                members.push(("autoscale", autoscale_json(a)));
+            }
             if let Some(ms) = s.deadline_ms {
                 members.push(("deadline_ms", JsonValue::Num(ms)));
             }
@@ -1004,16 +1246,30 @@ fn stage_json(stage: &StageSpec) -> JsonValue {
 
 // --------------------------------------------------------------- plan
 
+/// How a planned fleet class resolves its batch service times: the
+/// session's photonic simulator or a calibrated baseline platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassBinding {
+    /// The session's photonic cost model (shared mapping cache).
+    Photonic,
+    /// Index into [`crate::baselines::all_platforms`].
+    Platform(usize),
+}
+
 /// An executable stage, compiled and validated by [`Session::plan`].
 #[derive(Debug, Clone)]
 pub enum PlannedStage {
     Simulate { name: String, req: SimRequest, slo: SloSpec },
     Dse { name: String, req: SweepRequest, slo: SloSpec },
     Compare { name: String, opts: OptFlags },
-    /// Deterministic virtual-time serving over the session cost model.
+    /// Deterministic virtual-time fleet serving over the session cost
+    /// model (and, for heterogeneous fleets, the baseline platforms).
     ServeVirtual {
         name: String,
-        cfg: VirtualServeConfig,
+        fleet: FleetConfig,
+        /// Service-model binding of each fleet class (parallel to
+        /// `fleet.classes`).
+        bindings: Vec<ClassBinding>,
         mix: TrafficMix,
         arrival: ArrivalProcess,
         opts: OptFlags,
@@ -1126,6 +1382,57 @@ fn check_arrival(a: &ArrivalProcess, path: &str) -> Result<(), ApiError> {
                     field: format!("{apath}.duration_s"),
                     seconds: *duration_s,
                 });
+            }
+        }
+        ArrivalProcess::Diurnal { base_hz, peak_hz, period_s, duration_s } => {
+            if !base_hz.is_finite() || *base_hz <= 0.0 {
+                return Err(ApiError::InvalidRate {
+                    field: format!("{apath}.base_hz"),
+                    rate: *base_hz,
+                });
+            }
+            // the thinning envelope needs peak >= base
+            if !peak_hz.is_finite() || *peak_hz < *base_hz {
+                return Err(ApiError::InvalidRate {
+                    field: format!("{apath}.peak_hz"),
+                    rate: *peak_hz,
+                });
+            }
+            if !period_s.is_finite() || *period_s <= 0.0 {
+                return Err(ApiError::InvalidDuration {
+                    field: format!("{apath}.period_s"),
+                    seconds: *period_s,
+                });
+            }
+            if !duration_s.is_finite() || *duration_s <= 0.0 {
+                return Err(ApiError::InvalidDuration {
+                    field: format!("{apath}.duration_s"),
+                    seconds: *duration_s,
+                });
+            }
+        }
+        ArrivalProcess::FlashCrowd { base_hz, spike_hz, spike_at_s, spike_s, duration_s } => {
+            for (name, r) in [("base_hz", base_hz), ("spike_hz", spike_hz)] {
+                if !r.is_finite() || *r <= 0.0 {
+                    return Err(ApiError::InvalidRate {
+                        field: format!("{apath}.{name}"),
+                        rate: *r,
+                    });
+                }
+            }
+            if !spike_at_s.is_finite() || *spike_at_s < 0.0 {
+                return Err(parse_err(
+                    format!("{apath}.spike_at_s"),
+                    format!("spike offset must be finite and >= 0 (got {spike_at_s})"),
+                ));
+            }
+            for (name, d) in [("spike_s", spike_s), ("duration_s", duration_s)] {
+                if !d.is_finite() || *d <= 0.0 {
+                    return Err(ApiError::InvalidDuration {
+                        field: format!("{apath}.{name}"),
+                        seconds: *d,
+                    });
+                }
             }
         }
         ArrivalProcess::Trace { arrivals_s } => {
@@ -1311,18 +1618,180 @@ impl Session {
                         })
                     }
                 };
+                // fleet groups expand into shard classes; no groups means
+                // a uniform photonic fleet of the stage-level shape
+                let mut classes = Vec::new();
+                let mut bindings = Vec::new();
+                let mut shard_class = Vec::new();
+                if s.fleet.is_empty() {
+                    classes.push(ShardClass {
+                        name: "photonic".to_string(),
+                        workers: s.workers,
+                        idle_w: 0.0,
+                        cost_per_hour: 0.0,
+                    });
+                    bindings.push(ClassBinding::Photonic);
+                    shard_class = vec![0; s.shards];
+                } else {
+                    for (i, g) in s.fleet.iter().enumerate() {
+                        let gpath = format!("{path}.fleet[{i}]");
+                        if g.count == 0 {
+                            return Err(parse_err(format!("{gpath}.count"), "must be >= 1"));
+                        }
+                        if g.workers == Some(0) {
+                            return Err(ApiError::InvalidWorkers(0));
+                        }
+                        if !g.idle_w.is_finite() || g.idle_w < 0.0 {
+                            return Err(parse_err(
+                                format!("{gpath}.idle_w"),
+                                format!("must be finite and >= 0 (got {})", g.idle_w),
+                            ));
+                        }
+                        if !g.cost_per_hour.is_finite() || g.cost_per_hour < 0.0 {
+                            return Err(parse_err(
+                                format!("{gpath}.cost_per_hour"),
+                                format!("must be finite and >= 0 (got {})", g.cost_per_hour),
+                            ));
+                        }
+                        let (name, binding) = if g.platform.eq_ignore_ascii_case("photonic") {
+                            ("photonic".to_string(), ClassBinding::Photonic)
+                        } else {
+                            match platform_named(&g.platform) {
+                                Some(idx) => (
+                                    all_platforms()[idx].name.to_string(),
+                                    ClassBinding::Platform(idx),
+                                ),
+                                None => {
+                                    return Err(ApiError::UnknownPlatform {
+                                        field: format!("{gpath}.platform"),
+                                        name: g.platform.clone(),
+                                    })
+                                }
+                            }
+                        };
+                        classes.push(ShardClass {
+                            name,
+                            workers: g.workers.unwrap_or(s.workers),
+                            idle_w: g.idle_w,
+                            cost_per_hour: g.cost_per_hour,
+                        });
+                        bindings.push(binding);
+                        shard_class
+                            .extend(std::iter::repeat(classes.len() - 1).take(g.count));
+                    }
+                }
+                let total_shards = shard_class.len();
+                let failures = match &s.failures {
+                    None => None,
+                    Some(fsp) => {
+                        if !fsp.mtbf_ms.is_finite() || fsp.mtbf_ms <= 0.0 {
+                            return Err(ApiError::InvalidDuration {
+                                field: format!("{path}.failures.mtbf_ms"),
+                                seconds: fsp.mtbf_ms * 1e-3,
+                            });
+                        }
+                        if !fsp.mttr_ms.is_finite() || fsp.mttr_ms < 0.0 {
+                            return Err(ApiError::InvalidDuration {
+                                field: format!("{path}.failures.mttr_ms"),
+                                seconds: fsp.mttr_ms * 1e-3,
+                            });
+                        }
+                        Some(FailureConfig {
+                            mtbf_s: fsp.mtbf_ms * 1e-3,
+                            mttr_s: fsp.mttr_ms * 1e-3,
+                        })
+                    }
+                };
+                let autoscale = match &s.autoscale {
+                    None => None,
+                    Some(a) => {
+                        let apath = format!("{path}.autoscale");
+                        if a.min_shards == 0 {
+                            return Err(parse_err(format!("{apath}.min_shards"), "must be >= 1"));
+                        }
+                        if a.max_shards < a.min_shards || a.max_shards > total_shards {
+                            return Err(parse_err(
+                                format!("{apath}.max_shards"),
+                                format!(
+                                    "must lie in [min_shards, fleet size] = \
+                                     [{}, {total_shards}] (got {})",
+                                    a.min_shards, a.max_shards
+                                ),
+                            ));
+                        }
+                        let initial = a.initial.unwrap_or(a.max_shards);
+                        if initial < a.min_shards || initial > a.max_shards {
+                            return Err(parse_err(
+                                format!("{apath}.initial"),
+                                format!(
+                                    "must lie in [{}, {}] (got {initial})",
+                                    a.min_shards, a.max_shards
+                                ),
+                            ));
+                        }
+                        if !a.interval_ms.is_finite() || a.interval_ms <= 0.0 {
+                            return Err(ApiError::InvalidDuration {
+                                field: format!("{apath}.interval_ms"),
+                                seconds: a.interval_ms * 1e-3,
+                            });
+                        }
+                        let policy = match a.policy {
+                            AutoscalePolicyKind::TargetUtilization { target } => {
+                                if !target.is_finite() || target <= 0.0 || target > 1.0 {
+                                    return Err(parse_err(
+                                        format!("{apath}.target"),
+                                        format!(
+                                            "must be a finite fraction in (0, 1] (got {target})"
+                                        ),
+                                    ));
+                                }
+                                AutoscalePolicy::TargetUtilization { target }
+                            }
+                            AutoscalePolicyKind::QueueDepth { high, low } => {
+                                if high == 0 {
+                                    return Err(parse_err(
+                                        format!("{apath}.high"),
+                                        "must be >= 1",
+                                    ));
+                                }
+                                if low >= high {
+                                    return Err(parse_err(
+                                        format!("{apath}.low"),
+                                        format!("must be < high = {high} (got {low})"),
+                                    ));
+                                }
+                                AutoscalePolicy::QueueDepth { high, low }
+                            }
+                        };
+                        Some(AutoscaleConfig {
+                            policy,
+                            min_shards: a.min_shards,
+                            max_shards: a.max_shards,
+                            initial,
+                            interval_s: a.interval_ms * 1e-3,
+                        })
+                    }
+                };
                 Ok(PlannedStage::ServeVirtual {
                     name: s.name.clone(),
-                    cfg: VirtualServeConfig {
-                        shards: s.shards,
-                        workers: s.workers,
-                        max_batch: s.max_batch,
-                        max_wait_s: s.max_wait_ms * 1e-3,
-                        queue_depth: s.queue_depth,
-                        routing,
-                        calibration,
-                        deadline_s: s.deadline_ms.map(|ms| ms * 1e-3),
+                    fleet: FleetConfig {
+                        base: VirtualServeConfig {
+                            shards: total_shards,
+                            workers: s.workers,
+                            max_batch: s.max_batch,
+                            max_wait_s: s.max_wait_ms * 1e-3,
+                            queue_depth: s.queue_depth,
+                            routing,
+                            calibration,
+                            deadline_s: s.deadline_ms.map(|ms| ms * 1e-3),
+                        },
+                        classes,
+                        shard_class,
+                        failures,
+                        autoscale,
+                        queue: QueueKind::Wheel,
                     },
+                    bindings,
                     mix,
                     arrival,
                     opts: s.opts,
@@ -1348,6 +1817,27 @@ impl Session {
                         format!("{path}.calibration"),
                         "re-calibration outages are a virtual-engine model; the wall-clock \
                          engines have no calibration knob",
+                    ));
+                }
+                if !s.fleet.is_empty() {
+                    return Err(parse_err(
+                        format!("{path}.fleet"),
+                        "heterogeneous fleets are a virtual-engine model; the wall-clock \
+                         engines serve one hardware class",
+                    ));
+                }
+                if s.failures.is_some() {
+                    return Err(parse_err(
+                        format!("{path}.failures"),
+                        "failure injection is a virtual-engine model; the wall-clock \
+                         engines have no failure knob",
+                    ));
+                }
+                if s.autoscale.is_some() {
+                    return Err(parse_err(
+                        format!("{path}.autoscale"),
+                        "autoscaling is a virtual-engine model; the wall-clock engines \
+                         run a fixed shard set",
                     ));
                 }
                 if s.engine == ServeEngine::Threaded && s.deadline_ms.is_some() {
@@ -1402,21 +1892,61 @@ impl Session {
 
 // ---------------------------------------------------------------- run
 
-/// [`crate::workload::vserve::ServiceModel`] over the session: batch
-/// service times come from the photonic simulator through the shared
-/// mapping cache.
-struct SessionCost<'a> {
+/// [`FleetCost`] over the session: photonic classes take batch service
+/// times and energy from the photonic simulator through the shared
+/// mapping cache; platform classes from the calibrated baseline models
+/// ([`crate::baselines::all_platforms`]). Memoized per
+/// `(class, model, batch)` — the DES asks for the same few points
+/// millions of times.
+struct ScenarioCost<'a> {
     session: &'a Session,
     opts: OptFlags,
+    bindings: &'a [ClassBinding],
+    platforms: Vec<Platform>,
+    memo: RefCell<HashMap<(usize, String, usize), (f64, f64)>>,
 }
 
-impl ServiceModel for SessionCost<'_> {
-    fn batch_latency_s(&self, model: &str, batch: usize) -> f64 {
-        match self.session.model(model) {
-            Ok(m) => self.session.sim_report(m, batch.max(1), self.opts).latency,
-            // unreachable: plan() resolved every mix model already
-            Err(_) => 0.0,
+impl<'a> ScenarioCost<'a> {
+    fn new(session: &'a Session, opts: OptFlags, bindings: &'a [ClassBinding]) -> Self {
+        ScenarioCost {
+            session,
+            opts,
+            bindings,
+            platforms: all_platforms(),
+            memo: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// `(latency_s, energy_j)` of one batch on one class.
+    fn point(&self, class: usize, model: &str, batch: usize) -> (f64, f64) {
+        let key = (class, model.to_string(), batch);
+        if let Some(&v) = self.memo.borrow().get(&key) {
+            return v;
+        }
+        // a missing model is unreachable: plan() resolved every mix entry
+        let v = match (self.bindings.get(class), self.session.model(model)) {
+            (Some(ClassBinding::Platform(idx)), Ok(m)) => {
+                let r = self.platforms[*idx].evaluate(m, batch.max(1));
+                (r.latency, r.energy)
+            }
+            (_, Ok(m)) => {
+                let r = self.session.sim_report(m, batch.max(1), self.opts);
+                (r.latency, r.energy.total())
+            }
+            (_, Err(_)) => (0.0, 0.0),
+        };
+        self.memo.borrow_mut().insert(key, v);
+        v
+    }
+}
+
+impl FleetCost for ScenarioCost<'_> {
+    fn batch_latency_s(&self, class: usize, model: &str, batch: usize) -> f64 {
+        self.point(class, model, batch).0
+    }
+
+    fn batch_energy_j(&self, class: usize, model: &str, batch: usize) -> f64 {
+        self.point(class, model, batch).1
     }
 }
 
@@ -1643,13 +2173,14 @@ fn run_stage(
             outcome: Outcome::Compare(session.compare_opts(*opts)),
             slo: SloVerdict::empty(),
         },
-        PlannedStage::ServeVirtual { name, cfg, mix, arrival, opts, slo } => {
+        PlannedStage::ServeVirtual { name, fleet, bindings, mix, arrival, opts, slo } => {
             // stage i owns fork(i) of the scenario seed, so editing one
             // stage never perturbs another's traffic
             let mut stage_rng = Pcg32::new(plan.seed).fork(index as u64);
             let stage_seed = stage_rng.next_u64();
-            let cost = SessionCost { session: session.as_ref(), opts: *opts };
-            let v = simulate_serve(cfg, mix, arrival, &cost, stage_seed);
+            let cost = ScenarioCost::new(session.as_ref(), *opts, bindings);
+            let v = simulate_fleet(fleet, mix, arrival, &cost, stage_seed);
+            let cfg = &fleet.base;
             let out = WorkloadOutcome {
                 mix: mix.normalized(),
                 arrival_kind: arrival.kind().into(),
@@ -1673,14 +2204,17 @@ fn run_stage(
                 batches: v.batches,
                 mean_batch: v.mean_batch,
                 outages: v.outages,
+                failures: v.failures,
                 downtime_s: v.downtime_s,
                 availability: v.availability,
+                energy_j: v.energy_j,
+                cost: v.cost,
+                scale_ups: v.scale_ups,
+                scale_downs: v.scale_downs,
+                avg_active_shards: v.avg_active_shards,
+                classes: fleet.classes.iter().map(|c| c.name.clone()).collect(),
                 per_model: v.per_model.clone(),
-                per_shard: v
-                    .per_shard
-                    .iter()
-                    .map(|s| (s.shard, s.requests, s.utilization))
-                    .collect(),
+                per_shard: v.per_shard.clone(),
             };
             let verdict = slo_for_serve(
                 slo,
@@ -1895,6 +2429,116 @@ mod tests {
         assert!(!v.pass && v.checks[0].metric == "min_availability");
         let v = slo_for_serve(&slo, 1.0, 10.0, 0.0, 0.99);
         assert!(v.pass);
+    }
+
+    #[test]
+    fn diurnal_and_flash_crowd_arrivals_round_trip() {
+        for (text, kind) in [
+            (
+                r#"{"arrival":{"process":"diurnal","base_hz":100.0,"peak_hz":900.0,"period_s":0.5,"duration_s":1.0}}"#,
+                "diurnal",
+            ),
+            (
+                r#"{"arrival":{"process":"flash-crowd","base_hz":200.0,"spike_hz":4000.0,"spike_at_s":0.2,"spike_s":0.1,"duration_s":0.5}}"#,
+                "flash-crowd",
+            ),
+        ] {
+            let doc = crate::util::json::parse(text).unwrap();
+            let a = parse_arrival(&doc, "x").unwrap().expect(kind);
+            assert_eq!(a.kind(), kind);
+            let rendered = obj(vec![("arrival", arrival_json(&a))]).render();
+            let doc2 = crate::util::json::parse(&rendered).unwrap();
+            assert_eq!(parse_arrival(&doc2, "x").unwrap().unwrap(), a, "{kind}");
+        }
+        // plan-time checks attribute each field: a trough above the crest
+        let bad = ArrivalProcess::Diurnal {
+            base_hz: 900.0,
+            peak_hz: 100.0,
+            period_s: 0.5,
+            duration_s: 1.0,
+        };
+        let err = check_arrival(&bad, "stages[0]").unwrap_err();
+        assert!(
+            matches!(err, ApiError::InvalidRate { ref field, .. }
+                if field == "stages[0].arrival.peak_hz"),
+            "{err:?}"
+        );
+        let bad = ArrivalProcess::FlashCrowd {
+            base_hz: 200.0,
+            spike_hz: 4000.0,
+            spike_at_s: -1.0,
+            spike_s: 0.1,
+            duration_s: 0.5,
+        };
+        let err = check_arrival(&bad, "stages[0]").unwrap_err();
+        assert!(
+            matches!(err, ApiError::ScenarioParse { ref field, .. }
+                if field == "stages[0].arrival.spike_at_s"),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn fleet_failures_and_autoscale_parse_and_round_trip() {
+        let text = r#"{"name":"n","stages":[{
+            "kind":"serve",
+            "mix":[{"model":"dcgan","weight":1.0}],
+            "arrival":{"process":"poisson","rate_hz":100.0,"duration_s":0.1},
+            "fleet":[
+                {"platform":"photonic","count":2,"cost_per_hour":3.0},
+                {"platform":"gpu","count":1,"workers":4,"idle_w":80.0,"cost_per_hour":4.0}
+            ],
+            "failures":{"mtbf_ms":150.0,"mttr_ms":10.0},
+            "autoscale":{"policy":"queue-depth","high":64,"low":4,
+                         "min_shards":1,"max_shards":3,"interval_ms":20.0}
+        }]}"#;
+        let sc = Scenario::from_json(text).unwrap();
+        let StageSpec::Serve(s) = &sc.stages[0] else { panic!("not a serve stage") };
+        assert_eq!(s.fleet.len(), 2);
+        assert_eq!(s.fleet[0].platform, "photonic");
+        assert_eq!(s.fleet[0].count, 2);
+        assert_eq!(s.fleet[0].workers, None);
+        assert_eq!(s.fleet[1].workers, Some(4));
+        assert_eq!(s.failures, Some(FailureSpec { mtbf_ms: 150.0, mttr_ms: 10.0 }));
+        assert_eq!(
+            s.autoscale,
+            Some(AutoscaleSpec {
+                policy: AutoscalePolicyKind::QueueDepth { high: 64, low: 4 },
+                min_shards: 1,
+                max_shards: 3,
+                initial: None,
+                interval_ms: 20.0,
+            })
+        );
+        // serialize → reparse → equal (the fixpoint covers the new members)
+        assert_eq!(Scenario::from_json(&sc.to_json()).unwrap(), sc);
+        // the target-utilization policy round-trips its own members
+        let text = text.replace(
+            r#""policy":"queue-depth","high":64,"low":4,"#,
+            r#""policy":"target-utilization","target":0.7,"#,
+        );
+        let sc = Scenario::from_json(&text).unwrap();
+        assert_eq!(Scenario::from_json(&sc.to_json()).unwrap(), sc);
+        // unknown policies and malformed members are attributed
+        let err = Scenario::from_json(
+            r#"{"name":"n","stages":[{"kind":"serve",
+                "autoscale":{"policy":"vibes","max_shards":2,"interval_ms":1.0}}]}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].autoscale.policy"));
+        let err = Scenario::from_json(
+            r#"{"name":"n","stages":[{"kind":"serve","fleet":[{"count":1}]}]}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].fleet[0].platform"));
+        let err = Scenario::from_json(
+            r#"{"name":"n","stages":[{"kind":"serve","failures":{"mtbf_ms":1.0}}]}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].failures.mttr_ms"));
     }
 
     #[test]

@@ -17,4 +17,4 @@
 
 pub mod platform;
 
-pub use platform::{all_platforms, LayerClass, Platform, PlatformReport};
+pub use platform::{all_platforms, platform_named, LayerClass, Platform, PlatformReport};

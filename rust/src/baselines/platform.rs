@@ -169,6 +169,25 @@ pub fn all_platforms() -> Vec<Platform> {
     ]
 }
 
+/// Resolve a fleet-group platform key to an index into [`all_platforms`]:
+/// the short keys `"gpu"`, `"cpu"`, `"tpu"`, `"fpga"`, `"reram"` (plus
+/// the platforms' proper names `"a100"`, `"xeon"`, `"flexigan"`,
+/// `"regan"`), or a full display name, all case-insensitively. `None`
+/// when nothing matches — the scenario layer maps that onto a typed
+/// unknown-platform error.
+pub fn platform_named(key: &str) -> Option<usize> {
+    let lower = key.to_ascii_lowercase();
+    match lower.as_str() {
+        "gpu" | "a100" => return Some(0),
+        "cpu" | "xeon" => return Some(1),
+        "tpu" => return Some(2),
+        "fpga" | "flexigan" => return Some(3),
+        "reram" | "regan" => return Some(4),
+        _ => {}
+    }
+    all_platforms().iter().position(|p| p.name.to_ascii_lowercase() == lower)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +200,16 @@ mod tests {
                 let _ = LayerClass::of(&info.layer); // must not panic
             }
         }
+    }
+
+    #[test]
+    fn platform_keys_resolve_case_insensitively() {
+        assert_eq!(platform_named("gpu"), Some(0));
+        assert_eq!(platform_named("Xeon"), Some(1));
+        assert_eq!(platform_named("TPU"), Some(2));
+        assert_eq!(platform_named("fpga (flexigan)"), Some(3));
+        assert_eq!(platform_named("ReRAM (ReGAN)"), Some(4));
+        assert_eq!(platform_named("quantum"), None);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Arrival processes — the "when" of a workload scenario.
 //!
-//! Four processes cover the serving studies the paper's evaluation (and
+//! Six processes cover the serving studies the paper's evaluation (and
 //! the byte-size scaling literature) call for:
 //!
 //! - **closed-loop** — N clients, each keeping exactly one request in
@@ -9,6 +9,11 @@
 //!   latency-under-load benchmark.
 //! - **bursty on/off** — Poisson arrivals modulated by an on/off square
 //!   wave: stresses queue drain and backpressure.
+//! - **diurnal** — Poisson arrivals whose rate follows a raised-cosine
+//!   day/night wave between a trough and a crest (materialized exactly by
+//!   thinning): the autoscaling benchmark.
+//! - **flash crowd** — baseline Poisson traffic with one rate spike at a
+//!   known offset: stresses admission and scale-up reaction time.
 //! - **trace replay** — an explicit list of arrival offsets: reproduces a
 //!   recorded production trace exactly.
 //!
@@ -36,6 +41,9 @@ pub enum ArrivalError {
     BadTrace { index: usize, offset_s: f64 },
     /// A trace with no arrivals.
     EmptyTrace,
+    /// A time offset (e.g. a flash crowd's start) that is negative or
+    /// non-finite.
+    BadOffset(f64),
 }
 
 impl fmt::Display for ArrivalError {
@@ -58,6 +66,9 @@ impl fmt::Display for ArrivalError {
                  (got {offset_s})"
             ),
             ArrivalError::EmptyTrace => write!(f, "trace replay has no arrivals"),
+            ArrivalError::BadOffset(o) => {
+                write!(f, "time offset must be finite and >= 0 (got {o})")
+            }
         }
     }
 }
@@ -76,6 +87,17 @@ pub enum ArrivalProcess {
     /// (`on_s` seconds of traffic, `off_s` of silence, repeating) for
     /// `duration_s` seconds total.
     Bursty { rate_hz: f64, on_s: f64, off_s: f64, duration_s: f64 },
+    /// Poisson arrivals whose rate follows a raised cosine between
+    /// `base_hz` (trough, at t = 0) and `peak_hz` (crest, at half a
+    /// period): `rate(t) = base + (peak − base) · (1 − cos 2πt/period)/2`,
+    /// for `duration_s` seconds. Materialized exactly by thinning a
+    /// homogeneous `peak_hz` stream (`peak_hz >= base_hz > 0`).
+    Diurnal { base_hz: f64, peak_hz: f64, period_s: f64, duration_s: f64 },
+    /// Baseline Poisson traffic at `base_hz` with one flash crowd: the
+    /// rate jumps to `spike_hz` at `spike_at_s` for `spike_s` seconds,
+    /// then falls back, for `duration_s` seconds total. Gaps restart at
+    /// each boundary (valid by memorylessness).
+    FlashCrowd { base_hz: f64, spike_hz: f64, spike_at_s: f64, spike_s: f64, duration_s: f64 },
     /// Replay recorded arrival offsets (seconds from stream start,
     /// non-decreasing).
     Trace { arrivals_s: Vec<f64> },
@@ -88,6 +110,8 @@ impl ArrivalProcess {
             ArrivalProcess::ClosedLoop { .. } => "closed-loop",
             ArrivalProcess::Poisson { .. } => "poisson",
             ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+            ArrivalProcess::FlashCrowd { .. } => "flash-crowd",
             ArrivalProcess::Trace { .. } => "trace",
         }
     }
@@ -123,6 +147,35 @@ impl ArrivalProcess {
                 // a zero off window is legal (degenerates to pure Poisson)
                 if !off_s.is_finite() || *off_s < 0.0 {
                     return Err(ArrivalError::BadDuration(*off_s));
+                }
+            }
+            ArrivalProcess::Diurnal { base_hz, peak_hz, period_s, duration_s } => {
+                if !base_hz.is_finite() || *base_hz <= 0.0 {
+                    return Err(ArrivalError::BadRate(*base_hz));
+                }
+                // the thinning envelope needs peak >= base
+                if !peak_hz.is_finite() || *peak_hz < *base_hz {
+                    return Err(ArrivalError::BadRate(*peak_hz));
+                }
+                for d in [period_s, duration_s] {
+                    if !d.is_finite() || *d <= 0.0 {
+                        return Err(ArrivalError::BadDuration(*d));
+                    }
+                }
+            }
+            ArrivalProcess::FlashCrowd { base_hz, spike_hz, spike_at_s, spike_s, duration_s } => {
+                for r in [base_hz, spike_hz] {
+                    if !r.is_finite() || *r <= 0.0 {
+                        return Err(ArrivalError::BadRate(*r));
+                    }
+                }
+                if !spike_at_s.is_finite() || *spike_at_s < 0.0 {
+                    return Err(ArrivalError::BadOffset(*spike_at_s));
+                }
+                for d in [spike_s, duration_s] {
+                    if !d.is_finite() || *d <= 0.0 {
+                        return Err(ArrivalError::BadDuration(*d));
+                    }
                 }
             }
             ArrivalProcess::Trace { arrivals_s } => {
@@ -186,6 +239,52 @@ impl ArrivalProcess {
                 }
                 Some(out)
             }
+            ArrivalProcess::Diurnal { base_hz, peak_hz, period_s, duration_s } => {
+                // Lewis–Shedler thinning: draw a homogeneous candidate
+                // stream at the peak rate and keep each candidate with
+                // probability rate(t)/peak — exact for an inhomogeneous
+                // Poisson process, and two draws per candidate keeps the
+                // stream layout a pure function of the process parameters.
+                let mut out = Vec::new();
+                let mut t = 0.0f64;
+                let two_pi = 2.0 * std::f64::consts::PI;
+                loop {
+                    t += exp_gap(rng, *peak_hz);
+                    if t >= *duration_s {
+                        return Some(out);
+                    }
+                    let rate = base_hz
+                        + (peak_hz - base_hz) * 0.5 * (1.0 - (two_pi * t / period_s).cos());
+                    if rng.f64() * peak_hz < rate {
+                        out.push(t);
+                    }
+                }
+            }
+            ArrivalProcess::FlashCrowd { base_hz, spike_hz, spike_at_s, spike_s, duration_s } => {
+                // piecewise-constant rate; restarting the exponential gap
+                // at each boundary is valid by memorylessness
+                let spike_start = spike_at_s.min(*duration_s);
+                let spike_end = (spike_at_s + spike_s).min(*duration_s);
+                let mut out = Vec::new();
+                for (start, end, rate) in [
+                    (0.0, spike_start, *base_hz),
+                    (spike_start, spike_end, *spike_hz),
+                    (spike_end, *duration_s, *base_hz),
+                ] {
+                    if end <= start {
+                        continue;
+                    }
+                    let mut t = start;
+                    loop {
+                        t += exp_gap(rng, rate);
+                        if t >= end {
+                            break;
+                        }
+                        out.push(t);
+                    }
+                }
+                Some(out)
+            }
             ArrivalProcess::Trace { arrivals_s } => Some(arrivals_s.clone()),
         }
     }
@@ -201,6 +300,15 @@ impl ArrivalProcess {
             }
             ArrivalProcess::Bursty { rate_hz, on_s, off_s, duration_s } => {
                 format!("bursty {rate_hz} req/s ({on_s}s on / {off_s}s off) for {duration_s}s")
+            }
+            ArrivalProcess::Diurnal { base_hz, peak_hz, period_s, duration_s } => format!(
+                "diurnal {base_hz}..{peak_hz} req/s (period {period_s}s) for {duration_s}s"
+            ),
+            ArrivalProcess::FlashCrowd { base_hz, spike_hz, spike_at_s, spike_s, duration_s } => {
+                format!(
+                    "flash crowd {base_hz} req/s with {spike_hz} req/s spike \
+                     at {spike_at_s}s for {spike_s}s, total {duration_s}s"
+                )
             }
             ArrivalProcess::Trace { arrivals_s } => {
                 format!("trace replay of {} arrivals", arrivals_s.len())
@@ -291,6 +399,113 @@ mod tests {
         }
         // roughly half the pure-Poisson count
         assert!((700..1_300).contains(&times.len()), "{} arrivals", times.len());
+    }
+
+    #[test]
+    fn diurnal_schedule_modulates_density_deterministically() {
+        let p = ArrivalProcess::Diurnal {
+            base_hz: 200.0,
+            peak_hz: 4_000.0,
+            period_s: 1.0,
+            duration_s: 1.0,
+        };
+        let a = p.schedule(&mut Pcg32::new(7)).unwrap();
+        assert_eq!(a, p.schedule(&mut Pcg32::new(7)).unwrap(), "same seed, same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "must be non-decreasing");
+        assert!(a.iter().all(|&t| (0.0..1.0).contains(&t)));
+        // mean rate = base + (peak − base)/2 = 2100/s over one period
+        assert!((1_500..2_700).contains(&a.len()), "{} arrivals", a.len());
+        // the crest (around t = 0.5) must be much denser than the trough
+        let trough = a.iter().filter(|&&t| t < 0.1 || t >= 0.9).count();
+        let crest = a.iter().filter(|&&t| (0.4..0.6).contains(&t)).count();
+        assert!(
+            crest > 3 * trough.max(1),
+            "crest {crest} arrivals vs trough {trough}: no diurnal shape"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_spikes_in_its_window() {
+        let p = ArrivalProcess::FlashCrowd {
+            base_hz: 500.0,
+            spike_hz: 10_000.0,
+            spike_at_s: 0.4,
+            spike_s: 0.2,
+            duration_s: 1.0,
+        };
+        let a = p.schedule(&mut Pcg32::new(5)).unwrap();
+        assert_eq!(a, p.schedule(&mut Pcg32::new(5)).unwrap());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "must be non-decreasing");
+        let inside = a.iter().filter(|&&t| (0.4..0.6).contains(&t)).count();
+        let outside = a.len() - inside;
+        // ~2000 in the spike window vs ~400 outside
+        assert!(inside > 3 * outside, "spike {inside} vs baseline {outside}");
+        // a spike past the end degenerates to pure baseline traffic
+        let tail = ArrivalProcess::FlashCrowd {
+            base_hz: 500.0,
+            spike_hz: 10_000.0,
+            spike_at_s: 5.0,
+            spike_s: 0.2,
+            duration_s: 1.0,
+        };
+        let b = tail.schedule(&mut Pcg32::new(5)).unwrap();
+        assert!((300..700).contains(&b.len()), "{} arrivals", b.len());
+    }
+
+    #[test]
+    fn diurnal_and_flash_crowd_validation() {
+        // peak below base breaks the thinning envelope
+        assert!(matches!(
+            ArrivalProcess::Diurnal {
+                base_hz: 100.0,
+                peak_hz: 50.0,
+                period_s: 1.0,
+                duration_s: 1.0
+            }
+            .validate(),
+            Err(ArrivalError::BadRate(_))
+        ));
+        // peak == base is a legal degenerate (flat Poisson)
+        assert!(ArrivalProcess::Diurnal {
+            base_hz: 100.0,
+            peak_hz: 100.0,
+            period_s: 1.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_ok());
+        assert!(matches!(
+            ArrivalProcess::Diurnal {
+                base_hz: 100.0,
+                peak_hz: 200.0,
+                period_s: 0.0,
+                duration_s: 1.0
+            }
+            .validate(),
+            Err(ArrivalError::BadDuration(_))
+        ));
+        assert!(matches!(
+            ArrivalProcess::FlashCrowd {
+                base_hz: 100.0,
+                spike_hz: 200.0,
+                spike_at_s: -0.1,
+                spike_s: 0.1,
+                duration_s: 1.0
+            }
+            .validate(),
+            Err(ArrivalError::BadOffset(_))
+        ));
+        assert!(matches!(
+            ArrivalProcess::FlashCrowd {
+                base_hz: 0.0,
+                spike_hz: 200.0,
+                spike_at_s: 0.1,
+                spike_s: 0.1,
+                duration_s: 1.0
+            }
+            .validate(),
+            Err(ArrivalError::BadRate(_))
+        ));
     }
 
     #[test]

@@ -35,11 +35,14 @@ pub mod arrival;
 pub mod generator;
 pub mod mix;
 pub mod vserve;
+pub mod wheel;
 
 pub use arrival::{ArrivalError, ArrivalProcess};
 pub use generator::TrafficReport;
 pub use mix::{MixError, TrafficMix};
 pub use vserve::{
-    simulate_serve, CalibrationConfig, ServiceModel, VirtualOutcome, VirtualServeConfig,
-    VirtualShardLoad,
+    simulate_fleet, simulate_serve, AutoscaleConfig, AutoscalePolicy, CalibrationConfig,
+    FailureConfig, FleetConfig, FleetCost, QueueKind, ServiceModel, ShardClass, VirtualOutcome,
+    VirtualServeConfig, VirtualShardLoad,
 };
+pub use wheel::EventWheel;

@@ -19,6 +19,31 @@
 //! same `(config, mix, arrival, seed)` twice yields byte-identical
 //! outcomes.
 //!
+//! ## Fleet scale
+//!
+//! [`simulate_fleet`] generalizes the engine to datacenter-fleet studies
+//! (GANAX-style cross-platform accounting, arxiv 1806.01107):
+//!
+//! - the event loop runs on an indexed **event wheel**
+//!   ([`crate::workload::wheel::EventWheel`]) instead of a `BinaryHeap` —
+//!   O(1) amortized insert/pop at fleet event rates, with pop order
+//!   provably identical to the heap's `(time, seq)` total order
+//!   ([`QueueKind`] keeps the heap available as an ablation baseline);
+//! - requests live in a central **arena**; per-shard pending queues hold
+//!   4-byte handles, so queue memory stays flat as shards multiply;
+//! - shards are grouped into **heterogeneous classes**
+//!   ([`ShardClass`] + [`FleetCost`]): photonic configs can be mixed with
+//!   GPU/TPU baseline platforms, each with its own worker count, service
+//!   times, batch energy, idle power, and $ cost rate, all accounted into
+//!   [`VirtualOutcome`];
+//! - [`FailureConfig`] injects shard failure/recovery (exponential
+//!   MTBF/MTTR draws from dedicated seeded streams) alongside the
+//!   calibration outages of [`CalibrationConfig`]; downtime merges the
+//!   two window sets per shard so availability never double-counts;
+//! - [`AutoscaleConfig`] grows/shrinks the *active* routing set one shard
+//!   per decision interval (target-utilization or queue-depth policy);
+//!   deactivated shards drain their queues but receive no new work.
+//!
 //! An optional [`CalibrationConfig`] injects the fidelity layer's drift
 //! dynamics ([`crate::fidelity::calibration`]): each shard periodically
 //! goes down for a re-calibration outage, during which its in-flight
@@ -29,7 +54,9 @@
 
 use super::arrival::ArrivalProcess;
 use super::mix::TrafficMix;
+use super::wheel::{EventWheel, WheelItem};
 use crate::coordinator::routing::{affinity_hash, RoutingPolicy};
+use crate::util::json::{num_arr, obj, JsonValue};
 use crate::util::rng::Pcg32;
 use crate::util::stats::percentile_sorted;
 use std::collections::{BinaryHeap, VecDeque};
@@ -44,6 +71,33 @@ pub trait ServiceModel {
     /// End-to-end latency (seconds) of serving `batch` samples of `model`
     /// on one chip. Must be deterministic for determinism of the DES.
     fn batch_latency_s(&self, model: &str, batch: usize) -> f64;
+}
+
+/// Class-aware cost model for heterogeneous fleets: service time and
+/// energy may depend on which [`ShardClass`] serves the batch (photonic
+/// vs GPU/TPU baseline platforms). `class` is an index into
+/// [`FleetConfig::classes`]. Must be deterministic.
+pub trait FleetCost {
+    /// End-to-end latency (seconds) of serving `batch` samples of `model`
+    /// on one shard of `class`.
+    fn batch_latency_s(&self, class: usize, model: &str, batch: usize) -> f64;
+
+    /// Energy (joules) consumed serving that batch. Defaults to zero —
+    /// uniform photonic fleets without an energy model stay byte-identical
+    /// to the pre-fleet engine.
+    fn batch_energy_j(&self, _class: usize, _model: &str, _batch: usize) -> f64 {
+        0.0
+    }
+}
+
+/// Adapts a class-blind [`ServiceModel`] to [`FleetCost`] for the
+/// homogeneous [`simulate_serve`] path.
+struct UniformCost<'a, C: ServiceModel>(&'a C);
+
+impl<C: ServiceModel> FleetCost for UniformCost<'_, C> {
+    fn batch_latency_s(&self, _class: usize, model: &str, batch: usize) -> f64 {
+        self.0.batch_latency_s(model, batch)
+    }
 }
 
 /// Periodic per-shard re-calibration outages (virtual seconds).
@@ -116,10 +170,125 @@ impl Default for VirtualServeConfig {
     }
 }
 
+/// Which event-queue implementation drives the DES. Both produce
+/// byte-identical outcomes ([`EventWheel`]'s determinism contract); the
+/// heap exists as the perf-ablation baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Indexed calendar queue — O(1) amortized, the default.
+    Wheel,
+    /// `BinaryHeap` — O(log n), kept for ablation.
+    Heap,
+}
+
+/// One hardware class of a heterogeneous fleet (a photonic config, a GPU
+/// platform, ...). Service time/energy per class come from [`FleetCost`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardClass {
+    /// Display name ("photonic", "GPU (A100)", ...).
+    pub name: String,
+    /// Virtual workers per shard of this class.
+    pub workers: usize,
+    /// Idle power draw (watts) while a shard is active but not serving —
+    /// charged on `active_s − busy_s`.
+    pub idle_w: f64,
+    /// Billing rate ($/hour of active shard time).
+    pub cost_per_hour: f64,
+}
+
+/// Random shard failure/recovery injection: time-to-failure and repair
+/// times are exponential draws with these means, from per-shard seeded
+/// streams (deterministic per seed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureConfig {
+    /// Mean virtual seconds between failures (must be positive).
+    pub mtbf_s: f64,
+    /// Mean virtual seconds to repair (must be `>= 0`).
+    pub mttr_s: f64,
+}
+
+/// How the autoscaler decides to grow or shrink the active set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscalePolicy {
+    /// Scale up when mean worker occupancy over the last interval exceeds
+    /// `target`; scale down below `target / 2`.
+    TargetUtilization { target: f64 },
+    /// Scale up when mean outstanding samples per active shard exceed
+    /// `high`; scale down below `low`.
+    QueueDepth { high: usize, low: usize },
+}
+
+/// Autoscaling of the active routing set: every `interval_s` the policy
+/// is evaluated and the active set grows or shrinks by one shard within
+/// `[min_shards, max_shards]`. Shards activate in index order; a
+/// deactivated shard drains its queue but receives no new requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    pub policy: AutoscalePolicy,
+    /// Smallest active set (must be `>= 1`).
+    pub min_shards: usize,
+    /// Largest active set (must not exceed the fleet).
+    pub max_shards: usize,
+    /// Active set at time zero (must lie in `[min_shards, max_shards]`).
+    pub initial: usize,
+    /// Virtual seconds between decisions (must be positive).
+    pub interval_s: f64,
+}
+
+/// Fleet-level configuration wrapping the per-shard serving shape of
+/// [`VirtualServeConfig`] with heterogeneity, failures, and autoscaling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Batching/queueing/routing shape shared by every shard.
+    /// `base.shards` must equal `shard_class.len()`; `base.workers` is
+    /// superseded by the per-class worker counts.
+    pub base: VirtualServeConfig,
+    /// The hardware classes present in the fleet.
+    pub classes: Vec<ShardClass>,
+    /// Class index of each shard (`shard_class[i]` indexes `classes`).
+    pub shard_class: Vec<usize>,
+    /// Shard failure/recovery injection; `None` disables it.
+    pub failures: Option<FailureConfig>,
+    /// Autoscaling of the active set; `None` keeps every shard active.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Event-queue implementation (ablation knob; default wheel).
+    pub queue: QueueKind,
+}
+
+impl FleetConfig {
+    /// A uniform single-class fleet equivalent to the plain
+    /// [`simulate_serve`] semantics: no energy/cost rates, no failures,
+    /// no autoscaling, wheel-backed.
+    pub fn homogeneous(base: VirtualServeConfig) -> Self {
+        let class = ShardClass {
+            name: "uniform".to_string(),
+            workers: base.workers,
+            idle_w: 0.0,
+            cost_per_hour: 0.0,
+        };
+        let shard_class = vec![0; base.shards];
+        FleetConfig {
+            base,
+            classes: vec![class],
+            shard_class,
+            failures: None,
+            autoscale: None,
+            queue: QueueKind::Wheel,
+        }
+    }
+
+    /// Number of shards in the fleet.
+    pub fn shards(&self) -> usize {
+        self.shard_class.len()
+    }
+}
+
 /// Per-shard load accounting of a virtual run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct VirtualShardLoad {
     pub shard: usize,
+    /// Index into [`FleetConfig::classes`] (0 for homogeneous runs).
+    pub class: usize,
     /// Requests admitted onto this shard.
     pub requests: u64,
     /// Worker-seconds spent serving batches.
@@ -128,9 +297,18 @@ pub struct VirtualShardLoad {
     pub utilization: f64,
     /// Re-calibration outages this shard took within the makespan.
     pub outages: u64,
-    /// Virtual seconds this shard was down for re-calibration (clipped
-    /// to the makespan).
+    /// Injected failures this shard took within the makespan.
+    pub failures: u64,
+    /// Virtual seconds this shard was down (calibration and failure
+    /// windows merged, overlaps counted once, clipped to the makespan).
     pub downtime_s: f64,
+    /// Virtual seconds this shard was in the active routing set (equals
+    /// the makespan without autoscaling).
+    pub active_s: f64,
+    /// Batch energy plus idle draw (joules).
+    pub energy_j: f64,
+    /// `cost_per_hour × active_s` ($).
+    pub cost: f64,
 }
 
 /// Deterministic outcome of a virtual serving run.
@@ -157,11 +335,24 @@ pub struct VirtualOutcome {
     pub per_shard: Vec<VirtualShardLoad>,
     /// Re-calibration outages across all shards (within the makespan).
     pub outages: u64,
-    /// Total shard-seconds of re-calibration downtime.
+    /// Injected shard failures across the fleet (within the makespan).
+    pub failures: u64,
+    /// Total shard-seconds of downtime (calibration ∪ failure windows).
     pub downtime_s: f64,
-    /// `1 − downtime / (shards × makespan)` — fraction of fleet
-    /// capacity that was up (1.0 without calibration).
+    /// `1 − downtime / (shards × makespan)`, clamped to `[0, 1]` —
+    /// fraction of fleet capacity that was up (1.0 without outages, and
+    /// 1.0 by definition when the makespan is zero).
     pub availability: f64,
+    /// Total fleet energy (batch energy + idle draw), joules.
+    pub energy_j: f64,
+    /// Total fleet cost ($) from per-class billing rates.
+    pub cost: f64,
+    /// Autoscaler scale-up / scale-down decisions taken.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Time-weighted mean size of the active routing set (equals the
+    /// shard count without autoscaling).
+    pub avg_active_shards: f64,
 }
 
 impl VirtualOutcome {
@@ -198,13 +389,71 @@ impl VirtualOutcome {
             0.0
         }
     }
+
+    /// Full outcome as a deterministic JSON document (fixed member order,
+    /// shortest-round-trip floats) — the byte-comparison surface for the
+    /// wheel-vs-heap equivalence tests and CI same-seed `cmp`s.
+    pub fn json(&self) -> JsonValue {
+        let per_model = JsonValue::Obj(
+            self.per_model
+                .iter()
+                .map(|(name, n)| (name.clone(), JsonValue::Num(*n as f64)))
+                .collect(),
+        );
+        let per_shard = JsonValue::Arr(
+            self.per_shard
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("shard", JsonValue::Num(s.shard as f64)),
+                        ("class", JsonValue::Num(s.class as f64)),
+                        ("requests", JsonValue::Num(s.requests as f64)),
+                        ("busy_s", JsonValue::Num(s.busy_s)),
+                        ("utilization", JsonValue::Num(s.utilization)),
+                        ("outages", JsonValue::Num(s.outages as f64)),
+                        ("failures", JsonValue::Num(s.failures as f64)),
+                        ("downtime_s", JsonValue::Num(s.downtime_s)),
+                        ("active_s", JsonValue::Num(s.active_s)),
+                        ("energy_j", JsonValue::Num(s.energy_j)),
+                        ("cost", JsonValue::Num(s.cost)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("offered", JsonValue::Num(self.offered as f64)),
+            ("admitted", JsonValue::Num(self.admitted as f64)),
+            ("rejected", JsonValue::Num(self.rejected as f64)),
+            ("shed", JsonValue::Num(self.shed as f64)),
+            ("makespan_s", JsonValue::Num(self.makespan_s)),
+            ("batches", JsonValue::Num(self.batches as f64)),
+            ("mean_batch", JsonValue::Num(self.mean_batch)),
+            ("outages", JsonValue::Num(self.outages as f64)),
+            ("failures", JsonValue::Num(self.failures as f64)),
+            ("downtime_s", JsonValue::Num(self.downtime_s)),
+            ("availability", JsonValue::Num(self.availability)),
+            ("energy_j", JsonValue::Num(self.energy_j)),
+            ("cost", JsonValue::Num(self.cost)),
+            ("scale_ups", JsonValue::Num(self.scale_ups as f64)),
+            ("scale_downs", JsonValue::Num(self.scale_downs as f64)),
+            ("avg_active_shards", JsonValue::Num(self.avg_active_shards)),
+            ("latencies_ms", num_arr(&self.latencies_ms)),
+            ("per_model", per_model),
+            ("per_shard", per_shard),
+        ])
+    }
 }
 
-/// Virtual backoff before a rejected closed-loop client retries (the
-/// deterministic analogue of the threaded generator's `yield_now`).
-const RETRY_BACKOFF_S: f64 = 1e-5;
+/// Base virtual backoff before a rejected closed-loop client's first
+/// retry (the deterministic analogue of the threaded generator's
+/// `yield_now`).
+const RETRY_BASE_BACKOFF_S: f64 = 1e-5;
+/// Ceiling of the exponential backoff schedule.
+const RETRY_MAX_BACKOFF_S: f64 = 5e-3;
+/// Shift cap: `base << RETRY_MAX_EXP` already clears the ceiling.
+const RETRY_MAX_EXP: u32 = 16;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 enum EventKind {
     /// A scheduled open-loop arrival of one `mix` model.
     Arrival { model: usize },
@@ -222,6 +471,28 @@ enum EventKind {
     CalibrationStart { shard: usize },
     /// A shard finished re-calibrating and resumes dispatching.
     CalibrationEnd { shard: usize },
+    /// A shard fails (MTBF draw elapsed); it goes down until repaired.
+    FailureStart { shard: usize },
+    /// A failed shard is repaired and resumes dispatching.
+    FailureEnd { shard: usize },
+    /// The autoscaler evaluates its policy.
+    AutoscaleTick,
+}
+
+impl EventKind {
+    /// Fleet-maintenance bookkeeping (calibration/failure/autoscale
+    /// cycles). Maintenance events re-arm themselves only while real
+    /// traffic exists, so they never count as liveness themselves.
+    fn is_maintenance(self) -> bool {
+        matches!(
+            self,
+            EventKind::CalibrationStart { .. }
+                | EventKind::CalibrationEnd { .. }
+                | EventKind::FailureStart { .. }
+                | EventKind::FailureEnd { .. }
+                | EventKind::AutoscaleTick
+        )
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -253,7 +524,57 @@ impl Ord for Event {
     }
 }
 
-#[derive(Debug, Clone)]
+// The wheel orders by the same (time, seq) key the heap's Ord encodes,
+// which is what makes the two queues pop-for-pop interchangeable.
+impl WheelItem for Event {
+    fn time(&self) -> f64 {
+        self.time
+    }
+    fn seq(&self) -> u64 {
+        self.seq
+    }
+}
+
+/// The pluggable DES priority queue (see [`QueueKind`]).
+enum EventQueue {
+    Wheel(EventWheel<Event>),
+    Heap(BinaryHeap<Event>),
+}
+
+impl EventQueue {
+    fn new(kind: QueueKind) -> Self {
+        match kind {
+            QueueKind::Wheel => EventQueue::Wheel(EventWheel::new()),
+            QueueKind::Heap => EventQueue::Heap(BinaryHeap::new()),
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        match self {
+            EventQueue::Wheel(w) => w.push(ev),
+            EventQueue::Heap(h) => h.push(ev),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        match self {
+            EventQueue::Wheel(w) => w.pop(),
+            EventQueue::Heap(h) => h.pop(),
+        }
+    }
+
+    /// Any queued non-maintenance event? Iteration order differs between
+    /// the queues, but existence is order-free, so the liveness guard is
+    /// representation-independent.
+    fn any_live(&self) -> bool {
+        match self {
+            EventQueue::Wheel(w) => w.iter().any(|e| !e.kind.is_maintenance()),
+            EventQueue::Heap(h) => h.iter().any(|e| !e.kind.is_maintenance()),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
 struct Req {
     arrival: f64,
     /// The closed-loop client to wake on completion, if any. (The model
@@ -261,24 +582,70 @@ struct Req {
     client: Option<usize>,
 }
 
+/// Central request arena: pending queues hold 4-byte handles into
+/// `slots`, and freed slots recycle across shards — fleet-scale queue
+/// memory stays proportional to peak in-flight requests, not to
+/// (shards × models × depth).
+#[derive(Default)]
+struct ReqArena {
+    slots: Vec<Req>,
+    free: Vec<u32>,
+}
+
+impl ReqArena {
+    fn alloc(&mut self, req: Req) -> u32 {
+        match self.free.pop() {
+            Some(h) => {
+                self.slots[h as usize] = req;
+                h
+            }
+            None => {
+                let h = self.slots.len() as u32;
+                self.slots.push(req);
+                h
+            }
+        }
+    }
+
+    fn arrival(&self, h: u32) -> f64 {
+        self.slots[h as usize].arrival
+    }
+
+    fn take(&mut self, h: u32) -> Req {
+        self.free.push(h);
+        self.slots[h as usize]
+    }
+}
+
 struct Shard {
+    /// Index into [`FleetConfig::classes`].
+    class: usize,
     /// Free-at virtual time per worker.
     worker_free: Vec<f64>,
-    /// Pending requests per mix model (FIFO).
-    pending: Vec<VecDeque<Req>>,
+    /// Pending request handles per mix model (FIFO).
+    pending: Vec<VecDeque<u32>>,
     outstanding: usize,
     requests: u64,
     busy_s: f64,
-    /// Down for re-calibration until this virtual time (0.0 = up).
+    /// Down (calibration or failure) until this virtual time (0.0 = up).
     down_until: f64,
+    /// Batch energy accumulated so far (idle draw is added at the end).
+    energy_j: f64,
+    /// `busy_s` snapshot at the last autoscale tick.
+    busy_at_tick: f64,
 }
 
-struct Dispatcher<'a, C: ServiceModel> {
-    cfg: &'a VirtualServeConfig,
+struct Dispatcher<'a, C: FleetCost> {
+    base: &'a VirtualServeConfig,
+    classes: &'a [ShardClass],
     names: &'a [String],
     cost: &'a C,
-    heap: BinaryHeap<Event>,
+    /// Per-class per-model per-sample service estimate backing the
+    /// deadline SLO (empty when no deadline is set).
+    est_sample_s: &'a [Vec<f64>],
+    queue: EventQueue,
     seq: u64,
+    arena: ReqArena,
     latencies_ms: Vec<f64>,
     per_model: Vec<u64>,
     batches: u64,
@@ -288,20 +655,35 @@ struct Dispatcher<'a, C: ServiceModel> {
     completions: Vec<(usize, f64)>,
 }
 
-impl<'a, C: ServiceModel> Dispatcher<'a, C> {
+impl<'a, C: FleetCost> Dispatcher<'a, C> {
     fn push(&mut self, time: f64, kind: EventKind) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Event { time, seq, kind });
+        self.queue.push(Event { time, seq, kind });
+    }
+
+    /// Deadline-SLO admission check: would a request that brings a
+    /// `class` shard to `queued` outstanding samples (itself included) be
+    /// predicted past the deadline? Mirrors the async core's check with
+    /// the cost model's upfront estimate in place of the learned EWMA.
+    fn sheds_at(&self, class: usize, model: usize, queued: usize) -> bool {
+        match self.base.deadline_s {
+            Some(deadline) => {
+                queued as f64 * self.est_sample_s[class][model]
+                    / self.classes[class].workers as f64
+                    > deadline
+            }
+            None => false,
+        }
     }
 
     /// Dispatch every batch that is ready on `shard` at virtual time
     /// `now`; schedules the deadline/worker-free events that guarantee
     /// progress for anything left pending.
     fn try_dispatch(&mut self, shard_idx: usize, sh: &mut Shard, now: f64) {
-        // a shard that is down for re-calibration dispatches nothing;
-        // the CalibrationEnd event re-runs dispatch, so pending heads
-        // cannot starve
+        // a shard that is down (re-calibration or failure) dispatches
+        // nothing; the CalibrationEnd/FailureEnd event re-runs dispatch,
+        // so pending heads cannot starve
         if now < sh.down_until {
             return;
         }
@@ -325,9 +707,9 @@ impl<'a, C: ServiceModel> Dispatcher<'a, C> {
             let mut ready: Option<(usize, f64)> = None;
             let mut waiting: Option<f64> = None;
             for (m, q) in sh.pending.iter().enumerate() {
-                if let Some(r) = q.front() {
-                    let head = r.arrival;
-                    if q.len() >= self.cfg.max_batch || now >= head + self.cfg.max_wait_s {
+                if let Some(&h) = q.front() {
+                    let head = self.arena.arrival(h);
+                    if q.len() >= self.base.max_batch || now >= head + self.base.max_wait_s {
                         match ready {
                             Some((_, best)) if best <= head => {}
                             _ => ready = Some((m, head)),
@@ -345,21 +727,23 @@ impl<'a, C: ServiceModel> Dispatcher<'a, C> {
                     // progress guarantee: revisit when the oldest unready
                     // head times out
                     self.push(
-                        head + self.cfg.max_wait_s,
+                        head + self.base.max_wait_s,
                         EventKind::Deadline { shard: shard_idx },
                     );
                 }
                 break;
             };
-            let k = sh.pending[m].len().min(self.cfg.max_batch);
-            let service = self.cost.batch_latency_s(&self.names[m], k).max(0.0);
+            let k = sh.pending[m].len().min(self.base.max_batch);
+            let service = self.cost.batch_latency_s(sh.class, &self.names[m], k).max(0.0);
             let done = now + service;
             sh.worker_free[w] = done;
             sh.busy_s += service;
+            sh.energy_j += self.cost.batch_energy_j(sh.class, &self.names[m], k).max(0.0);
             self.batches += 1;
             self.batch_samples += k as u64;
             for _ in 0..k {
-                if let Some(r) = sh.pending[m].pop_front() {
+                if let Some(h) = sh.pending[m].pop_front() {
+                    let r = self.arena.take(h);
                     self.latencies_ms.push((done - r.arrival) * 1e3);
                     self.per_model[m] += 1;
                     if let Some(c) = r.client {
@@ -374,19 +758,25 @@ impl<'a, C: ServiceModel> Dispatcher<'a, C> {
     }
 }
 
-/// Pick a shard for `model` under `routing` (deterministic; ties break
-/// toward the lowest shard index).
-fn route(routing: RoutingPolicy, rr: &mut usize, shards: &[Shard], model: &str) -> usize {
+/// Pick a shard for `model` under `routing` from the first `active`
+/// shards (deterministic; ties break toward the lowest shard index).
+fn route(
+    routing: RoutingPolicy,
+    rr: &mut usize,
+    shards: &[Shard],
+    active: usize,
+    model: &str,
+) -> usize {
     match routing {
         RoutingPolicy::RoundRobin => {
-            let s = *rr % shards.len();
+            let s = *rr % active;
             *rr += 1;
             s
         }
         RoutingPolicy::LeastOutstanding => {
             let mut best = 0usize;
             let mut best_load = usize::MAX;
-            for (i, sh) in shards.iter().enumerate() {
+            for (i, sh) in shards.iter().take(active).enumerate() {
                 if sh.outstanding < best_load {
                     best = i;
                     best_load = sh.outstanding;
@@ -394,17 +784,125 @@ fn route(routing: RoutingPolicy, rr: &mut usize, shards: &[Shard], model: &str) 
             }
             best
         }
-        RoutingPolicy::ModelAffinity => (affinity_hash(model) % shards.len() as u64) as usize,
+        RoutingPolicy::ModelAffinity => (affinity_hash(model) % active as u64) as usize,
     }
 }
 
-/// Run a deterministic virtual-time serving simulation.
+/// Admission counters of one run.
+#[derive(Default)]
+struct Tally {
+    offered: usize,
+    rejected: usize,
+    shed: usize,
+}
+
+/// Per-client closed-loop state, including the jittered-backoff streams.
+#[derive(Default)]
+struct ClosedClients {
+    rngs: Vec<Pcg32>,
+    remaining: Vec<usize>,
+    /// Dedicated retry-jitter stream per client (forked from the root so
+    /// admission/mix draws stay byte-identical whether or not retries
+    /// happen).
+    retry_rngs: Vec<Pcg32>,
+    /// Consecutive rejections since the last admission or shed.
+    attempts: Vec<u32>,
+}
+
+impl ClosedClients {
+    /// Seeded, jittered exponential backoff: `base·2^attempt` capped at
+    /// [`RETRY_MAX_BACKOFF_S`], scaled by a uniform factor in
+    /// `[0.5, 1.5)` from the client's own stream. A pure function of
+    /// `(seed, client, attempt index)`, so same-seed runs stay
+    /// byte-identical — but distinct clients rejected at the same virtual
+    /// instant retry at *distinct* instants instead of re-colliding in a
+    /// synchronized storm.
+    fn next_backoff(&mut self, client: usize) -> f64 {
+        let attempt = self.attempts[client];
+        self.attempts[client] = attempt.saturating_add(1);
+        let base =
+            (RETRY_BASE_BACKOFF_S * (1u64 << attempt.min(RETRY_MAX_EXP)) as f64)
+                .min(RETRY_MAX_BACKOFF_S);
+        base * (0.5 + self.retry_rngs[client].f64())
+    }
+}
+
+/// Exponential draw with the given mean (inverse-CDF of `1 - u`, which is
+/// never zero, so the draw is always finite and non-negative).
+fn exp_mean(rng: &mut Pcg32, mean_s: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean_s
+}
+
+/// Merge a shard's calibration and failure windows, count the ones the
+/// workload actually saw (start before the makespan), and sum downtime
+/// with overlaps counted once, clipped to the makespan. Returns
+/// `(outages, failures, downtime_s)`.
+fn merged_downtime(cal: &[(f64, f64)], fail: &[(f64, f64)], makespan: f64) -> (u64, u64, f64) {
+    let mut outages = 0u64;
+    let mut failures = 0u64;
+    let mut windows: Vec<(f64, f64)> = Vec::with_capacity(cal.len() + fail.len());
+    for &(start, end) in cal {
+        if start < makespan {
+            outages += 1;
+            windows.push((start, end.min(makespan)));
+        }
+    }
+    for &(start, end) in fail {
+        if start < makespan {
+            failures += 1;
+            windows.push((start, end.min(makespan)));
+        }
+    }
+    windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut down = 0.0f64;
+    let mut cur: Option<(f64, f64)> = None;
+    for (start, end) in windows {
+        match cur {
+            Some((cs, ce)) if start <= ce => cur = Some((cs, ce.max(end))),
+            Some((cs, ce)) => {
+                down += ce - cs;
+                cur = Some((start, end));
+            }
+            None => cur = Some((start, end)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        down += ce - cs;
+    }
+    (outages, failures, down)
+}
+
+/// Virtual seconds shard `i` spent in the active routing set, from the
+/// autoscale transition log `(time, active_count)`, clipped to the
+/// makespan. Shards activate in index order, so shard `i` is active
+/// exactly while `active_count > i`.
+fn active_seconds(transitions: &[(f64, usize)], shard: usize, makespan: f64) -> f64 {
+    let mut acc = 0.0f64;
+    for w in transitions.windows(2) {
+        let (t0, count) = w[0];
+        let (t1, _) = w[1];
+        if count > shard {
+            acc += (t1.min(makespan) - t0.min(makespan)).max(0.0);
+        }
+    }
+    if let Some(&(t0, count)) = transitions.last() {
+        if count > shard {
+            acc += (makespan - t0.min(makespan)).max(0.0);
+        }
+    }
+    acc
+}
+
+/// Run a deterministic virtual-time serving simulation on a uniform
+/// fleet.
 ///
 /// `seed` derives every random stream ([`Pcg32::fork`]): stream 0 feeds
 /// the open-loop arrival schedule, stream 1 the open-loop model mix, and
 /// streams `2 + c` the closed-loop clients — the same stream layout the
 /// threaded [`crate::workload::generator`] uses, so virtual and threaded
-/// runs of one scenario draw identical traffic.
+/// runs of one scenario draw identical traffic. (Retry jitter and failure
+/// injection draw from dedicated forks near `u64::MAX`, far outside the
+/// client range.)
 pub fn simulate_serve<C: ServiceModel>(
     cfg: &VirtualServeConfig,
     mix: &TrafficMix,
@@ -412,7 +910,44 @@ pub fn simulate_serve<C: ServiceModel>(
     cost: &C,
     seed: u64,
 ) -> VirtualOutcome {
-    assert!(cfg.shards >= 1, "at least one shard");
+    simulate_fleet(
+        &FleetConfig::homogeneous(cfg.clone()),
+        mix,
+        arrival,
+        &UniformCost(cost),
+        seed,
+    )
+}
+
+/// Run a deterministic virtual-time serving simulation on a (possibly
+/// heterogeneous, failing, autoscaled) fleet. See the module docs; the
+/// seed/stream layout matches [`simulate_serve`].
+pub fn simulate_fleet<C: FleetCost>(
+    fleet: &FleetConfig,
+    mix: &TrafficMix,
+    arrival: &ArrivalProcess,
+    cost: &C,
+    seed: u64,
+) -> VirtualOutcome {
+    let cfg = &fleet.base;
+    let n_shards = fleet.shard_class.len();
+    assert!(n_shards >= 1, "at least one shard");
+    assert_eq!(cfg.shards, n_shards, "base.shards must match the shard_class map");
+    assert!(!fleet.classes.is_empty(), "at least one shard class");
+    for &c in &fleet.shard_class {
+        assert!(c < fleet.classes.len(), "shard_class index out of range");
+    }
+    for class in &fleet.classes {
+        assert!(class.workers >= 1, "at least one worker per shard");
+        assert!(
+            class.idle_w.is_finite() && class.idle_w >= 0.0,
+            "idle power must be finite and >= 0"
+        );
+        assert!(
+            class.cost_per_hour.is_finite() && class.cost_per_hour >= 0.0,
+            "cost rate must be finite and >= 0"
+        );
+    }
     assert!(cfg.workers >= 1, "at least one worker per shard");
     assert!(cfg.max_batch >= 1, "batches must admit a sample");
     assert!(cfg.queue_depth >= 1, "queue depth must admit a sample");
@@ -433,38 +968,84 @@ pub fn simulate_serve<C: ServiceModel>(
             "calibration outage must be finite and >= 0"
         );
     }
+    if let Some(f) = fleet.failures {
+        assert!(f.mtbf_s.is_finite() && f.mtbf_s > 0.0, "MTBF must be finite and positive");
+        assert!(f.mttr_s.is_finite() && f.mttr_s >= 0.0, "MTTR must be finite and >= 0");
+    }
+    let mut active_count = n_shards;
+    if let Some(a) = fleet.autoscale {
+        assert!(
+            a.min_shards >= 1 && a.min_shards <= a.max_shards,
+            "autoscale bounds must satisfy 1 <= min <= max"
+        );
+        assert!(a.max_shards <= n_shards, "autoscale max_shards cannot exceed the fleet");
+        assert!(
+            (a.min_shards..=a.max_shards).contains(&a.initial),
+            "autoscale initial must lie within [min, max]"
+        );
+        assert!(
+            a.interval_s.is_finite() && a.interval_s > 0.0,
+            "autoscale interval must be finite and positive"
+        );
+        match a.policy {
+            AutoscalePolicy::TargetUtilization { target } => assert!(
+                target.is_finite() && target > 0.0 && target <= 1.0,
+                "utilization target must be in (0, 1]"
+            ),
+            AutoscalePolicy::QueueDepth { high, low } => {
+                assert!(low < high, "queue-depth low watermark must sit below high")
+            }
+        }
+        active_count = a.initial;
+    }
 
     let root = Pcg32::new(seed);
     let names = mix.models();
     let n_models = names.len();
-    // deterministic per-sample service estimate backing the deadline SLO
-    // (the virtual analogue of the async core's EWMA)
-    let est_sample_s: Vec<f64> = if cfg.deadline_s.is_some() {
-        names
-            .iter()
-            .map(|m| cost.batch_latency_s(m, cfg.max_batch).max(0.0) / cfg.max_batch as f64)
+    // deterministic per-class per-sample service estimates backing the
+    // deadline SLO (the virtual analogue of the async core's EWMA)
+    let est_sample_s: Vec<Vec<f64>> = if cfg.deadline_s.is_some() {
+        (0..fleet.classes.len())
+            .map(|c| {
+                names
+                    .iter()
+                    .map(|m| {
+                        cost.batch_latency_s(c, m, cfg.max_batch).max(0.0)
+                            / cfg.max_batch as f64
+                    })
+                    .collect()
+            })
             .collect()
     } else {
         Vec::new()
     };
-    let mut shards: Vec<Shard> = (0..cfg.shards)
-        .map(|_| Shard {
-            worker_free: vec![0.0; cfg.workers],
+    let mut shards: Vec<Shard> = fleet
+        .shard_class
+        .iter()
+        .map(|&class| Shard {
+            class,
+            worker_free: vec![0.0; fleet.classes[class].workers],
             pending: (0..n_models).map(|_| VecDeque::new()).collect(),
             outstanding: 0,
             requests: 0,
             busy_s: 0.0,
             down_until: 0.0,
+            energy_j: 0.0,
+            busy_at_tick: 0.0,
         })
         .collect();
-    let mut outage_windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); cfg.shards];
+    let mut cal_windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_shards];
+    let mut fail_windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_shards];
 
     let mut d = Dispatcher {
-        cfg,
+        base: cfg,
+        classes: &fleet.classes,
         names: &names,
         cost,
-        heap: BinaryHeap::new(),
+        est_sample_s: &est_sample_s,
+        queue: EventQueue::new(fleet.queue),
         seq: 0,
+        arena: ReqArena::default(),
         latencies_ms: Vec::new(),
         per_model: vec![0u64; n_models],
         batches: 0,
@@ -473,17 +1054,32 @@ pub fn simulate_serve<C: ServiceModel>(
         completions: Vec::new(),
     };
 
-    // seed the event stream
+    // seed the event stream (calibration, failures, autoscale, traffic —
+    // the seq assignment of pre-fleet configs is unchanged)
     if let Some(cal) = cfg.calibration {
-        for s in 0..cfg.shards {
+        for s in 0..n_shards {
             // stagger the first outage across the interval so the fleet
             // never calibrates all at once
-            let offset = cal.interval_s * s as f64 / cfg.shards as f64;
+            let offset = cal.interval_s * s as f64 / n_shards as f64;
             d.push(cal.interval_s + offset, EventKind::CalibrationStart { shard: s });
         }
     }
-    let mut client_rngs: Vec<Pcg32> = Vec::new();
-    let mut client_remaining: Vec<usize> = Vec::new();
+    let mut fail_rngs: Vec<Pcg32> = Vec::new();
+    if let Some(f) = fleet.failures {
+        // a dedicated fork far outside the client stream range keeps
+        // failure-free runs byte-identical (fork is pure)
+        let fail_root = root.fork(u64::MAX);
+        for s in 0..n_shards {
+            let mut rng = fail_root.fork(s as u64);
+            let ttf = exp_mean(&mut rng, f.mtbf_s);
+            d.push(ttf, EventKind::FailureStart { shard: s });
+            fail_rngs.push(rng);
+        }
+    }
+    if let Some(a) = fleet.autoscale {
+        d.push(a.interval_s, EventKind::AutoscaleTick);
+    }
+    let mut clients = ClosedClients::default();
     match arrival.schedule(&mut root.fork(0)) {
         Some(times) => {
             let mut mix_rng = root.fork(1);
@@ -497,60 +1093,66 @@ pub fn simulate_serve<C: ServiceModel>(
             }
         }
         None => {
-            if let ArrivalProcess::ClosedLoop { clients, per_client } = arrival {
-                for c in 0..*clients {
-                    client_rngs.push(root.fork(2 + c as u64));
-                    client_remaining.push(*per_client);
+            if let ArrivalProcess::ClosedLoop { clients: n, per_client } = arrival {
+                let retry_root = root.fork(u64::MAX - 1);
+                for c in 0..*n {
+                    clients.rngs.push(root.fork(2 + c as u64));
+                    clients.remaining.push(*per_client);
+                    clients.retry_rngs.push(retry_root.fork(c as u64));
+                    clients.attempts.push(0);
                     d.push(0.0, EventKind::ClientNext { client: c });
                 }
             }
         }
     }
 
-    let mut offered = 0usize;
-    let mut rejected = 0usize;
-    let mut shed = 0usize;
+    let mut tally = Tally::default();
     let mut rr = 0usize;
+    let mut scale_ups = 0u64;
+    let mut scale_downs = 0u64;
+    // autoscale transition log: (virtual time, active set size)
+    let mut transitions: Vec<(f64, usize)> = vec![(0.0, active_count)];
 
-    while let Some(ev) = d.heap.pop() {
+    while let Some(ev) = d.queue.pop() {
         let now = ev.time;
         match ev.kind {
             EventKind::Arrival { model } => {
                 // makespan tracks arrivals and completions only — stale
                 // deadline/retry events must not inflate it
                 d.makespan = d.makespan.max(now);
-                offered += 1;
-                let s = route(cfg.routing, &mut rr, &shards, &names[model]);
+                tally.offered += 1;
+                let s = route(cfg.routing, &mut rr, &shards, active_count, &names[model]);
                 let sh = &mut shards[s];
                 if sh.outstanding + 1 > cfg.queue_depth {
-                    rejected += 1;
-                } else if sheds_at(cfg, &est_sample_s, model, sh.outstanding + 1) {
+                    tally.rejected += 1;
+                } else if d.sheds_at(sh.class, model, sh.outstanding + 1) {
                     // open-loop sources never retry: the shed is terminal
-                    shed += 1;
+                    tally.shed += 1;
                 } else {
                     sh.outstanding += 1;
                     sh.requests += 1;
-                    sh.pending[model].push_back(Req { arrival: now, client: None });
+                    let h = d.arena.alloc(Req { arrival: now, client: None });
+                    sh.pending[model].push_back(h);
                     d.try_dispatch(s, sh, now);
                 }
             }
             EventKind::ClientNext { client } => {
-                if client_remaining[client] == 0 {
+                if clients.remaining[client] == 0 {
                     continue;
                 }
-                let model = mix.sample_index(&mut client_rngs[client]);
+                let model = mix.sample_index(&mut clients.rngs[client]);
                 // keep the per-client stream aligned with the threaded
                 // generator (which also draws a request seed here)
-                let _ = client_rngs[client].next_u64();
+                let _ = clients.rngs[client].next_u64();
                 submit_closed(
-                    &mut d, cfg, &names, &est_sample_s, &mut shards, &mut rr, &mut offered,
-                    &mut rejected, &mut shed, &mut client_remaining, client, model, now,
+                    &mut d, &mut shards, active_count, &mut rr, &mut tally, &mut clients,
+                    client, model, now,
                 );
             }
             EventKind::ClientRetry { client, model } => {
                 submit_closed(
-                    &mut d, cfg, &names, &est_sample_s, &mut shards, &mut rr, &mut offered,
-                    &mut rejected, &mut shed, &mut client_remaining, client, model, now,
+                    &mut d, &mut shards, active_count, &mut rr, &mut tally, &mut clients,
+                    client, model, now,
                 );
             }
             EventKind::WorkerFree { shard, release } => {
@@ -566,20 +1168,15 @@ pub fn simulate_serve<C: ServiceModel>(
                 if let Some(cal) = cfg.calibration {
                     // the calibration cycle re-arms itself only while
                     // traffic is still live (requests in flight, or any
-                    // non-calibration event still queued) — otherwise
+                    // non-maintenance event still queued) — otherwise
                     // the cycle would keep the event loop alive forever
-                    let live = shards.iter().any(|sh| sh.outstanding > 0)
-                        || d.heap.iter().any(|e| {
-                            !matches!(
-                                e.kind,
-                                EventKind::CalibrationStart { .. }
-                                    | EventKind::CalibrationEnd { .. }
-                            )
-                        });
+                    let live =
+                        shards.iter().any(|sh| sh.outstanding > 0) || d.queue.any_live();
                     if live {
                         let end = now + cal.outage_s;
-                        shards[shard].down_until = end;
-                        outage_windows[shard].push((now, end));
+                        let sh = &mut shards[shard];
+                        sh.down_until = sh.down_until.max(end);
+                        cal_windows[shard].push((now, end));
                         d.push(end, EventKind::CalibrationEnd { shard });
                     }
                 }
@@ -591,11 +1188,102 @@ pub fn simulate_serve<C: ServiceModel>(
                     d.push(now + cal.interval_s, EventKind::CalibrationStart { shard });
                 }
             }
+            EventKind::FailureStart { shard } => {
+                if let Some(f) = fleet.failures {
+                    // same liveness guard as calibration: failures only
+                    // land (and re-arm) while traffic exists
+                    let live =
+                        shards.iter().any(|sh| sh.outstanding > 0) || d.queue.any_live();
+                    if live {
+                        let repair = if f.mttr_s > 0.0 {
+                            exp_mean(&mut fail_rngs[shard], f.mttr_s)
+                        } else {
+                            0.0
+                        };
+                        let end = now + repair;
+                        let sh = &mut shards[shard];
+                        // a failure can overlap a calibration outage: the
+                        // shard stays down until the later of the two
+                        sh.down_until = sh.down_until.max(end);
+                        fail_windows[shard].push((now, end));
+                        d.push(end, EventKind::FailureEnd { shard });
+                    }
+                }
+            }
+            EventKind::FailureEnd { shard } => {
+                if let Some(f) = fleet.failures {
+                    let sh = &mut shards[shard];
+                    d.try_dispatch(shard, sh, now);
+                    let ttf = exp_mean(&mut fail_rngs[shard], f.mtbf_s);
+                    d.push(now + ttf, EventKind::FailureStart { shard });
+                }
+            }
+            EventKind::AutoscaleTick => {
+                if let Some(a) = fleet.autoscale {
+                    let live =
+                        shards.iter().any(|sh| sh.outstanding > 0) || d.queue.any_live();
+                    if live {
+                        let delta: i32 = match a.policy {
+                            AutoscalePolicy::TargetUtilization { target } => {
+                                let mut busy = 0.0f64;
+                                let mut capacity = 0.0f64;
+                                for sh in shards.iter().take(active_count) {
+                                    busy += sh.busy_s - sh.busy_at_tick;
+                                    capacity += fleet.classes[sh.class].workers as f64
+                                        * a.interval_s;
+                                }
+                                let util = if capacity > 0.0 { busy / capacity } else { 0.0 };
+                                if util > target {
+                                    1
+                                } else if util < target * 0.5 {
+                                    -1
+                                } else {
+                                    0
+                                }
+                            }
+                            AutoscalePolicy::QueueDepth { high, low } => {
+                                let queued: usize = shards
+                                    .iter()
+                                    .take(active_count)
+                                    .map(|sh| sh.outstanding)
+                                    .sum();
+                                let per = queued as f64 / active_count as f64;
+                                if per > high as f64 {
+                                    1
+                                } else if per < low as f64 {
+                                    -1
+                                } else {
+                                    0
+                                }
+                            }
+                        };
+                        for sh in shards.iter_mut() {
+                            sh.busy_at_tick = sh.busy_s;
+                        }
+                        if delta > 0 && active_count < a.max_shards {
+                            active_count += 1;
+                            scale_ups += 1;
+                            transitions.push((now, active_count));
+                            // the re-activated shard may hold work queued
+                            // from its previous active period
+                            let s = active_count - 1;
+                            d.try_dispatch(s, &mut shards[s], now);
+                        } else if delta < 0 && active_count > a.min_shards {
+                            // the deactivated shard drains: its workers
+                            // keep dispatching, routing just skips it
+                            active_count -= 1;
+                            scale_downs += 1;
+                            transitions.push((now, active_count));
+                        }
+                        d.push(now + a.interval_s, EventKind::AutoscaleTick);
+                    }
+                }
+            }
         }
         // wake closed-loop clients whose requests just completed
         let wakeups = std::mem::take(&mut d.completions);
         for (client, done) in wakeups {
-            if client_remaining[client] > 0 {
+            if clients.remaining[client] > 0 {
                 d.push(done, EventKind::ClientNext { client });
             }
         }
@@ -604,44 +1292,66 @@ pub fn simulate_serve<C: ServiceModel>(
     let mut latencies_ms = d.latencies_ms;
     latencies_ms.sort_by(f64::total_cmp);
     let admitted = latencies_ms.len();
-    debug_assert_eq!(offered, admitted + rejected + shed, "request conservation");
+    debug_assert_eq!(
+        tally.offered,
+        admitted + tally.rejected + tally.shed,
+        "request conservation"
+    );
     let makespan_s = d.makespan;
     let mut outages = 0u64;
-    let mut downtime_s = 0.0;
+    let mut failures = 0u64;
+    let mut downtime_s = 0.0f64;
+    let mut energy_j = 0.0f64;
+    let mut cost_total = 0.0f64;
     let per_shard: Vec<VirtualShardLoad> = shards
         .iter()
         .enumerate()
         .map(|(i, sh)| {
             // count only the downtime the workload actually saw: windows
-            // clipped to the makespan (post-traffic calibration noise is
-            // not an availability cost)
-            let mut shard_outages = 0u64;
-            let mut shard_down = 0.0;
-            for &(start, end) in &outage_windows[i] {
-                if start >= makespan_s {
-                    continue;
-                }
-                shard_outages += 1;
-                shard_down += end.min(makespan_s) - start;
-            }
-            outages += shard_outages;
-            downtime_s += shard_down;
+            // clipped to the makespan (post-traffic maintenance noise is
+            // not an availability cost), overlaps merged so a failure
+            // during a calibration outage is not double-billed
+            let (sh_outages, sh_failures, sh_down) =
+                merged_downtime(&cal_windows[i], &fail_windows[i], makespan_s);
+            outages += sh_outages;
+            failures += sh_failures;
+            downtime_s += sh_down;
+            let class = &fleet.classes[sh.class];
+            let active_s = if fleet.autoscale.is_none() {
+                makespan_s
+            } else {
+                active_seconds(&transitions, i, makespan_s)
+            };
+            // a draining shard can be busy past its active window: idle
+            // draw is only charged on genuinely idle active time
+            let idle_s = (active_s - sh.busy_s).max(0.0);
+            let shard_energy = sh.energy_j + class.idle_w * idle_s;
+            let shard_cost = class.cost_per_hour * active_s / 3600.0;
+            energy_j += shard_energy;
+            cost_total += shard_cost;
             VirtualShardLoad {
                 shard: i,
+                class: sh.class,
                 requests: sh.requests,
                 busy_s: sh.busy_s,
                 utilization: if makespan_s > 0.0 {
-                    sh.busy_s / (cfg.workers as f64 * makespan_s)
+                    sh.busy_s / (class.workers as f64 * makespan_s)
                 } else {
                     0.0
                 },
-                outages: shard_outages,
-                downtime_s: shard_down,
+                outages: sh_outages,
+                failures: sh_failures,
+                downtime_s: sh_down,
+                active_s,
+                energy_j: shard_energy,
+                cost: shard_cost,
             }
         })
         .collect();
+    // an empty run (zero makespan) has full availability by definition —
+    // 0/0 must never reach the JSON envelopes CI byte-compares
     let availability = if makespan_s > 0.0 {
-        1.0 - downtime_s / (cfg.shards as f64 * makespan_s)
+        (1.0 - downtime_s / (n_shards as f64 * makespan_s)).clamp(0.0, 1.0)
     } else {
         1.0
     };
@@ -650,11 +1360,25 @@ pub fn simulate_serve<C: ServiceModel>(
     } else {
         0.0
     };
+    let avg_active_shards = if fleet.autoscale.is_none() || makespan_s <= 0.0 {
+        active_count as f64
+    } else {
+        let mut integral = 0.0f64;
+        for w in transitions.windows(2) {
+            let (t0, count) = w[0];
+            let (t1, _) = w[1];
+            integral += count as f64 * (t1.min(makespan_s) - t0.min(makespan_s)).max(0.0);
+        }
+        if let Some(&(t0, count)) = transitions.last() {
+            integral += count as f64 * (makespan_s - t0.min(makespan_s)).max(0.0);
+        }
+        integral / makespan_s
+    };
     VirtualOutcome {
-        offered,
+        offered: tally.offered,
         admitted,
-        rejected,
-        shed,
+        rejected: tally.rejected,
+        shed: tally.shed,
         makespan_s,
         latencies_ms,
         batches: d.batches,
@@ -663,70 +1387,60 @@ pub fn simulate_serve<C: ServiceModel>(
         per_model: names.iter().cloned().zip(d.per_model.clone()).collect(),
         per_shard,
         outages,
+        failures,
         downtime_s,
         availability,
-    }
-}
-
-/// Deadline-SLO admission check: would a request that brings `model`'s
-/// shard to `queued` outstanding samples (itself included) be predicted
-/// past the deadline? Mirrors the async core's check with the cost
-/// model's upfront estimate in place of the learned EWMA.
-fn sheds_at(
-    cfg: &VirtualServeConfig,
-    est_sample_s: &[f64],
-    model: usize,
-    queued: usize,
-) -> bool {
-    match cfg.deadline_s {
-        Some(deadline) => queued as f64 * est_sample_s[model] / cfg.workers as f64 > deadline,
-        None => false,
+        energy_j,
+        cost: cost_total,
+        scale_ups,
+        scale_downs,
+        avg_active_shards,
     }
 }
 
 /// One closed-loop submission attempt: admit (consuming one of the
 /// client's remaining requests), count a queue-full rejection and
-/// schedule a deterministic retry with the *same* sampled model, or count
-/// a shed and move the client straight to its next request (sheds are
-/// server decisions and are never retried — retrying into the same
+/// schedule a jittered-backoff retry with the *same* sampled model, or
+/// count a shed and move the client straight to its next request (sheds
+/// are server decisions and are never retried — retrying into the same
 /// backlog would livelock).
 #[allow(clippy::too_many_arguments)]
-fn submit_closed<C: ServiceModel>(
+fn submit_closed<C: FleetCost>(
     d: &mut Dispatcher<'_, C>,
-    cfg: &VirtualServeConfig,
-    names: &[String],
-    est_sample_s: &[f64],
     shards: &mut [Shard],
+    active: usize,
     rr: &mut usize,
-    offered: &mut usize,
-    rejected: &mut usize,
-    shed: &mut usize,
-    client_remaining: &mut [usize],
+    tally: &mut Tally,
+    clients: &mut ClosedClients,
     client: usize,
     model: usize,
     now: f64,
 ) {
-    *offered += 1;
+    tally.offered += 1;
     d.makespan = d.makespan.max(now);
-    let s = route(cfg.routing, rr, shards, &names[model]);
+    let s = route(d.base.routing, rr, shards, active, &d.names[model]);
     let sh = &mut shards[s];
-    if sh.outstanding + 1 > cfg.queue_depth {
-        *rejected += 1;
-        d.push(now + RETRY_BACKOFF_S, EventKind::ClientRetry { client, model });
+    if sh.outstanding + 1 > d.base.queue_depth {
+        tally.rejected += 1;
+        let backoff = clients.next_backoff(client);
+        d.push(now + backoff, EventKind::ClientRetry { client, model });
         return;
     }
-    if sheds_at(cfg, est_sample_s, model, sh.outstanding + 1) {
-        *shed += 1;
-        client_remaining[client] -= 1;
-        if client_remaining[client] > 0 {
+    if d.sheds_at(sh.class, model, sh.outstanding + 1) {
+        tally.shed += 1;
+        clients.attempts[client] = 0;
+        clients.remaining[client] -= 1;
+        if clients.remaining[client] > 0 {
             d.push(now, EventKind::ClientNext { client });
         }
         return;
     }
-    client_remaining[client] -= 1;
+    clients.attempts[client] = 0;
+    clients.remaining[client] -= 1;
     sh.outstanding += 1;
     sh.requests += 1;
-    sh.pending[model].push_back(Req { arrival: now, client: Some(client) });
+    let h = d.arena.alloc(Req { arrival: now, client: Some(client) });
+    sh.pending[model].push_back(h);
     d.try_dispatch(s, sh, now);
 }
 
@@ -744,8 +1458,55 @@ mod tests {
         }
     }
 
+    /// Class-dependent service time and energy (class 0 fast, class 1
+    /// slow), for heterogeneous-fleet tests.
+    struct TieredCost;
+
+    impl FleetCost for TieredCost {
+        fn batch_latency_s(&self, class: usize, _model: &str, batch: usize) -> f64 {
+            let per_sample = if class == 0 { 2e-5 } else { 1e-4 };
+            per_sample * batch as f64
+        }
+        fn batch_energy_j(&self, class: usize, _model: &str, batch: usize) -> f64 {
+            let per_sample = if class == 0 { 1e-3 } else { 5e-3 };
+            per_sample * batch as f64
+        }
+    }
+
     fn mix_ab() -> TrafficMix {
         TrafficMix::new(vec![("a".into(), 1.0), ("b".into(), 1.0)]).unwrap()
+    }
+
+    fn two_class_fleet(shards_per_class: usize) -> FleetConfig {
+        let base = VirtualServeConfig {
+            shards: shards_per_class * 2,
+            workers: 2,
+            max_batch: 8,
+            max_wait_s: 1e-4,
+            queue_depth: 1024,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: None,
+            deadline_s: None,
+        };
+        let classes = vec![
+            ShardClass {
+                name: "photonic".into(),
+                workers: 2,
+                idle_w: 1.5,
+                cost_per_hour: 3.0,
+            },
+            ShardClass { name: "gpu".into(), workers: 4, idle_w: 80.0, cost_per_hour: 4.0 },
+        ];
+        let mut shard_class = vec![0; shards_per_class];
+        shard_class.extend(vec![1; shards_per_class]);
+        FleetConfig {
+            base,
+            classes,
+            shard_class,
+            failures: None,
+            autoscale: None,
+            queue: QueueKind::Wheel,
+        }
     }
 
     #[test]
@@ -785,6 +1546,39 @@ mod tests {
         // every request eventually lands despite the 1-deep queue
         assert_eq!(out.admitted, 40);
         assert!(out.rejected > 0, "contended clients must see rejections");
+    }
+
+    #[test]
+    fn jittered_backoff_desynchronizes_retry_storms() {
+        // regression for the fixed RETRY_BACKOFF_S constant: on a
+        // saturated 1-deep queue every rejected client used to re-arrive
+        // exactly 10µs later, re-collide, and re-reject ~100 times per
+        // 1ms service slot — thousands of rejections for 40 requests.
+        // Jittered exponential backoff spaces the blocked clients out and
+        // caps near the service time, so the retry count collapses.
+        let cfg = VirtualServeConfig {
+            queue_depth: 1,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            ..VirtualServeConfig::default()
+        };
+        let arrival = ArrivalProcess::ClosedLoop { clients: 4, per_client: 10 };
+        let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 11);
+        assert_eq!(out.admitted, 40);
+        assert!(out.rejected > 0);
+        assert!(
+            out.rejected < 20 * out.admitted,
+            "a retry storm leaked through the backoff: {} rejections for {} admissions",
+            out.rejected,
+            out.admitted
+        );
+        // backoff draws are seeded per client: same seed, same bytes
+        let again = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 11);
+        assert_eq!(out, again, "jitter must stay bit-deterministic");
+        // a different seed jitters differently but conserves requests
+        let other = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-3), 12);
+        assert_eq!(other.admitted, 40);
     }
 
     #[test]
@@ -887,14 +1681,24 @@ mod tests {
             calibration: None,
             deadline_s: None,
         };
+        let classes = vec![ShardClass {
+            name: "uniform".into(),
+            workers: 1,
+            idle_w: 0.0,
+            cost_per_hour: 0.0,
+        }];
         let names = vec!["cold".to_string(), "hot".to_string()];
-        let cost = FlatCost(1e-3);
+        let flat = FlatCost(1e-3);
+        let cost = UniformCost(&flat);
         let mut d = Dispatcher {
-            cfg: &cfg,
+            base: &cfg,
+            classes: &classes,
             names: &names,
             cost: &cost,
-            heap: BinaryHeap::new(),
+            est_sample_s: &[],
+            queue: EventQueue::new(QueueKind::Wheel),
             seq: 0,
+            arena: ReqArena::default(),
             latencies_ms: Vec::new(),
             per_model: vec![0; 2],
             batches: 0,
@@ -903,26 +1707,30 @@ mod tests {
             completions: Vec::new(),
         };
         let mut sh = Shard {
+            class: 0,
             worker_free: vec![0.0],
             pending: vec![VecDeque::new(), VecDeque::new()],
             outstanding: 5,
             requests: 5,
             busy_s: 0.0,
             down_until: 0.0,
+            energy_j: 0.0,
+            busy_at_tick: 0.0,
         };
-        sh.pending[0].push_back(Req { arrival: 0.0, client: None });
+        let cold = d.arena.alloc(Req { arrival: 0.0, client: None });
+        sh.pending[0].push_back(cold);
         for _ in 0..4 {
-            sh.pending[1].push_back(Req { arrival: 1e-4, client: None });
+            let hot = d.arena.alloc(Req { arrival: 1e-4, client: None });
+            sh.pending[1].push_back(hot);
         }
         d.try_dispatch(0, &mut sh, 2e-4);
         assert_eq!(d.batches, 1, "the full hot batch must dispatch immediately");
         assert_eq!(d.per_model[1], 4, "hot requests served");
         assert_eq!(d.per_model[0], 0, "cold head still pending");
         assert_eq!(sh.pending[0].len(), 1);
-        // the cold head got a progress deadline after the worker freed up?
-        // (the worker is busy until 1.2e-4 + service; a WorkerFree event is
-        // queued, which re-runs dispatch — here we just check one was pushed)
-        assert!(!d.heap.is_empty(), "a follow-up event must exist for the cold head");
+        // a follow-up event (the batch's WorkerFree) must exist so the
+        // cold head cannot starve
+        assert!(d.queue.any_live(), "a follow-up event must exist for the cold head");
     }
 
     #[test]
@@ -968,8 +1776,11 @@ mod tests {
         let arrival = ArrivalProcess::Poisson { rate_hz: 2_000.0, duration_s: 0.05 };
         let out = simulate_serve(&cfg, &mix_ab(), &arrival, &FlatCost(1e-4), 17);
         assert_eq!(out.outages, 0);
+        assert_eq!(out.failures, 0);
         assert_eq!(out.downtime_s, 0.0);
         assert_eq!(out.availability, 1.0);
+        assert_eq!(out.energy_j, 0.0, "the uniform adapter carries no energy model");
+        assert_eq!(out.cost, 0.0);
         assert!(out.per_shard.iter().all(|s| s.outages == 0 && s.downtime_s == 0.0));
     }
 
@@ -1096,6 +1907,39 @@ mod tests {
     }
 
     #[test]
+    fn zero_makespan_runs_report_full_availability_not_nan() {
+        // regression for the availability divide-by-zero: an all-shed
+        // closed loop submits everything at t=0, so the makespan is
+        // exactly 0 — with calibration AND failures configured, the
+        // availability (and every other ratio) must come out defined
+        let cfg = VirtualServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 1,
+            max_wait_s: 0.0,
+            queue_depth: 64,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: Some(CalibrationConfig { interval_s: 1e-3, outage_s: 1e-4 }),
+            deadline_s: Some(1e-9),
+        };
+        let mut fleet = FleetConfig::homogeneous(cfg);
+        fleet.failures = Some(FailureConfig { mtbf_s: 1e-3, mttr_s: 1e-4 });
+        let arrival = ArrivalProcess::ClosedLoop { clients: 3, per_client: 5 };
+        let flat = FlatCost(1e-3);
+        let out = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 29);
+        assert_eq!(out.makespan_s, 0.0, "{out:?}");
+        assert_eq!(out.admitted, 0);
+        assert_eq!(out.shed, 15);
+        assert_eq!(out.availability, 1.0, "zero-makespan availability must clamp to 1.0");
+        assert_eq!(out.mean_batch, 0.0);
+        assert_eq!(out.throughput_rps(), 0.0);
+        assert!(out.per_shard.iter().all(|s| s.utilization == 0.0));
+        // nothing NaN/Inf may leak into the JSON envelope (it would
+        // render as `null` and break the CI byte-compares)
+        assert!(!out.json().render().contains("null"), "{}", out.json().render());
+    }
+
+    #[test]
     fn no_deadline_matches_pre_slo_behavior_exactly() {
         // deadline_s: None must leave outcomes byte-identical to the
         // config that predates the field
@@ -1107,5 +1951,203 @@ mod tests {
         let roomy = VirtualServeConfig { deadline_s: Some(1e9), ..base };
         let same = simulate_serve(&roomy, &mix_ab(), &arrival, &FlatCost(1e-4), 42);
         assert_eq!(out, same);
+    }
+
+    #[test]
+    fn wheel_and_heap_runs_are_byte_identical() {
+        // the queue-swap half of the equivalence property: same seed,
+        // same config, wheel vs heap — the full outcome (and its JSON
+        // rendering) must match byte for byte, including under
+        // calibration + failures + autoscaling
+        let mut fleet = two_class_fleet(2);
+        fleet.base.calibration = Some(CalibrationConfig { interval_s: 3e-2, outage_s: 5e-3 });
+        fleet.failures = Some(FailureConfig { mtbf_s: 5e-2, mttr_s: 5e-3 });
+        fleet.autoscale = Some(AutoscaleConfig {
+            policy: AutoscalePolicy::QueueDepth { high: 32, low: 2 },
+            min_shards: 1,
+            max_shards: 4,
+            initial: 2,
+            interval_s: 1e-2,
+        });
+        let arrival = ArrivalProcess::Poisson { rate_hz: 4_000.0, duration_s: 0.2 };
+        let wheel = simulate_fleet(&fleet, &mix_ab(), &arrival, &TieredCost, 31);
+        let mut heap_cfg = fleet.clone();
+        heap_cfg.queue = QueueKind::Heap;
+        let heap = simulate_fleet(&heap_cfg, &mix_ab(), &arrival, &TieredCost, 31);
+        assert_eq!(wheel, heap, "wheel and heap must agree exactly");
+        assert_eq!(wheel.json().render(), heap.json().render());
+        assert!(wheel.admitted > 0);
+    }
+
+    #[test]
+    fn heterogeneous_classes_account_energy_and_cost() {
+        let fleet = two_class_fleet(1);
+        let arrival = ArrivalProcess::Poisson { rate_hz: 3_000.0, duration_s: 0.1 };
+        let out = simulate_fleet(&fleet, &mix_ab(), &arrival, &TieredCost, 37);
+        assert!(out.admitted > 0);
+        assert_eq!(out.per_shard[0].class, 0);
+        assert_eq!(out.per_shard[1].class, 1);
+        // both shards saw traffic (round-robin) and burned batch energy
+        // plus idle draw
+        for s in &out.per_shard {
+            assert!(s.requests > 0, "{s:?}");
+            assert!(s.energy_j > 0.0, "{s:?}");
+            assert!(s.cost > 0.0, "{s:?}");
+            assert_eq!(s.active_s, out.makespan_s, "no autoscaler: always active");
+        }
+        // totals are the per-shard sums
+        let e: f64 = out.per_shard.iter().map(|s| s.energy_j).sum();
+        let c: f64 = out.per_shard.iter().map(|s| s.cost).sum();
+        assert!((out.energy_j - e).abs() < 1e-12, "{} vs {}", out.energy_j, e);
+        assert!((out.cost - c).abs() < 1e-12);
+        // the GPU class idles hotter: its energy dominates at this load
+        assert!(out.per_shard[1].energy_j > out.per_shard[0].energy_j, "{out:?}");
+        assert_eq!(out.avg_active_shards, 2.0);
+    }
+
+    #[test]
+    fn failures_inject_downtime_and_recover() {
+        let base = VirtualServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 4,
+            max_wait_s: 1e-4,
+            queue_depth: 512,
+            routing: RoutingPolicy::LeastOutstanding,
+            calibration: None,
+            deadline_s: None,
+        };
+        let mut fleet = FleetConfig::homogeneous(base);
+        fleet.failures = Some(FailureConfig { mtbf_s: 2e-2, mttr_s: 5e-3 });
+        let arrival = ArrivalProcess::Poisson { rate_hz: 3_000.0, duration_s: 0.2 };
+        let flat = FlatCost(2e-4);
+        let out = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 41);
+        assert!(out.failures > 0, "{out:?}");
+        assert_eq!(out.outages, 0, "no calibration configured");
+        assert!(out.downtime_s > 0.0);
+        assert!(out.availability > 0.0 && out.availability < 1.0, "{}", out.availability);
+        assert_eq!(out.offered, out.admitted + out.rejected + out.shed);
+        assert_eq!(
+            out.per_shard.iter().map(|s| s.failures).sum::<u64>(),
+            out.failures
+        );
+        // deterministic across runs
+        let again = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 41);
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn overlapping_outages_never_push_availability_out_of_range() {
+        // brutal failure pressure on top of calibration: windows overlap
+        // constantly, and the merged accounting must keep availability
+        // inside [0, 1]
+        let base = VirtualServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 4,
+            max_wait_s: 1e-4,
+            queue_depth: 256,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: Some(CalibrationConfig { interval_s: 5e-3, outage_s: 4e-3 }),
+            deadline_s: None,
+        };
+        let mut fleet = FleetConfig::homogeneous(base);
+        fleet.failures = Some(FailureConfig { mtbf_s: 3e-3, mttr_s: 2e-2 });
+        let arrival = ArrivalProcess::Poisson { rate_hz: 2_000.0, duration_s: 0.2 };
+        let flat = FlatCost(2e-4);
+        let out = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 43);
+        assert!(out.failures > 0 && out.outages > 0, "{out:?}");
+        assert!(
+            (0.0..=1.0).contains(&out.availability),
+            "availability out of range: {}",
+            out.availability
+        );
+        for s in &out.per_shard {
+            assert!(
+                s.downtime_s <= out.makespan_s + 1e-12,
+                "merged windows cannot exceed the makespan: {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn queue_depth_autoscaler_grows_under_load() {
+        let base = VirtualServeConfig {
+            shards: 4,
+            workers: 1,
+            max_batch: 4,
+            max_wait_s: 1e-4,
+            queue_depth: 4096,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: None,
+            deadline_s: None,
+        };
+        let mut fleet = FleetConfig::homogeneous(base);
+        fleet.autoscale = Some(AutoscaleConfig {
+            policy: AutoscalePolicy::QueueDepth { high: 8, low: 1 },
+            min_shards: 1,
+            max_shards: 4,
+            initial: 1,
+            interval_s: 2e-3,
+        });
+        // heavy sustained load: one shard cannot keep up
+        let arrival = ArrivalProcess::Poisson { rate_hz: 50_000.0, duration_s: 0.05 };
+        let flat = FlatCost(2e-4);
+        let out = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 47);
+        assert!(out.scale_ups > 0, "{out:?}");
+        assert!(out.avg_active_shards > 1.0 && out.avg_active_shards <= 4.0, "{out:?}");
+        // later shards joined mid-run: strictly less active time
+        assert!(out.per_shard[3].active_s < out.per_shard[0].active_s, "{out:?}");
+        assert_eq!(out.offered, out.admitted + out.rejected + out.shed);
+        let again = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 47);
+        assert_eq!(out, again, "autoscaling must stay bit-deterministic");
+    }
+
+    #[test]
+    fn utilization_autoscaler_sheds_idle_shards() {
+        let base = VirtualServeConfig {
+            shards: 4,
+            workers: 2,
+            max_batch: 8,
+            max_wait_s: 1e-4,
+            queue_depth: 1024,
+            routing: RoutingPolicy::RoundRobin,
+            calibration: None,
+            deadline_s: None,
+        };
+        let mut fleet = FleetConfig::homogeneous(base);
+        fleet.autoscale = Some(AutoscaleConfig {
+            policy: AutoscalePolicy::TargetUtilization { target: 0.6 },
+            min_shards: 1,
+            max_shards: 4,
+            initial: 4,
+            interval_s: 5e-3,
+        });
+        // light load: four shards are far below the 30% scale-down line
+        let arrival = ArrivalProcess::Poisson { rate_hz: 500.0, duration_s: 0.2 };
+        let flat = FlatCost(1e-4);
+        let out = simulate_fleet(&fleet, &mix_ab(), &arrival, &UniformCost(&flat), 53);
+        assert!(out.scale_downs > 0, "{out:?}");
+        assert!(out.avg_active_shards < 4.0, "{out:?}");
+        assert_eq!(out.offered, out.admitted + out.rejected + out.shed);
+    }
+
+    #[test]
+    fn homogeneous_fleet_wrapper_matches_simulate_serve() {
+        // the wrapper and an explicitly-built uniform FleetConfig must be
+        // the same simulation
+        let cfg = VirtualServeConfig { shards: 3, ..VirtualServeConfig::default() };
+        let arrival = ArrivalProcess::Poisson { rate_hz: 4_000.0, duration_s: 0.1 };
+        let flat = FlatCost(1e-4);
+        let a = simulate_serve(&cfg, &mix_ab(), &arrival, &flat, 59);
+        let b = simulate_fleet(
+            &FleetConfig::homogeneous(cfg),
+            &mix_ab(),
+            &arrival,
+            &UniformCost(&flat),
+            59,
+        );
+        assert_eq!(a, b);
+        assert_eq!(a.json().render(), b.json().render());
     }
 }

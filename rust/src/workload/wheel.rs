@@ -1,0 +1,348 @@
+//! Indexed event wheel (calendar queue) for the virtual-time DES.
+//!
+//! [`crate::workload::vserve`] drives fleet-scale runs through hundreds of
+//! thousands of timestamped events. A `BinaryHeap` costs `O(log n)` per
+//! operation with poor cache behavior at that size; a calendar queue
+//! (Brown, CACM 1988) buckets events by time and makes insert/pop `O(1)`
+//! amortized when the bucket width tracks the event density.
+//!
+//! **Determinism contract**: [`EventWheel::pop`] always returns the event
+//! with the globally smallest `(time, seq)` key — independent of bucket
+//! width, bucket count, or resize history. Bucket geometry is purely a
+//! performance knob, so swapping the wheel for a `BinaryHeap` (or
+//! resizing mid-run) can never change a simulation outcome. The engine's
+//! `QueueKind` ablation and the wheel-vs-heap property tests lean on this.
+//!
+//! Mechanics: a virtual bucket index `vb(t) = t / width` maps each event
+//! onto an unbounded calendar; the finite bucket array holds calendar slot
+//! `vb % n`. A cursor `vcur` tracks the earliest virtual bucket that may
+//! still hold events. `pop` scans the cursor's bucket for the earliest
+//! event *belonging to that virtual bucket* (later "years" sharing the
+//! slot are skipped), advancing the cursor over empty buckets; after a
+//! full lap without a hit it falls back to a direct `O(len)` global-min
+//! search and re-anchors the cursor — which keeps sparse far-future tails
+//! (timers, re-calibration cycles) from degrading the common case. `push`
+//! rewinds the cursor when an event lands behind it (handlers push events
+//! at the current virtual time). Resizes re-estimate the width from the
+//! *median* sampled inter-event gap, so one far-future outlier cannot
+//! collapse every live event into a single bucket.
+
+/// Timestamped, uniquely sequenced item a wheel can order.
+///
+/// `seq` must be unique per item; `(time, seq)` is the total order
+/// (`time` compares via `f64::total_cmp`). Times must be non-negative
+/// and non-NaN.
+pub trait WheelItem {
+    /// Virtual timestamp (seconds).
+    fn time(&self) -> f64;
+    /// Unique insertion sequence number (the tiebreak).
+    fn seq(&self) -> u64;
+}
+
+const INITIAL_BUCKETS: usize = 32;
+const INITIAL_WIDTH: f64 = 1e-4;
+/// Upper bound on the number of timestamps sampled per width estimate.
+const MAX_WIDTH_SAMPLE: usize = 1024;
+
+/// `(time, seq)` strictly-earlier comparison with the same total order the
+/// DES `BinaryHeap` uses.
+fn earlier(t_a: f64, s_a: u64, t_b: f64, s_b: u64) -> bool {
+    match t_a.total_cmp(&t_b) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => s_a < s_b,
+    }
+}
+
+/// A calendar queue over [`WheelItem`]s. See the module docs for the
+/// determinism contract and mechanics.
+pub struct EventWheel<T> {
+    /// `buckets[vb % n]` holds the events of virtual bucket `vb` (and of
+    /// every other virtual bucket congruent mod `n`).
+    buckets: Vec<Vec<T>>,
+    /// Virtual seconds per bucket (strictly positive).
+    width: f64,
+    /// Earliest virtual bucket index that may still hold events.
+    vcur: u64,
+    len: usize,
+}
+
+impl<T: WheelItem> Default for EventWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: WheelItem> EventWheel<T> {
+    pub fn new() -> Self {
+        EventWheel {
+            buckets: (0..INITIAL_BUCKETS).map(|_| Vec::new()).collect(),
+            width: INITIAL_WIDTH,
+            vcur: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// All queued items, in no particular order (the DES only uses this
+    /// for existence checks).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buckets.iter().flatten()
+    }
+
+    /// Virtual bucket index of time `t`. The `f64 → u64` cast saturates,
+    /// so far-future times all land in the last virtual bucket — still
+    /// correctly ordered by the in-bucket `(time, seq)` scan.
+    fn vb(&self, t: f64) -> u64 {
+        debug_assert!(!t.is_nan() && t >= 0.0, "event time must be a non-negative number");
+        (t / self.width) as u64
+    }
+
+    pub fn push(&mut self, item: T) {
+        let vb = self.vb(item.time());
+        // handlers push events at the current virtual time: rewind the
+        // cursor so nothing lands behind it and gets lapped
+        if vb < self.vcur {
+            self.vcur = vb;
+        }
+        let n = self.buckets.len() as u64;
+        self.buckets[(vb % n) as usize].push(item);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            self.rebuild();
+        }
+    }
+
+    /// Remove and return the event with the globally smallest
+    /// `(time, seq)` key.
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        let mut scanned = 0u64;
+        loop {
+            if scanned >= n {
+                // a full lap found nothing in-bucket: the next event is
+                // far ahead (or times saturated) — direct global-min
+                // search, then re-anchor the cursor on its year
+                return self.pop_direct();
+            }
+            let b = (self.vcur % n) as usize;
+            let mut best: Option<(usize, f64, u64)> = None;
+            for (i, it) in self.buckets[b].iter().enumerate() {
+                if self.vb(it.time()) != self.vcur {
+                    continue; // a later lap sharing this slot
+                }
+                let (t, s) = (it.time(), it.seq());
+                if best.map_or(true, |(_, bt, bs)| earlier(t, s, bt, bs)) {
+                    best = Some((i, t, s));
+                }
+            }
+            if let Some((i, _, _)) = best {
+                self.len -= 1;
+                let item = self.buckets[b].swap_remove(i);
+                self.maybe_shrink();
+                return Some(item);
+            }
+            self.vcur = self.vcur.saturating_add(1);
+            scanned += 1;
+        }
+    }
+
+    /// `O(len)` fallback: global `(time, seq)` minimum across every
+    /// bucket, cursor re-anchored on its virtual bucket.
+    fn pop_direct(&mut self) -> Option<T> {
+        let mut best: Option<(usize, usize, f64, u64)> = None;
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (i, it) in bucket.iter().enumerate() {
+                let (t, s) = (it.time(), it.seq());
+                if best.map_or(true, |(_, _, bt, bs)| earlier(t, s, bt, bs)) {
+                    best = Some((bi, i, t, s));
+                }
+            }
+        }
+        let (bi, i, t, _) = best?;
+        self.vcur = self.vb(t);
+        self.len -= 1;
+        let item = self.buckets[bi].swap_remove(i);
+        self.maybe_shrink();
+        Some(item)
+    }
+
+    fn maybe_shrink(&mut self) {
+        if self.buckets.len() > INITIAL_BUCKETS && self.len * 8 < self.buckets.len() {
+            self.rebuild();
+        }
+    }
+
+    /// Re-bucket every event into a table sized for the current
+    /// population, with the width re-estimated from the live events.
+    /// Purely a performance operation: the pop order is unaffected.
+    fn rebuild(&mut self) {
+        let items: Vec<T> = self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        let n = (items.len() * 2).next_power_of_two().max(INITIAL_BUCKETS);
+        if let Some(w) = estimate_width(&items) {
+            self.width = w;
+        }
+        self.buckets = (0..n).map(|_| Vec::new()).collect();
+        self.len = items.len();
+        // re-anchor on the earliest live event (u64::MAX when empty: the
+        // next push rewinds the cursor)
+        self.vcur = u64::MAX;
+        let n64 = n as u64;
+        for it in items {
+            let vb = self.vb(it.time());
+            self.vcur = self.vcur.min(vb);
+            self.buckets[(vb % n64) as usize].push(it);
+        }
+    }
+}
+
+/// Bucket-width estimate: twice the median per-event time gap, from a
+/// strided sample of at most [`MAX_WIDTH_SAMPLE`] timestamps. The median
+/// (not the span) keeps one far-future outlier from inflating the width
+/// until every live event shares a bucket. `None` when the population is
+/// too small or fully degenerate (identical timestamps).
+fn estimate_width<T: WheelItem>(items: &[T]) -> Option<f64> {
+    if items.len() < 2 {
+        return None;
+    }
+    let stride = (items.len() / MAX_WIDTH_SAMPLE).max(1);
+    let mut sample: Vec<f64> = items.iter().step_by(stride).map(|it| it.time()).collect();
+    sample.sort_by(f64::total_cmp);
+    let mut gaps: Vec<f64> = sample.windows(2).map(|w| w[1] - w[0]).collect();
+    gaps.sort_by(f64::total_cmp);
+    let median = gaps[gaps.len() / 2];
+    // the sampled gap spans `stride` events; aim for ~2 events per bucket
+    let width = 2.0 * median / stride as f64;
+    (width.is_finite() && width > 0.0).then_some(width)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    struct Ev {
+        time: f64,
+        seq: u64,
+    }
+
+    impl WheelItem for Ev {
+        fn time(&self) -> f64 {
+            self.time
+        }
+        fn seq(&self) -> u64 {
+            self.seq
+        }
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut w = EventWheel::new();
+        for (time, seq) in [(0.5, 0), (0.1, 1), (0.1, 2), (0.3, 3), (0.0, 4)] {
+            w.push(Ev { time, seq });
+        }
+        assert_eq!(w.len(), 5);
+        let order: Vec<u64> = std::iter::from_fn(|| w.pop()).map(|e| e.seq).collect();
+        assert_eq!(order, vec![4, 1, 2, 3, 0]);
+        assert!(w.is_empty() && w.pop().is_none());
+    }
+
+    #[test]
+    fn push_behind_the_cursor_is_not_lapped() {
+        let mut w = EventWheel::new();
+        w.push(Ev { time: 1.0, seq: 0 });
+        assert_eq!(w.pop().unwrap().seq, 0); // cursor is now deep in the calendar
+        w.push(Ev { time: 0.0, seq: 1 }); // behind the cursor
+        w.push(Ev { time: 2.0, seq: 2 });
+        assert_eq!(w.pop().unwrap().seq, 1, "the rewound event must pop first");
+        assert_eq!(w.pop().unwrap().seq, 2);
+    }
+
+    #[test]
+    fn far_future_outliers_and_ties_stay_ordered() {
+        let mut w = EventWheel::new();
+        // an outlier 12 orders of magnitude out, plus same-bucket ties
+        for (time, seq) in [(1e9, 0), (1e-3, 1), (1e-3, 2), (2e-3, 3)] {
+            w.push(Ev { time, seq });
+        }
+        // trigger rebuilds around the outlier
+        for seq in 4..200u64 {
+            w.push(Ev { time: 1e-5 * seq as f64, seq });
+        }
+        let mut last: Option<Ev> = None;
+        let mut n = 0;
+        while let Some(e) = w.pop() {
+            if let Some(p) = last {
+                assert!(
+                    earlier(p.time, p.seq, e.time, e.seq),
+                    "out of order: {p:?} then {e:?}"
+                );
+            }
+            last = Some(e);
+            n += 1;
+        }
+        assert_eq!(n, 200);
+        assert_eq!(last.unwrap().seq, 0, "the outlier pops last");
+    }
+
+    #[test]
+    fn randomized_pop_order_matches_a_binary_heap() {
+        // the determinism contract, property-tested: identical (time, seq)
+        // pop sequences against a reference BinaryHeap under interleaved
+        // pushes and pops at mixed time scales
+        for seed in 0..20u64 {
+            let mut rng = Pcg32::new(seed);
+            let mut wheel = EventWheel::new();
+            let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, u64)>> =
+                std::collections::BinaryHeap::new();
+            let mut seq = 0u64;
+            let mut base = 0.0f64;
+            for _ in 0..400 {
+                let burst = 1 + (rng.next_u64() % 8) as usize;
+                for _ in 0..burst {
+                    // mixed scales: microsecond gaps, occasional big jumps
+                    let gap = if rng.next_u64() % 16 == 0 { 1.0 } else { 1e-6 };
+                    let t = base + gap * rng.f64();
+                    wheel.push(Ev { time: t, seq });
+                    heap.push(std::cmp::Reverse((t.to_bits(), seq)));
+                    seq += 1;
+                }
+                let pops = (rng.next_u64() % burst as u64) as usize;
+                for _ in 0..pops {
+                    let got = wheel.pop().unwrap();
+                    let std::cmp::Reverse((bits, s)) = heap.pop().unwrap();
+                    assert_eq!((got.time.to_bits(), got.seq), (bits, s), "seed {seed}");
+                    base = base.max(got.time);
+                }
+            }
+            while let Some(std::cmp::Reverse((bits, s))) = heap.pop() {
+                let got = wheel.pop().unwrap();
+                assert_eq!((got.time.to_bits(), got.seq), (bits, s), "drain, seed {seed}");
+            }
+            assert!(wheel.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn iter_sees_every_queued_event() {
+        let mut w = EventWheel::new();
+        for seq in 0..50u64 {
+            w.push(Ev { time: seq as f64 * 1e-3, seq });
+        }
+        let mut seqs: Vec<u64> = w.iter().map(|e| e.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..50).collect::<Vec<_>>());
+    }
+}

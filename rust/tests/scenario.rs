@@ -4,7 +4,8 @@
 //! (`parse → plan → run → to_json` must be byte-identical for one seed).
 
 use photogan::api::scenario::{
-    CalibrationSpec, CompareStage, Scenario, ServeEngine, ServeStage, SimStage, StageSpec,
+    AutoscalePolicyKind, AutoscaleSpec, CalibrationSpec, CompareStage, FailureSpec, FleetGroup,
+    Scenario, ServeEngine, ServeStage, SimStage, StageSpec,
 };
 use photogan::api::{ApiError, Outcome, Session, SimRequest};
 use photogan::sim::OptFlags;
@@ -318,6 +319,7 @@ fn checked_in_starter_scenarios_plan_and_run() {
         ("mixed_zoo.json", 2usize),
         ("closed_loop_burst.json", 2usize),
         ("noisy_fleet.json", 1usize),
+        ("fleet_diurnal.json", 1usize),
     ] {
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("examples/scenarios")
@@ -393,6 +395,210 @@ fn threaded_serve_stage_rejects_the_calibration_knob() {
         matches!(err, ApiError::ScenarioParse { ref field, .. }
             if field == "stages[0].calibration"),
         "{err:?}"
+    );
+}
+
+/// A heterogeneous fleet under failures and autoscaling — the fleet-scale
+/// serve stage exercised end to end through `parse → plan → run`.
+const FLEET: &str = r#"{
+  "name": "fleet",
+  "seed": 21,
+  "stages": [
+    {
+      "kind": "serve",
+      "name": "het",
+      "mix": [ { "model": "dcgan", "weight": 2.0 }, { "model": "srgan", "weight": 1.0 } ],
+      "arrival": { "process": "poisson", "rate_hz": 2000.0, "duration_s": 0.05 },
+      "workers": 2,
+      "max_batch": 8,
+      "max_wait_ms": 0.2,
+      "queue_depth": 128,
+      "routing": "least-outstanding",
+      "fleet": [
+        { "platform": "photonic", "count": 2, "cost_per_hour": 3.0 },
+        { "platform": "gpu", "count": 1, "workers": 4, "idle_w": 80.0, "cost_per_hour": 4.0 }
+      ],
+      "failures": { "mtbf_ms": 10.0, "mttr_ms": 2.0 }
+    }
+  ]
+}"#;
+
+#[test]
+fn heterogeneous_fleet_surfaces_energy_cost_and_failures() {
+    let scenario = Scenario::from_json(FLEET).expect("parse");
+    // the fleet members survive the canonical-JSON fixpoint
+    let rendered = scenario.to_json();
+    assert_eq!(Scenario::from_json(&rendered).expect("reparse"), scenario);
+    let session = session();
+    let plan = session.plan(&scenario).expect("plan");
+    let outcome = Arc::clone(&session).run(&plan).expect("run");
+    let Outcome::Workload(w) = &outcome.stages[0].outcome else {
+        panic!("expected a virtual serve outcome");
+    };
+    assert_eq!(w.shards, 3, "fleet groups expand to 2 photonic + 1 gpu shards");
+    assert_eq!(w.classes, vec!["photonic".to_string(), "GPU (A100)".to_string()]);
+    assert!(w.admitted > 0, "{w:?}");
+    assert!(w.energy_j > 0.0, "batch energy + idle draw must accumulate: {w:?}");
+    assert!(w.cost > 0.0, "billing rates must accumulate: {w:?}");
+    assert!(w.failures > 0, "a 10 ms MTBF over 50 ms of traffic must fire: {w:?}");
+    assert!(w.downtime_s > 0.0 && w.availability < 1.0, "{w:?}");
+    assert_eq!(w.per_shard.len(), 3);
+    assert_eq!(w.per_shard[0].class, 0);
+    assert_eq!(w.per_shard[2].class, 1);
+    // the envelope carries the new accounting
+    let json = outcome.to_json();
+    for key in ["\"energy_j\"", "\"cost\"", "\"failures\"", "\"classes\"", "\"class\""] {
+        assert!(json.contains(key), "missing {key}");
+    }
+    // and it stays byte-deterministic
+    let again = session.run(&plan).expect("run");
+    assert_eq!(json, again.to_json());
+}
+
+#[test]
+fn unknown_fleet_platform_is_typed_at_plan_time() {
+    let text = FLEET.replace("\"platform\": \"gpu\"", "\"platform\": \"quantum\"");
+    let scenario = Scenario::from_json(&text).expect("parse");
+    let err = session().plan(&scenario).unwrap_err();
+    assert!(
+        matches!(err, ApiError::UnknownPlatform { ref field, ref name }
+            if field == "stages[0].fleet[1].platform" && name == "quantum"),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn autoscale_bounds_are_checked_against_the_fleet() {
+    let mut scenario = Scenario::from_json(FLEET).expect("parse");
+    let StageSpec::Serve(serve) = &mut scenario.stages[0] else {
+        panic!("stage 0 must serve");
+    };
+    // the fleet has 3 shards; asking for 5 is a typed plan error
+    serve.autoscale = Some(AutoscaleSpec {
+        policy: AutoscalePolicyKind::QueueDepth { high: 16, low: 2 },
+        min_shards: 1,
+        max_shards: 5,
+        initial: None,
+        interval_ms: 10.0,
+    });
+    let err = session().plan(&scenario).unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].autoscale.max_shards"),
+        "{err:?}"
+    );
+    // watermarks must be ordered
+    let StageSpec::Serve(serve) = &mut scenario.stages[0] else {
+        panic!("stage 0 must serve");
+    };
+    serve.autoscale = Some(AutoscaleSpec {
+        policy: AutoscalePolicyKind::QueueDepth { high: 4, low: 4 },
+        min_shards: 1,
+        max_shards: 3,
+        initial: None,
+        interval_ms: 10.0,
+    });
+    let err = session().plan(&scenario).unwrap_err();
+    assert!(
+        matches!(err, ApiError::ScenarioParse { ref field, .. }
+            if field == "stages[0].autoscale.low"),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn threaded_serve_stage_rejects_fleet_failures_and_autoscale() {
+    let base = ServeStage {
+        engine: ServeEngine::Threaded,
+        model: Some("dcgan".into()),
+        requests: 1,
+        time_scale: 0.0,
+        ..ServeStage::default()
+    };
+    let cases: Vec<(ServeStage, &str)> = vec![
+        (
+            ServeStage {
+                fleet: vec![FleetGroup {
+                    platform: "gpu".into(),
+                    count: 1,
+                    workers: None,
+                    idle_w: 0.0,
+                    cost_per_hour: 0.0,
+                }],
+                ..base.clone()
+            },
+            "stages[0].fleet",
+        ),
+        (
+            ServeStage {
+                failures: Some(FailureSpec { mtbf_ms: 10.0, mttr_ms: 1.0 }),
+                ..base.clone()
+            },
+            "stages[0].failures",
+        ),
+        (
+            ServeStage {
+                autoscale: Some(AutoscaleSpec {
+                    policy: AutoscalePolicyKind::TargetUtilization { target: 0.7 },
+                    min_shards: 1,
+                    max_shards: 1,
+                    initial: None,
+                    interval_ms: 10.0,
+                }),
+                ..base.clone()
+            },
+            "stages[0].autoscale",
+        ),
+    ];
+    for (stage, field) in cases {
+        let err = session()
+            .plan(&Scenario::single("bad", StageSpec::Serve(stage)))
+            .unwrap_err();
+        assert!(
+            matches!(err, ApiError::ScenarioParse { field: ref f, .. } if f == field),
+            "{field}: {err:?}"
+        );
+    }
+}
+
+#[test]
+fn all_shed_stage_reports_zero_mean_batch_not_nan() {
+    // a deadline no batch can meet: every closed-loop request is shed at
+    // admission, the makespan is zero, and the zero-batch / zero-makespan
+    // guards must keep the envelope finite (regression: mean_batch was
+    // 0/0 = NaN, availability 1 - x/0 = -inf)
+    let text = r#"{
+      "name": "all-shed",
+      "seed": 5,
+      "stages": [
+        {
+          "kind": "serve",
+          "name": "impossible",
+          "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+          "arrival": { "process": "closed-loop", "clients": 3, "per_client": 5 },
+          "shards": 2,
+          "deadline_ms": 1e-6
+        }
+      ]
+    }"#;
+    let scenario = Scenario::from_json(text).expect("parse");
+    let session = session();
+    let plan = session.plan(&scenario).expect("plan");
+    let outcome = session.run(&plan).expect("run");
+    let Outcome::Workload(w) = &outcome.stages[0].outcome else {
+        panic!("expected a virtual serve outcome");
+    };
+    assert_eq!(w.admitted, 0);
+    assert_eq!(w.shed, 15, "every request is shed exactly once");
+    assert_eq!(w.batches, 0);
+    assert_eq!(w.mean_batch, 0.0, "zero batches must report 0.0, not NaN");
+    assert_eq!(w.makespan_s, 0.0);
+    assert_eq!(w.throughput_rps, 0.0);
+    assert_eq!(w.availability, 1.0, "a zero makespan means no downtime");
+    let json = outcome.to_json();
+    assert!(
+        !json.contains("null"),
+        "no NaN/inf may leak into the envelope: {json}"
     );
 }
 
