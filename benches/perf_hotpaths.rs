@@ -115,6 +115,38 @@ fn main() {
     );
     metrics.push(("mapped_layers_per_s", mapped_layers_per_s));
 
+    // --- IR chain fusion: fused vs unfused job counts ------------------------
+    // The acceptance cell for `OptFlags::fuse`: on the skip-connection
+    // models the legality-proven fold must strictly shrink the job list
+    // (one job saved per residual/concat tail), and the saving is a
+    // deterministic integer — any drop in `fuse_jobs_saved` means a chain
+    // the fusion-legality analysis used to prove safe no longer is.
+    let mut fuse_jobs_saved = 0usize;
+    for m in [zoo::cyclegan(), zoo::srgan(), zoo::pix2pix()] {
+        let plain = map_model(&m, 1, &OptFlags::all()).len();
+        let fused = map_model(&m, 1, &OptFlags::fused()).len();
+        assert!(fused < plain, "{}: fuse must strictly reduce job count", m.name);
+        println!(
+            "fuse({:10})     {:>3} jobs -> {:>3}  ({:.0}% fewer)",
+            m.name,
+            plain,
+            fused,
+            100.0 * (plain - fused) as f64 / plain as f64
+        );
+        fuse_jobs_saved += plain - fused;
+    }
+    let (best, _) = time_it(1, 5, || {
+        for m in &models {
+            std::hint::black_box(map_model(m, 1, &OptFlags::fused()));
+        }
+    });
+    println!(
+        "map zoo (fused)      {} jobs saved, sweep in {:>10}",
+        fuse_jobs_saved,
+        ms(best)
+    );
+    metrics.push(("fuse_jobs_saved", fuse_jobs_saved as f64));
+
     // --- simulate: mapped vs full -------------------------------------------
     let cycle = zoo::cyclegan();
     let jobs = map_model(&cycle, 1, &OptFlags::all());

@@ -70,6 +70,14 @@ pub enum ApiError {
     /// A duration/window that is non-finite or non-positive (zero-duration
     /// stages can generate no traffic).
     InvalidDuration { field: String, seconds: f64 },
+    /// A referenced model failed plan-time static analysis: its layer list
+    /// does not lift to a verifiable dataflow IR
+    /// ([`crate::models::ir::Graph::verify`]). `reason` is the typed
+    /// [`crate::models::ir::IrError`] rendered (it names the op position).
+    InvalidModel { model: String, reason: String },
+    /// `photogan lint` found error-severity diagnostics; `errors` is how
+    /// many (the diagnostics themselves were already reported).
+    LintFailed { errors: usize },
     /// A command-line flag failed to parse (carried into the API layer so
     /// the CLI has a single error channel). An empty `flag` means the
     /// error is not attributable to one flag (e.g. a stray positional).
@@ -146,6 +154,12 @@ impl fmt::Display for ApiError {
                     "scenario field '{field}': duration must be finite and > 0 \
                      (got {seconds})"
                 )
+            }
+            ApiError::InvalidModel { model, reason } => {
+                write!(f, "model '{model}' failed static analysis: {reason}")
+            }
+            ApiError::LintFailed { errors } => {
+                write!(f, "lint found {errors} error(s)")
             }
             ApiError::InvalidFlag { flag, reason } if flag.is_empty() => {
                 write!(f, "invalid arguments: {reason}")
@@ -266,6 +280,8 @@ mod tests {
                 field: "stages[1].arrival.duration_s".into(),
                 seconds: 0.0,
             },
+            ApiError::InvalidModel { model: "bad".into(), reason: "op 3: cycle".into() },
+            ApiError::LintFailed { errors: 2 },
             ApiError::InvalidFlag { flag: "batch".into(), reason: "missing value".into() },
             ApiError::InvalidFlag { flag: String::new(), reason: "stray 'x'".into() },
             ApiError::ArtifactError("no artifacts".into()),
@@ -303,6 +319,12 @@ mod tests {
             ApiError::ScenarioIo { path: "x".into(), reason: "gone".into() }.exit_code(),
             1
         );
+        // static-analysis rejections are usage errors
+        assert_eq!(
+            ApiError::InvalidModel { model: "m".into(), reason: "r".into() }.exit_code(),
+            2
+        );
+        assert_eq!(ApiError::LintFailed { errors: 1 }.exit_code(), 2);
     }
 
     #[test]

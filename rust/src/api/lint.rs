@@ -1,0 +1,562 @@
+//! Plan-time static analysis: `photogan lint`.
+//!
+//! Lint runs everything `Session::plan` checks — without executing a
+//! single stage — and layers scenario-level diagnostics on top: IR
+//! verification for every referenced model ([`crate::models::ir`]),
+//! contradictory SLOs (a throughput floor above the offered arrival rate,
+//! an availability floor above the calibration ceiling), vacuous SLOs
+//! (`max_reject_frac >= 1`, an availability target with nothing that can
+//! take a shard down), unreachable traffic (a flash-crowd spike after the
+//! stage ends), shed-everything deadlines (below every mix model's
+//! batch-1 service floor), and duplicate stage names.
+//!
+//! Every [`Diagnostic`] is typed: a severity, a stable `code`, a JSON
+//! path (or `model:<name>` / IR op position) and a message. Errors make
+//! `photogan lint` exit nonzero ([`ApiError::LintFailed`]); warnings
+//! don't.
+
+use super::error::ApiError;
+use super::scenario::{Scenario, ServeStage, StageSpec};
+use super::session::Session;
+use crate::models::ir::{dead_ops, Graph};
+use crate::models::Model;
+use crate::util::json::{obj, JsonValue};
+use crate::workload::ArrivalProcess;
+use std::collections::HashSet;
+use std::fmt;
+
+/// Diagnostic severity: errors fail the lint, warnings don't.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One typed lint finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable machine-readable class, e.g. `ir-verify`,
+    /// `contradictory-slo`, `vacuous-slo`, `shed-everything`.
+    pub code: &'static str,
+    /// Where: a JSON path (`stages[1].slo.min_throughput_rps`) or a model
+    /// handle (`model:CycleGAN`). IR findings carry the op position inside
+    /// the message (the [`crate::models::ir::IrError`] rendering).
+    pub path: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] {}: {}", self.severity, self.code, self.path, self.message)
+    }
+}
+
+impl Diagnostic {
+    fn error(code: &'static str, path: impl Into<String>, message: impl Into<String>) -> Self {
+        Diagnostic { severity: Severity::Error, code, path: path.into(), message: message.into() }
+    }
+
+    fn warning(code: &'static str, path: impl Into<String>, message: impl Into<String>) -> Self {
+        Diagnostic {
+            severity: Severity::Warning,
+            code,
+            path: path.into(),
+            message: message.into(),
+        }
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("severity", JsonValue::Str(self.severity.name().into())),
+            ("code", JsonValue::Str(self.code.into())),
+            ("path", JsonValue::Str(self.path.clone())),
+            ("message", JsonValue::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// The outcome of one lint run: every diagnostic, errors first.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LintReport {
+    /// What was linted: a scenario name or `model:<name>`.
+    pub target: String,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// The CLI contract: `Ok(())` when clean (of errors), the typed
+    /// [`ApiError::LintFailed`] otherwise — exit code 2.
+    pub fn into_result(self) -> Result<LintReport, ApiError> {
+        if self.has_errors() {
+            Err(ApiError::LintFailed { errors: self.error_count() })
+        } else {
+            Ok(self)
+        }
+    }
+
+    /// Human rendering: one line per diagnostic plus a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{}: {} error(s), {} warning(s)\n",
+            self.target,
+            self.error_count(),
+            self.warning_count()
+        ));
+        out
+    }
+
+    pub fn json(&self) -> JsonValue {
+        obj(vec![
+            ("target", JsonValue::Str(self.target.clone())),
+            ("errors", JsonValue::Num(self.error_count() as f64)),
+            ("warnings", JsonValue::Num(self.warning_count() as f64)),
+            (
+                "diagnostics",
+                JsonValue::Arr(self.diagnostics.iter().map(Diagnostic::json).collect()),
+            ),
+        ])
+    }
+
+    fn sort(&mut self) {
+        // errors first, stable within each severity
+        self.diagnostics.sort_by_key(|d| match d.severity {
+            Severity::Error => 0,
+            Severity::Warning => 1,
+        });
+    }
+}
+
+/// The JSON path carried by a plan error, when it has one.
+fn error_path(e: &ApiError) -> String {
+    match e {
+        ApiError::ScenarioParse { field, .. }
+        | ApiError::InvalidMixWeight { field, .. }
+        | ApiError::InvalidRate { field, .. }
+        | ApiError::UnknownPlatform { field, .. }
+        | ApiError::InvalidDuration { field, .. } => field.clone(),
+        _ => "$".into(),
+    }
+}
+
+/// Mean offered request rate of an arrival process, when it is
+/// well-defined — the ceiling any throughput SLO must stay under.
+fn offered_rate_hz(a: &ArrivalProcess) -> Option<f64> {
+    match a {
+        ArrivalProcess::Poisson { rate_hz, .. } => Some(*rate_hz),
+        ArrivalProcess::Bursty { rate_hz, on_s, off_s, .. } => {
+            let cycle = on_s + off_s;
+            (cycle > 0.0).then(|| rate_hz * on_s / cycle)
+        }
+        // the envelope peak bounds everything the process can offer
+        ArrivalProcess::Diurnal { peak_hz, .. } => Some(*peak_hz),
+        ArrivalProcess::FlashCrowd { base_hz, spike_hz, .. } => Some(base_hz.max(*spike_hz)),
+        ArrivalProcess::Trace { arrivals_s } => {
+            let last = *arrivals_s.last()?;
+            (last > 0.0).then(|| arrivals_s.len() as f64 / last)
+        }
+        ArrivalProcess::ClosedLoop { .. } => None,
+    }
+}
+
+impl Session {
+    /// Verify one model's dataflow IR; the typed rejection feeds both
+    /// [`Session::plan`] and [`Session::lint_scenario`].
+    pub(crate) fn verify_model_ir(&self, model: &Model) -> Result<(), ApiError> {
+        let graph = Graph::from_model(model).map_err(|e| ApiError::InvalidModel {
+            model: model.name.clone(),
+            reason: e.to_string(),
+        })?;
+        graph.verify().map_err(|e| ApiError::InvalidModel {
+            model: model.name.clone(),
+            reason: e.to_string(),
+        })
+    }
+
+    /// Lint one registered model: IR verification plus dead-op warnings.
+    /// Unknown names are the usual typed [`ApiError::UnknownModel`].
+    pub fn lint_model(&self, name: &str) -> Result<LintReport, ApiError> {
+        let model = self.model(name)?;
+        let mut report =
+            LintReport { target: format!("model:{}", model.name), diagnostics: Vec::new() };
+        lint_model_into(model, &format!("model:{}", model.name), &mut report);
+        report.sort();
+        Ok(report)
+    }
+
+    /// Lint a scenario: everything [`Session::plan`] rejects becomes an
+    /// error diagnostic, plus the scenario-level analyses in the module
+    /// docs. Never executes a stage.
+    pub fn lint_scenario(&self, scenario: &Scenario) -> LintReport {
+        let mut report =
+            LintReport { target: scenario.name.clone(), diagnostics: Vec::new() };
+
+        if let Err(e) = self.plan(scenario) {
+            report
+                .diagnostics
+                .push(Diagnostic::error("plan", error_path(&e), e.to_string()));
+        }
+
+        let mut seen_names: HashSet<&str> = HashSet::new();
+        let mut linted_models: HashSet<String> = HashSet::new();
+        for (i, stage) in scenario.stages.iter().enumerate() {
+            let path = format!("stages[{i}]");
+            if !seen_names.insert(stage.name()) {
+                report.diagnostics.push(Diagnostic::warning(
+                    "duplicate-stage",
+                    format!("{path}.name"),
+                    format!(
+                        "stage name '{}' is reused — outcome rows become ambiguous",
+                        stage.name()
+                    ),
+                ));
+            }
+            let referenced: Vec<String> = match stage {
+                StageSpec::Simulate(s) if s.models.is_empty() => self.model_names(),
+                StageSpec::Simulate(s) => s.models.clone(),
+                StageSpec::Serve(s) => s.mix.iter().map(|(m, _)| m.clone()).collect(),
+                _ => Vec::new(),
+            };
+            for name in referenced {
+                // unknown names were already reported by the plan pass
+                let Ok(model) = self.model(&name) else { continue };
+                if linted_models.insert(model.name.clone()) {
+                    lint_model_into(model, &format!("model:{}", model.name), &mut report);
+                }
+            }
+            if let StageSpec::Serve(s) = stage {
+                self.lint_serve_stage(s, &path, &mut report);
+            }
+        }
+        report.sort();
+        report
+    }
+
+    fn lint_serve_stage(&self, s: &ServeStage, path: &str, report: &mut LintReport) {
+        let slo = &s.slo;
+        if let (Some(target), Some(arrival)) = (slo.min_throughput_rps, &s.arrival) {
+            if let Some(offered) = offered_rate_hz(arrival) {
+                if target > offered {
+                    report.diagnostics.push(Diagnostic::error(
+                        "contradictory-slo",
+                        format!("{path}.slo.min_throughput_rps"),
+                        format!(
+                            "throughput floor {target} rps exceeds the offered arrival \
+                             rate ({offered:.3} rps) — the SLO cannot pass"
+                        ),
+                    ));
+                }
+            }
+        }
+        if let Some(frac) = slo.max_reject_frac {
+            if frac >= 1.0 {
+                report.diagnostics.push(Diagnostic::warning(
+                    "vacuous-slo",
+                    format!("{path}.slo.max_reject_frac"),
+                    format!("a rejection budget of {frac} can never fail"),
+                ));
+            }
+        }
+        if let Some(avail) = slo.min_availability {
+            match &s.calibration {
+                Some(c) if c.interval_ms > 0.0 => {
+                    let ceiling = 1.0 - (c.outage_ms / c.interval_ms).min(1.0);
+                    if avail > ceiling {
+                        report.diagnostics.push(Diagnostic::error(
+                            "contradictory-slo",
+                            format!("{path}.slo.min_availability"),
+                            format!(
+                                "availability floor {avail} exceeds the calibration \
+                                 ceiling {ceiling:.4} ({} ms outage every {} ms)",
+                                c.outage_ms, c.interval_ms
+                            ),
+                        ));
+                    }
+                }
+                Some(_) => {}
+                None => {
+                    if s.failures.is_none() {
+                        report.diagnostics.push(Diagnostic::warning(
+                            "vacuous-slo",
+                            format!("{path}.slo.min_availability"),
+                            "no calibration or failure injection configured — \
+                             availability is identically 1",
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(ArrivalProcess::FlashCrowd { spike_at_s, duration_s, .. }) = &s.arrival {
+            if spike_at_s >= duration_s {
+                report.diagnostics.push(Diagnostic::warning(
+                    "unreachable-traffic",
+                    format!("{path}.arrival.spike_at_s"),
+                    format!(
+                        "the spike at {spike_at_s} s starts at or after the stage ends \
+                         ({duration_s} s) — it never happens"
+                    ),
+                ));
+            }
+        }
+        if let Some(deadline_ms) = s.deadline_ms {
+            // the batch-1 service time is the floor any admission deadline
+            // must clear; below every mix model's floor, everything sheds
+            let floors: Vec<(String, f64)> = s
+                .mix
+                .iter()
+                .filter_map(|(name, _)| self.model(name).ok())
+                .map(|m| {
+                    let r = self.sim_report(m, 1, s.opts);
+                    (m.name.clone(), r.latency * 1e3)
+                })
+                .collect();
+            if !floors.is_empty() && floors.iter().all(|(_, f)| deadline_ms < *f) {
+                let min = floors.iter().map(|(_, f)| *f).fold(f64::INFINITY, f64::min);
+                report.diagnostics.push(Diagnostic::error(
+                    "shed-everything",
+                    format!("{path}.deadline_ms"),
+                    format!(
+                        "deadline {deadline_ms} ms is below every mix model's batch-1 \
+                         service floor (fastest: {min:.4} ms) — every request sheds"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// IR-verify one model into the report: an error diagnostic on rejection,
+/// dead-op warnings on a verifiable graph.
+fn lint_model_into(model: &Model, path: &str, report: &mut LintReport) {
+    let graph = match Graph::from_model(model) {
+        Ok(g) => g,
+        Err(e) => {
+            report
+                .diagnostics
+                .push(Diagnostic::error("ir-verify", path.to_string(), e.to_string()));
+            return;
+        }
+    };
+    if let Err(e) = graph.verify() {
+        report
+            .diagnostics
+            .push(Diagnostic::error("ir-verify", path.to_string(), e.to_string()));
+        return;
+    }
+    for op in dead_ops(&graph) {
+        report.diagnostics.push(Diagnostic::warning(
+            "dead-op",
+            path.to_string(),
+            format!("op {op} (layer {}) computes a value nothing consumes", graph.ops[op].index),
+        ));
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn scenario(text: &str) -> Scenario {
+        Scenario::from_json(text).unwrap()
+    }
+
+    #[test]
+    fn shipped_style_scenarios_lint_clean() {
+        let s = Session::new().unwrap();
+        let sc = scenario(
+            r#"{ "name": "ok", "stages": [
+                 { "kind": "simulate", "models": ["dcgan"], "batch": 2 },
+                 { "kind": "serve",
+                   "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+                   "arrival": { "process": "poisson", "rate_hz": 100.0,
+                                "duration_s": 0.5 },
+                   "slo": { "min_throughput_rps": 50.0 } }
+               ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        assert!(!report.has_errors(), "{}", report.render());
+        assert_eq!(report.warning_count(), 0, "{}", report.render());
+        assert!(report.clone().into_result().is_ok());
+    }
+
+    #[test]
+    fn plan_failures_become_error_diagnostics() {
+        let s = Session::new().unwrap();
+        let sc = scenario(
+            r#"{ "name": "bad", "stages": [
+                 { "kind": "simulate", "models": ["gan5"] } ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        assert!(report.has_errors());
+        assert!(report.diagnostics.iter().any(|d| d.code == "plan"));
+        assert!(matches!(
+            report.into_result(),
+            Err(ApiError::LintFailed { errors }) if errors >= 1
+        ));
+    }
+
+    #[test]
+    fn contradictory_throughput_slo_is_an_error_with_json_path() {
+        let s = Session::new().unwrap();
+        let sc = scenario(
+            r#"{ "name": "slo", "stages": [
+                 { "kind": "serve",
+                   "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+                   "arrival": { "process": "poisson", "rate_hz": 10.0,
+                                "duration_s": 0.5 },
+                   "slo": { "min_throughput_rps": 100.0 } } ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        let d = report
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "contradictory-slo")
+            .expect("must flag the impossible throughput floor");
+        assert_eq!(d.severity, Severity::Error);
+        assert_eq!(d.path, "stages[0].slo.min_throughput_rps");
+    }
+
+    #[test]
+    fn availability_above_calibration_ceiling_is_contradictory() {
+        let s = Session::new().unwrap();
+        // 2 ms outage every 10 ms caps availability at 0.8
+        let sc = scenario(
+            r#"{ "name": "avail", "stages": [
+                 { "kind": "serve",
+                   "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+                   "arrival": { "process": "poisson", "rate_hz": 10.0,
+                                "duration_s": 0.5 },
+                   "calibration": { "interval_ms": 10.0, "outage_ms": 2.0 },
+                   "slo": { "min_availability": 0.95 } } ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "contradictory-slo"
+                && d.path == "stages[0].slo.min_availability"));
+    }
+
+    #[test]
+    fn vacuous_slos_and_unreachable_spikes_warn() {
+        let s = Session::new().unwrap();
+        let sc = scenario(
+            r#"{ "name": "warns", "stages": [
+                 { "kind": "serve",
+                   "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+                   "arrival": { "process": "flash-crowd", "base_hz": 10.0,
+                                "spike_hz": 50.0, "spike_at_s": 2.0,
+                                "spike_s": 0.1, "duration_s": 1.0 },
+                   "slo": { "max_reject_frac": 1.0, "min_availability": 0.9 } } ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        assert!(!report.has_errors(), "{}", report.render());
+        let codes: Vec<&str> = report.diagnostics.iter().map(|d| d.code).collect();
+        assert!(codes.contains(&"vacuous-slo"), "{codes:?}");
+        assert!(codes.contains(&"unreachable-traffic"), "{codes:?}");
+    }
+
+    #[test]
+    fn duplicate_stage_names_warn() {
+        let s = Session::new().unwrap();
+        let sc = scenario(
+            r#"{ "name": "dup", "stages": [
+                 { "kind": "simulate", "name": "x", "models": ["dcgan"] },
+                 { "kind": "compare", "name": "x" } ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        assert!(report.diagnostics.iter().any(|d| d.code == "duplicate-stage"));
+    }
+
+    #[test]
+    fn shed_everything_deadline_is_an_error() {
+        let s = Session::new().unwrap();
+        // 1 ns deadline: far below any model's batch-1 service time
+        let sc = scenario(
+            r#"{ "name": "shed", "stages": [
+                 { "kind": "serve",
+                   "mix": [ { "model": "dcgan", "weight": 1.0 } ],
+                   "arrival": { "process": "poisson", "rate_hz": 10.0,
+                                "duration_s": 0.5 },
+                   "deadline_ms": 0.000001 } ] }"#,
+        );
+        let report = s.lint_scenario(&sc);
+        assert!(report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == "shed-everything" && d.path == "stages[0].deadline_ms"));
+    }
+
+    #[test]
+    fn lint_model_verifies_registered_models() {
+        let s = Session::new().unwrap();
+        let report = s.lint_model("cyclegan").unwrap();
+        assert!(!report.has_errors());
+        assert!(matches!(s.lint_model("gan5"), Err(ApiError::UnknownModel { .. })));
+    }
+
+    #[test]
+    fn invalid_registered_model_fails_ir_lint_and_plan() {
+        use crate::models::layer::{Layer, Shape};
+        let mut s = Session::new().unwrap();
+        s.register_model(Model::new(
+            "Broken",
+            Shape::Vec(8),
+            vec![Layer::Dense { in_f: 9, out_f: 4, bias: false }],
+        ));
+        let report = s.lint_model("broken").unwrap();
+        assert!(report.has_errors());
+        assert!(report.diagnostics.iter().any(|d| d.code == "ir-verify"));
+        // the same rejection surfaces as a typed plan error
+        let sc = scenario(
+            r#"{ "name": "broken", "stages": [
+                 { "kind": "simulate", "models": ["broken"] } ] }"#,
+        );
+        let err = s.plan(&sc).unwrap_err();
+        assert!(matches!(err, ApiError::InvalidModel { ref model, .. } if model == "Broken"));
+        assert_eq!(err.exit_code(), 2);
+    }
+
+    #[test]
+    fn diagnostics_render_and_serialize() {
+        let d = Diagnostic::error("ir-verify", "model:X", "op 3: bad");
+        assert_eq!(d.to_string(), "error[ir-verify] model:X: op 3: bad");
+        let report = LintReport { target: "t".into(), diagnostics: vec![d] };
+        let json = report.json().render();
+        assert!(json.contains("\"ir-verify\""));
+        assert!(report.render().contains("1 error(s), 0 warning(s)"));
+    }
+}

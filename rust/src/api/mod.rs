@@ -67,6 +67,7 @@
 
 pub mod error;
 pub mod executor;
+pub mod lint;
 pub mod outcome;
 pub mod request;
 pub mod scenario;
@@ -75,6 +76,7 @@ pub mod session;
 
 pub use error::{ApiError, ApiResult};
 pub use executor::SimExecutor;
+pub use lint::{Diagnostic, LintReport, Severity};
 pub use outcome::{
     CompareOutcome, Outcome, PlatformSeries, ReportOutcome, ResourceRow, ServeOutcome,
     SimOutcome, SimRow, SweepOutcome, WorkloadOutcome,

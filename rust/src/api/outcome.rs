@@ -104,6 +104,7 @@ fn opts_json(opts: &OptFlags) -> JsonValue {
         ("pipelined", JsonValue::Bool(opts.pipelined)),
         ("power_gated", JsonValue::Bool(opts.power_gated)),
         ("overlap", JsonValue::Bool(opts.overlap)),
+        ("fuse", JsonValue::Bool(opts.fuse)),
     ])
 }
 

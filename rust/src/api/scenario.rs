@@ -598,11 +598,12 @@ fn parse_opts(v: &JsonValue, path: &str, default: OptFlags) -> Result<OptFlags, 
             "gating" | "power-gating" => Ok(OptFlags::power_gating_only()),
             "all" => Ok(OptFlags::all()),
             "overlapped" | "overlap" => Ok(OptFlags::overlapped()),
+            "fused" | "fuse" => Ok(OptFlags::fused()),
             other => Err(parse_err(
                 path,
                 format!(
                     "unknown opts preset '{other}' (expected baseline, sw, pipelined, \
-                     gating, all, or overlapped — or an object of booleans)"
+                     gating, all, overlapped, or fused — or an object of booleans)"
                 ),
             )),
         },
@@ -613,6 +614,7 @@ fn parse_opts(v: &JsonValue, path: &str, default: OptFlags) -> Result<OptFlags, 
                 pipelined: opt_bool_member(m, &path, "pipelined", base.pipelined)?,
                 power_gated: opt_bool_member(m, &path, "power_gated", base.power_gated)?,
                 overlap: opt_bool_member(m, &path, "overlap", base.overlap)?,
+                fuse: opt_bool_member(m, &path, "fuse", base.fuse)?,
             })
         }
         _ => Err(parse_err(path, "expected a preset name or an object of booleans")),
@@ -625,6 +627,7 @@ fn opts_json(opts: OptFlags) -> JsonValue {
         ("pipelined", JsonValue::Bool(opts.pipelined)),
         ("power_gated", JsonValue::Bool(opts.power_gated)),
         ("overlap", JsonValue::Bool(opts.overlap)),
+        ("fuse", JsonValue::Bool(opts.fuse)),
     ])
 }
 
@@ -1480,9 +1483,18 @@ impl Session {
             StageSpec::Simulate(s) => {
                 check_slo_applies(&s.slo, &["max_latency_ms", "min_gops"], path)?;
                 // resolve names against the registry now (canonical casing)
+                // and verify each referenced model's dataflow IR — an empty
+                // list means every registered model runs, so check them all
                 let mut resolved = Vec::with_capacity(s.models.len());
                 for name in &s.models {
-                    resolved.push(self.model(name)?.name.clone());
+                    let model = self.model(name)?;
+                    self.verify_model_ir(model)?;
+                    resolved.push(model.name.clone());
+                }
+                if s.models.is_empty() {
+                    for name in self.model_names() {
+                        self.verify_model_ir(self.model(&name)?)?;
+                    }
                 }
                 let mut builder = SimRequest::builder().batch(s.batch).opts(s.opts);
                 builder = match resolved.len() {
@@ -1560,7 +1572,9 @@ impl Session {
                 }
                 let mut resolved = Vec::with_capacity(s.mix.len());
                 for (model, weight) in &s.mix {
-                    resolved.push((self.model(model)?.name.clone(), *weight));
+                    let m = self.model(model)?;
+                    self.verify_model_ir(m)?;
+                    resolved.push((m.name.clone(), *weight));
                 }
                 // weight validation lives in TrafficMix::new (one rule
                 // set); its typed MixError maps onto the per-field ApiError

@@ -350,8 +350,9 @@ mod tests {
         let cached = s.sim_report(&m, 1, OptFlags::all());
         assert_eq!(s.mapping_cache_entries(), 1);
         // a same-named but structurally different model maps fresh (uncached)
-        let mut modified = m.clone();
-        modified.layers.truncate(2);
+        let mut trimmed = m.layers().to_vec();
+        trimmed.truncate(2);
+        let modified = Model::new(&m.name, m.input().clone(), trimmed);
         let fresh = s.sim_report(&modified, 1, OptFlags::all());
         assert_eq!(s.mapping_cache_entries(), 1, "foreign model must not touch the cache");
         assert!(

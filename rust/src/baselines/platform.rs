@@ -83,7 +83,7 @@ impl Platform {
         let infos = model.infos().expect("valid model");
         let mut latency = self.overhead_s;
         let mut total_ops = 0f64;
-        for info in &infos {
+        for info in infos {
             let ops = 2.0 * info.macs as f64 * batch as f64;
             if ops == 0.0 {
                 continue;

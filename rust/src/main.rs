@@ -84,6 +84,16 @@ const COMMANDS: &[CommandSpec] = &[
         json: true,
     },
     CommandSpec {
+        name: "lint",
+        summary: "plan-time static analysis: IR verification + scenario diagnostics",
+        flags: &[
+            "<scenario.json> | --model NAME   (exactly one)",
+            "checks: model dataflow IR, contradictory/vacuous SLOs,",
+            "unreachable traffic, shed-everything deadlines",
+        ],
+        json: true,
+    },
+    CommandSpec {
         name: "report",
         summary: "every paper table & figure in one pass",
         flags: &["--threads T"],
@@ -105,6 +115,7 @@ fn run(args: &[String]) -> i32 {
         "compare" => cmd_compare(rest),
         "serve" => cmd_serve(rest),
         "run" => cmd_run(rest),
+        "lint" => cmd_lint(rest),
         "report" => cmd_report(rest),
         "--version" | "-V" | "version" => {
             println!("photogan {}", env!("CARGO_PKG_VERSION"));
@@ -155,6 +166,7 @@ fn opt_flags(flags: &ParsedFlags) -> OptFlags {
         pipelined: !flags.has("no-pipeline"),
         power_gated: !flags.has("no-gating"),
         overlap: flags.has("overlap"),
+        fuse: flags.has("fuse"),
     }
 }
 
@@ -398,6 +410,52 @@ fn cmd_run(args: &[String]) -> Result<(), ApiError> {
         }
     }
     Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<(), ApiError> {
+    const SPEC: &[FlagDef] = &[value("model"), switch("json")];
+    // one optional positional (the scenario path) plus ordinary flags;
+    // the arg after `--model` is that flag's value, not the positional
+    let mut path: Option<String> = None;
+    let mut flag_args: Vec<String> = Vec::new();
+    for a in args {
+        let follows_model = flag_args.last().is_some_and(|f| f == "--model");
+        if a.starts_with("--") || follows_model {
+            flag_args.push(a.clone());
+        } else if path.is_none() {
+            path = Some(a.clone());
+        } else {
+            return Err(ApiError::InvalidFlag {
+                flag: String::new(),
+                reason: format!("unexpected extra argument '{a}' (one scenario file expected)"),
+            });
+        }
+    }
+    let flags = ParsedFlags::parse(&flag_args, SPEC)?;
+    let session = Session::new()?;
+    let report = match (path, flags.get("model")) {
+        (Some(_), Some(_)) | (None, None) => {
+            return Err(ApiError::InvalidFlag {
+                flag: String::new(),
+                reason: "usage: photogan lint <scenario.json> | --model NAME  [--json]".into(),
+            })
+        }
+        (None, Some(model)) => session.lint_model(model)?,
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(&path).map_err(|e| ApiError::ScenarioIo {
+                path: path.clone(),
+                reason: e.to_string(),
+            })?;
+            let scenario = Scenario::from_json(&text)?;
+            session.lint_scenario(&scenario)
+        }
+    };
+    if flags.has("json") {
+        println!("{}", report.json().render());
+    } else {
+        print!("{}", report.render());
+    }
+    report.into_result().map(|_| ())
 }
 
 fn cmd_report(args: &[String]) -> Result<(), ApiError> {

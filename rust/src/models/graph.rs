@@ -1,18 +1,35 @@
-//! Model graph: an ordered layer list with validated shape propagation.
+//! Model graph: an ordered layer list with validated, memoized shape
+//! propagation.
 
 use super::layer::{Layer, Shape, ShapeError, UpsampleMode};
 use crate::arch::norm::NormKind;
+use std::sync::OnceLock;
 
 /// A GAN model (generator or discriminator) as a validated layer sequence.
 ///
 /// `PartialEq` compares the full layer structure — the
 /// [`crate::api::Session`] mapping cache uses it to distinguish a
 /// registered model from a same-named modified clone.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `input` and `layers` are construction-immutable (read them through
+/// [`Model::input`] / [`Model::layers`]), which is what lets
+/// [`Model::infos`] memoize shape propagation without any invalidation
+/// story.
+#[derive(Debug, Clone)]
 pub struct Model {
     pub name: String,
-    pub input: Shape,
-    pub layers: Vec<Layer>,
+    input: Shape,
+    layers: Vec<Layer>,
+    /// Memoized shape propagation. `OnceLock` so `&self` callers share
+    /// one walk; cloning a model clones the cached result too.
+    memo: OnceLock<Result<Vec<LayerInfo>, ShapeError>>,
+}
+
+impl PartialEq for Model {
+    fn eq(&self, other: &Self) -> bool {
+        // the memo is derived state — identity is name + structure
+        self.name == other.name && self.input == other.input && self.layers == other.layers
+    }
 }
 
 /// Per-layer record from shape propagation.
@@ -28,11 +45,33 @@ pub struct LayerInfo {
 
 impl Model {
     pub fn new(name: &str, input: Shape, layers: Vec<Layer>) -> Self {
-        Model { name: name.to_string(), input, layers }
+        Model { name: name.to_string(), input, layers, memo: OnceLock::new() }
+    }
+
+    /// The model's input shape.
+    pub fn input(&self) -> &Shape {
+        &self.input
+    }
+
+    /// The ordered layer list.
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
     }
 
     /// Propagate shapes through all layers; errors pinpoint the bad layer.
-    pub fn infos(&self) -> Result<Vec<LayerInfo>, ShapeError> {
+    ///
+    /// Memoized: the first call walks the layers, every later call on the
+    /// same model returns the cached slice. `Model::output`/`params` and
+    /// the mapper loop used to re-run the full propagation per call,
+    /// making multi-model sweeps accidentally quadratic.
+    pub fn infos(&self) -> Result<&[LayerInfo], ShapeError> {
+        match self.memo.get_or_init(|| self.propagate()) {
+            Ok(infos) => Ok(infos),
+            Err(e) => Err(e.clone()),
+        }
+    }
+
+    fn propagate(&self) -> Result<Vec<LayerInfo>, ShapeError> {
         let mut shape = self.input.clone();
         let mut out = Vec::with_capacity(self.layers.len());
         for (i, l) in self.layers.iter().enumerate() {
@@ -52,7 +91,11 @@ impl Model {
 
     /// Output shape of the whole model.
     pub fn output(&self) -> Result<Shape, ShapeError> {
-        Ok(self.infos()?.last().map(|i| i.out_shape.clone()).unwrap_or(self.input.clone()))
+        Ok(self
+            .infos()?
+            .last()
+            .map(|i| i.out_shape.clone())
+            .unwrap_or_else(|| self.input.clone()))
     }
 
     /// Total trainable parameters, including 2·C per normalization layer
@@ -61,8 +104,8 @@ impl Model {
         let mut total = 0usize;
         for info in self.infos()? {
             total += info.layer.params();
-            if let Layer::Norm(kind) = info.layer {
-                if kind != NormKind::None {
+            if let Layer::Norm(kind) = &info.layer {
+                if *kind != NormKind::None {
                     if let Shape::Chw(c, _, _) = info.in_shape {
                         total += 2 * c;
                     } else {
@@ -126,6 +169,7 @@ impl Model {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::arch::activation::ActKind;
@@ -152,6 +196,31 @@ mod tests {
         let infos = m.infos().unwrap();
         assert_eq!(infos.len(), 6);
         assert_eq!(infos[3].out_shape, Shape::Chw(2, 4, 4));
+    }
+
+    #[test]
+    fn infos_are_memoized() {
+        let m = toy();
+        let first = m.infos().unwrap().as_ptr();
+        let second = m.infos().unwrap().as_ptr();
+        assert_eq!(first, second, "repeat calls must return the cached propagation");
+        // errors are memoized too
+        let bad = Model::new(
+            "bad",
+            Shape::Vec(8),
+            vec![Layer::Dense { in_f: 9, out_f: 4, bias: false }],
+        );
+        assert_eq!(bad.infos().unwrap_err(), bad.infos().unwrap_err());
+    }
+
+    #[test]
+    fn equality_ignores_the_memo() {
+        let a = toy();
+        let b = toy();
+        let _ = a.infos().unwrap(); // a is memoized, b is not
+        assert_eq!(a, b);
+        // a clone carries the cache but stays equal
+        assert_eq!(a.clone(), b);
     }
 
     #[test]

@@ -1,0 +1,793 @@
+//! SSA-style dataflow IR with a static verifier, pass framework, and
+//! fusion-legality analysis.
+//!
+//! [`Graph::from_model`] lifts a [`Model`]'s flat layer list into values
+//! and operations: every op names its operand value ids, which turns the
+//! positional skip conventions ([`Layer::ResidualAdd`]'s `span`,
+//! [`Layer::ConcatChw`]'s shape-matched source) into first-class dataflow
+//! edges. On top of that sit:
+//!
+//! - [`Graph::verify`] — well-formedness (def-before-use, single
+//!   assignment, acyclicity, operand arity, exactly one output) plus a
+//!   full shape re-inference of every op, with typed [`IrError`]s that
+//!   name the offending op position.
+//! - [`PassManager`] — runs transform [`Pass`]es and re-verifies the
+//!   graph (including shapes) after every one, so a buggy pass is caught
+//!   at the pass boundary instead of in the mapper.
+//! - [`DeadValueElimination`] — drops ops whose results can never reach
+//!   the output, compacting value ids.
+//! - [`fusion_groups`] — the legality analysis behind `OptFlags::fuse`:
+//!   proves an MVM-headed chain (conv → norm → activation → skip-add /
+//!   skip-concat) is single-consumer and side-effect-free so the mapper
+//!   ([`crate::sim::mapper`]) may collapse it into one fused MVM+ECU
+//!   `LayerJob`.
+//!
+//! The IR is the mapper's source of truth: `sim/mapper.rs` lowers from a
+//! verified graph, so every simulated model has passed these checks.
+
+use super::graph::Model;
+use super::layer::{Layer, Shape, ShapeError};
+
+/// An SSA value with its inferred shape. A value is defined exactly once —
+/// by one op's `out`, or by appearing in [`Graph::inputs`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    pub shape: Shape,
+}
+
+/// One operation: a [`Layer`] applied to operand values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    /// Flat layer index in the source [`Model`] — the stable diagnostic
+    /// handle (kept even after passes drop ops, so messages still point
+    /// into the model definition).
+    pub index: usize,
+    pub layer: Layer,
+    /// Operand value ids; `[0]` is the primary dataflow input. Skip
+    /// layers ([`Layer::ResidualAdd`], [`Layer::ConcatChw`]) carry their
+    /// skip source as an explicit second operand.
+    pub operands: Vec<usize>,
+    /// The value this op defines (single assignment).
+    pub out: usize,
+    /// Dense-equivalent workload MACs at batch 1.
+    pub dense_macs: usize,
+}
+
+impl Op {
+    /// Required operand count for this op's layer kind.
+    pub fn arity(layer: &Layer) -> usize {
+        match layer {
+            Layer::ResidualAdd { .. } | Layer::ConcatChw(_) => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// A dataflow graph: ops in execution order over a value table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub values: Vec<Value>,
+    pub ops: Vec<Op>,
+    /// Graph input value ids; `[0]` is the primary model input. Further
+    /// entries are synthesized skip sources (a skip whose producer is not
+    /// in the linear prefix).
+    pub inputs: Vec<usize>,
+    /// The single graph output value id.
+    pub output: usize,
+}
+
+/// Typed verifier diagnostic. Every op-scoped variant names the position
+/// of the offending op in [`Graph::ops`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum IrError {
+    /// The source layer list does not shape-propagate, so it cannot be
+    /// lifted into a graph at all.
+    Shape(ShapeError),
+    /// A declared graph input id is outside the value table.
+    BadInput { value: usize },
+    /// An op references a value id outside the value table.
+    DanglingValue { op: usize, value: usize },
+    /// An operand is never defined by any op (and is not an input).
+    UseBeforeDef { op: usize, value: usize },
+    /// An operand is defined by this op or a later one — the dependence
+    /// edges are not acyclic.
+    Cycle { op: usize, value: usize },
+    /// A value is assigned more than once (or shadows an input).
+    Redefined { op: usize, value: usize },
+    /// Wrong operand count for the op's layer kind.
+    MissingOperand { op: usize, expected: usize, got: usize },
+    /// Re-inference disagrees with a recorded shape.
+    ShapeMismatch { op: usize, expected: String, got: String },
+    /// Shape inference itself fails on the operand shapes.
+    InferenceFailed { op: usize, reason: String },
+    /// The graph output value does not exist or is never defined.
+    BadOutput { value: usize, reason: String },
+}
+
+impl std::fmt::Display for IrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IrError::Shape(e) => write!(f, "{e}"),
+            IrError::BadInput { value } => {
+                write!(f, "graph input references missing value v{value}")
+            }
+            IrError::DanglingValue { op, value } => {
+                write!(f, "op {op}: references dangling value v{value}")
+            }
+            IrError::UseBeforeDef { op, value } => {
+                write!(f, "op {op}: value v{value} is used but never defined")
+            }
+            IrError::Cycle { op, value } => {
+                write!(f, "op {op}: operand v{value} is defined by a later op (cycle)")
+            }
+            IrError::Redefined { op, value } => {
+                write!(f, "op {op}: value v{value} assigned more than once")
+            }
+            IrError::MissingOperand { op, expected, got } => {
+                write!(f, "op {op}: expects {expected} operand(s), got {got}")
+            }
+            IrError::ShapeMismatch { op, expected, got } => {
+                write!(f, "op {op}: shape mismatch (expected {expected}, got {got})")
+            }
+            IrError::InferenceFailed { op, reason } => {
+                write!(f, "op {op}: shape inference failed: {reason}")
+            }
+            IrError::BadOutput { value, reason } => {
+                write!(f, "graph output v{value}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IrError {}
+
+impl From<ShapeError> for IrError {
+    fn from(e: ShapeError) -> Self {
+        IrError::Shape(e)
+    }
+}
+
+impl Graph {
+    /// Lift a flat layer list into dataflow form.
+    ///
+    /// Ops are created 1:1 with layers (op `i` keeps layer index `i`);
+    /// value 0 is the primary input. Skip operands become explicit:
+    /// `ResidualAdd { span }` names the value that entered layer
+    /// `i − span` (the residual body's input), and `ConcatChw(extra)`
+    /// names the **earliest** value of shape `Chw(extra, h, w)` — the
+    /// encoder-side feature a U-Net decoder stage concatenates. A skip
+    /// with no in-graph producer (degenerate span, no shape match)
+    /// synthesizes an auxiliary graph input instead of failing, so the
+    /// verifier — not the lifter — owns rejection.
+    pub fn from_model(model: &Model) -> Result<Graph, IrError> {
+        let infos = model.infos()?;
+        let mut values = vec![Value { shape: model.input().clone() }];
+        let mut inputs = vec![0usize];
+        let mut ops: Vec<Op> = Vec::with_capacity(infos.len());
+        // primary-input value id of each op, for span-addressed skips
+        let mut op_in: Vec<usize> = Vec::with_capacity(infos.len());
+        let mut cur = 0usize;
+        for info in infos {
+            let mut operands = vec![cur];
+            match &info.layer {
+                Layer::ResidualAdd { span } => {
+                    let skip = if *span >= 1 && *span <= info.index {
+                        op_in[info.index - span]
+                    } else {
+                        let id = values.len();
+                        values.push(Value { shape: info.in_shape.clone() });
+                        inputs.push(id);
+                        id
+                    };
+                    operands.push(skip);
+                }
+                Layer::ConcatChw(extra) => {
+                    let want = match info.in_shape {
+                        Shape::Chw(_, h, w) => Shape::Chw(*extra, h, w),
+                        // a Vec input is ill-formed; verify reports it
+                        Shape::Vec(_) => Shape::Vec(*extra),
+                    };
+                    let skip = match values.iter().position(|v| v.shape == want) {
+                        Some(id) => id,
+                        None => {
+                            let id = values.len();
+                            values.push(Value { shape: want });
+                            inputs.push(id);
+                            id
+                        }
+                    };
+                    operands.push(skip);
+                }
+                _ => {}
+            }
+            let out = values.len();
+            values.push(Value { shape: info.out_shape.clone() });
+            op_in.push(cur);
+            ops.push(Op {
+                index: info.index,
+                layer: info.layer.clone(),
+                operands,
+                out,
+                dense_macs: info.macs,
+            });
+            cur = out;
+        }
+        Ok(Graph { name: model.name.clone(), values, ops, inputs, output: cur })
+    }
+
+    /// Static verification: well-formedness plus full shape re-inference.
+    ///
+    /// Checks, in order: inputs exist; single assignment (no op redefines
+    /// a value or shadows an input); operand arity per layer kind; every
+    /// operand exists and is defined by an **earlier** op or an input
+    /// (def-before-use ⇒ the dependence edges are acyclic); every op's
+    /// recorded output shape equals what [`Layer::out_shape`] re-infers
+    /// from the operand shapes (skip operands are shape-checked too); the
+    /// single graph output exists and is defined.
+    pub fn verify(&self) -> Result<(), IrError> {
+        let n = self.values.len();
+        let mut is_input = vec![false; n];
+        for &id in &self.inputs {
+            if id >= n {
+                return Err(IrError::BadInput { value: id });
+            }
+            is_input[id] = true;
+        }
+        // single assignment, with the full def map built up front so a
+        // use of a later def is reported as a cycle, not a missing def
+        let mut def: Vec<Option<usize>> = vec![None; n];
+        for (pos, op) in self.ops.iter().enumerate() {
+            if op.out >= n {
+                return Err(IrError::DanglingValue { op: pos, value: op.out });
+            }
+            if is_input[op.out] || def[op.out].is_some() {
+                return Err(IrError::Redefined { op: pos, value: op.out });
+            }
+            def[op.out] = Some(pos);
+        }
+        for (pos, op) in self.ops.iter().enumerate() {
+            let expected = Op::arity(&op.layer);
+            if op.operands.len() != expected {
+                return Err(IrError::MissingOperand {
+                    op: pos,
+                    expected,
+                    got: op.operands.len(),
+                });
+            }
+            for &v in &op.operands {
+                if v >= n {
+                    return Err(IrError::DanglingValue { op: pos, value: v });
+                }
+                if is_input[v] {
+                    continue;
+                }
+                match def[v] {
+                    None => return Err(IrError::UseBeforeDef { op: pos, value: v }),
+                    Some(d) if d >= pos => {
+                        return Err(IrError::Cycle { op: pos, value: v })
+                    }
+                    _ => {}
+                }
+            }
+            // ---- shape re-inference --------------------------------
+            let in_shape = &self.values[op.operands[0]].shape;
+            let inferred = op
+                .layer
+                .out_shape(in_shape, op.index)
+                .map_err(|e| IrError::InferenceFailed { op: pos, reason: e.to_string() })?;
+            match &op.layer {
+                Layer::ResidualAdd { .. } => {
+                    let skip = &self.values[op.operands[1]].shape;
+                    if skip != in_shape {
+                        return Err(IrError::ShapeMismatch {
+                            op: pos,
+                            expected: format!("{in_shape:?}"),
+                            got: format!("{skip:?}"),
+                        });
+                    }
+                }
+                Layer::ConcatChw(extra) => {
+                    if let Shape::Chw(_, h, w) = *in_shape {
+                        let want = Shape::Chw(*extra, h, w);
+                        let skip = &self.values[op.operands[1]].shape;
+                        if *skip != want {
+                            return Err(IrError::ShapeMismatch {
+                                op: pos,
+                                expected: format!("{want:?}"),
+                                got: format!("{skip:?}"),
+                            });
+                        }
+                    }
+                }
+                _ => {}
+            }
+            let recorded = &self.values[op.out].shape;
+            if *recorded != inferred {
+                return Err(IrError::ShapeMismatch {
+                    op: pos,
+                    expected: format!("{inferred:?}"),
+                    got: format!("{recorded:?}"),
+                });
+            }
+        }
+        if self.output >= n {
+            return Err(IrError::BadOutput {
+                value: self.output,
+                reason: "output value does not exist".into(),
+            });
+        }
+        if !is_input[self.output] && def[self.output].is_none() {
+            return Err(IrError::BadOutput {
+                value: self.output,
+                reason: "output value is never defined".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------------------
+// Pass framework.
+// ------------------------------------------------------------------------
+
+/// A graph-to-graph transform. Passes may assume the graph verifies on
+/// entry ([`PassManager`] guarantees it) and must leave it verifiable.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    /// Transform the graph in place; return whether anything changed.
+    fn run(&self, g: &mut Graph) -> bool;
+}
+
+/// Runs passes in order, re-verifying the graph — well-formedness *and*
+/// shape consistency — after every one, so a pass that breaks an
+/// invariant is caught at its own boundary.
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        PassManager { passes: Vec::new() }
+    }
+
+    /// The standard cleanup pipeline: dead-value elimination.
+    pub fn standard() -> Self {
+        PassManager::new().with(Box::new(DeadValueElimination))
+    }
+
+    pub fn with(mut self, pass: Box<dyn Pass>) -> Self {
+        self.passes.push(pass);
+        self
+    }
+
+    /// Verify, run every pass (re-verifying after each), and report which
+    /// passes changed the graph.
+    pub fn run(&self, g: &mut Graph) -> Result<Vec<&'static str>, IrError> {
+        g.verify()?;
+        let mut applied = Vec::new();
+        for pass in &self.passes {
+            if pass.run(g) {
+                applied.push(pass.name());
+            }
+            g.verify()?;
+        }
+        Ok(applied)
+    }
+}
+
+/// Removes ops whose results can never reach the graph output, then
+/// compacts the value table. Declared graph inputs are always kept (they
+/// are the graph's interface), as is the output.
+pub struct DeadValueElimination;
+
+impl Pass for DeadValueElimination {
+    fn name(&self) -> &'static str {
+        "dead-value-elimination"
+    }
+
+    fn run(&self, g: &mut Graph) -> bool {
+        let n = g.values.len();
+        let mut live = vec![false; n];
+        live[g.output] = true;
+        let mut keep = vec![false; g.ops.len()];
+        for (pos, op) in g.ops.iter().enumerate().rev() {
+            if live[op.out] {
+                keep[pos] = true;
+                for &v in &op.operands {
+                    live[v] = true;
+                }
+            }
+        }
+        for &id in &g.inputs {
+            live[id] = true;
+        }
+        if keep.iter().all(|&k| k) && live.iter().all(|&l| l) {
+            return false;
+        }
+        let mut remap = vec![usize::MAX; n];
+        let mut values = Vec::new();
+        for (id, v) in g.values.iter().enumerate() {
+            if live[id] {
+                remap[id] = values.len();
+                values.push(v.clone());
+            }
+        }
+        g.ops = g
+            .ops
+            .iter()
+            .zip(&keep)
+            .filter(|(_, &k)| k)
+            .map(|(op, _)| Op {
+                index: op.index,
+                layer: op.layer.clone(),
+                operands: op.operands.iter().map(|&v| remap[v]).collect(),
+                out: remap[op.out],
+                dense_macs: op.dense_macs,
+            })
+            .collect();
+        for id in &mut g.inputs {
+            *id = remap[*id];
+        }
+        g.output = remap[g.output];
+        g.values = values;
+        true
+    }
+}
+
+// ------------------------------------------------------------------------
+// Fusion-legality analysis.
+// ------------------------------------------------------------------------
+
+/// A maximal fusable chain: an MVM-headed op (`Dense`/`Conv2d`/`ConvT2d`)
+/// plus the consecutive elementwise tail proven safe to collapse into it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionGroup {
+    /// Position in [`Graph::ops`] of the MVM head.
+    pub head: usize,
+    /// Consecutive tail op positions (norm / activation / skip-add /
+    /// skip-concat) legal to fold into the head.
+    pub tail: Vec<usize>,
+}
+
+/// Prove which chains may fuse. A tail op is admitted only when:
+///
+/// - its kind is side-effect-free elementwise or data movement
+///   (`Norm`, `Act`, `ResidualAdd`, `ConcatChw`);
+/// - its primary operand is the chain's current result and that value has
+///   **exactly one consumer** (this op) and is not the graph output — so
+///   collapsing it is invisible to the rest of the graph;
+/// - every skip operand is defined **before the head** (or is a graph
+///   input), so folding cannot reorder a definition past its use.
+///
+/// Every MVM-headed op yields a group (possibly with an empty tail);
+/// groups never overlap.
+pub fn fusion_groups(g: &Graph) -> Vec<FusionGroup> {
+    let n = g.values.len();
+    let mut is_input = vec![false; n];
+    for &id in &g.inputs {
+        if id < n {
+            is_input[id] = true;
+        }
+    }
+    let mut def = vec![None; n];
+    let mut consumers = vec![0usize; n];
+    for (pos, op) in g.ops.iter().enumerate() {
+        if op.out < n {
+            def[op.out] = Some(pos);
+        }
+        for &v in &op.operands {
+            if v < n {
+                consumers[v] += 1;
+            }
+        }
+    }
+    if g.output < n {
+        consumers[g.output] += 1;
+    }
+
+    let mut groups = Vec::new();
+    let mut pos = 0usize;
+    while pos < g.ops.len() {
+        let headed = matches!(
+            g.ops[pos].layer,
+            Layer::Dense { .. } | Layer::Conv2d { .. } | Layer::ConvT2d { .. }
+        );
+        if !headed {
+            pos += 1;
+            continue;
+        }
+        let head = pos;
+        let mut tail = Vec::new();
+        let mut cur = g.ops[head].out;
+        let mut j = head + 1;
+        while j < g.ops.len() {
+            let op = &g.ops[j];
+            let fusable = matches!(
+                op.layer,
+                Layer::Norm(_) | Layer::Act(_) | Layer::ResidualAdd { .. } | Layer::ConcatChw(_)
+            );
+            if !fusable
+                || op.operands.first() != Some(&cur)
+                || cur >= n
+                || consumers[cur] != 1
+            {
+                break;
+            }
+            let side_ok = op.operands[1..].iter().all(|&v| {
+                v < n
+                    && match def[v] {
+                        Some(d) => d < head,
+                        None => is_input[v],
+                    }
+            });
+            if !side_ok {
+                break;
+            }
+            tail.push(j);
+            cur = op.out;
+            j += 1;
+        }
+        groups.push(FusionGroup { head, tail });
+        pos = j.max(head + 1);
+    }
+    groups
+}
+
+/// Op positions whose result has no consumer and is not the graph output
+/// — the first wave [`DeadValueElimination`] would drop. Exposed for
+/// `photogan lint` diagnostics.
+pub fn dead_ops(g: &Graph) -> Vec<usize> {
+    let n = g.values.len();
+    let mut consumers = vec![0usize; n];
+    for op in &g.ops {
+        for &v in &op.operands {
+            if v < n {
+                consumers[v] += 1;
+            }
+        }
+    }
+    g.ops
+        .iter()
+        .enumerate()
+        .filter(|(_, op)| op.out < n && op.out != g.output && consumers[op.out] == 0)
+        .map(|(pos, _)| pos)
+        .collect()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::arch::activation::ActKind;
+    use crate::arch::norm::NormKind;
+    use crate::models::zoo;
+
+    fn residual_toy() -> Model {
+        Model::new(
+            "res-toy",
+            Shape::Chw(4, 8, 8),
+            vec![
+                Layer::Conv2d { in_ch: 4, out_ch: 4, k: 3, s: 1, p: 1, bias: false },
+                Layer::Norm(NormKind::Batch),
+                Layer::Act(ActKind::Relu),
+                Layer::Conv2d { in_ch: 4, out_ch: 4, k: 3, s: 1, p: 1, bias: false },
+                Layer::Norm(NormKind::Batch),
+                Layer::ResidualAdd { span: 5 },
+            ],
+        )
+    }
+
+    #[test]
+    fn from_model_verifies_for_the_whole_zoo() {
+        for m in zoo::extended_generators() {
+            let g = Graph::from_model(&m).unwrap();
+            assert_eq!(g.ops.len(), m.layers().len(), "{}: ops are 1:1 with layers", m.name);
+            g.verify().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            // the graph output is the last op's value
+            assert_eq!(g.output, g.ops.last().unwrap().out);
+            // no dead ops in a linear model lift
+            assert!(dead_ops(&g).is_empty(), "{}: unexpected dead ops", m.name);
+        }
+    }
+
+    #[test]
+    fn residual_skip_is_the_block_input() {
+        let g = Graph::from_model(&residual_toy()).unwrap();
+        let res = g.ops.last().unwrap();
+        assert!(matches!(res.layer, Layer::ResidualAdd { .. }));
+        assert_eq!(res.operands.len(), 2);
+        // span 5 from layer 5 → the value entering layer 0: the graph input
+        assert_eq!(res.operands[1], 0);
+    }
+
+    #[test]
+    fn concat_skip_picks_the_earliest_shape_match() {
+        let g = Graph::from_model(&zoo::pix2pix()).unwrap();
+        g.verify().unwrap();
+        for op in g.ops.iter().filter(|o| matches!(o.layer, Layer::ConcatChw(_))) {
+            assert_eq!(op.operands.len(), 2, "concat must carry its skip operand");
+            let skip = op.operands[1];
+            let primary = op.operands[0];
+            // the skip is a real in-graph value produced earlier, not a
+            // synthesized auxiliary input
+            assert!(!g.inputs.contains(&skip) || skip == 0);
+            if let (Shape::Chw(_, h, w), Shape::Chw(_, sh, sw)) =
+                (&g.values[primary].shape, &g.values[skip].shape)
+            {
+                assert_eq!((h, w), (sh, sw), "skip resolution must match the trunk");
+            } else {
+                panic!("concat operands must be Chw");
+            }
+        }
+    }
+
+    #[test]
+    fn verifier_rejects_use_before_def() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        // a value that exists but nothing defines
+        let ghost = g.values.len();
+        g.values.push(Value { shape: Shape::Chw(4, 8, 8) });
+        g.ops[3].operands[0] = ghost;
+        assert_eq!(g.verify(), Err(IrError::UseBeforeDef { op: 3, value: ghost }));
+        assert!(format!("{}", g.verify().unwrap_err()).contains("op 3"));
+    }
+
+    #[test]
+    fn verifier_rejects_cycles() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        // op 1 consuming op 3's result is a forward (cyclic) edge
+        let later = g.ops[3].out;
+        g.ops[1].operands[0] = later;
+        assert_eq!(g.verify(), Err(IrError::Cycle { op: 1, value: later }));
+    }
+
+    #[test]
+    fn verifier_rejects_dangling_values() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        g.ops[2].operands[0] = 999;
+        assert_eq!(g.verify(), Err(IrError::DanglingValue { op: 2, value: 999 }));
+    }
+
+    #[test]
+    fn verifier_rejects_double_assignment() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        let prior = g.ops[0].out;
+        g.ops[4].out = prior;
+        assert_eq!(g.verify(), Err(IrError::Redefined { op: 4, value: prior }));
+    }
+
+    #[test]
+    fn verifier_rejects_shape_mismatches() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        let out = g.ops[3].out;
+        g.values[out].shape = Shape::Chw(4, 9, 9);
+        assert!(matches!(g.verify(), Err(IrError::ShapeMismatch { op: 3, .. })));
+        // and a skip operand with the wrong shape is caught too
+        let mut g2 = Graph::from_model(&residual_toy()).unwrap();
+        let ghost = g2.values.len();
+        g2.values.push(Value { shape: Shape::Chw(2, 8, 8) });
+        g2.inputs.push(ghost);
+        let last = g2.ops.len() - 1;
+        g2.ops[last].operands[1] = ghost;
+        assert!(matches!(g2.verify(), Err(IrError::ShapeMismatch { op, .. }) if op == last));
+    }
+
+    #[test]
+    fn verifier_rejects_missing_operands_and_bad_output() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        let last = g.ops.len() - 1;
+        g.ops[last].operands.pop();
+        assert_eq!(
+            g.verify(),
+            Err(IrError::MissingOperand { op: last, expected: 2, got: 1 })
+        );
+        let mut g2 = Graph::from_model(&residual_toy()).unwrap();
+        g2.output = 999;
+        assert!(matches!(g2.verify(), Err(IrError::BadOutput { value: 999, .. })));
+    }
+
+    #[test]
+    fn dead_value_elimination_drops_unreachable_ops() {
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        // graft a dead branch: an act on the stem that nothing consumes
+        let dead_out = g.values.len();
+        g.values.push(Value { shape: Shape::Chw(4, 8, 8) });
+        g.ops.push(Op {
+            index: 6,
+            layer: Layer::Act(ActKind::Tanh),
+            operands: vec![g.ops[0].out],
+            out: dead_out,
+            dense_macs: 0,
+        });
+        // keep the original output: the grafted op is dead by construction
+        g.output = g.ops[g.ops.len() - 2].out;
+        g.verify().unwrap();
+        assert_eq!(dead_ops(&g), vec![g.ops.len() - 1]);
+        let before = (g.ops.len(), g.values.len());
+        let applied = PassManager::standard().run(&mut g).unwrap();
+        assert_eq!(applied, vec!["dead-value-elimination"]);
+        assert_eq!(g.ops.len(), before.0 - 1);
+        assert!(g.values.len() < before.1);
+        g.verify().unwrap();
+        assert!(dead_ops(&g).is_empty());
+        // a second run is a no-op
+        assert!(PassManager::standard().run(&mut g).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pass_manager_rechecks_after_every_pass() {
+        struct Breaker;
+        impl Pass for Breaker {
+            fn name(&self) -> &'static str {
+                "breaker"
+            }
+            fn run(&self, g: &mut Graph) -> bool {
+                g.values[g.output].shape = Shape::Vec(1);
+                true
+            }
+        }
+        let mut g = Graph::from_model(&residual_toy()).unwrap();
+        let err = PassManager::new().with(Box::new(Breaker)).run(&mut g).unwrap_err();
+        assert!(matches!(err, IrError::ShapeMismatch { .. }));
+    }
+
+    #[test]
+    fn fusion_groups_prove_residual_blocks_fusable() {
+        let g = Graph::from_model(&residual_toy()).unwrap();
+        let groups = fusion_groups(&g);
+        // head conv 0 absorbs norm+act; head conv 3 absorbs norm+residual
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], FusionGroup { head: 0, tail: vec![1, 2] });
+        assert_eq!(groups[1], FusionGroup { head: 3, tail: vec![4, 5] });
+    }
+
+    #[test]
+    fn fusion_stops_at_multi_consumer_values() {
+        // cyclegan residual bodies are fusable; the block *inputs* have two
+        // consumers (next conv + the skip) and must never appear in a tail
+        let g = Graph::from_model(&zoo::cyclegan()).unwrap();
+        let groups = fusion_groups(&g);
+        let fused_residuals = groups
+            .iter()
+            .flat_map(|grp| &grp.tail)
+            .filter(|&&p| matches!(g.ops[p].layer, Layer::ResidualAdd { .. }))
+            .count();
+        assert_eq!(fused_residuals, 9, "all nine residual adds must prove fusable");
+        // no op position appears in two groups
+        let mut seen = std::collections::HashSet::new();
+        for grp in &groups {
+            assert!(seen.insert(grp.head));
+            for &t in &grp.tail {
+                assert!(seen.insert(t));
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_requires_skips_defined_before_the_head() {
+        let g = Graph::from_model(&zoo::pix2pix()).unwrap();
+        let groups = fusion_groups(&g);
+        let fused_concats: Vec<usize> = groups
+            .iter()
+            .flat_map(|grp| grp.tail.iter().copied())
+            .filter(|&p| matches!(g.ops[p].layer, Layer::ConcatChw(_)))
+            .collect();
+        assert_eq!(fused_concats.len(), 7, "all seven U-Net concats must prove fusable");
+        for p in fused_concats {
+            let skip = g.ops[p].operands[1];
+            // the skip producer sits strictly before the chain head
+            let def = g.ops.iter().position(|o| o.out == skip);
+            let head = groups
+                .iter()
+                .find(|grp| grp.tail.contains(&p))
+                .map(|grp| grp.head)
+                .unwrap();
+            match def {
+                Some(d) => assert!(d < head),
+                None => assert!(g.inputs.contains(&skip)),
+            }
+        }
+    }
+}

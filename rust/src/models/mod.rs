@@ -10,12 +10,26 @@
 //! not weights. The functional path — actual inference with weights — lives
 //! in the JAX layer (`python/compile/models/`) and is executed through
 //! `crate::runtime` (present only with the `pjrt` feature).
+//!
+//! [`ir`] lifts the flat layer list into an SSA-style dataflow graph
+//! (explicit skip-connection operands, static verifier, pass framework,
+//! fusion-legality analysis) — the form `sim/mapper.rs` lowers from.
+
+// Same error-handling contract as `api/`/`coordinator/`/`workload/`: no
+// unwraps or expects in production paths; invariants that genuinely cannot
+// fail are documented `panic!`s. Tests opt back in via `#[allow]`.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod graph;
+pub mod ir;
 pub mod layer;
 pub mod zoo;
 
-pub use graph::Model;
+pub use graph::{LayerInfo, Model};
+pub use ir::{
+    dead_ops, fusion_groups, DeadValueElimination, FusionGroup, Graph, IrError, Op, Pass,
+    PassManager, Value,
+};
 pub use layer::{Layer, Shape, UpsampleMode};
 pub use zoo::{
     all_generators, artgan, condgan, cyclegan, dcgan, extended_generators, pix2pix, progan,

@@ -412,6 +412,7 @@ pub const EXTENDED_PARAMS: [(&str, f64); 4] = [
 ];
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -489,9 +490,9 @@ mod tests {
         // upsample + conv (StyleGAN2/ProGAN) — the workload breadth the
         // GANAX-style generalization is about
         assert!(pix2pix().tconv_mac_fraction().unwrap() > 0.25);
-        assert!(pix2pix().layers.iter().any(|l| matches!(l, Layer::ConcatChw(_))));
+        assert!(pix2pix().layers().iter().any(|l| matches!(l, Layer::ConcatChw(_))));
         assert!(srgan()
-            .layers
+            .layers()
             .iter()
             .any(|l| matches!(l, Layer::Upsample2d { mode: UpsampleMode::PixelShuffle, .. })));
         // pixel shuffle leaves nothing for either sparse census

@@ -133,6 +133,7 @@ pub fn simulate_default(model: &Model, acc: &Accelerator) -> SimReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::arch::config::ArchConfig;
@@ -165,7 +166,7 @@ mod tests {
                 &m,
                 &acc,
                 1,
-                OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
+                OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false, fuse: false },
             );
             assert!(
                 sparse.gops() > 1.2 * dense.gops(),
@@ -188,7 +189,7 @@ mod tests {
             &zoo::srgan(),
             &acc,
             1,
-            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
+            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false, fuse: false },
         );
         assert_eq!(a.latency, b.latency);
         assert_eq!(a.energy.total(), b.energy.total());
@@ -254,7 +255,7 @@ mod tests {
             &m,
             &acc,
             1,
-            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
+            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false, fuse: false },
         );
         assert!(
             sparse.gops() > 1.5 * dense.gops(),
@@ -398,6 +399,7 @@ mod tests {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod debug_tests {
     use super::*;
     use crate::arch::config::ArchConfig;
@@ -420,6 +422,7 @@ mod debug_tests {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod calib_tests {
     use super::*;
     use crate::arch::config::ArchConfig;
@@ -446,6 +449,7 @@ mod calib_tests {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod invariant_tests {
     use super::*;
     use crate::arch::config::ArchConfig;
@@ -570,7 +574,7 @@ mod invariant_tests {
             &m,
             &acc,
             1,
-            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false },
+            OptFlags { sparse: true, pipelined: true, power_gated: false, overlap: false, fuse: false },
         );
         assert!(gated.avg_power() < ungated.avg_power());
     }

@@ -1,13 +1,24 @@
 //! Layer → MVM-job mapping (the ECU's "mapping matrices to the photonic
-//! domain" role, paper Fig. 4).
+//! domain" role, paper Fig. 4), lowering from the **verified dataflow IR**.
+//!
+//! [`map_model`] lifts the model through [`Graph::from_model`], runs the
+//! static verifier, and only then emits jobs — so every simulated model has
+//! passed def-before-use, single-assignment, acyclicity and full shape
+//! re-inference checks. With [`OptFlags::fuse`] the lowering additionally
+//! consults [`fusion_groups`] and collapses legality-proven skip-add /
+//! skip-concat tail ops into their MVM-headed chain's job: strictly fewer
+//! jobs, identical analytic energy and latency (the folded ops were
+//! zero-latency ECU terms, charged additively per job).
 
 use crate::arch::activation::ActKind;
 use crate::arch::norm::NormKind;
 use crate::arch::unit::BlockKind;
+use crate::models::ir::{fusion_groups, Graph, IrError};
 use crate::models::layer::{Layer, Shape, UpsampleMode};
 use crate::models::Model;
 use crate::sim::options::OptFlags;
 use crate::sparse::{TconvSpec, UpconvSpec};
+use std::collections::HashSet;
 
 /// One matrix-vector-multiply workload mapped onto a block.
 #[derive(Debug, Clone)]
@@ -53,28 +64,79 @@ pub struct LayerJob {
     pub copy_ops: usize,
 }
 
-/// Lower a model into per-layer jobs. Fusion lookahead: a Norm/Act layer
-/// immediately following an MVM layer is folded into that MVM layer's
-/// chain (this is what block-level pipelining exploits); when pipelining is
-/// off the engine still sees them in the chain but charges separate-pass
-/// costs.
+/// Lower a model into per-layer jobs via the verified IR.
+///
+/// # Panics
+///
+/// Panics when the model fails shape propagation or IR verification. Every
+/// model reachable from this crate's entry points (`models::zoo`,
+/// `api::Session` registration) is valid by construction; callers holding
+/// an arbitrary model should use [`try_map_model`] and handle the
+/// [`IrError`].
+pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> {
+    match try_map_model(model, batch, opts) {
+        Ok(jobs) => jobs,
+        Err(e) => panic!("model '{}' failed IR verification: {e}", model.name),
+    }
+}
+
+/// Fallible lowering: lift to IR, verify, emit jobs.
+pub fn try_map_model(
+    model: &Model,
+    batch: usize,
+    opts: &OptFlags,
+) -> Result<Vec<LayerJob>, IrError> {
+    let graph = Graph::from_model(model)?;
+    map_graph(&graph, batch, opts)
+}
+
+/// Lower a dataflow graph into per-layer jobs. The graph is re-verified
+/// first — lowering never runs on an ill-formed graph.
+///
+/// Fusion lookahead: a Norm/Act op consuming an MVM op's result is folded
+/// into that MVM job's chain (this is what block-level pipelining
+/// exploits); when pipelining is off the engine still sees them in the
+/// chain but charges separate-pass costs. With [`OptFlags::fuse`],
+/// skip-add / skip-concat ops proven fusable by [`fusion_groups`] fold
+/// into their chain head as extra ECU work instead of standalone jobs. A
+/// head that absorbed a skip op is *closed*: a norm/activation arriving
+/// after the fold stays a standalone job (exactly as it would have behind
+/// the standalone skip job), so the head's elementwise cost class — and
+/// with it energy and latency — is identical under `fuse` on and off.
 ///
 /// Sparse lowering covers **both** structured-redundancy classes: a
 /// transposed conv splits into per-phase reduced-kernel jobs via the
 /// zero-column census ([`TconvSpec`]), and a stride-1 conv immediately
 /// following a nearest-neighbor upsample splits into per-phase *folded*
 /// kernel jobs via the replication census ([`UpconvSpec`]).
-pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> {
-    let infos = model.infos().expect("model must be shape-valid");
+pub fn map_graph(graph: &Graph, batch: usize, opts: &OptFlags) -> Result<Vec<LayerJob>, IrError> {
+    graph.verify()?;
+    // skip ops (residual/concat) proven legal to collapse into their head
+    let fold: HashSet<usize> = if opts.fuse {
+        fusion_groups(graph)
+            .iter()
+            .flat_map(|grp| grp.tail.iter().copied())
+            .filter(|&p| {
+                matches!(graph.ops[p].layer, Layer::ResidualAdd { .. } | Layer::ConcatChw(_))
+            })
+            .collect()
+    } else {
+        HashSet::new()
+    };
     let mut jobs: Vec<LayerJob> = Vec::new();
-    // set by an Upsample2d(Nearest) layer for the immediately following
-    // layer: (layer index, scale, pre-upsample h, pre-upsample w)
+    // job count at the moment a skip op folded into the last job: while
+    // unchanged, that job is closed to further norm/act folding
+    let mut closed_at = usize::MAX;
+    // set by an Upsample2d(Nearest) op for the immediately following op:
+    // (layer index, scale, pre-upsample h, pre-upsample w)
     let mut pending_upsample: Option<(usize, usize, usize, usize)> = None;
-    for info in &infos {
-        let in_el = info.in_shape.elements();
-        let out_el = info.out_shape.elements();
+    for (pos, op) in graph.ops.iter().enumerate() {
+        let in_shape = &graph.values[op.operands[0]].shape;
+        let out_shape = &graph.values[op.out].shape;
+        let in_el = in_shape.elements();
+        let out_el = out_shape.elements();
         let upsample_ctx = pending_upsample.take();
-        match &info.layer {
+        match &op.layer {
             Layer::Dense { in_f, out_f, .. } => {
                 let mvm = MvmJob {
                     block: BlockKind::Dense,
@@ -85,10 +147,10 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     weight_bytes: in_f * out_f,
                 };
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: format!("dense{}x{}", in_f, out_f),
                     mvms: vec![mvm],
-                    dense_macs: info.macs * batch,
+                    dense_macs: op.dense_macs * batch,
                     norm: NormKind::None,
                     act: ActKind::None,
                     out_elements: out_el * batch,
@@ -98,16 +160,16 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                 });
             }
             Layer::Conv2d { in_ch, out_ch, k, s, p, .. } => {
-                let (ho, wo) = match info.out_shape {
+                let (ho, wo) = match *out_shape {
                     Shape::Chw(_, h, w) => (h, w),
                     _ => unreachable!(),
                 };
                 let mut mvms = Vec::new();
                 let mut ecu_ops = ho * wo * batch; // im2col gather bookkeeping
-                let fold = upsample_ctx.filter(|&(idx, scale, _, _)| {
-                    opts.sparse && *s == 1 && scale > 1 && idx + 1 == info.index
+                let fold_up = upsample_ctx.filter(|&(idx, scale, _, _)| {
+                    opts.sparse && *s == 1 && scale > 1 && idx + 1 == op.index
                 });
-                if let Some((_, scale, h, w)) = fold {
+                if let Some((_, scale, h, w)) = fold_up {
                     // replication fold (§upconv): one MVM job per phase
                     // class with that class's folded kernel width —
                     // structurally identical to the tconv lowering below
@@ -139,10 +201,10 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     });
                 }
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: format!("conv{}x{}k{}", in_ch, out_ch, k),
                     mvms,
-                    dense_macs: info.macs * batch,
+                    dense_macs: op.dense_macs * batch,
                     norm: NormKind::None,
                     act: ActKind::None,
                     out_elements: out_el * batch,
@@ -152,7 +214,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                 });
             }
             Layer::ConvT2d { in_ch, out_ch, k, s, p, .. } => {
-                let (h, w) = match info.in_shape {
+                let (h, w) = match *in_shape {
                     Shape::Chw(_, h, w) => (h, w),
                     _ => unreachable!(),
                 };
@@ -192,10 +254,10 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     });
                 }
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: format!("tconv{}x{}k{}s{}", in_ch, out_ch, k, s),
                     mvms,
-                    dense_macs: info.macs * batch,
+                    dense_macs: op.dense_macs * batch,
                     norm: NormKind::None,
                     act: ActKind::None,
                     out_elements: out_el * batch,
@@ -205,22 +267,25 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                 });
             }
             Layer::Norm(kind) => {
-                // fuse into the preceding MVM layer when one exists
-                if let Some(prev) = jobs.last_mut() {
-                    if !prev.mvms.is_empty() && prev.norm == NormKind::None {
-                        prev.norm = *kind;
-                        if *kind == NormKind::Instance {
-                            // µ/σ statistics in the ECU: 2 passes
-                            prev.ecu_ops += 2 * out_el * batch;
+                // fuse into the preceding MVM layer when one exists and a
+                // skip fold has not closed it
+                if jobs.len() != closed_at {
+                    if let Some(prev) = jobs.last_mut() {
+                        if !prev.mvms.is_empty() && prev.norm == NormKind::None {
+                            prev.norm = *kind;
+                            if *kind == NormKind::Instance {
+                                // µ/σ statistics in the ECU: 2 passes
+                                prev.ecu_ops += 2 * out_el * batch;
+                            }
+                            continue;
                         }
-                        continue;
                     }
                 }
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: "norm".into(),
                     mvms: vec![],
-                    dense_macs: info.macs * batch,
+                    dense_macs: op.dense_macs * batch,
                     norm: *kind,
                     act: ActKind::None,
                     out_elements: out_el * batch,
@@ -230,17 +295,19 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                 });
             }
             Layer::Act(kind) => {
-                if let Some(prev) = jobs.last_mut() {
-                    if !prev.mvms.is_empty() && prev.act == ActKind::None {
-                        prev.act = *kind;
-                        continue;
+                if jobs.len() != closed_at {
+                    if let Some(prev) = jobs.last_mut() {
+                        if !prev.mvms.is_empty() && prev.act == ActKind::None {
+                            prev.act = *kind;
+                            continue;
+                        }
                     }
                 }
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: "act".into(),
                     mvms: vec![],
-                    dense_macs: info.macs * batch,
+                    dense_macs: op.dense_macs * batch,
                     norm: NormKind::None,
                     act: *kind,
                     out_elements: out_el * batch,
@@ -250,11 +317,21 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                 });
             }
             Layer::ResidualAdd { .. } => {
+                if fold.contains(&pos) {
+                    if let Some(prev) = jobs.last_mut() {
+                        // proven single-consumer: absorb the skip-add as
+                        // ECU work on the chain's job and close it
+                        prev.ecu_ops += out_el * batch;
+                        prev.dense_macs += op.dense_macs * batch;
+                        closed_at = jobs.len();
+                        continue;
+                    }
+                }
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: "residual".into(),
                     mvms: vec![],
-                    dense_macs: info.macs * batch,
+                    dense_macs: op.dense_macs * batch,
                     norm: NormKind::None,
                     act: ActKind::None,
                     out_elements: out_el * batch,
@@ -267,8 +344,8 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
             Layer::Upsample2d { mode, scale } => {
                 // arm the fold for an immediately following stride-1 conv
                 if *mode == UpsampleMode::Nearest {
-                    if let Shape::Chw(_, h, w) = info.in_shape {
-                        pending_upsample = Some((info.index, *scale, h, w));
+                    if let Shape::Chw(_, h, w) = *in_shape {
+                        pending_upsample = Some((op.index, *scale, h, w));
                     }
                 }
                 let name = match mode {
@@ -276,7 +353,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                     UpsampleMode::PixelShuffle => format!("pixshuf{scale}x"),
                 };
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name,
                     mvms: vec![],
                     dense_macs: 0,
@@ -290,8 +367,17 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
                 });
             }
             Layer::ConcatChw(_) => {
+                if fold.contains(&pos) {
+                    if let Some(prev) = jobs.last_mut() {
+                        // the skip tensor is copied alongside the chain's
+                        // output; close the job to norm/act folding
+                        prev.copy_ops += out_el * batch;
+                        closed_at = jobs.len();
+                        continue;
+                    }
+                }
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: "concat".into(),
                     mvms: vec![],
                     dense_macs: 0,
@@ -307,7 +393,7 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
             // pure bookkeeping
             Layer::Reshape(..) | Layer::Flatten | Layer::ConcatVec(_) => {
                 jobs.push(LayerJob {
-                    index: info.index,
+                    index: op.index,
                     name: "reshape".into(),
                     mvms: vec![],
                     dense_macs: 0,
@@ -321,10 +407,11 @@ pub fn map_model(model: &Model, batch: usize, opts: &OptFlags) -> Vec<LayerJob> 
             }
         }
     }
-    jobs
+    Ok(jobs)
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::models::zoo;
@@ -531,5 +618,75 @@ mod tests {
         let jobs = map_model(&m2, 1, &OptFlags::all());
         let conv_job = jobs.iter().rev().find(|j| !j.mvms.is_empty()).unwrap();
         assert_eq!(conv_job.mvms.len(), 1, "non-adjacent conv must stay dense");
+    }
+
+    #[test]
+    fn fuse_collapses_skip_jobs_and_preserves_totals() {
+        for model in [zoo::cyclegan(), zoo::srgan(), zoo::pix2pix()] {
+            let plain = map_model(&model, 1, &OptFlags::all());
+            let fused = map_model(&model, 1, &OptFlags::fused());
+            assert!(
+                fused.len() < plain.len(),
+                "{}: fuse must strictly reduce job count ({} vs {})",
+                model.name,
+                fused.len(),
+                plain.len()
+            );
+            // workload totals are invariant under fusion
+            let dense = |jobs: &[LayerJob]| -> usize { jobs.iter().map(|j| j.dense_macs).sum() };
+            let ecu = |jobs: &[LayerJob]| -> usize { jobs.iter().map(|j| j.ecu_ops).sum() };
+            let copy = |jobs: &[LayerJob]| -> usize { jobs.iter().map(|j| j.copy_ops).sum() };
+            let exec = |jobs: &[LayerJob]| -> usize {
+                jobs.iter().flat_map(|j| &j.mvms).map(|m| m.exec_macs).sum()
+            };
+            assert_eq!(dense(&plain), dense(&fused), "{}: dense MACs", model.name);
+            assert_eq!(ecu(&plain), ecu(&fused), "{}: ECU ops", model.name);
+            assert_eq!(copy(&plain), copy(&fused), "{}: copy ops", model.name);
+            assert_eq!(exec(&plain), exec(&fused), "{}: executed MACs", model.name);
+            // no residual/concat job survives where fusion proved legality
+            let skips =
+                |jobs: &[LayerJob]| jobs.iter().filter(|j| j.name == "residual").count();
+            assert!(skips(&fused) < skips(&plain) || skips(&plain) == 0);
+        }
+        // dcgan has no skip connections: fuse is a no-op
+        let plain = map_model(&zoo::dcgan(), 1, &OptFlags::all());
+        let fused = map_model(&zoo::dcgan(), 1, &OptFlags::fused());
+        assert_eq!(plain.len(), fused.len(), "dcgan must be unaffected by fuse");
+    }
+
+    #[test]
+    fn fuse_closes_heads_against_late_elementwise_folding() {
+        // conv → residual → act: the act must stay standalone under fuse
+        // (it would otherwise change the head's elementwise cost class)
+        let m = Model::new(
+            "res-act",
+            Shape::Chw(4, 8, 8),
+            vec![
+                Layer::Conv2d { in_ch: 4, out_ch: 4, k: 3, s: 1, p: 1, bias: false },
+                Layer::ResidualAdd { span: 1 },
+                Layer::Act(ActKind::Relu),
+            ],
+        );
+        let plain = map_model(&m, 1, &OptFlags::all());
+        let fused = map_model(&m, 1, &OptFlags::fused());
+        // plain: conv, residual, act (act cannot fold into the empty-mvm
+        // residual job); fused: conv+residual, act
+        assert_eq!(plain.len(), 3);
+        assert_eq!(fused.len(), 2);
+        assert_eq!(fused[0].act, ActKind::None, "folded head must stay closed");
+        assert_eq!(fused[1].name, "act");
+    }
+
+    #[test]
+    fn try_map_model_reports_invalid_models() {
+        let bad = Model::new(
+            "bad",
+            Shape::Vec(8),
+            vec![Layer::Dense { in_f: 9, out_f: 4, bias: false }],
+        );
+        assert!(matches!(
+            try_map_model(&bad, 1, &OptFlags::all()),
+            Err(IrError::Shape(_))
+        ));
     }
 }

@@ -26,6 +26,17 @@
 //!   timelines (MVM blocks, DAC/ADC lanes, elementwise chain, ECU, DRAM
 //!   channel, PCMC controller) with double-buffered weight prefetch.
 //!   Identical energy, strictly lower latency on multi-layer models.
+//!
+//! The mapper lowers from the **verified dataflow IR**
+//! ([`crate::models::ir`]): every model is lifted to SSA form and
+//! statically checked before any job is emitted, and
+//! [`options::OptFlags::fuse`] collapses legality-proven MVM-headed
+//! chains (conv → norm → act → skip-add/concat) into single fused jobs.
+
+// Same error-handling contract as `api/`/`coordinator/`/`workload/`: no
+// unwraps or expects in production paths; invariants that genuinely cannot
+// fail are documented `panic!`s. Tests opt back in via `#[allow]`.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod engine;
 pub mod mapper;
@@ -34,7 +45,7 @@ pub mod result;
 pub mod schedule;
 
 pub use engine::{simulate, simulate_mapped};
-pub use mapper::{LayerJob, MvmJob};
+pub use mapper::{map_graph, map_model, try_map_model, LayerJob, MvmJob};
 pub use options::OptFlags;
 pub use result::{LayerTrace, ResourceUsage, SimReport};
 pub use schedule::{simulate_events, Resource};

@@ -23,33 +23,41 @@ pub struct OptFlags {
     /// Off in every paper-calibrated preset so the closed-form path stays
     /// the analytical reference.
     pub overlap: bool,
+    /// IR-driven chain fusion: collapse legality-proven MVM-headed chains
+    /// (conv → norm → act → skip-add/skip-concat, see
+    /// [`crate::models::ir::fusion_groups`]) into single fused MVM+ECU
+    /// jobs. Strictly reduces job count on residual/U-Net models while
+    /// keeping total energy and closed-form latency bit-identical (the
+    /// folded ops were zero-latency ECU terms). Off in every
+    /// paper-calibrated preset so golden traces are untouched.
+    pub fuse: bool,
 }
 
 impl OptFlags {
     /// Paper's "Baseline": none of the optimizations.
     pub fn baseline() -> Self {
-        OptFlags { sparse: false, pipelined: false, power_gated: false, overlap: false }
+        OptFlags { sparse: false, pipelined: false, power_gated: false, overlap: false, fuse: false }
     }
 
     /// Paper's "S/W Optimized": sparse dataflow only.
     pub fn sw_optimized() -> Self {
-        OptFlags { sparse: true, pipelined: false, power_gated: false, overlap: false }
+        OptFlags { sparse: true, pipelined: false, power_gated: false, overlap: false, fuse: false }
     }
 
     /// Paper's "Pipelined": pipelining only.
     pub fn pipelined_only() -> Self {
-        OptFlags { sparse: false, pipelined: true, power_gated: false, overlap: false }
+        OptFlags { sparse: false, pipelined: true, power_gated: false, overlap: false, fuse: false }
     }
 
     /// Paper's "Power Gating": gating only.
     pub fn power_gating_only() -> Self {
-        OptFlags { sparse: false, pipelined: false, power_gated: true, overlap: false }
+        OptFlags { sparse: false, pipelined: false, power_gated: true, overlap: false, fuse: false }
     }
 
     /// Paper's "S/W Optimized + Pipelined + Power Gating" (the PhotoGAN
     /// operating point, costed by the closed-form analytical engine).
     pub fn all() -> Self {
-        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: false }
+        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: false, fuse: false }
     }
 
     /// The serving operating point: every paper optimization **plus** the
@@ -58,12 +66,24 @@ impl OptFlags {
     /// default — same energy as [`OptFlags::all`], strictly lower latency
     /// on multi-layer models.
     pub fn overlapped() -> Self {
-        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: true }
+        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: true, fuse: false }
+    }
+
+    /// [`OptFlags::all`] plus IR chain fusion — the job-count-minimal
+    /// mapping (fewest `LayerJob`s; identical analytic energy/latency).
+    pub fn fused() -> Self {
+        OptFlags { sparse: true, pipelined: true, power_gated: true, overlap: false, fuse: true }
     }
 
     /// This flag set with `overlap` forced to `on`.
     pub fn with_overlap(mut self, on: bool) -> Self {
         self.overlap = on;
+        self
+    }
+
+    /// This flag set with `fuse` forced to `on`.
+    pub fn with_fuse(mut self, on: bool) -> Self {
+        self.fuse = on;
         self
     }
 
@@ -98,6 +118,7 @@ impl Default for OptFlags {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -124,5 +145,20 @@ mod tests {
             assert!(!f.overlap, "golden '{name}' must stay analytical");
         }
         assert_eq!(OptFlags::overlapped().with_overlap(false), OptFlags::all());
+    }
+
+    #[test]
+    fn fuse_rides_on_top_of_the_paper_presets() {
+        assert_eq!(OptFlags::fused(), OptFlags::all().with_fuse(true));
+        assert_ne!(OptFlags::fused(), OptFlags::all());
+        // no paper-calibrated or golden preset engages chain fusion, so
+        // the pinned traces stay byte-identical
+        for (name, f) in OptFlags::fig12_sweep() {
+            assert!(!f.fuse, "{name} must stay unfused");
+        }
+        for (name, f) in OptFlags::golden_sweep() {
+            assert!(!f.fuse, "golden '{name}' must stay unfused");
+        }
+        assert_eq!(OptFlags::fused().with_fuse(false), OptFlags::all());
     }
 }

@@ -204,12 +204,20 @@ impl SimReport {
             ("model", JsonValue::Str(self.model.clone())),
             (
                 "opts",
-                obj(vec![
-                    ("sparse", JsonValue::Bool(self.opts.sparse)),
-                    ("pipelined", JsonValue::Bool(self.opts.pipelined)),
-                    ("power_gated", JsonValue::Bool(self.opts.power_gated)),
-                    ("overlap", JsonValue::Bool(self.opts.overlap)),
-                ]),
+                obj({
+                    let mut o = vec![
+                        ("sparse", JsonValue::Bool(self.opts.sparse)),
+                        ("pipelined", JsonValue::Bool(self.opts.pipelined)),
+                        ("power_gated", JsonValue::Bool(self.opts.power_gated)),
+                        ("overlap", JsonValue::Bool(self.opts.overlap)),
+                    ];
+                    // emitted only when set so the pinned golden traces
+                    // (all recorded at fuse=off) stay byte-identical
+                    if self.opts.fuse {
+                        o.push(("fuse", JsonValue::Bool(true)));
+                    }
+                    o
+                }),
             ),
             ("batch", JsonValue::Num(self.batch as f64)),
             ("latency_s", JsonValue::Num(self.latency)),
@@ -248,6 +256,7 @@ impl SimReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

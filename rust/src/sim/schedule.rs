@@ -649,6 +649,7 @@ pub fn simulate_events(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::arch::config::ArchConfig;

@@ -38,7 +38,7 @@ fn optimization_flags_compose_monotonically() {
     let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
     let m = zoo::artgan();
     let e = |s: bool, p: bool, g: bool| {
-        simulate(&m, &acc, 1, OptFlags { sparse: s, pipelined: p, power_gated: g, overlap: false })
+        simulate(&m, &acc, 1, OptFlags { sparse: s, pipelined: p, power_gated: g, overlap: false, fuse: false })
             .energy
             .total()
     };

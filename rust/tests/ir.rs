@@ -1,0 +1,202 @@
+//! IR ↔ flat-mapping equivalence, verifier rejection, and fusion
+//! neutrality — the static-analysis contract of `models/ir` +
+//! `sim/mapper`:
+//!
+//! - lowering through the public IR surface (`Graph::from_model` →
+//!   `map_graph`) is byte-identical to `map_model` for every zoo model
+//!   and every golden flag set (all recorded at `fuse = off`);
+//! - the verifier rejects each class of ill-formed graph with a typed
+//!   [`IrError`] naming the offending op position;
+//! - `OptFlags::fused()` strictly reduces job count on skip-connection
+//!   models while total energy and closed-form latency stay put.
+
+use photogan::arch::accelerator::Accelerator;
+use photogan::arch::activation::ActKind;
+use photogan::arch::config::ArchConfig;
+use photogan::models::ir::{dead_ops, Graph, IrError, PassManager};
+use photogan::models::layer::{Layer, Shape};
+use photogan::models::{zoo, Value};
+use photogan::sim::{map_graph, map_model, simulate, OptFlags};
+
+#[test]
+fn ir_lowering_matches_flat_mapping_for_every_zoo_model() {
+    for model in zoo::extended_generators() {
+        for (name, opts) in OptFlags::golden_sweep() {
+            let flat = map_model(&model, 1, &opts);
+            let graph = Graph::from_model(&model).expect("zoo models lift");
+            let via_ir = map_graph(&graph, 1, &opts).expect("zoo models verify");
+            assert_eq!(
+                format!("{flat:?}"),
+                format!("{via_ir:?}"),
+                "{} / {name}: IR lowering must be byte-identical",
+                model.name
+            );
+        }
+    }
+}
+
+#[test]
+fn zoo_graphs_verify_and_have_no_dead_ops() {
+    for model in zoo::extended_generators() {
+        let graph = Graph::from_model(&model).expect("zoo models lift");
+        graph.verify().expect("zoo models verify");
+        assert!(
+            dead_ops(&graph).is_empty(),
+            "{}: a linear lift has no dead ops",
+            model.name
+        );
+        assert_eq!(graph.ops.len(), model.infos().unwrap().len());
+    }
+}
+
+// ---------------------------------------------------- verifier rejection
+
+#[test]
+fn verifier_rejects_use_before_def() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    let ghost = g.values.len();
+    g.values.push(Value { shape: g.values[g.ops[2].operands[0]].shape.clone() });
+    g.ops[2].operands[0] = ghost;
+    match g.verify() {
+        Err(IrError::UseBeforeDef { op: 2, value }) => assert_eq!(value, ghost),
+        other => panic!("expected UseBeforeDef at op 2, got {other:?}"),
+    }
+    // the typed diagnostic names the op position
+    assert!(g.verify().unwrap_err().to_string().contains("op 2"));
+}
+
+#[test]
+fn verifier_rejects_cycles() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    g.ops[0].operands[0] = g.ops[1].out;
+    assert!(matches!(g.verify(), Err(IrError::Cycle { op: 0, .. })));
+}
+
+#[test]
+fn verifier_rejects_dangling_values() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    let bogus = g.values.len() + 7;
+    g.ops[1].operands[0] = bogus;
+    match g.verify() {
+        Err(IrError::DanglingValue { op: 1, value }) => assert_eq!(value, bogus),
+        other => panic!("expected DanglingValue at op 1, got {other:?}"),
+    }
+}
+
+#[test]
+fn verifier_rejects_shape_mismatches() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    g.values[g.ops[0].out].shape = Shape::Chw(1, 1, 1);
+    assert!(matches!(g.verify(), Err(IrError::ShapeMismatch { op: 0, .. })));
+}
+
+#[test]
+fn verifier_rejects_double_assignment() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    g.ops[1].out = g.ops[0].out;
+    assert!(matches!(g.verify(), Err(IrError::Redefined { op: 1, .. })));
+}
+
+#[test]
+fn verifier_rejects_wrong_arity_and_bad_output() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    g.ops[0].operands.push(0);
+    assert!(matches!(
+        g.verify(),
+        Err(IrError::MissingOperand { op: 0, expected: 1, got: 2 })
+    ));
+
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    g.output = g.values.len();
+    assert!(matches!(g.verify(), Err(IrError::BadOutput { .. })));
+}
+
+#[test]
+fn ill_formed_graphs_never_lower() {
+    let mut g = Graph::from_model(&zoo::dcgan()).unwrap();
+    g.ops[0].operands[0] = g.ops[1].out; // cycle
+    assert!(map_graph(&g, 1, &OptFlags::all()).is_err());
+}
+
+// ------------------------------------------------ dead-value elimination
+
+#[test]
+fn dce_drops_unconsumed_ops_without_changing_the_lowering() {
+    let model = zoo::cyclegan();
+    let baseline = map_model(&model, 1, &OptFlags::all());
+    let mut g = Graph::from_model(&model).unwrap();
+    // graft a dead activation onto the graph input: verifiable, but its
+    // result reaches nothing
+    let dead_out = g.values.len();
+    g.values.push(Value { shape: g.values[g.inputs[0]].shape.clone() });
+    g.ops.push(photogan::models::Op {
+        index: g.ops.len(),
+        layer: Layer::Act(ActKind::Relu),
+        operands: vec![g.inputs[0]],
+        out: dead_out,
+        dense_macs: 0,
+    });
+    g.verify().expect("the grafted graph is still well-formed");
+    assert_eq!(dead_ops(&g), vec![g.ops.len() - 1]);
+
+    let applied = PassManager::standard().run(&mut g).expect("passes re-verify");
+    assert_eq!(applied, vec!["dead-value-elimination"]);
+    assert!(dead_ops(&g).is_empty());
+    let cleaned = map_graph(&g, 1, &OptFlags::all()).unwrap();
+    assert_eq!(
+        format!("{baseline:?}"),
+        format!("{cleaned:?}"),
+        "DCE must restore the original lowering"
+    );
+}
+
+// ------------------------------------------------------ fusion neutrality
+
+#[test]
+fn fuse_reduces_jobs_with_identical_energy_and_latency() {
+    let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+    for model in [zoo::cyclegan(), zoo::srgan(), zoo::pix2pix()] {
+        let plain = simulate(&model, &acc, 1, OptFlags::all());
+        let fused = simulate(&model, &acc, 1, OptFlags::fused());
+        assert!(
+            fused.layers.len() < plain.layers.len(),
+            "{}: fuse must strictly reduce job count ({} vs {})",
+            model.name,
+            fused.layers.len(),
+            plain.layers.len()
+        );
+        // the folded ops were zero-latency: the closed-form makespan is
+        // bit-identical
+        assert_eq!(
+            plain.latency, fused.latency,
+            "{}: latency must be unchanged",
+            model.name
+        );
+        // energy totals agree up to f64 re-association of the per-job sums
+        let (ep, ef) = (plain.energy.total(), fused.energy.total());
+        assert!(
+            (ep - ef).abs() <= 1e-9 * ep.abs(),
+            "{}: energy drifted under fuse ({ep} vs {ef})",
+            model.name
+        );
+        assert_eq!(plain.total_ops, fused.total_ops, "{}: workload ops", model.name);
+        assert_eq!(plain.total_bits, fused.total_bits, "{}: workload bits", model.name);
+    }
+    // a skip-free model is untouched
+    let acc_jobs =
+        |opts: &OptFlags| map_model(&zoo::dcgan(), 1, opts).len();
+    assert_eq!(acc_jobs(&OptFlags::all()), acc_jobs(&OptFlags::fused()));
+}
+
+#[test]
+fn fuse_is_neutral_across_batch_sizes() {
+    let acc = Accelerator::new(ArchConfig::paper_optimum()).unwrap();
+    let model = zoo::srgan();
+    for batch in [1usize, 4] {
+        let plain = simulate(&model, &acc, batch, OptFlags::all());
+        let fused = simulate(&model, &acc, batch, OptFlags::fused());
+        assert_eq!(plain.latency, fused.latency, "batch {batch}");
+        let (ep, ef) = (plain.energy.total(), fused.energy.total());
+        assert!((ep - ef).abs() <= 1e-9 * ep.abs(), "batch {batch}: {ep} vs {ef}");
+    }
+}
